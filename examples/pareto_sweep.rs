@@ -1,0 +1,39 @@
+//! Lambda-sweep example: the programmatic version of `odimo fig4` on
+//! tinycnn — sweeps the regularization strength, prints the resulting
+//! accuracy/energy frontier with baselines, and shows Pareto extraction
+//! through the public API.
+//!
+//!     cargo run --release --example pareto_sweep
+
+use odimo::coordinator::{Pipeline, Regularizer, Schedule};
+use odimo::metrics::{ascii_scatter, pareto_front, table_markdown};
+use odimo::runtime::{ArtifactMeta, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    odimo::util::logging::init();
+    let rt = Runtime::cpu()?;
+    let meta = ArtifactMeta::load(std::path::Path::new("artifacts"), "tinycnn")?;
+    let pipe = Pipeline::new(&rt, &meta, Schedule::smoke());
+    let folded = pipe.pretrained_folded()?;
+
+    let mut points = pipe.sweep(&folded, Regularizer::EnergyDiana, &[0.05, 0.3, 1.0, 3.0])?;
+    for b in ["all_8bit", "all_ternary", "min_cost_en"] {
+        match pipe.baseline_point(&folded, b) {
+            Ok(p) => points.push(p),
+            Err(e) => eprintln!("baseline {b} failed: {e:#}"),
+        }
+    }
+
+    println!("{}", table_markdown("tinycnn accuracy vs energy", &points));
+    let front = pareto_front(&points, |p| p.energy_uj);
+    println!(
+        "Pareto front: {}",
+        front
+            .iter()
+            .map(|&i| points[i].label.as_str())
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    );
+    println!("{}", ascii_scatter(&points, |p| p.energy_uj, 64, 14));
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: the smallest useful ODiMO session.
+//!
+//! Loads the tinycnn artifacts, runs the full pipeline (pretrain ->
+//! BN-fold -> differentiable mapping search -> discretize -> fine-tune)
+//! at one lambda, and deploys the result on the DIANA simulator next to
+//! the All-8bit baseline.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use odimo::coordinator::{Pipeline, Regularizer, Schedule};
+use odimo::runtime::{ArtifactMeta, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    odimo::util::logging::init();
+    let art = std::path::Path::new("artifacts");
+    anyhow::ensure!(
+        art.join("tinycnn_meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    let rt = Runtime::cpu()?;
+    let meta = ArtifactMeta::load(art, "tinycnn")?;
+    println!(
+        "model {}: {} nodes, {} mappable layers, {:.2} MMACs",
+        meta.model.name,
+        meta.model.nodes.len(),
+        meta.model.mappable().len(),
+        meta.model.total_macs() as f64 / 1e6
+    );
+
+    let pipe = Pipeline::new(&rt, &meta, Schedule::smoke());
+    let folded = pipe.pretrained_folded()?;
+
+    // one ODiMO point with the Eq.-4 energy regularizer
+    let odimo_pt = pipe.search_point(&folded, Regularizer::EnergyDiana, 30.0)?;
+    // the trivial all-digital mapping for reference
+    let base = pipe.baseline_point(&folded, "all_8bit")?;
+
+    println!("\n{:<12} {:>8} {:>10} {:>10} {:>8}", "mapping", "acc", "lat[ms]", "E[uJ]", "A.Ch%");
+    for p in [&base, &odimo_pt] {
+        println!(
+            "{:<12} {:>8.4} {:>10.4} {:>10.2} {:>8.1}",
+            p.label,
+            p.accuracy,
+            p.latency_ms,
+            p.energy_uj,
+            100.0 * p.aimc_channel_frac
+        );
+    }
+    println!(
+        "\nODiMO saves {:.1}% energy at {:+.2}% accuracy vs All-8bit",
+        100.0 * (1.0 - odimo_pt.energy_uj / base.energy_uj),
+        100.0 * (odimo_pt.accuracy - base.accuracy)
+    );
+    Ok(())
+}

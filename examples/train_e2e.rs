@@ -1,0 +1,121 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Exercises every layer of the stack on a real (synthetic-CIFAR)
+//! workload: the rust coordinator streams generated batches into the
+//! AOT-compiled JAX supernet (whose hot loop is the fused Pallas Eq.-1
+//! kernel), through all four ODiMO phases on ResNet20, logging the loss
+//! curve, then deploys the discovered mapping on the DIANA simulator.
+//!
+//!     cargo run --release --example train_e2e [steps_scale]
+//!
+//! steps_scale (default 1.0) scales the phase lengths; 0.2 gives a
+//! ~3-minute smoke run on one CPU.
+
+use odimo::coordinator::{discretize::discretize, scheduler::deploy, Hyper, Trainer};
+use odimo::hw::soc::SocConfig;
+use odimo::runtime::{ArtifactMeta, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    odimo::util::logging::init();
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("steps_scale must be a number"))
+        .unwrap_or(1.0);
+    let steps = |n: usize| ((n as f64 * scale) as usize).max(5);
+
+    let art = std::path::Path::new("artifacts");
+    let rt = Runtime::cpu()?;
+    let meta = ArtifactMeta::load(art, "resnet20")?;
+    let mut tr = Trainer::new(&rt, &meta, 1234)?;
+    let t0 = std::time::Instant::now();
+
+    // ---- phase 1: float pre-training (with BatchNorm) ------------------
+    println!("== phase 1: float pre-training ({} steps)", steps(300));
+    let h = Hyper { lr: 0.1, lr_alpha: 0.0, wd: 1e-4, ..Default::default() };
+    let hist = tr.run_phase("train_float", steps(300), h, None, None)?;
+    print_curve("float", &hist);
+    let ev = tr.eval("eval_float", None, 2)?;
+    println!("   float test accuracy: {:.4}", ev.accuracy);
+
+    // ---- phase 2: BN fold ----------------------------------------------
+    println!("== phase 2: fold BatchNorm, re-derive quantizer scales");
+    tr.fold_batchnorm()?;
+
+    // ---- phase 3: differentiable mapping search (Eq. 2, energy) --------
+    // momentum-free low-lr warm-up first: the post-fold landscape is
+    // sharp and momentum turns the first transient gradient into a
+    // catastrophic step (DESIGN.md §Implementation-notes)
+    println!(
+        "== phase 3: ODiMO search (warm-up {} + {} regularized steps, lambda = 10)",
+        steps(80),
+        steps(120)
+    );
+    let h_warm = Hyper {
+        lr: 0.001,
+        lr_alpha: 0.0,
+        mu: 0.0,
+        lam: 0.0,
+        lr_min_frac: 1.0,
+        ..Default::default()
+    };
+    let hist = tr.run_phase("train_search_en", steps(80), h_warm, None, None)?;
+    print_curve("warm-up", &hist);
+    let h = Hyper {
+        lr: 0.005,
+        lr_alpha: 0.1,
+        lam: 10.0,
+        tau_start: 1.0,
+        tau_end: 0.2,
+        ..Default::default()
+    };
+    let hist = tr.run_phase("train_search_en", steps(120), h, None, None)?;
+    print_curve("search", &hist);
+
+    // ---- phase 4: discretize + fine-tune --------------------------------
+    let mapping = discretize(&meta.model, &tr.alphas()?)?;
+    println!(
+        "== phase 4: discretized mapping — {:.1}% of channels on AIMC; fine-tune ({} steps)",
+        100.0 * mapping.aimc_fraction(),
+        steps(120)
+    );
+    let h0 = Hyper { lr: 0.001, lr_alpha: 0.0, mu: 0.0, wd: 1e-4,
+                     lr_min_frac: 1.0, ..Default::default() };
+    tr.run_phase("train_ft", steps(30), h0, Some(&mapping), None)?;
+    let h = Hyper { lr: 0.005, lr_alpha: 0.0, wd: 1e-4, ..Default::default() };
+    let hist = tr.run_phase("train_ft", steps(90), h, Some(&mapping), None)?;
+    print_curve("finetune", &hist);
+
+    // ---- deploy ----------------------------------------------------------
+    let ev = tr.eval("eval_deploy", Some(&mapping), 2)?;
+    let rep = deploy(&meta.model, &mapping, SocConfig::default());
+    println!("\n== deployment on the DIANA simulator");
+    println!(
+        "   accuracy {:.4} | latency {:.3} ms | energy {:.2} uJ | D/A util {:.1}%/{:.1}%",
+        ev.accuracy,
+        rep.run.latency_ms,
+        rep.run.energy_uj,
+        100.0 * rep.run.util[0],
+        100.0 * rep.run.util[1],
+    );
+    println!("   wall time: {:.1}s over {} total optimizer steps",
+             t0.elapsed().as_secs_f64(), tr.history.len());
+
+    // loss curve to results/ for EXPERIMENTS.md
+    std::fs::create_dir_all("results")?;
+    let mut csv = String::from("step,loss,batch_acc\n");
+    for (i, m) in tr.history.iter().enumerate() {
+        csv.push_str(&format!("{i},{},{}\n", m.loss, m.batch_acc));
+    }
+    std::fs::write("results/train_e2e_loss.csv", csv)?;
+    println!("   loss curve written to results/train_e2e_loss.csv");
+    Ok(())
+}
+
+fn print_curve(tag: &str, hist: &[odimo::coordinator::StepMetrics]) {
+    let pts: Vec<String> = hist
+        .iter()
+        .step_by((hist.len() / 6).max(1))
+        .map(|m| format!("{:.3}", m.loss))
+        .collect();
+    println!("   {tag} loss: {}", pts.join(" -> "));
+}

@@ -1,0 +1,215 @@
+"""AOT lowering driver: jax -> HLO text artifacts + meta JSON (build time).
+
+This is the single python entry point of the build (`make artifacts`).
+For every benchmark model it lowers the full phase set:
+
+    train_float        pre-training step
+    train_search_lat   ODiMO search step, Eq.-3 latency regularizer
+    train_search_en    ODiMO search step, Eq.-4 energy regularizer
+    train_search_prop  ODiMO search step, Fig.-5 abstract hw (hw inputs)
+    train_ft           fine-tuning step at exact precision (hard assign)
+    eval_float / eval_search / eval_deploy
+    infer_deploy       logits for rust-side numeric cross-checks
+
+Interchange format is HLO *text* (not serialized HloModuleProto): the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids,
+while the text parser reassigns ids (see /opt/xla-example/README.md).
+
+The companion ``<model>_meta.json`` file is the contract with the rust
+coordinator: flat parameter order, per-graph input/output signatures,
+node/geometry table, hw calibration constants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import costmodel as CM
+from . import datagen
+from . import layers as L
+from . import models as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "s32"}[str(jnp.dtype(dt))]
+
+
+def _sig(tree) -> list:
+    """Flatten a pytree of ShapeDtypeStructs into [{shape, dtype}] in the
+    same order jax flattens HLO parameters."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return [{"shape": list(l.shape), "dtype": _dtype_tag(l.dtype)} for l in leaves]
+
+
+def _named_sig(names, tree) -> list:
+    sig = _sig(tree)
+    assert len(names) == len(sig), f"{len(names)} names vs {len(sig)} leaves"
+    return [{"name": n, **s} for n, s in zip(names, sig)]
+
+
+def build_artifacts(model_name: str, out_dir: str, graphs_filter=None) -> dict:
+    model = M.build(model_name)
+    meta_model = model.to_meta()
+    key = jax.random.PRNGKey(42)
+    params0 = model.init_params(key)
+    pnames = T.param_leaf_names(params0)
+    p_spec = jax.tree_util.tree_map(lambda a: _sds(a.shape, a.dtype), params0)
+    c, h, w = model.input_shape
+    bt, be = model.train_batch, model.eval_batch
+    x_t, y_t = _sds((bt, c, h, w)), _sds((bt,), jnp.int32)
+    x_e, y_e = _sds((be, c, h, w)), _sds((be,), jnp.int32)
+    x_i = _sds((8, c, h, w))
+    s = _sds(())
+    assign_spec = {n.name: _sds((L.N_ACC, n.cout)) for n in model.mappable()}
+    anames = T.assign_names(model)
+
+    lat0, en0 = CM.all_digital_reference(meta_model)
+
+    def names_params(prefix):
+        return [f"{prefix}:{n}" for n in pnames]
+
+    def names_assign():
+        out = []
+        for n in sorted(anames):
+            out.append(f"assign:{n}")
+        return out
+
+    graph_defs = {}
+
+    def add(name, fn, arg_spec, in_names, out_names, out_spec):
+        graph_defs[name] = (fn, arg_spec, in_names, out_names, out_spec)
+
+    scal4 = ["lr", "lr_alpha", "mu", "wd"]
+    met_names = ["metrics"]
+    met_spec = _sds((6,))
+
+    add("train_float", T.make_train_step(model, meta_model, L.FLOAT),
+        (p_spec, p_spec, x_t, y_t, s, s, s, s),
+        names_params("param") + names_params("mom") + ["x", "y"] + scal4,
+        names_params("param") + names_params("mom") + met_names,
+        (p_spec, p_spec, met_spec))
+
+    for reg in ("lat", "en"):
+        add(f"train_search_{reg}", T.make_train_step(model, meta_model, L.SEARCH, reg),
+            (p_spec, p_spec, x_t, y_t, s, s, s, s, s, s),
+            names_params("param") + names_params("mom") + ["x", "y"] + scal4 + ["lam", "tau"],
+            names_params("param") + names_params("mom") + met_names,
+            (p_spec, p_spec, met_spec))
+
+    add("train_search_prop", T.make_train_step(model, meta_model, L.SEARCH, "prop"),
+        (p_spec, p_spec, x_t, y_t, s, s, s, s, s, s, _sds((6,))),
+        names_params("param") + names_params("mom") + ["x", "y"] + scal4 + ["lam", "tau", "hw"],
+        names_params("param") + names_params("mom") + met_names,
+        (p_spec, p_spec, met_spec))
+
+    add("train_ft", T.make_train_step(model, meta_model, L.DEPLOY),
+        (p_spec, p_spec, assign_spec, x_t, y_t, s, s, s, s),
+        names_params("param") + names_params("mom") + names_assign() + ["x", "y"] + scal4,
+        names_params("param") + names_params("mom") + met_names,
+        (p_spec, p_spec, met_spec))
+
+    add("eval_float", T.make_eval(model, L.FLOAT), (p_spec, x_e, y_e),
+        names_params("param") + ["x", "y"], ["stats"], _sds((2,)))
+    add("eval_search", T.make_eval(model, L.SEARCH), (p_spec, x_e, y_e),
+        names_params("param") + ["x", "y"], ["stats"], _sds((2,)))
+    add("eval_deploy", T.make_eval(model, L.DEPLOY),
+        (p_spec, assign_spec, x_e, y_e),
+        names_params("param") + names_assign() + ["x", "y"], ["stats"], _sds((2,)))
+    add("infer_deploy", T.make_infer(model), (p_spec, assign_spec, x_i),
+        names_params("param") + names_assign() + ["x"], ["logits"],
+        _sds((8, model.classes)))
+
+    graphs_meta = {}
+    for gname, (fn, arg_spec, in_names, out_names, out_spec) in graph_defs.items():
+        if graphs_filter and gname not in graphs_filter:
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_spec)
+        text = to_hlo_text(lowered)
+        fname = f"{model_name}_{gname}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        # jax prunes arguments the traced function never uses (e.g. quant
+        # scales in float graphs); the rust driver must supply exactly the
+        # kept ones, in order.
+        all_inputs = _named_sig(in_names, arg_spec)
+        kept = lowered._lowering.compile_args.get("kept_var_idx")
+        if kept is None:
+            kept_idx = list(range(len(all_inputs)))
+        else:
+            kept_idx = sorted(kept)
+        graphs_meta[gname] = {
+            "file": fname,
+            "inputs": [all_inputs[i] for i in kept_idx],
+            "outputs": _named_sig(out_names, out_spec),
+        }
+        print(f"  [{model_name}] {gname}: {len(text)/1e6:.2f} MB HLO "
+              f"({time.time()-t0:.1f}s)")
+
+    init_leaves = jax.tree_util.tree_leaves(params0)
+    meta = {
+        "model": meta_model,
+        "params": [{"name": n, "shape": list(l.shape), "dtype": _dtype_tag(l.dtype)}
+                   for n, l in zip(pnames, init_leaves)],
+        "mappable": sorted(anames),
+        "graphs": graphs_meta,
+        "bits": list(L.BITS),
+        "hw": {
+            "p_act": list(CM.P_ACT), "p_idle": list(CM.P_IDLE),
+            "f_clk_hz": CM.F_CLK_HZ, "aimc_rows": CM.AIMC_ROWS,
+            "aimc_cols": CM.AIMC_COLS, "dig_pe": CM.DIG_PE,
+            "smoothmax_beta": CM.SMOOTHMAX_BETA,
+        },
+        "norm": {"lat0": lat0, "en0": en0},
+        "datagen_algo_version": datagen.ALGO_VERSION,
+        "init_seed": 42,
+    }
+    with open(os.path.join(out_dir, f"{model_name}_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    # initial parameter values, as a flat little-endian f32 blob per leaf
+    # (rust seeds training from these — keeps init bit-identical between
+    # python tests and the rust pipeline)
+    import numpy as np
+    with open(os.path.join(out_dir, f"{model_name}_init.bin"), "wb") as f:
+        for leaf in init_leaves:
+            f.write(np.asarray(leaf, np.float32).tobytes())
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tinycnn,resnet20,resnet18s,mbv1_025")
+    ap.add_argument("--graphs", default="", help="comma filter, empty = all")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    gf = set(args.graphs.split(",")) - {""} or None
+    for mn in args.models.split(","):
+        print(f"lowering {mn} ...")
+        build_artifacts(mn, args.out, gf)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

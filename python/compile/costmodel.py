@@ -1,0 +1,221 @@
+"""Differentiable hardware cost models (L2) — paper Sec. III-C.
+
+Two model families:
+
+  * ``diana``       — the paper's analytical cycle models of the DIANA
+                      accelerators (Eq. 6 AIMC, Eq. 7 digital), including
+                      the DMA weight-load terms.
+  * ``proportional``— the abstract models of Fig. 5: latency simply
+                      proportional to assigned MACs, with throughput and
+                      active/idle power supplied as *runtime inputs* so a
+                      single lowered HLO covers every Fig.-5 scenario.
+
+Both express per-layer, per-accelerator latency as a function of the
+(expected) number of output channels assigned to that accelerator, which
+in SEARCH mode is the softmax(alpha) channel mass (continuous), and in
+the rust simulator is the exact integer count. ceil() appears in Eq. 6/7;
+we evaluate it exactly but give it a straight-through gradient so the
+loss stays differentiable.
+
+Units: cycles (@260 MHz on DIANA) and mW; energy in the loss is
+mW*cycles, converted to uJ only in reports. DIANA power calibration:
+DESIGN.md §Key-numeric-contracts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# DIANA constants
+# ---------------------------------------------------------------------------
+
+#: AIMC array geometry (paper Eq. 6): 1152 rows x 512 columns of cells
+AIMC_ROWS, AIMC_COLS = 1152, 512
+#: digital PE array geometry (paper Eq. 7): 16x16 PEs
+DIG_PE = 16
+#: clock, for cycle->time conversion in reports
+F_CLK_HZ = 260e6
+#: average power (mW): [digital, aimc], active and idle. Calibrated so the
+#: All-8bit CIFAR-10/ResNet20 point lands on the paper's Table-I scale
+#: (1.55 ms / 38.71 uJ at 260 MHz) — see rust/src/hw/energy.rs for the
+#: mirrored constants and EXPERIMENTS.md for the calibration check.
+P_ACT = (24.0, 26.0)
+P_IDLE = (1.3, 1.3)
+
+#: smooth-max sharpness for Eq. 3 (per-layer latencies are normalized by
+#: the layer's all-digital latency before the logsumexp, so one constant
+#: works across layers of very different size)
+SMOOTHMAX_BETA = 8.0
+
+
+def ceil_ste(x):
+    """Exact ceil forward, unit gradient backward."""
+    return x + jax.lax.stop_gradient(jnp.ceil(x) - x)
+
+
+def smooth_max(xs, scale):
+    """Differentiable approximation of max(xs) (Eq. 3's substitute).
+
+    logsumexp(beta * x / scale) * scale / beta  >=  max(xs); tight as
+    beta -> inf. ``scale`` sets the units so beta is dimensionless.
+    """
+    b = SMOOTHMAX_BETA
+    x = jnp.stack(xs) / scale
+    return scale / b * jax.nn.logsumexp(b * x)
+
+
+# ---------------------------------------------------------------------------
+# DIANA analytical latency models (cycles)
+# ---------------------------------------------------------------------------
+
+def lat_aimc(cin, fx, fy, ox, oy, cout_a):
+    """Paper Eq. 6. cout_a may be fractional (expected channels) in SEARCH.
+
+    First addend: compute — the AIMC macro processes up to 1152 input
+    contributions x 512 output columns per activation; second: the DMA
+    cycles to (re)program the cells (2 transfers x 4 bytes/cycle lanes).
+    When cout_a == 0 both ceil terms are 0 and the whole layer is free,
+    which discretization relies on.
+    """
+    tiles_in = ceil_ste(cin * fx * fy / AIMC_ROWS)
+    tiles_out = ceil_ste(cout_a / AIMC_COLS)
+    compute = tiles_in * tiles_out * ox * oy
+    dma = 2.0 * 4.0 * cin * tiles_out
+    return compute + dma
+
+
+def lat_dig(cin, fx, fy, ox, oy, cout_d):
+    """Paper Eq. 7: 16 output channels x 16 output rows per PE-array pass
+    (first addend: compute), plus weight-load DMA (second addend)."""
+    compute = ceil_ste(cout_d / DIG_PE) * ceil_ste(oy / DIG_PE) * cin * ox * fx * fy
+    dma = cin * cout_d * fx * fy
+    return compute + dma
+
+
+def lat_aimc_static(cin, fx, fy, ox, oy, cout_a) -> float:
+    """Pure-python Eq. 6 (for normalizer constants, no tracing)."""
+    import math
+    tiles_in = math.ceil(cin * fx * fy / AIMC_ROWS)
+    tiles_out = math.ceil(cout_a / AIMC_COLS)
+    return tiles_in * tiles_out * ox * oy + 2.0 * 4.0 * cin * tiles_out
+
+
+def lat_dig_static(cin, fx, fy, ox, oy, cout_d) -> float:
+    """Pure-python Eq. 7 (for normalizer constants, no tracing)."""
+    import math
+    return (math.ceil(cout_d / DIG_PE) * math.ceil(oy / DIG_PE)
+            * cin * ox * fx * fy + cin * cout_d * fx * fy)
+
+
+def layer_lats_diana(node_meta, cout_d, cout_a):
+    """(lat_digital, lat_aimc) for one mappable layer. FC layers are
+    1x1x1 convs in this model (fx=fy=ox=oy=1)."""
+    cin, fx, fy = node_meta["cin"], node_meta["k"], node_meta["k"]
+    ox, oy = node_meta["out_hw"][1], node_meta["out_hw"][0]
+    return (lat_dig(cin, fx, fy, ox, oy, cout_d),
+            lat_aimc(cin, fx, fy, ox, oy, cout_a))
+
+
+def layer_lats_dw_diana(node_meta):
+    """Depthwise conv: digital-only. Executed channel-by-channel (each
+    output channel reads one input channel), so cin=1 in the per-channel
+    inner product and cout channels map onto the 16-row PE axis."""
+    fx = fy = node_meta["k"]
+    ox, oy = node_meta["out_hw"][1], node_meta["out_hw"][0]
+    cout = node_meta["cout"]
+    compute = ceil_ste(jnp.asarray(float(cout)) / DIG_PE) * \
+        ceil_ste(jnp.asarray(float(oy)) / DIG_PE) * ox * fx * fy
+    dma = float(cout * fx * fy)
+    return compute + dma
+
+
+# ---------------------------------------------------------------------------
+# loss terms (Eq. 3 latency / Eq. 4 energy)
+# ---------------------------------------------------------------------------
+
+def _per_layer_costs_diana(model_meta, exp_channels):
+    """exp_channels: {name: (cout_d, cout_a)} for mappable nodes.
+    Returns list of (lat_d, lat_a, M) per cost-bearing node."""
+    out = []
+    for nm in model_meta["nodes"]:
+        if nm.get("mappable"):
+            cd, ca = exp_channels[nm["name"]]
+            ld, la = layer_lats_diana(nm, cd, ca)
+            ox, oy = nm["out_hw"][1], nm["out_hw"][0]
+            scale = max(lat_dig_static(nm["cin"], nm["k"], nm["k"], ox, oy,
+                                       nm["cout"]), 1.0)
+            m = smooth_max([ld, la], scale)
+            out.append((ld, la, m))
+        elif nm["op"] == "dwconv":
+            ld = layer_lats_dw_diana(nm)
+            out.append((ld, jnp.asarray(0.0), ld))
+    return out
+
+
+def loss_latency_diana(model_meta, exp_channels):
+    """Eq. 3: sum over layers of smooth-max accelerator latency (cycles)."""
+    costs = _per_layer_costs_diana(model_meta, exp_channels)
+    return sum(m for _, _, m in costs)
+
+
+def loss_energy_diana(model_meta, exp_channels):
+    """Eq. 4: active + idle energy over both accelerators (mW*cycles)."""
+    costs = _per_layer_costs_diana(model_meta, exp_channels)
+    total = jnp.asarray(0.0)
+    for ld, la, m in costs:
+        total = total + P_ACT[0] * ld + P_IDLE[0] * (m - ld)
+        total = total + P_ACT[1] * la + P_IDLE[1] * (m - la)
+    return total
+
+
+def loss_proportional(model_meta, exp_channels, thpt, p_act, p_idle):
+    """Fig.-5 abstract model: lat_i = assigned_MACs / thpt_i (cycles),
+    energy per Eq. 4. ``thpt``(2,), ``p_act``(2,), ``p_idle``(2,) are
+    runtime inputs. With p_idle == p_act this reduces (up to a constant)
+    to the latency objective — exactly the paper's Fig.-5 observation."""
+    total = jnp.asarray(0.0)
+    for nm in model_meta["nodes"]:
+        if nm.get("mappable"):
+            cd, ca = exp_channels[nm["name"]]
+            macs_per_ch = float(nm["macs"]) / float(nm["cout"])
+            ld = macs_per_ch * cd / thpt[0]
+            la = macs_per_ch * ca / thpt[1]
+            scale = float(max(nm["macs"], 1))
+            m = smooth_max([ld, la], scale / 1.0)
+            total = total + p_act[0] * ld + p_idle[0] * (m - ld)
+            total = total + p_act[1] * la + p_idle[1] * (m - la)
+        elif nm["op"] == "dwconv":
+            ld = float(nm["macs"]) / thpt[0]
+            total = total + p_act[0] * ld
+    return total
+
+
+# ---------------------------------------------------------------------------
+# baseline normalizers
+# ---------------------------------------------------------------------------
+
+def all_digital_reference(model_meta):
+    """(latency_cycles, energy_mWcycles) of the All-8bit mapping — used to
+    normalize the regularizer so lambda is comparable across models.
+    Pure python: usable outside a trace (smooth_max of (x, 0) with x/scale
+    = 1 evaluates to scale/beta*logsumexp([beta, 0]) ~ x for beta >> 1;
+    here we take the exact hard max instead, which is what the rust
+    simulator also reports)."""
+    lat = 0.0
+    en = 0.0
+    for nm in model_meta["nodes"]:
+        if nm.get("mappable"):
+            ox, oy = nm["out_hw"][1], nm["out_hw"][0]
+            ld = lat_dig_static(nm["cin"], nm["k"], nm["k"], ox, oy, nm["cout"])
+        elif nm["op"] == "dwconv":
+            import math
+            ox, oy = nm["out_hw"][1], nm["out_hw"][0]
+            ld = (math.ceil(nm["cout"] / DIG_PE) * math.ceil(oy / DIG_PE)
+                  * ox * nm["k"] * nm["k"] + nm["cout"] * nm["k"] * nm["k"])
+        else:
+            continue
+        lat += ld
+        en += P_ACT[0] * ld + P_IDLE[1] * ld  # aimc idles the whole layer
+    return float(lat), float(en)

@@ -1,0 +1,120 @@
+"""Synthetic benchmark datasets (python mirror).
+
+No dataset downloads are possible in this environment, so the three
+benchmarks use deterministic, class-conditional synthetic images
+(DESIGN.md §Substitutions): each class is a fixed mixture of oriented
+sinusoidal gratings ("gabors") with a class color palette; samples add
+phase/amplitude jitter plus Gaussian noise. The task is learnable but
+not trivial, and — importantly for this paper — *precision-sensitive*:
+ternarizing early layers measurably hurts accuracy, which is the
+behaviour the mapping search trades off.
+
+The rust runtime generator (rust/src/data/synth.rs) implements the SAME
+algorithm from the same SplitMix64 streams; this python copy exists for
+kernel/model unit tests only and is never on the artifact path.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+# generator version tag; bump if the algorithm changes (rust mirrors it)
+ALGO_VERSION = 1
+N_COMPONENTS = 3
+NOISE_SIGMA = 0.15
+PHASE_JITTER = 0.15  # fraction of 2*pi
+
+
+def splitmix64(state: int):
+    """One SplitMix64 step -> (new_state, u64 output). Matches
+    rust/src/util/prng.rs bit-for-bit."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+def _u01(state: int):
+    """Uniform in [0,1) from the top 53 bits (same as rust)."""
+    state, z = splitmix64(state)
+    return state, (z >> 11) * (1.0 / (1 << 53))
+
+
+class ClassSpec:
+    """Per-class grating mixture, derived from (dataset_seed, class)."""
+
+    def __init__(self, dataset_seed: int, cls: int):
+        st = (dataset_seed * 0x51_7C_C1B7_2722_0A95 + cls * 0x2545F4914F6CDD1D + 1) & MASK64
+        comps = []
+        for _ in range(N_COMPONENTS):
+            st, u_th = _u01(st)
+            st, u_fr = _u01(st)
+            st, u_ph = _u01(st)
+            st, u_r = _u01(st)
+            st, u_g = _u01(st)
+            st, u_b = _u01(st)
+            st, u_a = _u01(st)
+            comps.append({
+                "theta": u_th * math.pi,
+                "freq": 1.5 + 3.5 * u_fr,
+                "phase": u_ph * 2.0 * math.pi,
+                "color": (u_r, u_g, u_b),
+                "amp": 0.5 + 0.5 * u_a,
+            })
+        self.comps = comps
+
+
+def gen_sample(dataset_seed: int, split: int, index: int, cls: int,
+               h: int, w: int) -> np.ndarray:
+    """One (3, h, w) float32 image in [0, 1]. ``split``: 0 train, 1 test."""
+    spec = ClassSpec(dataset_seed, cls)
+    st = (dataset_seed ^ (split * 0xD6E8FEB86659FD93) ^ (index * 0xA5A5A5A5A5A5A5A5 + 0x1234567)) & MASK64
+    yy = (np.arange(h, dtype=np.float32) / h)[:, None]
+    xx = (np.arange(w, dtype=np.float32) / w)[None, :]
+    img = np.zeros((3, h, w), np.float32)
+    for comp in spec.comps:
+        st, u_pj = _u01(st)
+        st, u_aj = _u01(st)
+        phase = comp["phase"] + (u_pj - 0.5) * 2.0 * math.pi * PHASE_JITTER
+        amp = comp["amp"] * (0.8 + 0.4 * u_aj)
+        cx = math.cos(comp["theta"]) * comp["freq"]
+        cy = math.sin(comp["theta"]) * comp["freq"]
+        wave = np.sin(2.0 * math.pi * (cx * xx + cy * yy) + phase).astype(np.float32)
+        for ch in range(3):
+            img[ch] += amp * comp["color"][ch] * wave
+    # per-pixel gaussian noise via Box-Muller on the same stream
+    n = 3 * h * w
+    noise = np.empty(n, np.float32)
+    i = 0
+    while i < n:
+        st, u1 = _u01(st)
+        st, u2 = _u01(st)
+        u1 = max(u1, 1e-12)
+        r = math.sqrt(-2.0 * math.log(u1))
+        noise[i] = r * math.cos(2.0 * math.pi * u2)
+        if i + 1 < n:
+            noise[i + 1] = r * math.sin(2.0 * math.pi * u2)
+        i += 2
+    img += NOISE_SIGMA * noise.reshape(3, h, w)
+    # squash to [0,1]; 0.5 +- spread
+    return np.clip(0.5 + img / (2.0 * N_COMPONENTS), 0.0, 1.0).astype(np.float32)
+
+
+def gen_batch(dataset_seed: int, split: int, start: int, batch: int,
+              classes: int, c: int, h: int, w: int):
+    """Deterministic batch: sample ``i`` has class ``i % classes``."""
+    assert c == 3
+    xs = np.zeros((batch, 3, h, w), np.float32)
+    ys = np.zeros((batch,), np.int32)
+    for i in range(batch):
+        idx = start + i
+        cls = idx % classes
+        xs[i] = gen_sample(dataset_seed, split, idx, cls, h, w)
+        ys[i] = cls
+    return xs, ys

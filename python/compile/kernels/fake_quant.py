@@ -1,0 +1,83 @@
+"""Pallas kernel: symmetric fake-quantization (paper Eq. 5).
+
+The kernel quantizes a (R, K) tile-at-a-time, keeping each tile resident
+in VMEM. On a real TPU this is bandwidth-bound; the BlockSpec below reads
+each element of ``w`` exactly once from HBM and writes the quantized copy
+once, so the kernel runs at streaming roofline. interpret=True is
+mandatory on this CPU-PJRT image (real lowering emits a Mosaic
+custom-call the CPU plugin cannot execute).
+
+Gradient note: the kernel is used inside ``ste_wrap`` (below) which
+attaches the straight-through estimator, matching
+``quantize.fake_quant_weight``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM tile. 8x128 is the fp32 TPU vreg tile; 256 rows x K<=4608
+# cols of f32 is <= 4.7 MB, comfortably inside a 16 MB VMEM budget
+# together with the output tile.
+_BLOCK_R = 256
+
+
+def _fq_kernel(w_ref, scale_ref, o_ref, *, levels: float):
+    """One (BLOCK_R, K) tile: o = s/L * round(L * clip(w/s, -1, 1))."""
+    s = scale_ref[0]
+    x = w_ref[...] / s
+    x = jnp.clip(x, -1.0, 1.0)
+    o_ref[...] = s / levels * jnp.round(levels * x)
+
+
+def fake_quant_pallas(w: jnp.ndarray, scale: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Fake-quantize ``w`` (R, K) with per-tensor scale e^s (shape (1,)).
+
+    Matches :func:`ref.fake_quant_ref` exactly (same op order).
+    """
+    r, k = w.shape
+    levels = float(2 ** (n_bits - 1) - 1)
+    br = min(_BLOCK_R, r)
+    grid = (pl.cdiv(r, br),)
+    return pl.pallas_call(
+        functools.partial(_fq_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, k), w.dtype),
+        interpret=True,
+    )(w, scale)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant_ste(w, log_scale, n_bits):
+    """STE fake-quant: forward = pallas kernel, backward (below) =
+    straight-through for w (clip mask) and the LSQ quantization-residual
+    gradient for the trainable log-scale."""
+    scale = jnp.exp(log_scale).reshape((1,))
+    return fake_quant_pallas(w, scale, n_bits)
+
+
+def _fq_fwd(w, log_scale, n_bits):
+    out = fake_quant_ste(w, log_scale, n_bits)
+    return out, (w, jnp.exp(log_scale), out)
+
+
+def _fq_bwd(n_bits, res, g):
+    w, s, q = res
+    mask = (jnp.abs(w / s) <= 1.0).astype(w.dtype)
+    d_w = mask * g
+    # LSQ gradient normalization (see kernels/mix.py::_mix_bwd)
+    levels = float(2 ** (n_bits - 1) - 1)
+    d_ls = jnp.sum(g * (q - mask * w)) / jnp.sqrt(float(w.size) * levels)
+    return d_w, d_ls
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)

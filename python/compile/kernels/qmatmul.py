@@ -1,0 +1,78 @@
+"""Pallas kernel: tiled integer-domain matmul (deployment-check path).
+
+After discretization the two DIANA sub-layers compute in integer
+arithmetic (int8 codes on the digital array, ternary codes on the AIMC
+array). The rust simulator cross-checks its integer reference conv
+against this kernel's output (lowered into the deploy-check HLO).
+
+Codes are carried as f32 — exact up to 2^24, far above anything the
+DIANA formats produce — because f32 is the one dtype the whole
+CPU-PJRT interchange path supports uniformly.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the digital accelerator's
+16x16 weight-stationary PE loop nest becomes a (BM, BK)x(BK, BN) MXU
+tile schedule; BlockSpec expresses the HBM<->VMEM movement that DIANA
+expresses with DMA bursts into its 64 kB weight memory. The k-loop is
+the innermost grid axis, so each output tile accumulates in VMEM
+scratch across k-steps (double-buffered by the pallas pipeline).
+
+interpret=True is mandatory on this CPU-PJRT image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+# MXU-shaped tiles: 128x128 output tile, 128-deep reduction slices.
+_BM, _BK, _BN = 128, 128, 128
+
+
+def _qmm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """Grid (i, j, k): accumulate a (BM, BK) x (BK, BN) product."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def qmatmul_pallas(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a (M, K) @ b (K, N) with M,K,N padded internally to tile multiples.
+
+    Matches :func:`ref.qmatmul_ref` exactly for integer-code inputs.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bk, bn = min(_BM, m), min(_BK, k), min(_BN, n)
+    # pad to tile multiples; zeros contribute nothing to the accumulation
+    mp, kp, np_ = pl.cdiv(m, bm) * bm, pl.cdiv(k, bk) * bk, pl.cdiv(n, bn) * bn
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]

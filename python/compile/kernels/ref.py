@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with plain jax.numpy ops only. pytest (python/tests/) sweeps shapes and
+dtypes with hypothesis and asserts allclose between kernel and oracle;
+this file is the single source of truth for kernel semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant_ref(w: jnp.ndarray, scale: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Symmetric fake-quantization, Eq. 5 with pre-normalization.
+
+    ``scale`` is e^s (already exponentiated); broadcastable to w.
+    """
+    levels = float(2 ** (n_bits - 1) - 1)
+    x = jnp.clip(w / scale, -1.0, 1.0)
+    return scale / levels * jnp.round(levels * x)
+
+
+def mix_ref(w: jnp.ndarray, alpha: jnp.ndarray, scales: jnp.ndarray,
+            bits: tuple, tau: float = 1.0) -> jnp.ndarray:
+    """ODiMO effective weights, Eq. 1.
+
+    w      : (Cout, K) layer weights flattened over (Cin*fy*fx)
+    alpha  : (N, Cout) trainable mapping logits
+    scales : (N,)      e^s per accelerator format
+    bits   : static tuple of N bit-widths, e.g. (8, 2)
+
+    Returns (Cout, K):  W_eff[c] = sum_i softmax(alpha/tau)[i,c] * Q_i(w[c])
+    """
+    abar = jax.nn.softmax(alpha / tau, axis=0)  # (N, Cout)
+    out = jnp.zeros_like(w)
+    for i, n in enumerate(bits):
+        q = fake_quant_ref(w, scales[i], n)
+        out = out + abar[i][:, None] * q
+    return out
+
+
+def qmatmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Integer-domain matmul oracle: a (M, K) x b (K, N) -> (M, N).
+
+    Inputs hold integer *codes* stored as f32 (the interchange dtype the
+    CPU PJRT path supports everywhere); accumulation is exact in f32 as
+    long as |codes| and K stay within the f32 24-bit mantissa budget,
+    which the DIANA formats (<= 8-bit codes) respect for every layer in
+    the benchmark models.
+    """
+    return a @ b
+
+
+def softmax_tau_ref(alpha: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """Temperature softmax over axis 0 (the accelerator axis)."""
+    return jax.nn.softmax(alpha / tau, axis=0)

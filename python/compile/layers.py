@@ -1,0 +1,173 @@
+"""ODiMO supernet layer primitives (L2).
+
+Each mappable Conv/FC layer carries, besides its float weights:
+  - ``ls8``, ``lster`` : trainable log-scales of the two weight formats
+                         (digital int8, AIMC ternary) — Eq. 5's ``s``
+  - ``lsa``            : trainable log-scale of the output activations
+  - ``alpha``          : (N, Cout) mapping logits — Eq. 1
+
+Three execution modes:
+  FLOAT  — plain float network (pre-training phase)
+  SEARCH — continuous relaxation: effective weights are the
+           softmax(alpha)-blend of the N fake-quantized copies (Eq. 1),
+           activations fake-quantized at the 7-bit worst case
+  DEPLOY — hard mapping: a one-hot ``assign`` (N, Cout) input selects the
+           format per channel; activations use the exact DIANA formats
+           (8-bit storage, 7-bit AIMC D/A-A/D truncation on both the
+           input the AIMC sub-layer reads and the channels it writes)
+
+The forward value of the SEARCH blend comes from the fused Pallas kernel
+(`kernels.mix`); DEPLOY uses two sub-convolutions (one per accelerator)
+which is exactly what the partitioned hardware executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mix import mix_ste
+from . import quantize as Q
+
+FLOAT, SEARCH, DEPLOY = "float", "search", "deploy"
+
+#: accelerator order everywhere in this codebase: [digital(int8), aimc(ternary)]
+BITS = (8, 2)
+N_ACC = 2
+DIG, AIMC = 0, 1
+
+
+def conv2d(x, w, stride: int, pad: int, groups: int = 1):
+    """NCHW/OIHW convolution."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups)
+
+
+def input_quant(x):
+    """Fixed 8-bit quantization of the network input (images in [0,1])."""
+    return jnp.round(x * 255.0) / 255.0
+
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9  # running-stat decay used by the float train step
+
+
+def bn_train(p, y, stats_out, name):
+    """BatchNorm with batch statistics (FLOAT pre-training only; the
+    paper folds BN into conv/FC before quantization, Sec. III-B — the
+    fold itself runs in rust/src/coordinator/fold.rs between phases).
+    Records (mean, var) into ``stats_out`` for the running update."""
+    mu = jnp.mean(y, axis=(0, 2, 3))
+    var = jnp.var(y, axis=(0, 2, 3))
+    stats_out[name] = (mu, var)
+    yn = (y - mu.reshape(1, -1, 1, 1)) / jnp.sqrt(var.reshape(1, -1, 1, 1) + BN_EPS)
+    return p["gamma"].reshape(1, -1, 1, 1) * yn + p["beta"].reshape(1, -1, 1, 1)
+
+
+def bn_eval(p, y):
+    """BatchNorm with running statistics (float evaluation)."""
+    rm, rv = p["rm"], p["rv"]
+    yn = (y - rm.reshape(1, -1, 1, 1)) / jnp.sqrt(rv.reshape(1, -1, 1, 1) + BN_EPS)
+    return p["gamma"].reshape(1, -1, 1, 1) * yn + p["beta"].reshape(1, -1, 1, 1)
+
+
+def _effective_weights_search(p, tau):
+    """Eq. 1 via the fused Pallas kernel; returns same shape as p['w']."""
+    w = p["w"]
+    w2d = w.reshape(w.shape[0], -1)
+    log_scales = jnp.stack([p["ls8"], p["lster"]])
+    w_eff = mix_ste(w2d, p["alpha"], log_scales, jnp.asarray(tau, jnp.float32), BITS)
+    return w_eff.reshape(w.shape)
+
+
+def act_out(y, p, mode, assign, relu=True):
+    """Output activation quantization for a mappable producer."""
+    if relu:
+        y = jax.nn.relu(y)
+    if mode == FLOAT:
+        return y
+    if mode == SEARCH:
+        return Q.fake_quant_act(y, p["lsa"], 7)
+    return Q.fake_quant_act_mixed(y, p["lsa"], assign[AIMC])
+
+
+def mconv_apply(p, x, *, stride, pad, mode, tau=1.0, assign=None, relu=True,
+                name=None, bn_stats=None):
+    """Mappable convolution (the ODiMO search unit).
+
+    FLOAT mode applies BatchNorm: batch statistics when ``bn_stats`` is a
+    dict to record into (training), running statistics otherwise (eval).
+    Quantized modes assume BN was folded into (w, b) beforehand.
+    """
+    if mode == FLOAT:
+        y = conv2d(x, p["w"], stride, pad) + p["b"].reshape(1, -1, 1, 1)
+        y = bn_train(p, y, bn_stats, name) if bn_stats is not None else bn_eval(p, y)
+        return act_out(y, p, mode, assign, relu)
+    if mode == SEARCH:
+        w_eff = _effective_weights_search(p, tau)
+        y = conv2d(x, w_eff, stride, pad) + p["b"].reshape(1, -1, 1, 1)
+        return act_out(y, p, mode, assign, relu)
+    # DEPLOY: one sub-convolution per accelerator. The digital array reads
+    # the 8-bit stored activations; the AIMC D/A truncates its input to
+    # 7 bits. assign is a one-hot (N, Cout) float mask.
+    w = p["w"]
+    q8 = Q.fake_quant_weight(w, p["ls8"], 8)
+    qt = Q.fake_quant_weight(w, p["lster"], 2)
+    mask_d = assign[DIG].reshape(-1, 1, 1, 1)
+    mask_a = assign[AIMC].reshape(-1, 1, 1, 1)
+    x7 = jnp.round(jnp.clip(x, 0.0, 1.0) * 127.0) / 127.0  # AIMC 7-bit D/A read
+    y = conv2d(x, q8 * mask_d, stride, pad) + conv2d(x7, qt * mask_a, stride, pad)
+    y = y + p["b"].reshape(1, -1, 1, 1)
+    return act_out(y, p, mode, assign, relu)
+
+
+def dwconv_apply(p, x, *, stride, pad, mode, relu=True, name=None, bn_stats=None):
+    """Depthwise convolution — digital-only on DIANA (not mappable)."""
+    groups = x.shape[1]
+    if mode == FLOAT:
+        w = p["w"]
+    else:
+        w = Q.fake_quant_weight(p["w"], p["ls8"], 8)
+    y = conv2d(x, w, stride, pad, groups=groups) + p["b"].reshape(1, -1, 1, 1)
+    if mode == FLOAT:
+        y = bn_train(p, y, bn_stats, name) if bn_stats is not None else bn_eval(p, y)
+        return jax.nn.relu(y) if relu else y
+    if relu:
+        y = jax.nn.relu(y)
+    n = 7 if mode == SEARCH else 8
+    return Q.fake_quant_act(y, p["lsa"], n)
+
+
+def fc_apply(p, x, *, mode, tau=1.0, assign=None):
+    """Mappable fully-connected classifier head. Logits stay float."""
+    if mode == FLOAT:
+        return x @ p["w"].T + p["b"]
+    if mode == SEARCH:
+        log_scales = jnp.stack([p["ls8"], p["lster"]])
+        w_eff = mix_ste(p["w"], p["alpha"], log_scales,
+                        jnp.asarray(tau, jnp.float32), BITS)
+        return x @ w_eff.T + p["b"]
+    q8 = Q.fake_quant_weight(p["w"], p["ls8"], 8)
+    qt = Q.fake_quant_weight(p["w"], p["lster"], 2)
+    mask_d = assign[DIG].reshape(-1, 1)
+    mask_a = assign[AIMC].reshape(-1, 1)
+    x7 = jnp.round(jnp.clip(x, 0.0, 1.0) * 127.0) / 127.0
+    return x @ (q8 * mask_d).T + x7 @ (qt * mask_a).T + p["b"]
+
+
+def add_apply(p, a, b, *, mode, relu=True):
+    """Residual join; re-quantizes the sum with its own activation scale."""
+    y = a + b
+    if relu:
+        y = jax.nn.relu(y)
+    if mode == FLOAT:
+        return y
+    n = 7 if mode == SEARCH else 8
+    return Q.fake_quant_act(y, p["lsa"], n)
+
+
+def gap_apply(x):
+    """Global average pooling NCHW -> (N, C)."""
+    return jnp.mean(x, axis=(2, 3))

@@ -1,0 +1,323 @@
+"""Benchmark model definitions as explicit DAGs (L2).
+
+A model is a list of nodes; every node has a unique name and references
+its inputs by name. The same table is exported (via ``to_meta``) to the
+rust coordinator, which rebuilds the graph for the partition pass and
+the DIANA simulator — python and rust share one source of truth.
+
+Node kinds:
+  input                     — network input placeholder
+  conv  (mappable)          — ODiMO search unit, Eq.-1 supernet in SEARCH
+  dwconv (digital-only)     — depthwise conv; DIANA executes these only
+                              on the digital accelerator (paper Sec. IV-A)
+  add                       — residual join (+ ReLU + re-quant)
+  gap                       — global average pool
+  fc    (mappable)          — classifier head
+
+Benchmarks (paper Sec. IV-A, with the substitutions of DESIGN.md):
+  resnet20   — CIFAR-10-like   32x32x3, 10 classes (exact paper model)
+  resnet18s  — TinyImageNet-like 64x64x3; width 0.25x, 24 classes
+               (CPU-budget substitution; depth structure preserved)
+  mbv1_025   — VWW-like 96x96x3, 2 classes, MobileNetV1 0.25x
+  tinycnn    — 3-conv test model for fast integration tests
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+@dataclass
+class Node:
+    name: str
+    op: str                      # input|conv|dwconv|add|gap|fc
+    inputs: List[str] = field(default_factory=list)
+    cout: int = 0
+    k: int = 1                   # square kernel size
+    stride: int = 1
+    pad: int = 0
+    relu: bool = True
+    # filled by shape inference:
+    cin: int = 0
+    in_hw: Tuple[int, int] = (0, 0)
+    out_hw: Tuple[int, int] = (0, 0)
+
+
+@dataclass
+class ModelDef:
+    name: str
+    input_shape: Tuple[int, int, int]      # (C, H, W)
+    classes: int
+    nodes: List[Node]
+    train_batch: int = 64
+    eval_batch: int = 256
+
+    def node(self, name: str) -> Node:
+        return self._index[name]
+
+    def finalize(self) -> "ModelDef":
+        """Shape inference; populates cin / in_hw / out_hw on every node."""
+        self._index = {n.name: n for n in self.nodes}
+        shapes: Dict[str, Tuple[int, int, int]] = {}
+        c0, h0, w0 = self.input_shape
+        for n in self.nodes:
+            if n.op == "input":
+                shapes[n.name] = (c0, h0, w0)
+                n.cout, n.out_hw = c0, (h0, w0)
+                continue
+            c, h, w = shapes[n.inputs[0]]
+            n.cin, n.in_hw = c, (h, w)
+            if n.op in ("conv", "dwconv"):
+                oh = (h + 2 * n.pad - n.k) // n.stride + 1
+                ow = (w + 2 * n.pad - n.k) // n.stride + 1
+                if n.op == "dwconv":
+                    n.cout = c
+                shapes[n.name] = (n.cout, oh, ow)
+                n.out_hw = (oh, ow)
+            elif n.op == "add":
+                ca, ha, wa = shapes[n.inputs[0]]
+                cb, hb, wb = shapes[n.inputs[1]]
+                assert (ca, ha, wa) == (cb, hb, wb), \
+                    f"{n.name}: add shape mismatch {shapes[n.inputs[0]]} vs {shapes[n.inputs[1]]}"
+                n.cout, n.out_hw = ca, (ha, wa)
+                shapes[n.name] = (ca, ha, wa)
+            elif n.op == "gap":
+                n.cout, n.out_hw = c, (1, 1)
+                shapes[n.name] = (c, 1, 1)
+            elif n.op == "fc":
+                n.cout, n.out_hw = self.classes, (1, 1)
+                shapes[n.name] = (self.classes, 1, 1)
+            else:
+                raise ValueError(n.op)
+        return self
+
+    # ---- derived views -------------------------------------------------
+
+    def mappable(self) -> List[Node]:
+        """Nodes ODiMO partitions across accelerators (conv + fc)."""
+        return [n for n in self.nodes if n.op in ("conv", "fc")]
+
+    def param_nodes(self) -> List[Node]:
+        return [n for n in self.nodes if n.op in ("conv", "dwconv", "fc", "add")]
+
+    def macs(self, n: Node) -> int:
+        if n.op == "conv":
+            return n.cin * n.k * n.k * n.cout * n.out_hw[0] * n.out_hw[1]
+        if n.op == "dwconv":
+            return n.cout * n.k * n.k * n.out_hw[0] * n.out_hw[1]
+        if n.op == "fc":
+            return n.cin * n.cout
+        return 0
+
+    # ---- parameters ----------------------------------------------------
+
+    def init_params(self, key) -> Dict[str, Dict[str, jnp.ndarray]]:
+        """He-normal weights; quant scales from weight statistics; alpha=0
+        (uniform mapping prior). BN is architecturally folded: every conv
+        carries its own bias (DESIGN.md §Substitutions)."""
+        params: Dict[str, Dict[str, jnp.ndarray]] = {}
+        for n in self.param_nodes():
+            key, k1 = jax.random.split(key)
+            p: Dict[str, jnp.ndarray] = {}
+            if n.op == "conv":
+                fan_in = n.cin * n.k * n.k
+                w = jax.random.normal(k1, (n.cout, n.cin, n.k, n.k)) * math.sqrt(2.0 / fan_in)
+            elif n.op == "dwconv":
+                fan_in = n.k * n.k
+                w = jax.random.normal(k1, (n.cout, 1, n.k, n.k)) * math.sqrt(2.0 / fan_in)
+            elif n.op == "fc":
+                fan_in = n.cin
+                w = jax.random.normal(k1, (n.cout, n.cin)) * math.sqrt(1.0 / fan_in)
+            else:  # add
+                params[n.name] = {"lsa": jnp.asarray(0.0)}
+                continue
+            p["w"] = w.astype(jnp.float32)
+            p["b"] = jnp.zeros((n.cout,), jnp.float32)
+            if n.op in ("conv", "dwconv"):
+                # BatchNorm (FLOAT pre-training only; folded before search)
+                p["gamma"] = jnp.ones((n.cout,), jnp.float32)
+                p["beta"] = jnp.zeros((n.cout,), jnp.float32)
+                p["rm"] = jnp.zeros((n.cout,), jnp.float32)
+                p["rv"] = jnp.ones((n.cout,), jnp.float32)
+            # e^s ~= 3 sigma of the weight distribution
+            p["ls8"] = jnp.asarray(math.log(3.0 * math.sqrt(2.0 / fan_in)), jnp.float32)
+            if n.op != "dwconv":
+                p["lster"] = jnp.asarray(math.log(3.0 * math.sqrt(2.0 / fan_in)), jnp.float32)
+                p["alpha"] = jnp.zeros((L.N_ACC, n.cout), jnp.float32)
+            p["lsa"] = jnp.asarray(0.0, jnp.float32)  # e^s = 1, matches [0,1] inputs
+            params[n.name] = p
+        return params
+
+    # ---- forward -------------------------------------------------------
+
+    def apply(self, params, x, *, mode: str, tau=1.0, assign=None,
+              bn_stats=None):
+        """Run the DAG. ``assign`` maps mappable-node name -> (N, Cout)
+        one-hot mask (DEPLOY mode only). In FLOAT mode, pass a dict as
+        ``bn_stats`` to run BN on batch statistics and collect them
+        (training); leave None to use running statistics (eval)."""
+        vals = {}
+        for n in self.nodes:
+            if n.op == "input":
+                vals[n.name] = x if mode == L.FLOAT else L.input_quant(x)
+            elif n.op == "conv":
+                vals[n.name] = L.mconv_apply(
+                    params[n.name], vals[n.inputs[0]], stride=n.stride,
+                    pad=n.pad, mode=mode, tau=tau,
+                    assign=None if assign is None else assign[n.name],
+                    relu=n.relu, name=n.name, bn_stats=bn_stats)
+            elif n.op == "dwconv":
+                vals[n.name] = L.dwconv_apply(
+                    params[n.name], vals[n.inputs[0]], stride=n.stride,
+                    pad=n.pad, mode=mode, relu=n.relu, name=n.name,
+                    bn_stats=bn_stats)
+            elif n.op == "add":
+                vals[n.name] = L.add_apply(
+                    params[n.name], vals[n.inputs[0]], vals[n.inputs[1]],
+                    mode=mode, relu=n.relu)
+            elif n.op == "gap":
+                vals[n.name] = L.gap_apply(vals[n.inputs[0]])
+            elif n.op == "fc":
+                vals[n.name] = L.fc_apply(
+                    params[n.name], vals[n.inputs[0]], mode=mode, tau=tau,
+                    assign=None if assign is None else assign[n.name])
+        return vals[self.nodes[-1].name]
+
+    # ---- export --------------------------------------------------------
+
+    def to_meta(self) -> dict:
+        return {
+            "name": self.name,
+            "input_shape": list(self.input_shape),
+            "classes": self.classes,
+            "train_batch": self.train_batch,
+            "eval_batch": self.eval_batch,
+            "nodes": [
+                {
+                    "name": n.name, "op": n.op, "inputs": n.inputs,
+                    "cin": n.cin, "cout": n.cout, "k": n.k,
+                    "stride": n.stride, "pad": n.pad, "relu": n.relu,
+                    "in_hw": list(n.in_hw), "out_hw": list(n.out_hw),
+                    "macs": self.macs(n),
+                    "mappable": n.op in ("conv", "fc"),
+                }
+                for n in self.nodes
+            ],
+        }
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def _basic_block(nodes: List[Node], idx: int, x: str, cin: int, cout: int,
+                 stride: int) -> str:
+    """ResNet basic block: conv-relu-conv (+skip) -relu, BN folded."""
+    c1 = f"b{idx}_conv1"
+    c2 = f"b{idx}_conv2"
+    nodes.append(Node(c1, "conv", [x], cout=cout, k=3, stride=stride, pad=1))
+    nodes.append(Node(c2, "conv", [c1], cout=cout, k=3, stride=1, pad=1, relu=False))
+    if stride != 1 or cin != cout:
+        sk = f"b{idx}_down"
+        nodes.append(Node(sk, "conv", [x], cout=cout, k=1, stride=stride,
+                          pad=0, relu=False))
+        skip = sk
+    else:
+        skip = x
+    out = f"b{idx}_add"
+    nodes.append(Node(out, "add", [c2, skip]))
+    return out
+
+
+def resnet20() -> ModelDef:
+    """ResNet20 for CIFAR-10 (He et al.): 3 stages x 3 basic blocks,
+    16/32/64 channels — the paper's CIFAR-10 reference model."""
+    nodes = [Node("in", "input")]
+    nodes.append(Node("stem", "conv", ["in"], cout=16, k=3, stride=1, pad=1))
+    x, cin, idx = "stem", 16, 0
+    for stage, cout in enumerate((16, 32, 64)):
+        for b in range(3):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            x = _basic_block(nodes, idx, x, cin, cout, stride)
+            cin = cout
+            idx += 1
+    nodes.append(Node("gap", "gap", [x]))
+    nodes.append(Node("fc", "fc", ["gap"]))
+    return ModelDef("resnet20", (3, 32, 32), 10, nodes,
+                    train_batch=64, eval_batch=256).finalize()
+
+
+def resnet18s() -> ModelDef:
+    """Width-0.25x ResNet18 on 64x64 inputs, 24 classes — the
+    TinyImageNet/ResNet18 substitution (DESIGN.md): same depth/stage
+    structure, CPU-trainable size."""
+    nodes = [Node("in", "input")]
+    nodes.append(Node("stem", "conv", ["in"], cout=16, k=3, stride=1, pad=1))
+    x, cin, idx = "stem", 16, 0
+    for stage, cout in enumerate((16, 32, 64, 128)):
+        for b in range(2):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            x = _basic_block(nodes, idx, x, cin, cout, stride)
+            cin = cout
+            idx += 1
+    nodes.append(Node("gap", "gap", [x]))
+    nodes.append(Node("fc", "fc", ["gap"]))
+    return ModelDef("resnet18s", (3, 64, 64), 24, nodes,
+                    train_batch=32, eval_batch=128).finalize()
+
+
+def mbv1_025() -> ModelDef:
+    """MobileNetV1 with 0.25 width multiplier, 96x96 inputs, 2 classes
+    (VWW person detection). Depthwise convs are digital-only on DIANA;
+    ODiMO maps only the pointwise/standard convs and the FC."""
+    def ch(c):  # width multiplier
+        return max(8, int(c * 0.25))
+    nodes = [Node("in", "input")]
+    nodes.append(Node("stem", "conv", ["in"], cout=ch(32), k=3, stride=2, pad=1))
+    x = "stem"
+    cfg = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+           (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2),
+           (1024, 1)]
+    for i, (cout, stride) in enumerate(cfg):
+        dw = f"dw{i}"
+        pw = f"pw{i}"
+        nodes.append(Node(dw, "dwconv", [x], k=3, stride=stride, pad=1))
+        nodes.append(Node(pw, "conv", [dw], cout=ch(cout), k=1, stride=1, pad=0))
+        x = pw
+    nodes.append(Node("gap", "gap", [x]))
+    nodes.append(Node("fc", "fc", ["gap"]))
+    return ModelDef("mbv1_025", (3, 96, 96), 2, nodes,
+                    train_batch=32, eval_batch=128).finalize()
+
+
+def tinycnn() -> ModelDef:
+    """3-conv test model: exercises conv, residual add, gap, fc — runs a
+    full ODiMO pipeline in seconds. Used by integration tests only."""
+    nodes = [Node("in", "input")]
+    nodes.append(Node("stem", "conv", ["in"], cout=8, k=3, stride=1, pad=1))
+    nodes.append(Node("c1", "conv", ["stem"], cout=16, k=3, stride=2, pad=1))
+    nodes.append(Node("c2", "conv", ["c1"], cout=16, k=3, stride=1, pad=1, relu=False))
+    nodes.append(Node("res", "add", ["c2", "c1"]))
+    nodes.append(Node("gap", "gap", ["res"]))
+    nodes.append(Node("fc", "fc", ["gap"]))
+    return ModelDef("tinycnn", (3, 16, 16), 10, nodes,
+                    train_batch=32, eval_batch=128).finalize()
+
+
+BUILDERS = {
+    "tinycnn": tinycnn,
+    "resnet20": resnet20,
+    "resnet18s": resnet18s,
+    "mbv1_025": mbv1_025,
+}
+
+
+def build(name: str) -> ModelDef:
+    return BUILDERS[name]()

@@ -1,0 +1,93 @@
+"""Quantization math for ODiMO (paper Eq. 5) + batch-norm folding.
+
+All quantizers are *fake* quantizers: they map float -> float, where the
+output is exactly representable on the target integer grid. Gradients pass
+through the rounding with the straight-through estimator (STE), while the
+trainable scale receives its true gradient through the multiplicative term.
+
+Formats (DIANA, Sec. III-B of the paper):
+  - weights, digital accelerator : symmetric int8  (n = 8)
+  - weights, AIMC accelerator    : ternary         (n = 2 -> {-1, 0, +1})
+  - activations, search phase    : unsigned 7-bit  (worst case of the two)
+  - activations, deploy phase    : 8-bit storage, 7-bit AIMC I/O truncation
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round() with a straight-through gradient (identity backward)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant_weight(w: jnp.ndarray, log_scale: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Paper Eq. 5 (following its reference [21], FQ-Conv, which normalizes
+    by the scale before clipping):
+
+        Q(w) = e^s / L * round(L * clip(w / e^s, -1, 1)),  L = 2^(n-1) - 1
+
+    ``log_scale`` is the trainable ``s``; ``e^s`` keeps the scale positive.
+    n_bits=2 gives ternarization (L=1, grid {-1,0,+1} * e^s), the AIMC
+    format; n_bits=8 gives symmetric int8, the digital format.
+    """
+    levels = float(2 ** (n_bits - 1) - 1)
+    scale = jnp.exp(log_scale)
+    x = jnp.clip(w / scale, -1.0, 1.0)
+    return scale / levels * ste_round(levels * x)
+
+
+def quant_weight_int(w, log_scale, n_bits: int):
+    """Integer codes of :func:`fake_quant_weight` (deploy path): returns
+    (codes, scale/levels) with codes in [-L, L]."""
+    levels = float(2 ** (n_bits - 1) - 1)
+    scale = jnp.exp(log_scale)
+    codes = jnp.round(levels * jnp.clip(w / scale, -1.0, 1.0))
+    return codes, scale / levels
+
+
+def fake_quant_act(x: jnp.ndarray, log_scale: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Unsigned activation fake-quantization (post-ReLU tensors).
+
+        Q(x) = e^s / L * round(L * clip(x / e^s, 0, 1)),  L = 2^n - 1
+
+    The search phase uses n_bits=7, the worst case between the digital
+    (8-bit) and AIMC (7-bit D/A-A/D) activation formats; the fine-tune /
+    deploy phase quantizes per-channel with the exact format (see
+    ``fake_quant_act_mixed``).
+    """
+    levels = float(2 ** n_bits - 1)
+    scale = jnp.exp(log_scale)
+    x = jnp.clip(x / scale, 0.0, 1.0)
+    return scale / levels * ste_round(levels * x)
+
+
+def fake_quant_act_mixed(x: jnp.ndarray, log_scale: jnp.ndarray,
+                         aimc_mask: jnp.ndarray) -> jnp.ndarray:
+    """Exact deployment activation format (paper Sec. III-B): shared data
+    is stored on 8 bits but the AIMC D/A-A/D converters run on 7 bits,
+    truncating the LSB of the channels the AIMC accelerator produces.
+
+    ``aimc_mask`` is a float (C,) vector, 1.0 where the channel is mapped
+    to the AIMC accelerator. x is NCHW; the mask broadcasts over channels.
+    """
+    q8 = fake_quant_act(x, log_scale, 8)
+    q7 = fake_quant_act(x, log_scale, 7)
+    m = aimc_mask.reshape((1, -1, 1, 1)) if x.ndim == 4 else aimc_mask.reshape((1, -1))
+    return m * q7 + (1.0 - m) * q8
+
+
+def fold_batchnorm(w, b, gamma, beta, mean, var, eps: float = 1e-5):
+    """Fold a BatchNorm that follows a conv/FC into its weights/bias.
+
+    DIANA's accelerators do not implement BN in hardware (paper
+    Sec. III-B), so folding happens before fake-quantization. ``w`` is
+    OIHW (or (Cout, Cin) for FC); BN params are per output channel.
+    """
+    inv_std = gamma / jnp.sqrt(var + eps)
+    shape = (-1,) + (1,) * (w.ndim - 1)
+    w_f = w * inv_std.reshape(shape)
+    b_f = (b - mean) * inv_std + beta
+    return w_f, b_f

@@ -1,0 +1,270 @@
+"""Training / evaluation step builders (L2).
+
+Every function here returns a *pure* jax function suitable for one-shot
+AOT lowering (aot.py); the rust coordinator then drives the lowered HLO
+for the whole ODiMO pipeline:
+
+    pretrain (FLOAT)  ->  search (SEARCH + lambda * L_R)  ->  discretize
+    (rust, argmax alpha)  ->  fine-tune (DEPLOY, task loss only)  ->
+    eval / deploy (DEPLOY)
+
+Optimizer: SGD with momentum and decoupled weight decay on the weight
+tensors; a separate learning rate drives the mapping logits alpha (the
+usual DNAS two-rate scheme). All hyper-parameters (lr, lr_alpha, tau,
+lambda, weight decay) are *runtime scalar inputs* so a single lowered
+artifact serves the whole lambda sweep and any schedule.
+
+Metric vector returned by every step (f32[6]):
+    [ loss, correct_count, lat_cycles, energy_mWcycles, reg_term, tau ]
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import costmodel as CM
+from . import layers as L
+from .models import ModelDef
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1))
+
+
+def correct_count(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def exp_channels_search(model: ModelDef, params, tau):
+    """Expected per-accelerator channel mass from the current alphas:
+    cout_i^(l) = sum_c softmax(alpha/tau)[i, c]  (continuous relaxation)."""
+    out = {}
+    for n in model.mappable():
+        abar = jax.nn.softmax(params[n.name]["alpha"] / tau, axis=0)
+        out[n.name] = (jnp.sum(abar[L.DIG]), jnp.sum(abar[L.AIMC]))
+    return out
+
+
+def exp_channels_assign(model: ModelDef, assign):
+    """Exact per-accelerator channel counts from a hard assignment."""
+    return {n.name: (jnp.sum(assign[n.name][L.DIG]), jnp.sum(assign[n.name][L.AIMC]))
+            for n in model.mappable()}
+
+
+def sgd_momentum(params, mom, grads, lr, lr_alpha, mu, wd):
+    """One SGD+momentum step over the (nested dict) param tree.
+
+    - weight decay (decoupled) on the conv/fc weight tensors only
+    - ``lr_alpha`` for the mapping logits, ``lr`` for everything else
+    - BN running stats (rm/rv) are not gradient-trained: they pass
+      through untouched here and are assigned by the float step
+    """
+    new_p, new_m = {}, {}
+    for node, leaves in params.items():
+        new_p[node], new_m[node] = {}, {}
+        for leaf, p in leaves.items():
+            if leaf in ("rm", "rv"):
+                new_p[node][leaf] = p
+                new_m[node][leaf] = mom[node][leaf]
+                continue
+            g = grads[node][leaf]
+            m = mu * mom[node][leaf] + g
+            step_lr = lr_alpha if leaf == "alpha" else lr
+            upd = p - step_lr * m
+            if leaf == "w":
+                upd = upd - step_lr * wd * p
+            new_p[node][leaf] = upd
+            new_m[node][leaf] = m
+    return new_p, new_m
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def fold_params(model: ModelDef, params):
+    """Fold BN into conv weights/biases and re-derive the quantizer
+    scales from the folded weights — the float -> search transition
+    (paper Sec. III-B). Mirrored in rust/src/coordinator/fold.rs; the
+    python copy exists for unit tests and as the reference semantics.
+
+    - w' = w * gamma / sqrt(rv + eps); b' = (b - rm) * (same) + beta
+    - ls8/lster reset to log(max|w'|) per layer (fresh Eq.-5 range)
+    - gamma/beta/rm/rv reset to identity so a second fold is a no-op
+    - alpha biased toward digital (softmax([2,0]) ~ 88% int8) so the
+      search starts from a functioning supernet (see rust fold.rs)
+    """
+    out = {k: dict(v) for k, v in params.items()}
+    for n in model.param_nodes():
+        p = out[n.name]
+        if "lsa" in p:
+            # post-BN ReLU activations live on a ~[0, 4] range (a few
+            # sigma of the standardized pre-activation), not the [0, 1]
+            # image range the init assumed
+            p["lsa"] = jnp.asarray(float(jnp.log(4.0)), jnp.float32)
+        if "alpha" in p:
+            a = jnp.zeros_like(p["alpha"])
+            p["alpha"] = a.at[0].set(2.0)  # digital-biased prior
+        if "gamma" in p:
+            inv = p["gamma"] / jnp.sqrt(p["rv"] + L.BN_EPS)
+            shape = (-1,) + (1,) * (p["w"].ndim - 1)
+            p["w"] = p["w"] * inv.reshape(shape)
+            p["b"] = (p["b"] - p["rm"]) * inv + p["beta"]
+            p["gamma"] = jnp.ones_like(p["gamma"])
+            p["beta"] = jnp.zeros_like(p["beta"])
+            p["rm"] = jnp.zeros_like(p["rm"])
+            p["rv"] = jnp.ones_like(p["rv"])
+        if "ls8" in p:
+            # fresh Eq.-5 ranges for every quantized weight tensor —
+            # including BN-less layers (fc), whose weights also drift
+            # from the init-time range during pre-training
+            wmax = jnp.maximum(jnp.max(jnp.abs(p["w"])), 1e-4)
+            p["ls8"] = jnp.log(wmax)
+            if "lster" in p:
+                # ternary: a tighter range (~40% of max) keeps more
+                # weights off zero, the usual ternarization heuristic
+                p["lster"] = jnp.log(wmax * 0.4 + 1e-8)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: ModelDef, meta: dict, mode: str,
+                    reg: Optional[str] = None):
+    """Build the train step for one phase.
+
+    mode='float'               : pre-training, no quantization
+    mode='search', reg='lat'   : Eq. 2 with the Eq.-3 latency regularizer
+    mode='search', reg='en'    : Eq. 2 with the Eq.-4 energy regularizer
+    mode='search', reg='prop'  : Fig.-5 abstract model (hw consts inputs)
+    mode='deploy'              : fine-tuning with hard assignment inputs
+
+    Signatures (flattened by jax in this arg order):
+      float : (params, mom, x, y, lr, lr_alpha, mu, wd)
+      search: (params, mom, x, y, lr, lr_alpha, mu, wd, lam, tau[, hw(6,)])
+      deploy: (params, mom, assign, x, y, lr, lr_alpha, mu, wd)
+    Returns (params', mom', metrics[6]).
+    """
+    lat0, en0 = CM.all_digital_reference(meta)
+
+    if mode == L.FLOAT:
+        def step(params, mom, x, y, lr, lr_alpha, mu, wd):
+            def loss_fn(p):
+                stats = {}
+                logits = model.apply(p, x, mode=L.FLOAT, bn_stats=stats)
+                return cross_entropy(logits, y), (logits, stats)
+            (loss, (logits, stats)), grads = \
+                jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, mom = sgd_momentum(params, mom, grads, lr, lr_alpha, mu, wd)
+            # BN running-statistic update (not gradient-driven)
+            bnm = L.BN_MOMENTUM
+            for name, (bmu, bvar) in stats.items():
+                params[name]["rm"] = bnm * params[name]["rm"] + (1 - bnm) * bmu
+                params[name]["rv"] = bnm * params[name]["rv"] + (1 - bnm) * bvar
+            met = jnp.stack([loss, correct_count(logits, y),
+                             jnp.asarray(0.0), jnp.asarray(0.0),
+                             jnp.asarray(0.0), jnp.asarray(0.0)])
+            return params, mom, met
+        return step
+
+    if mode == L.SEARCH:
+        assert reg in ("lat", "en", "prop")
+
+        def step(params, mom, x, y, lr, lr_alpha, mu, wd, lam, tau, hw=None):
+            def loss_fn(p):
+                logits = model.apply(p, x, mode=L.SEARCH, tau=tau)
+                task = cross_entropy(logits, y)
+                exp = exp_channels_search(model, p, tau)
+                lat = CM.loss_latency_diana(meta, exp)
+                en = CM.loss_energy_diana(meta, exp)
+                if reg == "lat":
+                    r = lat / lat0
+                elif reg == "en":
+                    r = en / en0
+                else:
+                    thpt, p_act, p_idle = hw[0:2], hw[2:4], hw[4:6]
+                    e_prop = CM.loss_proportional(meta, exp, thpt, p_act, p_idle)
+                    allc = {nm["name"]: (float(nm["cout"]), 0.0)
+                            for nm in meta["nodes"] if nm.get("mappable")}
+                    norm = jax.lax.stop_gradient(
+                        CM.loss_proportional(meta, allc, thpt, p_act, p_idle))
+                    r = e_prop / norm
+                loss = task + lam * r
+                return loss, (logits, lat, en, r)
+            (loss, (logits, lat, en, r)), grads = \
+                jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, mom = sgd_momentum(params, mom, grads, lr, lr_alpha, mu, wd)
+            met = jnp.stack([loss, correct_count(logits, y), lat, en, r, tau])
+            return params, mom, met
+        return step
+
+    assert mode == L.DEPLOY
+
+    def step(params, mom, assign, x, y, lr, lr_alpha, mu, wd):
+        def loss_fn(p):
+            logits = model.apply(p, x, mode=L.DEPLOY, assign=assign)
+            return cross_entropy(logits, y), logits
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, mom = sgd_momentum(params, mom, grads, lr, lr_alpha, mu, wd)
+        exp = exp_channels_assign(model, assign)
+        lat = CM.loss_latency_diana(meta, exp)
+        en = CM.loss_energy_diana(meta, exp)
+        met = jnp.stack([loss, correct_count(logits, y), lat, en,
+                         jnp.asarray(0.0), jnp.asarray(0.0)])
+        return params, mom, met
+    return step
+
+
+def make_eval(model: ModelDef, mode: str):
+    """Evaluation: (params[, assign], x, y) -> [correct_count, loss_sum]."""
+    if mode == L.DEPLOY:
+        def ev(params, assign, x, y):
+            logits = model.apply(params, x, mode=L.DEPLOY, assign=assign)
+            ls = cross_entropy(logits, y) * x.shape[0]
+            return jnp.stack([correct_count(logits, y), ls])
+        return ev
+
+    def ev(params, x, y):
+        logits = model.apply(params, x, mode=mode, tau=1.0)
+        ls = cross_entropy(logits, y) * x.shape[0]
+        return jnp.stack([correct_count(logits, y), ls])
+    return ev
+
+
+def make_infer(model: ModelDef):
+    """Deploy-mode logits (rust cross-checks its integer reference conv
+    and the partition pass against this graph)."""
+    def infer(params, assign, x):
+        return model.apply(params, x, mode=L.DEPLOY, assign=assign)
+    return infer
+
+
+# ---------------------------------------------------------------------------
+# flat I/O naming (meta contract with rust)
+# ---------------------------------------------------------------------------
+
+def param_leaf_names(params) -> List[str]:
+    """Flat leaf names 'node/leaf' in jax tree_flatten order (sorted dict
+    keys at both levels) — the order of HLO parameters."""
+    names = []
+    for node in sorted(params.keys()):
+        for leaf in sorted(params[node].keys()):
+            names.append(f"{node}/{leaf}")
+    return names
+
+
+def assign_names(model: ModelDef) -> List[str]:
+    """Assign inputs are a dict {mappable node -> (N, Cout)}; flat order
+    is sorted node name (jax dict ordering)."""
+    return sorted(n.name for n in model.mappable())

@@ -1,0 +1,174 @@
+"""Differentiable hardware cost models (Eq. 3/4/6/7) — unit tests.
+
+The same formulas are mirrored in rust/src/hw/latency.rs; the fixture
+vectors asserted here are re-asserted there (tests/model_parity.rs), so
+any drift between L2's loss and L3's simulator fails both suites.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import costmodel as CM
+from compile import models as M
+
+
+def _nm(cin=16, cout=32, k=3, oh=16, ow=16):
+    return {"name": "l", "op": "conv", "cin": cin, "cout": cout, "k": k,
+            "out_hw": [oh, ow], "macs": cin * k * k * cout * oh * ow,
+            "mappable": True}
+
+
+# ---------------------------------------------------------------------------
+# Eq. 6 / Eq. 7 values
+# ---------------------------------------------------------------------------
+
+def test_lat_dig_paper_formula():
+    """Hand-computed Eq. 7 example."""
+    # cin=16, f=3, o=16x16, cout=32
+    want = math.ceil(32 / 16) * math.ceil(16 / 16) * 16 * 16 * 3 * 3 + 16 * 32 * 3 * 3
+    got = float(CM.lat_dig(16, 3, 3, 16, 16, 32.0))
+    assert got == want == CM.lat_dig_static(16, 3, 3, 16, 16, 32)
+
+
+def test_lat_aimc_paper_formula():
+    want = (math.ceil(16 * 9 / 1152) * math.ceil(32 / 512) * 16 * 16
+            + 2 * 4 * 16 * math.ceil(32 / 512))
+    got = float(CM.lat_aimc(16, 3, 3, 16, 16, 32.0))
+    assert got == want == CM.lat_aimc_static(16, 3, 3, 16, 16, 32)
+
+
+def test_zero_channels_zero_latency():
+    """cout=0 means the accelerator is not used: Eq. 6/7 must vanish so
+    discretized all-digital mappings pay nothing on the AIMC side."""
+    assert float(CM.lat_aimc(64, 3, 3, 8, 8, 0.0)) == 0.0
+    assert float(CM.lat_dig(64, 3, 3, 8, 8, 0.0)) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(cin=st.integers(1, 512), k=st.sampled_from([1, 3, 7]),
+       o=st.integers(1, 64), cout=st.integers(0, 512))
+def test_static_and_traced_agree(cin, k, o, cout):
+    a1 = float(CM.lat_aimc(cin, k, k, o, o, float(cout)))
+    a2 = CM.lat_aimc_static(cin, k, k, o, o, cout)
+    d1 = float(CM.lat_dig(cin, k, k, o, o, float(cout)))
+    d2 = CM.lat_dig_static(cin, k, k, o, o, cout)
+    assert a1 == pytest.approx(a2) and d1 == pytest.approx(d2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(cout=st.integers(1, 511))
+def test_latency_monotone_in_channels(cout):
+    """More channels on an accelerator can never be faster."""
+    base_a = CM.lat_aimc_static(64, 3, 3, 16, 16, cout)
+    base_d = CM.lat_dig_static(64, 3, 3, 16, 16, cout)
+    assert CM.lat_aimc_static(64, 3, 3, 16, 16, cout + 1) >= base_a
+    assert CM.lat_dig_static(64, 3, 3, 16, 16, cout + 1) >= base_d
+
+
+def test_aimc_much_faster_at_full_width():
+    """The AIMC macro's parallelism must dominate the 16x16 digital array
+    for a full layer — this asymmetry is what ODiMO exploits."""
+    d = CM.lat_dig_static(64, 3, 3, 16, 16, 64)
+    a = CM.lat_aimc_static(64, 3, 3, 16, 16, 64)
+    assert a < d / 5
+
+
+# ---------------------------------------------------------------------------
+# smooth max / ceil STE
+# ---------------------------------------------------------------------------
+
+def test_smooth_max_upper_bounds_max():
+    xs = [jnp.asarray(10.0), jnp.asarray(250.0)]
+    sm = float(CM.smooth_max(xs, 250.0))
+    assert sm >= 250.0
+    assert sm <= 250.0 * (1 + math.log(2) / CM.SMOOTHMAX_BETA) + 1e-3
+
+
+def test_smooth_max_gradient_flows_to_both():
+    def f(a, b):
+        return CM.smooth_max([a, b], 100.0)
+    ga = jax.grad(f, argnums=(0, 1))(jnp.asarray(90.0), jnp.asarray(100.0))
+    assert all(float(g) > 0 for g in ga)
+    assert float(ga[1]) > float(ga[0])  # larger input gets larger share
+
+
+def test_ceil_ste_value_and_grad():
+    x = jnp.asarray(3.2)
+    assert float(CM.ceil_ste(x)) == 4.0
+    assert float(jax.grad(lambda v: CM.ceil_ste(v))(x)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# loss terms
+# ---------------------------------------------------------------------------
+
+def _meta():
+    return M.build("tinycnn").to_meta()
+
+
+def test_energy_latency_equivalence_when_no_shutdown():
+    """Paper Fig.-5 observation: with P_idle == P_act, Eq. 4 reduces to
+    Eq. 3 times total power (up to a constant)."""
+    meta = _meta()
+    exp = {nm["name"]: (0.5 * nm["cout"], 0.5 * nm["cout"])
+           for nm in meta["nodes"] if nm.get("mappable")}
+    thpt = jnp.asarray([1.0, 10.0])
+    p = jnp.asarray([2.0, 5.0])
+    e_no_shutdown = float(CM.loss_proportional(meta, exp, thpt, p, p))
+    # manual: sum over layers of (p0+p1) * smooth_max(ld, la)
+    want = 0.0
+    for nm in meta["nodes"]:
+        if nm.get("mappable"):
+            cd, ca = exp[nm["name"]]
+            macs_per_ch = nm["macs"] / nm["cout"]
+            ld, la = macs_per_ch * cd / 1.0, macs_per_ch * ca / 10.0
+            m = float(CM.smooth_max([jnp.asarray(ld), jnp.asarray(la)],
+                                    float(max(nm["macs"], 1))))
+            want += float((p[0] + p[1])) * m
+    assert e_no_shutdown == pytest.approx(want, rel=1e-5)
+
+
+def test_all_digital_reference_matches_loss():
+    """The python normalizer must equal the traced latency loss evaluated
+    at the all-digital assignment (up to smooth-max slack)."""
+    meta = _meta()
+    lat0, en0 = CM.all_digital_reference(meta)
+    exp = {nm["name"]: (float(nm["cout"]), 0.0)
+           for nm in meta["nodes"] if nm.get("mappable")}
+    lat_traced = float(CM.loss_latency_diana(meta, exp))
+    # smooth max >= hard max, within the logsumexp slack
+    assert lat_traced >= lat0 * 0.999
+    assert lat_traced <= lat0 * 1.15
+
+
+def test_energy_decreases_when_work_moves_to_aimc():
+    """Moving channels to the (faster) AIMC accelerator must reduce the
+    modeled energy for a large layer — the basic effect behind Fig. 4."""
+    meta = _meta()
+
+    def en(frac_aimc):
+        exp = {nm["name"]: ((1 - frac_aimc) * nm["cout"], frac_aimc * nm["cout"])
+               for nm in meta["nodes"] if nm.get("mappable")}
+        return float(CM.loss_energy_diana(meta, exp))
+
+    assert en(0.9) < en(0.5) < en(0.1)
+
+
+def test_latency_gradient_pushes_toward_balance():
+    """At an all-digital point the latency gradient wrt AIMC channel mass
+    must be flat-or-negative (moving work off the bottleneck helps)."""
+    meta = _meta()
+    names = [nm["name"] for nm in meta["nodes"] if nm.get("mappable")]
+    couts = {nm["name"]: nm["cout"] for nm in meta["nodes"] if nm.get("mappable")}
+
+    def lat(frac):
+        exp = {n: ((1 - frac) * couts[n], frac * couts[n]) for n in names}
+        return CM.loss_latency_diana(meta, exp)
+
+    g = float(jax.grad(lat)(jnp.asarray(0.0)))
+    assert g < 0

@@ -1,0 +1,90 @@
+"""BN folding (the float -> search transition) — python reference
+semantics, mirrored by rust/src/coordinator/fold.rs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen
+from compile import layers as L
+from compile import models as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """A briefly trained tinycnn so BN stats are non-trivial."""
+    model = M.build("tinycnn")
+    meta = model.to_meta()
+    params = model.init_params(jax.random.PRNGKey(0))
+    mom = T.zeros_like_tree(params)
+    step = jax.jit(T.make_train_step(model, meta, L.FLOAT))
+    S = lambda v: jnp.asarray(v, jnp.float32)
+    for i in range(40):
+        xs, ys = datagen.gen_batch(7, 0, i * 32, 32, model.classes, 3, 16, 16)
+        params, mom, _ = step(params, mom, jnp.asarray(xs), jnp.asarray(ys),
+                              S(0.1), S(0.1), S(0.9), S(1e-4))
+    return model, params
+
+
+def test_fold_preserves_float_eval_function(trained):
+    """Folded conv (BN identity) must compute the same function as the
+    unfolded conv in *eval* mode (running stats)."""
+    model, params = trained
+    folded = T.fold_params(model, params)
+    xs, _ = datagen.gen_batch(7, 1, 0, 8, model.classes, 3, 16, 16)
+    x = jnp.asarray(xs)
+    y0 = model.apply(params, x, mode=L.FLOAT)           # eval BN (running stats)
+    y1 = model.apply(folded, x, mode=L.FLOAT)
+    np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+
+
+def test_fold_resets_bn_to_identity(trained):
+    model, params = trained
+    folded = T.fold_params(model, params)
+    for n in model.param_nodes():
+        p = folded[n.name]
+        if "gamma" in p:
+            np.testing.assert_array_equal(p["gamma"], np.ones_like(p["gamma"]))
+            np.testing.assert_array_equal(p["rm"], np.zeros_like(p["rm"]))
+            np.testing.assert_array_equal(p["rv"], np.ones_like(p["rv"]))
+
+
+def test_fold_alpha_prior_is_digital(trained):
+    """The post-fold mapping prior must favor the digital format so the
+    search starts from a functioning supernet (see fold.rs)."""
+    model, params = trained
+    folded = T.fold_params(model, params)
+    for n in model.mappable():
+        a = np.asarray(folded[n.name]["alpha"])
+        assert (a[0] > a[1]).all(), n.name
+        abar = np.exp(a[0]) / (np.exp(a[0]) + np.exp(a[1]))
+        assert abar.min() > 0.8
+
+
+def test_fold_scales_cover_weights(trained):
+    """e^ls8 must bound the folded weights (no clipping at init)."""
+    model, params = trained
+    folded = T.fold_params(model, params)
+    for n in model.param_nodes():
+        p = folded[n.name]
+        if "ls8" not in p:
+            continue
+        wmax = float(jnp.abs(p["w"]).max())
+        assert np.exp(float(p["ls8"])) >= wmax * 0.999
+        if "lster" in p:
+            assert float(p["lster"]) < float(p["ls8"])
+
+
+def test_search_forward_works_after_fold(trained):
+    """The folded params must produce a usable (finite, non-degenerate)
+    SEARCH-mode forward — the state every lambda run starts from."""
+    model, params = trained
+    folded = T.fold_params(model, params)
+    xs, ys = datagen.gen_batch(7, 1, 0, 64, model.classes, 3, 16, 16)
+    logits = model.apply(folded, jnp.asarray(xs), mode=L.SEARCH, tau=1.0)
+    assert np.isfinite(np.asarray(logits)).all()
+    acc = float((jnp.argmax(logits, -1) == jnp.asarray(ys)).mean())
+    # digital-biased prior => near-int8 behaviour => well above chance
+    assert acc > 0.3, acc

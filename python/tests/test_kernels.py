@@ -1,0 +1,146 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes (including non-multiples of the block sizes),
+scales and temperatures; assert_allclose against ref.py is THE
+correctness signal for the kernels that end up inside every lowered
+artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant_pallas, fake_quant_ste
+from compile.kernels.mix import mix_pallas, mix_ste
+from compile.kernels.qmatmul import qmatmul_pallas
+
+SHAPES = st.tuples(st.integers(1, 300), st.integers(1, 80))
+
+
+def _w(shape, seed=0, scale=0.5):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, n_bits=st.sampled_from([2, 4, 8]),
+       scale=st.floats(0.05, 4.0))
+def test_fake_quant_matches_ref(shape, n_bits, scale):
+    w = _w(shape)
+    s = jnp.asarray([scale], jnp.float32)
+    got = fake_quant_pallas(w, s, n_bits)
+    want = ref.fake_quant_ref(w, s[0], n_bits)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_fake_quant_output_on_grid():
+    """Quantized values must lie on the integer grid scale/L * {-L..L}."""
+    w = _w((64, 32), seed=3, scale=2.0)
+    s = jnp.asarray([0.7], jnp.float32)
+    for n in (2, 8):
+        lv = 2 ** (n - 1) - 1
+        q = np.asarray(fake_quant_pallas(w, s, n))
+        codes = q * lv / 0.7
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+        assert np.abs(codes).max() <= lv + 1e-4
+
+
+def test_ternary_is_three_valued():
+    w = _w((40, 10), seed=1, scale=1.0)
+    q = np.asarray(fake_quant_pallas(w, jnp.asarray([0.5]), 2))
+    vals = np.unique(np.round(q / 0.5, 6))
+    assert set(vals).issubset({-1.0, 0.0, 1.0})
+
+
+def test_fake_quant_ste_gradients():
+    """d/dw is the clip mask; values outside +-e^s get zero gradient."""
+    w = jnp.asarray([[-3.0, -0.2, 0.0, 0.2, 3.0]])
+    ls = jnp.asarray(0.0)  # e^s = 1
+    g = jax.grad(lambda w: fake_quant_ste(w, ls, 8).sum())(w)
+    np.testing.assert_allclose(np.asarray(g)[0], [0, 1, 1, 1, 0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# mix (effective weights, Eq. 1)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, tau=st.floats(0.2, 5.0), seed=st.integers(0, 10))
+def test_mix_matches_ref(shape, tau, seed):
+    w = _w(shape, seed)
+    alpha = _w((2, shape[0]), seed + 100, 1.0)
+    scales = jnp.asarray([0.5, 0.9], jnp.float32)
+    got = mix_pallas(w, alpha, scales, (8, 2), tau)
+    want = ref.mix_ref(w, alpha, scales, (8, 2), tau)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mix_onehot_alpha_selects_single_format():
+    """With saturated alpha the blend equals the single-format quant."""
+    w = _w((16, 9), 2)
+    scales = jnp.asarray([0.5, 0.5])
+    big = 50.0
+    alpha_dig = jnp.stack([jnp.full((16,), big), jnp.full((16,), -big)])
+    got = mix_pallas(w, alpha_dig, scales, (8, 2), 1.0)
+    want = ref.fake_quant_ref(w, scales[0], 8)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mix_uniform_alpha_is_mean():
+    w = _w((8, 4), 5)
+    scales = jnp.asarray([0.4, 0.8])
+    alpha = jnp.zeros((2, 8))
+    got = mix_pallas(w, alpha, scales, (8, 2), 1.0)
+    want = 0.5 * (ref.fake_quant_ref(w, scales[0], 8)
+                  + ref.fake_quant_ref(w, scales[1], 2))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mix_ste_alpha_gradient_direction():
+    """Pushing alpha toward the format with smaller quant error must
+    reduce ||W_eff - W||^2: gradient wrt alpha is nonzero and finite."""
+    w = _w((12, 16), 7)
+    alpha = jnp.zeros((2, 12))
+    ls = jnp.log(jnp.asarray([0.5, 0.5]))
+
+    def loss(alpha):
+        eff = mix_ste(w, alpha, ls, jnp.asarray(1.0), (8, 2))
+        return jnp.sum((eff - w) ** 2)
+
+    g = jax.grad(loss)(alpha)
+    assert np.all(np.isfinite(np.asarray(g)))
+    # int8 approximates w better than ternary -> gradient must favor
+    # increasing alpha[0] (digital) i.e. d loss / d alpha[0] < 0
+    assert np.asarray(g)[0].mean() < 0 < np.asarray(g)[1].mean()
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 150),
+       seed=st.integers(0, 5))
+def test_qmatmul_matches_ref(m, k, n, seed):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jnp.round(jax.random.normal(ka, (m, k)) * 40)
+    b = jnp.round(jax.random.normal(kb, (k, n)) * 1.2)
+    got = qmatmul_pallas(a, b)
+    want = ref.qmatmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_qmatmul_exact_at_diana_extremes():
+    """int8 codes x ternary codes at the largest benchmark K stays exact."""
+    k = 64 * 9  # largest resnet20 K
+    a = jnp.asarray(np.random.default_rng(0).integers(-127, 128, (16, k)), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).integers(-1, 2, (k, 32)), jnp.float32)
+    got = np.asarray(qmatmul_pallas(a, b))
+    want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(got, want.astype(np.float32))

@@ -1,0 +1,133 @@
+"""Model DAGs: shape inference, parameters, forward modes, meta export."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile import models as M
+
+
+ALL = ["tinycnn", "resnet20", "resnet18s", "mbv1_025"]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    model = M.build("tinycnn")
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _x(model, b=2, seed=0):
+    c, h, w = model.input_shape
+    return jax.random.uniform(jax.random.PRNGKey(seed), (b, c, h, w))
+
+
+def _onehot_assign(model, which=L.DIG):
+    out = {}
+    for n in model.mappable():
+        a = np.zeros((L.N_ACC, n.cout), np.float32)
+        a[which, :] = 1.0
+        out[n.name] = jnp.asarray(a)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL)
+def test_shape_inference_consistent(name):
+    m = M.build(name)
+    for n in m.nodes:
+        if n.op in ("conv", "dwconv"):
+            ih, iw = n.in_hw
+            oh = (ih + 2 * n.pad - n.k) // n.stride + 1
+            assert n.out_hw == (oh, (iw + 2 * n.pad - n.k) // n.stride + 1)
+        if n.op == "dwconv":
+            assert n.cin == n.cout
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_shapes_all_modes(name):
+    m = M.build(name)
+    p = m.init_params(jax.random.PRNGKey(1))
+    x = _x(m)
+    for mode in (L.FLOAT, L.SEARCH):
+        y = m.apply(p, x, mode=mode, tau=1.0)
+        assert y.shape == (2, m.classes)
+    y = m.apply(p, x, mode=L.DEPLOY, assign=_onehot_assign(m))
+    assert y.shape == (2, m.classes)
+
+
+def test_resnet20_layer_count():
+    """ResNet20 = 1 stem + 18 block convs + 2 downsample convs + fc."""
+    m = M.build("resnet20")
+    convs = [n for n in m.nodes if n.op == "conv"]
+    assert len(convs) == 21
+    assert len(m.mappable()) == 22  # + fc
+
+
+def test_mbv1_dw_not_mappable():
+    m = M.build("mbv1_025")
+    dw = [n for n in m.nodes if n.op == "dwconv"]
+    assert len(dw) == 13
+    assert all(n.op != "dwconv" for n in m.mappable())
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_meta_roundtrip_fields(name):
+    meta = M.build(name).to_meta()
+    for nm in meta["nodes"]:
+        assert nm["macs"] >= 0
+        if nm["mappable"]:
+            assert nm["cout"] > 0 and nm["cin"] > 0
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def test_deploy_all_digital_close_to_search_saturated(tiny):
+    """Saturating alpha toward digital in SEARCH must approach the
+    DEPLOY all-digital forward (difference only from 7- vs 8-bit acts)."""
+    model, params = tiny
+    x = _x(model, 4)
+    p2 = {k: dict(v) for k, v in params.items()}
+    for n in model.mappable():
+        a = np.zeros((L.N_ACC, n.cout), np.float32)
+        a[L.DIG] = 60.0
+        a[L.AIMC] = -60.0
+        p2[n.name]["alpha"] = jnp.asarray(a)
+    y_search = model.apply(p2, x, mode=L.SEARCH, tau=1.0)
+    y_deploy = model.apply(p2, x, mode=L.DEPLOY, assign=_onehot_assign(model, L.DIG))
+    # logits before softmax: modest tolerance for the act-format gap
+    np.testing.assert_allclose(y_search, y_deploy, atol=0.15)
+
+
+def test_deploy_mapping_changes_output(tiny):
+    """All-digital vs all-ternary deployment must differ (the ternary
+    path loses information) — otherwise the search has nothing to do."""
+    model, params = tiny
+    x = _x(model, 4)
+    yd = model.apply(params, x, mode=L.DEPLOY, assign=_onehot_assign(model, L.DIG))
+    ya = model.apply(params, x, mode=L.DEPLOY, assign=_onehot_assign(model, L.AIMC))
+    assert float(jnp.abs(yd - ya).max()) > 1e-3
+
+
+def test_float_mode_has_no_quant_grid(tiny):
+    model, params = tiny
+    x = _x(model, 2)
+    y = model.apply(params, x, mode=L.FLOAT)
+    assert np.asarray(y).dtype == np.float32
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_init_deterministic(tiny):
+    model, _ = tiny
+    p1 = model.init_params(jax.random.PRNGKey(7))
+    p2 = model.init_params(jax.random.PRNGKey(7))
+    for n in p1:
+        for l in p1[n]:
+            np.testing.assert_array_equal(p1[n][l], p2[n][l])

@@ -1,0 +1,132 @@
+"""Training-step builders: the L2 functions that get AOT-lowered.
+
+These run the *same* python functions that aot.py lowers, on tinycnn,
+so a pass here plus an HLO-roundtrip pass on the rust side certifies
+the full pipeline.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen
+from compile import layers as L
+from compile import models as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = M.build("tinycnn")
+    meta = model.to_meta()
+    params = model.init_params(jax.random.PRNGKey(0))
+    mom = T.zeros_like_tree(params)
+    c, h, w = model.input_shape
+    xs, ys = datagen.gen_batch(1234, 0, 0, 32, model.classes, c, h, w)
+    return model, meta, params, mom, jnp.asarray(xs), jnp.asarray(ys)
+
+
+S = lambda v: jnp.asarray(v, jnp.float32)
+
+
+def test_float_training_reduces_loss(setup):
+    model, meta, params, mom, x, y = setup
+    step = jax.jit(T.make_train_step(model, meta, L.FLOAT))
+    losses = []
+    for i in range(30):
+        params, mom, met = step(params, mom, x, y, S(0.05), S(0.05), S(0.9), S(1e-4))
+        losses.append(float(met[0]))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+@pytest.mark.parametrize("reg", ["lat", "en"])
+def test_search_step_moves_alpha(setup, reg):
+    """With a strong lambda the regularizer must push channel mass toward
+    the cheap (AIMC) accelerator."""
+    model, meta, params, mom, x, y = setup
+    step = jax.jit(T.make_train_step(model, meta, L.SEARCH, reg))
+    p = jax.tree_util.tree_map(lambda a: a, params)
+    for i in range(15):
+        p, mom, met = step(p, mom, x, y, S(0.05), S(0.2), S(0.9), S(0.0),
+                           S(2.0), S(1.0))
+    # expected AIMC mass should have grown from the uniform 0.5
+    masses = []
+    for n in model.mappable():
+        abar = jax.nn.softmax(p[n.name]["alpha"], axis=0)
+        masses.append(float(abar[L.AIMC].mean()))
+    assert np.mean(masses) > 0.55, masses
+    assert np.isfinite(float(met[0]))
+
+
+def test_search_metrics_report_costs(setup):
+    model, meta, params, mom, x, y = setup
+    step = jax.jit(T.make_train_step(model, meta, L.SEARCH, "lat"))
+    _, _, met = step(params, mom, x, y, S(0.01), S(0.01), S(0.9), S(0.0),
+                     S(0.1), S(1.0))
+    loss, correct, lat, en, r, tau = [float(v) for v in met]
+    assert lat > 0 and en > 0 and 0 < r < 2.5 and tau == 1.0
+    assert 0 <= correct <= x.shape[0]
+
+
+def test_prop_step_matches_idle_equals_act_equivalence(setup):
+    """Fig.-5: with p_idle == p_act the prop regularizer equals the
+    normalized latency objective up to scale; its gradient direction on
+    alpha must match."""
+    model, meta, params, mom, x, y = setup
+    step = jax.jit(T.make_train_step(model, meta, L.SEARCH, "prop"))
+    hw = jnp.asarray([1.0, 8.0, 2.0, 2.0, 2.0, 2.0])  # thpt, p_act, p_idle
+    p, m2, met = step(params, mom, x, y, S(0.0), S(0.1), S(0.0), S(0.0),
+                      S(5.0), S(1.0), hw)
+    # lr=0 for weights, only alpha moves; AIMC (8x faster) should gain mass
+    gained = []
+    for n in model.mappable():
+        abar = jax.nn.softmax(p[n.name]["alpha"], axis=0)
+        gained.append(float(abar[L.AIMC].mean()))
+    assert np.mean(gained) > 0.5
+
+
+def test_ft_step_trains_under_fixed_assignment(setup):
+    model, meta, params, mom, x, y = setup
+    assign = {}
+    rng = np.random.default_rng(0)
+    for n in model.mappable():
+        pick = rng.integers(0, 2, n.cout)
+        a = np.zeros((L.N_ACC, n.cout), np.float32)
+        a[pick, np.arange(n.cout)] = 1.0
+        assign[n.name] = jnp.asarray(a)
+    step = jax.jit(T.make_train_step(model, meta, L.DEPLOY))
+    p, mom2, met0 = step(params, mom, assign, x, y, S(0.05), S(0.0), S(0.9), S(0.0))
+    for i in range(25):
+        p, mom2, met = step(p, mom2, assign, x, y, S(0.05), S(0.0), S(0.9), S(0.0))
+    assert float(met[0]) < float(met0[0])
+    # alpha must be untouched in deploy mode
+    for n in model.mappable():
+        np.testing.assert_array_equal(p[n.name]["alpha"], params[n.name]["alpha"])
+
+
+def test_eval_and_infer_consistency(setup):
+    model, meta, params, mom, x, y = setup
+    assign = {n.name: jnp.asarray(
+        np.eye(2, dtype=np.float32)[:, [0] * n.cout]) for n in model.mappable()}
+    ev = jax.jit(T.make_eval(model, L.DEPLOY))
+    stats = ev(params, assign, x, y)
+    inf = jax.jit(T.make_infer(model))
+    logits = inf(params, assign, x[:8])
+    correct8 = float(jnp.sum((jnp.argmax(logits, -1) == y[:8])))
+    assert stats.shape == (2,)
+    assert 0 <= correct8 <= 8
+
+
+def test_param_leaf_names_order(setup):
+    """Leaf order must match jax's dict flattening (sorted keys) — the
+    contract rust relies on."""
+    model, meta, params, mom, x, y = setup
+    names = T.param_leaf_names(params)
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    assert len(names) == len(leaves)
+    flat_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    for (path, leaf), nm in zip(flat_with_path, names):
+        node = path[0].key
+        lf = path[1].key
+        assert f"{node}/{lf}" == nm

@@ -1,0 +1,61 @@
+//! Bench for the Fig.-4 regeneration path: the per-lambda pipeline cost
+//! is dominated by training steps (measured in bench_runtime); here we
+//! measure the surrounding machinery at full fidelity — discretization,
+//! deployment costing, Pareto extraction — over a realistic sweep-sized
+//! point set, so regressions in the driver itself are visible.
+
+use std::collections::BTreeMap;
+
+use odimo::coordinator::scheduler::deploy;
+use odimo::coordinator::{discretize::discretize, Mapping, SearchPoint};
+use odimo::hw::soc::SocConfig;
+use odimo::metrics::{ascii_scatter, pareto_front, points_csv};
+use odimo::model::resnet20;
+use odimo::util::bench::{black_box, Bench};
+use odimo::util::prng::Pcg32;
+
+fn main() {
+    let g = resnet20();
+    let mut rng = Pcg32::new(42, 1);
+    let mut b = Bench::new("fig4");
+
+    // discretize from random alpha logits (22 mappable layers)
+    let alphas: BTreeMap<String, Vec<f32>> = g
+        .mappable()
+        .iter()
+        .map(|n| {
+            let v: Vec<f32> = (0..2 * n.cout).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            (n.name.clone(), v)
+        })
+        .collect();
+    b.run("discretize_resnet20", || {
+        black_box(discretize(&g, &alphas).unwrap());
+    });
+
+    // deployment costing of one mapping
+    let mapping = discretize(&g, &alphas).unwrap();
+    b.run("deploy_cost_resnet20", || {
+        black_box(deploy(&g, &mapping, SocConfig::default()));
+    });
+
+    // pareto + reporting over a sweep-sized point set
+    let points: Vec<SearchPoint> = (0..24)
+        .map(|i| SearchPoint {
+            label: if i % 5 == 0 { format!("base{i}") } else { format!("odimo_{i}") },
+            lambda: i as f64,
+            accuracy: rng.next_f32() as f64,
+            latency_ms: rng.next_f32() as f64 * 2.0,
+            energy_uj: rng.next_f32() as f64 * 40.0,
+            total_cycles: 1000 + i as u64,
+            util: [0.9, 0.3],
+            aimc_channel_frac: 0.5,
+            mapping: Mapping::uniform(&g, 0),
+        })
+        .collect();
+    b.run("pareto_and_reports", || {
+        black_box(pareto_front(&points, |p| p.energy_uj));
+        black_box(points_csv(&points));
+        black_box(ascii_scatter(&points, |p| p.energy_uj, 64, 16));
+    });
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench for the Fig.-5 path: abstract-hardware cost evaluation over
+//! mappings (the pure-model scoring that replaces the DIANA simulator
+//! in the Fig.-5 sweeps).
+
+use odimo::hw::soc::{split_all_digital};
+use odimo::hw::AbstractHw;
+use odimo::model::{build, ALL_MODELS};
+use odimo::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig5");
+    for name in ALL_MODELS {
+        let g = build(name).unwrap();
+        let split = split_all_digital(&g);
+        let hw0 = AbstractHw::no_shutdown();
+        let hw1 = AbstractHw::ideal_shutdown();
+        b.run(&format!("abstract_cost_{name}"), || {
+            black_box(hw0.cost(&g, &split));
+            black_box(hw1.cost(&g, &split));
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench for the Fig.-6 path: timeline construction + utilization
+//! sweep-line + per-layer aggregation + ASCII rendering for a balanced
+//! split of each model (the exact work behind `odimo fig6`).
+
+use odimo::hw::soc::{simulate, ChannelSplit, SocConfig};
+use odimo::model::{build, ALL_MODELS};
+use odimo::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig6");
+    for name in ALL_MODELS {
+        let g = build(name).unwrap();
+        let split: ChannelSplit = g
+            .mappable()
+            .iter()
+            .map(|n| (n.name.clone(), (n.cout / 2, n.cout - n.cout / 2)))
+            .collect();
+        b.run(&format!("timeline_util_{name}"), || {
+            let r = simulate(&g, &split, SocConfig::default());
+            black_box(r.timeline.utilization());
+            black_box(r.timeline.per_layer());
+            black_box(r.timeline.render_ascii(72));
+        });
+    }
+    b.finish();
+}

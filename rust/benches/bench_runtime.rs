@@ -1,0 +1,97 @@
+//! Bench: PJRT runtime hot path — per-step marshalling + execution of
+//! the AOT train/eval graphs (tinycnn artifacts). This is the L3 cost
+//! that wraps every optimizer step; EXPERIMENTS.md §Perf tracks the
+//! breakdown (data generation / literal upload / execute / download).
+
+use std::path::PathBuf;
+
+use anyhow::anyhow;
+use odimo::data::DataSource;
+use odimo::runtime::{
+    assemble_inputs, literal_f32, literal_i32, literal_scalar, ArtifactMeta, ParamState,
+    Runtime,
+};
+use odimo::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("tinycnn_meta.json").exists() {
+        println!("bench_runtime: artifacts missing, run `make artifacts`");
+        return;
+    }
+    let meta = ArtifactMeta::load(&dir, "tinycnn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let g = &meta.model;
+    let ds = DataSource::train(g, 1);
+    let mut b = Bench::new("runtime");
+
+    // batch generation (pure rust, synth.rs)
+    b.run("gen_batch_tinycnn", || {
+        black_box(ds.batch(0, g.train_batch));
+    });
+
+    // literal upload of one batch
+    let batch = ds.batch(0, g.train_batch);
+    b.run("literal_upload_batch", || {
+        black_box(literal_f32(&batch.x, &[batch.n, batch.c, batch.h, batch.w]).unwrap());
+    });
+
+    // full state upload (params + momentum)
+    let values = meta.load_init_values().unwrap();
+    b.run("param_state_upload", || {
+        black_box(ParamState::from_host(&meta, values.clone()).unwrap());
+    });
+
+    // eval step end-to-end
+    let exe = rt.load(meta.graph("eval_deploy").unwrap()).unwrap();
+    let params = ParamState::from_init(&meta).unwrap();
+    let mapping = odimo::coordinator::Mapping::uniform(g, odimo::model::DIG);
+    let assigns: std::collections::BTreeMap<String, xla::Literal> = meta
+        .mappable
+        .iter()
+        .map(|name| {
+            let n = g.node(name).unwrap();
+            (name.clone(), literal_f32(&mapping.onehot(name), &[2, n.cout]).unwrap())
+        })
+        .collect();
+    let eb = ds.batch(0, g.eval_batch);
+    let xe = literal_f32(&eb.x, &[eb.n, eb.c, eb.h, eb.w]).unwrap();
+    let ye = literal_i32(&eb.y, &[eb.n]).unwrap();
+    b.run("eval_deploy_step", || {
+        let inputs = assemble_inputs(&exe.meta, |tm| match tm.name.as_str() {
+            "x" => Ok(&xe),
+            "y" => Ok(&ye),
+            n if n.starts_with("param:") => params.leaf(&n[6..]),
+            n if n.starts_with("assign:") => {
+                assigns.get(&n[7..]).ok_or_else(|| anyhow!("missing {n}"))
+            }
+            n => Err(anyhow!("unexpected {n}")),
+        })
+        .unwrap();
+        black_box(exe.run_to_host(&inputs).unwrap());
+    });
+
+    // full train step end-to-end (the per-step cost of every phase)
+    let texe = rt.load(meta.graph("train_search_en").unwrap()).unwrap();
+    let mut params2 = ParamState::from_init(&meta).unwrap();
+    let mut mom = ParamState::zeros(&meta).unwrap();
+    let xb = literal_f32(&batch.x, &[batch.n, batch.c, batch.h, batch.w]).unwrap();
+    let yb = literal_i32(&batch.y, &[batch.n]).unwrap();
+    let scal = literal_scalar(0.01);
+    b.run("train_search_en_step", || {
+        let inputs = assemble_inputs(&texe.meta, |tm| match tm.name.as_str() {
+            "x" => Ok(&xb),
+            "y" => Ok(&yb),
+            "lr" | "lr_alpha" | "mu" | "wd" | "lam" | "tau" => Ok(&scal),
+            n if n.starts_with("param:") => params2.leaf(&n[6..]),
+            n if n.starts_with("mom:") => mom.leaf(&n[4..]),
+            n => Err(anyhow!("unexpected {n}")),
+        })
+        .unwrap();
+        let mut out = texe.run(&inputs).unwrap();
+        params2.replace_from_outputs(&mut out);
+        mom.replace_from_outputs(&mut out);
+        black_box(&out);
+    });
+    b.finish();
+}

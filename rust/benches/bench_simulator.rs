@@ -1,0 +1,28 @@
+//! Bench: DIANA SoC simulator throughput (the L3 inner loop behind
+//! every experiment driver). One full end-to-end inference costing per
+//! model, plus the min-cost baseline construction (exhaustive per-layer
+//! split enumeration).
+
+use odimo::coordinator::baselines;
+use odimo::hw::soc::{simulate, split_all_digital, SocConfig};
+use odimo::model::{build, ALL_MODELS};
+use odimo::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("simulator");
+    for name in ALL_MODELS {
+        let g = build(name).unwrap();
+        let split = split_all_digital(&g);
+        b.run(&format!("simulate_{name}"), || {
+            black_box(simulate(&g, &split, SocConfig::default()));
+        });
+    }
+    let g = build("resnet20").unwrap();
+    b.run("min_cost_lat_resnet20", || {
+        black_box(baselines::min_cost(&g, baselines::CostObjective::Latency));
+    });
+    b.run("min_cost_en_resnet20", || {
+        black_box(baselines::min_cost(&g, baselines::CostObjective::Energy));
+    });
+    b.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench for the Table-I path: full deployment scoring (simulate +
+//! fragmentation accounting + utilization) of every baseline mapping on
+//! every benchmark model — the exact per-row work of `odimo table1`.
+
+use odimo::coordinator::baselines::{self, BASELINE_NAMES};
+use odimo::coordinator::scheduler::deploy;
+use odimo::hw::soc::SocConfig;
+use odimo::model::{build, ALL_MODELS};
+use odimo::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("table1");
+    for name in ALL_MODELS {
+        let g = build(name).unwrap();
+        let mappings: Vec<_> = BASELINE_NAMES
+            .iter()
+            .map(|bn| baselines::by_name(&g, bn).unwrap())
+            .collect();
+        b.run(&format!("deploy_all_baselines_{name}"), || {
+            for m in &mappings {
+                black_box(deploy(&g, m, SocConfig::default()));
+            }
+        });
+    }
+    b.finish();
+}

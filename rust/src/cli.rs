@@ -1,0 +1,133 @@
+//! Hand-rolled CLI argument parser (clap is not in the vendored set).
+//!
+//! Grammar: `odimo <subcommand> [--flag value]... [--switch]...`
+//! Flags may repeat the `--key value` or `--key=value` forms.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Switch names the command accepts (everything else with no value
+    /// is an error).
+    known_switches: Vec<&'static str>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String], known_switches: &[&'static str]) -> Result<Args> {
+        let mut a = Args {
+            known_switches: known_switches.to_vec(),
+            ..Default::default()
+        };
+        let mut it = argv.iter().peekable();
+        if let Some(sub) = it.next() {
+            if sub.starts_with('-') {
+                return Err(anyhow!("expected subcommand, got '{sub}'"));
+            }
+            a.subcommand = sub.clone();
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(anyhow!("unexpected positional argument '{tok}'"));
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                a.flags.insert(k.to_string(), v.to_string());
+            } else if known_switches.contains(&key) {
+                a.switches.push(key.to_string());
+            } else if let Some(v) = it.peek() {
+                if v.starts_with("--") {
+                    return Err(anyhow!("flag --{key} needs a value"));
+                }
+                a.flags.insert(key.to_string(), it.next().unwrap().clone());
+            } else {
+                return Err(anyhow!("flag --{key} needs a value"));
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env(known_switches: &[&'static str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, known_switches)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str) -> Result<Option<f32>> {
+        self.get(key)
+            .map(|v| v.parse::<f32>().map_err(|_| anyhow!("--{key}: bad number '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow!("--{key}: bad number '{v}'")))
+            .transpose()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Error on flags the command does not know (catches typos).
+    pub fn expect_only(&self, keys: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !keys.contains(&k.as_str()) {
+                return Err(anyhow!(
+                    "unknown flag --{k} for '{}' (known: {})",
+                    self.subcommand,
+                    keys.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(&argv("fig4 --model resnet20 --smoke --lam=0.5"), &["smoke"]).unwrap();
+        assert_eq!(a.subcommand, "fig4");
+        assert_eq!(a.get("model"), Some("resnet20"));
+        assert_eq!(a.get("lam"), Some("0.5"));
+        assert!(a.has("smoke"));
+        assert_eq!(a.get_f32("lam").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("run --model"), &[]).is_err());
+        assert!(Args::parse(&argv("run --model --x y"), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = Args::parse(&argv("fig4 --modell tiny"), &[]).unwrap();
+        assert!(a.expect_only(&["model"]).is_err());
+        let b = Args::parse(&argv("fig4 --model tiny"), &[]).unwrap();
+        assert!(b.expect_only(&["model"]).is_ok());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(&argv("fig4 oops"), &[]).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Run configuration: typed config struct + a small TOML-subset parser
+//! (sections, `key = value` with strings / numbers / bools / flat
+//! arrays) + CLI override layer. Covers everything the experiment
+//! drivers need without serde.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Schedule;
+
+/// Everything a pipeline/experiment run needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub artifacts_dir: PathBuf,
+    pub results_dir: PathBuf,
+    pub data_seed: u64,
+    pub schedule: Schedule,
+    pub lambdas: Vec<f32>,
+    /// Non-ideal L1 modeling in the simulator (ablation knob).
+    pub non_ideal_l1: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "resnet20".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            data_seed: 1234,
+            schedule: Schedule::default(),
+            lambdas: vec![0.5, 2.0, 6.0, 15.0],
+            non_ideal_l1: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file; missing keys keep defaults.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let doc = parse_toml(&text)?;
+        let mut cfg = RunConfig::default();
+        cfg.apply(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn apply(&mut self, doc: &BTreeMap<String, TomlValue>) -> Result<()> {
+        for (k, v) in doc {
+            match (k.as_str(), v) {
+                ("run.model", TomlValue::Str(s)) => self.model = s.clone(),
+                ("run.artifacts_dir", TomlValue::Str(s)) => self.artifacts_dir = s.into(),
+                ("run.results_dir", TomlValue::Str(s)) => self.results_dir = s.into(),
+                ("run.data_seed", TomlValue::Num(n)) => self.data_seed = *n as u64,
+                ("schedule.pretrain_steps", TomlValue::Num(n)) => {
+                    self.schedule.pretrain_steps = *n as usize
+                }
+                ("schedule.search_steps", TomlValue::Num(n)) => {
+                    self.schedule.search_steps = *n as usize
+                }
+                ("schedule.finetune_steps", TomlValue::Num(n)) => {
+                    self.schedule.finetune_steps = *n as usize
+                }
+                ("schedule.eval_batches", TomlValue::Num(n)) => {
+                    self.schedule.eval_batches = *n as usize
+                }
+                ("search.lambdas", TomlValue::Arr(a)) => {
+                    self.lambdas = a
+                        .iter()
+                        .map(|x| match x {
+                            TomlValue::Num(n) => Ok(*n as f32),
+                            _ => Err(anyhow!("search.lambdas must be numbers")),
+                        })
+                        .collect::<Result<Vec<f32>>>()?;
+                }
+                ("hw.non_ideal_l1", TomlValue::Bool(b)) => self.non_ideal_l1 = *b,
+                (key, _) => return Err(anyhow!("unknown or mistyped config key '{key}'")),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.model, "resnet20");
+        assert!(!c.lambdas.is_empty());
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let doc = parse_toml(
+            "[run]\nmodel = \"tinycnn\"\ndata_seed = 7\n[schedule]\nsearch_steps = 11\n\
+             [search]\nlambdas = [0.1, 1.0]\n[hw]\nnon_ideal_l1 = true\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply(&doc).unwrap();
+        assert_eq!(c.model, "tinycnn");
+        assert_eq!(c.data_seed, 7);
+        assert_eq!(c.schedule.search_steps, 11);
+        assert_eq!(c.lambdas, vec![0.1, 1.0]);
+        assert!(c.non_ideal_l1);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = parse_toml("[run]\nbogus = 1\n").unwrap();
+        let mut c = RunConfig::default();
+        assert!(c.apply(&doc).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! TOML-subset parser: `[section]` headers, `key = value` pairs,
+//! values = quoted strings, numbers, booleans, flat `[a, b, c]` arrays.
+//! Keys are flattened to "section.key". Comments with `#`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(anyhow!("line {}: bad section header", lineno + 1));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() {
+            return Err(anyhow!("line {}: empty key", lineno + 1));
+        }
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.insert(full, parse_value(val).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // cut at the first '#' that is not inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if v.starts_with('"') {
+        if v.len() < 2 || !v.ends_with('"') {
+            return Err(anyhow!("unterminated string"));
+        }
+        return Ok(TomlValue::Str(v[1..v.len() - 1].to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if v.starts_with('[') {
+        if !v.ends_with(']') {
+            return Err(anyhow!("unterminated array"));
+        }
+        let inner = v[1..v.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    v.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| anyhow!("cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            "# comment\ntop = 1\n[a]\ns = \"hi\" # trailing\nn = -2.5\nb = false\n\
+             arr = [1, 2, 3]\n[b]\nx = 0\n",
+        )
+        .unwrap();
+        assert_eq!(doc["top"], TomlValue::Num(1.0));
+        assert_eq!(doc["a.s"], TomlValue::Str("hi".into()));
+        assert_eq!(doc["a.n"], TomlValue::Num(-2.5));
+        assert_eq!(doc["a.b"], TomlValue::Bool(false));
+        assert_eq!(
+            doc["a.arr"],
+            TomlValue::Arr(vec![TomlValue::Num(1.0), TomlValue::Num(2.0), TomlValue::Num(3.0)])
+        );
+        assert_eq!(doc["b.x"], TomlValue::Num(0.0));
+    }
+
+    #[test]
+    fn errors_with_line_numbers() {
+        let e = parse_toml("ok = 1\nbroken").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("k = [1, 2\n").is_err());
+        assert!(parse_toml("k = \"oops\n").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse_toml("a = []\n").unwrap();
+        assert_eq!(doc["a"], TomlValue::Arr(vec![]));
+    }
+}

@@ -1,0 +1,107 @@
+//! Mapping discretization (paper Sec. III-A, end of training): for each
+//! channel select the accelerator with the largest alpha logit.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Graph, N_ACC};
+
+use super::mapping::Mapping;
+
+/// alpha: layer name -> flattened (N_ACC, Cout) logits, row-major.
+pub fn discretize(graph: &Graph, alphas: &BTreeMap<String, Vec<f32>>) -> Result<Mapping> {
+    let mut assign = BTreeMap::new();
+    for node in graph.mappable() {
+        let a = alphas
+            .get(&node.name)
+            .ok_or_else(|| anyhow!("no alphas for layer '{}'", node.name))?;
+        if a.len() != N_ACC * node.cout {
+            return Err(anyhow!(
+                "layer {}: {} logits for {}x{} expected",
+                node.name,
+                a.len(),
+                N_ACC,
+                node.cout
+            ));
+        }
+        let mut ids = Vec::with_capacity(node.cout);
+        for c in 0..node.cout {
+            let mut best = 0usize;
+            let mut best_v = a[c]; // row 0
+            for acc in 1..N_ACC {
+                let v = a[acc * node.cout + c];
+                if v > best_v {
+                    best_v = v;
+                    best = acc;
+                }
+            }
+            ids.push(best as u8);
+        }
+        assign.insert(node.name.clone(), ids);
+    }
+    let m = Mapping { assign };
+    m.validate(graph)?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{tinycnn, AIMC, DIG};
+
+    fn logits(graph: &Graph, f: impl Fn(&str, usize) -> (f32, f32)) -> BTreeMap<String, Vec<f32>> {
+        graph
+            .mappable()
+            .iter()
+            .map(|n| {
+                let mut v = vec![0f32; 2 * n.cout];
+                for c in 0..n.cout {
+                    let (d, a) = f(&n.name, c);
+                    v[c] = d;
+                    v[n.cout + c] = a;
+                }
+                (n.name.clone(), v)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn argmax_per_channel() {
+        let g = tinycnn();
+        let al = logits(&g, |_, c| if c % 2 == 0 { (1.0, 0.0) } else { (0.0, 1.0) });
+        let m = discretize(&g, &al).unwrap();
+        for n in g.mappable() {
+            for c in 0..n.cout {
+                let want = if c % 2 == 0 { DIG } else { AIMC } as u8;
+                assert_eq!(m.layer(&n.name)[c], want);
+            }
+        }
+    }
+
+    #[test]
+    fn ties_go_digital() {
+        // equal logits -> digital (index 0) wins, matching the paper's
+        // "digital channels are maximized" tie-break
+        let g = tinycnn();
+        let al = logits(&g, |_, _| (0.5, 0.5));
+        let m = discretize(&g, &al).unwrap();
+        assert_eq!(m.aimc_fraction(), 0.0);
+    }
+
+    #[test]
+    fn missing_layer_errors() {
+        let g = tinycnn();
+        let mut al = logits(&g, |_, _| (1.0, 0.0));
+        al.remove("fc");
+        assert!(discretize(&g, &al).is_err());
+    }
+
+    #[test]
+    fn wrong_len_errors() {
+        let g = tinycnn();
+        let mut al = logits(&g, |_, _| (1.0, 0.0));
+        al.get_mut("stem").unwrap().pop();
+        assert!(discretize(&g, &al).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! BatchNorm folding — the float -> search phase transition (paper
+//! Sec. III-B: "we first fold Batch Normalization layers with Conv/FC,
+//! since the DIANA accelerators do not implement BN in hardware").
+//!
+//! Exact mirror of `python/compile/train.fold_params`; operates on the
+//! host snapshot of a [`ParamState`].
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::{Graph, Op};
+use crate::runtime::ArtifactMeta;
+
+pub const BN_EPS: f32 = 1e-5;
+/// Post-fold activation-scale init: e^lsa = 4.0 (post-BN ReLU range).
+pub const POST_FOLD_ACT_SCALE: f32 = 4.0;
+/// Ternary scale shrink factor vs the int8 range (keeps more weights
+/// off zero — see fold_params in python).
+pub const TERNARY_RANGE_FACTOR: f32 = 0.4;
+/// Digital-side alpha bias after folding: softmax([2, 0]) ~ 88% int8,
+/// so the search starts from a *functioning* (near-8-bit) supernet and
+/// the task loss produces a meaningful per-channel signal. Starting at
+/// the uniform 50/50 mix leaves the network broken (the ternary half
+/// destroys it) and the CE gradient on alpha is noise — exactly the
+/// failure the paper avoids by searching from a pretrained model.
+pub const ALPHA_DIG_INIT: f32 = 2.0;
+
+/// Fold BN into conv weights/biases in-place on a host param snapshot.
+/// `values` is the flat leaf-ordered vector from `ParamState::to_host`.
+pub fn fold_bn(meta: &ArtifactMeta, graph: &Graph, values: &mut [Vec<f32>]) -> Result<()> {
+    // leaf name -> index
+    let idx: BTreeMap<&str, usize> = meta
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (p.name.as_str(), i))
+        .collect();
+    let get = |name: &String, leaf: &str| idx.get(format!("{name}/{leaf}").as_str()).copied();
+
+    for node in &graph.nodes {
+        if !matches!(node.op, Op::Conv | Op::DwConv | Op::Fc | Op::Add) {
+            continue;
+        }
+        // activation scale reset (all quant nodes with lsa)
+        if let Some(i_lsa) = get(&node.name, "lsa") {
+            values[i_lsa][0] = POST_FOLD_ACT_SCALE.ln();
+        }
+        // digital-biased mapping prior (alpha layout: [dig row, aimc row])
+        if let Some(i_a) = get(&node.name, "alpha") {
+            let c = values[i_a].len() / 2;
+            values[i_a][..c].fill(ALPHA_DIG_INIT);
+            values[i_a][c..].fill(0.0);
+        }
+        if let (Some(i_g), Some(i_b2), Some(i_rm), Some(i_rv)) = (
+            get(&node.name, "gamma"),
+            get(&node.name, "beta"),
+            get(&node.name, "rm"),
+            get(&node.name, "rv"),
+        ) {
+            let (i_w, i_b) = (
+                get(&node.name, "w").expect("conv without w"),
+                get(&node.name, "b").expect("conv without b"),
+            );
+            let cout = values[i_g].len();
+            let w_per_ch = values[i_w].len() / cout;
+            for c in 0..cout {
+                let inv = values[i_g][c] / (values[i_rv][c] + BN_EPS).sqrt();
+                for k in 0..w_per_ch {
+                    values[i_w][c * w_per_ch + k] *= inv;
+                }
+                values[i_b][c] =
+                    (values[i_b][c] - values[i_rm][c]) * inv + values[i_b2][c];
+            }
+            // reset BN to identity so a second fold is a no-op
+            values[i_g].fill(1.0);
+            values[i_b2].fill(0.0);
+            values[i_rm].fill(0.0);
+            values[i_rv].fill(1.0);
+        }
+        // fresh Eq.-5 quantizer ranges from the (possibly folded)
+        // weights — including BN-less layers (fc), whose weights also
+        // drift from the init-time range during pre-training
+        if let (Some(i_ls8), Some(i_w)) = (get(&node.name, "ls8"), get(&node.name, "w")) {
+            let wmax = values[i_w]
+                .iter()
+                .fold(0f32, |m, v| m.max(v.abs()))
+                .max(1e-4);
+            values[i_ls8][0] = wmax.ln();
+            if let Some(i_lster) = get(&node.name, "lster") {
+                values[i_lster][0] = (wmax * TERNARY_RANGE_FACTOR + 1e-8).ln();
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn fold_is_idempotent_and_resets_bn() {
+        if !art_dir().join("tinycnn_meta.json").exists() {
+            return;
+        }
+        let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+        let g = meta.model.clone();
+        let mut v = meta.load_init_values().unwrap();
+        // make BN non-trivial
+        let i_g = meta.param_index("stem/gamma").unwrap();
+        let i_rv = meta.param_index("stem/rv").unwrap();
+        v[i_g].fill(2.0);
+        v[i_rv].fill(4.0);
+        let i_w = meta.param_index("stem/w").unwrap();
+        let w_before = v[i_w].clone();
+        fold_bn(&meta, &g, &mut v).unwrap();
+        // w scaled by gamma/sqrt(rv+eps) ~ 1.0 (2/sqrt(4) = 1) -> close
+        let scale = 2.0 / (4.0f32 + BN_EPS).sqrt();
+        for (a, b) in v[i_w].iter().zip(&w_before) {
+            assert!((a - b * scale).abs() < 1e-6);
+        }
+        assert!(v[i_g].iter().all(|&x| x == 1.0));
+        assert!(v[i_rv].iter().all(|&x| x == 1.0));
+        // second fold leaves weights untouched (up to the eps in
+        // 1/sqrt(1 + BN_EPS))
+        let w_once = v[i_w].clone();
+        fold_bn(&meta, &g, &mut v).unwrap();
+        for (a, b) in v[i_w].iter().zip(&w_once) {
+            assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fold_sets_quant_scales() {
+        if !art_dir().join("tinycnn_meta.json").exists() {
+            return;
+        }
+        let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+        let g = meta.model.clone();
+        let mut v = meta.load_init_values().unwrap();
+        fold_bn(&meta, &g, &mut v).unwrap();
+        let i_w = meta.param_index("c1/w").unwrap();
+        let wmax = v[i_w].iter().fold(0f32, |m, x| m.max(x.abs()));
+        let ls8 = v[meta.param_index("c1/ls8").unwrap()][0];
+        let lster = v[meta.param_index("c1/lster").unwrap()][0];
+        assert!((ls8 - wmax.ln()).abs() < 1e-5);
+        assert!(lster < ls8);
+        let lsa = v[meta.param_index("c1/lsa").unwrap()][0];
+        assert!((lsa - 4.0f32.ln()).abs() < 1e-6);
+    }
+}

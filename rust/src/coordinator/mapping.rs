@@ -1,0 +1,196 @@
+//! Channel-to-accelerator mapping: the object ODiMO searches for.
+//!
+//! A [`Mapping`] assigns every output channel of every mappable layer to
+//! one accelerator (DIG = digital int8, AIMC = ternary analog). It
+//! reduces to per-layer counts for the simulator ([`ChannelSplit`]) and
+//! expands to the one-hot `assign:` input tensors of the deploy-mode
+//! AOT graphs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::hw::soc::ChannelSplit;
+use crate::model::{Graph, AIMC, DIG, N_ACC};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mapping {
+    /// layer name -> accelerator id per output channel (0 = DIG, 1 = AIMC)
+    pub assign: BTreeMap<String, Vec<u8>>,
+}
+
+impl Mapping {
+    /// All channels of every mappable layer on one accelerator.
+    pub fn uniform(graph: &Graph, acc: usize) -> Self {
+        assert!(acc < N_ACC);
+        Mapping {
+            assign: graph
+                .mappable()
+                .iter()
+                .map(|n| (n.name.clone(), vec![acc as u8; n.cout]))
+                .collect(),
+        }
+    }
+
+    pub fn layer(&self, name: &str) -> &[u8] {
+        &self.assign[name]
+    }
+
+    /// Validate against the graph: every mappable layer present, channel
+    /// counts match, ids in range.
+    pub fn validate(&self, graph: &Graph) -> Result<()> {
+        for n in graph.mappable() {
+            let a = self
+                .assign
+                .get(&n.name)
+                .ok_or_else(|| anyhow!("mapping missing layer '{}'", n.name))?;
+            if a.len() != n.cout {
+                return Err(anyhow!(
+                    "layer {}: {} assignments for {} channels",
+                    n.name,
+                    a.len(),
+                    n.cout
+                ));
+            }
+            if a.iter().any(|&v| v as usize >= N_ACC) {
+                return Err(anyhow!("layer {}: accelerator id out of range", n.name));
+            }
+        }
+        if self.assign.len() != graph.mappable().len() {
+            return Err(anyhow!(
+                "mapping has {} layers, graph has {} mappable",
+                self.assign.len(),
+                graph.mappable().len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Per-layer (digital, aimc) counts for the simulator.
+    pub fn channel_split(&self) -> ChannelSplit {
+        self.assign
+            .iter()
+            .map(|(name, a)| {
+                let ca = a.iter().filter(|&&v| v as usize == AIMC).count();
+                (name.clone(), (a.len() - ca, ca))
+            })
+            .collect()
+    }
+
+    /// Fraction of all channels on the AIMC accelerator (Table I "A. Ch.").
+    pub fn aimc_fraction(&self) -> f64 {
+        let total: usize = self.assign.values().map(|a| a.len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let aimc: usize = self
+            .assign
+            .values()
+            .map(|a| a.iter().filter(|&&v| v as usize == AIMC).count())
+            .sum();
+        aimc as f64 / total as f64
+    }
+
+    /// One-hot (N_ACC, Cout) f32 tensor for the `assign:<layer>` input.
+    pub fn onehot(&self, name: &str) -> Vec<f32> {
+        let a = &self.assign[name];
+        let c = a.len();
+        let mut v = vec![0f32; N_ACC * c];
+        for (i, &acc) in a.iter().enumerate() {
+            v[acc as usize * c + i] = 1.0;
+        }
+        v
+    }
+
+    // ---- (de)serialization --------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.assign
+                .iter()
+                .map(|(k, v)| {
+                    (k.clone(), Json::Arr(v.iter().map(|&b| Json::Num(b as f64)).collect()))
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let obj = v.as_obj().ok_or_else(|| anyhow!("mapping json must be object"))?;
+        let mut assign = BTreeMap::new();
+        for (k, arr) in obj {
+            let ids = arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("layer {k}: not an array"))?
+                .iter()
+                .map(|x| x.as_usize().map(|v| v as u8).ok_or_else(|| anyhow!("bad id")))
+                .collect::<Result<Vec<u8>>>()?;
+            assign.insert(k.clone(), ids);
+        }
+        Ok(Mapping { assign })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tinycnn;
+
+    #[test]
+    fn uniform_mappings() {
+        let g = tinycnn();
+        let d = Mapping::uniform(&g, DIG);
+        assert!(d.validate(&g).is_ok());
+        assert_eq!(d.aimc_fraction(), 0.0);
+        let a = Mapping::uniform(&g, AIMC);
+        assert_eq!(a.aimc_fraction(), 1.0);
+    }
+
+    #[test]
+    fn split_counts() {
+        let g = tinycnn();
+        let mut m = Mapping::uniform(&g, DIG);
+        m.assign.get_mut("c1").unwrap()[0..5].fill(AIMC as u8);
+        let s = m.channel_split();
+        assert_eq!(s["c1"], (11, 5));
+        assert_eq!(s["stem"], (8, 0));
+    }
+
+    #[test]
+    fn onehot_layout() {
+        let g = tinycnn();
+        let mut m = Mapping::uniform(&g, DIG);
+        m.assign.get_mut("stem").unwrap()[2] = AIMC as u8;
+        let oh = m.onehot("stem");
+        let c = 8;
+        assert_eq!(oh.len(), 2 * c);
+        assert_eq!(oh[2], 0.0); // dig row, channel 2
+        assert_eq!(oh[c + 2], 1.0); // aimc row, channel 2
+        // every channel one-hot
+        for i in 0..c {
+            assert_eq!(oh[i] + oh[c + i], 1.0);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = tinycnn();
+        let mut m = Mapping::uniform(&g, DIG);
+        m.assign.get_mut("c2").unwrap()[7] = 1;
+        let j = m.to_json().to_string();
+        let back = Mapping::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let g = tinycnn();
+        let mut m = Mapping::uniform(&g, DIG);
+        m.assign.get_mut("c1").unwrap().pop();
+        assert!(m.validate(&g).is_err());
+        let mut m2 = Mapping::uniform(&g, DIG);
+        m2.assign.remove("fc");
+        assert!(m2.validate(&g).is_err());
+    }
+}

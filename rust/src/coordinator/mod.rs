@@ -1,0 +1,24 @@
+//! The ODiMO coordinator — the paper's system contribution, in rust.
+//!
+//! * [`mapping`] — the channel→accelerator assignment object
+//! * [`trainer`] — drives the AOT train/eval executables (schedules,
+//!   temperature annealing, metrics)
+//! * [`fold`] — BatchNorm folding (float → search transition)
+//! * [`discretize`] — argmax-alpha mapping extraction
+//! * [`partition`] — the Fig.-3 layer re-organization pass
+//! * [`scheduler`] — dispatch onto the DIANA simulator
+//! * [`baselines`] — All-8bit / All-Ternary / IO-8bit / Min-Cost
+//! * [`search`] — the full pipeline + lambda sweep (Fig. 4 / Fig. 5)
+
+pub mod baselines;
+pub mod discretize;
+pub mod fold;
+pub mod mapping;
+pub mod partition;
+pub mod scheduler;
+pub mod search;
+pub mod trainer;
+
+pub use mapping::Mapping;
+pub use search::{Pipeline, Regularizer, Schedule, SearchPoint};
+pub use trainer::{EvalResult, Hyper, StepMetrics, Trainer};

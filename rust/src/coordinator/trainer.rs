@@ -1,0 +1,269 @@
+//! Training orchestrator: drives the AOT train/eval executables through
+//! the ODiMO phases. All schedule logic (lr decay, softmax-temperature
+//! annealing, early stopping) lives here in rust — the lowered graphs
+//! take every hyper-parameter as a runtime scalar.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::data::DataSource;
+use crate::runtime::{
+    assemble_inputs, literal_f32, literal_i32, literal_scalar, literal_to_f32,
+    ArtifactMeta, ParamState, Runtime,
+};
+
+use super::fold::fold_bn;
+use super::mapping::Mapping;
+
+/// Hyper-parameters of one training phase (runtime inputs to the step).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    pub lr_alpha: f32,
+    pub mu: f32,
+    pub wd: f32,
+    pub lam: f32,
+    /// Softmax temperature annealed linearly tau_start -> tau_end.
+    pub tau_start: f32,
+    pub tau_end: f32,
+    /// Cosine-decay the lr to lr*lr_min_frac over the phase.
+    pub lr_min_frac: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            lr: 0.05,
+            lr_alpha: 0.05,
+            mu: 0.9,
+            wd: 1e-4,
+            lam: 0.0,
+            tau_start: 1.0,
+            tau_end: 1.0,
+            lr_min_frac: 0.1,
+        }
+    }
+}
+
+/// Metrics of one optimizer step (the graph's 6-vector).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub batch_acc: f32,
+    pub lat_cycles: f32,
+    pub energy_mw_cycles: f32,
+    pub reg: f32,
+}
+
+pub struct Trainer<'a> {
+    pub rt: &'a Runtime,
+    pub meta: &'a ArtifactMeta,
+    pub params: ParamState,
+    pub mom: ParamState,
+    train_ds: DataSource,
+    test_ds: DataSource,
+    next_sample: u64,
+    pub history: Vec<StepMetrics>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, meta: &'a ArtifactMeta, data_seed: u64) -> Result<Self> {
+        Ok(Trainer {
+            rt,
+            meta,
+            params: ParamState::from_init(meta)?,
+            mom: ParamState::zeros(meta)?,
+            train_ds: DataSource::train(&meta.model, data_seed),
+            test_ds: DataSource::test(&meta.model, data_seed),
+            next_sample: 0,
+            history: Vec::new(),
+        })
+    }
+
+    /// Replace parameters with a host snapshot (checkpoint restore).
+    pub fn set_params(&mut self, values: Vec<Vec<f32>>) -> Result<()> {
+        self.params = ParamState::from_host(self.meta, values)?;
+        self.mom = ParamState::zeros(self.meta)?;
+        Ok(())
+    }
+
+    /// Fold BN into conv weights (float -> search transition), calibrate
+    /// the per-layer activation scales on real data (PTQ-style: e^lsa =
+    /// observed max post-ReLU activation), and reset the optimizer
+    /// state. Without calibration, deep models collapse at the quantized
+    /// starting point (see quant::infer::calibrate_act_maxima).
+    pub fn fold_batchnorm(&mut self) -> Result<()> {
+        let mut values = self.params.to_host()?;
+        fold_bn(self.meta, &self.meta.model, &mut values)?;
+        let g = &self.meta.model;
+        let bt = g.train_batch.min(32);
+        let batch = self.train_ds.batch(0, bt);
+        let maxima = crate::quant::infer::calibrate_act_maxima(
+            self.meta, g, &values, &batch.x, bt,
+        )?;
+        for (node, m) in &maxima {
+            if let Ok(i) = self.meta.param_index(&format!("{node}/lsa")) {
+                values[i][0] = (m * 1.02 + 1e-6).ln();
+            }
+        }
+        log::debug!("act calibration: {maxima:?}");
+        self.set_params(values)
+    }
+
+    fn assign_literals(&self, mapping: &Mapping) -> Result<BTreeMap<String, Literal>> {
+        let mut out = BTreeMap::new();
+        for name in &self.meta.mappable {
+            let n = self
+                .meta
+                .model
+                .node(name)
+                .ok_or_else(|| anyhow!("mappable node {name} not in graph"))?;
+            out.insert(
+                name.clone(),
+                literal_f32(&mapping.onehot(name), &[crate::model::N_ACC, n.cout])?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Run `steps` optimizer steps of `graph` (one of the train_*
+    /// artifacts). `mapping` supplies the hard assignment for deploy-mode
+    /// graphs; `hw` the 6-vector for the abstract-hw search graph.
+    pub fn run_phase(
+        &mut self,
+        graph: &str,
+        steps: usize,
+        h: Hyper,
+        mapping: Option<&Mapping>,
+        hw: Option<[f32; 6]>,
+    ) -> Result<Vec<StepMetrics>> {
+        let exe = self.rt.load(self.meta.graph(graph)?)?;
+        let assigns = match mapping {
+            Some(m) => Some(self.assign_literals(m)?),
+            None => None,
+        };
+        let hw_lit = hw.map(|v| literal_f32(&v, &[6]).unwrap());
+        let bt = self.meta.model.train_batch;
+        let (c, hh, ww) = self.meta.model.input_shape;
+        let mu = literal_scalar(h.mu);
+        let wd = literal_scalar(h.wd);
+        let lam = literal_scalar(h.lam);
+        let mut phase_metrics = Vec::with_capacity(steps);
+
+        for step in 0..steps {
+            let frac = if steps <= 1 { 0.0 } else { step as f32 / (steps - 1) as f32 };
+            // cosine lr decay, linear tau anneal
+            let cos = 0.5 * (1.0 + (std::f32::consts::PI * frac).cos());
+            let lr_now = h.lr * (h.lr_min_frac + (1.0 - h.lr_min_frac) * cos);
+            let lr_a_now = h.lr_alpha * (h.lr_min_frac + (1.0 - h.lr_min_frac) * cos);
+            let tau_now = h.tau_start + (h.tau_end - h.tau_start) * frac;
+            let lr = literal_scalar(lr_now);
+            let lr_a = literal_scalar(lr_a_now);
+            let tau = literal_scalar(tau_now);
+
+            let batch = self.train_ds.batch(self.next_sample, bt);
+            self.next_sample += bt as u64;
+            let xb = literal_f32(&batch.x, &[bt, c, hh, ww])?;
+            let yb = literal_i32(&batch.y, &[bt])?;
+
+            let inputs = assemble_inputs(&exe.meta, |tm| match tm.name.as_str() {
+                "x" => Ok(&xb),
+                "y" => Ok(&yb),
+                "lr" => Ok(&lr),
+                "lr_alpha" => Ok(&lr_a),
+                "mu" => Ok(&mu),
+                "wd" => Ok(&wd),
+                "lam" => Ok(&lam),
+                "tau" => Ok(&tau),
+                "hw" => hw_lit.as_ref().ok_or_else(|| anyhow!("graph needs hw vector")),
+                n if n.starts_with("param:") => self.params.leaf(&n[6..]),
+                n if n.starts_with("mom:") => self.mom.leaf(&n[4..]),
+                n if n.starts_with("assign:") => assigns
+                    .as_ref()
+                    .and_then(|a| a.get(&n[7..]))
+                    .ok_or_else(|| anyhow!("graph needs assignment for {n}")),
+                n => Err(anyhow!("unexpected input '{n}'")),
+            })?;
+            let mut out = exe.run(&inputs)?;
+            self.params.replace_from_outputs(&mut out);
+            self.mom.replace_from_outputs(&mut out);
+            let met = literal_to_f32(&out[0])?;
+            let m = StepMetrics {
+                loss: met[0],
+                batch_acc: met[1] / bt as f32,
+                lat_cycles: met[2],
+                energy_mw_cycles: met[3],
+                reg: met[4],
+            };
+            if !m.loss.is_finite() {
+                return Err(anyhow!("{graph}: loss diverged at step {step}"));
+            }
+            if step % 20 == 0 || step + 1 == steps {
+                log::debug!(
+                    "{graph} step {step}/{steps}: loss {:.4} acc {:.3} reg {:.4}",
+                    m.loss,
+                    m.batch_acc,
+                    m.reg
+                );
+            }
+            phase_metrics.push(m);
+            self.history.push(m);
+        }
+        Ok(phase_metrics)
+    }
+
+    /// Evaluate on `n_batches` of the held-out split.
+    /// graph: eval_float | eval_search | eval_deploy.
+    pub fn eval(&self, graph: &str, mapping: Option<&Mapping>, n_batches: usize) -> Result<EvalResult> {
+        let exe = self.rt.load(self.meta.graph(graph)?)?;
+        let assigns = match mapping {
+            Some(m) => Some(self.assign_literals(m)?),
+            None => None,
+        };
+        let be = self.meta.model.eval_batch;
+        let (c, hh, ww) = self.meta.model.input_shape;
+        let mut correct = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut n = 0usize;
+        for b in 0..n_batches {
+            let batch = self.test_ds.batch((b * be) as u64, be);
+            let xb = literal_f32(&batch.x, &[be, c, hh, ww])?;
+            let yb = literal_i32(&batch.y, &[be])?;
+            let inputs = assemble_inputs(&exe.meta, |tm| match tm.name.as_str() {
+                "x" => Ok(&xb),
+                "y" => Ok(&yb),
+                n if n.starts_with("param:") => self.params.leaf(&n[6..]),
+                n if n.starts_with("assign:") => assigns
+                    .as_ref()
+                    .and_then(|a| a.get(&n[7..]))
+                    .ok_or_else(|| anyhow!("graph needs assignment for {n}")),
+                n => Err(anyhow!("unexpected input '{n}'")),
+            })?;
+            let out = exe.run_to_host(&inputs)?;
+            let stats = &out[out.len() - 1];
+            correct += stats[0] as f64;
+            loss_sum += stats[1] as f64;
+            n += be;
+        }
+        Ok(EvalResult { accuracy: correct / n as f64, avg_loss: loss_sum / n as f64, samples: n })
+    }
+
+    /// Download the current per-layer alpha logits: name -> (N_ACC rows
+    /// flattened, row-major) vectors.
+    pub fn alphas(&self) -> Result<BTreeMap<String, Vec<f32>>> {
+        let mut out = BTreeMap::new();
+        for name in &self.meta.mappable {
+            out.insert(name.clone(), self.params.leaf_to_host(&format!("{name}/alpha"))?);
+        }
+        Ok(out)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub avg_loss: f64,
+    pub samples: usize,
+}

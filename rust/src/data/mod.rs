@@ -1,0 +1,45 @@
+//! Synthetic benchmark datasets — the runtime data source.
+//!
+//! Bit-compatible mirror of `python/compile/datagen.py` (same SplitMix64
+//! streams, same per-class grating mixtures). The rust side generates
+//! training batches on the fly for the coordinator; python only uses its
+//! copy in unit tests. See DESIGN.md §Substitutions for why synthetic
+//! data stands in for CIFAR-10 / Tiny-ImageNet / VWW.
+
+mod synth;
+
+pub use synth::{gen_batch, gen_sample, Batch, ClassSpec, ALGO_VERSION};
+
+use crate::model::Graph;
+
+/// Streaming batch source for one model's train or test split.
+pub struct DataSource {
+    pub seed: u64,
+    pub split: u32, // 0 = train, 1 = test
+    pub classes: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl DataSource {
+    pub fn train(g: &Graph, seed: u64) -> Self {
+        Self {
+            seed,
+            split: 0,
+            classes: g.classes,
+            c: g.input_shape.0,
+            h: g.input_shape.1,
+            w: g.input_shape.2,
+        }
+    }
+
+    pub fn test(g: &Graph, seed: u64) -> Self {
+        Self { split: 1, ..Self::train(g, seed) }
+    }
+
+    /// Deterministic batch starting at sample index `start`.
+    pub fn batch(&self, start: u64, n: usize) -> Batch {
+        gen_batch(self.seed, self.split, start, n, self.classes, self.c, self.h, self.w)
+    }
+}

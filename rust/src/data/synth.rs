@@ -1,0 +1,210 @@
+//! Class-conditional synthetic images (datagen.py mirror).
+//!
+//! Every formula, constant and PRNG draw order here matches
+//! `python/compile/datagen.py`; the cross-language contract is pinned by
+//! the SplitMix64 known-answer tests on both sides plus the statistical
+//! tests below. (Exact float equality across languages is *not* required
+//! — libm sin/cos may differ in the last ulp — only stream/parameter
+//! identity.)
+
+use crate::util::prng::SplitMix64;
+
+/// Bump in lockstep with datagen.ALGO_VERSION.
+pub const ALGO_VERSION: u32 = 1;
+pub const N_COMPONENTS: usize = 3;
+pub const NOISE_SIGMA: f32 = 0.15;
+pub const PHASE_JITTER: f64 = 0.15;
+
+#[derive(Clone, Debug)]
+struct Component {
+    theta: f64,
+    freq: f64,
+    phase: f64,
+    color: [f64; 3],
+    amp: f64,
+}
+
+/// Per-class grating mixture, derived from (dataset_seed, class).
+#[derive(Clone, Debug)]
+pub struct ClassSpec {
+    comps: Vec<Component>,
+}
+
+impl ClassSpec {
+    pub fn new(dataset_seed: u64, cls: u32) -> Self {
+        let state = dataset_seed
+            .wrapping_mul(0x517C_C1B7_2722_0A95)
+            .wrapping_add((cls as u64).wrapping_mul(0x2545_F491_4F6C_DD1D))
+            .wrapping_add(1);
+        let mut rng = SplitMix64::new(state);
+        let comps = (0..N_COMPONENTS)
+            .map(|_| {
+                let u_th = rng.next_f64();
+                let u_fr = rng.next_f64();
+                let u_ph = rng.next_f64();
+                let u_r = rng.next_f64();
+                let u_g = rng.next_f64();
+                let u_b = rng.next_f64();
+                let u_a = rng.next_f64();
+                Component {
+                    theta: u_th * std::f64::consts::PI,
+                    freq: 1.5 + 3.5 * u_fr,
+                    phase: u_ph * 2.0 * std::f64::consts::PI,
+                    color: [u_r, u_g, u_b],
+                    amp: 0.5 + 0.5 * u_a,
+                }
+            })
+            .collect();
+        Self { comps }
+    }
+}
+
+/// One (3, h, w) image in [0, 1]; `split` 0 = train, 1 = test.
+pub fn gen_sample(dataset_seed: u64, split: u32, index: u64, cls: u32,
+                  h: usize, w: usize) -> Vec<f32> {
+    let spec = ClassSpec::new(dataset_seed, cls);
+    let state = dataset_seed
+        ^ (split as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)
+        ^ (index.wrapping_mul(0xA5A5_A5A5_A5A5_A5A5).wrapping_add(0x123_4567));
+    let mut rng = SplitMix64::new(state);
+    let mut img = vec![0f32; 3 * h * w];
+    let two_pi = 2.0 * std::f64::consts::PI;
+    // scratch for the separable wave evaluation (see below)
+    let mut col_sin = vec![0f64; w];
+    let mut col_cos = vec![0f64; w];
+    for comp in &spec.comps {
+        let u_pj = rng.next_f64();
+        let u_aj = rng.next_f64();
+        let phase = comp.phase + (u_pj - 0.5) * two_pi * PHASE_JITTER;
+        let amp = comp.amp * (0.8 + 0.4 * u_aj);
+        let cx = comp.theta.cos() * comp.freq;
+        let cy = comp.theta.sin() * comp.freq;
+        // sin(2pi(cx*fx + cy*fy) + phase) factored with the angle-sum
+        // identity: O(h + w) transcendentals instead of O(h*w) — the
+        // hot path of batch generation (EXPERIMENTS.md §Perf #4).
+        for (ix, (s, c)) in col_sin.iter_mut().zip(col_cos.iter_mut()).enumerate() {
+            let x_ang = two_pi * cx * (ix as f64 / w as f64);
+            *s = x_ang.sin();
+            *c = x_ang.cos();
+        }
+        for iy in 0..h {
+            let y_ang = two_pi * cy * (iy as f64 / h as f64) + phase;
+            let (ys, yc) = (y_ang.sin(), y_ang.cos());
+            for ix in 0..w {
+                let wave = col_sin[ix] * yc + col_cos[ix] * ys;
+                let px = iy * w + ix;
+                for ch in 0..3 {
+                    img[ch * h * w + px] += (amp * comp.color[ch] * wave) as f32;
+                }
+            }
+        }
+    }
+    // gaussian noise, same Box-Muller stream shape as python
+    let n = 3 * h * w;
+    let mut i = 0;
+    while i < n {
+        let (a, b) = rng.next_gauss_pair();
+        img[i] += NOISE_SIGMA * a as f32;
+        if i + 1 < n {
+            img[i + 1] += NOISE_SIGMA * b as f32;
+        }
+        i += 2;
+    }
+    let norm = 2.0 * N_COMPONENTS as f32;
+    for v in img.iter_mut() {
+        *v = (0.5 + *v / norm).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// A generated batch: images NCHW-flat plus labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,  // (n, c, h, w) flattened
+    pub y: Vec<i32>,  // (n,)
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+/// Deterministic batch: sample `i` has class `i % classes` (python
+/// `gen_batch` mirror).
+pub fn gen_batch(dataset_seed: u64, split: u32, start: u64, n: usize,
+                 classes: usize, c: usize, h: usize, w: usize) -> Batch {
+    assert_eq!(c, 3, "generator produces 3-channel images");
+    let mut x = Vec::with_capacity(n * c * h * w);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let idx = start + i as u64;
+        let cls = (idx % classes as u64) as u32;
+        x.extend_from_slice(&gen_sample(dataset_seed, split, idx, cls, h, w));
+        y.push(cls as i32);
+    }
+    Batch { x, y, n, c, h, w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = gen_sample(7, 0, 3, 1, 16, 16);
+        let b = gen_sample(7, 0, 3, 1, 16, 16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bounded_unit_interval() {
+        let img = gen_sample(7, 0, 0, 2, 24, 24);
+        assert!(img.iter().all(|v| (0.0..=1.0).contains(v)));
+        assert_eq!(img.len(), 3 * 24 * 24);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let a = gen_sample(7, 0, 3, 1, 16, 16);
+        let b = gen_sample(7, 1, 3, 1, 16, 16);
+        let d: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(d > 1.0);
+    }
+
+    #[test]
+    fn classes_distinguishable() {
+        // Mirror of python test_classes_are_distinguishable: class means
+        // separate far more than within-class resampling noise.
+        let avg = |cls: u32, offs: u64| -> Vec<f32> {
+            let mut acc = vec![0f32; 3 * 32 * 32];
+            for i in 0..8u64 {
+                let s = gen_sample(7, 0, offs + i * 17 + cls as u64, cls, 32, 32);
+                for (a, v) in acc.iter_mut().zip(&s) {
+                    *a += v / 8.0;
+                }
+            }
+            acc
+        };
+        let m0 = avg(0, 0);
+        let m0b = avg(0, 1000);
+        let m1 = avg(1, 0);
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32
+        };
+        assert!(dist(&m0, &m1) > 2.0 * dist(&m0, &m0b));
+    }
+
+    #[test]
+    fn batch_labels_cycle() {
+        let b = gen_batch(1, 0, 10, 20, 10, 3, 8, 8);
+        let want: Vec<i32> = (10..30).map(|i| (i % 10) as i32).collect();
+        assert_eq!(b.y, want);
+        assert_eq!(b.x.len(), 20 * 3 * 8 * 8);
+    }
+
+    #[test]
+    fn class_spec_deterministic_across_calls() {
+        let a = ClassSpec::new(5, 3);
+        let b = ClassSpec::new(5, 3);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+}

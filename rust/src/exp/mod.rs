@@ -1,0 +1,286 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (DESIGN.md §Per-experiment-index). Each driver runs the required
+//! pipelines (reusing cached sweeps where possible), writes
+//! `results/<exp>_*.{md,csv,json}`, and prints a terminal summary.
+
+pub mod store;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{Pipeline, Regularizer, SearchPoint};
+use crate::hw::soc::SocConfig;
+use crate::hw::AbstractHw;
+use crate::metrics;
+use crate::runtime::{ArtifactMeta, Runtime};
+
+pub struct ExpContext {
+    pub rt: Runtime,
+    pub cfg: RunConfig,
+}
+
+impl ExpContext {
+    pub fn new(cfg: RunConfig) -> Result<Self> {
+        Ok(ExpContext { rt: Runtime::cpu()?, cfg })
+    }
+
+    fn meta(&self) -> Result<ArtifactMeta> {
+        ArtifactMeta::load(&self.cfg.artifacts_dir, &self.cfg.model)
+    }
+
+    fn pipeline<'a>(&'a self, meta: &'a ArtifactMeta) -> Pipeline<'a> {
+        let mut p = Pipeline::new(&self.rt, meta, self.cfg.schedule);
+        p.data_seed = self.cfg.data_seed;
+        p.ckpt_dir = self.cfg.results_dir.clone();
+        p.soc_cfg = SocConfig { non_ideal_l1: self.cfg.non_ideal_l1 };
+        p
+    }
+
+    fn points_path(&self, tag: &str) -> PathBuf {
+        self.cfg.results_dir.join(format!("points_{}_{}.json", self.cfg.model, tag))
+    }
+
+    /// Run (or reload) the lambda sweep + baselines for one regularizer.
+    pub fn sweep_cached(&self, reg: Regularizer, tag: &str, baselines: &[&str])
+                        -> Result<Vec<SearchPoint>> {
+        let path = self.points_path(tag);
+        if path.exists() {
+            log::info!("reusing cached sweep {}", path.display());
+            return store::load_points(&path);
+        }
+        let meta = self.meta()?;
+        let pipe = self.pipeline(&meta);
+        let folded = pipe.pretrained_folded()?;
+        let mut points = pipe.sweep(&folded, reg, &self.cfg.lambdas)?;
+        for b in baselines {
+            // All-Ternary / Min-Cost can fail to converge on the hardest
+            // tasks (the paper drops them for VWW); keep going.
+            match pipe.baseline_point(&folded, b) {
+                Ok(p) => points.push(p),
+                Err(e) => log::warn!("baseline {b} failed: {e:#}"),
+            }
+        }
+        store::save_points(&path, &points)?;
+        Ok(points)
+    }
+}
+
+/// Default baselines per figure (paper Sec. IV-A).
+pub const FIG4_BASELINES: [&str; 4] =
+    ["all_8bit", "all_ternary", "io8_backbone_ternary", "min_cost_lat"];
+
+/// Fig. 4 — accuracy vs latency (top) and vs energy (bottom) with the
+/// DIANA cost models, for the configured model.
+pub fn fig4(ctx: &ExpContext) -> Result<()> {
+    let model = ctx.cfg.model.clone();
+    for (reg, tag, cost_name) in [
+        (Regularizer::LatencyDiana, "lat", "latency_ms"),
+        (Regularizer::EnergyDiana, "en", "energy_uj"),
+    ] {
+        let baselines: Vec<&str> = if tag == "lat" {
+            vec!["all_8bit", "all_ternary", "io8_backbone_ternary", "min_cost_lat"]
+        } else {
+            vec!["all_8bit", "all_ternary", "io8_backbone_ternary", "min_cost_en"]
+        };
+        let points = ctx.sweep_cached(reg, tag, &baselines)?;
+        let cost = |p: &SearchPoint| if tag == "lat" { p.latency_ms } else { p.energy_uj };
+        let front = metrics::pareto_front(&points, cost);
+        let md = format!(
+            "# Fig. 4 ({model}, accuracy vs {cost_name})\n\n{}\nPareto front: {:?}\n\n```\n{}\n```\n",
+            metrics::table_markdown(&format!("{model} / {tag}"), &points),
+            front.iter().map(|&i| points[i].label.clone()).collect::<Vec<_>>(),
+            metrics::ascii_scatter(&points, cost, 64, 16),
+        );
+        metrics::write_results(
+            &ctx.cfg.results_dir,
+            &format!("fig4_{model}_{tag}"),
+            &md,
+            &metrics::points_csv(&points),
+        )?;
+        println!("{md}");
+        summarize_vs_baseline(&points, cost, cost_name);
+    }
+    Ok(())
+}
+
+/// The §IV-B headline numbers: best ODiMO point within small accuracy
+/// drops of All-8bit.
+pub fn summarize_vs_baseline(points: &[SearchPoint], cost: impl Fn(&SearchPoint) -> f64,
+                             cost_name: &str) {
+    let Some(base) = points.iter().find(|p| p.label == "all_8bit") else {
+        return;
+    };
+    for drop in [0.005, 0.02, 0.05] {
+        let best = points
+            .iter()
+            .filter(|p| p.label.starts_with("odimo") && p.accuracy >= base.accuracy - drop)
+            .min_by(|a, b| cost(a).partial_cmp(&cost(b)).unwrap());
+        if let Some(p) = best {
+            println!(
+                "  <= {:.1}% acc drop: {} saves {:.1}% {} ({:.4} vs {:.4}), acc {:.2}% vs {:.2}%",
+                100.0 * drop,
+                p.label,
+                100.0 * (1.0 - cost(p) / cost(base)),
+                cost_name,
+                cost(p),
+                cost(base),
+                100.0 * p.accuracy,
+                100.0 * base.accuracy,
+            );
+        }
+    }
+}
+
+/// Fig. 5 — abstract hardware models (no-shutdown / ideal-shutdown) on
+/// the configured model (the paper shows TinyImageNet).
+pub fn fig5(ctx: &ExpContext) -> Result<()> {
+    let model = ctx.cfg.model.clone();
+    let meta = ctx.meta()?;
+    for (hw, tag) in [
+        (AbstractHw::no_shutdown(), "prop_noshutdown"),
+        (AbstractHw::ideal_shutdown(), "prop_shutdown"),
+    ] {
+        let reg = Regularizer::Proportional(hw.to_input_vec());
+        let mut points = ctx.sweep_cached(reg, tag, &["all_8bit", "io8_backbone_ternary"])?;
+        // cost for fig5 points is the *abstract* model's energy
+        for p in &mut points {
+            let (lat, en) = hw.cost(&meta.model, &p.mapping.channel_split());
+            p.latency_ms = lat; // abstract cycles
+            p.energy_uj = en; // abstract mW*cycles
+        }
+        let cost = |p: &SearchPoint| p.energy_uj;
+        let md = format!(
+            "# Fig. 5 ({model}, abstract hw: {tag})\n\n{}\n```\n{}\n```\n",
+            metrics::table_markdown(tag, &points),
+            metrics::ascii_scatter(&points, cost, 64, 16),
+        );
+        metrics::write_results(
+            &ctx.cfg.results_dir,
+            &format!("fig5_{model}_{tag}"),
+            &md,
+            &metrics::points_csv(&points),
+        )?;
+        println!("{md}");
+        summarize_vs_baseline(&points, cost, "abstract_energy");
+    }
+    Ok(())
+}
+
+/// Select the Table-I style deployment points from a sweep: the
+/// highest-accuracy ODiMO point (Large) and the cheapest point within a
+/// liberal accuracy window (Small).
+pub fn select_large_small(points: &[SearchPoint], cost: impl Fn(&SearchPoint) -> f64)
+                          -> (Option<usize>, Option<usize>) {
+    let odimo: Vec<usize> = (0..points.len())
+        .filter(|&i| points[i].label.starts_with("odimo"))
+        .collect();
+    let large = odimo
+        .iter()
+        .copied()
+        .max_by(|&a, &b| points[a].accuracy.partial_cmp(&points[b].accuracy).unwrap());
+    let max_acc = odimo
+        .iter()
+        .map(|&i| points[i].accuracy)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let small = odimo
+        .iter()
+        .copied()
+        .filter(|&i| points[i].accuracy >= max_acc - 0.08)
+        .min_by(|&a, &b| cost(&points[a]).partial_cmp(&cost(&points[b])).unwrap());
+    (large, small.filter(|s| Some(*s) != large))
+}
+
+/// Table I — deployment of selected Fig.-4 points on the DIANA
+/// simulator (All-8bit, ODiMO Large/Small x Lat/En, Min-Cost).
+pub fn table1(ctx: &ExpContext) -> Result<()> {
+    let model = ctx.cfg.model.clone();
+    let mut rows: Vec<SearchPoint> = Vec::new();
+    let variants: [(&str, fn(&SearchPoint) -> f64); 2] =
+        [("lat", |p| p.latency_ms), ("en", |p| p.energy_uj)];
+    for (tag, cost) in variants {
+        let reg = if tag == "lat" { Regularizer::LatencyDiana } else { Regularizer::EnergyDiana };
+        let baselines: Vec<&str> = if tag == "lat" {
+            vec!["all_8bit", "all_ternary", "io8_backbone_ternary", "min_cost_lat"]
+        } else {
+            vec!["all_8bit", "all_ternary", "io8_backbone_ternary", "min_cost_en"]
+        };
+        let points = ctx.sweep_cached(reg, tag, &baselines)?;
+        if tag == "lat" {
+            if let Some(b) = points.iter().find(|p| p.label == "all_8bit") {
+                rows.push(b.clone());
+            }
+        }
+        let (large, small) = select_large_small(&points, cost);
+        if let Some(i) = large {
+            let mut p = points[i].clone();
+            p.label = format!("ODiMO Large - {}", tag.to_uppercase());
+            rows.push(p);
+        }
+        if let Some(i) = small {
+            let mut p = points[i].clone();
+            p.label = format!("ODiMO Small - {}", tag.to_uppercase());
+            rows.push(p);
+        }
+        if tag == "en" {
+            if let Some(b) = points.iter().find(|p| p.label.starts_with("min_cost")) {
+                rows.push(b.clone());
+            }
+        }
+    }
+    let md = metrics::table_markdown(&format!("Table I — {model} on DIANA (simulated)"), &rows);
+    metrics::write_results(
+        &ctx.cfg.results_dir,
+        &format!("table1_{model}"),
+        &md,
+        &metrics::points_csv(&rows),
+    )?;
+    store::save_points(&ctx.cfg.results_dir.join(format!("table1_{model}.json")), &rows)?;
+    println!("{md}");
+    Ok(())
+}
+
+/// Fig. 6 — per-layer utilization breakdown of the ODiMO-Small-En
+/// mapping (falls back to Large or min-cost if Small was not found).
+pub fn fig6(ctx: &ExpContext) -> Result<()> {
+    let model = ctx.cfg.model.clone();
+    let t1_path = ctx.cfg.results_dir.join(format!("table1_{model}.json"));
+    if !t1_path.exists() {
+        table1(ctx)?;
+    }
+    let rows = store::load_points(&t1_path)?;
+    let pick = rows
+        .iter()
+        .find(|p| p.label.contains("Small - EN"))
+        .or_else(|| rows.iter().find(|p| p.label.contains("Large - EN")))
+        .or_else(|| rows.iter().find(|p| p.label.starts_with("odimo")))
+        .ok_or_else(|| anyhow!("no ODiMO row in table1 output"))?;
+    let meta = ctx.meta()?;
+    let rep = crate::coordinator::scheduler::deploy(
+        &meta.model,
+        &pick.mapping,
+        SocConfig { non_ideal_l1: ctx.cfg.non_ideal_l1 },
+    );
+    let tl = &rep.run.timeline;
+    let u = tl.utilization();
+    let mut csv = String::from("layer,digital_cycles,aimc_cycles,span_cycles\n");
+    for (layer, d, a, span) in tl.per_layer() {
+        csv.push_str(&format!("{layer},{d},{a},{span}\n"));
+    }
+    let md = format!(
+        "# Fig. 6 — accelerator utilization, {} ({})\n\n\
+         both busy: {:.1}% | digital only: {:.1}% | aimc only: {:.1}% | idle: {:.1}%\n\n\
+         ```\n{}```\n",
+        pick.label,
+        model,
+        100.0 * u.both_frac,
+        100.0 * (u.busy_frac[0] - u.both_frac),
+        100.0 * (u.busy_frac[1] - u.both_frac),
+        100.0 * u.idle_frac,
+        tl.render_ascii(72),
+    );
+    metrics::write_results(&ctx.cfg.results_dir, &format!("fig6_{model}"), &md, &csv)?;
+    println!("{md}");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Persistence for evaluated search points (mapping + metrics), so the
+//! expensive sweeps (fig4) are computed once and reused by table1/fig6.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Mapping, SearchPoint};
+use crate::util::json::{self, Json};
+
+pub fn point_to_json(p: &SearchPoint) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(p.label.clone())),
+        ("lambda", Json::num(p.lambda)),
+        ("accuracy", Json::num(p.accuracy)),
+        ("latency_ms", Json::num(p.latency_ms)),
+        ("energy_uj", Json::num(p.energy_uj)),
+        ("total_cycles", Json::num(p.total_cycles as f64)),
+        ("util_dig", Json::num(p.util[0])),
+        ("util_aimc", Json::num(p.util[1])),
+        ("aimc_ch_frac", Json::num(p.aimc_channel_frac)),
+        ("mapping", p.mapping.to_json()),
+    ])
+}
+
+pub fn point_from_json(v: &Json) -> Result<SearchPoint> {
+    Ok(SearchPoint {
+        label: v.req("label")?.as_str().unwrap_or("").to_string(),
+        lambda: v.req("lambda")?.as_f64().unwrap_or(f64::NAN),
+        accuracy: v.req("accuracy")?.as_f64().unwrap_or(0.0),
+        latency_ms: v.req("latency_ms")?.as_f64().unwrap_or(0.0),
+        energy_uj: v.req("energy_uj")?.as_f64().unwrap_or(0.0),
+        total_cycles: v.req("total_cycles")?.as_f64().unwrap_or(0.0) as u64,
+        util: [
+            v.req("util_dig")?.as_f64().unwrap_or(0.0),
+            v.req("util_aimc")?.as_f64().unwrap_or(0.0),
+        ],
+        aimc_channel_frac: v.req("aimc_ch_frac")?.as_f64().unwrap_or(0.0),
+        mapping: Mapping::from_json(v.req("mapping")?)?,
+    })
+}
+
+pub fn save_points(path: &Path, points: &[SearchPoint]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let arr = Json::Arr(points.iter().map(point_to_json).collect());
+    std::fs::write(path, arr.to_string())?;
+    Ok(())
+}
+
+pub fn load_points(path: &Path) -> Result<Vec<SearchPoint>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    json::parse(&text)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("points file must be a json array"))?
+        .iter()
+        .map(point_from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{tinycnn, DIG};
+
+    #[test]
+    fn roundtrip() {
+        let g = tinycnn();
+        let p = SearchPoint {
+            label: "odimo_0.5".into(),
+            lambda: 0.5,
+            accuracy: 0.91,
+            latency_ms: 1.23,
+            energy_uj: 33.3,
+            total_cycles: 319_800,
+            util: [1.0, 0.4],
+            aimc_channel_frac: 0.3,
+            mapping: Mapping::uniform(&g, DIG),
+        };
+        let dir = std::env::temp_dir().join("odimo_store_test");
+        let path = dir.join("pts.json");
+        save_points(&path, &[p.clone()]).unwrap();
+        let back = load_points(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].label, p.label);
+        assert_eq!(back[0].mapping, p.mapping);
+        assert!((back[0].accuracy - p.accuracy).abs() < 1e-9);
+        assert_eq!(back[0].total_cycles, p.total_cycles);
+    }
+}

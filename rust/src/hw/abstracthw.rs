@@ -1,0 +1,110 @@
+//! Abstract hardware cost models — paper Fig. 5.
+//!
+//! Latency simply proportional to assigned MACs per accelerator
+//! (`lat_i = macs_i / thpt_i`), energy per Eq. 4 with configurable
+//! active/idle powers. Two canonical configs reproduce the figure:
+//! no-shutdown (P_idle = P_act) and ideal-shutdown (P_idle = 0), both
+//! with the 8-bit accelerator burning 10x the ternary one's power.
+//! Mirrors `python/compile/costmodel.loss_proportional` (which is what
+//! the `train_search_prop` artifact optimizes with these constants as
+//! runtime inputs).
+
+use crate::model::{Graph, Op};
+
+use super::soc::ChannelSplit;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AbstractHw {
+    /// MACs per cycle per accelerator [digital(8b), aimc(ternary)].
+    pub thpt: [f64; 2],
+    pub p_act: [f64; 2],
+    pub p_idle: [f64; 2],
+}
+
+impl AbstractHw {
+    /// Fig. 5 top: no shutdown — idle power equals active power, and
+    /// energy minimization degenerates to latency minimization.
+    pub fn no_shutdown() -> Self {
+        AbstractHw { thpt: [1.0, 8.0], p_act: [10.0, 1.0], p_idle: [10.0, 1.0] }
+    }
+
+    /// Fig. 5 bottom: ideal shutdown — zero idle power.
+    pub fn ideal_shutdown() -> Self {
+        AbstractHw { thpt: [1.0, 8.0], p_act: [10.0, 1.0], p_idle: [0.0, 0.0] }
+    }
+
+    /// The 6-vector the `train_search_prop` artifact takes as its `hw`
+    /// input: [thpt_d, thpt_a, p_act_d, p_act_a, p_idle_d, p_idle_a].
+    pub fn to_input_vec(&self) -> [f32; 6] {
+        [
+            self.thpt[0] as f32, self.thpt[1] as f32,
+            self.p_act[0] as f32, self.p_act[1] as f32,
+            self.p_idle[0] as f32, self.p_idle[1] as f32,
+        ]
+    }
+
+    /// (latency_cycles, energy_mw_cycles) of a mapped network.
+    pub fn cost(&self, graph: &Graph, split: &ChannelSplit) -> (f64, f64) {
+        let mut lat = 0.0;
+        let mut en = 0.0;
+        for node in &graph.nodes {
+            match node.op {
+                Op::Conv | Op::Fc => {
+                    let (cd, ca) = split[&node.name];
+                    let macs_per_ch = node.macs() as f64 / node.cout as f64;
+                    let ld = macs_per_ch * cd as f64 / self.thpt[0];
+                    let la = macs_per_ch * ca as f64 / self.thpt[1];
+                    let span = ld.max(la);
+                    lat += span;
+                    en += self.p_act[0] * ld + self.p_idle[0] * (span - ld);
+                    en += self.p_act[1] * la + self.p_idle[1] * (span - la);
+                }
+                Op::DwConv => {
+                    let ld = node.macs() as f64 / self.thpt[0];
+                    lat += ld;
+                    en += self.p_act[0] * ld + self.p_idle[1] * ld;
+                }
+                _ => {}
+            }
+        }
+        (lat, en)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::soc::{split_all_aimc, split_all_digital};
+    use crate::model::tinycnn;
+
+    #[test]
+    fn no_shutdown_energy_tracks_latency() {
+        // with p_idle == p_act, energy == latency * total power
+        let hw = AbstractHw::no_shutdown();
+        let g = tinycnn();
+        for split in [split_all_digital(&g), split_all_aimc(&g)] {
+            let (lat, en) = hw.cost(&g, &split);
+            let p_tot: f64 = hw.p_act.iter().sum();
+            assert!((en - lat * p_tot).abs() < 1e-6 * en.max(1.0), "{en} vs {}", lat * p_tot);
+        }
+    }
+
+    #[test]
+    fn ideal_shutdown_prefers_aimc_harder() {
+        let g = tinycnn();
+        let hw0 = AbstractHw::no_shutdown();
+        let hw1 = AbstractHw::ideal_shutdown();
+        let d = split_all_digital(&g);
+        let a = split_all_aimc(&g);
+        // energy ratio all-dig / all-aimc is larger under shutdown
+        let r0 = hw0.cost(&g, &d).1 / hw0.cost(&g, &a).1;
+        let r1 = hw1.cost(&g, &d).1 / hw1.cost(&g, &a).1;
+        assert!(r1 > r0);
+    }
+
+    #[test]
+    fn input_vec_layout() {
+        let v = AbstractHw::ideal_shutdown().to_input_vec();
+        assert_eq!(v, [1.0, 8.0, 10.0, 1.0, 0.0, 0.0]);
+    }
+}

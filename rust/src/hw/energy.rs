@@ -1,0 +1,69 @@
+//! Power/energy model — paper Eq. 4.
+//!
+//! Constants mirror `python/compile/costmodel.py` (asserted against the
+//! artifact metadata by tests/model_parity.rs). Calibration note: chosen
+//! so the All-8bit CIFAR-10/ResNet20 deployment lands on the paper's
+//! Table-I scale (~1.55 ms / ~38.7 uJ at 260 MHz); see EXPERIMENTS.md.
+
+use super::latency::F_CLK_HZ;
+
+/// Average active power, mW: [digital, aimc].
+pub const P_ACT: [f64; 2] = [24.0, 26.0];
+/// Average idle power, mW: [digital, aimc].
+pub const P_IDLE: [f64; 2] = [1.3, 1.3];
+
+/// Energy (uJ) of one layer interval: each accelerator is active for
+/// `active_cycles[i]` within a layer lasting `span_cycles`.
+pub fn layer_energy_uj(active_cycles: [u64; 2], span_cycles: u64) -> f64 {
+    let mut e_mw_cycles = 0.0;
+    for i in 0..2 {
+        let act = active_cycles[i].min(span_cycles) as f64;
+        let idle = (span_cycles - active_cycles[i].min(span_cycles)) as f64;
+        e_mw_cycles += P_ACT[i] * act + P_IDLE[i] * idle;
+    }
+    // mW * cycles / (cycles/s) = mW*s = mJ; * 1e3 -> uJ
+    e_mw_cycles / F_CLK_HZ * 1e3
+}
+
+/// mW*cycles -> uJ (for totals accumulated in model units).
+pub fn mw_cycles_to_uj(v: f64) -> f64 {
+    v / F_CLK_HZ * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_idle_layer() {
+        let e = layer_energy_uj([0, 0], 260_000); // 1 ms
+        let want = (P_IDLE[0] + P_IDLE[1]) * 1e-3 * 1e3; // mW * ms = uJ
+        assert!((e - want).abs() < 1e-9, "{e} vs {want}");
+    }
+
+    #[test]
+    fn fully_active_digital() {
+        let e = layer_energy_uj([260_000, 0], 260_000);
+        let want = (P_ACT[0] + P_IDLE[1]) * 1.0;
+        assert!((e - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_caps_at_span() {
+        // an accelerator can't be active longer than the layer span
+        let a = layer_energy_uj([300_000, 0], 260_000);
+        let b = layer_energy_uj([260_000, 0], 260_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_beats_sequential() {
+        // running both accelerators in parallel (span = max) must cost
+        // less than running them back-to-back (span = sum): Eq. 4's
+        // rationale for parallel execution.
+        let (ld, la) = (200_000u64, 150_000u64);
+        let par = layer_energy_uj([ld, la], ld.max(la));
+        let seq = layer_energy_uj([ld, 0], ld) + layer_energy_uj([0, la], la);
+        assert!(par < seq);
+    }
+}

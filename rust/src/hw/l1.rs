@@ -1,0 +1,99 @@
+//! Shared L1 scratchpad model.
+//!
+//! DIANA's two accelerators share a 256 kB L1 activation memory (the
+//! property that makes ODiMO's channel-split mapping free of
+//! data-marshaling overhead — paper Sec. III-A, condition ii), and the
+//! digital accelerator has a 64 kB weight memory that Eq. 7's DMA term
+//! refills. The paper's analytical models *neglect* tiling overheads for
+//! activations that exceed L1; the simulator checks footprints and can
+//! optionally charge a tiling penalty (the `NonIdeal` config), which the
+//! ablation bench uses to probe rank preservation.
+
+/// Shared L1 activation scratchpad, bytes.
+pub const L1_BYTES: usize = 256 * 1024;
+/// Digital accelerator weight memory, bytes.
+pub const DIG_WMEM_BYTES: usize = 64 * 1024;
+
+/// Activation footprint of one layer execution: input + output tensors
+/// live in L1 simultaneously (single-buffered; batch 1 at deployment,
+/// 8-bit activations = 1 byte each).
+pub fn act_footprint_bytes(cin: usize, in_hw: (usize, usize), cout: usize,
+                           out_hw: (usize, usize)) -> usize {
+    cin * in_hw.0 * in_hw.1 + cout * out_hw.0 * out_hw.1
+}
+
+/// Digital weight-tile footprint: int8 codes for the channels mapped to
+/// the digital accelerator.
+pub fn dig_weight_bytes(cin: usize, k: usize, cout_d: usize) -> usize {
+    cout_d * cin * k * k
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct L1Report {
+    pub act_bytes: usize,
+    pub dig_w_bytes: usize,
+    pub act_overflow: bool,
+    pub w_overflow: bool,
+}
+
+pub fn check_layer(cin: usize, in_hw: (usize, usize), cout: usize,
+                   out_hw: (usize, usize), k: usize, cout_d: usize) -> L1Report {
+    let act = act_footprint_bytes(cin, in_hw, cout, out_hw);
+    let w = dig_weight_bytes(cin, k, cout_d);
+    L1Report {
+        act_bytes: act,
+        dig_w_bytes: w,
+        act_overflow: act > L1_BYTES,
+        w_overflow: w > DIG_WMEM_BYTES,
+    }
+}
+
+/// Multiplicative compute penalty under the non-ideal configuration:
+/// activations that do not fit must be processed in ceil(act/L1) tiles,
+/// each paying an extra DMA round-trip; we approximate the slowdown as
+/// the tile count on the compute term.
+pub fn tiling_penalty(act_bytes: usize) -> u64 {
+    (act_bytes.div_ceil(L1_BYTES)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprints() {
+        // 16ch 32x32 in, 32ch 16x16 out = 16*1024 + 32*256 bytes
+        assert_eq!(act_footprint_bytes(16, (32, 32), 32, (16, 16)), 16384 + 8192);
+        assert_eq!(dig_weight_bytes(16, 3, 32), 32 * 16 * 9);
+    }
+
+    #[test]
+    fn benchmark_layers_fit_l1() {
+        // every layer of the three benchmark models fits the shared L1
+        // at batch 1 (the paper deploys batch-1 inference)
+        for name in crate::model::ALL_MODELS {
+            let g = crate::model::build(name).unwrap();
+            for n in g.nodes.iter() {
+                if matches!(n.op, crate::model::Op::Conv | crate::model::Op::DwConv) {
+                    let r = check_layer(n.cin, n.in_hw, n.cout, n.out_hw, n.k, n.cout);
+                    assert!(!r.act_overflow, "{}/{} overflows L1", name, n.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_resnet18_layer_exceeds_dig_wmem() {
+        // 128x128x3x3 int8 = 147 kB > 64 kB: the DMA term in Eq. 7 is
+        // what pays for the refill — flag it
+        let r = check_layer(128, (8, 8), 128, (8, 8), 3, 128);
+        assert!(r.w_overflow);
+    }
+
+    #[test]
+    fn penalty_is_tile_count() {
+        assert_eq!(tiling_penalty(L1_BYTES), 1);
+        assert_eq!(tiling_penalty(L1_BYTES + 1), 2);
+        assert_eq!(tiling_penalty(10), 1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Analytical accelerator latency models — paper Sec. III-C, Eq. 6/7.
+//!
+//! Exact integer mirror of `python/compile/costmodel.py` (whose traced
+//! versions feed the training loss); the simulator uses these to cost
+//! discretized mappings. Parity is pinned by `rust/tests/model_parity.rs`
+//! against constants exported in the artifact metadata.
+
+use crate::model::NodeDef;
+
+/// AIMC macro geometry: 1152 rows x 512 columns of compute cells.
+pub const AIMC_ROWS: u64 = 1152;
+pub const AIMC_COLS: u64 = 512;
+/// Digital PE array: 16 x 16.
+pub const DIG_PE: u64 = 16;
+/// DIANA clock (260 MHz) for cycle -> time conversion.
+pub const F_CLK_HZ: f64 = 260e6;
+
+#[inline]
+fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// Paper Eq. 6: AIMC latency in cycles for `cout_a` assigned channels.
+/// First addend: compute passes; second: cell-programming DMA.
+pub fn lat_aimc(cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout_a: u64) -> u64 {
+    if cout_a == 0 {
+        return 0;
+    }
+    let tiles_in = ceil_div(cin * fx * fy, AIMC_ROWS);
+    let tiles_out = ceil_div(cout_a, AIMC_COLS);
+    tiles_in * tiles_out * ox * oy + 2 * 4 * cin * tiles_out
+}
+
+/// Paper Eq. 7: digital accelerator latency in cycles for `cout_d`
+/// assigned channels (16 output channels x 16 output rows per pass,
+/// plus the weight-load DMA term).
+pub fn lat_dig(cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout_d: u64) -> u64 {
+    if cout_d == 0 {
+        return 0;
+    }
+    ceil_div(cout_d, DIG_PE) * ceil_div(oy, DIG_PE) * cin * ox * fx * fy
+        + cin * cout_d * fx * fy
+}
+
+/// Depthwise conv (digital-only, per-channel dataflow) — mirrors
+/// `costmodel.layer_lats_dw_diana`.
+pub fn lat_dw(k: u64, ox: u64, oy: u64, cout: u64) -> u64 {
+    ceil_div(cout, DIG_PE) * ceil_div(oy, DIG_PE) * ox * k * k + cout * k * k
+}
+
+/// Per-accelerator latency of one mappable layer under a channel split.
+/// FC layers cost as 1x1 convs with 1x1 outputs (paper convention).
+pub fn layer_lats(node: &NodeDef, cout_d: u64, cout_a: u64) -> (u64, u64) {
+    let (oy, ox) = (node.out_hw.0 as u64, node.out_hw.1 as u64);
+    let (cin, k) = (node.cin as u64, node.k as u64);
+    (
+        lat_dig(cin, k, k, ox, oy, cout_d),
+        lat_aimc(cin, k, k, ox, oy, cout_a),
+    )
+}
+
+pub fn cycles_to_ms(cycles: u64) -> f64 {
+    cycles as f64 / F_CLK_HZ * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq7_hand_example() {
+        // cin=16, f=3, o=16x16, cout=32 (same as the python test)
+        let want = (32u64.div_ceil(16)) * (16u64.div_ceil(16)) * 16 * 16 * 9 + 16 * 32 * 9;
+        assert_eq!(lat_dig(16, 3, 3, 16, 16, 32), want);
+    }
+
+    #[test]
+    fn eq6_hand_example() {
+        let want = ((16 * 9u64).div_ceil(1152)) * (32u64.div_ceil(512)) * 256 + 8 * 16;
+        assert_eq!(lat_aimc(16, 3, 3, 16, 16, 32), want);
+    }
+
+    #[test]
+    fn zero_channels_cost_nothing() {
+        assert_eq!(lat_aimc(64, 3, 3, 8, 8, 0), 0);
+        assert_eq!(lat_dig(64, 3, 3, 8, 8, 0), 0);
+    }
+
+    #[test]
+    fn monotone_in_channels() {
+        for c in 1..512 {
+            assert!(lat_dig(64, 3, 3, 16, 16, c + 1) >= lat_dig(64, 3, 3, 16, 16, c));
+            assert!(lat_aimc(64, 3, 3, 16, 16, c + 1) >= lat_aimc(64, 3, 3, 16, 16, c));
+        }
+    }
+
+    #[test]
+    fn aimc_parallelism_dominates() {
+        // at full width the AIMC macro is >5x faster than the PE array
+        assert!(lat_aimc(64, 3, 3, 16, 16, 64) * 5 < lat_dig(64, 3, 3, 16, 16, 64));
+    }
+
+    #[test]
+    fn clock_conversion() {
+        let ms = cycles_to_ms(260_000);
+        assert!((ms - 1.0).abs() < 1e-9);
+    }
+}

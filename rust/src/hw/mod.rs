@@ -1,0 +1,18 @@
+//! DIANA SoC substrate: analytical accelerator models (paper Eq. 6/7),
+//! shared-L1 constraints, the cycle-approximate execution simulator, the
+//! utilization timeline (Fig. 6), energy integration (Eq. 4), and the
+//! abstract hardware models of Fig. 5.
+//!
+//! This module is the substitution for the physical DIANA chip — see
+//! DESIGN.md §Substitutions for the fidelity argument.
+
+pub mod abstracthw;
+pub mod energy;
+pub mod l1;
+pub mod latency;
+pub mod soc;
+pub mod timeline;
+
+pub use abstracthw::AbstractHw;
+pub use soc::{simulate, ChannelSplit, RunReport, SocConfig};
+pub use timeline::{Timeline, Unit, Utilization};

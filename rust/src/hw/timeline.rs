@@ -1,0 +1,225 @@
+//! Execution timeline — per-accelerator busy intervals over one
+//! end-to-end inference. This is the substrate behind Table I's
+//! "D./A. util." columns and the Fig.-6 utilization breakdown.
+
+use std::fmt::Write as _;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    Digital = 0,
+    Aimc = 1,
+}
+
+#[derive(Clone, Debug)]
+pub struct Interval {
+    pub unit: Unit,
+    pub layer: String,
+    pub start: u64, // cycles
+    pub end: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub intervals: Vec<Interval>,
+    pub total_cycles: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Utilization {
+    /// Fraction of total time each unit is busy (Table I "D./A. util.").
+    pub busy_frac: [f64; 2],
+    /// Fraction of total time both units are busy simultaneously
+    /// (the Fig.-6 "both working" share).
+    pub both_frac: f64,
+    /// Fraction with neither busy.
+    pub idle_frac: f64,
+}
+
+impl Timeline {
+    pub fn push(&mut self, unit: Unit, layer: &str, start: u64, end: u64) {
+        debug_assert!(end >= start);
+        if end > start {
+            self.intervals.push(Interval { unit, layer: layer.to_string(), start, end });
+        }
+        self.total_cycles = self.total_cycles.max(end);
+    }
+
+    /// Busy cycles of one unit (intervals of the same unit never overlap
+    /// in this scheduler: layers are sequential, sub-layers parallel
+    /// across units, not within one).
+    pub fn busy_cycles(&self, unit: Unit) -> u64 {
+        self.intervals
+            .iter()
+            .filter(|iv| iv.unit == unit)
+            .map(|iv| iv.end - iv.start)
+            .sum()
+    }
+
+    pub fn utilization(&self) -> Utilization {
+        if self.total_cycles == 0 {
+            return Utilization::default();
+        }
+        let t = self.total_cycles as f64;
+        let bd = self.busy_cycles(Unit::Digital) as f64;
+        let ba = self.busy_cycles(Unit::Aimc) as f64;
+        let both = self.overlap_cycles() as f64;
+        Utilization {
+            busy_frac: [bd / t, ba / t],
+            both_frac: both / t,
+            idle_frac: ((t - bd - ba + both) / t).max(0.0),
+        }
+    }
+
+    /// Cycles during which BOTH units are busy (sweep-line).
+    pub fn overlap_cycles(&self) -> u64 {
+        let mut dig: Vec<(u64, u64)> = self
+            .intervals
+            .iter()
+            .filter(|iv| iv.unit == Unit::Digital)
+            .map(|iv| (iv.start, iv.end))
+            .collect();
+        let mut aimc: Vec<(u64, u64)> = self
+            .intervals
+            .iter()
+            .filter(|iv| iv.unit == Unit::Aimc)
+            .map(|iv| (iv.start, iv.end))
+            .collect();
+        dig.sort_unstable();
+        aimc.sort_unstable();
+        let (mut i, mut j, mut total) = (0usize, 0usize, 0u64);
+        while i < dig.len() && j < aimc.len() {
+            let lo = dig[i].0.max(aimc[j].0);
+            let hi = dig[i].1.min(aimc[j].1);
+            if hi > lo {
+                total += hi - lo;
+            }
+            if dig[i].1 < aimc[j].1 {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        total
+    }
+
+    /// Per-layer (digital_busy, aimc_busy, span) in cycles — the Fig.-6
+    /// rows. Layers appear in first-seen order.
+    pub fn per_layer(&self) -> Vec<(String, u64, u64, u64)> {
+        let mut order: Vec<String> = Vec::new();
+        for iv in &self.intervals {
+            if !order.contains(&iv.layer) {
+                order.push(iv.layer.clone());
+            }
+        }
+        order
+            .into_iter()
+            .map(|layer| {
+                let mut d = 0;
+                let mut a = 0;
+                let mut lo = u64::MAX;
+                let mut hi = 0;
+                for iv in self.intervals.iter().filter(|iv| iv.layer == layer) {
+                    match iv.unit {
+                        Unit::Digital => d += iv.end - iv.start,
+                        Unit::Aimc => a += iv.end - iv.start,
+                    }
+                    lo = lo.min(iv.start);
+                    hi = hi.max(iv.end);
+                }
+                (layer, d, a, hi.saturating_sub(lo))
+            })
+            .collect()
+    }
+
+    /// ASCII rendering of the per-layer utilization (Fig.-6 substitute
+    /// for a plotting stack). One row per layer; '#' digital, '%' AIMC.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let mut out = String::new();
+        let t = self.total_cycles.max(1) as f64;
+        for iv in &self.intervals {
+            let pre = (iv.start as f64 / t * width as f64) as usize;
+            let len = (((iv.end - iv.start) as f64 / t) * width as f64).ceil() as usize;
+            let ch = match iv.unit {
+                Unit::Digital => '#',
+                Unit::Aimc => '%',
+            };
+            let _ = writeln!(
+                out,
+                "{:>10} {} |{}{}{}|",
+                iv.layer,
+                if iv.unit == Unit::Digital { "D" } else { "A" },
+                " ".repeat(pre.min(width)),
+                ch.to_string().repeat(len.clamp(1, width - pre.min(width))),
+                " ".repeat(width.saturating_sub(pre + len.max(1)))
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_parallel_layer() {
+        let mut tl = Timeline::default();
+        tl.push(Unit::Digital, "c1", 0, 100);
+        tl.push(Unit::Aimc, "c1", 0, 60);
+        let u = tl.utilization();
+        assert!((u.busy_frac[0] - 1.0).abs() < 1e-9);
+        assert!((u.busy_frac[1] - 0.6).abs() < 1e-9);
+        assert!((u.both_frac - 0.6).abs() < 1e-9);
+        assert!(u.idle_frac.abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_disjoint_is_zero() {
+        let mut tl = Timeline::default();
+        tl.push(Unit::Digital, "a", 0, 50);
+        tl.push(Unit::Aimc, "b", 50, 100);
+        assert_eq!(tl.overlap_cycles(), 0);
+        let u = tl.utilization();
+        assert!((u.busy_frac[0] - 0.5).abs() < 1e-9);
+        assert!(u.idle_frac.abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_gap_counted() {
+        let mut tl = Timeline::default();
+        tl.push(Unit::Digital, "a", 0, 25);
+        tl.push(Unit::Digital, "b", 75, 100);
+        let u = tl.utilization();
+        assert!((u.idle_frac - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_layer_rows() {
+        let mut tl = Timeline::default();
+        tl.push(Unit::Digital, "c1", 0, 100);
+        tl.push(Unit::Aimc, "c1", 0, 40);
+        tl.push(Unit::Digital, "c2", 100, 150);
+        let rows = tl.per_layer();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], ("c1".to_string(), 100, 40, 100));
+        assert_eq!(rows[1], ("c2".to_string(), 50, 0, 50));
+    }
+
+    #[test]
+    fn zero_len_intervals_skipped() {
+        let mut tl = Timeline::default();
+        tl.push(Unit::Aimc, "x", 10, 10);
+        assert!(tl.intervals.is_empty());
+        assert_eq!(tl.total_cycles, 10);
+    }
+
+    #[test]
+    fn ascii_render_has_rows() {
+        let mut tl = Timeline::default();
+        tl.push(Unit::Digital, "c1", 0, 10);
+        tl.push(Unit::Aimc, "c1", 0, 5);
+        let s = tl.render_ascii(40);
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.contains('#') && s.contains('%'));
+    }
+}

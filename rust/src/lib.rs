@@ -1,0 +1,30 @@
+//! # odimo — precision-aware DNN mapping on multi-accelerator SoCs
+//!
+//! Rust + JAX + Pallas reproduction of *"Precision-aware Latency and
+//! Energy Balancing on Multi-Accelerator Platforms for DNN Inference"*
+//! (Risso et al., 2023): the ODiMO one-shot differentiable mapping
+//! optimizer targeting the DIANA digital+analog-IMC edge SoC.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L1/L2 (build-time python)** — Pallas kernels + JAX supernet,
+//!   AOT-lowered to HLO-text artifacts by `make artifacts`.
+//! * **L3 (this crate)** — the coordinator: drives the AOT train/eval
+//!   executables over PJRT ([`runtime`]), runs the ODiMO pipeline
+//!   (pretrain → search → discretize → fine-tune → deploy,
+//!   [`coordinator`]), and deploys mappings on the DIANA SoC simulator
+//!   ([`hw`]). Python never runs on the request path.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod hw;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::Result;

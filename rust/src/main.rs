@@ -1,0 +1,205 @@
+//! `odimo` — CLI entrypoint (L3 leader).
+//!
+//! Subcommands map 1:1 to the paper's experiments plus utilities:
+//!   fig4 | fig5 | table1 | fig6   regenerate a table/figure
+//!   search                        one ODiMO run at a fixed lambda
+//!   simulate                      cost a mapping on the DIANA simulator
+//!   inspect                       print a model's geometry + cost table
+//! Common flags: --model, --config, --smoke.
+
+use anyhow::{anyhow, Result};
+
+use odimo::cli::Args;
+use odimo::config::RunConfig;
+use odimo::coordinator::{baselines, Pipeline, Regularizer, Schedule};
+use odimo::exp::{self, ExpContext};
+use odimo::hw::latency::layer_lats;
+use odimo::hw::soc::{simulate, SocConfig};
+use odimo::model::ALL_MODELS;
+use odimo::runtime::{ArtifactMeta, Runtime};
+use odimo::util::logging;
+
+const USAGE: &str = "\
+odimo — precision-aware DNN mapping on multi-accelerator SoCs (ODiMO)
+
+USAGE: odimo <command> [flags]
+
+COMMANDS
+  fig4      accuracy-vs-latency/energy Pareto sweep (paper Fig. 4)
+  fig5      abstract-hardware sweeps (paper Fig. 5)
+  table1    deployment table on the DIANA simulator (paper Table I)
+  fig6      per-layer utilization breakdown (paper Fig. 6)
+  search    single ODiMO run: --lambda <v> [--reg lat|en]
+  simulate  cost a mapping: --baseline <name> | --mapping <file.json>
+  inspect   print model geometry and per-layer cost bounds
+  help      this text
+
+FLAGS
+  --model <tinycnn|resnet20|resnet18s|mbv1_025>   (default resnet20)
+  --config <file.toml>      load a RunConfig
+  --artifacts <dir>         artifacts directory (default artifacts)
+  --results <dir>           results directory (default results)
+  --smoke                   tiny schedules (CI / smoke testing)
+  --lambdas <a,b,c>         override the sweep lambda list
+  --baseline <name>         all_8bit|all_ternary|io8_backbone_ternary|min_cost_lat|min_cost_en
+  --non-ideal-l1            enable L1 tiling penalties in the simulator
+";
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        if !ALL_MODELS.contains(&m) {
+            return Err(anyhow!("unknown model '{m}' (choose from {ALL_MODELS:?})"));
+        }
+        cfg.model = m.to_string();
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.into();
+    }
+    if let Some(d) = args.get("results") {
+        cfg.results_dir = d.into();
+    }
+    if args.has("smoke") {
+        cfg.schedule = Schedule::smoke();
+        cfg.lambdas = vec![1.0, 8.0];
+    }
+    if let Some(ls) = args.get("lambdas") {
+        cfg.lambdas = ls
+            .split(',')
+            .map(|s| s.trim().parse::<f32>().map_err(|_| anyhow!("bad lambda '{s}'")))
+            .collect::<Result<Vec<f32>>>()?;
+    }
+    if args.has("non-ideal-l1") {
+        cfg.non_ideal_l1 = true;
+    }
+    Ok(cfg)
+}
+
+const COMMON_FLAGS: [&str; 6] = ["model", "config", "artifacts", "results", "lambdas", "baseline"];
+const SWITCHES: [&str; 2] = ["smoke", "non-ideal-l1"];
+
+fn main() {
+    logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&SWITCHES)?;
+    match args.subcommand.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "fig4" => {
+            args.expect_only(&COMMON_FLAGS)?;
+            exp::fig4(&ExpContext::new(build_config(&args)?)?)
+        }
+        "fig5" => {
+            args.expect_only(&COMMON_FLAGS)?;
+            exp::fig5(&ExpContext::new(build_config(&args)?)?)
+        }
+        "table1" => {
+            args.expect_only(&COMMON_FLAGS)?;
+            exp::table1(&ExpContext::new(build_config(&args)?)?)
+        }
+        "fig6" => {
+            args.expect_only(&COMMON_FLAGS)?;
+            exp::fig6(&ExpContext::new(build_config(&args)?)?)
+        }
+        "search" => {
+            let mut flags = COMMON_FLAGS.to_vec();
+            flags.extend(["lambda", "reg"]);
+            args.expect_only(&flags)?;
+            let cfg = build_config(&args)?;
+            let lambda = args.get_f32("lambda")?.unwrap_or(0.5);
+            let reg = match args.get_or("reg", "en") {
+                "lat" => Regularizer::LatencyDiana,
+                "en" => Regularizer::EnergyDiana,
+                other => return Err(anyhow!("--reg must be lat|en, got '{other}'")),
+            };
+            let rt = Runtime::cpu()?;
+            let meta = ArtifactMeta::load(&cfg.artifacts_dir, &cfg.model)?;
+            let mut pipe = Pipeline::new(&rt, &meta, cfg.schedule);
+            pipe.data_seed = cfg.data_seed;
+            pipe.ckpt_dir = cfg.results_dir.clone();
+            let folded = pipe.pretrained_folded()?;
+            let p = pipe.search_point(&folded, reg, lambda)?;
+            println!(
+                "{}: acc {:.4} | {:.3} ms | {:.2} uJ | D/A util {:.1}%/{:.1}% | A.Ch {:.1}%",
+                p.label,
+                p.accuracy,
+                p.latency_ms,
+                p.energy_uj,
+                100.0 * p.util[0],
+                100.0 * p.util[1],
+                100.0 * p.aimc_channel_frac
+            );
+            Ok(())
+        }
+        "simulate" => {
+            let mut flags = COMMON_FLAGS.to_vec();
+            flags.push("mapping");
+            args.expect_only(&flags)?;
+            let cfg = build_config(&args)?;
+            let graph = odimo::model::build(&cfg.model)?;
+            let mapping = if let Some(file) = args.get("mapping") {
+                let text = std::fs::read_to_string(file)?;
+                odimo::coordinator::Mapping::from_json(&odimo::util::json::parse(&text)?)?
+            } else {
+                let name = args.get_or("baseline", "all_8bit");
+                baselines::by_name(&graph, name)
+                    .ok_or_else(|| anyhow!("unknown baseline '{name}'"))?
+            };
+            mapping.validate(&graph)?;
+            let rep = simulate(
+                &graph,
+                &mapping.channel_split(),
+                SocConfig { non_ideal_l1: cfg.non_ideal_l1 },
+            );
+            println!(
+                "{}: {:.3} ms | {:.2} uJ | {} cycles | D/A util {:.1}%/{:.1}% | A.Ch {:.1}%",
+                cfg.model,
+                rep.latency_ms,
+                rep.energy_uj,
+                rep.total_cycles,
+                100.0 * rep.util[0],
+                100.0 * rep.util[1],
+                100.0 * rep.aimc_channel_frac
+            );
+            Ok(())
+        }
+        "inspect" => {
+            args.expect_only(&COMMON_FLAGS)?;
+            let cfg = build_config(&args)?;
+            let graph = odimo::model::build(&cfg.model)?;
+            println!(
+                "{}: input {:?}, {} classes, {} nodes, {} mappable, {:.1} MMACs",
+                graph.name,
+                graph.input_shape,
+                graph.classes,
+                graph.nodes.len(),
+                graph.mappable().len(),
+                graph.total_macs() as f64 / 1e6
+            );
+            println!(
+                "{:<12} {:>5} {:>5} {:>3} {:>7} {:>12} {:>12}",
+                "layer", "cin", "cout", "k", "out", "lat_dig", "lat_aimc"
+            );
+            for n in graph.mappable() {
+                let (ld, la) = layer_lats(n, n.cout as u64, n.cout as u64);
+                println!(
+                    "{:<12} {:>5} {:>5} {:>3} {:>3}x{:<3} {:>12} {:>12}",
+                    n.name, n.cin, n.cout, n.k, n.out_hw.0, n.out_hw.1, ld, la
+                );
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' — try `odimo help`")),
+    }
+}

@@ -1,0 +1,186 @@
+//! Result accounting: Pareto-front extraction and report writers
+//! (markdown tables + CSV) for the experiment drivers.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::SearchPoint;
+
+/// Indices of the Pareto-optimal points maximizing accuracy while
+/// minimizing `cost(point)`. O(n log n).
+pub fn pareto_front(points: &[SearchPoint], cost: impl Fn(&SearchPoint) -> f64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // sort by cost ascending, accuracy descending for ties
+    idx.sort_by(|&a, &b| {
+        cost(&points[a])
+            .partial_cmp(&cost(&points[b]))
+            .unwrap()
+            .then(points[b].accuracy.partial_cmp(&points[a].accuracy).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for i in idx {
+        if points[i].accuracy > best_acc {
+            front.push(i);
+            best_acc = points[i].accuracy;
+        }
+    }
+    front
+}
+
+/// True iff `a` dominates `b` (better-or-equal on both axes, strictly
+/// better on one).
+pub fn dominates(a: &SearchPoint, b: &SearchPoint, cost: impl Fn(&SearchPoint) -> f64) -> bool {
+    let (ca, cb) = (cost(a), cost(b));
+    (a.accuracy >= b.accuracy && ca <= cb) && (a.accuracy > b.accuracy || ca < cb)
+}
+
+/// Markdown table in the Table-I column layout.
+pub fn table_markdown(title: &str, points: &[SearchPoint]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(s, "| Network | Acc. | lat. [ms] | E. [uJ] | D./A. util. | A. Ch. |");
+    let _ = writeln!(s, "|---------|------|-----------|---------|-------------|--------|");
+    for p in points {
+        let _ = writeln!(
+            s,
+            "| {} | {:.2} | {:.3} | {:.2} | {:.1}% / {:.1}% | {:.1}% |",
+            p.label,
+            100.0 * p.accuracy,
+            p.latency_ms,
+            p.energy_uj,
+            100.0 * p.util[0],
+            100.0 * p.util[1],
+            100.0 * p.aimc_channel_frac,
+        );
+    }
+    s
+}
+
+/// CSV rows (for plotting the Fig.-4/5 scatter externally).
+pub fn points_csv(points: &[SearchPoint]) -> String {
+    let mut s = String::from(
+        "label,lambda,accuracy,latency_ms,energy_uj,total_cycles,util_dig,util_aimc,aimc_ch_frac\n",
+    );
+    for p in points {
+        let _ = writeln!(
+            s,
+            "{},{},{:.6},{:.6},{:.4},{},{:.4},{:.4},{:.4}",
+            p.label,
+            p.lambda,
+            p.accuracy,
+            p.latency_ms,
+            p.energy_uj,
+            p.total_cycles,
+            p.util[0],
+            p.util[1],
+            p.aimc_channel_frac
+        );
+    }
+    s
+}
+
+pub fn write_results(dir: &Path, name: &str, md: &str, csv: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.md")), md)?;
+    std::fs::write(dir.join(format!("{name}.csv")), csv)?;
+    Ok(())
+}
+
+/// ASCII scatter of accuracy (y) vs cost (x, log-scale) — the terminal
+/// rendering of a Fig.-4 panel.
+pub fn ascii_scatter(points: &[SearchPoint], cost: impl Fn(&SearchPoint) -> f64,
+                     width: usize, height: usize) -> String {
+    if points.is_empty() {
+        return String::from("(no points)\n");
+    }
+    let xs: Vec<f64> = points.iter().map(|p| cost(p).max(1e-12).log10()).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.accuracy).collect();
+    let (x0, x1) = xs.iter().fold((f64::MAX, f64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+    let (y0, y1) = ys.iter().fold((f64::MAX, f64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+    let xr = (x1 - x0).max(1e-9);
+    let yr = (y1 - y0).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    for (i, p) in points.iter().enumerate() {
+        let cx = ((xs[i] - x0) / xr * (width - 1) as f64) as usize;
+        let cy = height - 1 - ((ys[i] - y0) / yr * (height - 1) as f64) as usize;
+        let ch = if p.label.starts_with("odimo") { 'o' } else { 'B' };
+        grid[cy][cx] = ch;
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "acc {:.3} ─ {:.3}   cost(log10) {:.2} ─ {:.2}   o=ODiMO B=baseline",
+                     y0, y1, x0, x1);
+    for row in grid {
+        let _ = writeln!(s, "|{}|", row.into_iter().collect::<String>());
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Mapping;
+    use std::collections::BTreeMap;
+
+    fn pt(label: &str, acc: f64, lat: f64) -> SearchPoint {
+        SearchPoint {
+            label: label.into(),
+            lambda: 0.0,
+            accuracy: acc,
+            latency_ms: lat,
+            energy_uj: lat * 10.0,
+            total_cycles: (lat * 1000.0) as u64,
+            util: [1.0, 0.0],
+            aimc_channel_frac: 0.0,
+            mapping: Mapping { assign: BTreeMap::new() },
+        }
+    }
+
+    #[test]
+    fn pareto_extraction() {
+        let pts = vec![
+            pt("a", 0.9, 10.0),
+            pt("b", 0.8, 5.0),
+            pt("c", 0.7, 8.0),  // dominated by b
+            pt("d", 0.95, 20.0),
+        ];
+        let f = pareto_front(&pts, |p| p.latency_ms);
+        let labels: Vec<&str> = f.iter().map(|&i| pts[i].label.as_str()).collect();
+        assert_eq!(labels, vec!["b", "a", "d"]);
+    }
+
+    #[test]
+    fn dominance() {
+        let a = pt("a", 0.9, 5.0);
+        let b = pt("b", 0.8, 10.0);
+        assert!(dominates(&a, &b, |p| p.latency_ms));
+        assert!(!dominates(&b, &a, |p| p.latency_ms));
+        assert!(!dominates(&a, &a, |p| p.latency_ms));
+    }
+
+    #[test]
+    fn markdown_has_all_rows() {
+        let pts = vec![pt("all_8bit", 0.9, 1.55), pt("odimo_0.5", 0.89, 1.0)];
+        let md = table_markdown("t", &pts);
+        assert!(md.contains("all_8bit") && md.contains("odimo_0.5"));
+        assert_eq!(md.lines().count(), 2 + 2 + 2);
+    }
+
+    #[test]
+    fn csv_parses_back() {
+        let pts = vec![pt("x", 0.5, 2.0)];
+        let csv = points_csv(&pts);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1].split(',').count(), 9);
+    }
+
+    #[test]
+    fn scatter_renders() {
+        let pts = vec![pt("a", 0.9, 10.0), pt("odimo_1", 0.8, 1.0)];
+        let s = ascii_scatter(&pts, |p| p.latency_ms, 40, 10);
+        assert!(s.contains('o') && s.contains('B'));
+    }
+}

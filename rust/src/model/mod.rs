@@ -1,0 +1,492 @@
+//! DNN graph IR — the rust mirror of `python/compile/models.py`.
+//!
+//! Two construction paths that must agree (pinned by
+//! `rust/tests/model_parity.rs`):
+//!   * native builders ([`tinycnn`], [`resnet20`], [`resnet18s`],
+//!     [`mbv1_025`]) — used by the simulator, baselines and benches
+//!     without touching artifacts;
+//!   * [`Graph::from_meta`] — parsed from the `<model>_meta.json`
+//!     artifact, the source of truth for anything driving the AOT
+//!     executables.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+pub const N_ACC: usize = 2;
+pub const DIG: usize = 0;
+pub const AIMC: usize = 1;
+pub const BITS: [u32; N_ACC] = [8, 2];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Input,
+    Conv,
+    DwConv,
+    Add,
+    Gap,
+    Fc,
+}
+
+impl Op {
+    pub fn parse(s: &str) -> Result<Op> {
+        Ok(match s {
+            "input" => Op::Input,
+            "conv" => Op::Conv,
+            "dwconv" => Op::DwConv,
+            "add" => Op::Add,
+            "gap" => Op::Gap,
+            "fc" => Op::Fc,
+            _ => return Err(anyhow!("unknown op '{s}'")),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct NodeDef {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<String>,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+    pub in_hw: (usize, usize),
+    pub out_hw: (usize, usize),
+}
+
+impl NodeDef {
+    pub fn mappable(&self) -> bool {
+        matches!(self.op, Op::Conv | Op::Fc)
+    }
+
+    /// MAC count (python `ModelDef.macs` mirror).
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            Op::Conv => {
+                (self.cin * self.k * self.k * self.cout * self.out_hw.0 * self.out_hw.1)
+                    as u64
+            }
+            Op::DwConv => (self.cout * self.k * self.k * self.out_hw.0 * self.out_hw.1) as u64,
+            Op::Fc => (self.cin * self.cout) as u64,
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub input_shape: (usize, usize, usize), // (C, H, W)
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub nodes: Vec<NodeDef>,
+}
+
+impl Graph {
+    pub fn node(&self, name: &str) -> Option<&NodeDef> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Mappable (conv/fc) nodes in topological (definition) order.
+    pub fn mappable(&self) -> Vec<&NodeDef> {
+        self.nodes.iter().filter(|n| n.mappable()).collect()
+    }
+
+    /// Mappable node names in *sorted* order — the flat order of the
+    /// `assign:` inputs in the AOT graphs (python `assign_names`).
+    pub fn mappable_sorted(&self) -> Vec<&NodeDef> {
+        let mut v = self.mappable();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.macs()).sum()
+    }
+
+    /// The (unique) consumer nodes of `name`'s activation output.
+    pub fn consumers(&self, name: &str) -> Vec<&NodeDef> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.iter().any(|i| i == name))
+            .collect()
+    }
+
+    // ---- construction from artifact metadata --------------------------
+
+    pub fn from_meta(meta: &Json) -> Result<Graph> {
+        let m = meta.req("model")?;
+        let ishape = m.req("input_shape")?.usize_vec()?;
+        let nodes = m
+            .req("nodes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("nodes not array"))?
+            .iter()
+            .map(|n| -> Result<NodeDef> {
+                let in_hw = n.req("in_hw")?.usize_vec()?;
+                let out_hw = n.req("out_hw")?.usize_vec()?;
+                Ok(NodeDef {
+                    name: n.req("name")?.as_str().unwrap_or("").to_string(),
+                    op: Op::parse(n.req("op")?.as_str().unwrap_or(""))?,
+                    inputs: n
+                        .req("inputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect(),
+                    cin: n.req("cin")?.as_usize().unwrap_or(0),
+                    cout: n.req("cout")?.as_usize().unwrap_or(0),
+                    k: n.req("k")?.as_usize().unwrap_or(1),
+                    stride: n.req("stride")?.as_usize().unwrap_or(1),
+                    pad: n.req("pad")?.as_usize().unwrap_or(0),
+                    relu: n.req("relu")?.as_bool().unwrap_or(true),
+                    in_hw: (in_hw[0], in_hw[1]),
+                    out_hw: (out_hw[0], out_hw[1]),
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .context("parsing node table")?;
+        Ok(Graph {
+            name: m.req("name")?.as_str().unwrap_or("").to_string(),
+            input_shape: (ishape[0], ishape[1], ishape[2]),
+            classes: m.req("classes")?.as_usize().unwrap_or(0),
+            train_batch: m.req("train_batch")?.as_usize().unwrap_or(32),
+            eval_batch: m.req("eval_batch")?.as_usize().unwrap_or(128),
+            nodes,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native builders (python models.py mirror)
+// ---------------------------------------------------------------------------
+
+struct Builder {
+    nodes: Vec<NodeDef>,
+    shapes: Vec<(String, (usize, usize, usize))>, // name -> (C, H, W)
+    classes: usize,
+}
+
+impl Builder {
+    fn new(input: (usize, usize, usize), classes: usize) -> Self {
+        let mut b = Builder { nodes: Vec::new(), shapes: Vec::new(), classes };
+        b.nodes.push(NodeDef {
+            name: "in".into(),
+            op: Op::Input,
+            inputs: vec![],
+            cin: 0,
+            cout: input.0,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            relu: true,
+            in_hw: (input.1, input.2),
+            out_hw: (input.1, input.2),
+        });
+        b.shapes.push(("in".into(), input));
+        b
+    }
+
+    fn shape_of(&self, name: &str) -> (usize, usize, usize) {
+        self.shapes
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown node '{name}'"))
+            .1
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv(&mut self, name: &str, input: &str, cout: usize, k: usize,
+            stride: usize, pad: usize, relu: bool) {
+        let (c, h, w) = self.shape_of(input);
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        self.nodes.push(NodeDef {
+            name: name.into(),
+            op: Op::Conv,
+            inputs: vec![input.into()],
+            cin: c,
+            cout,
+            k,
+            stride,
+            pad,
+            relu,
+            in_hw: (h, w),
+            out_hw: (oh, ow),
+        });
+        self.shapes.push((name.into(), (cout, oh, ow)));
+    }
+
+    fn dwconv(&mut self, name: &str, input: &str, k: usize, stride: usize, pad: usize) {
+        let (c, h, w) = self.shape_of(input);
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        self.nodes.push(NodeDef {
+            name: name.into(),
+            op: Op::DwConv,
+            inputs: vec![input.into()],
+            cin: c,
+            cout: c,
+            k,
+            stride,
+            pad,
+            relu: true,
+            in_hw: (h, w),
+            out_hw: (oh, ow),
+        });
+        self.shapes.push((name.into(), (c, oh, ow)));
+    }
+
+    fn add(&mut self, name: &str, a: &str, b: &str) {
+        let sa = self.shape_of(a);
+        assert_eq!(sa, self.shape_of(b), "add shape mismatch at {name}");
+        self.nodes.push(NodeDef {
+            name: name.into(),
+            op: Op::Add,
+            inputs: vec![a.into(), b.into()],
+            cin: sa.0,
+            cout: sa.0,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            relu: true,
+            in_hw: (sa.1, sa.2),
+            out_hw: (sa.1, sa.2),
+        });
+        self.shapes.push((name.into(), sa));
+    }
+
+    fn gap(&mut self, name: &str, input: &str) {
+        let (c, h, w) = self.shape_of(input);
+        self.nodes.push(NodeDef {
+            name: name.into(),
+            op: Op::Gap,
+            inputs: vec![input.into()],
+            cin: c,
+            cout: c,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            relu: true,
+            in_hw: (h, w),
+            out_hw: (1, 1),
+        });
+        self.shapes.push((name.into(), (c, 1, 1)));
+    }
+
+    fn fc(&mut self, name: &str, input: &str) {
+        let (c, _, _) = self.shape_of(input);
+        self.nodes.push(NodeDef {
+            name: name.into(),
+            op: Op::Fc,
+            inputs: vec![input.into()],
+            cin: c,
+            cout: self.classes,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            relu: true,
+            in_hw: (1, 1),
+            out_hw: (1, 1),
+        });
+        self.shapes.push((name.into(), (self.classes, 1, 1)));
+    }
+
+    /// ResNet basic block (python `_basic_block` mirror).
+    fn basic_block(&mut self, idx: usize, x: &str, cin: usize, cout: usize,
+                   stride: usize) -> String {
+        let c1 = format!("b{idx}_conv1");
+        let c2 = format!("b{idx}_conv2");
+        self.conv(&c1, x, cout, 3, stride, 1, true);
+        self.conv(&c2, &c1, cout, 3, 1, 1, false);
+        let skip = if stride != 1 || cin != cout {
+            let sk = format!("b{idx}_down");
+            self.conv(&sk, x, cout, 1, stride, 0, false);
+            sk
+        } else {
+            x.to_string()
+        };
+        let out = format!("b{idx}_add");
+        self.add(&out, &c2, &skip);
+        out
+    }
+
+    fn finish(self, name: &str, input: (usize, usize, usize), train_batch: usize,
+              eval_batch: usize) -> Graph {
+        Graph {
+            name: name.into(),
+            input_shape: input,
+            classes: self.classes,
+            train_batch,
+            eval_batch,
+            nodes: self.nodes,
+        }
+    }
+}
+
+/// 3-conv test model (python `tinycnn` mirror).
+pub fn tinycnn() -> Graph {
+    let input = (3, 16, 16);
+    let mut b = Builder::new(input, 10);
+    b.conv("stem", "in", 8, 3, 1, 1, true);
+    b.conv("c1", "stem", 16, 3, 2, 1, true);
+    b.conv("c2", "c1", 16, 3, 1, 1, false);
+    b.add("res", "c2", "c1");
+    b.gap("gap", "res");
+    b.fc("fc", "gap");
+    b.finish("tinycnn", input, 32, 128)
+}
+
+/// ResNet20 / CIFAR-10 (the paper's reference model).
+pub fn resnet20() -> Graph {
+    let input = (3, 32, 32);
+    let mut b = Builder::new(input, 10);
+    b.conv("stem", "in", 16, 3, 1, 1, true);
+    let mut x = "stem".to_string();
+    let mut cin = 16;
+    let mut idx = 0;
+    for (stage, cout) in [16usize, 32, 64].into_iter().enumerate() {
+        for blk in 0..3 {
+            let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+            x = b.basic_block(idx, &x, cin, cout, stride);
+            cin = cout;
+            idx += 1;
+        }
+    }
+    b.gap("gap", &x);
+    b.fc("fc", "gap");
+    b.finish("resnet20", input, 64, 256)
+}
+
+/// Width-0.25x ResNet18 on 64x64 (TinyImageNet substitution).
+pub fn resnet18s() -> Graph {
+    let input = (3, 64, 64);
+    let mut b = Builder::new(input, 24);
+    b.conv("stem", "in", 16, 3, 1, 1, true);
+    let mut x = "stem".to_string();
+    let mut cin = 16;
+    let mut idx = 0;
+    for (stage, cout) in [16usize, 32, 64, 128].into_iter().enumerate() {
+        for blk in 0..2 {
+            let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+            x = b.basic_block(idx, &x, cin, cout, stride);
+            cin = cout;
+            idx += 1;
+        }
+    }
+    b.gap("gap", &x);
+    b.fc("fc", "gap");
+    b.finish("resnet18s", input, 32, 128)
+}
+
+/// MobileNetV1 0.25x on 96x96 (VWW).
+pub fn mbv1_025() -> Graph {
+    fn ch(c: usize) -> usize {
+        ((c as f64 * 0.25) as usize).max(8)
+    }
+    let input = (3, 96, 96);
+    let mut b = Builder::new(input, 2);
+    b.conv("stem", "in", ch(32), 3, 2, 1, true);
+    let cfg: [(usize, usize); 13] = [
+        (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+        (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2),
+        (1024, 1),
+    ];
+    let mut x = "stem".to_string();
+    for (i, (cout, stride)) in cfg.into_iter().enumerate() {
+        let dw = format!("dw{i}");
+        let pw = format!("pw{i}");
+        b.dwconv(&dw, &x, 3, stride, 1);
+        b.conv(&pw, &dw, ch(cout), 1, 1, 0, true);
+        x = pw;
+    }
+    b.gap("gap", &x);
+    b.fc("fc", "gap");
+    b.finish("mbv1_025", input, 32, 128)
+}
+
+/// Builder registry (CLI `--model`).
+pub fn build(name: &str) -> Result<Graph> {
+    Ok(match name {
+        "tinycnn" => tinycnn(),
+        "resnet20" => resnet20(),
+        "resnet18s" => resnet18s(),
+        "mbv1_025" => mbv1_025(),
+        _ => return Err(anyhow!("unknown model '{name}'")),
+    })
+}
+
+pub const ALL_MODELS: [&str; 4] = ["tinycnn", "resnet20", "resnet18s", "mbv1_025"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet20_structure() {
+        let g = resnet20();
+        let convs = g.nodes.iter().filter(|n| n.op == Op::Conv).count();
+        assert_eq!(convs, 21); // stem + 18 block + 2 downsample
+        assert_eq!(g.mappable().len(), 22); // + fc
+        assert_eq!(g.node("fc").unwrap().cin, 64);
+    }
+
+    #[test]
+    fn tinycnn_shapes() {
+        let g = tinycnn();
+        let c1 = g.node("c1").unwrap();
+        assert_eq!(c1.out_hw, (8, 8));
+        assert_eq!(g.node("res").unwrap().cout, 16);
+    }
+
+    #[test]
+    fn mbv1_structure() {
+        let g = mbv1_025();
+        assert_eq!(g.nodes.iter().filter(|n| n.op == Op::DwConv).count(), 13);
+        assert_eq!(g.node("pw12").unwrap().cout, 256);
+        assert_eq!(g.node("stem").unwrap().cout, 8);
+        // dwconvs are not mappable
+        assert!(g.mappable().iter().all(|n| n.op != Op::DwConv));
+    }
+
+    #[test]
+    fn resnet18s_stage_dims() {
+        let g = resnet18s();
+        assert_eq!(g.node("b7_add").unwrap().cout, 128);
+        assert_eq!(g.node("b7_add").unwrap().out_hw, (8, 8));
+    }
+
+    #[test]
+    fn macs_positive_and_consistent() {
+        for name in ALL_MODELS {
+            let g = build(name).unwrap();
+            assert!(g.total_macs() > 0);
+            for n in g.mappable() {
+                assert!(n.macs() > 0, "{}/{}", name, n.name);
+            }
+        }
+    }
+
+    #[test]
+    fn consumers_found() {
+        let g = tinycnn();
+        let cons = g.consumers("c1");
+        // c1 feeds c2 and the residual add
+        let names: Vec<_> = cons.iter().map(|n| n.name.as_str()).collect();
+        assert!(names.contains(&"c2") && names.contains(&"res"));
+    }
+
+    #[test]
+    fn mappable_sorted_is_sorted() {
+        let g = resnet20();
+        let names: Vec<_> = g.mappable_sorted().iter().map(|n| n.name.clone()).collect();
+        let mut s = names.clone();
+        s.sort();
+        assert_eq!(names, s);
+    }
+}

@@ -1,0 +1,226 @@
+//! Quantization math (rust mirror of `python/compile/quantize.py`) and
+//! the integer reference convolution used to cross-check deployments.
+//!
+//! The deploy path executes DIANA-format integer arithmetic: int8 weight
+//! codes on the digital accelerator, ternary codes on the AIMC macro,
+//! 8-/7-bit unsigned activation codes. `qconv2d` / `qfc` compute in i64
+//! (exact), so they certify that the partitioned network the simulator
+//! "runs" is numerically the network the JAX deploy graph evaluates.
+
+pub mod infer;
+
+pub use infer::QuantNet;
+
+use crate::tensor::Tensor;
+
+/// Round half to even — the rounding mode of `jnp.round` (and the XLA
+/// round-nearest-even op the AOT graphs execute). Rust's `f32::round`
+/// rounds half away from zero, which diverges on quantization grids
+/// where exact .5 products occur; every quantizer here must match the
+/// graphs bit-for-bit.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - x.signum()
+    } else {
+        r
+    }
+}
+
+/// Symmetric fake-quantization, paper Eq. 5 with pre-normalization.
+/// `scale` is e^s; n_bits=2 ternarizes, n_bits=8 is int8.
+pub fn fake_quant(x: f32, scale: f32, n_bits: u32) -> f32 {
+    let levels = ((1i64 << (n_bits - 1)) - 1) as f32;
+    let v = (x / scale).clamp(-1.0, 1.0);
+    scale / levels * round_half_even(levels * v)
+}
+
+/// Integer code of `fake_quant` (in [-L, L]); `q = code * scale / L`.
+pub fn weight_code(x: f32, scale: f32, n_bits: u32) -> i8 {
+    let levels = ((1i64 << (n_bits - 1)) - 1) as f32;
+    let v = (x / scale).clamp(-1.0, 1.0);
+    round_half_even(levels * v) as i8
+}
+
+/// Unsigned activation code on `n_bits` (post-ReLU tensors):
+/// `code = round(L * clip(x / scale, 0, 1))`, L = 2^n - 1.
+pub fn act_code(x: f32, scale: f32, n_bits: u32) -> u8 {
+    let levels = ((1u32 << n_bits) - 1) as f32;
+    let v = (x / scale).clamp(0.0, 1.0);
+    round_half_even(levels * v) as u8
+}
+
+/// Dequantize an activation code.
+pub fn act_decode(code: u8, scale: f32, n_bits: u32) -> f32 {
+    let levels = ((1u32 << n_bits) - 1) as f32;
+    scale / levels * code as f32
+}
+
+/// Quantize a whole weight tensor to codes, leading axis = out channel.
+pub fn quantize_weights(w: &Tensor, scale: f32, n_bits: u32) -> Vec<i8> {
+    w.data().iter().map(|&v| weight_code(v, scale, n_bits)).collect()
+}
+
+/// Per-tensor fake-quantized copy (float values on the grid).
+pub fn fake_quant_tensor(w: &Tensor, scale: f32, n_bits: u32) -> Tensor {
+    Tensor::from_vec(
+        w.shape(),
+        w.data().iter().map(|&v| fake_quant(v, scale, n_bits)).collect(),
+    )
+}
+
+/// Exact integer conv2d over code tensors (NCHW x OIHW, i64 accum).
+///
+/// `x` codes are unsigned activations, `w` codes signed weights; output
+/// is the raw integer accumulator per (n, co, oy, ox). The caller
+/// rescales by `act_scale/act_L * w_scale/w_L` and adds the float bias.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d(
+    x: &[u8],
+    xs: (usize, usize, usize, usize), // (N, C, H, W)
+    w: &[i8],
+    ws: (usize, usize, usize, usize), // (O, I, KH, KW)
+    stride: usize,
+    pad: usize,
+) -> Vec<i64> {
+    let (n, c, h, wd) = xs;
+    let (o, i, kh, kw) = ws;
+    assert_eq!(c, i, "cin mismatch");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = vec![0i64; n * o * oh * ow];
+    for b in 0..n {
+        for co in 0..o {
+            let wbase = co * i * kh * kw;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i64;
+                    for ci in 0..c {
+                        let xbase = (b * c + ci) * h * wd;
+                        let wrow = wbase + ci * kh * kw;
+                        for ky in 0..kh {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                let xv = x[xbase + iy as usize * wd + ix as usize] as i64;
+                                let wv = w[wrow + ky * kw + kx] as i64;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    out[((b * o + co) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Exact integer fully-connected: x (N, I) codes, w (O, I) codes.
+pub fn qfc(x: &[u8], n: usize, i: usize, w: &[i8], o: usize) -> Vec<i64> {
+    let mut out = vec![0i64; n * o];
+    for b in 0..n {
+        for co in 0..o {
+            let mut acc = 0i64;
+            for ci in 0..i {
+                acc += x[b * i + ci] as i64 * w[co * i + ci] as i64;
+            }
+            out[b * o + co] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_quant_grid_int8() {
+        let s = 0.7;
+        for &x in &[-3.0f32, -0.5, 0.0, 0.31, 0.69, 2.0] {
+            let q = fake_quant(x, s, 8);
+            let code = q * 127.0 / s;
+            assert!((code - code.round()).abs() < 1e-4, "x={x} q={q}");
+            assert!(q.abs() <= s + 1e-6);
+        }
+    }
+
+    #[test]
+    fn ternary_three_values() {
+        let s = 0.5;
+        for x in (-20..=20).map(|i| i as f32 * 0.1) {
+            let c = weight_code(x, s, 2);
+            assert!((-1..=1).contains(&c), "x={x} c={c}");
+            let q = fake_quant(x, s, 2);
+            assert!((q - c as f32 * s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn code_and_fake_quant_agree() {
+        let s = 1.3;
+        for i in -400..400 {
+            let x = i as f32 * 0.01;
+            let q = fake_quant(x, s, 8);
+            let c = weight_code(x, s, 8);
+            assert!((q - c as f32 * s / 127.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn act_code_range() {
+        for n in [7u32, 8] {
+            assert_eq!(act_code(-1.0, 1.0, n), 0);
+            assert_eq!(act_code(2.0, 1.0, n), ((1u32 << n) - 1) as u8);
+            let mid = act_code(0.5, 1.0, n);
+            let dec = act_decode(mid, 1.0, n);
+            assert!((dec - 0.5).abs() < 1.0 / (1 << n) as f32);
+        }
+    }
+
+    #[test]
+    fn qconv_identity_kernel() {
+        // 1x1 kernel with weight code 1 and unit scales = passthrough
+        let x: Vec<u8> = (0..9).map(|v| v as u8).collect();
+        let w = vec![1i8];
+        let out = qconv2d(&x, (1, 1, 3, 3), &w, (1, 1, 1, 1), 1, 0);
+        assert_eq!(out, (0..9).map(|v| v as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn qconv_padding_and_stride() {
+        // 3x3 ones kernel over 3x3 ones image, pad 1 stride 2: every
+        // stride-2 tap sees a 2x2 valid corner window -> all outputs 4.
+        let x = vec![1u8; 9];
+        let w = vec![1i8; 9];
+        let out = qconv2d(&x, (1, 1, 3, 3), &w, (1, 1, 3, 3), 2, 1);
+        assert_eq!(out, vec![4i64; 4]);
+    }
+
+    #[test]
+    fn qconv_center_full_window() {
+        // stride 1 pad 1: the center tap of a 3x3 ones/ones conv is 9
+        let x = vec![1u8; 9];
+        let w = vec![1i8; 9];
+        let out = qconv2d(&x, (1, 1, 3, 3), &w, (1, 1, 3, 3), 1, 1);
+        assert_eq!(out[4], 9);
+        assert_eq!(out[0], 4);
+        assert_eq!(out[1], 6);
+    }
+
+    #[test]
+    fn qfc_matches_manual() {
+        let x = vec![1u8, 2, 3, 4, 5, 6]; // 2x3
+        let w = vec![1i8, 0, -1, 2, 2, 2]; // 2x3
+        let out = qfc(&x, 2, 3, &w, 2);
+        assert_eq!(out, vec![1 - 3, 2 * (1 + 2 + 3), 4 - 6, 2 * 15]);
+    }
+}

@@ -1,0 +1,267 @@
+//! Artifact metadata — the contract `python/compile/aot.py` writes next
+//! to every HLO file (`<model>_meta.json`): flat parameter order, per-
+//! graph input/output signatures, node table, hw calibration constants.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::Graph;
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorMeta {
+            name: v.req("name")?.as_str().unwrap_or("").to_string(),
+            shape: v.req("shape")?.usize_vec()?,
+            dtype: match v.req("dtype")?.as_str() {
+                Some("f32") => Dtype::F32,
+                Some("s32") => Dtype::S32,
+                other => return Err(anyhow!("unsupported dtype {other:?}")),
+            },
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+impl GraphMeta {
+    /// Index of the input named `name` (exact match).
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("graph {}: no input '{name}'", self.name))
+    }
+
+    /// Indices of inputs whose name starts with `prefix` (e.g. "param:").
+    pub fn input_range(&self, prefix: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.name.starts_with(prefix))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Hardware calibration constants exported by the python cost model —
+/// asserted against the rust mirrors in tests/model_parity.rs.
+#[derive(Clone, Debug)]
+pub struct HwMeta {
+    pub p_act: [f64; 2],
+    pub p_idle: [f64; 2],
+    pub f_clk_hz: f64,
+    pub aimc_rows: u64,
+    pub aimc_cols: u64,
+    pub dig_pe: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub model: Graph,
+    /// Flat parameter leaves ("node/leaf") in HLO parameter order.
+    pub params: Vec<TensorMeta>,
+    /// Mappable node names in assign-input order (sorted).
+    pub mappable: Vec<String>,
+    pub graphs: BTreeMap<String, GraphMeta>,
+    pub hw: HwMeta,
+    pub norm_lat0: f64,
+    pub norm_en0: f64,
+    pub init_seed: u64,
+    pub init_bin: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Load `<dir>/<model>_meta.json`.
+    pub fn load(dir: &Path, model: &str) -> Result<Self> {
+        let path = dir.join(format!("{model}_meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v, dir, model)
+    }
+
+    pub fn from_json(v: &Json, dir: &Path, model: &str) -> Result<Self> {
+        let graph = Graph::from_meta(v)?;
+        let params = v
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not array"))?
+            .iter()
+            .map(TensorMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mappable = v
+            .req("mappable")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_str().map(String::from))
+            .collect();
+        let mut graphs = BTreeMap::new();
+        for (gname, g) in v.req("graphs")?.as_obj().ok_or_else(|| anyhow!("graphs"))? {
+            let inputs = g
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = g
+                .req("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            graphs.insert(
+                gname.clone(),
+                GraphMeta {
+                    name: gname.clone(),
+                    file: dir.join(g.req("file")?.as_str().unwrap_or("")),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let hw = v.req("hw")?;
+        let pa = hw.req("p_act")?.as_arr().unwrap_or(&[]).to_vec();
+        let pi = hw.req("p_idle")?.as_arr().unwrap_or(&[]).to_vec();
+        Ok(ArtifactMeta {
+            model: graph,
+            params,
+            mappable,
+            graphs,
+            hw: HwMeta {
+                p_act: [pa[0].as_f64().unwrap_or(0.0), pa[1].as_f64().unwrap_or(0.0)],
+                p_idle: [pi[0].as_f64().unwrap_or(0.0), pi[1].as_f64().unwrap_or(0.0)],
+                f_clk_hz: hw.req("f_clk_hz")?.as_f64().unwrap_or(0.0),
+                aimc_rows: hw.req("aimc_rows")?.as_i64().unwrap_or(0) as u64,
+                aimc_cols: hw.req("aimc_cols")?.as_i64().unwrap_or(0) as u64,
+                dig_pe: hw.req("dig_pe")?.as_i64().unwrap_or(0) as u64,
+            },
+            norm_lat0: v.req("norm")?.req("lat0")?.as_f64().unwrap_or(0.0),
+            norm_en0: v.req("norm")?.req("en0")?.as_f64().unwrap_or(0.0),
+            init_seed: v.req("init_seed")?.as_i64().unwrap_or(0) as u64,
+            init_bin: dir.join(format!("{model}_init.bin")),
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphMeta> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("model {}: no graph '{name}'", self.model.name))
+    }
+
+    pub fn param_index(&self, leaf: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|t| t.name == leaf)
+            .ok_or_else(|| anyhow!("no param leaf '{leaf}'"))
+    }
+
+    /// Read the python-initialized parameter values (flat f32 blob in
+    /// leaf order) into per-leaf vectors.
+    pub fn load_init_values(&self) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(&self.init_bin)
+            .with_context(|| format!("reading {}", self.init_bin.display()))?;
+        let total: usize = self.params.iter().map(|p| p.elems()).sum();
+        if bytes.len() != total * 4 {
+            return Err(anyhow!(
+                "init blob {} bytes, expected {} ({} elems)",
+                bytes.len(),
+                total * 4,
+                total
+            ));
+        }
+        let mut off = 0usize;
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let n = p.elems();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_tinycnn_meta() {
+        let dir = art_dir();
+        if !dir.join("tinycnn_meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactMeta::load(&dir, "tinycnn").unwrap();
+        assert_eq!(m.model.name, "tinycnn");
+        assert!(m.graphs.contains_key("train_float"));
+        assert!(m.graphs.contains_key("train_search_en"));
+        // param order matches sorted node/leaf names
+        let mut sorted = m.params.clone();
+        sorted.sort_by(|a, b| a.name.cmp(&b.name));
+        assert_eq!(
+            m.params.iter().map(|p| &p.name).collect::<Vec<_>>(),
+            sorted.iter().map(|p| &p.name).collect::<Vec<_>>()
+        );
+        // init blob parses and matches shapes
+        let init = m.load_init_values().unwrap();
+        assert_eq!(init.len(), m.params.len());
+        for (v, p) in init.iter().zip(&m.params) {
+            assert_eq!(v.len(), p.elems());
+        }
+    }
+
+    #[test]
+    fn graph_meta_indexing() {
+        let dir = art_dir();
+        if !dir.join("tinycnn_meta.json").exists() {
+            return;
+        }
+        let m = ArtifactMeta::load(&dir, "tinycnn").unwrap();
+        let g = m.graph("train_search_en").unwrap();
+        let params = g.input_range("param:");
+        let moms = g.input_range("mom:");
+        assert_eq!(params.len(), m.params.len());
+        assert_eq!(moms.len(), m.params.len());
+        assert!(g.input_index("x").is_ok());
+        assert!(g.input_index("lam").is_ok());
+        assert!(g.input_index("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT client wrapper: compile-once executable cache + typed execution.
+//!
+//! Calling convention: the `xla` 0.1.6 / xla_extension 0.5.1 PJRT C
+//! shim returns the computation result as ONE tuple buffer (no device-
+//! side untupling), so state round-trips through host `Literal`s each
+//! step: inputs are `Literal`s (uploaded internally by `execute`), the
+//! output tuple is downloaded and decomposed back into per-leaf
+//! `Literal`s that feed the next step. The per-step memcpy cost is
+//! measured in EXPERIMENTS.md §Perf and is small against the step's
+//! compute on every benchmark model.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::{Dtype, GraphMeta, TensorMeta};
+
+/// Process-wide PJRT CPU runtime. Compilation results are cached by
+/// artifact path, so repeated pipeline runs (lambda sweeps!) compile
+/// each graph exactly once.
+pub struct Runtime {
+    client: PjRtClient,
+    cache: Mutex<BTreeMap<String, Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, meta: &GraphMeta) -> Result<Executable> {
+        let key = meta.file.display().to_string();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&key) {
+                return Ok(Executable { exe: exe.clone(), meta: meta.clone() });
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", meta.file.display()))?;
+        log::info!("compiled {} in {:.2}s", meta.name, t0.elapsed().as_secs_f64());
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(Executable { exe, meta: meta.clone() })
+    }
+}
+
+// ---- literal constructors -------------------------------------------------
+
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims_i64)
+        .context("reshaping f32 literal")
+}
+
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims_i64)
+        .context("reshaping i32 literal")
+}
+
+pub fn literal_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Build a literal matching a tensor signature from f32 host data.
+pub fn literal_for(tm: &TensorMeta, f32_data: &[f32]) -> Result<Literal> {
+    if f32_data.len() != tm.elems() {
+        return Err(anyhow!(
+            "{}: {} elems supplied, shape {:?} needs {}",
+            tm.name,
+            f32_data.len(),
+            tm.shape,
+            tm.elems()
+        ));
+    }
+    match tm.dtype {
+        Dtype::F32 => literal_f32(f32_data, &tm.shape),
+        Dtype::S32 => {
+            let ints: Vec<i32> = f32_data.iter().map(|v| *v as i32).collect();
+            literal_i32(&ints, &tm.shape)
+        }
+    }
+}
+
+/// A compiled graph plus its metadata signature.
+pub struct Executable {
+    exe: Arc<PjRtLoadedExecutable>,
+    pub meta: GraphMeta,
+}
+
+impl Executable {
+    /// Execute with named inputs; returns one `Literal` per output leaf
+    /// (the result tuple is downloaded and decomposed). Input count is
+    /// validated against the metadata signature so mismatches fail with
+    /// names, not XLA shape errors.
+    pub fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "graph {}: {} inputs supplied, signature has {}",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            ));
+        }
+        let mut out = self
+            .exe
+            .execute::<&Literal>(inputs)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let buf = out
+            .drain(..)
+            .next()
+            .and_then(|mut d| if d.is_empty() { None } else { Some(d.remove(0)) })
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let lit = buf.to_literal_sync().context("downloading result tuple")?;
+        let leaves = lit.to_tuple().context("decomposing result tuple")?;
+        if leaves.len() != self.meta.outputs.len() {
+            return Err(anyhow!(
+                "graph {}: {} output leaves, metadata says {}",
+                self.meta.name,
+                leaves.len(),
+                self.meta.outputs.len()
+            ));
+        }
+        Ok(leaves)
+    }
+
+    /// Execute and convert every output to host f32 vectors.
+    pub fn run_to_host(&self, inputs: &[&Literal]) -> Result<Vec<Vec<f32>>> {
+        self.run(inputs)?.iter().map(literal_to_f32).collect()
+    }
+}
+
+/// Assemble the input literal list for a graph by *name*: jax prunes
+/// unused arguments at lowering, so the metadata's input list (already
+/// filtered to the kept ones, in order) drives the marshalling.
+pub fn assemble_inputs<'a>(
+    meta: &GraphMeta,
+    mut get: impl FnMut(&TensorMeta) -> Result<&'a Literal>,
+) -> Result<Vec<&'a Literal>> {
+    meta.inputs.iter().map(|tm| get(tm)).collect()
+}
+
+pub fn literal_to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    match lit.ty().context("literal type")? {
+        ElementType::F32 => lit.to_vec::<f32>().context("reading f32 literal"),
+        ElementType::S32 => Ok(lit
+            .to_vec::<i32>()
+            .context("reading s32 literal")?
+            .into_iter()
+            .map(|v| v as f32)
+            .collect()),
+        other => Err(anyhow!("unsupported literal type {other:?}")),
+    }
+}

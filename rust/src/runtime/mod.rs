@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only module that touches the `xla` crate. Interchange is
+//! HLO *text* (xla_extension 0.5.1 rejects jax>=0.5 serialized protos —
+//! see /opt/xla-example/README.md); executables are compiled once and
+//! cached; parameters live as device buffers between steps so the train
+//! loop never round-trips host literals for state (the L3 hot-path
+//! optimization recorded in EXPERIMENTS.md §Perf).
+
+mod artifact;
+mod client;
+mod state;
+
+pub use artifact::{ArtifactMeta, Dtype, GraphMeta, TensorMeta};
+pub use client::{
+    assemble_inputs, literal_f32, literal_for, literal_i32, literal_scalar,
+    literal_to_f32, Executable, Runtime,
+};
+pub use state::ParamState;

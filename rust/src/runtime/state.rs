@@ -1,0 +1,132 @@
+//! Training state held as XLA literals between steps.
+//!
+//! The train-step artifacts return `[params..., mom..., metrics]`; the
+//! output leaves feed straight back as the next step's inputs without
+//! any f32-vector conversion (literal -> literal), keeping the host work
+//! per step at two memcpys of the state.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use super::artifact::ArtifactMeta;
+use super::client::{literal_for, literal_to_f32};
+
+/// One flat leaf-ordered set of tensors (params OR momentum).
+pub struct ParamState {
+    pub lits: Vec<Literal>,
+    names: Vec<String>,
+}
+
+impl ParamState {
+    /// Load the python-initialized parameters from the artifact blob.
+    pub fn from_init(meta: &ArtifactMeta) -> Result<Self> {
+        let values = meta.load_init_values()?;
+        Self::from_host(meta, values)
+    }
+
+    /// Build from host vectors (leaf order must match the metadata).
+    pub fn from_host(meta: &ArtifactMeta, values: Vec<Vec<f32>>) -> Result<Self> {
+        if values.len() != meta.params.len() {
+            return Err(anyhow!(
+                "{} leaves supplied, metadata has {}",
+                values.len(),
+                meta.params.len()
+            ));
+        }
+        let mut lits = Vec::with_capacity(values.len());
+        let mut names = Vec::with_capacity(values.len());
+        for (v, tm) in values.iter().zip(&meta.params) {
+            lits.push(literal_for(tm, v)?);
+            names.push(tm.name.clone());
+        }
+        Ok(Self { lits, names })
+    }
+
+    /// All-zero state with the same shapes (momentum init).
+    pub fn zeros(meta: &ArtifactMeta) -> Result<Self> {
+        let values: Vec<Vec<f32>> = meta.params.iter().map(|p| vec![0.0; p.elems()]).collect();
+        Self::from_host(meta, values)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lits.is_empty()
+    }
+
+    pub fn index_of(&self, leaf: &str) -> Result<usize> {
+        self.names
+            .iter()
+            .position(|n| n == leaf)
+            .ok_or_else(|| anyhow!("no leaf '{leaf}'"))
+    }
+
+    pub fn leaf(&self, leaf: &str) -> Result<&Literal> {
+        Ok(&self.lits[self.index_of(leaf)?])
+    }
+
+    /// Download one leaf to host f32.
+    pub fn leaf_to_host(&self, leaf: &str) -> Result<Vec<f32>> {
+        literal_to_f32(&self.lits[self.index_of(leaf)?])
+    }
+
+    /// Download the whole state (checkpoints / weight transforms).
+    pub fn to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.lits.iter().map(literal_to_f32).collect()
+    }
+
+    /// Take the leading `self.len()` leaves out of a step's outputs as
+    /// the new state (train outputs are `[params..., mom..., metrics]`:
+    /// params call this first, momentum second).
+    pub fn replace_from_outputs(&mut self, outputs: &mut Vec<Literal>) {
+        assert!(outputs.len() >= self.lits.len(), "output underrun");
+        let tail = outputs.split_off(self.lits.len());
+        self.lits = std::mem::replace(outputs, tail);
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Checkpoint to a flat little-endian f32 blob (same layout as the
+    /// python `<model>_init.bin`).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut bytes = Vec::new();
+        for v in self.to_host()? {
+            for x in v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    /// Restore from a checkpoint blob.
+    pub fn load(meta: &ArtifactMeta, path: &std::path::Path) -> Result<Self> {
+        let bytes = std::fs::read(path)?;
+        let total: usize = meta.params.iter().map(|p| p.elems()).sum();
+        if bytes.len() != total * 4 {
+            return Err(anyhow!(
+                "checkpoint {} has {} bytes, expected {}",
+                path.display(),
+                bytes.len(),
+                total * 4
+            ));
+        }
+        let mut off = 0;
+        let mut values = Vec::with_capacity(meta.params.len());
+        for p in &meta.params {
+            let n = p.elems();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            values.push(v);
+        }
+        Self::from_host(meta, values)
+    }
+}

@@ -1,0 +1,202 @@
+//! Minimal owned tensors (f32 / i32, NCHW convention).
+//!
+//! This is deliberately small: the request-path math that matters runs
+//! inside compiled XLA executables; rust-side tensors exist for data
+//! generation, weight transformation passes (fold / partition), the
+//! integer reference convolution used to cross-check deployments, and
+//! literal marshalling.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(n={})", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.data.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // ---- 4-D (OIHW / NCHW) indexing ----------------------------------
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d] = v;
+    }
+
+    #[inline]
+    pub fn at2(&self, a: usize, b: usize) -> f32 {
+        self.data[a * self.shape[1] + b]
+    }
+
+    /// Slice of the elements belonging to leading index `a` (e.g. one
+    /// output-channel filter of an OIHW weight, or one NCHW image).
+    pub fn outer(&self, a: usize) -> &[f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[a * stride..(a + 1) * stride]
+    }
+
+    pub fn outer_mut(&mut self, a: usize) -> &mut [f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &mut self.data[a * stride..(a + 1) * stride]
+    }
+
+    // ---- reductions ---------------------------------------------------
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Largest absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Reorder the leading (outer) axis by `perm`: out[i] = self[perm[i]].
+    pub fn permute_outer(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.shape[0], "perm len vs axis 0");
+        let stride: usize = self.shape[1..].iter().product();
+        let mut out = Tensor::zeros(&self.shape);
+        for (i, &src) in perm.iter().enumerate() {
+            out.data[i * stride..(i + 1) * stride]
+                .copy_from_slice(&self.data[src * stride..(src + 1) * stride]);
+        }
+        out
+    }
+
+    /// Reorder the *second* axis by `perm` (input-channel reorder of an
+    /// OIHW weight — the Fig.-3 next-layer fixup).
+    pub fn permute_axis1(&self, perm: &[usize]) -> Tensor {
+        assert!(self.shape.len() >= 2);
+        assert_eq!(perm.len(), self.shape[1]);
+        let inner: usize = self.shape[2..].iter().product();
+        let s1 = self.shape[1];
+        let mut out = Tensor::zeros(&self.shape);
+        for a in 0..self.shape[0] {
+            for (j, &src) in perm.iter().enumerate() {
+                let dst_off = (a * s1 + j) * inner;
+                let src_off = (a * s1 + src) * inner;
+                out.data[dst_off..dst_off + inner]
+                    .copy_from_slice(&self.data[src_off..src_off + inner]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 7.5);
+        assert_eq!(t.at4(1, 2, 3, 4), 7.5);
+        assert_eq!(t.data().iter().filter(|v| **v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn permute_outer_roundtrip() {
+        let t = Tensor::from_vec(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let p = t.permute_outer(&[2, 0, 1]);
+        assert_eq!(p.data(), &[20., 21., 0., 1., 10., 11.]);
+        // inverse permutation restores
+        let inv = p.permute_outer(&[1, 2, 0]);
+        assert_eq!(inv, t);
+    }
+
+    #[test]
+    fn permute_axis1() {
+        let t = Tensor::from_vec(&[2, 2, 2], vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let p = t.permute_axis1(&[1, 0]);
+        assert_eq!(p.data(), &[2., 3., 0., 1., 6., 7., 4., 5.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn abs_max_and_diff() {
+        let a = Tensor::from_vec(&[3], vec![-2.0, 0.5, 1.0]);
+        let b = Tensor::from_vec(&[3], vec![-2.0, 1.0, 1.0]);
+        assert_eq!(a.abs_max(), 2.0);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,152 @@
+//! Micro-benchmark harness (criterion substitute).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bench::run`]: warmup, then timed iterations until both a minimum
+//! iteration count and a minimum wall-time are reached; reports
+//! median / p10 / p90 / mean over per-iteration times. Results also
+//! append to `results/bench_<name>.csv` so perf history survives runs
+//! (EXPERIMENTS.md §Perf reads these).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    min_iters: usize,
+    min_time: Duration,
+    warmup: Duration,
+    rows: Vec<(String, Stats)>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+            warmup: Duration::from_millis(100),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Quick profile for expensive end-to-end cases.
+    pub fn slow(mut self) -> Self {
+        self.min_iters = 3;
+        self.min_time = Duration::from_millis(100);
+        self.warmup = Duration::from_millis(0);
+        self
+    }
+
+    pub fn run<F: FnMut()>(&mut self, case: &str, mut f: F) -> Stats {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        let mut times = Vec::new();
+        let t0 = Instant::now();
+        while times.len() < self.min_iters || t0.elapsed() < self.min_time {
+            let it = Instant::now();
+            f();
+            times.push(it.elapsed().as_nanos() as f64);
+            if times.len() > 10_000 {
+                break;
+            }
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let stats = Stats {
+            iters: n,
+            mean_ns: times.iter().sum::<f64>() / n as f64,
+            median_ns: times[n / 2],
+            p10_ns: times[n / 10],
+            p90_ns: times[(n * 9) / 10],
+        };
+        println!(
+            "{:<42} {:>12} median {:>12} mean {:>12} p90   ({} iters)",
+            format!("{}/{}", self.name, case),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p90_ns),
+            n
+        );
+        self.rows.push((case.to_string(), stats));
+        stats
+    }
+
+    /// Write the accumulated rows to results/bench_<name>.csv (append).
+    pub fn finish(&self) {
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/bench_{}.csv", self.name);
+        let new = !std::path::Path::new(&path).exists();
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            let mut buf = String::new();
+            if new {
+                buf.push_str("unix_time,case,iters,median_ns,mean_ns,p10_ns,p90_ns\n");
+            }
+            let now = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            for (case, s) in &self.rows {
+                let _ = writeln!(
+                    buf,
+                    "{now},{case},{},{:.0},{:.0},{:.0},{:.0}",
+                    s.iters, s.median_ns, s.mean_ns, s.p10_ns, s.p90_ns
+                );
+            }
+            let _ = f.write_all(buf.as_bytes());
+        }
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let mut b = Bench::new("selftest").slow();
+        let s = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

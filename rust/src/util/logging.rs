@@ -1,0 +1,70 @@
+//! Leveled stderr logger (backend for the `log` facade).
+//!
+//! `ODIMO_LOG=debug|info|warn|error` selects the level (default info).
+
+use std::io::Write;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+static START: OnceCell<Instant> = OnceCell::new();
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get_or_init(Instant::now).elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:>9.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger; safe to call more than once.
+pub fn init() {
+    let level = match std::env::var("ODIMO_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+    START.get_or_init(Instant::now);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_twice_is_fine() {
+        super::init();
+        super::init();
+        log::debug!("logger smoke");
+    }
+}

@@ -1,0 +1,8 @@
+//! Infrastructure substrates built in-tree (the vendored crate set has
+//! no serde/clap/tokio/rayon/criterion — DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod prng;

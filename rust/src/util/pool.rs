@@ -1,0 +1,162 @@
+//! Fixed-size thread pool (std::thread + channels).
+//!
+//! tokio/rayon are not in the vendored crate set; the coordinator's
+//! parallelism needs are simple and structured — fan a batch of
+//! independent jobs out, wait for all of them (lambda sweeps, parallel
+//! dataset generation, parallel simulator runs) — so a small
+//! work-queue pool with a scoped `map` API covers everything.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Pool sized to the machine (physical parallelism), capped.
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(4)
+            .min(16);
+        Self::new(n)
+    }
+
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("odimo-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => break, // sender dropped: shut down
+                        };
+                        // a panicking job must not kill the worker; the
+                        // panic is surfaced to the caller through the
+                        // result channel it holds
+                        let _ = catch_unwind(AssertUnwindSafe(job));
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool queue closed");
+    }
+
+    /// Apply `f` to every item, in parallel, preserving order.
+    /// Panics in `f` are propagated to the caller (first one wins).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = channel::<(usize, std::thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.spawn(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker dropped result");
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(e) => panic = panic.or(Some(e)),
+            }
+        }
+        if let Some(e) = panic {
+            std::panic::resume_unwind(e);
+        }
+        out.into_iter().map(|v| v.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..100).collect(), |i: i32| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawn_runs_everything() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn map_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map(vec![1, 2, 3], |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn pool_survives_job_panic() {
+        let pool = ThreadPool::new(1);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![1], |_| panic!("x"))
+        }));
+        assert!(r.is_err());
+        // the single worker must still be alive
+        assert_eq!(pool.map(vec![5], |i: i32| i + 1), vec![6]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Property-based tests on coordinator invariants (mini-proptest built
+//! on the in-tree PRNG: randomized cases with printed seeds so failures
+//! reproduce deterministically).
+
+use std::collections::BTreeMap;
+
+use odimo::coordinator::partition::{partition, sublayers};
+use odimo::coordinator::{baselines, discretize::discretize, Mapping, SearchPoint};
+use odimo::hw::soc::{simulate, SocConfig};
+use odimo::model::{build, Graph, ALL_MODELS, AIMC, DIG};
+use odimo::util::prng::Pcg32;
+
+const CASES: u64 = 40;
+
+fn random_mapping(g: &Graph, rng: &mut Pcg32) -> Mapping {
+    let mut m = Mapping::uniform(g, DIG);
+    for n in g.mappable() {
+        let p = rng.next_f32(); // layer-level bias so extremes appear
+        let ids = (0..n.cout)
+            .map(|_| if rng.next_f32() < p { AIMC as u8 } else { DIG as u8 })
+            .collect();
+        m.assign.insert(n.name.clone(), ids);
+    }
+    m
+}
+
+#[test]
+fn prop_mapping_roundtrips_json() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 11);
+        let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
+        let m = random_mapping(&g, &mut rng);
+        let j = m.to_json().to_string();
+        let back = Mapping::from_json(&odimo::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(m, back, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_split_counts_sum_to_cout() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 12);
+        let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
+        let m = random_mapping(&g, &mut rng);
+        let split = m.channel_split();
+        for n in g.mappable() {
+            let (d, a) = split[&n.name];
+            assert_eq!(d + a, n.cout, "seed {seed} layer {}", n.name);
+        }
+        // aimc_fraction consistent with the split
+        let total: usize = g.mappable().iter().map(|n| n.cout).sum();
+        let aimc: usize = split.values().map(|&(_, a)| a).sum();
+        assert!((m.aimc_fraction() - aimc as f64 / total as f64).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_simulator_latency_bounded_by_extremes() {
+    // any split's latency lies between the best single-accelerator
+    // latency per layer (lower bound: max is at least each side alone
+    // of the same split... we use global extremes as sanity bounds)
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 13);
+        let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
+        let m = random_mapping(&g, &mut rng);
+        let r = simulate(&g, &m.channel_split(), SocConfig::default());
+        let dig = simulate(
+            &g,
+            &Mapping::uniform(&g, DIG).channel_split(),
+            SocConfig::default(),
+        );
+        assert!(r.total_cycles <= dig.total_cycles, "seed {seed}");
+        assert!(r.total_cycles > 0);
+        assert!(r.energy_uj > 0.0);
+        // utilization fractions are fractions
+        assert!((0.0..=1.0).contains(&r.util[0]) && (0.0..=1.0).contains(&r.util[1]));
+    }
+}
+
+#[test]
+fn prop_min_cost_is_optimal_per_layer() {
+    // exhaustive per-layer optimality: no random split may beat the
+    // min_cost baseline's per-layer max-latency
+    use odimo::hw::latency::layer_lats;
+    let g = build("resnet20").unwrap();
+    let mc = baselines::min_cost(&g, baselines::CostObjective::Latency);
+    let split = mc.channel_split();
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 14);
+        for n in g.mappable() {
+            let cd = rng.below(n.cout as u32 + 1) as usize;
+            let (rd, ra) = layer_lats(n, cd as u64, (n.cout - cd) as u64);
+            let (md, ma) = {
+                let (d, a) = split[&n.name];
+                layer_lats(n, d as u64, a as u64)
+            };
+            assert!(
+                md.max(ma) <= rd.max(ra),
+                "seed {seed} layer {}: min_cost {} beaten by random {}",
+                n.name,
+                md.max(ma),
+                rd.max(ra)
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sublayers_partition_channels() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 15);
+        let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
+        let m = random_mapping(&g, &mut rng);
+        for n in g.mappable() {
+            let subs = sublayers(n, m.layer(&n.name));
+            let covered: usize = subs.iter().map(|s| s.2).sum();
+            assert_eq!(covered, n.cout, "seed {seed}");
+            let mut pos = 0;
+            for (acc, start, len) in subs {
+                assert_eq!(start, pos);
+                assert!(acc == DIG as u8 || acc == AIMC as u8);
+                pos += len;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_discretize_respects_argmax() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 16);
+        let g = build("tinycnn").unwrap();
+        let mut alphas = BTreeMap::new();
+        for n in g.mappable() {
+            let v: Vec<f32> = (0..2 * n.cout).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+            alphas.insert(n.name.clone(), v);
+        }
+        let m = discretize(&g, &alphas).unwrap();
+        for n in g.mappable() {
+            let a = &alphas[&n.name];
+            for c in 0..n.cout {
+                let want = if a[n.cout + c] > a[c] { AIMC } else { DIG } as u8;
+                assert_eq!(m.layer(&n.name)[c], want, "seed {seed} {} ch {c}", n.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pareto_front_is_nondominated() {
+    use odimo::metrics::{dominates, pareto_front};
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 17);
+        let pts: Vec<SearchPoint> = (0..20)
+            .map(|i| SearchPoint {
+                label: format!("p{i}"),
+                lambda: 0.0,
+                accuracy: rng.next_f32() as f64,
+                latency_ms: rng.next_f32() as f64 * 10.0,
+                energy_uj: rng.next_f32() as f64 * 100.0,
+                total_cycles: 1,
+                util: [0.5, 0.5],
+                aimc_channel_frac: 0.0,
+                mapping: Mapping { assign: BTreeMap::new() },
+            })
+            .collect();
+        let front = pareto_front(&pts, |p| p.latency_ms);
+        // no front point dominated by any other point
+        for &i in &front {
+            for (j, q) in pts.iter().enumerate() {
+                if i != j {
+                    assert!(
+                        !dominates(q, &pts[i], |p| p.latency_ms),
+                        "seed {seed}: front point {i} dominated by {j}"
+                    );
+                }
+            }
+        }
+        // every non-front point dominated by some front point
+        for (j, q) in pts.iter().enumerate() {
+            if !front.contains(&j) {
+                assert!(
+                    front.iter().any(|&i| dominates(&pts[i], q, |p| p.latency_ms)),
+                    "seed {seed}: non-front point {j} not dominated"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_partition_fragments_bounded() {
+    // after partitioning, a group leader has <= 2 fragments and every
+    // layer has <= cout fragments; permuted mapping preserves counts
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("tinycnn_meta.json").exists() {
+        return;
+    }
+    let meta = odimo::runtime::ArtifactMeta::load(&dir, "tinycnn").unwrap();
+    let values = meta.load_init_values().unwrap();
+    for seed in 0..10 {
+        let mut rng = Pcg32::new(seed, 18);
+        let m = random_mapping(&meta.model, &mut rng);
+        let part = partition(&meta, &meta.model, &m, &values).unwrap();
+        let before = m.channel_split();
+        let after = part.mapping.channel_split();
+        assert_eq!(before, after, "seed {seed}: split counts changed");
+        for (layer, frags) in &part.fragments {
+            let n = meta.model.node(layer).unwrap();
+            assert!(*frags <= n.cout, "seed {seed} {layer}");
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Python <-> rust parity: the constants and formulas that exist on
+//! both sides of the AOT boundary must agree. The python cost model
+//! (which shapes the training loss) exports its constants into the
+//! artifact metadata; the rust simulator mirrors them natively.
+
+use std::path::PathBuf;
+
+use odimo::hw::energy::{P_ACT, P_IDLE};
+use odimo::hw::latency::{lat_dig, lat_dw, AIMC_COLS, AIMC_ROWS, DIG_PE, F_CLK_HZ};
+use odimo::model::Op;
+use odimo::runtime::ArtifactMeta;
+
+fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn hw_constants_match_python_export() {
+    if !art_dir().join("tinycnn_meta.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    assert_eq!(meta.hw.p_act, P_ACT, "active power mismatch vs python");
+    assert_eq!(meta.hw.p_idle, P_IDLE, "idle power mismatch vs python");
+    assert_eq!(meta.hw.f_clk_hz, F_CLK_HZ);
+    assert_eq!(meta.hw.aimc_rows, AIMC_ROWS);
+    assert_eq!(meta.hw.aimc_cols, AIMC_COLS);
+    assert_eq!(meta.hw.dig_pe, DIG_PE);
+}
+
+#[test]
+fn all_digital_latency_normalizer_matches() {
+    // python exports norm.lat0 = sum of per-layer all-digital hard-max
+    // latency; the rust Eq. 6/7 mirrors must reproduce it exactly.
+    for model in ["tinycnn", "resnet20", "resnet18s", "mbv1_025"] {
+        if !art_dir().join(format!("{model}_meta.json")).exists() {
+            continue;
+        }
+        let meta = ArtifactMeta::load(&art_dir(), model).unwrap();
+        let mut lat0 = 0u64;
+        for n in &meta.model.nodes {
+            match n.op {
+                Op::Conv | Op::Fc => {
+                    let (oy, ox) = (n.out_hw.0 as u64, n.out_hw.1 as u64);
+                    lat0 += lat_dig(n.cin as u64, n.k as u64, n.k as u64, ox, oy,
+                                    n.cout as u64);
+                }
+                Op::DwConv => {
+                    let (oy, ox) = (n.out_hw.0 as u64, n.out_hw.1 as u64);
+                    lat0 += lat_dw(n.k as u64, ox, oy, n.cout as u64);
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(
+            lat0 as f64, meta.norm_lat0,
+            "{model}: rust lat0 {lat0} vs python {}",
+            meta.norm_lat0
+        );
+    }
+}
+
+#[test]
+fn all_digital_energy_normalizer_matches() {
+    for model in ["tinycnn", "resnet20"] {
+        if !art_dir().join(format!("{model}_meta.json")).exists() {
+            continue;
+        }
+        let meta = ArtifactMeta::load(&art_dir(), model).unwrap();
+        // python: en0 = sum over layers of (P_ACT[dig] + P_IDLE[aimc]) * lat_dig
+        let en0 = meta.norm_lat0 * (P_ACT[0] + P_IDLE[1]);
+        let rel = (en0 - meta.norm_en0).abs() / meta.norm_en0;
+        assert!(rel < 1e-9, "{model}: en0 {en0} vs python {}", meta.norm_en0);
+    }
+}
+
+#[test]
+fn datagen_algo_version_matches() {
+    if !art_dir().join("tinycnn_meta.json").exists() {
+        return;
+    }
+    let text = std::fs::read_to_string(art_dir().join("tinycnn_meta.json")).unwrap();
+    let v = odimo::util::json::parse(&text).unwrap();
+    let py_version = v
+        .req("datagen_algo_version")
+        .unwrap()
+        .as_i64()
+        .unwrap() as u32;
+    assert_eq!(
+        py_version,
+        odimo::data::ALGO_VERSION,
+        "python datagen and rust synth generator versions diverged"
+    );
+}
+
+#[test]
+fn bits_order_matches() {
+    if !art_dir().join("tinycnn_meta.json").exists() {
+        return;
+    }
+    let text = std::fs::read_to_string(art_dir().join("tinycnn_meta.json")).unwrap();
+    let v = odimo::util::json::parse(&text).unwrap();
+    let bits = v.req("bits").unwrap().usize_vec().unwrap();
+    assert_eq!(bits, vec![8, 2], "accelerator order contract: [digital, aimc]");
+    assert_eq!(odimo::model::BITS, [8, 2]);
+}

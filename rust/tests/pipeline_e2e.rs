@@ -1,0 +1,204 @@
+//! End-to-end pipeline integration tests on tinycnn (smoke schedules).
+//!
+//! The heavyweight cross-check here is the partition-pass equality: the
+//! Fig.-3 reorganization must leave the deployed network's logits
+//! unchanged, verified through the AOT `infer_deploy` executable itself
+//! (not a rust reimplementation).
+
+use std::path::PathBuf;
+
+use anyhow::anyhow;
+use odimo::coordinator::partition::partition;
+use odimo::coordinator::{
+    baselines, discretize::discretize, Mapping, Pipeline, Regularizer, Schedule, Trainer,
+};
+use odimo::data::DataSource;
+use odimo::model::{AIMC, DIG};
+use odimo::runtime::{assemble_inputs, literal_f32, ArtifactMeta, ParamState, Runtime};
+use odimo::util::prng::Pcg32;
+
+fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    art_dir().join("tinycnn_meta.json").exists()
+}
+
+fn random_mapping(meta: &ArtifactMeta, seed: u64) -> Mapping {
+    let mut rng = Pcg32::new(seed, 3);
+    let mut m = Mapping::uniform(&meta.model, DIG);
+    for n in meta.model.mappable() {
+        let ids = (0..n.cout)
+            .map(|_| if rng.next_f32() < 0.5 { DIG as u8 } else { AIMC as u8 })
+            .collect();
+        m.assign.insert(n.name.clone(), ids);
+    }
+    m
+}
+
+/// Run infer_deploy with given params snapshot + mapping; returns logits.
+fn infer_logits(
+    rt: &Runtime,
+    meta: &ArtifactMeta,
+    values: &[Vec<f32>],
+    mapping: &Mapping,
+    x: &xla::Literal,
+) -> Vec<f32> {
+    let exe = rt.load(meta.graph("infer_deploy").unwrap()).unwrap();
+    let params = ParamState::from_host(meta, values.to_vec()).unwrap();
+    let assigns: std::collections::BTreeMap<String, xla::Literal> = meta
+        .mappable
+        .iter()
+        .map(|name| {
+            let n = meta.model.node(name).unwrap();
+            (
+                name.clone(),
+                literal_f32(&mapping.onehot(name), &[2, n.cout]).unwrap(),
+            )
+        })
+        .collect();
+    let inputs = assemble_inputs(&exe.meta, |tm| match tm.name.as_str() {
+        "x" => Ok(x),
+        n if n.starts_with("param:") => params.leaf(&n[6..]),
+        n if n.starts_with("assign:") => {
+            assigns.get(&n[7..]).ok_or_else(|| anyhow!("missing {n}"))
+        }
+        n => Err(anyhow!("unexpected {n}")),
+    })
+    .unwrap();
+    let out = exe.run_to_host(&inputs).unwrap();
+    out.into_iter().next_back().unwrap()
+}
+
+#[test]
+fn partition_preserves_network_function() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let values = meta.load_init_values().unwrap();
+    let ds = DataSource::test(&meta.model, 99);
+    let batch = ds.batch(0, 8);
+    let x = literal_f32(&batch.x, &[8, batch.c, batch.h, batch.w]).unwrap();
+
+    for seed in [1u64, 2, 3] {
+        let mapping = random_mapping(&meta, seed);
+        let before = infer_logits(&rt, &meta, &values, &mapping, &x);
+
+        let part = partition(&meta, &meta.model, &mapping, &values).unwrap();
+        let after = infer_logits(&rt, &meta, &part.values, &part.mapping, &x);
+
+        assert_eq!(before.len(), after.len());
+        let max_diff = before
+            .iter()
+            .zip(&after)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        // identical math up to f32 summation-order noise
+        assert!(max_diff < 1e-3, "seed {seed}: logits diverged by {max_diff}");
+
+        // fragment counts: group-leader producers must be contiguous
+        assert!(part.fragments["stem"] <= 2, "stem frags {}", part.fragments["stem"]);
+        assert!(part.fragments["c1"] <= 2, "c1 frags {}", part.fragments["c1"]);
+    }
+}
+
+#[test]
+fn partition_perms_are_bijections() {
+    if !have_artifacts() {
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let values = meta.load_init_values().unwrap();
+    let mapping = random_mapping(&meta, 7);
+    let part = partition(&meta, &meta.model, &mapping, &values).unwrap();
+    for (name, perm) in &part.perms {
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..perm.len()).collect::<Vec<_>>(), "{name}");
+    }
+    // residual group shares one permutation
+    assert_eq!(part.perms["c1"], part.perms["c2"]);
+    assert_eq!(part.perms["c1"], part.perms["res"]);
+    // network output unpermuted
+    assert_eq!(part.perms["fc"], (0..meta.model.classes).collect::<Vec<_>>());
+}
+
+#[test]
+fn smoke_pipeline_beats_chance_and_baselines_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut pipe = Pipeline::new(&rt, &meta, Schedule::smoke());
+    pipe.ckpt_dir = std::env::temp_dir().join("odimo_e2e_ckpt");
+    std::fs::remove_dir_all(&pipe.ckpt_dir).ok();
+    let folded = pipe.pretrained_folded().unwrap();
+
+    let p = pipe
+        .search_point(&folded, Regularizer::EnergyDiana, 10.0)
+        .unwrap();
+    // tinycnn has 10 classes; even the smoke schedule should easily
+    // beat chance after fine-tuning
+    assert!(p.accuracy > 0.2, "acc {}", p.accuracy);
+    assert!(p.energy_uj > 0.0 && p.latency_ms > 0.0);
+    assert!(p.mapping.validate(&meta.model).is_ok());
+
+    let b = pipe.baseline_point(&folded, "all_8bit").unwrap();
+    assert!(b.accuracy > 0.3, "all-8bit acc {}", b.accuracy);
+    assert_eq!(b.aimc_channel_frac, 0.0);
+    // ODiMO under strong lambda pressure must be no more expensive than
+    // all-digital (strictly cheaper once any channel moves)
+    assert!(p.energy_uj <= b.energy_uj, "{} vs {}", p.energy_uj, b.energy_uj);
+}
+
+#[test]
+fn search_alpha_movement_is_lambda_sensitive() {
+    if !have_artifacts() {
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut pipe = Pipeline::new(&rt, &meta, Schedule::smoke());
+    pipe.ckpt_dir = std::env::temp_dir().join("odimo_e2e_ckpt2");
+    let folded = pipe.pretrained_folded().unwrap();
+
+    let frac = |lam: f32| -> f64 {
+        let mut tr = Trainer::new(&rt, &meta, 1234).unwrap();
+        tr.set_params(folded.clone()).unwrap();
+        let h = odimo::coordinator::Hyper {
+            lr: 0.005,
+            lr_alpha: 0.2,
+            lam,
+            tau_end: 0.5,
+            ..Default::default()
+        };
+        tr.run_phase("train_search_en", 40, h, None, None).unwrap();
+        let m = discretize(&meta.model, &tr.alphas().unwrap()).unwrap();
+        m.aimc_fraction()
+    };
+    let low = frac(0.0);
+    let high = frac(30.0);
+    assert!(
+        high > low + 0.05,
+        "lambda pressure did not increase AIMC usage: {low} -> {high}"
+    );
+}
+
+#[test]
+fn baseline_mappings_simulate_in_expected_order() {
+    // pure-simulator sanity chain on the real resnet20 geometry:
+    // min_cost_lat <= all_ternary < all_8bit in latency
+    let g = odimo::model::resnet20();
+    let lat = |name: &str| {
+        let m = baselines::by_name(&g, name).unwrap();
+        odimo::hw::simulate(&g, &m.channel_split(), Default::default()).total_cycles
+    };
+    assert!(lat("all_ternary") < lat("all_8bit"));
+    assert!(lat("min_cost_lat") <= lat("all_ternary"));
+    assert!(lat("min_cost_lat") <= lat("io8_backbone_ternary"));
+}

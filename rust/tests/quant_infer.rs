@@ -1,0 +1,131 @@
+//! Cross-check: the pure-rust quantized inference engine (quant::infer,
+//! the DORY-substitute deployment artifact) must match the AOT
+//! `infer_deploy` graph's logits on real inputs under arbitrary
+//! mappings — certifying that what the DIANA simulator *costs* is
+//! numerically the network that would execute.
+
+use std::path::PathBuf;
+
+use anyhow::anyhow;
+use odimo::coordinator::Mapping;
+use odimo::data::DataSource;
+use odimo::model::{AIMC, DIG};
+use odimo::quant::QuantNet;
+use odimo::runtime::{assemble_inputs, literal_f32, ArtifactMeta, ParamState, Runtime};
+use odimo::util::prng::Pcg32;
+
+fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn hlo_logits(
+    rt: &Runtime,
+    meta: &ArtifactMeta,
+    values: &[Vec<f32>],
+    mapping: &Mapping,
+    x: &[f32],
+    shape: &[usize],
+) -> Vec<f32> {
+    let exe = rt.load(meta.graph("infer_deploy").unwrap()).unwrap();
+    let params = ParamState::from_host(meta, values.to_vec()).unwrap();
+    let xl = literal_f32(x, shape).unwrap();
+    let assigns: std::collections::BTreeMap<String, xla::Literal> = meta
+        .mappable
+        .iter()
+        .map(|name| {
+            let n = meta.model.node(name).unwrap();
+            (name.clone(), literal_f32(&mapping.onehot(name), &[2, n.cout]).unwrap())
+        })
+        .collect();
+    let inputs = assemble_inputs(&exe.meta, |tm| match tm.name.as_str() {
+        "x" => Ok(&xl),
+        n if n.starts_with("param:") => params.leaf(&n[6..]),
+        n if n.starts_with("assign:") => {
+            assigns.get(&n[7..]).ok_or_else(|| anyhow!("missing {n}"))
+        }
+        n => Err(anyhow!("unexpected {n}")),
+    })
+    .unwrap();
+    exe.run_to_host(&inputs).unwrap().into_iter().next_back().unwrap()
+}
+
+#[test]
+fn quantnet_matches_hlo_logits_tinycnn() {
+    if !art_dir().join("tinycnn_meta.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let values = meta.load_init_values().unwrap();
+    let g = &meta.model;
+    let ds = DataSource::test(g, 31);
+    let batch = ds.batch(0, 8);
+    let shape = [8, batch.c, batch.h, batch.w];
+
+    for seed in [1u64, 5, 9] {
+        let mut rng = Pcg32::new(seed, 21);
+        let mut mapping = Mapping::uniform(g, DIG);
+        for n in g.mappable() {
+            let ids = (0..n.cout)
+                .map(|_| if rng.next_f32() < 0.5 { AIMC as u8 } else { DIG as u8 })
+                .collect();
+            mapping.assign.insert(n.name.clone(), ids);
+        }
+        let want = hlo_logits(&rt, &meta, &values, &mapping, &batch.x, &shape);
+        let net = QuantNet::compile(&meta, g, &values, &mapping).unwrap();
+        let got = net.forward(&batch.x, 8).unwrap();
+        assert_eq!(want.len(), got.len());
+        let max_diff = want
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 5e-3, "seed {seed}: rust engine diverged by {max_diff}");
+    }
+}
+
+#[test]
+fn quantnet_matches_hlo_logits_uniform_mappings() {
+    if !art_dir().join("tinycnn_meta.json").exists() {
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let values = meta.load_init_values().unwrap();
+    let g = &meta.model;
+    let ds = DataSource::test(g, 32);
+    let batch = ds.batch(0, 8);
+    let shape = [8, batch.c, batch.h, batch.w];
+    for acc in [DIG, AIMC] {
+        let mapping = Mapping::uniform(g, acc);
+        let want = hlo_logits(&rt, &meta, &values, &mapping, &batch.x, &shape);
+        let net = QuantNet::compile(&meta, g, &values, &mapping).unwrap();
+        let got = net.forward(&batch.x, 8).unwrap();
+        let max_diff = want
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 5e-3, "acc {acc}: diverged by {max_diff}");
+    }
+}
+
+#[test]
+fn quantnet_mbv1_runs_with_dwconv() {
+    // exercises the depthwise path (no HLO diff needed to be useful:
+    // finite logits of the right shape at both uniform mappings)
+    if !art_dir().join("mbv1_025_meta.json").exists() {
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "mbv1_025").unwrap();
+    let values = meta.load_init_values().unwrap();
+    let g = &meta.model;
+    let ds = DataSource::test(g, 33);
+    let batch = ds.batch(0, 2);
+    let mapping = Mapping::uniform(g, DIG);
+    let net = QuantNet::compile(&meta, g, &values, &mapping).unwrap();
+    let y = net.forward(&batch.x, 2).unwrap();
+    assert_eq!(y.len(), 2 * g.classes);
+    assert!(y.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,161 @@
+//! Integration: load real artifacts, execute them over PJRT, verify the
+//! numeric contract between the rust coordinator and the AOT graphs.
+//!
+//! These tests are skipped (with a notice) when `make artifacts` has not
+//! run — CI invokes them through the Makefile which builds artifacts
+//! first.
+
+use std::path::PathBuf;
+
+use anyhow::anyhow;
+use odimo::data::DataSource;
+use odimo::model::Graph;
+use odimo::runtime::{
+    assemble_inputs, literal_f32, literal_i32, literal_scalar, ArtifactMeta, ParamState,
+    Runtime,
+};
+
+fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    art_dir().join("tinycnn_meta.json").exists()
+}
+
+#[test]
+fn eval_float_runs_and_counts() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(meta.graph("eval_float").unwrap()).unwrap();
+
+    let params = ParamState::from_init(&meta).unwrap();
+    let g = &meta.model;
+    let ds = DataSource::test(g, 1234);
+    let batch = ds.batch(0, g.eval_batch);
+    let xb = literal_f32(&batch.x, &[batch.n, batch.c, batch.h, batch.w]).unwrap();
+    let yb = literal_i32(&batch.y, &[batch.n]).unwrap();
+
+    let inputs = assemble_inputs(&exe.meta, |tm| match tm.name.as_str() {
+        "x" => Ok(&xb),
+        "y" => Ok(&yb),
+        n if n.starts_with("param:") => params.leaf(&n[6..]),
+        n => Err(anyhow!("unexpected input {n}")),
+    })
+    .unwrap();
+    let out = exe.run_to_host(&inputs).unwrap();
+    let stats = &out[out.len() - 1];
+    assert_eq!(stats.len(), 2, "stats vector");
+    let correct = stats[0];
+    let loss_sum = stats[1];
+    assert!((0.0..=g.eval_batch as f32).contains(&correct), "correct={correct}");
+    assert!(loss_sum > 0.0);
+    // untrained network should be near chance
+    let acc = correct / g.eval_batch as f32;
+    assert!(acc < 0.5, "untrained acc suspiciously high: {acc}");
+}
+
+#[test]
+fn train_float_step_updates_params() {
+    if !have_artifacts() {
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(meta.graph("train_float").unwrap()).unwrap();
+    let g = &meta.model;
+
+    let mut params = ParamState::from_init(&meta).unwrap();
+    let mut mom = ParamState::zeros(&meta).unwrap();
+    let before = params.leaf_to_host("stem/w").unwrap();
+
+    let ds = DataSource::train(g, 1234);
+    let batch = ds.batch(0, g.train_batch);
+    let xb = literal_f32(&batch.x, &[batch.n, batch.c, batch.h, batch.w]).unwrap();
+    let yb = literal_i32(&batch.y, &[batch.n]).unwrap();
+    let lr = literal_scalar(0.1);
+    let lr_a = literal_scalar(0.1);
+    let mu = literal_scalar(0.9);
+    let wd = literal_scalar(1e-4);
+
+    let inputs = assemble_inputs(&exe.meta, |tm| match tm.name.as_str() {
+        "x" => Ok(&xb),
+        "y" => Ok(&yb),
+        "lr" => Ok(&lr),
+        "lr_alpha" => Ok(&lr_a),
+        "mu" => Ok(&mu),
+        "wd" => Ok(&wd),
+        n if n.starts_with("param:") => params.leaf(&n[6..]),
+        n if n.starts_with("mom:") => mom.leaf(&n[4..]),
+        n => Err(anyhow!("unexpected input {n}")),
+    })
+    .unwrap();
+    let mut out = exe.run(&inputs).unwrap();
+
+    // outputs = params' (P) + mom' (P) + metrics(6)
+    let p = meta.params.len();
+    assert_eq!(out.len(), 2 * p + 1, "output leaf count");
+    params.replace_from_outputs(&mut out);
+    mom.replace_from_outputs(&mut out);
+    let metrics = odimo::runtime::literal_to_f32(&out[0]).unwrap();
+    assert_eq!(metrics.len(), 6);
+    assert!(metrics[0].is_finite() && metrics[0] > 0.0, "loss {}", metrics[0]);
+    assert!((0.0..=g.train_batch as f32).contains(&metrics[1]));
+
+    let after = params.leaf_to_host("stem/w").unwrap();
+    assert_eq!(after.len(), before.len());
+    let diff: f32 = after
+        .iter()
+        .zip(&before)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff > 0.0, "params did not move");
+}
+
+#[test]
+fn param_state_checkpoint_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
+    let params = ParamState::from_init(&meta).unwrap();
+    let dir = std::env::temp_dir().join("odimo_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("p.bin");
+    params.save(&path).unwrap();
+    let back = ParamState::load(&meta, &path).unwrap();
+    for name in ["stem/w", "fc/b", "c1/alpha"] {
+        assert_eq!(
+            params.leaf_to_host(name).unwrap(),
+            back.leaf_to_host(name).unwrap(),
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn graph_meta_matches_native_builder() {
+    if !have_artifacts() {
+        return;
+    }
+    for name in ["tinycnn", "resnet20", "resnet18s", "mbv1_025"] {
+        if !art_dir().join(format!("{name}_meta.json")).exists() {
+            continue;
+        }
+        let meta = ArtifactMeta::load(&art_dir(), name).unwrap();
+        let native: Graph = odimo::model::build(name).unwrap();
+        assert_eq!(meta.model.nodes.len(), native.nodes.len(), "{name} node count");
+        for (a, b) in meta.model.nodes.iter().zip(&native.nodes) {
+            assert_eq!(a.name, b.name, "{name}");
+            assert_eq!(a.op, b.op, "{name}/{}", a.name);
+            assert_eq!(a.cout, b.cout, "{name}/{}", a.name);
+            assert_eq!(a.cin, b.cin, "{name}/{}", a.name);
+            assert_eq!(a.out_hw, b.out_hw, "{name}/{}", a.name);
+            assert_eq!(a.stride, b.stride, "{name}/{}", a.name);
+        }
+    }
+}

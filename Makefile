@@ -1,0 +1,39 @@
+# odimo build/test/bench driver. The rust workspace lives in rust/
+# (manifest: rust/Cargo.toml, workspace root: this directory).
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test check bench-infer bench artifacts clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Full gate: formatting, lints-as-errors, then the tier-1 command.
+check:
+	$(CARGO) fmt --check
+	$(CARGO) clippy -- -D warnings
+	$(CARGO) build --release && $(CARGO) test -q
+
+# Quantized-inference engine throughput (engine vs naive oracle,
+# single-thread + pool scaling). Emits BENCH_infer.json at repo root
+# and appends to results/bench_infer.csv.
+bench-infer:
+	$(CARGO) bench --bench bench_infer
+	@test -f BENCH_infer.json && echo "BENCH_infer.json updated" || \
+		echo "warning: BENCH_infer.json missing"
+
+# All harness = false bench binaries.
+bench:
+	$(CARGO) bench
+
+# AOT-lower the JAX graphs to HLO-text artifacts (requires the python
+# toolchain; rust artifact-driven tests skip themselves without this).
+artifacts:
+	$(PYTHON) python/compile/aot.py
+
+clean:
+	$(CARGO) clean

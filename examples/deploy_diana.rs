@@ -81,11 +81,11 @@ fn infer(
     meta: &ArtifactMeta,
     values: &[Vec<f32>],
     mapping: &Mapping,
-    x: &xla::Literal,
+    x: &odimo::xla::Literal,
 ) -> anyhow::Result<Vec<f32>> {
     let exe = rt.load(meta.graph("infer_deploy")?)?;
     let params = ParamState::from_host(meta, values.to_vec())?;
-    let assigns: std::collections::BTreeMap<String, xla::Literal> = meta
+    let assigns: std::collections::BTreeMap<String, odimo::xla::Literal> = meta
         .mappable
         .iter()
         .map(|name| {

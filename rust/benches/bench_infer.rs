@@ -1,0 +1,103 @@
+//! Quantized-inference engine throughput: planned im2col/GEMM engine
+//! vs the naive interpreter oracle (`quant::ref`), single-thread and
+//! over the ThreadPool. Reports img/s and writes `BENCH_infer.json` at
+//! the repo root for the EXPERIMENTS.md §Perf trajectory.
+//!
+//!     make bench-infer    # or: cargo bench --bench bench_infer
+
+use std::fmt::Write as _;
+
+use odimo::model::{resnet20, tinycnn, Graph};
+use odimo::quant::r#ref::RefNet;
+use odimo::quant::{synth_mapping as random_mapping, synth_params, ParamSet, QuantNet};
+use odimo::util::bench::{black_box, Bench};
+use odimo::util::pool::ThreadPool;
+use odimo::util::prng::Pcg32;
+
+const BATCH: usize = 8;
+
+fn random_input(g: &Graph, batch: usize, seed: u64) -> Vec<f32> {
+    let (c, h, w) = g.input_shape;
+    let mut rng = Pcg32::new(seed, 77);
+    (0..batch * c * h * w).map(|_| rng.next_f32()).collect()
+}
+
+fn imgs_per_s(median_ns: f64) -> f64 {
+    BATCH as f64 / (median_ns * 1e-9)
+}
+
+fn bench_model(b: &mut Bench, g: &Graph, json: &mut String) {
+    let (names, values) = synth_params(g, 11);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let mapping = random_mapping(g, 3);
+    let engine = QuantNet::compile_params(&params, g, &mapping).unwrap();
+    let oracle = RefNet::compile(&params, g, &mapping).unwrap();
+    let x = random_input(g, BATCH, 7);
+
+    // correctness gate: never publish numbers off a diverged engine
+    let ye = engine.forward(&x, BATCH).unwrap();
+    let yr = oracle.forward(&x, BATCH).unwrap();
+    let diff = ye
+        .iter()
+        .zip(&yr)
+        .map(|(a, c)| (a - c).abs())
+        .fold(0f32, f32::max);
+    assert!(diff < 1e-4, "{}: engine diverged from oracle by {diff}", g.name);
+
+    let s_ref = b.run(&format!("{}_naive_b{BATCH}", g.name), || {
+        black_box(oracle.forward(&x, BATCH).unwrap());
+    });
+    let s_eng = b.run(&format!("{}_engine_b{BATCH}", g.name), || {
+        black_box(engine.forward(&x, BATCH).unwrap());
+    });
+    let speedup = s_ref.median_ns / s_eng.median_ns;
+    println!(
+        "{:>10}: naive {:8.1} img/s | engine {:8.1} img/s | {:.2}x single-thread",
+        g.name,
+        imgs_per_s(s_ref.median_ns),
+        imgs_per_s(s_eng.median_ns),
+        speedup
+    );
+    let _ = write!(
+        json,
+        "  \"{}\": {{\n    \"batch\": {BATCH},\n    \"naive_img_s\": {:.1},\n    \"engine_img_s\": {:.1},\n    \"speedup_1t\": {:.2}",
+        g.name,
+        imgs_per_s(s_ref.median_ns),
+        imgs_per_s(s_eng.median_ns),
+        speedup
+    );
+    for threads in [2usize, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        let s = b.run(&format!("{}_engine_b{BATCH}_t{threads}", g.name), || {
+            black_box(engine.forward_pool(&x, BATCH, &pool).unwrap());
+        });
+        println!(
+            "{:>10}: engine x{threads} threads {:8.1} img/s ({:.2}x vs 1t)",
+            g.name,
+            imgs_per_s(s.median_ns),
+            s_eng.median_ns / s.median_ns
+        );
+        let _ = write!(
+            json,
+            ",\n    \"engine_img_s_t{threads}\": {:.1}",
+            imgs_per_s(s.median_ns)
+        );
+    }
+    let _ = write!(json, "\n  }}");
+}
+
+fn main() {
+    let mut b = Bench::new("infer").slow();
+    let mut json = String::from("{\n");
+    bench_model(&mut b, &tinycnn(), &mut json);
+    json.push_str(",\n");
+    bench_model(&mut b, &resnet20(), &mut json);
+    json.push_str("\n}\n");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_infer.json");
+    if let Err(e) = std::fs::write(path, &json) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
+    b.finish();
+}

@@ -46,7 +46,7 @@ fn main() {
     let exe = rt.load(meta.graph("eval_deploy").unwrap()).unwrap();
     let params = ParamState::from_init(&meta).unwrap();
     let mapping = odimo::coordinator::Mapping::uniform(g, odimo::model::DIG);
-    let assigns: std::collections::BTreeMap<String, xla::Literal> = meta
+    let assigns: std::collections::BTreeMap<String, odimo::xla::Literal> = meta
         .mappable
         .iter()
         .map(|name| {

@@ -52,13 +52,24 @@ impl Uf {
         Uf { parent: names.map(|n| (n.clone(), n)).collect() }
     }
 
+    /// Iterative two-pass find with path compression — the recursive
+    /// form could blow the stack on the long union chains deep residual
+    /// graphs produce (one group can thread through every block).
     fn find(&mut self, x: &str) -> String {
-        let p = self.parent[x].clone();
-        if p == x {
-            return p;
+        let mut root = x.to_string();
+        loop {
+            let p = &self.parent[root.as_str()];
+            if *p == root {
+                break;
+            }
+            root = p.clone();
         }
-        let root = self.find(&p);
-        self.parent.insert(x.to_string(), root.clone());
+        let mut cur = x.to_string();
+        while cur != root {
+            let next = self.parent[cur.as_str()].clone();
+            self.parent.insert(cur, root.clone());
+            cur = next;
+        }
         root
     }
 
@@ -254,6 +265,21 @@ mod tests {
             m.assign.insert(n.name.clone(), ids);
         }
         m
+    }
+
+    #[test]
+    fn uf_find_survives_long_chains() {
+        // a pathological 200k-deep parent chain: the old recursive find
+        // overflowed the stack here; the two-pass loop must not.
+        let n = 200_000usize;
+        let mut uf = Uf::new((0..n).map(|i| i.to_string()));
+        for i in 0..n - 1 {
+            uf.parent.insert(i.to_string(), (i + 1).to_string());
+        }
+        assert_eq!(uf.find("0"), (n - 1).to_string());
+        // compressed: a second find is a direct hop
+        assert_eq!(uf.parent["0"], (n - 1).to_string());
+        assert_eq!(uf.find("12345"), (n - 1).to_string());
     }
 
     #[test]

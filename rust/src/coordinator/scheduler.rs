@@ -10,7 +10,6 @@
 
 use std::collections::BTreeMap;
 
-use crate::hw::latency::layer_lats;
 use crate::hw::soc::{simulate, ChannelSplit, RunReport, SocConfig};
 use crate::model::Graph;
 
@@ -40,10 +39,6 @@ pub fn deploy(graph: &Graph, mapping: &Mapping, cfg: SocConfig) -> DeployReport 
         let dig_frags = subs.iter().filter(|s| s.0 == crate::model::DIG as u8).count();
         if dig_frags > 1 {
             let (cd, _) = split[&node.name];
-            let (full_dig, _) = layer_lats(node, cd as u64, 0);
-            let compute = full_dig
-                - (node.cin as u64 * cd as u64 * (node.k * node.k) as u64);
-            let _ = compute;
             // extra DMA = (frags-1) * per-channel weight load already in
             // Eq. 7's second term, approximated as proportional share
             let dma_total = node.cin as u64 * cd as u64 * (node.k * node.k) as u64;

@@ -6,7 +6,8 @@
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
+
+use crate::xla::Literal;
 
 use crate::data::DataSource;
 use crate::runtime::{

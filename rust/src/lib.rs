@@ -26,5 +26,6 @@ pub mod quant;
 pub mod runtime;
 pub mod tensor;
 pub mod util;
+pub mod xla;
 
 pub use anyhow::Result;

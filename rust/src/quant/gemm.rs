@@ -1,0 +1,354 @@
+//! im2col + cache-blocked GEMM microkernels for the planned inference
+//! engine.
+//!
+//! Numerical contract: every output element accumulates its K products
+//! in strictly increasing k order, exactly like the naive direct
+//! convolution in `quant::ref` (`for ci { for ky { for kx } } }`), and
+//! zero-padded panel entries contribute `acc + 0.0 * w == acc`. The
+//! engine is therefore bit-identical to the oracle — M/N register
+//! tiling and N cache blocking reorder *independent* outputs only,
+//! never the reduction itself.
+
+/// Register tile height (output channels per microkernel call).
+const MR: usize = 4;
+/// Register tile width (output pixels per microkernel call) — 16 f32
+/// lanes autovectorize to 2-4 SIMD accumulator registers per row.
+const NR: usize = 16;
+/// Cache block over the panel columns: NB * K floats of the panel stay
+/// resident in L1/L2 while the whole A (weight) block streams past.
+const NB: usize = 256;
+
+/// C[r, j] = sum_p A[r, p] * B[p, j] for r < m, j < n, p < k.
+/// `a` is m x k row-major (packed weights), `b` is k x n row-major (the
+/// im2col panel), `c` is m x n row-major and fully overwritten.
+pub fn gemm_seqk(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert!(a.len() >= m * k);
+    debug_assert!(b.len() >= k * n);
+    debug_assert!(c.len() >= m * n);
+    let mut j0 = 0;
+    while j0 < n {
+        let jn = (j0 + NB).min(n);
+        let mut i0 = 0;
+        while i0 + MR <= m {
+            let mut j = j0;
+            while j + NR <= jn {
+                micro_mr_nr(a, b, i0, j, k, n, c);
+                j += NR;
+            }
+            if j < jn {
+                edge_rows(a, b, i0, MR, j, jn, k, n, c);
+            }
+            i0 += MR;
+        }
+        if i0 < m {
+            edge_rows(a, b, i0, m - i0, j0, jn, k, n, c);
+        }
+        j0 = jn;
+    }
+}
+
+/// MR x NR register-tiled microkernel; each accumulator runs over the
+/// full K sequentially (bit-exact with the scalar loop).
+#[inline(always)]
+fn micro_mr_nr(a: &[f32], b: &[f32], i0: usize, j0: usize, k: usize, n: usize, c: &mut [f32]) {
+    let mut acc = [[0f32; NR]; MR];
+    for p in 0..k {
+        let brow = &b[p * n + j0..p * n + j0 + NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + r) * k + p];
+            for (cv, &bv) in accr.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR].copy_from_slice(accr);
+    }
+}
+
+/// Scalar fallback for row/column remainders (same accumulation order).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn edge_rows(
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    rows: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+) {
+    for r in 0..rows {
+        let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+        for j in j0..j1 {
+            let mut acc = 0f32;
+            for (p, &av) in arow.iter().enumerate() {
+                acc += av * b[p * n + j];
+            }
+            c[(i0 + r) * n + j] = acc;
+        }
+    }
+}
+
+/// Lower one NCHW image (`x`: cin * hi * wi) into a (cin*k*k) x (oh*ow)
+/// panel, row-major, with zeros for out-of-bounds taps. Row order is
+/// (ci, ky, kx) — the reduction order of the reference convolution.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    cin: usize,
+    hi: usize,
+    wi: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    panel: &mut [f32],
+) {
+    let n = oh * ow;
+    debug_assert!(panel.len() >= cin * k * k * n);
+    debug_assert!(x.len() >= cin * hi * wi);
+    let mut row = 0;
+    for ci in 0..cin {
+        let xc = &x[ci * hi * wi..(ci + 1) * hi * wi];
+        for ky in 0..k {
+            for kx in 0..k {
+                let dst = &mut panel[row * n..(row + 1) * n];
+                let mut idx = 0;
+                for oy in 0..oh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= hi as isize {
+                        dst[idx..idx + ow].fill(0.0);
+                        idx += ow;
+                        continue;
+                    }
+                    let xrow = &xc[iy as usize * wi..(iy as usize + 1) * wi];
+                    if stride == 1 {
+                        // ix = ox + kx - pad: one contiguous valid run
+                        let lo = pad.saturating_sub(kx).min(ow); // first valid ox
+                        let hi_ox = (wi + pad).saturating_sub(kx).min(ow).max(lo);
+                        dst[idx..idx + lo].fill(0.0);
+                        if hi_ox > lo {
+                            let src0 = lo + kx - pad;
+                            dst[idx + lo..idx + hi_ox]
+                                .copy_from_slice(&xrow[src0..src0 + (hi_ox - lo)]);
+                        }
+                        dst[idx + hi_ox..idx + ow].fill(0.0);
+                        idx += ow;
+                    } else {
+                        for ox in 0..ow {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            dst[idx] = if ix < 0 || ix >= wi as isize {
+                                0.0
+                            } else {
+                                xrow[ix as usize]
+                            };
+                            idx += 1;
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Transpose a (rows=n, cols=k) row-major matrix (e.g. a (batch, cin)
+/// activation block) into a k x n panel for the FC GEMM.
+pub fn transpose_into(x: &[f32], n: usize, k: usize, panel: &mut [f32]) {
+    debug_assert!(x.len() >= n * k);
+    debug_assert!(panel.len() >= k * n);
+    for j in 0..n {
+        let row = &x[j * k..(j + 1) * k];
+        for (p, &v) in row.iter().enumerate() {
+            panel[p * n + j] = v;
+        }
+    }
+}
+
+/// One depthwise channel: direct conv with a branch-free interior fast
+/// path. Tap order is (ky, kx) with out-of-bounds taps skipped — the
+/// same sequence of adds as the reference kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv_one(
+    x: &[f32],
+    hi: usize,
+    wi: usize,
+    w: &[f32],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(x.len() >= hi * wi);
+    debug_assert!(w.len() >= k * k);
+    debug_assert!(out.len() >= oh * ow);
+    // interior output range where every tap is in bounds:
+    //   o*stride + 0 - pad >= 0        ->  o >= ceil(pad / stride)
+    //   o*stride + k-1 - pad <= dim-1  ->  o <= (dim + pad - k) / stride
+    let oy0 = ((pad + stride - 1) / stride).min(oh);
+    let oy1 = if hi + pad >= k { ((hi + pad - k) / stride + 1).min(oh) } else { oy0 };
+    let ox0 = ((pad + stride - 1) / stride).min(ow);
+    let ox1 = if wi + pad >= k { ((wi + pad - k) / stride + 1).min(ow) } else { ox0 };
+    for oy in 0..oh {
+        let interior_y = (oy0..oy1).contains(&oy);
+        for ox in 0..ow {
+            if interior_y && (ox0..ox1).contains(&ox) {
+                let iy = oy * stride - pad;
+                let ix = ox * stride - pad;
+                let mut acc = 0f32;
+                for ky in 0..k {
+                    let xrow = &x[(iy + ky) * wi + ix..(iy + ky) * wi + ix + k];
+                    let wrow = &w[ky * k..(ky + 1) * k];
+                    for kx in 0..k {
+                        acc += xrow[kx] * wrow[kx];
+                    }
+                }
+                out[oy * ow + ox] = acc;
+            } else {
+                let mut acc = 0f32;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= hi as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        acc += x[iy as usize * wi + ix as usize] * w[ky * k + kx];
+                    }
+                }
+                out[oy * ow + ox] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for r in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += a[r * k + p] * b[p * n + j];
+                }
+                c[r * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_bit_exact_vs_naive() {
+        let mut rng = Pcg32::new(11, 3);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 7, 5), (4, 16, 16),
+                            (5, 27, 33), (17, 64, 300), (16, 288, 64)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let mut c = vec![0f32; m * n];
+            gemm_seqk(&a, &b, m, k, n, &mut c);
+            let want = naive_gemm(&a, &b, m, k, n);
+            assert_eq!(c, want, "m={m} k={k} n={n}");
+        }
+    }
+
+    fn naive_conv_one(
+        x: &[f32], cin: usize, hi: usize, wi: usize, w: &[f32], k: usize,
+        stride: usize, pad: usize, oh: usize, ow: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; oh * ow];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0f32;
+                for ci in 0..cin {
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= hi as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= wi as isize {
+                                continue;
+                            }
+                            acc += x[(ci * hi + iy as usize) * wi + ix as usize]
+                                * w[(ci * k + ky) * k + kx];
+                        }
+                    }
+                }
+                out[oy * ow + ox] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct_conv() {
+        let mut rng = Pcg32::new(5, 9);
+        for &(cin, hi, wi, k, stride, pad) in &[
+            (3usize, 8usize, 8usize, 3usize, 1usize, 1usize),
+            (4, 7, 5, 3, 2, 1),
+            (2, 6, 6, 1, 1, 0),
+            (1, 9, 9, 3, 1, 0),
+            (5, 10, 10, 3, 2, 0),
+        ] {
+            let oh = (hi + 2 * pad - k) / stride + 1;
+            let ow = (wi + 2 * pad - k) / stride + 1;
+            let x: Vec<f32> = (0..cin * hi * wi).map(|_| rng.next_f32()).collect();
+            let w: Vec<f32> = (0..cin * k * k).map(|_| rng.next_f32() - 0.5).collect();
+            let kk = cin * k * k;
+            let n = oh * ow;
+            let mut panel = vec![0f32; kk * n];
+            im2col(&x, cin, hi, wi, k, stride, pad, oh, ow, &mut panel);
+            let mut got = vec![0f32; n];
+            gemm_seqk(&w, &panel, 1, kk, n, &mut got);
+            let want = naive_conv_one(&x, cin, hi, wi, &w, k, stride, pad, oh, ow);
+            assert_eq!(got, want, "cin={cin} k={k} s={stride} p={pad}");
+        }
+    }
+
+    #[test]
+    fn dwconv_interior_matches_checked() {
+        let mut rng = Pcg32::new(21, 2);
+        for &(hi, wi, k, stride, pad) in &[
+            (8usize, 8usize, 3usize, 1usize, 1usize),
+            (7, 9, 3, 2, 1),
+            (5, 5, 5, 1, 2),
+            (4, 4, 3, 1, 0),
+            (3, 3, 3, 1, 2),
+        ] {
+            let oh = (hi + 2 * pad - k) / stride + 1;
+            let ow = (wi + 2 * pad - k) / stride + 1;
+            let x: Vec<f32> = (0..hi * wi).map(|_| rng.next_f32()).collect();
+            let w: Vec<f32> = (0..k * k).map(|_| rng.next_f32() - 0.5).collect();
+            let mut got = vec![0f32; oh * ow];
+            dwconv_one(&x, hi, wi, &w, k, stride, pad, oh, ow, &mut got);
+            let want = naive_conv_one(&x, 1, hi, wi, &w, k, stride, pad, oh, ow);
+            assert_eq!(got, want, "hw=({hi},{wi}) k={k} s={stride} p={pad}");
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect(); // 3 x 4
+        let mut p = vec![0f32; 12]; // 4 x 3
+        transpose_into(&x, 3, 4, &mut p);
+        for j in 0..3 {
+            for q in 0..4 {
+                assert_eq!(p[q * 3 + j], x[j * 4 + q]);
+            }
+        }
+    }
+}

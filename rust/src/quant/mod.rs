@@ -7,11 +7,127 @@
 //! (exact), so they certify that the partitioned network the simulator
 //! "runs" is numerically the network the JAX deploy graph evaluates.
 
+pub mod gemm;
 pub mod infer;
+pub mod plan;
+pub mod r#ref;
 
-pub use infer::QuantNet;
+pub use infer::{calibrate_act_maxima, calibrate_act_maxima_params, QuantNet};
+pub use plan::{QuantPlan, Workspace};
 
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::ArtifactMeta;
 use crate::tensor::Tensor;
+
+/// Name-indexed view over a flat parameter snapshot ("node/leaf" keys).
+///
+/// Both the planned engine ([`infer::QuantNet`]) and the reference
+/// oracle ([`r#ref::RefNet`]) compile from one of these, so tests can
+/// feed synthetic parameter sets without fabricating a full
+/// [`ArtifactMeta`] (which needs the artifact JSON).
+pub struct ParamSet<'a> {
+    idx: BTreeMap<&'a str, usize>,
+    values: &'a [Vec<f32>],
+}
+
+impl<'a> ParamSet<'a> {
+    /// Build from parallel name/value slices (leaf order must match).
+    pub fn new<I>(names: I, values: &'a [Vec<f32>]) -> Self
+    where
+        I: IntoIterator<Item = &'a str>,
+    {
+        ParamSet {
+            idx: names.into_iter().enumerate().map(|(i, n)| (n, i)).collect(),
+            values,
+        }
+    }
+
+    /// View over an artifact snapshot (leaf order per `meta.params`).
+    pub fn from_meta(meta: &'a ArtifactMeta, values: &'a [Vec<f32>]) -> Self {
+        Self::new(meta.params.iter().map(|p| p.name.as_str()), values)
+    }
+
+    /// Look up the `node/leaf` parameter vector.
+    pub fn get(&self, node: &str, leaf: &str) -> Result<&'a [f32]> {
+        self.idx
+            .get(format!("{node}/{leaf}").as_str())
+            .map(|&i| self.values[i].as_slice())
+            .ok_or_else(|| anyhow!("missing leaf {node}/{leaf}"))
+    }
+}
+
+/// Deterministic synthetic parameter snapshot for a graph — test and
+/// bench support for machines without trained artifacts: small random
+/// weights and plausible log-scales under the exact leaf layout the
+/// engines expect (`node/{w,b,ls8,lster,lsa}`).
+pub fn synth_params(graph: &crate::model::Graph, seed: u64) -> (Vec<String>, Vec<Vec<f32>>) {
+    use crate::model::Op;
+    let mut rng = crate::util::prng::Pcg32::new(seed, 17);
+    let mut names: Vec<String> = Vec::new();
+    let mut values: Vec<Vec<f32>> = Vec::new();
+    for n in &graph.nodes {
+        let mut push = |leaf: &str, v: Vec<f32>| {
+            names.push(format!("{}/{leaf}", n.name));
+            values.push(v);
+        };
+        match n.op {
+            Op::Conv | Op::Fc => {
+                let wlen = n.cout * n.cin * n.k * n.k;
+                push("w", (0..wlen).map(|_| (rng.next_f32() - 0.5) * 0.6).collect());
+                push("b", (0..n.cout).map(|_| (rng.next_f32() - 0.5) * 0.2).collect());
+                push("ls8", vec![(0.25 + 0.2 * rng.next_f32()).ln()]);
+                push("lster", vec![(0.15 + 0.2 * rng.next_f32()).ln()]);
+                push("lsa", vec![(1.0 + rng.next_f32()).ln()]);
+            }
+            Op::DwConv => {
+                let wlen = n.cout * n.k * n.k;
+                push("w", (0..wlen).map(|_| (rng.next_f32() - 0.5) * 0.6).collect());
+                push("b", (0..n.cout).map(|_| (rng.next_f32() - 0.5) * 0.2).collect());
+                push("ls8", vec![(0.25 + 0.2 * rng.next_f32()).ln()]);
+                push("lsa", vec![(1.0 + rng.next_f32()).ln()]);
+            }
+            Op::Add => {
+                push("lsa", vec![(1.0 + rng.next_f32()).ln()]);
+            }
+            _ => {}
+        }
+    }
+    (names, values)
+}
+
+/// Deterministic ~50/50 DIG/AIMC channel mapping — the companion of
+/// [`synth_params`] for tests and benches exercising mixed assignments.
+pub fn synth_mapping(graph: &crate::model::Graph, seed: u64) -> crate::coordinator::Mapping {
+    use crate::model::{AIMC, DIG};
+    let mut rng = crate::util::prng::Pcg32::new(seed, 33);
+    let mut m = crate::coordinator::Mapping::uniform(graph, DIG);
+    for n in graph.mappable() {
+        let ids = (0..n.cout)
+            .map(|_| if rng.next_f32() < 0.5 { AIMC as u8 } else { DIG as u8 })
+            .collect();
+        m.assign.insert(n.name.clone(), ids);
+    }
+    m
+}
+
+/// Post-accumulation activation quantizer (8-bit digital / 7-bit AIMC
+/// output grids) — shared by the planned engine and the reference
+/// oracle so both paths stay bit-identical.
+#[inline]
+pub(crate) fn quant_act(v: f32, scale: f32, n_bits: u32) -> f32 {
+    let levels = ((1u32 << n_bits) - 1) as f32;
+    scale / levels * round_half_even(levels * (v / scale).clamp(0.0, 1.0))
+}
+
+/// The AIMC 7-bit D/A input read: fixed [0, 1] range LSB truncation,
+/// exactly as the deploy graph re-reads stored activations.
+#[inline]
+pub(crate) fn da7(v: f32) -> f32 {
+    round_half_even(v.clamp(0.0, 1.0) * 127.0) / 127.0
+}
 
 /// Round half to even — the rounding mode of `jnp.round` (and the XLA
 /// round-nearest-even op the AOT graphs execute). Rust's `f32::round`

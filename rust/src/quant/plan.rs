@@ -1,0 +1,832 @@
+//! Precompiled execution plan + buffer arena for the quantized
+//! inference engine.
+//!
+//! [`QuantPlan::compile_quant`] resolves everything the naive
+//! interpreter re-derived per `forward` into a one-time compile step:
+//!
+//!   * names -> indices: nodes execute over integer buffer ids, no
+//!     string-keyed map lookups on the hot path;
+//!   * weights packed per accelerator group (digital int8-grid rows,
+//!     AIMC ternary-grid rows) so each sub-layer is one contiguous GEMM;
+//!   * a liveness-scanned buffer arena: activation buffers are assigned
+//!     by a linear scan over the DAG and recycled as soon as their last
+//!     consumer has run (ping-pong along chains, an extra slot per live
+//!     residual), so a [`Workspace`] reaches a fixed set of allocations
+//!     after the first block and `forward` allocates nothing per node;
+//!   * the 7-bit AIMC D/A re-read of an activation is materialized at
+//!     most once per tensor — and only when some consumer actually has
+//!     AIMC channels — instead of unconditionally per layer.
+//!
+//! Execution is bit-identical to the `quant::ref` oracle: the GEMM
+//! accumulates each output strictly in the oracle's reduction order
+//! (see `quant::gemm`), and all element-wise epilogues share the same
+//! helper functions.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Mapping;
+use crate::model::{Graph, Op, AIMC, DIG};
+use crate::util::pool::ThreadPool;
+
+use super::gemm::{dwconv_one, gemm_seqk, im2col, transpose_into};
+use super::{da7, fake_quant, quant_act, round_half_even, ParamSet};
+
+/// One contiguous run of output channels on a single accelerator.
+pub(crate) struct Group {
+    /// packed row -> output channel index (ascending)
+    rows: Vec<usize>,
+    /// rows.len() x kdim fake-quantized weights, row-major
+    w: Vec<f32>,
+    /// per packed row
+    bias: Vec<f32>,
+    /// read the 7-bit D/A view of the input
+    from_x7: bool,
+    /// output activation bits (8 digital / 7 AIMC)
+    bits: u32,
+}
+
+pub(crate) struct ConvP {
+    cin: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    hi: usize,
+    wi: usize,
+    oh: usize,
+    ow: usize,
+    cout: usize,
+    relu: bool,
+    /// <= 0.0 disables output quantization (float / calibration mode)
+    act_scale: f32,
+    groups: Vec<Group>,
+}
+
+pub(crate) struct FcP {
+    cin: usize,
+    cout: usize,
+    groups: Vec<Group>,
+}
+
+pub(crate) struct DwP {
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    hi: usize,
+    wi: usize,
+    oh: usize,
+    ow: usize,
+    w: Vec<f32>,
+    bias: Vec<f32>,
+    relu: bool,
+    act_scale: f32,
+}
+
+pub(crate) enum PlanOp {
+    Input { quantize: bool },
+    Conv(ConvP),
+    Dw(DwP),
+    Fc(FcP),
+    Add { relu: bool, scale: f32, quantize: bool },
+    Gap { c: usize, hw: usize },
+}
+
+pub(crate) struct PlanNode {
+    pub(crate) name: String,
+    pub(crate) op: PlanOp,
+    /// arena buffer ids of the inputs (src[1] only used by Add)
+    src: [usize; 2],
+    dst: usize,
+    /// arena id of the 7-bit D/A view of the *input* tensor (conv/fc
+    /// with AIMC channels)
+    src_x7: Option<usize>,
+    /// arena id for the 7-bit view of *this* node's output, when some
+    /// consumer needs it
+    x7: Option<usize>,
+    /// per-image output elements
+    out_elems: usize,
+    /// record the post-epilogue max (calibration)
+    pub(crate) track_max: bool,
+}
+
+/// Per-thread scratch: the arena plus im2col/GEMM panels. Allocation
+/// converges after the first block (buffers are `resize`d in place).
+#[derive(Default)]
+pub struct Workspace {
+    bufs: Vec<Vec<f32>>,
+    panel: Vec<f32>,
+    cbuf: Vec<f32>,
+    /// tiled mode: per-image im2col panels
+    panels: Vec<f32>,
+    /// tiled mode: per-job GEMM scratch
+    tiles: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A compiled (graph, mapping) ready to execute over an arena.
+pub struct QuantPlan {
+    nodes: Vec<PlanNode>,
+    n_bufs: usize,
+    in_elems: usize,
+    out_elems: usize,
+}
+
+impl QuantPlan {
+    /// Compile the deploy-mode (quantized, mapped) plan.
+    pub fn compile_quant(
+        params: &ParamSet<'_>,
+        graph: &Graph,
+        mapping: &Mapping,
+    ) -> Result<Self> {
+        mapping.validate(graph)?;
+        Self::compile(params, graph, Some(mapping))
+    }
+
+    /// Compile the float (quantization-free) plan — the calibration
+    /// forward: raw weights, bias+ReLU epilogues, no grids anywhere.
+    pub fn compile_float(params: &ParamSet<'_>, graph: &Graph) -> Result<Self> {
+        Self::compile(params, graph, None)
+    }
+
+    fn compile(
+        params: &ParamSet<'_>,
+        graph: &Graph,
+        mapping: Option<&Mapping>,
+    ) -> Result<Self> {
+        let n_nodes = graph.nodes.len();
+        if n_nodes == 0 {
+            return Err(anyhow!("empty graph"));
+        }
+        let node_idx = |name: &str| -> Result<usize> {
+            graph
+                .nodes
+                .iter()
+                .position(|n| n.name == name)
+                .ok_or_else(|| anyhow!("unknown input tensor '{name}'"))
+        };
+
+        // ---- 1. lower each node to a PlanOp --------------------------
+        let quant = mapping.is_some();
+        let mut ops: Vec<PlanOp> = Vec::with_capacity(n_nodes);
+        for n in &graph.nodes {
+            let op = match n.op {
+                Op::Input => PlanOp::Input { quantize: quant },
+                Op::Conv | Op::Fc => {
+                    let w = params.get(&n.name, "w")?;
+                    let bias = params.get(&n.name, "b")?;
+                    let act_scale =
+                        if quant { params.get(&n.name, "lsa")?[0].exp() } else { 0.0 };
+                    let per = w.len() / n.cout;
+                    let groups = match mapping {
+                        Some(m) => {
+                            let s8 = params.get(&n.name, "ls8")?[0].exp();
+                            let st = params.get(&n.name, "lster")?[0].exp();
+                            let assign = m.layer(&n.name);
+                            let mut gs = Vec::new();
+                            for acc in [DIG, AIMC] {
+                                let rows: Vec<usize> = (0..n.cout)
+                                    .filter(|&co| assign[co] as usize == acc)
+                                    .collect();
+                                if rows.is_empty() {
+                                    continue;
+                                }
+                                let (scale, wbits, obits) =
+                                    if acc == DIG { (s8, 8, 8) } else { (st, 2, 7) };
+                                let wp: Vec<f32> = rows
+                                    .iter()
+                                    .flat_map(|&co| {
+                                        w[co * per..(co + 1) * per]
+                                            .iter()
+                                            .map(move |&v| fake_quant(v, scale, wbits))
+                                    })
+                                    .collect();
+                                gs.push(Group {
+                                    w: wp,
+                                    bias: rows.iter().map(|&co| bias[co]).collect(),
+                                    rows,
+                                    from_x7: acc == AIMC,
+                                    bits: obits,
+                                });
+                            }
+                            gs
+                        }
+                        None => vec![Group {
+                            rows: (0..n.cout).collect(),
+                            w: w.to_vec(),
+                            bias: bias.to_vec(),
+                            from_x7: false,
+                            bits: 8,
+                        }],
+                    };
+                    if n.op == Op::Fc {
+                        PlanOp::Fc(FcP { cin: n.cin, cout: n.cout, groups })
+                    } else {
+                        PlanOp::Conv(ConvP {
+                            cin: n.cin,
+                            k: n.k,
+                            stride: n.stride,
+                            pad: n.pad,
+                            hi: n.in_hw.0,
+                            wi: n.in_hw.1,
+                            oh: n.out_hw.0,
+                            ow: n.out_hw.1,
+                            cout: n.cout,
+                            relu: n.relu,
+                            act_scale: if quant { act_scale } else { 0.0 },
+                            groups,
+                        })
+                    }
+                }
+                Op::DwConv => {
+                    let w = params.get(&n.name, "w")?;
+                    let weff = if quant {
+                        let s8 = params.get(&n.name, "ls8")?[0].exp();
+                        w.iter().map(|&v| fake_quant(v, s8, 8)).collect()
+                    } else {
+                        w.to_vec()
+                    };
+                    PlanOp::Dw(DwP {
+                        c: n.cout,
+                        k: n.k,
+                        stride: n.stride,
+                        pad: n.pad,
+                        hi: n.in_hw.0,
+                        wi: n.in_hw.1,
+                        oh: n.out_hw.0,
+                        ow: n.out_hw.1,
+                        w: weff,
+                        bias: params.get(&n.name, "b")?.to_vec(),
+                        relu: n.relu,
+                        act_scale: if quant {
+                            params.get(&n.name, "lsa")?[0].exp()
+                        } else {
+                            0.0
+                        },
+                    })
+                }
+                Op::Add => PlanOp::Add {
+                    relu: n.relu,
+                    scale: if quant { params.get(&n.name, "lsa")?[0].exp() } else { 1.0 },
+                    quantize: quant,
+                },
+                Op::Gap => PlanOp::Gap { c: n.cin, hw: n.in_hw.0 * n.in_hw.1 },
+            };
+            ops.push(op);
+        }
+
+        // ---- 2. per-tensor use counts --------------------------------
+        // plain_uses: consumers reading the stored activation;
+        // x7_uses: conv/fc consumers with AIMC channels reading the D/A view.
+        let mut plain_uses = vec![0usize; n_nodes];
+        let mut x7_uses = vec![0usize; n_nodes];
+        for (i, n) in graph.nodes.iter().enumerate() {
+            for (ii, inp) in n.inputs.iter().enumerate() {
+                let t = node_idx(inp)?;
+                match &ops[i] {
+                    PlanOp::Conv(cp) if ii == 0 => {
+                        if cp.groups.iter().any(|g| !g.from_x7) {
+                            plain_uses[t] += 1;
+                        }
+                        if cp.groups.iter().any(|g| g.from_x7) {
+                            x7_uses[t] += 1;
+                        }
+                    }
+                    PlanOp::Fc(fp) if ii == 0 => {
+                        if fp.groups.iter().any(|g| !g.from_x7) {
+                            plain_uses[t] += 1;
+                        }
+                        if fp.groups.iter().any(|g| g.from_x7) {
+                            x7_uses[t] += 1;
+                        }
+                    }
+                    _ => plain_uses[t] += 1,
+                }
+            }
+        }
+        plain_uses[n_nodes - 1] += 1; // keep the logits buffer alive
+        for i in 0..n_nodes {
+            // materializing the x7 view reads the plain buffer once at
+            // the producer itself — without this use a tensor consumed
+            // only through its D/A view would never be recycled
+            if quant && x7_uses[i] > 0 {
+                plain_uses[i] += 1;
+            }
+        }
+
+        // ---- 3. linear-scan arena assignment -------------------------
+        let mut buf_cap: Vec<usize> = Vec::new(); // capacity class per buffer
+        let mut remaining: Vec<usize> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        fn grab(
+            need: usize,
+            uses: usize,
+            buf_cap: &mut Vec<usize>,
+            remaining: &mut Vec<usize>,
+            free: &mut Vec<usize>,
+        ) -> usize {
+            // best fit >= need, else grow the largest free slot
+            let mut best: Option<usize> = None;
+            for (fi, &id) in free.iter().enumerate() {
+                if buf_cap[id] >= need {
+                    match best {
+                        Some(b) if buf_cap[free[b]] <= buf_cap[id] => {}
+                        _ => best = Some(fi),
+                    }
+                }
+            }
+            if best.is_none() && !free.is_empty() {
+                let mut big = 0;
+                for (fi, &id) in free.iter().enumerate() {
+                    if buf_cap[id] > buf_cap[free[big]] {
+                        big = fi;
+                    }
+                }
+                best = Some(big);
+            }
+            let id = match best {
+                Some(fi) => {
+                    let id = free.swap_remove(fi);
+                    buf_cap[id] = buf_cap[id].max(need);
+                    id
+                }
+                None => {
+                    buf_cap.push(need);
+                    remaining.push(0);
+                    buf_cap.len() - 1
+                }
+            };
+            remaining[id] = uses;
+            id
+        }
+
+        let mut tensor_buf = vec![usize::MAX; n_nodes];
+        let mut tensor_x7 = vec![usize::MAX; n_nodes];
+        let mut nodes: Vec<PlanNode> = Vec::with_capacity(n_nodes);
+        for (i, (n, op)) in graph.nodes.iter().zip(ops.into_iter()).enumerate() {
+            let out_elems = match &op {
+                PlanOp::Input { .. } => n.cout * n.out_hw.0 * n.out_hw.1,
+                PlanOp::Conv(cp) => cp.cout * cp.oh * cp.ow,
+                PlanOp::Dw(dp) => dp.c * dp.oh * dp.ow,
+                PlanOp::Fc(fp) => fp.cout,
+                PlanOp::Add { .. } | PlanOp::Gap { .. } => {
+                    n.cout * n.out_hw.0 * n.out_hw.1
+                }
+            };
+            let dst = grab(out_elems, plain_uses[i], &mut buf_cap, &mut remaining, &mut free);
+            tensor_buf[i] = dst;
+            let x7 = if quant && x7_uses[i] > 0 {
+                let id =
+                    grab(out_elems, x7_uses[i], &mut buf_cap, &mut remaining, &mut free);
+                tensor_x7[i] = id;
+                // retire the x7-materialization read of dst (it happens
+                // at this node, right after dst is produced)
+                remaining[dst] -= 1;
+                if remaining[dst] == 0 {
+                    free.push(dst);
+                }
+                Some(id)
+            } else {
+                None
+            };
+
+            // resolve inputs, then release them (after dst/x7 are held,
+            // so a freed input can never alias this node's outputs)
+            let mut src = [usize::MAX; 2];
+            let mut src_x7 = None;
+            for (ii, inp) in n.inputs.iter().enumerate().take(2) {
+                let t = node_idx(inp)?;
+                src[ii] = tensor_buf[t];
+                let (reads_plain, reads_x7) = match &op {
+                    PlanOp::Conv(cp) if ii == 0 => (
+                        cp.groups.iter().any(|g| !g.from_x7),
+                        cp.groups.iter().any(|g| g.from_x7),
+                    ),
+                    PlanOp::Fc(fp) if ii == 0 => (
+                        fp.groups.iter().any(|g| !g.from_x7),
+                        fp.groups.iter().any(|g| g.from_x7),
+                    ),
+                    _ => (true, false),
+                };
+                if reads_x7 {
+                    let xb = tensor_x7[t];
+                    if xb == usize::MAX {
+                        return Err(anyhow!("internal: no x7 buffer for '{inp}'"));
+                    }
+                    src_x7 = Some(xb);
+                    remaining[xb] -= 1;
+                    if remaining[xb] == 0 {
+                        free.push(xb);
+                    }
+                }
+                if reads_plain {
+                    remaining[src[ii]] -= 1;
+                    if remaining[src[ii]] == 0 {
+                        free.push(src[ii]);
+                    }
+                }
+            }
+
+            let track_max = matches!(n.op, Op::Conv | Op::DwConv | Op::Add);
+            nodes.push(PlanNode {
+                name: n.name.clone(),
+                op,
+                src,
+                dst,
+                src_x7,
+                x7,
+                out_elems,
+                track_max,
+            });
+        }
+
+        let (c0, h0, w0) = graph.input_shape;
+        Ok(QuantPlan {
+            out_elems: nodes.last().unwrap().out_elems,
+            n_bufs: buf_cap.len(),
+            in_elems: c0 * h0 * w0,
+            nodes,
+        })
+    }
+
+    pub fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    /// Number of distinct arena buffers (tests: should be far below the
+    /// node count on deep graphs).
+    pub fn arena_buffers(&self) -> usize {
+        self.n_bufs
+    }
+
+    pub(crate) fn node_names(&self) -> impl Iterator<Item = (usize, &str, bool)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (i, n.name.as_str(), n.track_max))
+    }
+
+    pub(crate) fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Execute one batch block single-threaded. Returns the logits
+    /// buffer *by move* out of the arena (no final clone). When
+    /// `maxima` is given (len >= n_nodes), per-node post-epilogue
+    /// maxima are folded into it.
+    pub(crate) fn run_block(
+        &self,
+        x: &[f32],
+        batch: usize,
+        ws: &mut Workspace,
+        mut maxima: Option<&mut [f32]>,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.in_elems, "input size");
+        if ws.bufs.len() < self.n_bufs {
+            ws.bufs.resize_with(self.n_bufs, Vec::new);
+        }
+        for (ni, node) in self.nodes.iter().enumerate() {
+            let mut dst = std::mem::take(&mut ws.bufs[node.dst]);
+            dst.clear();
+            dst.resize(node.out_elems * batch, 0.0);
+            match &node.op {
+                PlanOp::Input { quantize } => {
+                    if *quantize {
+                        for (d, &v) in dst.iter_mut().zip(x) {
+                            *d = round_half_even(v * 255.0) / 255.0;
+                        }
+                    } else {
+                        dst.copy_from_slice(x);
+                    }
+                }
+                PlanOp::Conv(cp) => {
+                    let src = ws.bufs[node.src[0]].as_slice();
+                    let src7 = node.src_x7.map(|id| ws.bufs[id].as_slice());
+                    exec_conv(cp, src, src7, batch, &mut ws.panel, &mut ws.cbuf, &mut dst);
+                }
+                PlanOp::Fc(fp) => {
+                    let src = ws.bufs[node.src[0]].as_slice();
+                    let src7 = node.src_x7.map(|id| ws.bufs[id].as_slice());
+                    exec_fc(fp, src, src7, batch, &mut ws.panel, &mut ws.cbuf, &mut dst);
+                }
+                PlanOp::Dw(dp) => {
+                    let src = ws.bufs[node.src[0]].as_slice();
+                    exec_dw(dp, src, batch, 0, dp.c, &mut dst);
+                }
+                PlanOp::Add { relu, scale, quantize } => {
+                    let a = ws.bufs[node.src[0]].as_slice();
+                    let b = ws.bufs[node.src[1]].as_slice();
+                    exec_add(a, b, *relu, *scale, *quantize, &mut dst);
+                }
+                PlanOp::Gap { c, hw } => {
+                    let src = ws.bufs[node.src[0]].as_slice();
+                    exec_gap(src, batch, *c, *hw, &mut dst);
+                }
+            }
+            if let Some(m) = maxima.as_deref_mut() {
+                if node.track_max {
+                    m[ni] = dst.iter().fold(m[ni], |acc, &v| acc.max(v));
+                }
+            }
+            if let Some(x7id) = node.x7 {
+                let mut x7b = std::mem::take(&mut ws.bufs[x7id]);
+                x7b.clear();
+                x7b.resize(dst.len(), 0.0);
+                for (d, &v) in x7b.iter_mut().zip(dst.iter()) {
+                    *d = da7(v);
+                }
+                ws.bufs[x7id] = x7b;
+            }
+            ws.bufs[node.dst] = dst;
+        }
+        std::mem::take(&mut ws.bufs[self.nodes.last().unwrap().dst])
+    }
+
+    /// Execute one block with per-layer (image x output-channel-block)
+    /// tiling over the pool — the small-batch parallel path. Numerics
+    /// are identical to `run_block` at any thread count.
+    pub(crate) fn run_block_tiled(
+        &self,
+        x: &[f32],
+        batch: usize,
+        ws: &mut Workspace,
+        pool: &ThreadPool,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.in_elems, "input size");
+        if ws.bufs.len() < self.n_bufs {
+            ws.bufs.resize_with(self.n_bufs, Vec::new);
+        }
+        let jobs_target = pool.threads().max(1) * 2;
+        for node in self.nodes.iter() {
+            let mut dst = std::mem::take(&mut ws.bufs[node.dst]);
+            dst.clear();
+            dst.resize(node.out_elems * batch, 0.0);
+            match &node.op {
+                PlanOp::Input { quantize } => {
+                    if *quantize {
+                        for (d, &v) in dst.iter_mut().zip(x) {
+                            *d = round_half_even(v * 255.0) / 255.0;
+                        }
+                    } else {
+                        dst.copy_from_slice(x);
+                    }
+                }
+                PlanOp::Conv(cp) => {
+                    let src = ws.bufs[node.src[0]].as_slice();
+                    let src7 = node.src_x7.map(|id| ws.bufs[id].as_slice());
+                    let n = cp.oh * cp.ow;
+                    let kdim = cp.cin * cp.k * cp.k;
+                    let in_elems = cp.cin * cp.hi * cp.wi;
+                    let need_plain = cp.groups.iter().any(|g| !g.from_x7);
+                    let need_x7 = cp.groups.iter().any(|g| g.from_x7);
+                    let nsrc = need_plain as usize + need_x7 as usize;
+                    // phase 1: parallel im2col, one panel per (image, source)
+                    ws.panels.clear();
+                    ws.panels.resize(batch * nsrc * kdim * n, 0.0);
+                    {
+                        let items: Vec<(usize, &mut [f32])> =
+                            ws.panels.chunks_mut(kdim * n).enumerate().collect();
+                        pool.scoped_map(items, |(ci, chunk)| {
+                            let b = ci / nsrc;
+                            // panel kinds per image: [plain, x7] when both
+                            // are needed, otherwise the single one present
+                            let from_x7 = !need_plain || (nsrc == 2 && ci % 2 == 1);
+                            let s = if from_x7 {
+                                src7.expect("x7 buffer missing")
+                            } else {
+                                src
+                            };
+                            im2col(
+                                &s[b * in_elems..(b + 1) * in_elems],
+                                cp.cin, cp.hi, cp.wi, cp.k, cp.stride, cp.pad,
+                                cp.oh, cp.ow, chunk,
+                            );
+                        });
+                    }
+                    // phase 2: parallel GEMM + epilogue over channel blocks
+                    let per_image = (jobs_target / batch.max(1)).max(1);
+                    let cc = ((cp.cout + per_image - 1) / per_image).max(1);
+                    let n_jobs = batch * ((cp.cout + cc - 1) / cc);
+                    ws.tiles.clear();
+                    ws.tiles.resize(n_jobs * cc * n, 0.0);
+                    let panels = ws.panels.as_slice();
+                    let mut items: Vec<(usize, usize, &mut [f32], &mut [f32])> =
+                        Vec::with_capacity(n_jobs);
+                    {
+                        let mut scratch_it = ws.tiles.chunks_mut(cc * n);
+                        for (b, img) in dst.chunks_mut(cp.cout * n).enumerate() {
+                            for (cb, chunk) in img.chunks_mut(cc * n).enumerate() {
+                                items.push((
+                                    b,
+                                    cb * cc,
+                                    chunk,
+                                    scratch_it.next().expect("tile scratch underrun"),
+                                ));
+                            }
+                        }
+                    }
+                    pool.scoped_map(items, |(b, co0, chunk, scratch)| {
+                        let co1 = (co0 + cc).min(cp.cout);
+                        for g in &cp.groups {
+                            let kind = if g.from_x7 && need_plain { 1 } else { 0 };
+                            let panel = &panels
+                                [(b * nsrc + kind) * kdim * n..(b * nsrc + kind + 1) * kdim * n];
+                            let r0 = g.rows.partition_point(|&c| c < co0);
+                            let r1 = g.rows.partition_point(|&c| c < co1);
+                            if r1 == r0 {
+                                continue;
+                            }
+                            let m = r1 - r0;
+                            gemm_seqk(
+                                &g.w[r0 * kdim..r1 * kdim],
+                                panel,
+                                m,
+                                kdim,
+                                n,
+                                &mut scratch[..m * n],
+                            );
+                            for r in 0..m {
+                                let co = g.rows[r0 + r];
+                                let crow = &scratch[r * n..(r + 1) * n];
+                                let drow = &mut chunk[(co - co0) * n..(co - co0 + 1) * n];
+                                epilogue(crow, g.bias[r0 + r], cp.relu, cp.act_scale,
+                                         g.bits, drow);
+                            }
+                        }
+                    });
+                }
+                PlanOp::Fc(fp) => {
+                    let src = ws.bufs[node.src[0]].as_slice();
+                    let src7 = node.src_x7.map(|id| ws.bufs[id].as_slice());
+                    exec_fc(fp, src, src7, batch, &mut ws.panel, &mut ws.cbuf, &mut dst);
+                }
+                PlanOp::Dw(dp) => {
+                    let src = ws.bufs[node.src[0]].as_slice();
+                    let n = dp.oh * dp.ow;
+                    let per_image = (jobs_target / batch.max(1)).max(1);
+                    let cc = ((dp.c + per_image - 1) / per_image).max(1);
+                    let mut items: Vec<(usize, usize, &mut [f32])> = Vec::new();
+                    for (b, img) in dst.chunks_mut(dp.c * n).enumerate() {
+                        for (cb, chunk) in img.chunks_mut(cc * n).enumerate() {
+                            items.push((b, cb * cc, chunk));
+                        }
+                    }
+                    pool.scoped_map(items, |(b, c0, chunk)| {
+                        let c1 = (c0 + cc).min(dp.c);
+                        for (j, ch) in (c0..c1).enumerate() {
+                            dw_channel(dp, src, b, ch, &mut chunk[j * n..(j + 1) * n]);
+                        }
+                    });
+                }
+                PlanOp::Add { relu, scale, quantize } => {
+                    let a = ws.bufs[node.src[0]].as_slice();
+                    let b = ws.bufs[node.src[1]].as_slice();
+                    exec_add(a, b, *relu, *scale, *quantize, &mut dst);
+                }
+                PlanOp::Gap { c, hw } => {
+                    let src = ws.bufs[node.src[0]].as_slice();
+                    exec_gap(src, batch, *c, *hw, &mut dst);
+                }
+            }
+            if let Some(x7id) = node.x7 {
+                let mut x7b = std::mem::take(&mut ws.bufs[x7id]);
+                x7b.clear();
+                x7b.resize(dst.len(), 0.0);
+                for (d, &v) in x7b.iter_mut().zip(dst.iter()) {
+                    *d = da7(v);
+                }
+                ws.bufs[x7id] = x7b;
+            }
+            ws.bufs[node.dst] = dst;
+        }
+        std::mem::take(&mut ws.bufs[self.nodes.last().unwrap().dst])
+    }
+}
+
+/// Fused bias + ReLU + output-grid quantization over one channel row.
+#[inline]
+fn epilogue(acc: &[f32], bias: f32, relu: bool, act_scale: f32, bits: u32, dst: &mut [f32]) {
+    if act_scale > 0.0 {
+        for (d, &v) in dst.iter_mut().zip(acc) {
+            let t = v + bias;
+            let t = if relu { t.max(0.0) } else { t };
+            *d = quant_act(t, act_scale, bits);
+        }
+    } else {
+        for (d, &v) in dst.iter_mut().zip(acc) {
+            let t = v + bias;
+            *d = if relu { t.max(0.0) } else { t };
+        }
+    }
+}
+
+fn exec_conv(
+    cp: &ConvP,
+    src: &[f32],
+    src7: Option<&[f32]>,
+    batch: usize,
+    panel: &mut Vec<f32>,
+    cbuf: &mut Vec<f32>,
+    dst: &mut [f32],
+) {
+    let n = cp.oh * cp.ow;
+    let kdim = cp.cin * cp.k * cp.k;
+    let in_elems = cp.cin * cp.hi * cp.wi;
+    panel.clear();
+    panel.resize(kdim * n, 0.0);
+    for b in 0..batch {
+        for g in &cp.groups {
+            let s = if g.from_x7 { src7.expect("x7 buffer missing") } else { src };
+            im2col(
+                &s[b * in_elems..(b + 1) * in_elems],
+                cp.cin, cp.hi, cp.wi, cp.k, cp.stride, cp.pad, cp.oh, cp.ow, panel,
+            );
+            let m = g.rows.len();
+            cbuf.clear();
+            cbuf.resize(m * n, 0.0);
+            gemm_seqk(&g.w, panel, m, kdim, n, cbuf);
+            for (r, &co) in g.rows.iter().enumerate() {
+                let crow = &cbuf[r * n..(r + 1) * n];
+                let drow = &mut dst[(b * cp.cout + co) * n..(b * cp.cout + co + 1) * n];
+                epilogue(crow, g.bias[r], cp.relu, cp.act_scale, g.bits, drow);
+            }
+        }
+    }
+}
+
+fn exec_fc(
+    fp: &FcP,
+    src: &[f32],
+    src7: Option<&[f32]>,
+    batch: usize,
+    panel: &mut Vec<f32>,
+    cbuf: &mut Vec<f32>,
+    dst: &mut [f32],
+) {
+    panel.clear();
+    panel.resize(fp.cin * batch, 0.0);
+    for g in &fp.groups {
+        let s = if g.from_x7 { src7.expect("x7 buffer missing") } else { src };
+        transpose_into(s, batch, fp.cin, panel);
+        let m = g.rows.len();
+        cbuf.clear();
+        cbuf.resize(m * batch, 0.0);
+        gemm_seqk(&g.w, panel, m, fp.cin, batch, cbuf);
+        for (r, &co) in g.rows.iter().enumerate() {
+            for b in 0..batch {
+                // logits stay float (no relu / no output grid)
+                dst[b * fp.cout + co] = cbuf[r * batch + b] + g.bias[r];
+            }
+        }
+    }
+}
+
+#[inline]
+fn dw_channel(dp: &DwP, src: &[f32], b: usize, ch: usize, drow: &mut [f32]) {
+    let ie = dp.hi * dp.wi;
+    let xs = &src[(b * dp.c + ch) * ie..(b * dp.c + ch + 1) * ie];
+    dwconv_one(
+        xs, dp.hi, dp.wi, &dp.w[ch * dp.k * dp.k..(ch + 1) * dp.k * dp.k], dp.k,
+        dp.stride, dp.pad, dp.oh, dp.ow, drow,
+    );
+    for v in drow.iter_mut() {
+        let t = *v + dp.bias[ch];
+        let t = if dp.relu { t.max(0.0) } else { t };
+        *v = if dp.act_scale > 0.0 { quant_act(t, dp.act_scale, 8) } else { t };
+    }
+}
+
+fn exec_dw(dp: &DwP, src: &[f32], batch: usize, c0: usize, c1: usize, dst: &mut [f32]) {
+    let n = dp.oh * dp.ow;
+    for b in 0..batch {
+        for ch in c0..c1 {
+            let drow = &mut dst[(b * dp.c + ch) * n..(b * dp.c + ch + 1) * n];
+            dw_channel(dp, src, b, ch, drow);
+        }
+    }
+}
+
+fn exec_add(a: &[f32], b: &[f32], relu: bool, scale: f32, quantize: bool, dst: &mut [f32]) {
+    for (i, d) in dst.iter_mut().enumerate() {
+        let v = a[i] + b[i];
+        let v = if relu { v.max(0.0) } else { v };
+        *d = if quantize { quant_act(v, scale, 8) } else { v };
+    }
+}
+
+fn exec_gap(src: &[f32], batch: usize, c: usize, hw: usize, dst: &mut [f32]) {
+    for b in 0..batch {
+        for ch in 0..c {
+            let base = (b * c + ch) * hw;
+            dst[b * c + ch] = src[base..base + hw].iter().sum::<f32>() / hw as f32;
+        }
+    }
+}

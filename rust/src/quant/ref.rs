@@ -1,0 +1,396 @@
+//! Slow reference path — the original naive scalar interpreter, kept
+//! verbatim as the oracle for differential tests of the planned engine
+//! (`quant::infer::QuantNet`).
+//!
+//! Semantics (shared contract, pinned against the AOT `infer_deploy`
+//! HLO in `tests/quant_infer.rs`):
+//!   - weights fake-quantized to the assigned format per channel
+//!     (int8 digital / ternary AIMC, per-layer Eq.-5 scales)
+//!   - the digital sub-conv reads the stored 8-bit activations, the
+//!     AIMC sub-conv re-reads them through the 7-bit D/A (fixed-range
+//!     LSB truncation)
+//!   - mixed output quantization: 8-bit digital channels, 7-bit AIMC
+//!
+//! All values live on their quantization grids; arithmetic is f32 like
+//! the reference graph. The planned engine reproduces this path
+//! bit-for-bit (identical per-element accumulation order), so the
+//! differential tolerance in tests is a safety margin, not slack.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::Mapping;
+use crate::model::{Graph, NodeDef, Op, DIG};
+
+use super::{da7, fake_quant, quant_act, ParamSet};
+
+struct QLayer {
+    /// per-channel effective fake-quantized weights (already masked by
+    /// the assignment: digital channels int8-grid, aimc channels
+    /// ternary-grid), OIHW
+    w_eff: Vec<f32>,
+    bias: Vec<f32>,
+    act_scale: f32,
+    assign: Vec<u8>,
+}
+
+/// The naive interpreter: string-keyed tensor map, fresh allocations
+/// per node, direct scalar convolution. Correct and slow.
+pub struct RefNet<'g> {
+    graph: &'g Graph,
+    layers: BTreeMap<String, QLayer>,
+    dw: BTreeMap<String, QLayer>,
+    add_scales: BTreeMap<String, f32>,
+}
+
+impl<'g> RefNet<'g> {
+    /// Compile from a parameter snapshot.
+    pub fn compile(
+        params: &ParamSet<'_>,
+        graph: &'g Graph,
+        mapping: &Mapping,
+    ) -> Result<Self> {
+        mapping.validate(graph)?;
+        let mut layers = BTreeMap::new();
+        let mut dw = BTreeMap::new();
+        let mut add_scales = BTreeMap::new();
+        for n in &graph.nodes {
+            match n.op {
+                Op::Conv | Op::Fc => {
+                    let w = params.get(&n.name, "w")?;
+                    let s8 = params.get(&n.name, "ls8")?[0].exp();
+                    let st = params.get(&n.name, "lster")?[0].exp();
+                    let assign = mapping.layer(&n.name).to_vec();
+                    let per_ch = w.len() / n.cout;
+                    let mut w_eff = vec![0f32; w.len()];
+                    for co in 0..n.cout {
+                        let (scale, bits) = if assign[co] as usize == DIG {
+                            (s8, 8)
+                        } else {
+                            (st, 2)
+                        };
+                        for k in 0..per_ch {
+                            w_eff[co * per_ch + k] =
+                                fake_quant(w[co * per_ch + k], scale, bits);
+                        }
+                    }
+                    layers.insert(
+                        n.name.clone(),
+                        QLayer {
+                            w_eff,
+                            bias: params.get(&n.name, "b")?.to_vec(),
+                            act_scale: params.get(&n.name, "lsa")?[0].exp(),
+                            assign,
+                        },
+                    );
+                }
+                Op::DwConv => {
+                    let w = params.get(&n.name, "w")?;
+                    let s8 = params.get(&n.name, "ls8")?[0].exp();
+                    dw.insert(
+                        n.name.clone(),
+                        QLayer {
+                            w_eff: w.iter().map(|&v| fake_quant(v, s8, 8)).collect(),
+                            bias: params.get(&n.name, "b")?.to_vec(),
+                            act_scale: params.get(&n.name, "lsa")?[0].exp(),
+                            assign: vec![DIG as u8; n.cout],
+                        },
+                    );
+                }
+                Op::Add => {
+                    add_scales
+                        .insert(n.name.clone(), params.get(&n.name, "lsa")?[0].exp());
+                }
+                _ => {}
+            }
+        }
+        Ok(RefNet { graph, layers, dw, add_scales })
+    }
+
+    /// Forward one batch (NCHW in [0,1]); returns (batch, classes) logits.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let (c0, h0, w0) = self.graph.input_shape;
+        assert_eq!(x.len(), batch * c0 * h0 * w0, "input size");
+        let mut vals: BTreeMap<&str, Vec<f32>> = BTreeMap::new();
+        for n in &self.graph.nodes {
+            let out = match n.op {
+                Op::Input => x
+                    .iter()
+                    .map(|&v| super::round_half_even(v * 255.0) / 255.0)
+                    .collect(),
+                Op::Conv => self.conv_mapped(n, &vals[n.inputs[0].as_str()], batch),
+                Op::Fc => self.fc_mapped(n, &vals[n.inputs[0].as_str()], batch),
+                Op::DwConv => self.dwconv(n, &vals[n.inputs[0].as_str()], batch),
+                Op::Add => {
+                    let a = &vals[n.inputs[0].as_str()];
+                    let b = &vals[n.inputs[1].as_str()];
+                    let s = self.add_scales[&n.name];
+                    a.iter()
+                        .zip(b)
+                        .map(|(x, y)| {
+                            let v = x + y;
+                            let v = if n.relu { v.max(0.0) } else { v };
+                            quant_act(v, s, 8)
+                        })
+                        .collect()
+                }
+                Op::Gap => {
+                    let a = &vals[n.inputs[0].as_str()];
+                    let (c, hw) = (n.cin, n.in_hw.0 * n.in_hw.1);
+                    let mut y = vec![0f32; batch * c];
+                    for b in 0..batch {
+                        for ch in 0..c {
+                            let base = (b * c + ch) * hw;
+                            y[b * c + ch] =
+                                a[base..base + hw].iter().sum::<f32>() / hw as f32;
+                        }
+                    }
+                    y
+                }
+            };
+            vals.insert(&n.name, out);
+        }
+        let out_name = &self.graph.nodes.last().unwrap().name;
+        Ok(vals[out_name.as_str()].clone())
+    }
+
+    fn conv_mapped(&self, n: &NodeDef, inp: &[f32], batch: usize) -> Vec<f32> {
+        let q = &self.layers[&n.name];
+        // AIMC 7-bit D/A input read (fixed [0,1] range, like the graph)
+        let x7: Vec<f32> = inp.iter().map(|&v| da7(v)).collect();
+        let (oh, ow) = n.out_hw;
+        let mut y = vec![0f32; batch * n.cout * oh * ow];
+        for b in 0..batch {
+            for co in 0..n.cout {
+                let dig = q.assign[co] as usize == DIG;
+                let src = if dig { inp } else { &x7 };
+                conv_one_channel(
+                    src, b, n.cin, n.in_hw, &q.w_eff, co, n.k, n.stride, n.pad,
+                    oh, ow,
+                    &mut y[(b * n.cout + co) * oh * ow..(b * n.cout + co + 1) * oh * ow],
+                );
+                let bits = if dig { 8 } else { 7 };
+                for v in
+                    y[(b * n.cout + co) * oh * ow..(b * n.cout + co + 1) * oh * ow].iter_mut()
+                {
+                    let t = *v + q.bias[co];
+                    let t = if n.relu { t.max(0.0) } else { t };
+                    *v = quant_act(t, q.act_scale, bits);
+                }
+            }
+        }
+        y
+    }
+
+    fn fc_mapped(&self, n: &NodeDef, inp: &[f32], batch: usize) -> Vec<f32> {
+        let q = &self.layers[&n.name];
+        let x7: Vec<f32> = inp.iter().map(|&v| da7(v)).collect();
+        let mut y = vec![0f32; batch * n.cout];
+        for b in 0..batch {
+            for co in 0..n.cout {
+                let src = if q.assign[co] as usize == DIG { inp } else { &x7 };
+                let mut acc = 0f32;
+                for ci in 0..n.cin {
+                    acc += src[b * n.cin + ci] * q.w_eff[co * n.cin + ci];
+                }
+                y[b * n.cout + co] = acc + q.bias[co]; // logits stay float
+            }
+        }
+        y
+    }
+
+    fn dwconv(&self, n: &NodeDef, inp: &[f32], batch: usize) -> Vec<f32> {
+        let q = &self.dw[&n.name];
+        let (oh, ow) = n.out_hw;
+        let mut y = vec![0f32; batch * n.cout * oh * ow];
+        for b in 0..batch {
+            for ch in 0..n.cout {
+                let dst = &mut y[(b * n.cout + ch) * oh * ow
+                    ..(b * n.cout + ch + 1) * oh * ow];
+                dw_one_channel(inp, b, n.cin, n.in_hw, &q.w_eff, ch, n.k, n.stride,
+                               n.pad, oh, ow, dst);
+                for v in dst.iter_mut() {
+                    let t = *v + q.bias[ch];
+                    let t = if n.relu { t.max(0.0) } else { t };
+                    *v = quant_act(t, q.act_scale, 8);
+                }
+            }
+        }
+        y
+    }
+}
+
+/// Naive float (quantization-free) calibration forward — the original
+/// `calibrate_act_maxima`, kept as the oracle for the engine-based
+/// rewrite in `quant::infer`.
+pub fn calibrate_act_maxima_ref(
+    params: &ParamSet<'_>,
+    graph: &Graph,
+    x: &[f32],
+    batch: usize,
+) -> Result<BTreeMap<String, f32>> {
+    let mut maxima = BTreeMap::new();
+    let mut vals: BTreeMap<&str, Vec<f32>> = BTreeMap::new();
+    for n in &graph.nodes {
+        let out: Vec<f32> = match n.op {
+            Op::Input => x.to_vec(),
+            Op::Conv | Op::DwConv => {
+                let inp = &vals[n.inputs[0].as_str()];
+                let w = params.get(&n.name, "w")?;
+                let b = params.get(&n.name, "b")?;
+                let (oh, ow) = n.out_hw;
+                let mut y = vec![0f32; batch * n.cout * oh * ow];
+                for bb in 0..batch {
+                    for co in 0..n.cout {
+                        let dst = &mut y[(bb * n.cout + co) * oh * ow
+                            ..(bb * n.cout + co + 1) * oh * ow];
+                        if n.op == Op::Conv {
+                            conv_one_channel(inp, bb, n.cin, n.in_hw, w, co, n.k,
+                                             n.stride, n.pad, oh, ow, dst);
+                        } else {
+                            dw_one_channel(inp, bb, n.cin, n.in_hw, w, co, n.k,
+                                           n.stride, n.pad, oh, ow, dst);
+                        }
+                        for v in dst.iter_mut() {
+                            *v += b[co];
+                            if n.relu {
+                                *v = v.max(0.0);
+                            }
+                        }
+                    }
+                }
+                y
+            }
+            Op::Fc => {
+                let inp = &vals[n.inputs[0].as_str()];
+                let w = params.get(&n.name, "w")?;
+                let b = params.get(&n.name, "b")?;
+                let mut y = vec![0f32; batch * n.cout];
+                for bb in 0..batch {
+                    for co in 0..n.cout {
+                        let mut acc = 0f32;
+                        for ci in 0..n.cin {
+                            acc += inp[bb * n.cin + ci] * w[co * n.cin + ci];
+                        }
+                        y[bb * n.cout + co] = acc + b[co];
+                    }
+                }
+                y
+            }
+            Op::Add => {
+                let a = &vals[n.inputs[0].as_str()];
+                let c = &vals[n.inputs[1].as_str()];
+                a.iter()
+                    .zip(c)
+                    .map(|(x, y)| {
+                        let v = x + y;
+                        if n.relu { v.max(0.0) } else { v }
+                    })
+                    .collect()
+            }
+            Op::Gap => {
+                let a = &vals[n.inputs[0].as_str()];
+                let (c, hw) = (n.cin, n.in_hw.0 * n.in_hw.1);
+                let mut y = vec![0f32; batch * c];
+                for bb in 0..batch {
+                    for ch in 0..c {
+                        let base = (bb * c + ch) * hw;
+                        y[bb * c + ch] = a[base..base + hw].iter().sum::<f32>() / hw as f32;
+                    }
+                }
+                y
+            }
+        };
+        if matches!(n.op, Op::Conv | Op::DwConv | Op::Add) {
+            let m = out.iter().fold(0f32, |m, &v| m.max(v));
+            maxima.insert(n.name.clone(), m);
+        }
+        vals.insert(&n.name, out);
+    }
+    Ok(maxima)
+}
+
+/// One depthwise output channel (cin == cout, channel ch reads ch).
+#[allow(clippy::too_many_arguments)]
+fn dw_one_channel(
+    x: &[f32],
+    b: usize,
+    cin: usize,
+    in_hw: (usize, usize),
+    w: &[f32],
+    ch: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    let (hi, wi) = in_hw;
+    let xbase = (b * cin + ch) * hi * wi;
+    let wrow = ch * k * k;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0f32;
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy >= hi as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if ix < 0 || ix >= wi as isize {
+                        continue;
+                    }
+                    acc += x[xbase + iy as usize * wi + ix as usize] * w[wrow + ky * k + kx];
+                }
+            }
+            out[oy * ow + ox] = acc;
+        }
+    }
+}
+
+/// Accumulate one output channel of a standard conv into `out`.
+#[allow(clippy::too_many_arguments)]
+fn conv_one_channel(
+    x: &[f32],
+    b: usize,
+    cin: usize,
+    in_hw: (usize, usize),
+    w: &[f32],
+    co: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    let (hi, wi) = in_hw;
+    let wbase = co * cin * k * k;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0f32;
+            for ci in 0..cin {
+                let xbase = (b * cin + ci) * hi * wi;
+                let wrow = wbase + ci * k * k;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= hi as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        acc += x[xbase + iy as usize * wi + ix as usize]
+                            * w[wrow + ky * k + kx];
+                    }
+                }
+            }
+            out[oy * ow + ox] = acc;
+        }
+    }
+}

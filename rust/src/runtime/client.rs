@@ -13,7 +13,8 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
-use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::xla::{self, ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifact::{Dtype, GraphMeta, TensorMeta};
 

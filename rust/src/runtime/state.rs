@@ -6,7 +6,8 @@
 //! per step at two memcpys of the state.
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
+
+use crate::xla::Literal;
 
 use super::artifact::ArtifactMeta;
 use super::client::{literal_for, literal_to_f32};

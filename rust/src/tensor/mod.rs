@@ -109,6 +109,25 @@ impl Tensor {
         self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
     }
 
+    /// Largest element (`-inf` when empty) — the activation-calibration
+    /// reduction (post-ReLU maxima set the e^lsa grids).
+    pub fn max(&self) -> f32 {
+        self.data.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+    }
+
+    /// Index of the first maximum element (top-1 class of a logits
+    /// row). Panics on an empty tensor — index 0 would be out of range.
+    pub fn argmax(&self) -> usize {
+        assert!(!self.data.is_empty(), "argmax of empty tensor");
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
     pub fn mean(&self) -> f32 {
         if self.data.is_empty() {
             return 0.0;
@@ -198,5 +217,13 @@ mod tests {
         let b = Tensor::from_vec(&[3], vec![-2.0, 1.0, 1.0]);
         assert_eq!(a.abs_max(), 2.0);
         assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    fn max_and_argmax() {
+        let a = Tensor::from_vec(&[4], vec![-2.0, 3.5, 1.0, 3.5]);
+        assert_eq!(a.max(), 3.5);
+        assert_eq!(a.argmax(), 1); // first maximum wins
+        assert_eq!(Tensor::zeros(&[0]).max(), f32::NEG_INFINITY);
     }
 }

@@ -74,16 +74,47 @@ impl ThreadPool {
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        self.scoped_map(items, f)
+    }
+
+    /// [`Self::map`] without the `'static` bounds: items, results and
+    /// the closure may borrow from the caller's stack (slices of a
+    /// tensor, `&self` of an engine, disjoint `&mut` chunks of an
+    /// output buffer), which is what the inference engine fans out.
+    ///
+    /// Must NOT be called from inside a pool job: the caller blocks on
+    /// the same queue its sub-jobs wait in, which can deadlock once
+    /// every worker is a blocked caller.
+    pub fn scoped_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
         let n = items.len();
-        let f = Arc::new(f);
+        if n == 0 {
+            return Vec::new();
+        }
+        let fref = &f;
         let (rtx, rrx) = channel::<(usize, std::thread::Result<R>)>();
         for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
             let rtx = rtx.clone();
-            self.spawn(move || {
-                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| fref(item)));
                 let _ = rtx.send((i, r));
             });
+            // SAFETY: the loop below blocks until every job has sent a
+            // result (including caught panics), so all borrows captured
+            // by `job` strictly outlive its execution on a worker; the
+            // transmute only erases the lifetime, not the layout.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+            };
+            self.tx
+                .as_ref()
+                .expect("pool shut down")
+                .send(job)
+                .expect("pool queue closed");
         }
         drop(rtx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
@@ -147,6 +178,35 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn scoped_map_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<i32> = (0..100).collect();
+        let refs: Vec<&i32> = data.iter().collect();
+        let out = pool.scoped_map(refs, |v: &i32| *v * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_disjoint_mut_chunks() {
+        let pool = ThreadPool::new(3);
+        let mut buf = vec![0u32; 90];
+        let items: Vec<(usize, &mut [u32])> = buf.chunks_mut(30).enumerate().collect();
+        pool.scoped_map(items, |(i, chunk)| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (i * 30 + j) as u32;
+            }
+        });
+        assert_eq!(buf, (0..90).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn scoped_map_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.scoped_map(Vec::<i32>::new(), |v| v);
+        assert!(out.is_empty());
     }
 
     #[test]

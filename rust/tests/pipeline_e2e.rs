@@ -43,11 +43,11 @@ fn infer_logits(
     meta: &ArtifactMeta,
     values: &[Vec<f32>],
     mapping: &Mapping,
-    x: &xla::Literal,
+    x: &odimo::xla::Literal,
 ) -> Vec<f32> {
     let exe = rt.load(meta.graph("infer_deploy").unwrap()).unwrap();
     let params = ParamState::from_host(meta, values.to_vec()).unwrap();
-    let assigns: std::collections::BTreeMap<String, xla::Literal> = meta
+    let assigns: std::collections::BTreeMap<String, odimo::xla::Literal> = meta
         .mappable
         .iter()
         .map(|name| {

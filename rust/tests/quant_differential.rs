@@ -1,0 +1,132 @@
+//! Differential property tests for the planned quantized engine: under
+//! seeded random channel mappings the im2col/GEMM engine must match the
+//! naive interpreter oracle (`quant::ref`, the pre-rewrite code) within
+//! 1e-4 on the logits, and the pooled paths must be bit-deterministic
+//! across thread counts. No artifacts needed — parameters are synthetic.
+
+use odimo::coordinator::Mapping;
+use odimo::model::{resnet20, tinycnn, Graph, AIMC};
+use odimo::quant::r#ref::{calibrate_act_maxima_ref, RefNet};
+use odimo::quant::{
+    calibrate_act_maxima_params, synth_mapping as random_mapping, synth_params, ParamSet,
+    QuantNet,
+};
+use odimo::util::pool::ThreadPool;
+use odimo::util::prng::Pcg32;
+
+fn random_input(g: &Graph, batch: usize, seed: u64) -> Vec<f32> {
+    let (c, h, w) = g.input_shape;
+    let mut rng = Pcg32::new(seed, 77);
+    (0..batch * c * h * w).map(|_| rng.next_f32()).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+#[test]
+fn engine_matches_oracle_random_mappings_tinycnn() {
+    let g = tinycnn();
+    let (names, values) = synth_params(&g, 101);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let x = random_input(&g, 6, 41);
+    for seed in [1u64, 2, 3, 4, 5] {
+        let mapping = random_mapping(&g, seed);
+        let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping).unwrap();
+        let got = engine.forward(&x, 6).unwrap();
+        let want = oracle.forward(&x, 6).unwrap();
+        let d = max_abs_diff(&got, &want);
+        assert!(d < 1e-4, "seed {seed}: engine diverged from oracle by {d}");
+    }
+}
+
+#[test]
+fn engine_matches_oracle_random_mapping_resnet20() {
+    let g = resnet20();
+    let (names, values) = synth_params(&g, 202);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let x = random_input(&g, 2, 43);
+    for seed in [9u64, 10] {
+        let mapping = random_mapping(&g, seed);
+        let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping).unwrap();
+        let got = engine.forward(&x, 2).unwrap();
+        let want = oracle.forward(&x, 2).unwrap();
+        let d = max_abs_diff(&got, &want);
+        assert!(d < 1e-4, "seed {seed}: engine diverged from oracle by {d}");
+    }
+}
+
+#[test]
+fn uniform_aimc_matches_oracle_resnet20() {
+    // all-AIMC exercises the once-per-tensor 7-bit D/A path everywhere
+    let g = resnet20();
+    let (names, values) = synth_params(&g, 303);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let x = random_input(&g, 1, 47);
+    let mapping = Mapping::uniform(&g, AIMC);
+    let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
+    let oracle = RefNet::compile(&params, &g, &mapping).unwrap();
+    let d = max_abs_diff(&engine.forward(&x, 1).unwrap(), &oracle.forward(&x, 1).unwrap());
+    assert!(d < 1e-4, "all-AIMC diverged by {d}");
+}
+
+#[test]
+fn pool_parallelism_is_deterministic_resnet20() {
+    // batch 4 against 1 / 2 / 8 workers walks every execution mode:
+    // plain forward (t=1), batch-block (t=2, batch >= threads), and
+    // per-layer channel tiling (t=8, batch < threads)
+    let g = resnet20();
+    let (names, values) = synth_params(&g, 404);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let mapping = random_mapping(&g, 21);
+    let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
+    let x = random_input(&g, 4, 53);
+    let want = engine.forward(&x, 4).unwrap();
+    for threads in [1usize, 2, 8] {
+        let pool = ThreadPool::new(threads);
+        let got = engine.forward_pool(&x, 4, &pool).unwrap();
+        assert_eq!(got, want, "{threads}-thread pool changed the logits");
+    }
+}
+
+#[test]
+fn tiled_small_batch_is_deterministic() {
+    // batch < threads takes the per-layer (image x channel-block) path
+    let g = tinycnn();
+    let (names, values) = synth_params(&g, 505);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let mapping = random_mapping(&g, 31);
+    let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
+    for batch in [1usize, 3] {
+        let x = random_input(&g, batch, 59);
+        let want = engine.forward(&x, batch).unwrap();
+        for threads in [2usize, 8] {
+            let pool = ThreadPool::new(threads);
+            let got = engine.forward_pool(&x, batch, &pool).unwrap();
+            assert_eq!(got, want, "batch {batch} x {threads} threads diverged");
+        }
+    }
+}
+
+#[test]
+fn calibrate_engine_matches_naive_reference() {
+    for (g, seed) in [(tinycnn(), 606u64), (resnet20(), 707)] {
+        let (names, values) = synth_params(&g, seed);
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+        let x = random_input(&g, 2, 61);
+        let got = calibrate_act_maxima_params(&params, &g, &x, 2).unwrap();
+        let want = calibrate_act_maxima_ref(&params, &g, &x, 2).unwrap();
+        assert_eq!(got.len(), want.len(), "{}: node set differs", g.name);
+        for (k, v) in &got {
+            let wv = want[k];
+            assert!(
+                (v - wv).abs() <= 1e-5 * wv.abs().max(1.0),
+                "{}/{k}: engine max {v} vs reference {wv}",
+                g.name
+            );
+        }
+    }
+}

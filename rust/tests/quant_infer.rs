@@ -29,7 +29,7 @@ fn hlo_logits(
     let exe = rt.load(meta.graph("infer_deploy").unwrap()).unwrap();
     let params = ParamState::from_host(meta, values.to_vec()).unwrap();
     let xl = literal_f32(x, shape).unwrap();
-    let assigns: std::collections::BTreeMap<String, xla::Literal> = meta
+    let assigns: std::collections::BTreeMap<String, odimo::xla::Literal> = meta
         .mappable
         .iter()
         .map(|name| {

@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check bench-infer bench artifacts clean
+.PHONY: build test check bench-infer bench-sim bench artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -25,6 +25,14 @@ bench-infer:
 	$(CARGO) bench --bench bench_infer
 	@test -f BENCH_infer.json && echo "BENCH_infer.json updated" || \
 		echo "warning: BENCH_infer.json missing"
+
+# SoC simulator throughput (DIANA + the 3-accelerator example platform,
+# plus min-cost construction). Emits BENCH_simulator.json at repo root
+# and appends to results/bench_simulator.csv.
+bench-sim:
+	$(CARGO) bench --bench bench_simulator
+	@test -f BENCH_simulator.json && echo "BENCH_simulator.json updated" || \
+		echo "warning: BENCH_simulator.json missing"
 
 # All harness = false bench binaries.
 bench:

@@ -59,19 +59,19 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(diff < 1e-3, "partition changed the network!");
 
     // simulate on DIANA
-    let rep = deploy(g, &part.mapping, SocConfig::default());
+    let rep = deploy(g, &part.mapping, &odimo::hw::Platform::diana(), SocConfig::default());
     println!(
         "\nDIANA simulation: {:.3} ms | {:.2} uJ | D/A util {:.1}%/{:.1}% | both-busy {:.1}%",
         rep.run.latency_ms,
         rep.run.energy_uj,
         100.0 * rep.run.util[0],
         100.0 * rep.run.util[1],
-        100.0 * rep.run.timeline.utilization().both_frac,
+        100.0 * rep.run.timeline.utilization().all_busy_frac,
     );
     println!("\nper-layer busy cycles (first 8 rows):");
     println!("{:<12} {:>10} {:>10} {:>10}", "layer", "digital", "aimc", "span");
-    for (layer, d, a, span) in rep.run.timeline.per_layer().into_iter().take(8) {
-        println!("{layer:<12} {d:>10} {a:>10} {span:>10}");
+    for (layer, busy, span) in rep.run.timeline.per_layer().into_iter().take(8) {
+        println!("{layer:<12} {:>10} {:>10} {span:>10}", busy[0], busy[1]);
     }
     Ok(())
 }
@@ -92,7 +92,7 @@ fn infer(
             let n = meta.model.node(name).unwrap();
             (
                 name.clone(),
-                literal_f32(&mapping.onehot(name), &[2, n.cout]).unwrap(),
+                literal_f32(&mapping.onehot(name, 2), &[2, n.cout]).unwrap(),
             )
         })
         .collect();

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     let pipe = Pipeline::new(&rt, &meta, Schedule::smoke());
     let folded = pipe.pretrained_folded()?;
 
-    let mut points = pipe.sweep(&folded, Regularizer::EnergyDiana, &[0.05, 0.3, 1.0, 3.0])?;
+    let mut points = pipe.sweep(&folded, &Regularizer::EnergyDiana, &[0.05, 0.3, 1.0, 3.0])?;
     for b in ["all_8bit", "all_ternary", "min_cost_en"] {
         match pipe.baseline_point(&folded, b) {
             Ok(p) => points.push(p),

@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let folded = pipe.pretrained_folded()?;
 
     // one ODiMO point with the Eq.-4 energy regularizer
-    let odimo_pt = pipe.search_point(&folded, Regularizer::EnergyDiana, 30.0)?;
+    let odimo_pt = pipe.search_point(&folded, &Regularizer::EnergyDiana, 30.0)?;
     // the trivial all-digital mapping for reference
     let base = pipe.baseline_point(&folded, "all_8bit")?;
 

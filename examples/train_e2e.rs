@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     print_curve("search", &hist);
 
     // ---- phase 4: discretize + fine-tune --------------------------------
-    let mapping = discretize(&meta.model, &tr.alphas()?)?;
+    let mapping = discretize(&meta.model, &tr.alphas()?, meta.hw.n_acc())?;
     println!(
         "== phase 4: discretized mapping — {:.1}% of channels on AIMC; fine-tune ({} steps)",
         100.0 * mapping.aimc_fraction(),
@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- deploy ----------------------------------------------------------
     let ev = tr.eval("eval_deploy", Some(&mapping), 2)?;
-    let rep = deploy(&meta.model, &mapping, SocConfig::default());
+    let rep = deploy(&meta.model, &mapping, &odimo::hw::Platform::diana(), SocConfig::default());
     println!("\n== deployment on the DIANA simulator");
     println!(
         "   accuracy {:.4} | latency {:.3} ms | energy {:.2} uJ | D/A util {:.1}%/{:.1}%",

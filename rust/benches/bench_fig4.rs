@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use odimo::coordinator::scheduler::deploy;
 use odimo::coordinator::{discretize::discretize, Mapping, SearchPoint};
 use odimo::hw::soc::SocConfig;
+use odimo::hw::Platform;
 use odimo::metrics::{ascii_scatter, pareto_front, points_csv};
 use odimo::model::resnet20;
 use odimo::util::bench::{black_box, Bench};
@@ -29,13 +30,13 @@ fn main() {
         })
         .collect();
     b.run("discretize_resnet20", || {
-        black_box(discretize(&g, &alphas).unwrap());
+        black_box(discretize(&g, &alphas, 2).unwrap());
     });
 
     // deployment costing of one mapping
-    let mapping = discretize(&g, &alphas).unwrap();
+    let mapping = discretize(&g, &alphas, 2).unwrap();
     b.run("deploy_cost_resnet20", || {
-        black_box(deploy(&g, &mapping, SocConfig::default()));
+        black_box(deploy(&g, &mapping, &Platform::diana(), SocConfig::default()));
     });
 
     // pareto + reporting over a sweep-sized point set
@@ -47,7 +48,7 @@ fn main() {
             latency_ms: rng.next_f32() as f64 * 2.0,
             energy_uj: rng.next_f32() as f64 * 40.0,
             total_cycles: 1000 + i as u64,
-            util: [0.9, 0.3],
+            util: vec![0.9, 0.3],
             aimc_channel_frac: 0.5,
             mapping: Mapping::uniform(&g, 0),
         })

@@ -3,20 +3,22 @@
 //! split of each model (the exact work behind `odimo fig6`).
 
 use odimo::hw::soc::{simulate, ChannelSplit, SocConfig};
+use odimo::hw::Platform;
 use odimo::model::{build, ALL_MODELS};
 use odimo::util::bench::{black_box, Bench};
 
 fn main() {
     let mut b = Bench::new("fig6");
+    let p = Platform::diana();
     for name in ALL_MODELS {
         let g = build(name).unwrap();
         let split: ChannelSplit = g
             .mappable()
             .iter()
-            .map(|n| (n.name.clone(), (n.cout / 2, n.cout - n.cout / 2)))
+            .map(|n| (n.name.clone(), vec![n.cout / 2, n.cout - n.cout / 2]))
             .collect();
         b.run(&format!("timeline_util_{name}"), || {
-            let r = simulate(&g, &split, SocConfig::default());
+            let r = simulate(&g, &split, &p, SocConfig::default());
             black_box(r.timeline.utilization());
             black_box(r.timeline.per_layer());
             black_box(r.timeline.render_ascii(72));

@@ -7,6 +7,7 @@
 
 use std::fmt::Write as _;
 
+use odimo::hw::Platform;
 use odimo::model::{resnet20, tinycnn, Graph};
 use odimo::quant::r#ref::RefNet;
 use odimo::quant::{synth_mapping as random_mapping, synth_params, ParamSet, QuantNet};
@@ -30,8 +31,8 @@ fn bench_model(b: &mut Bench, g: &Graph, json: &mut String) {
     let (names, values) = synth_params(g, 11);
     let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
     let mapping = random_mapping(g, 3);
-    let engine = QuantNet::compile_params(&params, g, &mapping).unwrap();
-    let oracle = RefNet::compile(&params, g, &mapping).unwrap();
+    let engine = QuantNet::compile_params(&params, g, &mapping, &Platform::diana()).unwrap();
+    let oracle = RefNet::compile(&params, g, &mapping, &Platform::diana()).unwrap();
     let x = random_input(g, BATCH, 7);
 
     // correctness gate: never publish numbers off a diverged engine

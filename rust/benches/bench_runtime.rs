@@ -51,7 +51,7 @@ fn main() {
         .iter()
         .map(|name| {
             let n = g.node(name).unwrap();
-            (name.clone(), literal_f32(&mapping.onehot(name), &[2, n.cout]).unwrap())
+            (name.clone(), literal_f32(&mapping.onehot(name, 2), &[2, n.cout]).unwrap())
         })
         .collect();
     let eb = ds.batch(0, g.eval_batch);

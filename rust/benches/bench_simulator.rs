@@ -1,28 +1,76 @@
-//! Bench: DIANA SoC simulator throughput (the L3 inner loop behind
-//! every experiment driver). One full end-to-end inference costing per
-//! model, plus the min-cost baseline construction (exhaustive per-layer
-//! split enumeration).
+//! Bench: SoC simulator throughput (the L3 inner loop behind every
+//! experiment driver). One full end-to-end inference costing per model
+//! on the DIANA platform, a 3-accelerator run on the example platform,
+//! plus the min-cost baseline construction (exhaustive per-layer split
+//! enumeration). Writes `BENCH_simulator.json` at the repo root (same
+//! shape as BENCH_infer.json) so the perf trajectory covers the
+//! simulator: `make bench-sim`.
+
+use std::fmt::Write as _;
 
 use odimo::coordinator::baselines;
 use odimo::hw::soc::{simulate, split_all_digital, SocConfig};
+use odimo::hw::Platform;
 use odimo::model::{build, ALL_MODELS};
-use odimo::util::bench::{black_box, Bench};
+use odimo::util::bench::{black_box, Bench, Stats};
+
+fn runs_per_s(s: &Stats) -> f64 {
+    1e9 / s.median_ns
+}
 
 fn main() {
     let mut b = Bench::new("simulator");
+    let diana = Platform::diana();
+    let tri = Platform::diana_ne16();
+    let mut json = String::from("{\n");
+    let mut first = true;
+
     for name in ALL_MODELS {
         let g = build(name).unwrap();
         let split = split_all_digital(&g);
-        b.run(&format!("simulate_{name}"), || {
-            black_box(simulate(&g, &split, SocConfig::default()));
+        let s2 = b.run(&format!("simulate_{name}"), || {
+            black_box(simulate(&g, &split, &diana, SocConfig::default()));
         });
+        // 3-accelerator example platform: even thirds per layer
+        let split3 = baselines::even_split(&g, 3).channel_split(3);
+        let s3 = b.run(&format!("simulate3_{name}"), || {
+            black_box(simulate(&g, &split3, &tri, SocConfig::default()));
+        });
+        if !first {
+            json.push_str(",\n");
+        }
+        first = false;
+        let _ = write!(
+            json,
+            "  \"{name}\": {{\n    \"sim_median_ns\": {:.0},\n    \"sim_runs_per_s\": {:.1},\n    \"sim3_median_ns\": {:.0},\n    \"sim3_runs_per_s\": {:.1}\n  }}",
+            s2.median_ns,
+            runs_per_s(&s2),
+            s3.median_ns,
+            runs_per_s(&s3)
+        );
     }
+
     let g = build("resnet20").unwrap();
-    b.run("min_cost_lat_resnet20", || {
-        black_box(baselines::min_cost(&g, baselines::CostObjective::Latency));
+    let mc_lat = b.run("min_cost_lat_resnet20", || {
+        black_box(baselines::min_cost(&g, &diana, baselines::CostObjective::Latency));
     });
-    b.run("min_cost_en_resnet20", || {
-        black_box(baselines::min_cost(&g, baselines::CostObjective::Energy));
+    let mc_en = b.run("min_cost_en_resnet20", || {
+        black_box(baselines::min_cost(&g, &diana, baselines::CostObjective::Energy));
     });
+    let mc3 = b.run("min_cost_lat3_resnet20", || {
+        black_box(baselines::min_cost(&g, &tri, baselines::CostObjective::Latency));
+    });
+    let _ = write!(
+        json,
+        ",\n  \"min_cost\": {{\n    \"lat_resnet20_ns\": {:.0},\n    \"en_resnet20_ns\": {:.0},\n    \"lat3_resnet20_ns\": {:.0}\n  }}\n}}\n",
+        mc_lat.median_ns, mc_en.median_ns, mc3.median_ns
+    );
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_simulator.json");
+    if let Err(e) = std::fs::write(path, &json) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
     b.finish();
 }

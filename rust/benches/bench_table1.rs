@@ -5,20 +5,22 @@
 use odimo::coordinator::baselines::{self, BASELINE_NAMES};
 use odimo::coordinator::scheduler::deploy;
 use odimo::hw::soc::SocConfig;
+use odimo::hw::Platform;
 use odimo::model::{build, ALL_MODELS};
 use odimo::util::bench::{black_box, Bench};
 
 fn main() {
     let mut b = Bench::new("table1");
+    let p = Platform::diana();
     for name in ALL_MODELS {
         let g = build(name).unwrap();
         let mappings: Vec<_> = BASELINE_NAMES
             .iter()
-            .map(|bn| baselines::by_name(&g, bn).unwrap())
+            .map(|bn| baselines::by_name(&g, &p, bn).unwrap())
             .collect();
         b.run(&format!("deploy_all_baselines_{name}"), || {
             for m in &mappings {
-                black_box(deploy(&g, m, SocConfig::default()));
+                black_box(deploy(&g, m, &p, SocConfig::default()));
             }
         });
     }

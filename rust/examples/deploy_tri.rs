@@ -1,0 +1,80 @@
+//! 3-accelerator deployment example — proves the platform registry's
+//! generality end-to-end with no artifacts required.
+//!
+//! Loads the shipped `config/diana_ne16.toml` platform (DIANA's int8 PE
+//! array + ternary AIMC macro, plus an NE16-style 4-bit digital unit),
+//! builds min-cost and even-split mappings of ResNet20 across all three
+//! units, deploys them on the simulator, and prints a report with
+//! per-unit utilization for every accelerator.
+//!
+//!     cargo run --release --example deploy_tri
+
+use odimo::coordinator::{baselines, scheduler::deploy};
+use odimo::hw::soc::SocConfig;
+use odimo::hw::Platform;
+
+fn main() -> anyhow::Result<()> {
+    odimo::util::logging::init();
+    // prefer the TOML (exercising the config path); fall back to the
+    // identical built-in when run from an unexpected cwd
+    let platform = Platform::from_toml_file(std::path::Path::new("config/diana_ne16.toml"))
+        .unwrap_or_else(|_| Platform::diana_ne16());
+    let g = odimo::model::resnet20();
+    println!(
+        "platform {}: {} accelerators ({})",
+        platform.name,
+        platform.n_acc(),
+        platform.acc_names().join(", ")
+    );
+
+    for name in ["even_split", "min_cost_lat", "min_cost_en", "all_8bit"] {
+        let mapping = baselines::by_name(&g, &platform, name).expect("baseline");
+        mapping.validate(&g, platform.n_acc())?;
+        let rep = deploy(&g, &mapping, &platform, SocConfig::default());
+        let util = platform
+            .accelerators
+            .iter()
+            .zip(&rep.run.util)
+            .map(|(a, u)| format!("{} {:5.1}%", a.name, 100.0 * u))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        let ch = platform
+            .accelerators
+            .iter()
+            .zip(&rep.run.channel_frac)
+            .map(|(a, f)| format!("{} {:4.1}%", a.name, 100.0 * f))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        println!(
+            "\n{name:>14}: {:.3} ms | {:.2} uJ | {} cycles",
+            rep.run.latency_ms, rep.run.energy_uj, rep.run.total_cycles
+        );
+        println!("{:>14}  util: {util}", "");
+        println!("{:>14}  ch:   {ch}", "");
+    }
+
+    // per-layer breakdown of the even split (first rows)
+    let mapping = baselines::even_split(&g, platform.n_acc());
+    let rep = deploy(&g, &mapping, &platform, SocConfig::default());
+    println!("\nper-layer busy cycles, even_split (first 8 rows):");
+    print!("{:<12}", "layer");
+    for a in &platform.accelerators {
+        print!(" {:>10}", a.name);
+    }
+    println!(" {:>10}", "span");
+    for (layer, busy, span) in rep.run.timeline.per_layer().into_iter().take(8) {
+        print!("{layer:<12}");
+        for b in &busy {
+            print!(" {b:>10}");
+        }
+        println!(" {span:>10}");
+    }
+    let u = rep.run.timeline.utilization();
+    println!(
+        "\nall-busy {:.1}% | idle {:.1}% | union {:.1}%",
+        100.0 * u.all_busy_frac,
+        100.0 * u.idle_frac,
+        100.0 * u.union_frac
+    );
+    Ok(())
+}

@@ -13,6 +13,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::Schedule;
+use crate::hw::Platform;
 
 /// Everything a pipeline/experiment run needs.
 #[derive(Clone, Debug)]
@@ -25,6 +26,8 @@ pub struct RunConfig {
     pub lambdas: Vec<f32>,
     /// Non-ideal L1 modeling in the simulator (ablation knob).
     pub non_ideal_l1: bool,
+    /// Deployment target SoC (built-in name or loaded from TOML).
+    pub platform: Platform,
 }
 
 impl Default for RunConfig {
@@ -37,6 +40,7 @@ impl Default for RunConfig {
             schedule: Schedule::default(),
             lambdas: vec![0.5, 2.0, 6.0, 15.0],
             non_ideal_l1: false,
+            platform: Platform::diana(),
         }
     }
 }
@@ -81,6 +85,9 @@ impl RunConfig {
                         .collect::<Result<Vec<f32>>>()?;
                 }
                 ("hw.non_ideal_l1", TomlValue::Bool(b)) => self.non_ideal_l1 = *b,
+                ("hw.platform", TomlValue::Str(s)) => {
+                    self.platform = Platform::resolve(s)?;
+                }
                 (key, _) => return Err(anyhow!("unknown or mistyped config key '{key}'")),
             }
         }
@@ -103,7 +110,8 @@ mod tests {
     fn apply_overrides() {
         let doc = parse_toml(
             "[run]\nmodel = \"tinycnn\"\ndata_seed = 7\n[schedule]\nsearch_steps = 11\n\
-             [search]\nlambdas = [0.1, 1.0]\n[hw]\nnon_ideal_l1 = true\n",
+             [search]\nlambdas = [0.1, 1.0]\n[hw]\nnon_ideal_l1 = true\n\
+             platform = \"diana_ne16\"\n",
         )
         .unwrap();
         let mut c = RunConfig::default();
@@ -113,6 +121,7 @@ mod tests {
         assert_eq!(c.schedule.search_steps, 11);
         assert_eq!(c.lambdas, vec![0.1, 1.0]);
         assert!(c.non_ideal_l1);
+        assert_eq!(c.platform.n_acc(), 3);
     }
 
     #[test]

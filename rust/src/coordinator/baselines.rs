@@ -1,17 +1,19 @@
-//! Baseline mappings (paper Sec. IV-A):
+//! Baseline mappings (paper Sec. IV-A), platform-generic:
 //!
-//! * **All-8bit** / **All-Ternary** — everything on one accelerator.
+//! * **All-8bit** / **All-Ternary** — everything on accelerator 0 / 1
+//!   (the DIANA digital / AIMC units on DIANA-family platforms).
 //! * **IO-8bit / Backbone-Ternary** — the DIANA authors' rule of thumb:
-//!   first and last layers on the 8-bit digital accelerator, everything
-//!   in between ternary on the AIMC macro.
+//!   first and last layers on accelerator 0, everything in between on
+//!   accelerator 1.
+//! * **Even-Split** — channels round-robined over every platform
+//!   accelerator (the N-accelerator smoke baseline).
 //! * **Min-Cost** — ODiMO's channel-wise granularity, but statically
-//!   minimizing Eq. 3 (latency) or Eq. 4 (energy) with no accuracy term;
-//!   ties maximize digital channels ("since this is expected to improve
-//!   accuracy").
+//!   minimizing Eq. 3 (latency) or Eq. 4 (energy) with no accuracy
+//!   term; ties maximize earlier accelerators ("digital channels are
+//!   maximized since this is expected to improve accuracy").
 
-use crate::hw::energy::{P_ACT, P_IDLE};
-use crate::hw::latency::layer_lats;
-use crate::model::{Graph, AIMC, DIG};
+use crate::hw::Platform;
+use crate::model::{Graph, NodeDef, AIMC, DIG};
 
 use super::mapping::Mapping;
 
@@ -29,7 +31,7 @@ pub fn all_ternary(graph: &Graph) -> Mapping {
     Mapping::uniform(graph, AIMC)
 }
 
-/// First and last mappable layers digital, backbone ternary.
+/// First and last mappable layers on accelerator 0, backbone on 1.
 pub fn io8_backbone_ternary(graph: &Graph) -> Mapping {
     let mappable = graph.mappable();
     let n = mappable.len();
@@ -43,58 +45,151 @@ pub fn io8_backbone_ternary(graph: &Graph) -> Mapping {
     m
 }
 
-/// Channel-wise static cost minimization. Per layer, enumerate every
-/// split (cout <= 512 for all benchmarks, so exhaustive search is
-/// exact and instant) and keep the cheapest; ties pick the split with
-/// the most digital channels.
-pub fn min_cost(graph: &Graph, objective: CostObjective) -> Mapping {
-    let mut m = Mapping::uniform(graph, DIG);
+/// Channels round-robined across all `n_acc` accelerators.
+pub fn even_split(graph: &Graph, n_acc: usize) -> Mapping {
+    let mut m = Mapping::uniform(graph, 0);
     for node in graph.mappable() {
-        let mut best_cd = node.cout;
-        let mut best_cost = f64::INFINITY;
-        for cd in (0..=node.cout).rev() {
-            // reverse order: at equal cost, the larger cd (seen first)
-            // is kept -> digital maximized on ties
-            let ca = node.cout - cd;
-            let (ld, la) = layer_lats(node, cd as u64, ca as u64);
-            let span = ld.max(la) as f64;
-            let cost = match objective {
-                CostObjective::Latency => span,
-                CostObjective::Energy => {
-                    P_ACT[DIG] * ld as f64
-                        + P_IDLE[DIG] * (span - ld as f64)
-                        + P_ACT[AIMC] * la as f64
-                        + P_IDLE[AIMC] * (span - la as f64)
-                }
-            };
-            if cost < best_cost {
-                best_cost = cost;
-                best_cd = cd;
+        let ids = (0..node.cout).map(|c| (c % n_acc) as u8).collect();
+        m.assign.insert(node.name.clone(), ids);
+    }
+    m
+}
+
+/// Per-layer cost of a candidate count vector under the objective.
+fn layer_cost(
+    platform: &Platform,
+    node: &NodeDef,
+    counts: &[usize],
+    lats: &mut [u64],
+    objective: CostObjective,
+) -> f64 {
+    for (i, &c) in counts.iter().enumerate() {
+        lats[i] = platform.layer_cycles(i, node, c as u64);
+    }
+    let span = lats.iter().copied().max().unwrap_or(0) as f64;
+    match objective {
+        CostObjective::Latency => span,
+        CostObjective::Energy => {
+            let mut cost = 0.0;
+            for (i, spec) in platform.accelerators.iter().enumerate() {
+                cost += spec.p_act_mw * lats[i] as f64;
+                cost += spec.p_idle_mw * (span - lats[i] as f64);
             }
+            cost
         }
-        let mut ids = vec![DIG as u8; node.cout];
-        ids[best_cd..].fill(AIMC as u8);
+    }
+}
+
+/// Enumeration granularity keeping the per-layer composition count
+/// bounded on platforms with many accelerators: the number of
+/// compositions of `cout` channels in multiples of `step` over `n_acc`
+/// units is C(cout/step + n - 1, n - 1), which explodes for n > 3.
+/// Step 1 (exact enumeration) is preserved for every realistic
+/// (cout <= 512, n <= 3) case — including the built-in platforms —
+/// so the historical tie-break behavior is unchanged there.
+fn enum_step(cout: usize, n_acc: usize) -> usize {
+    const LIMIT: f64 = 300_000.0;
+    let mut step = 1usize;
+    loop {
+        let m = (cout / step) as f64;
+        let mut comps = 1.0f64;
+        for i in 0..n_acc.saturating_sub(1) {
+            comps *= (m + i as f64 + 1.0) / (i as f64 + 1.0);
+        }
+        if comps <= LIMIT || step >= cout.max(1) {
+            return step;
+        }
+        step *= 2;
+    }
+}
+
+/// Enumerate channel-count compositions of `rem` over accelerators
+/// `acc..n_acc` (in multiples of `step`, plus the exact remainder),
+/// earlier accelerators taking the larger share first so that
+/// strict-improvement keeps the earliest (digital-heaviest) split on
+/// ties.
+#[allow(clippy::too_many_arguments)]
+fn min_cost_layer(
+    platform: &Platform,
+    node: &NodeDef,
+    objective: CostObjective,
+    acc: usize,
+    rem: usize,
+    step: usize,
+    counts: &mut Vec<usize>,
+    lats: &mut [u64],
+    best: &mut Option<(f64, Vec<usize>)>,
+) {
+    let n_acc = platform.n_acc();
+    if acc == n_acc - 1 {
+        counts[acc] = rem;
+        let cost = layer_cost(platform, node, counts, lats, objective);
+        match best {
+            Some((b, _)) if cost >= *b => {}
+            _ => *best = Some((cost, counts.clone())),
+        }
+        return;
+    }
+    // candidates: rem itself, then multiples of step descending (for
+    // step == 1 this is exactly rem, rem-1, ..., 0)
+    let mut c = rem;
+    loop {
+        counts[acc] = c;
+        min_cost_layer(platform, node, objective, acc + 1, rem - c, step, counts, lats,
+                       best);
+        if c == 0 {
+            break;
+        }
+        let top = (rem / step) * step;
+        c = if c == rem && top != rem { top } else { c.saturating_sub(step) };
+    }
+}
+
+/// Channel-wise static cost minimization. Per layer, enumerate every
+/// split (cout <= 512 for all benchmarks, so exhaustive search is exact
+/// and, for the 2-3 accelerator platforms modeled here, instant; many-
+/// accelerator TOML platforms fall back to a coarser channel
+/// granularity, see [`enum_step`]) and keep the cheapest; ties pick the
+/// split with the most channels on the earliest accelerators.
+pub fn min_cost(graph: &Graph, platform: &Platform, objective: CostObjective) -> Mapping {
+    let n_acc = platform.n_acc();
+    let mut m = Mapping::uniform(graph, 0);
+    let mut lats = vec![0u64; n_acc];
+    for node in graph.mappable() {
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        let mut counts = vec![0usize; n_acc];
+        let step = enum_step(node.cout, n_acc);
+        min_cost_layer(platform, node, objective, 0, node.cout, step, &mut counts,
+                       &mut lats, &mut best);
+        let (_, counts) = best.expect("at least one composition");
+        // contiguous runs: acc 0 channels first, then acc 1, ...
+        let mut ids = Vec::with_capacity(node.cout);
+        for (i, &c) in counts.iter().enumerate() {
+            ids.extend(std::iter::repeat(i as u8).take(c));
+        }
         m.assign.insert(node.name.clone(), ids);
     }
     m
 }
 
 /// All baselines by name (experiment drivers / CLI).
-pub fn by_name(graph: &Graph, name: &str) -> Option<Mapping> {
+pub fn by_name(graph: &Graph, platform: &Platform, name: &str) -> Option<Mapping> {
     Some(match name {
         "all_8bit" => all_8bit(graph),
         "all_ternary" => all_ternary(graph),
         "io8_backbone_ternary" => io8_backbone_ternary(graph),
-        "min_cost_lat" => min_cost(graph, CostObjective::Latency),
-        "min_cost_en" => min_cost(graph, CostObjective::Energy),
+        "even_split" => even_split(graph, platform.n_acc()),
+        "min_cost_lat" => min_cost(graph, platform, CostObjective::Latency),
+        "min_cost_en" => min_cost(graph, platform, CostObjective::Energy),
         _ => return None,
     })
 }
 
-pub const BASELINE_NAMES: [&str; 5] = [
+pub const BASELINE_NAMES: [&str; 6] = [
     "all_8bit",
     "all_ternary",
     "io8_backbone_ternary",
+    "even_split",
     "min_cost_lat",
     "min_cost_en",
 ];
@@ -112,15 +207,16 @@ mod tests {
         assert!(m.layer("stem").iter().all(|&v| v == DIG as u8));
         assert!(m.layer("fc").iter().all(|&v| v == DIG as u8));
         assert!(m.layer("b4_conv1").iter().all(|&v| v == AIMC as u8));
-        m.validate(&g).unwrap();
+        m.validate(&g, 2).unwrap();
     }
 
     #[test]
     fn min_cost_latency_beats_all_single_acc() {
         let g = resnet20();
+        let p = Platform::diana();
         let cfg = SocConfig::default();
-        let lat = |m: &Mapping| simulate(&g, &m.channel_split(), cfg).total_cycles;
-        let mc = lat(&min_cost(&g, CostObjective::Latency));
+        let lat = |m: &Mapping| simulate(&g, &m.channel_split(2), &p, cfg).total_cycles;
+        let mc = lat(&min_cost(&g, &p, CostObjective::Latency));
         assert!(mc <= lat(&all_8bit(&g)));
         assert!(mc <= lat(&all_ternary(&g)));
     }
@@ -128,9 +224,10 @@ mod tests {
     #[test]
     fn min_cost_energy_beats_all_8bit() {
         let g = resnet20();
+        let p = Platform::diana();
         let cfg = SocConfig::default();
-        let en = |m: &Mapping| simulate(&g, &m.channel_split(), cfg).energy_uj;
-        assert!(en(&min_cost(&g, CostObjective::Energy)) <= en(&all_8bit(&g)));
+        let en = |m: &Mapping| simulate(&g, &m.channel_split(2), &p, cfg).energy_uj;
+        assert!(en(&min_cost(&g, &p, CostObjective::Energy)) <= en(&all_8bit(&g)));
     }
 
     #[test]
@@ -138,7 +235,7 @@ mod tests {
         // the AIMC macro dominates, so min-cost should push most
         // channels analog (paper Table I: Min-Cost = 97.5% A.Ch.)
         let g = resnet20();
-        let m = min_cost(&g, CostObjective::Latency);
+        let m = min_cost(&g, &Platform::diana(), CostObjective::Latency);
         assert!(m.aimc_fraction() > 0.6, "aimc frac {}", m.aimc_fraction());
     }
 
@@ -147,16 +244,51 @@ mod tests {
         // a hypothetical layer where several splits tie: tinycnn fc is
         // tiny; just assert validity + digital-heavy under energy
         let g = tinycnn();
-        let m = min_cost(&g, CostObjective::Energy);
-        m.validate(&g).unwrap();
+        let m = min_cost(&g, &Platform::diana(), CostObjective::Energy);
+        m.validate(&g, 2).unwrap();
+    }
+
+    #[test]
+    fn min_cost_three_acc_uses_best_units() {
+        let g = resnet20();
+        let p = Platform::diana_ne16();
+        let m = min_cost(&g, &p, CostObjective::Latency);
+        m.validate(&g, 3).unwrap();
+        // the 3-acc optimum can only improve on the 2-acc optimum
+        let m2 = min_cost(&g, &Platform::diana(), CostObjective::Latency);
+        let cfg = SocConfig::default();
+        let l3 = simulate(&g, &m.channel_split(3), &p, cfg).total_cycles;
+        let l2 = simulate(&g, &m2.channel_split(3), &p, cfg).total_cycles;
+        assert!(l3 <= l2, "3-acc min_cost {l3} worse than 2-acc {l2}");
+    }
+
+    #[test]
+    fn enum_step_exact_for_builtin_platforms() {
+        // every benchmark layer (cout <= 512) enumerates exactly on the
+        // 2- and 3-accelerator built-ins; only many-unit custom
+        // platforms coarsen
+        assert_eq!(enum_step(512, 2), 1);
+        assert_eq!(enum_step(512, 3), 1);
+        assert_eq!(enum_step(64, 3), 1);
+        assert!(enum_step(512, 6) > 1);
+    }
+
+    #[test]
+    fn even_split_covers_all_units() {
+        let g = resnet20();
+        let m = even_split(&g, 3);
+        m.validate(&g, 3).unwrap();
+        let f = m.channel_frac(3);
+        assert!(f.iter().all(|&x| x > 0.2), "{f:?}");
     }
 
     #[test]
     fn by_name_covers_all() {
         let g = tinycnn();
+        let p = Platform::diana();
         for n in BASELINE_NAMES {
-            assert!(by_name(&g, n).is_some(), "{n}");
+            assert!(by_name(&g, &p, n).is_some(), "{n}");
         }
-        assert!(by_name(&g, "nope").is_none());
+        assert!(by_name(&g, &p, "nope").is_none());
     }
 }

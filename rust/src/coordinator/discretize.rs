@@ -5,23 +5,32 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::{Graph, N_ACC};
+use crate::model::Graph;
 
 use super::mapping::Mapping;
 
-/// alpha: layer name -> flattened (N_ACC, Cout) logits, row-major.
-pub fn discretize(graph: &Graph, alphas: &BTreeMap<String, Vec<f32>>) -> Result<Mapping> {
+/// alpha: layer name -> flattened (n_acc, Cout) logits, row-major.
+/// `n_acc` is the accelerator count the alphas were trained against
+/// (the platform's, or the artifact contract's 2 for the AOT graphs).
+pub fn discretize(
+    graph: &Graph,
+    alphas: &BTreeMap<String, Vec<f32>>,
+    n_acc: usize,
+) -> Result<Mapping> {
+    if n_acc == 0 {
+        return Err(anyhow!("discretize: n_acc must be positive"));
+    }
     let mut assign = BTreeMap::new();
     for node in graph.mappable() {
         let a = alphas
             .get(&node.name)
             .ok_or_else(|| anyhow!("no alphas for layer '{}'", node.name))?;
-        if a.len() != N_ACC * node.cout {
+        if a.len() != n_acc * node.cout {
             return Err(anyhow!(
                 "layer {}: {} logits for {}x{} expected",
                 node.name,
                 a.len(),
-                N_ACC,
+                n_acc,
                 node.cout
             ));
         }
@@ -29,7 +38,7 @@ pub fn discretize(graph: &Graph, alphas: &BTreeMap<String, Vec<f32>>) -> Result<
         for c in 0..node.cout {
             let mut best = 0usize;
             let mut best_v = a[c]; // row 0
-            for acc in 1..N_ACC {
+            for acc in 1..n_acc {
                 let v = a[acc * node.cout + c];
                 if v > best_v {
                     best_v = v;
@@ -41,7 +50,7 @@ pub fn discretize(graph: &Graph, alphas: &BTreeMap<String, Vec<f32>>) -> Result<
         assign.insert(node.name.clone(), ids);
     }
     let m = Mapping { assign };
-    m.validate(graph)?;
+    m.validate(graph, n_acc)?;
     Ok(m)
 }
 
@@ -70,7 +79,7 @@ mod tests {
     fn argmax_per_channel() {
         let g = tinycnn();
         let al = logits(&g, |_, c| if c % 2 == 0 { (1.0, 0.0) } else { (0.0, 1.0) });
-        let m = discretize(&g, &al).unwrap();
+        let m = discretize(&g, &al, 2).unwrap();
         for n in g.mappable() {
             for c in 0..n.cout {
                 let want = if c % 2 == 0 { DIG } else { AIMC } as u8;
@@ -81,12 +90,34 @@ mod tests {
 
     #[test]
     fn ties_go_digital() {
-        // equal logits -> digital (index 0) wins, matching the paper's
-        // "digital channels are maximized" tie-break
+        // equal logits -> accelerator 0 (digital) wins, matching the
+        // paper's "digital channels are maximized" tie-break
         let g = tinycnn();
         let al = logits(&g, |_, _| (0.5, 0.5));
-        let m = discretize(&g, &al).unwrap();
+        let m = discretize(&g, &al, 2).unwrap();
         assert_eq!(m.aimc_fraction(), 0.0);
+    }
+
+    #[test]
+    fn three_acc_argmax() {
+        let g = tinycnn();
+        let al: BTreeMap<String, Vec<f32>> = g
+            .mappable()
+            .iter()
+            .map(|n| {
+                let mut v = vec![0f32; 3 * n.cout];
+                for c in 0..n.cout {
+                    v[(c % 3) * n.cout + c] = 1.0; // winner cycles 0,1,2
+                }
+                (n.name.clone(), v)
+            })
+            .collect();
+        let m = discretize(&g, &al, 3).unwrap();
+        for n in g.mappable() {
+            for c in 0..n.cout {
+                assert_eq!(m.layer(&n.name)[c], (c % 3) as u8);
+            }
+        }
     }
 
     #[test]
@@ -94,7 +125,7 @@ mod tests {
         let g = tinycnn();
         let mut al = logits(&g, |_, _| (1.0, 0.0));
         al.remove("fc");
-        assert!(discretize(&g, &al).is_err());
+        assert!(discretize(&g, &al, 2).is_err());
     }
 
     #[test]
@@ -102,6 +133,9 @@ mod tests {
         let g = tinycnn();
         let mut al = logits(&g, |_, _| (1.0, 0.0));
         al.get_mut("stem").unwrap().pop();
-        assert!(discretize(&g, &al).is_err());
+        assert!(discretize(&g, &al, 2).is_err());
+        // the same logits against the wrong accelerator count also fail
+        let al2 = logits(&g, |_, _| (1.0, 0.0));
+        assert!(discretize(&g, &al2, 3).is_err());
     }
 }

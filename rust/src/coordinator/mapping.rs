@@ -1,29 +1,32 @@
 //! Channel-to-accelerator mapping: the object ODiMO searches for.
 //!
 //! A [`Mapping`] assigns every output channel of every mappable layer to
-//! one accelerator (DIG = digital int8, AIMC = ternary analog). It
-//! reduces to per-layer counts for the simulator ([`ChannelSplit`]) and
-//! expands to the one-hot `assign:` input tensors of the deploy-mode
-//! AOT graphs.
+//! one accelerator (an index into the platform's ordered accelerator
+//! list; on DIANA: 0 = digital int8, 1 = ternary AIMC). It reduces to
+//! per-layer counts for the simulator ([`ChannelSplit`]) and expands to
+//! the one-hot `assign:` input tensors of the deploy-mode AOT graphs.
+//!
+//! The mapping itself is platform-agnostic — validation against a
+//! concrete accelerator count happens wherever a platform is in scope.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
 use crate::hw::soc::ChannelSplit;
-use crate::model::{Graph, AIMC, DIG, N_ACC};
+use crate::model::Graph;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Mapping {
-    /// layer name -> accelerator id per output channel (0 = DIG, 1 = AIMC)
+    /// layer name -> accelerator id per output channel
     pub assign: BTreeMap<String, Vec<u8>>,
 }
 
 impl Mapping {
     /// All channels of every mappable layer on one accelerator.
     pub fn uniform(graph: &Graph, acc: usize) -> Self {
-        assert!(acc < N_ACC);
+        assert!(acc < u8::MAX as usize);
         Mapping {
             assign: graph
                 .mappable()
@@ -37,9 +40,9 @@ impl Mapping {
         &self.assign[name]
     }
 
-    /// Validate against the graph: every mappable layer present, channel
-    /// counts match, ids in range.
-    pub fn validate(&self, graph: &Graph) -> Result<()> {
+    /// Validate against the graph and an accelerator count: every
+    /// mappable layer present, channel counts match, ids in range.
+    pub fn validate(&self, graph: &Graph, n_acc: usize) -> Result<()> {
         for n in graph.mappable() {
             let a = self
                 .assign
@@ -53,8 +56,11 @@ impl Mapping {
                     n.cout
                 ));
             }
-            if a.iter().any(|&v| v as usize >= N_ACC) {
-                return Err(anyhow!("layer {}: accelerator id out of range", n.name));
+            if a.iter().any(|&v| v as usize >= n_acc) {
+                return Err(anyhow!(
+                    "layer {}: accelerator id out of range (platform has {n_acc})",
+                    n.name
+                ));
             }
         }
         if self.assign.len() != graph.mappable().len() {
@@ -67,36 +73,50 @@ impl Mapping {
         Ok(())
     }
 
-    /// Per-layer (digital, aimc) counts for the simulator.
-    pub fn channel_split(&self) -> ChannelSplit {
+    /// Per-layer channel counts per accelerator for the simulator.
+    pub fn channel_split(&self, n_acc: usize) -> ChannelSplit {
         self.assign
             .iter()
             .map(|(name, a)| {
-                let ca = a.iter().filter(|&&v| v as usize == AIMC).count();
-                (name.clone(), (a.len() - ca, ca))
+                let mut counts = vec![0usize; n_acc];
+                for &v in a {
+                    counts[v as usize] += 1;
+                }
+                (name.clone(), counts)
             })
             .collect()
     }
 
-    /// Fraction of all channels on the AIMC accelerator (Table I "A. Ch.").
-    pub fn aimc_fraction(&self) -> f64 {
+    /// Fraction of all channels assigned to accelerator `acc`.
+    pub fn acc_fraction(&self, acc: usize) -> f64 {
         let total: usize = self.assign.values().map(|a| a.len()).sum();
         if total == 0 {
             return 0.0;
         }
-        let aimc: usize = self
+        let on: usize = self
             .assign
             .values()
-            .map(|a| a.iter().filter(|&&v| v as usize == AIMC).count())
+            .map(|a| a.iter().filter(|&&v| v as usize == acc).count())
             .sum();
-        aimc as f64 / total as f64
+        on as f64 / total as f64
     }
 
-    /// One-hot (N_ACC, Cout) f32 tensor for the `assign:<layer>` input.
-    pub fn onehot(&self, name: &str) -> Vec<f32> {
+    /// Per-accelerator channel fractions.
+    pub fn channel_frac(&self, n_acc: usize) -> Vec<f64> {
+        (0..n_acc).map(|i| self.acc_fraction(i)).collect()
+    }
+
+    /// Fraction of channels on the AIMC accelerator (Table I "A. Ch.";
+    /// accelerator 1 on DIANA-family platforms).
+    pub fn aimc_fraction(&self) -> f64 {
+        self.acc_fraction(crate::model::AIMC)
+    }
+
+    /// One-hot (n_acc, Cout) f32 tensor for the `assign:<layer>` input.
+    pub fn onehot(&self, name: &str, n_acc: usize) -> Vec<f32> {
         let a = &self.assign[name];
         let c = a.len();
-        let mut v = vec![0f32; N_ACC * c];
+        let mut v = vec![0f32; n_acc * c];
         for (i, &acc) in a.iter().enumerate() {
             v[acc as usize * c + i] = 1.0;
         }
@@ -135,13 +155,13 @@ impl Mapping {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::tinycnn;
+    use crate::model::{tinycnn, AIMC, DIG};
 
     #[test]
     fn uniform_mappings() {
         let g = tinycnn();
         let d = Mapping::uniform(&g, DIG);
-        assert!(d.validate(&g).is_ok());
+        assert!(d.validate(&g, 2).is_ok());
         assert_eq!(d.aimc_fraction(), 0.0);
         let a = Mapping::uniform(&g, AIMC);
         assert_eq!(a.aimc_fraction(), 1.0);
@@ -152,9 +172,24 @@ mod tests {
         let g = tinycnn();
         let mut m = Mapping::uniform(&g, DIG);
         m.assign.get_mut("c1").unwrap()[0..5].fill(AIMC as u8);
-        let s = m.channel_split();
-        assert_eq!(s["c1"], (11, 5));
-        assert_eq!(s["stem"], (8, 0));
+        let s = m.channel_split(2);
+        assert_eq!(s["c1"], vec![11, 5]);
+        assert_eq!(s["stem"], vec![8, 0]);
+    }
+
+    #[test]
+    fn three_acc_split_counts() {
+        let g = tinycnn();
+        let mut m = Mapping::uniform(&g, 0);
+        let c1 = m.assign.get_mut("c1").unwrap();
+        c1[0..4].fill(1);
+        c1[4..6].fill(2);
+        assert!(m.validate(&g, 3).is_ok());
+        assert!(m.validate(&g, 2).is_err(), "id 2 out of range on a 2-acc platform");
+        let s = m.channel_split(3);
+        assert_eq!(s["c1"], vec![10, 4, 2]);
+        assert_eq!(m.channel_frac(3).len(), 3);
+        assert!((m.channel_frac(3).iter().sum::<f64>() - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -162,7 +197,7 @@ mod tests {
         let g = tinycnn();
         let mut m = Mapping::uniform(&g, DIG);
         m.assign.get_mut("stem").unwrap()[2] = AIMC as u8;
-        let oh = m.onehot("stem");
+        let oh = m.onehot("stem", 2);
         let c = 8;
         assert_eq!(oh.len(), 2 * c);
         assert_eq!(oh[2], 0.0); // dig row, channel 2
@@ -188,9 +223,9 @@ mod tests {
         let g = tinycnn();
         let mut m = Mapping::uniform(&g, DIG);
         m.assign.get_mut("c1").unwrap().pop();
-        assert!(m.validate(&g).is_err());
+        assert!(m.validate(&g, 2).is_err());
         let mut m2 = Mapping::uniform(&g, DIG);
         m2.assign.remove("fc");
-        assert!(m2.validate(&g).is_err());
+        assert!(m2.validate(&g, 2).is_err());
     }
 }

@@ -102,7 +102,8 @@ pub fn partition(
     mapping: &Mapping,
     values: &[Vec<f32>],
 ) -> Result<Partitioned> {
-    mapping.validate(graph)?;
+    let n_acc = meta.hw.n_acc();
+    mapping.validate(graph, n_acc)?;
     let leaf_idx: BTreeMap<&str, usize> = meta
         .params
         .iter()
@@ -198,8 +199,10 @@ pub fn partition(
             }
         }
         if let Some(i) = get(&n.name, "alpha") {
-            // (N_ACC, C): permute the channel axis (columns)
-            permute_cols(&mut out_values[i], crate::model::N_ACC, out_perm, 1);
+            // (n_acc, C): permute the channel axis (columns); the row
+            // count comes from the leaf itself, not a global constant
+            let rows = out_values[i].len() / n.cout.max(1);
+            permute_cols(&mut out_values[i], rows, out_perm, 1);
         }
         // input-channel fixup from the producer of our input tensor
         let in_perm = &perms[&n.inputs[0]];
@@ -229,7 +232,7 @@ pub fn partition(
         new_assign.insert(n.name.clone(), reordered);
     }
     let new_mapping = Mapping { assign: new_assign };
-    new_mapping.validate(graph)?;
+    new_mapping.validate(graph, n_acc)?;
 
     Ok(Partitioned { perms, values: out_values, mapping: new_mapping, fragments })
 }

@@ -1,16 +1,17 @@
 //! Deployment scheduler: dispatches a partitioned network onto the
-//! DIANA SoC simulator.
+//! platform's SoC simulator.
 //!
 //! Per mappable layer the (post-partition) assignment decomposes into
-//! contiguous sub-layers; both accelerators start in parallel on their
+//! contiguous sub-layers; all accelerators start in parallel on their
 //! sub-layers (paper Sec. III-A: parallel execution minimizes both time
 //! and idle energy). Fragmented secondary producers (see partition.rs)
-//! pay one extra weight-DMA term per extra fragment on the digital
-//! side — the AIMC cell-programming term is already per-tile.
+//! pay one extra weight-DMA term per extra fragment on every PE-array
+//! accelerator — IMC cell-programming terms are already per-tile.
 
 use std::collections::BTreeMap;
 
 use crate::hw::soc::{simulate, ChannelSplit, RunReport, SocConfig};
+use crate::hw::{LatencyModel, Platform};
 use crate::model::Graph;
 
 use super::mapping::Mapping;
@@ -19,30 +20,42 @@ use super::partition::sublayers;
 #[derive(Clone, Debug)]
 pub struct DeployReport {
     pub run: RunReport,
-    /// Extra digital DMA cycles charged for fragmentation.
+    /// Extra weight-DMA cycles charged for fragmentation.
     pub fragment_overhead_cycles: u64,
     pub fragments: BTreeMap<String, usize>,
 }
 
 /// Cost a mapping on the simulator, including fragmentation overhead.
-pub fn deploy(graph: &Graph, mapping: &Mapping, cfg: SocConfig) -> DeployReport {
-    let split: ChannelSplit = mapping.channel_split();
-    let run = simulate(graph, &split, cfg);
-    // fragmentation: each extra digital fragment refills the PE weight
-    // registers once more (the second addend of Eq. 7 per fragment)
+pub fn deploy(
+    graph: &Graph,
+    mapping: &Mapping,
+    platform: &Platform,
+    cfg: SocConfig,
+) -> DeployReport {
+    let n_acc = platform.n_acc();
+    let split: ChannelSplit = mapping.channel_split(n_acc);
+    let run = simulate(graph, &split, platform, cfg);
+    // fragmentation: each extra fragment on a PE-array accelerator
+    // refills its weight registers once more (the second addend of the
+    // Eq.-7-style model per fragment)
     let mut overhead = 0u64;
     let mut fragments = BTreeMap::new();
     for node in graph.mappable() {
         let assign = mapping.layer(&node.name);
         let subs = sublayers(node, assign);
         fragments.insert(node.name.clone(), subs.len());
-        let dig_frags = subs.iter().filter(|s| s.0 == crate::model::DIG as u8).count();
-        if dig_frags > 1 {
-            let (cd, _) = split[&node.name];
-            // extra DMA = (frags-1) * per-channel weight load already in
-            // Eq. 7's second term, approximated as proportional share
-            let dma_total = node.cin as u64 * cd as u64 * (node.k * node.k) as u64;
-            overhead += (dig_frags as u64 - 1) * dma_total / (cd.max(1) as u64);
+        for (acc, spec) in platform.accelerators.iter().enumerate() {
+            if !matches!(spec.latency, LatencyModel::DigitalPe { .. }) {
+                continue;
+            }
+            let acc_frags = subs.iter().filter(|s| s.0 as usize == acc).count();
+            if acc_frags > 1 {
+                let c = split[&node.name][acc];
+                // extra DMA = (frags-1) * per-channel weight load already
+                // in the model's second term, as a proportional share
+                let dma_total = node.cin as u64 * c as u64 * (node.k * node.k) as u64;
+                overhead += (acc_frags as u64 - 1) * dma_total / (c.max(1) as u64);
+            }
         }
     }
     DeployReport { run, fragment_overhead_cycles: overhead, fragments }
@@ -57,6 +70,7 @@ mod tests {
     #[test]
     fn contiguous_mapping_no_overhead() {
         let g = tinycnn();
+        let p = Platform::diana();
         let mut m = Mapping::uniform(&g, DIG);
         // grouped: first half digital, second half aimc
         for n in g.mappable() {
@@ -64,7 +78,7 @@ mod tests {
             ids[n.cout / 2..].fill(AIMC as u8);
             m.assign.insert(n.name.clone(), ids);
         }
-        let rep = deploy(&g, &m, SocConfig::default());
+        let rep = deploy(&g, &m, &p, SocConfig::default());
         assert_eq!(rep.fragment_overhead_cycles, 0);
         assert!(rep.fragments.values().all(|&f| f <= 2));
     }
@@ -72,12 +86,13 @@ mod tests {
     #[test]
     fn interleaved_mapping_pays_overhead() {
         let g = tinycnn();
+        let p = Platform::diana();
         let mut m = Mapping::uniform(&g, DIG);
         for n in g.mappable() {
             let ids = (0..n.cout).map(|i| (i % 2) as u8).collect();
             m.assign.insert(n.name.clone(), ids);
         }
-        let rep = deploy(&g, &m, SocConfig::default());
+        let rep = deploy(&g, &m, &p, SocConfig::default());
         assert!(rep.fragment_overhead_cycles > 0);
         assert!(rep.fragments.values().any(|&f| f > 2));
     }
@@ -85,10 +100,24 @@ mod tests {
     #[test]
     fn report_matches_simulator() {
         let g = tinycnn();
+        let p = Platform::diana();
         let m = Mapping::uniform(&g, DIG);
-        let rep = deploy(&g, &m, SocConfig::default());
-        let direct = simulate(&g, &m.channel_split(), SocConfig::default());
+        let rep = deploy(&g, &m, &p, SocConfig::default());
+        let direct = simulate(&g, &m.channel_split(2), &p, SocConfig::default());
         assert_eq!(rep.run.total_cycles, direct.total_cycles);
         assert_eq!(rep.run.energy_uj, direct.energy_uj);
+    }
+
+    #[test]
+    fn three_acc_deploy_reports_all_units() {
+        let g = tinycnn();
+        let p = Platform::diana_ne16();
+        let m = crate::coordinator::baselines::even_split(&g, 3);
+        let rep = deploy(&g, &m, &p, SocConfig::default());
+        assert_eq!(rep.run.util.len(), 3);
+        assert!(rep.run.util.iter().all(|&u| u > 0.0), "{:?}", rep.run.util);
+        // interleaved round-robin fragments across three units
+        assert!(rep.fragments.values().any(|&f| f > 3));
+        assert!(rep.fragment_overhead_cycles > 0);
     }
 }

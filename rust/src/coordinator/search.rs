@@ -6,16 +6,20 @@
 //!   3. SEARCH: optimize Eq. 2 = task loss + lambda * L_R
 //!   4. discretize: argmax alpha per channel
 //!   5. fine-tune at exact precision under the fixed assignment
-//!   6. deploy: partition pass + DIANA simulator -> Table-I metrics
+//!   6. deploy: partition pass + SoC simulator -> Table-I metrics
 //!
 //! Each lambda value yields one point in the accuracy-vs-cost plane;
-//! the sweep plus the baselines regenerates Fig. 4 / Fig. 5.
+//! the sweep plus the baselines regenerates Fig. 4 / Fig. 5. The
+//! deploy step costs mappings on the pipeline's [`Platform`] (DIANA by
+//! default); the train/search phases run the AOT artifacts, whose
+//! accelerator count comes from the artifact metadata.
 
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
 use crate::hw::soc::SocConfig;
+use crate::hw::Platform;
 use crate::runtime::{ArtifactMeta, ParamState, Runtime};
 
 use super::baselines;
@@ -25,14 +29,16 @@ use super::scheduler::{deploy, DeployReport};
 use super::trainer::{Hyper, Trainer};
 
 /// Which L_R regularizer drives the search phase.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Regularizer {
     /// Eq. 3 with the DIANA models.
     LatencyDiana,
     /// Eq. 4 with the DIANA models.
     EnergyDiana,
-    /// Fig.-5 abstract proportional model with runtime hw constants.
-    Proportional([f32; 6]),
+    /// Fig.-5 abstract proportional model with runtime hw constants
+    /// (flat [thpt.., p_act.., p_idle..] vector, see
+    /// `AbstractHw::to_input_vec`).
+    Proportional(Vec<f32>),
 }
 
 impl Regularizer {
@@ -44,9 +50,9 @@ impl Regularizer {
         }
     }
 
-    pub fn hw(&self) -> Option<[f32; 6]> {
+    pub fn hw(&self) -> Option<&[f32]> {
         match self {
-            Regularizer::Proportional(hw) => Some(*hw),
+            Regularizer::Proportional(hw) => Some(hw),
             _ => None,
         }
     }
@@ -84,7 +90,9 @@ pub struct SearchPoint {
     pub latency_ms: f64,
     pub energy_uj: f64,
     pub total_cycles: u64,
-    pub util: [f64; 2],
+    /// Busy fraction per platform accelerator.
+    pub util: Vec<f64>,
+    /// Fraction of channels on accelerator 1 (Table I "A. Ch.").
     pub aimc_channel_frac: f64,
     pub mapping: Mapping,
 }
@@ -99,8 +107,8 @@ impl SearchPoint {
             latency_ms: rep.run.latency_ms,
             energy_uj: rep.run.energy_uj,
             total_cycles: rep.run.total_cycles,
-            util: rep.run.util,
-            aimc_channel_frac: rep.run.aimc_channel_frac,
+            util: rep.run.util.clone(),
+            aimc_channel_frac: rep.run.aimc_channel_frac(),
             mapping,
         }
     }
@@ -113,6 +121,8 @@ pub struct Pipeline<'a> {
     pub data_seed: u64,
     pub ckpt_dir: PathBuf,
     pub soc_cfg: SocConfig,
+    /// Deployment target for the simulator phase.
+    pub platform: Platform,
 }
 
 impl<'a> Pipeline<'a> {
@@ -124,6 +134,7 @@ impl<'a> Pipeline<'a> {
             data_seed: 1234,
             ckpt_dir: PathBuf::from("results"),
             soc_cfg: SocConfig::default(),
+            platform: Platform::diana(),
         }
     }
 
@@ -169,7 +180,7 @@ impl<'a> Pipeline<'a> {
     /// trains the fake-quantized DNN "until convergence" before the
     /// trade-off matters; on our reduced schedules the explicit split is
     /// what preserves that property.
-    pub fn search_point(&self, folded: &[Vec<f32>], reg: Regularizer, lambda: f32)
+    pub fn search_point(&self, folded: &[Vec<f32>], reg: &Regularizer, lambda: f32)
                         -> Result<SearchPoint> {
         let mut trainer = Trainer::new(self.rt, self.meta, self.data_seed)?;
         trainer.set_params(folded.to_vec())?;
@@ -206,7 +217,8 @@ impl<'a> Pipeline<'a> {
             None,
             reg.hw(),
         )?;
-        let mapping = discretize(&self.meta.model, &trainer.alphas()?)?;
+        let mapping =
+            discretize(&self.meta.model, &trainer.alphas()?, self.meta.hw.n_acc())?;
         self.finetune_and_score(
             &mut trainer,
             mapping,
@@ -228,20 +240,20 @@ impl<'a> Pipeline<'a> {
         let h = Hyper { lr: 0.005, lr_alpha: 0.0, wd: 1e-4, ..Default::default() };
         trainer.run_phase("train_ft", self.schedule.finetune_steps, h, Some(&mapping), None)?;
         let ev = trainer.eval("eval_deploy", Some(&mapping), self.schedule.eval_batches)?;
-        let rep = deploy(&self.meta.model, &mapping, self.soc_cfg);
+        let rep = deploy(&self.meta.model, &mapping, &self.platform, self.soc_cfg);
         log::info!(
             "{label}: acc {:.4} lat {:.3} ms en {:.2} uJ aimc {:.1}%",
             ev.accuracy,
             rep.run.latency_ms,
             rep.run.energy_uj,
-            100.0 * rep.run.aimc_channel_frac
+            100.0 * rep.run.aimc_channel_frac()
         );
         Ok(SearchPoint::from_deploy(label, lambda, ev.accuracy, mapping, &rep))
     }
 
     /// Score a baseline mapping (fine-tune from the folded snapshot).
     pub fn baseline_point(&self, folded: &[Vec<f32>], name: &str) -> Result<SearchPoint> {
-        let mapping = baselines::by_name(&self.meta.model, name)
+        let mapping = baselines::by_name(&self.meta.model, &self.platform, name)
             .ok_or_else(|| anyhow::anyhow!("unknown baseline '{name}'"))?;
         let mut trainer = Trainer::new(self.rt, self.meta, self.data_seed)?;
         trainer.set_params(folded.to_vec())?;
@@ -249,7 +261,7 @@ impl<'a> Pipeline<'a> {
     }
 
     /// Full lambda sweep (the Fig.-4 x-axis).
-    pub fn sweep(&self, folded: &[Vec<f32>], reg: Regularizer, lambdas: &[f32])
+    pub fn sweep(&self, folded: &[Vec<f32>], reg: &Regularizer, lambdas: &[f32])
                  -> Result<Vec<SearchPoint>> {
         lambdas
             .iter()

@@ -114,6 +114,9 @@ impl<'a> Trainer<'a> {
     }
 
     fn assign_literals(&self, mapping: &Mapping) -> Result<BTreeMap<String, Literal>> {
+        // accelerator count per the artifact contract (the AOT graphs'
+        // alpha/assign tensors), not a compile-time constant
+        let n_acc = self.meta.hw.n_acc();
         let mut out = BTreeMap::new();
         for name in &self.meta.mappable {
             let n = self
@@ -123,7 +126,7 @@ impl<'a> Trainer<'a> {
                 .ok_or_else(|| anyhow!("mappable node {name} not in graph"))?;
             out.insert(
                 name.clone(),
-                literal_f32(&mapping.onehot(name), &[crate::model::N_ACC, n.cout])?,
+                literal_f32(&mapping.onehot(name, n_acc), &[n_acc, n.cout])?,
             );
         }
         Ok(out)
@@ -131,21 +134,26 @@ impl<'a> Trainer<'a> {
 
     /// Run `steps` optimizer steps of `graph` (one of the train_*
     /// artifacts). `mapping` supplies the hard assignment for deploy-mode
-    /// graphs; `hw` the 6-vector for the abstract-hw search graph.
+    /// graphs; `hw` the flat [thpt.., p_act.., p_idle..] vector for the
+    /// abstract-hw search graph (6 entries on the 2-accelerator
+    /// artifacts).
     pub fn run_phase(
         &mut self,
         graph: &str,
         steps: usize,
         h: Hyper,
         mapping: Option<&Mapping>,
-        hw: Option<[f32; 6]>,
+        hw: Option<&[f32]>,
     ) -> Result<Vec<StepMetrics>> {
         let exe = self.rt.load(self.meta.graph(graph)?)?;
         let assigns = match mapping {
             Some(m) => Some(self.assign_literals(m)?),
             None => None,
         };
-        let hw_lit = hw.map(|v| literal_f32(&v, &[6]).unwrap());
+        let hw_lit = match hw {
+            Some(v) => Some(literal_f32(v, &[v.len()])?),
+            None => None,
+        };
         let bt = self.meta.model.train_batch;
         let (c, hh, ww) = self.meta.model.input_shape;
         let mu = literal_scalar(h.mu);
@@ -251,8 +259,9 @@ impl<'a> Trainer<'a> {
         Ok(EvalResult { accuracy: correct / n as f64, avg_loss: loss_sum / n as f64, samples: n })
     }
 
-    /// Download the current per-layer alpha logits: name -> (N_ACC rows
-    /// flattened, row-major) vectors.
+    /// Download the current per-layer alpha logits: name -> (n_acc rows
+    /// flattened, row-major) vectors, n_acc per the artifact contract
+    /// (`meta.hw.n_acc()`).
     pub fn alphas(&self) -> Result<BTreeMap<String, Vec<f32>>> {
         let mut out = BTreeMap::new();
         for name in &self.meta.mappable {

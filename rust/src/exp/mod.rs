@@ -35,15 +35,31 @@ impl ExpContext {
         p.data_seed = self.cfg.data_seed;
         p.ckpt_dir = self.cfg.results_dir.clone();
         p.soc_cfg = SocConfig { non_ideal_l1: self.cfg.non_ideal_l1 };
+        p.platform = self.cfg.platform.clone();
         p
     }
 
+    /// Cache paths are keyed by (model, platform, tag): points computed
+    /// for one SoC must never be reused — or even parsed — under
+    /// another (their mappings can carry accelerator ids the other
+    /// platform does not have). This also sidesteps pre-registry cache
+    /// files, which used a different JSON shape.
     fn points_path(&self, tag: &str) -> PathBuf {
-        self.cfg.results_dir.join(format!("points_{}_{}.json", self.cfg.model, tag))
+        self.cfg.results_dir.join(format!(
+            "points_{}_{}_{}.json",
+            self.cfg.model, self.cfg.platform.name, tag
+        ))
+    }
+
+    fn table1_path(&self) -> PathBuf {
+        self.cfg.results_dir.join(format!(
+            "table1_{}_{}.json",
+            self.cfg.model, self.cfg.platform.name
+        ))
     }
 
     /// Run (or reload) the lambda sweep + baselines for one regularizer.
-    pub fn sweep_cached(&self, reg: Regularizer, tag: &str, baselines: &[&str])
+    pub fn sweep_cached(&self, reg: &Regularizer, tag: &str, baselines: &[&str])
                         -> Result<Vec<SearchPoint>> {
         let path = self.points_path(tag);
         if path.exists() {
@@ -84,7 +100,7 @@ pub fn fig4(ctx: &ExpContext) -> Result<()> {
         } else {
             vec!["all_8bit", "all_ternary", "io8_backbone_ternary", "min_cost_en"]
         };
-        let points = ctx.sweep_cached(reg, tag, &baselines)?;
+        let points = ctx.sweep_cached(&reg, tag, &baselines)?;
         let cost = |p: &SearchPoint| if tag == "lat" { p.latency_ms } else { p.energy_uj };
         let front = metrics::pareto_front(&points, cost);
         let md = format!(
@@ -143,10 +159,10 @@ pub fn fig5(ctx: &ExpContext) -> Result<()> {
         (AbstractHw::ideal_shutdown(), "prop_shutdown"),
     ] {
         let reg = Regularizer::Proportional(hw.to_input_vec());
-        let mut points = ctx.sweep_cached(reg, tag, &["all_8bit", "io8_backbone_ternary"])?;
+        let mut points = ctx.sweep_cached(&reg, tag, &["all_8bit", "io8_backbone_ternary"])?;
         // cost for fig5 points is the *abstract* model's energy
         for p in &mut points {
-            let (lat, en) = hw.cost(&meta.model, &p.mapping.channel_split());
+            let (lat, en) = hw.cost(&meta.model, &p.mapping.channel_split(hw.n_acc()));
             p.latency_ms = lat; // abstract cycles
             p.energy_uj = en; // abstract mW*cycles
         }
@@ -206,7 +222,7 @@ pub fn table1(ctx: &ExpContext) -> Result<()> {
         } else {
             vec!["all_8bit", "all_ternary", "io8_backbone_ternary", "min_cost_en"]
         };
-        let points = ctx.sweep_cached(reg, tag, &baselines)?;
+        let points = ctx.sweep_cached(&reg, tag, &baselines)?;
         if tag == "lat" {
             if let Some(b) = points.iter().find(|p| p.label == "all_8bit") {
                 rows.push(b.clone());
@@ -229,14 +245,17 @@ pub fn table1(ctx: &ExpContext) -> Result<()> {
             }
         }
     }
-    let md = metrics::table_markdown(&format!("Table I — {model} on DIANA (simulated)"), &rows);
+    let md = metrics::table_markdown(
+        &format!("Table I — {model} on {} (simulated)", ctx.cfg.platform.name),
+        &rows,
+    );
     metrics::write_results(
         &ctx.cfg.results_dir,
         &format!("table1_{model}"),
         &md,
         &metrics::points_csv(&rows),
     )?;
-    store::save_points(&ctx.cfg.results_dir.join(format!("table1_{model}.json")), &rows)?;
+    store::save_points(&ctx.table1_path(), &rows)?;
     println!("{md}");
     Ok(())
 }
@@ -245,7 +264,7 @@ pub fn table1(ctx: &ExpContext) -> Result<()> {
 /// mapping (falls back to Large or min-cost if Small was not found).
 pub fn fig6(ctx: &ExpContext) -> Result<()> {
     let model = ctx.cfg.model.clone();
-    let t1_path = ctx.cfg.results_dir.join(format!("table1_{model}.json"));
+    let t1_path = ctx.table1_path();
     if !t1_path.exists() {
         table1(ctx)?;
     }
@@ -257,26 +276,42 @@ pub fn fig6(ctx: &ExpContext) -> Result<()> {
         .or_else(|| rows.iter().find(|p| p.label.starts_with("odimo")))
         .ok_or_else(|| anyhow!("no ODiMO row in table1 output"))?;
     let meta = ctx.meta()?;
+    let platform = &ctx.cfg.platform;
     let rep = crate::coordinator::scheduler::deploy(
         &meta.model,
         &pick.mapping,
+        platform,
         SocConfig { non_ideal_l1: ctx.cfg.non_ideal_l1 },
     );
     let tl = &rep.run.timeline;
     let u = tl.utilization();
-    let mut csv = String::from("layer,digital_cycles,aimc_cycles,span_cycles\n");
-    for (layer, d, a, span) in tl.per_layer() {
-        csv.push_str(&format!("{layer},{d},{a},{span}\n"));
+    let mut csv = String::from("layer");
+    for a in &platform.accelerators {
+        csv.push_str(&format!(",{}_cycles", a.name));
     }
+    csv.push_str(",span_cycles\n");
+    for (layer, busy, span) in tl.per_layer() {
+        csv.push_str(&layer);
+        for b in &busy {
+            csv.push_str(&format!(",{b}"));
+        }
+        csv.push_str(&format!(",{span}\n"));
+    }
+    let busy_list = platform
+        .accelerators
+        .iter()
+        .zip(&u.busy_frac)
+        .map(|(a, b)| format!("{} busy: {:.1}%", a.name, 100.0 * b))
+        .collect::<Vec<_>>()
+        .join(" | ");
     let md = format!(
-        "# Fig. 6 — accelerator utilization, {} ({})\n\n\
-         both busy: {:.1}% | digital only: {:.1}% | aimc only: {:.1}% | idle: {:.1}%\n\n\
+        "# Fig. 6 — accelerator utilization, {} ({} on {})\n\n\
+         all busy: {:.1}% | {busy_list} | idle: {:.1}%\n\n\
          ```\n{}```\n",
         pick.label,
         model,
-        100.0 * u.both_frac,
-        100.0 * (u.busy_frac[0] - u.both_frac),
-        100.0 * (u.busy_frac[1] - u.both_frac),
+        platform.name,
+        100.0 * u.all_busy_frac,
         100.0 * u.idle_frac,
         tl.render_ascii(72),
     );

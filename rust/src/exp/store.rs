@@ -16,14 +16,21 @@ pub fn point_to_json(p: &SearchPoint) -> Json {
         ("latency_ms", Json::num(p.latency_ms)),
         ("energy_uj", Json::num(p.energy_uj)),
         ("total_cycles", Json::num(p.total_cycles as f64)),
-        ("util_dig", Json::num(p.util[0])),
-        ("util_aimc", Json::num(p.util[1])),
+        // per-accelerator busy fractions, in platform order
+        ("util", Json::Arr(p.util.iter().map(|&u| Json::num(u)).collect())),
         ("aimc_ch_frac", Json::num(p.aimc_channel_frac)),
         ("mapping", p.mapping.to_json()),
     ])
 }
 
 pub fn point_from_json(v: &Json) -> Result<SearchPoint> {
+    let util = v
+        .req("util")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("point util must be an array"))?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(0.0))
+        .collect();
     Ok(SearchPoint {
         label: v.req("label")?.as_str().unwrap_or("").to_string(),
         lambda: v.req("lambda")?.as_f64().unwrap_or(f64::NAN),
@@ -31,10 +38,7 @@ pub fn point_from_json(v: &Json) -> Result<SearchPoint> {
         latency_ms: v.req("latency_ms")?.as_f64().unwrap_or(0.0),
         energy_uj: v.req("energy_uj")?.as_f64().unwrap_or(0.0),
         total_cycles: v.req("total_cycles")?.as_f64().unwrap_or(0.0) as u64,
-        util: [
-            v.req("util_dig")?.as_f64().unwrap_or(0.0),
-            v.req("util_aimc")?.as_f64().unwrap_or(0.0),
-        ],
+        util,
         aimc_channel_frac: v.req("aimc_ch_frac")?.as_f64().unwrap_or(0.0),
         mapping: Mapping::from_json(v.req("mapping")?)?,
     })
@@ -75,7 +79,7 @@ mod tests {
             latency_ms: 1.23,
             energy_uj: 33.3,
             total_cycles: 319_800,
-            util: [1.0, 0.4],
+            util: vec![1.0, 0.4],
             aimc_channel_frac: 0.3,
             mapping: Mapping::uniform(&g, DIG),
         };

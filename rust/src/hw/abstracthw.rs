@@ -1,68 +1,95 @@
-//! Abstract hardware cost models — paper Fig. 5.
+//! Abstract hardware cost models — paper Fig. 5, generalized to N
+//! accelerators.
 //!
 //! Latency simply proportional to assigned MACs per accelerator
 //! (`lat_i = macs_i / thpt_i`), energy per Eq. 4 with configurable
-//! active/idle powers. Two canonical configs reproduce the figure:
-//! no-shutdown (P_idle = P_act) and ideal-shutdown (P_idle = 0), both
-//! with the 8-bit accelerator burning 10x the ternary one's power.
-//! Mirrors `python/compile/costmodel.loss_proportional` (which is what
-//! the `train_search_prop` artifact optimizes with these constants as
+//! active/idle powers. Two canonical 2-accelerator configs reproduce
+//! the figure: no-shutdown (P_idle = P_act) and ideal-shutdown
+//! (P_idle = 0), both with the 8-bit accelerator burning 10x the
+//! ternary one's power. Mirrors
+//! `python/compile/costmodel.loss_proportional` (which is what the
+//! `train_search_prop` artifact optimizes with these constants as
 //! runtime inputs).
 
 use crate::model::{Graph, Op};
 
 use super::soc::ChannelSplit;
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct AbstractHw {
-    /// MACs per cycle per accelerator [digital(8b), aimc(ternary)].
-    pub thpt: [f64; 2],
-    pub p_act: [f64; 2],
-    pub p_idle: [f64; 2],
+    /// MACs per cycle per accelerator.
+    pub thpt: Vec<f64>,
+    pub p_act: Vec<f64>,
+    pub p_idle: Vec<f64>,
 }
 
 impl AbstractHw {
+    pub fn n_acc(&self) -> usize {
+        self.thpt.len()
+    }
+
     /// Fig. 5 top: no shutdown — idle power equals active power, and
     /// energy minimization degenerates to latency minimization.
     pub fn no_shutdown() -> Self {
-        AbstractHw { thpt: [1.0, 8.0], p_act: [10.0, 1.0], p_idle: [10.0, 1.0] }
+        AbstractHw {
+            thpt: vec![1.0, 8.0],
+            p_act: vec![10.0, 1.0],
+            p_idle: vec![10.0, 1.0],
+        }
     }
 
     /// Fig. 5 bottom: ideal shutdown — zero idle power.
     pub fn ideal_shutdown() -> Self {
-        AbstractHw { thpt: [1.0, 8.0], p_act: [10.0, 1.0], p_idle: [0.0, 0.0] }
+        AbstractHw {
+            thpt: vec![1.0, 8.0],
+            p_act: vec![10.0, 1.0],
+            p_idle: vec![0.0, 0.0],
+        }
     }
 
-    /// The 6-vector the `train_search_prop` artifact takes as its `hw`
-    /// input: [thpt_d, thpt_a, p_act_d, p_act_a, p_idle_d, p_idle_a].
-    pub fn to_input_vec(&self) -> [f32; 6] {
-        [
-            self.thpt[0] as f32, self.thpt[1] as f32,
-            self.p_act[0] as f32, self.p_act[1] as f32,
-            self.p_idle[0] as f32, self.p_idle[1] as f32,
-        ]
+    /// The flat vector the `train_search_prop` artifact takes as its
+    /// `hw` input: [thpt_0.., p_act_0.., p_idle_0..]. For the
+    /// 2-accelerator artifacts this is the historical 6-vector
+    /// [thpt_d, thpt_a, p_act_d, p_act_a, p_idle_d, p_idle_a].
+    pub fn to_input_vec(&self) -> Vec<f32> {
+        self.thpt
+            .iter()
+            .chain(self.p_act.iter())
+            .chain(self.p_idle.iter())
+            .map(|&v| v as f32)
+            .collect()
     }
 
     /// (latency_cycles, energy_mw_cycles) of a mapped network.
     pub fn cost(&self, graph: &Graph, split: &ChannelSplit) -> (f64, f64) {
+        let n_acc = self.n_acc();
         let mut lat = 0.0;
         let mut en = 0.0;
+        let mut lats = vec![0.0f64; n_acc];
         for node in &graph.nodes {
             match node.op {
                 Op::Conv | Op::Fc => {
-                    let (cd, ca) = split[&node.name];
+                    let counts = &split[&node.name];
+                    assert_eq!(counts.len(), n_acc, "split arity at {}", node.name);
                     let macs_per_ch = node.macs() as f64 / node.cout as f64;
-                    let ld = macs_per_ch * cd as f64 / self.thpt[0];
-                    let la = macs_per_ch * ca as f64 / self.thpt[1];
-                    let span = ld.max(la);
+                    for i in 0..n_acc {
+                        lats[i] = macs_per_ch * counts[i] as f64 / self.thpt[i];
+                    }
+                    let span = lats.iter().copied().fold(0.0f64, f64::max);
                     lat += span;
-                    en += self.p_act[0] * ld + self.p_idle[0] * (span - ld);
-                    en += self.p_act[1] * la + self.p_idle[1] * (span - la);
+                    for i in 0..n_acc {
+                        en += self.p_act[i] * lats[i] + self.p_idle[i] * (span - lats[i]);
+                    }
                 }
                 Op::DwConv => {
+                    // depthwise runs on accelerator 0; the rest idle
                     let ld = node.macs() as f64 / self.thpt[0];
                     lat += ld;
-                    en += self.p_act[0] * ld + self.p_idle[1] * ld;
+                    let mut e_layer = self.p_act[0] * ld;
+                    for i in 1..n_acc {
+                        e_layer += self.p_idle[i] * ld;
+                    }
+                    en += e_layer;
                 }
                 _ => {}
             }
@@ -74,7 +101,7 @@ impl AbstractHw {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hw::soc::{split_all_aimc, split_all_digital};
+    use crate::hw::soc::{split_all_aimc, split_all_digital, split_all_on};
     use crate::model::tinycnn;
 
     #[test]
@@ -105,6 +132,21 @@ mod tests {
     #[test]
     fn input_vec_layout() {
         let v = AbstractHw::ideal_shutdown().to_input_vec();
-        assert_eq!(v, [1.0, 8.0, 10.0, 1.0, 0.0, 0.0]);
+        assert_eq!(v, vec![1.0, 8.0, 10.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn three_acc_abstract_cost() {
+        let hw = AbstractHw {
+            thpt: vec![1.0, 8.0, 4.0],
+            p_act: vec![10.0, 1.0, 3.0],
+            p_idle: vec![1.0, 0.5, 0.3],
+        };
+        let g = tinycnn();
+        // everything on the fastest unit is cheapest in latency
+        let on0 = hw.cost(&g, &split_all_on(&g, 3, 0)).0;
+        let on1 = hw.cost(&g, &split_all_on(&g, 3, 1)).0;
+        let on2 = hw.cost(&g, &split_all_on(&g, 3, 2)).0;
+        assert!(on1 < on2 && on2 < on0);
     }
 }

@@ -9,7 +9,8 @@
 //! optionally charge a tiling penalty (the `NonIdeal` config), which the
 //! ablation bench uses to probe rank preservation.
 
-/// Shared L1 activation scratchpad, bytes.
+/// Shared L1 activation scratchpad, bytes (DIANA; other platforms set
+/// their own budget via `Platform::l1_bytes`).
 pub const L1_BYTES: usize = 256 * 1024;
 /// Digital accelerator weight memory, bytes.
 pub const DIG_WMEM_BYTES: usize = 64 * 1024;
@@ -36,24 +37,36 @@ pub struct L1Report {
     pub w_overflow: bool,
 }
 
-pub fn check_layer(cin: usize, in_hw: (usize, usize), cout: usize,
-                   out_hw: (usize, usize), k: usize, cout_d: usize) -> L1Report {
+/// Platform-generic check against explicit byte budgets.
+#[allow(clippy::too_many_arguments)]
+pub fn check_layer_bytes(l1_bytes: usize, wmem_bytes: usize, cin: usize,
+                         in_hw: (usize, usize), cout: usize, out_hw: (usize, usize),
+                         k: usize, cout_d: usize) -> L1Report {
     let act = act_footprint_bytes(cin, in_hw, cout, out_hw);
     let w = dig_weight_bytes(cin, k, cout_d);
     L1Report {
         act_bytes: act,
         dig_w_bytes: w,
-        act_overflow: act > L1_BYTES,
-        w_overflow: w > DIG_WMEM_BYTES,
+        act_overflow: act > l1_bytes,
+        w_overflow: w > wmem_bytes,
     }
+}
+
+pub fn check_layer(cin: usize, in_hw: (usize, usize), cout: usize,
+                   out_hw: (usize, usize), k: usize, cout_d: usize) -> L1Report {
+    check_layer_bytes(L1_BYTES, DIG_WMEM_BYTES, cin, in_hw, cout, out_hw, k, cout_d)
 }
 
 /// Multiplicative compute penalty under the non-ideal configuration:
 /// activations that do not fit must be processed in ceil(act/L1) tiles,
 /// each paying an extra DMA round-trip; we approximate the slowdown as
 /// the tile count on the compute term.
+pub fn tiling_penalty_bytes(act_bytes: usize, l1_bytes: usize) -> u64 {
+    (act_bytes.div_ceil(l1_bytes)) as u64
+}
+
 pub fn tiling_penalty(act_bytes: usize) -> u64 {
-    (act_bytes.div_ceil(L1_BYTES)) as u64
+    tiling_penalty_bytes(act_bytes, L1_BYTES)
 }
 
 #[cfg(test)]

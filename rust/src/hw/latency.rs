@@ -1,9 +1,13 @@
 //! Analytical accelerator latency models — paper Sec. III-C, Eq. 6/7.
 //!
-//! Exact integer mirror of `python/compile/costmodel.py` (whose traced
-//! versions feed the training loss); the simulator uses these to cost
-//! discretized mappings. Parity is pinned by `rust/tests/model_parity.rs`
-//! against constants exported in the artifact metadata.
+//! The generic forms ([`lat_pe_array`], [`lat_imc_macro`], [`lat_dw_pe`])
+//! are parameterized on the accelerator geometry and back
+//! [`crate::hw::platform::LatencyModel`]; the DIANA-constant wrappers
+//! ([`lat_dig`], [`lat_aimc`], [`lat_dw`]) are the exact integer mirror
+//! of `python/compile/costmodel.py` (whose traced versions feed the
+//! training loss). Parity is pinned by `rust/tests/model_parity.rs`
+//! against constants exported in the artifact metadata, and the
+//! platform path is pinned to these wrappers by `tests/diana_parity.rs`.
 
 use crate::model::NodeDef;
 
@@ -20,36 +24,64 @@ fn ceil_div(a: u64, b: u64) -> u64 {
     a.div_ceil(b)
 }
 
-/// Paper Eq. 6: AIMC latency in cycles for `cout_a` assigned channels.
-/// First addend: compute passes; second: cell-programming DMA.
-pub fn lat_aimc(cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout_a: u64) -> u64 {
-    if cout_a == 0 {
+/// Generic Eq. 7: `pe` x `pe` digital array latency in cycles for
+/// `cout` assigned channels (pe output channels x pe output rows per
+/// pass, plus the weight-load DMA term).
+pub fn lat_pe_array(pe: u64, cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout: u64) -> u64 {
+    if cout == 0 {
         return 0;
     }
-    let tiles_in = ceil_div(cin * fx * fy, AIMC_ROWS);
-    let tiles_out = ceil_div(cout_a, AIMC_COLS);
+    ceil_div(cout, pe) * ceil_div(oy, pe) * cin * ox * fx * fy + cin * cout * fx * fy
+}
+
+/// Generic Eq. 6: `rows` x `cols` IMC macro latency in cycles for
+/// `cout` assigned channels. First addend: compute passes; second:
+/// cell-programming DMA.
+#[allow(clippy::too_many_arguments)]
+pub fn lat_imc_macro(
+    rows: u64,
+    cols: u64,
+    cin: u64,
+    fx: u64,
+    fy: u64,
+    ox: u64,
+    oy: u64,
+    cout: u64,
+) -> u64 {
+    if cout == 0 {
+        return 0;
+    }
+    let tiles_in = ceil_div(cin * fx * fy, rows);
+    let tiles_out = ceil_div(cout, cols);
     tiles_in * tiles_out * ox * oy + 2 * 4 * cin * tiles_out
 }
 
+/// Generic depthwise conv on a `pe` x `pe` array (per-channel dataflow).
+pub fn lat_dw_pe(pe: u64, k: u64, ox: u64, oy: u64, cout: u64) -> u64 {
+    ceil_div(cout, pe) * ceil_div(oy, pe) * ox * k * k + cout * k * k
+}
+
+/// Paper Eq. 6: AIMC latency in cycles for `cout_a` assigned channels.
+pub fn lat_aimc(cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout_a: u64) -> u64 {
+    lat_imc_macro(AIMC_ROWS, AIMC_COLS, cin, fx, fy, ox, oy, cout_a)
+}
+
 /// Paper Eq. 7: digital accelerator latency in cycles for `cout_d`
-/// assigned channels (16 output channels x 16 output rows per pass,
-/// plus the weight-load DMA term).
+/// assigned channels.
 pub fn lat_dig(cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout_d: u64) -> u64 {
-    if cout_d == 0 {
-        return 0;
-    }
-    ceil_div(cout_d, DIG_PE) * ceil_div(oy, DIG_PE) * cin * ox * fx * fy
-        + cin * cout_d * fx * fy
+    lat_pe_array(DIG_PE, cin, fx, fy, ox, oy, cout_d)
 }
 
 /// Depthwise conv (digital-only, per-channel dataflow) — mirrors
 /// `costmodel.layer_lats_dw_diana`.
 pub fn lat_dw(k: u64, ox: u64, oy: u64, cout: u64) -> u64 {
-    ceil_div(cout, DIG_PE) * ceil_div(oy, DIG_PE) * ox * k * k + cout * k * k
+    lat_dw_pe(DIG_PE, k, ox, oy, cout)
 }
 
-/// Per-accelerator latency of one mappable layer under a channel split.
-/// FC layers cost as 1x1 convs with 1x1 outputs (paper convention).
+/// Per-accelerator latency of one mappable layer under a channel split
+/// on the DIANA units. FC layers cost as 1x1 convs with 1x1 outputs
+/// (paper convention). Platform-generic code uses
+/// [`crate::hw::Platform::layer_cycles`] instead.
 pub fn layer_lats(node: &NodeDef, cout_d: u64, cout_a: u64) -> (u64, u64) {
     let (oy, ox) = (node.out_hw.0 as u64, node.out_hw.1 as u64);
     let (cin, k) = (node.cin as u64, node.k as u64);
@@ -84,6 +116,8 @@ mod tests {
     fn zero_channels_cost_nothing() {
         assert_eq!(lat_aimc(64, 3, 3, 8, 8, 0), 0);
         assert_eq!(lat_dig(64, 3, 3, 8, 8, 0), 0);
+        assert_eq!(lat_pe_array(32, 64, 3, 3, 8, 8, 0), 0);
+        assert_eq!(lat_imc_macro(512, 256, 64, 3, 3, 8, 8, 0), 0);
     }
 
     #[test]
@@ -98,6 +132,15 @@ mod tests {
     fn aimc_parallelism_dominates() {
         // at full width the AIMC macro is >5x faster than the PE array
         assert!(lat_aimc(64, 3, 3, 16, 16, 64) * 5 < lat_dig(64, 3, 3, 16, 16, 64));
+    }
+
+    #[test]
+    fn wider_pe_array_is_faster() {
+        // a 32x32 grid retires channel/row passes 4x faster; the DMA
+        // term is unchanged, so the total strictly shrinks
+        assert!(
+            lat_pe_array(32, 64, 3, 3, 16, 16, 64) < lat_pe_array(16, 64, 3, 3, 16, 16, 64)
+        );
     }
 
     #[test]

@@ -1,18 +1,23 @@
-//! DIANA SoC substrate: analytical accelerator models (paper Eq. 6/7),
-//! shared-L1 constraints, the cycle-approximate execution simulator, the
-//! utilization timeline (Fig. 6), energy integration (Eq. 4), and the
-//! abstract hardware models of Fig. 5.
+//! SoC substrate: the declarative platform registry (N-accelerator
+//! SoCs, [`platform`]), analytical accelerator models (paper Eq. 6/7,
+//! [`latency`]), shared-L1 constraints, the cycle-approximate execution
+//! simulator, the utilization timeline (Fig. 6), energy integration
+//! (Eq. 4), and the abstract hardware models of Fig. 5.
 //!
-//! This module is the substitution for the physical DIANA chip — see
-//! DESIGN.md §Substitutions for the fidelity argument.
+//! The built-in [`Platform::diana`] is the substitution for the
+//! physical DIANA chip — see DESIGN.md §Substitutions for the fidelity
+//! argument; `Platform::diana_ne16()` is the shipped 3-accelerator
+//! example SoC.
 
 pub mod abstracthw;
 pub mod energy;
 pub mod l1;
 pub mod latency;
+pub mod platform;
 pub mod soc;
 pub mod timeline;
 
 pub use abstracthw::AbstractHw;
+pub use platform::{AcceleratorSpec, LatencyModel, Platform};
 pub use soc::{simulate, ChannelSplit, RunReport, SocConfig};
-pub use timeline::{Timeline, Unit, Utilization};
+pub use timeline::{Timeline, Utilization};

@@ -1,0 +1,576 @@
+//! Declarative multi-accelerator platform description — the
+//! generalization of the hardwired 2-accelerator DIANA model to
+//! arbitrary N-accelerator SoCs.
+//!
+//! A [`Platform`] is an ordered list of [`AcceleratorSpec`]s (name,
+//! weight/activation precision, analytical latency model, active/idle
+//! power) plus the SoC-level facts the simulator needs (clock, shared-L1
+//! size, which unit runs depthwise convs). Everything downstream —
+//! simulator, scheduler, baselines, quantized engine — iterates the
+//! platform's accelerators instead of matching on DIG/AIMC.
+//!
+//! Two platforms ship built in:
+//!   * [`Platform::diana`] — the paper's SoC, byte-identical to the
+//!     pre-refactor hardwired model (pinned by tests/diana_parity.rs);
+//!   * [`Platform::diana_ne16`] — DIANA plus an NE16-style 4-bit
+//!     digital unit, the shipped 3-accelerator example.
+//!
+//! Platforms also load from TOML (see `config/diana_ne16.toml` and the
+//! schema in EXPERIMENTS.md §Platforms).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{parse_toml, TomlValue};
+use crate::model::NodeDef;
+
+use super::energy::{P_ACT, P_IDLE};
+use super::l1::L1_BYTES;
+use super::latency::{lat_dw_pe, lat_imc_macro, lat_pe_array, AIMC_COLS, AIMC_ROWS, DIG_PE,
+                     F_CLK_HZ};
+
+/// Analytical per-layer latency model of one accelerator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyModel {
+    /// Eq.-7-style digital PE array (`pe` x `pe`): output-stationary
+    /// passes plus a weight-load DMA term.
+    DigitalPe { pe: u64 },
+    /// Eq.-6-style in-memory-compute macro (`rows` x `cols` cells):
+    /// tile passes plus a cell-programming term.
+    ImcMacro { rows: u64, cols: u64 },
+    /// Abstract proportional model: `macs / macs_per_cycle` (Fig. 5).
+    Proportional { macs_per_cycle: f64 },
+}
+
+impl LatencyModel {
+    /// Latency in cycles of `cout` assigned output channels of a
+    /// conv/fc layer (fc costs as a 1x1 conv with 1x1 output).
+    pub fn cycles(&self, cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout: u64) -> u64 {
+        if cout == 0 {
+            return 0;
+        }
+        match *self {
+            LatencyModel::DigitalPe { pe } => lat_pe_array(pe, cin, fx, fy, ox, oy, cout),
+            LatencyModel::ImcMacro { rows, cols } => {
+                lat_imc_macro(rows, cols, cin, fx, fy, ox, oy, cout)
+            }
+            LatencyModel::Proportional { macs_per_cycle } => {
+                ((cin * fx * fy * ox * oy * cout) as f64 / macs_per_cycle).ceil() as u64
+            }
+        }
+    }
+
+    /// Depthwise-conv latency (per-channel dataflow). Only meaningful
+    /// for the accelerator designated as the platform's `dw_acc`.
+    pub fn dw_cycles(&self, k: u64, ox: u64, oy: u64, cout: u64) -> u64 {
+        if cout == 0 {
+            return 0;
+        }
+        match *self {
+            LatencyModel::DigitalPe { pe } => lat_dw_pe(pe, k, ox, oy, cout),
+            // an IMC macro runs dw as cin=1 tiles; proportional by MACs
+            LatencyModel::ImcMacro { rows, cols } => {
+                lat_imc_macro(rows, cols, 1, k, k, ox, oy, cout)
+            }
+            LatencyModel::Proportional { macs_per_cycle } => {
+                ((cout * k * k * ox * oy) as f64 / macs_per_cycle).ceil() as u64
+            }
+        }
+    }
+}
+
+/// One accelerator of the SoC.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorSpec {
+    pub name: String,
+    /// Weight precision in bits (8 = int8, 2 = ternary, 4 = int4...).
+    pub weight_bits: u32,
+    /// Output-activation grid in bits (8 digital / 7 AIMC on DIANA).
+    pub act_bits: u32,
+    /// Input D/A re-read truncation in bits (the AIMC 7-bit read);
+    /// `None` = the unit reads stored activations exactly.
+    pub da_bits: Option<u32>,
+    pub latency: LatencyModel,
+    /// Average active power, mW.
+    pub p_act_mw: f64,
+    /// Average idle power, mW.
+    pub p_idle_mw: f64,
+    /// Private weight memory, bytes (refilled by the DMA latency term).
+    pub wmem_bytes: Option<usize>,
+}
+
+impl AcceleratorSpec {
+    /// Parameter leaf holding this accelerator's log weight scale.
+    /// Follows the artifact contract: int8 -> "ls8", ternary -> "lster",
+    /// any other width -> "ls<bits>".
+    pub fn scale_leaf(&self) -> String {
+        match self.weight_bits {
+            8 => "ls8".to_string(),
+            2 => "lster".to_string(),
+            n => format!("ls{n}"),
+        }
+    }
+}
+
+/// A multi-accelerator SoC: ordered accelerators + SoC-level facts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Platform {
+    pub name: String,
+    pub f_clk_hz: f64,
+    /// Shared L1 activation scratchpad, bytes.
+    pub l1_bytes: usize,
+    /// Index of the accelerator that runs depthwise convolutions.
+    pub dw_acc: usize,
+    pub accelerators: Vec<AcceleratorSpec>,
+}
+
+impl Platform {
+    pub fn n_acc(&self) -> usize {
+        self.accelerators.len()
+    }
+
+    pub fn acc_index(&self, name: &str) -> Option<usize> {
+        self.accelerators.iter().position(|a| a.name == name)
+    }
+
+    pub fn acc_names(&self) -> Vec<&str> {
+        self.accelerators.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    /// Latency in cycles of `cout_assigned` channels of `node` on
+    /// accelerator `acc` (conv/fc geometry; fc as 1x1).
+    pub fn layer_cycles(&self, acc: usize, node: &NodeDef, cout_assigned: u64) -> u64 {
+        let (oy, ox) = (node.out_hw.0 as u64, node.out_hw.1 as u64);
+        self.accelerators[acc].latency.cycles(
+            node.cin as u64,
+            node.k as u64,
+            node.k as u64,
+            ox,
+            oy,
+            cout_assigned,
+        )
+    }
+
+    /// Depthwise-conv latency on the platform's `dw_acc`.
+    pub fn dw_layer_cycles(&self, node: &NodeDef) -> u64 {
+        let (oy, ox) = (node.out_hw.0 as u64, node.out_hw.1 as u64);
+        self.accelerators[self.dw_acc]
+            .latency
+            .dw_cycles(node.k as u64, ox, oy, node.cout as u64)
+    }
+
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.f_clk_hz * 1e3
+    }
+
+    /// Energy (uJ) of one layer interval: accelerator `i` is active for
+    /// `active[i]` cycles within a layer lasting `span` cycles (Eq. 4,
+    /// generalized to N accelerators; accumulation order matches the
+    /// pre-refactor 2-accelerator code exactly).
+    pub fn layer_energy_uj(&self, active: &[u64], span: u64) -> f64 {
+        debug_assert_eq!(active.len(), self.n_acc());
+        let mut e_mw_cycles = 0.0;
+        for (spec, &a) in self.accelerators.iter().zip(active) {
+            let act = a.min(span) as f64;
+            let idle = (span - a.min(span)) as f64;
+            e_mw_cycles += spec.p_act_mw * act + spec.p_idle_mw * idle;
+        }
+        e_mw_cycles / self.f_clk_hz * 1e3
+    }
+
+    /// The single D/A truncation width shared by every accelerator that
+    /// re-reads activations through a D/A (`None` if no unit does).
+    /// Errors if two units declare different widths — the quantized
+    /// engine materializes at most one D/A view per tensor.
+    pub fn da_bits(&self) -> Result<Option<u32>> {
+        let mut bits = None;
+        for a in &self.accelerators {
+            if let Some(b) = a.da_bits {
+                match bits {
+                    None => bits = Some(b),
+                    Some(prev) if prev == b => {}
+                    Some(prev) => {
+                        return Err(anyhow!(
+                            "platform {}: conflicting da_bits {prev} vs {b}",
+                            self.name
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(bits)
+    }
+
+    fn validate(self) -> Result<Self> {
+        if self.accelerators.is_empty() {
+            return Err(anyhow!("platform {}: no accelerators", self.name));
+        }
+        if self.dw_acc >= self.n_acc() {
+            return Err(anyhow!(
+                "platform {}: dw_acc {} out of range ({} accelerators)",
+                self.name,
+                self.dw_acc,
+                self.n_acc()
+            ));
+        }
+        if self.f_clk_hz <= 0.0 {
+            return Err(anyhow!("platform {}: f_clk_hz must be positive", self.name));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for a in &self.accelerators {
+            if !seen.insert(a.name.clone()) {
+                return Err(anyhow!("platform {}: duplicate accelerator '{}'", self.name, a.name));
+            }
+        }
+        self.da_bits()?;
+        Ok(self)
+    }
+
+    // ---- built-in platforms -------------------------------------------
+
+    /// The DIANA SoC exactly as the pre-refactor hardwired model: a
+    /// 16x16 int8 PE array and a 1152x512 ternary AIMC macro sharing a
+    /// 256 kB L1 at 260 MHz. Table-I numbers under this platform are
+    /// byte-identical to the seed simulator (tests/diana_parity.rs).
+    pub fn diana() -> Platform {
+        Platform {
+            name: "diana".into(),
+            f_clk_hz: F_CLK_HZ,
+            l1_bytes: L1_BYTES,
+            dw_acc: 0,
+            accelerators: vec![
+                AcceleratorSpec {
+                    name: "dig".into(),
+                    weight_bits: 8,
+                    act_bits: 8,
+                    da_bits: None,
+                    latency: LatencyModel::DigitalPe { pe: DIG_PE },
+                    p_act_mw: P_ACT[0],
+                    p_idle_mw: P_IDLE[0],
+                    wmem_bytes: Some(super::l1::DIG_WMEM_BYTES),
+                },
+                AcceleratorSpec {
+                    name: "aimc".into(),
+                    weight_bits: 2,
+                    act_bits: 7,
+                    da_bits: Some(7),
+                    latency: LatencyModel::ImcMacro { rows: AIMC_ROWS, cols: AIMC_COLS },
+                    p_act_mw: P_ACT[1],
+                    p_idle_mw: P_IDLE[1],
+                    wmem_bytes: None,
+                },
+            ],
+        }
+    }
+
+    /// The shipped 3-accelerator example: DIANA plus an NE16-style
+    /// 4-bit digital unit (32x32 MAC grid, int4 weights, 8-bit
+    /// activations) — demonstrates N>2 generality end-to-end.
+    pub fn diana_ne16() -> Platform {
+        let mut p = Platform::diana();
+        p.name = "diana_ne16".into();
+        p.accelerators.push(AcceleratorSpec {
+            name: "ne16".into(),
+            weight_bits: 4,
+            act_bits: 8,
+            da_bits: None,
+            latency: LatencyModel::DigitalPe { pe: 32 },
+            p_act_mw: 18.0,
+            p_idle_mw: 1.2,
+            wmem_bytes: Some(128 * 1024),
+        });
+        p
+    }
+
+    /// Built-in platform registry (CLI `--platform <name>`).
+    pub fn by_name(name: &str) -> Option<Platform> {
+        match name {
+            "diana" => Some(Platform::diana()),
+            "diana_ne16" => Some(Platform::diana_ne16()),
+            _ => None,
+        }
+    }
+
+    pub const BUILTIN_NAMES: [&'static str; 2] = ["diana", "diana_ne16"];
+
+    /// Resolve a CLI argument: built-in name first, then TOML path.
+    pub fn resolve(arg: &str) -> Result<Platform> {
+        if let Some(p) = Platform::by_name(arg) {
+            return Ok(p);
+        }
+        let path = Path::new(arg);
+        if path.exists() {
+            return Platform::from_toml_file(path);
+        }
+        Err(anyhow!(
+            "unknown platform '{arg}' (built-ins: {:?}; or pass a .toml path)",
+            Platform::BUILTIN_NAMES
+        ))
+    }
+
+    // ---- TOML loading -------------------------------------------------
+
+    /// Load a platform from a TOML file (schema: EXPERIMENTS.md
+    /// §Platforms; examples under `config/`).
+    pub fn from_toml_file(path: &Path) -> Result<Platform> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let doc = parse_toml(&text)?;
+        Platform::from_toml(&doc)
+    }
+
+    pub fn from_toml(doc: &BTreeMap<String, TomlValue>) -> Result<Platform> {
+        let get_str = |k: &str| -> Result<String> {
+            match doc.get(k) {
+                Some(TomlValue::Str(s)) => Ok(s.clone()),
+                Some(_) => Err(anyhow!("platform toml: '{k}' must be a string")),
+                None => Err(anyhow!("platform toml: missing key '{k}'")),
+            }
+        };
+        let get_num = |k: &str| -> Result<Option<f64>> {
+            match doc.get(k) {
+                Some(TomlValue::Num(n)) => Ok(Some(*n)),
+                Some(_) => Err(anyhow!("platform toml: '{k}' must be a number")),
+                None => Ok(None),
+            }
+        };
+        let name = get_str("platform.name")?;
+        let f_clk_hz = get_num("platform.f_clk_hz")?
+            .ok_or_else(|| anyhow!("platform toml: missing platform.f_clk_hz"))?;
+        let l1_bytes = match get_num("platform.l1_kb")? {
+            Some(kb) => (kb * 1024.0) as usize,
+            None => L1_BYTES,
+        };
+        let order = match doc.get("platform.accelerators") {
+            Some(TomlValue::Arr(a)) => a
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Str(s) => Ok(s.clone()),
+                    _ => Err(anyhow!("platform.accelerators entries must be strings")),
+                })
+                .collect::<Result<Vec<String>>>()?,
+            _ => return Err(anyhow!("platform toml: missing platform.accelerators array")),
+        };
+        if order.is_empty() {
+            return Err(anyhow!("platform toml: platform.accelerators must not be empty"));
+        }
+        let mut accelerators = Vec::with_capacity(order.len());
+        for acc in &order {
+            let key = |f: &str| format!("accel.{acc}.{f}");
+            let num = |f: &str| -> Result<f64> {
+                get_num(&key(f))?
+                    .ok_or_else(|| anyhow!("platform toml: missing {}", key(f)))
+            };
+            let kind = match doc.get(&key("kind")) {
+                Some(TomlValue::Str(s)) => s.clone(),
+                _ => return Err(anyhow!("platform toml: missing {}", key("kind"))),
+            };
+            let latency = match kind.as_str() {
+                "digital_pe" => LatencyModel::DigitalPe { pe: num("pe")? as u64 },
+                "imc_macro" => LatencyModel::ImcMacro {
+                    rows: num("rows")? as u64,
+                    cols: num("cols")? as u64,
+                },
+                "proportional" => LatencyModel::Proportional {
+                    macs_per_cycle: num("macs_per_cycle")?,
+                },
+                other => {
+                    return Err(anyhow!(
+                        "accel.{acc}: unknown kind '{other}' \
+                         (digital_pe|imc_macro|proportional)"
+                    ))
+                }
+            };
+            accelerators.push(AcceleratorSpec {
+                name: acc.clone(),
+                weight_bits: num("weight_bits")? as u32,
+                act_bits: num("act_bits")? as u32,
+                da_bits: get_num(&key("da_bits"))?.map(|b| b as u32),
+                latency,
+                p_act_mw: num("p_act_mw")?,
+                p_idle_mw: num("p_idle_mw")?,
+                wmem_bytes: get_num(&key("wmem_kb"))?.map(|kb| (kb * 1024.0) as usize),
+            });
+        }
+        let dw_name = match doc.get("platform.dw_accelerator") {
+            Some(TomlValue::Str(s)) => s.clone(),
+            Some(_) => {
+                return Err(anyhow!(
+                    "platform toml: dw_accelerator must be a string (an accelerator name)"
+                ))
+            }
+            None => order[0].clone(),
+        };
+        let dw_acc = order
+            .iter()
+            .position(|n| *n == dw_name)
+            .ok_or_else(|| anyhow!("platform toml: dw_accelerator '{dw_name}' not listed"))?;
+        Platform { name, f_clk_hz, l1_bytes, dw_acc, accelerators }.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::latency::{lat_aimc, lat_dig};
+
+    #[test]
+    fn diana_matches_hardwired_constants() {
+        let p = Platform::diana();
+        assert_eq!(p.n_acc(), 2);
+        assert_eq!(p.f_clk_hz, F_CLK_HZ);
+        assert_eq!(p.l1_bytes, L1_BYTES);
+        assert_eq!(p.acc_index("dig"), Some(0));
+        assert_eq!(p.acc_index("aimc"), Some(1));
+        assert_eq!(
+            p.accelerators.iter().map(|a| a.weight_bits).collect::<Vec<_>>(),
+            vec![8, 2]
+        );
+        assert_eq!(p.accelerators[0].latency, LatencyModel::DigitalPe { pe: DIG_PE });
+        assert_eq!(
+            p.accelerators[1].latency,
+            LatencyModel::ImcMacro { rows: AIMC_ROWS, cols: AIMC_COLS }
+        );
+    }
+
+    #[test]
+    fn latency_model_mirrors_eq6_eq7() {
+        let dig = LatencyModel::DigitalPe { pe: DIG_PE };
+        let aimc = LatencyModel::ImcMacro { rows: AIMC_ROWS, cols: AIMC_COLS };
+        for cin in [3u64, 16, 64, 130] {
+            for cout in [0u64, 1, 16, 100, 512] {
+                assert_eq!(dig.cycles(cin, 3, 3, 16, 16, cout),
+                           lat_dig(cin, 3, 3, 16, 16, cout));
+                assert_eq!(aimc.cycles(cin, 3, 3, 16, 16, cout),
+                           lat_aimc(cin, 3, 3, 16, 16, cout));
+            }
+        }
+    }
+
+    #[test]
+    fn diana_energy_matches_hardwired() {
+        let p = Platform::diana();
+        for (act, span) in [([0u64, 0], 260_000u64), ([260_000, 0], 260_000),
+                            ([200_000, 150_000], 200_000)] {
+            assert_eq!(
+                p.layer_energy_uj(&act, span),
+                crate::hw::energy::layer_energy_uj(act, span)
+            );
+        }
+    }
+
+    #[test]
+    fn ne16_example_has_three_units() {
+        let p = Platform::diana_ne16();
+        assert_eq!(p.n_acc(), 3);
+        assert_eq!(p.acc_index("ne16"), Some(2));
+        assert_eq!(p.accelerators[2].weight_bits, 4);
+        assert_eq!(p.accelerators[2].scale_leaf(), "ls4");
+        assert_eq!(p.da_bits().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn scale_leaf_contract() {
+        let p = Platform::diana();
+        assert_eq!(p.accelerators[0].scale_leaf(), "ls8");
+        assert_eq!(p.accelerators[1].scale_leaf(), "lster");
+    }
+
+    #[test]
+    fn toml_roundtrip_three_acc() {
+        let text = "\
+[platform]
+name = \"tri\"
+f_clk_hz = 260e6
+l1_kb = 256
+accelerators = [\"dig\", \"aimc\", \"ne16\"]
+dw_accelerator = \"dig\"
+
+[accel.dig]
+kind = \"digital_pe\"
+pe = 16
+weight_bits = 8
+act_bits = 8
+p_act_mw = 24.0
+p_idle_mw = 1.3
+wmem_kb = 64
+
+[accel.aimc]
+kind = \"imc_macro\"
+rows = 1152
+cols = 512
+weight_bits = 2
+act_bits = 7
+da_bits = 7
+p_act_mw = 26.0
+p_idle_mw = 1.3
+
+[accel.ne16]
+kind = \"digital_pe\"
+pe = 32
+weight_bits = 4
+act_bits = 8
+p_act_mw = 18.0
+p_idle_mw = 1.2
+";
+        let doc = parse_toml(text).unwrap();
+        let p = Platform::from_toml(&doc).unwrap();
+        assert_eq!(p.name, "tri");
+        assert_eq!(p.n_acc(), 3);
+        assert_eq!(p.dw_acc, 0);
+        assert_eq!(p.l1_bytes, 256 * 1024);
+        // first two accelerators identical to the built-in DIANA specs
+        assert_eq!(p.accelerators[..2], Platform::diana().accelerators[..]);
+        assert_eq!(p.accelerators[2].latency, LatencyModel::DigitalPe { pe: 32 });
+    }
+
+    #[test]
+    fn toml_errors_are_specific() {
+        let no_order = parse_toml("[platform]\nname = \"x\"\nf_clk_hz = 1e6\n").unwrap();
+        assert!(Platform::from_toml(&no_order).is_err());
+        let empty = parse_toml(
+            "[platform]\nname = \"x\"\nf_clk_hz = 1e6\naccelerators = []\n",
+        )
+        .unwrap();
+        let e = Platform::from_toml(&empty).unwrap_err().to_string();
+        assert!(e.contains("must not be empty"), "{e}");
+        let bad_kind = parse_toml(
+            "[platform]\nname = \"x\"\nf_clk_hz = 1e6\naccelerators = [\"a\"]\n\
+             [accel.a]\nkind = \"warp\"\n",
+        )
+        .unwrap();
+        let e = Platform::from_toml(&bad_kind).unwrap_err().to_string();
+        assert!(e.contains("unknown kind"), "{e}");
+        // dw_accelerator must be a string naming a listed unit
+        let bad_dw = parse_toml(
+            "[platform]\nname = \"x\"\nf_clk_hz = 1e6\naccelerators = [\"a\"]\n\
+             dw_accelerator = 0\n[accel.a]\nkind = \"digital_pe\"\npe = 16\n\
+             weight_bits = 8\nact_bits = 8\np_act_mw = 1.0\np_idle_mw = 0.1\n",
+        )
+        .unwrap();
+        let e = Platform::from_toml(&bad_dw).unwrap_err().to_string();
+        assert!(e.contains("dw_accelerator"), "{e}");
+    }
+
+    #[test]
+    fn conflicting_da_bits_rejected() {
+        let mut p = Platform::diana_ne16();
+        p.accelerators[2].da_bits = Some(5);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn resolve_prefers_builtin() {
+        assert_eq!(Platform::resolve("diana").unwrap().n_acc(), 2);
+        assert!(Platform::resolve("no_such_platform").is_err());
+    }
+
+    #[test]
+    fn proportional_model_is_mac_linear() {
+        let m = LatencyModel::Proportional { macs_per_cycle: 2.0 };
+        assert_eq!(m.cycles(8, 3, 3, 4, 4, 16), (8 * 9 * 16 * 16) as u64 / 2);
+        assert_eq!(m.cycles(8, 3, 3, 4, 4, 0), 0);
+    }
+}

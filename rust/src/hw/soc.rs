@@ -1,26 +1,29 @@
-//! DIANA SoC simulator — executes one end-to-end inference of a mapped
-//! network and produces the measured-equivalent numbers of Table I:
-//! latency (ms), energy (uJ), per-accelerator utilization, plus the
-//! Fig.-6 timeline.
+//! Multi-accelerator SoC simulator — executes one end-to-end inference
+//! of a mapped network on a [`Platform`] and produces the
+//! measured-equivalent numbers of Table I: latency (ms), energy (uJ),
+//! per-accelerator utilization, plus the Fig.-6 timeline.
 //!
 //! Execution model (paper Sec. III-A): layers run sequentially (data
-//! dependence through the shared L1); within a mappable layer the two
-//! accelerators run their channel sub-layers in parallel, each costing
-//! its Eq. 6/7 cycles; depthwise convs run digital-only; add/gap/input
-//! run on the RISC-V control core and are not charged (the paper's
-//! models do not count them either).
+//! dependence through the shared L1); within a mappable layer all
+//! platform accelerators run their channel sub-layers in parallel, each
+//! costing its spec's latency model; depthwise convs run on the
+//! platform's designated unit; add/gap/input run on the control core
+//! and are not charged (the paper's models do not count them either).
+//!
+//! With [`Platform::diana`] this reproduces the pre-refactor hardwired
+//! 2-accelerator simulator byte-for-byte (tests/diana_parity.rs).
 
 use std::collections::BTreeMap;
 
 use crate::model::{Graph, Op};
 
-use super::energy::layer_energy_uj;
-use super::l1::{check_layer, tiling_penalty};
-use super::latency::{cycles_to_ms, lat_dw, layer_lats};
-use super::timeline::{Timeline, Unit};
+use super::l1::{check_layer_bytes, tiling_penalty_bytes};
+use super::platform::Platform;
+use super::timeline::Timeline;
 
-/// Per-layer channel split: mappable node name -> (digital, aimc) counts.
-pub type ChannelSplit = BTreeMap<String, (usize, usize)>;
+/// Per-layer channel split: mappable node name -> channel count per
+/// accelerator (one entry per platform accelerator, in platform order).
+pub type ChannelSplit = BTreeMap<String, Vec<usize>>;
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SocConfig {
@@ -34,65 +37,110 @@ pub struct RunReport {
     pub total_cycles: u64,
     pub latency_ms: f64,
     pub energy_uj: f64,
-    /// Busy fraction per unit [digital, aimc] (Table I "D./A. util.").
-    pub util: [f64; 2],
-    /// Fraction of channels (over all mappable layers) on the AIMC
-    /// accelerator (Table I "A. Ch.").
-    pub aimc_channel_frac: f64,
+    /// Busy fraction per accelerator (Table I util columns).
+    pub util: Vec<f64>,
+    /// Fraction of channels (over all mappable layers) per accelerator.
+    pub channel_frac: Vec<f64>,
     pub timeline: Timeline,
     /// Layers whose activations overflowed L1 (only flagged non-ideal).
     pub l1_overflows: Vec<String>,
 }
 
-/// Simulate one inference of `graph` under `split`.
+impl RunReport {
+    /// Table I "A. Ch.": fraction of channels on accelerator 1 (the
+    /// AIMC macro on DIANA-family platforms).
+    pub fn aimc_channel_frac(&self) -> f64 {
+        self.channel_frac.get(1).copied().unwrap_or(0.0)
+    }
+}
+
+/// Simulate one inference of `graph` under `split` on `platform`.
 ///
-/// Panics if `split` is missing a mappable layer or a count exceeds the
-/// layer width — those are coordinator bugs, not run-time conditions.
-pub fn simulate(graph: &Graph, split: &ChannelSplit, cfg: SocConfig) -> RunReport {
-    let mut tl = Timeline::default();
+/// Panics if `split` is missing a mappable layer, has the wrong number
+/// of per-accelerator counts, or counts that do not sum to the layer
+/// width — those are coordinator bugs, not run-time conditions.
+pub fn simulate(
+    graph: &Graph,
+    split: &ChannelSplit,
+    platform: &Platform,
+    cfg: SocConfig,
+) -> RunReport {
+    let n_acc = platform.n_acc();
+    let mut tl = Timeline::new(n_acc);
     let mut t = 0u64; // current cycle
     let mut energy = 0.0;
     let mut ch_total = 0usize;
-    let mut ch_aimc = 0usize;
+    let mut ch_acc = vec![0usize; n_acc];
     let mut overflows = Vec::new();
+    let mut lats = vec![0u64; n_acc];
+    let mut dw_lats = vec![0u64; n_acc];
+    let dw_wmem = platform.accelerators[platform.dw_acc]
+        .wmem_bytes
+        .unwrap_or(usize::MAX);
 
     for node in &graph.nodes {
         match node.op {
             Op::Conv | Op::Fc => {
-                let (cd, ca) = *split
+                let counts = split
                     .get(&node.name)
                     .unwrap_or_else(|| panic!("split missing layer '{}'", node.name));
                 assert_eq!(
-                    cd + ca,
+                    counts.len(),
+                    n_acc,
+                    "layer {}: {} counts for {} accelerators",
+                    node.name,
+                    counts.len(),
+                    n_acc
+                );
+                let total: usize = counts.iter().sum();
+                assert_eq!(
+                    total,
                     node.cout,
-                    "layer {}: split {cd}+{ca} != cout {}",
+                    "layer {}: split {counts:?} sums to {total} != cout {}",
                     node.name,
                     node.cout
                 );
                 ch_total += node.cout;
-                ch_aimc += ca;
-                let (mut ld, mut la) = layer_lats(node, cd as u64, ca as u64);
-                let rep = check_layer(node.cin, node.in_hw, node.cout, node.out_hw,
-                                      node.k, cd);
+                for (i, &c) in counts.iter().enumerate() {
+                    ch_acc[i] += c;
+                    lats[i] = platform.layer_cycles(i, node, c as u64);
+                }
+                // the digital-unit weight footprint drives the l1 report's
+                // w_overflow flag only; act overflow drives the penalty
+                let rep = check_layer_bytes(
+                    platform.l1_bytes,
+                    dw_wmem,
+                    node.cin,
+                    node.in_hw,
+                    node.cout,
+                    node.out_hw,
+                    node.k,
+                    counts[platform.dw_acc],
+                );
                 if rep.act_overflow {
                     overflows.push(node.name.clone());
                     if cfg.non_ideal_l1 {
-                        let p = tiling_penalty(rep.act_bytes);
-                        ld *= p;
-                        la *= p;
+                        let p = tiling_penalty_bytes(rep.act_bytes, platform.l1_bytes);
+                        for l in lats.iter_mut() {
+                            *l *= p;
+                        }
                     }
                 }
-                let span = ld.max(la);
-                tl.push(Unit::Digital, &node.name, t, t + ld);
-                tl.push(Unit::Aimc, &node.name, t, t + la);
-                energy += layer_energy_uj([ld, la], span);
+                let span = lats.iter().copied().max().unwrap_or(0);
+                let layer = tl.intern(&node.name);
+                for (i, &l) in lats.iter().enumerate() {
+                    tl.push(i, layer, t, t + l);
+                }
+                energy += platform.layer_energy_uj(&lats, span);
                 t += span;
             }
             Op::DwConv => {
-                let (oy, ox) = (node.out_hw.0 as u64, node.out_hw.1 as u64);
-                let ld = lat_dw(node.k as u64, ox, oy, node.cout as u64);
-                tl.push(Unit::Digital, &node.name, t, t + ld);
-                energy += layer_energy_uj([ld, 0], ld);
+                let ld = platform.dw_layer_cycles(node);
+                let layer = tl.intern(&node.name);
+                tl.push(platform.dw_acc, layer, t, t + ld);
+                dw_lats.fill(0);
+                dw_lats[platform.dw_acc] = ld;
+                energy += platform.layer_energy_uj(&dw_lats, ld);
                 t += ld;
             }
             Op::Input | Op::Add | Op::Gap => {
@@ -104,30 +152,40 @@ pub fn simulate(graph: &Graph, split: &ChannelSplit, cfg: SocConfig) -> RunRepor
     let util = tl.utilization();
     RunReport {
         total_cycles: t,
-        latency_ms: cycles_to_ms(t),
+        latency_ms: platform.cycles_to_ms(t),
         energy_uj: energy,
         util: util.busy_frac,
-        aimc_channel_frac: if ch_total == 0 { 0.0 } else { ch_aimc as f64 / ch_total as f64 },
+        channel_frac: ch_acc
+            .iter()
+            .map(|&c| if ch_total == 0 { 0.0 } else { c as f64 / ch_total as f64 })
+            .collect(),
         timeline: tl,
         l1_overflows: overflows,
     }
 }
 
-/// Convenience splits.
-pub fn split_all_digital(graph: &Graph) -> ChannelSplit {
+/// All channels of every mappable layer on accelerator `acc` of an
+/// `n_acc`-accelerator platform.
+pub fn split_all_on(graph: &Graph, n_acc: usize, acc: usize) -> ChannelSplit {
+    assert!(acc < n_acc);
     graph
         .mappable()
         .iter()
-        .map(|n| (n.name.clone(), (n.cout, 0)))
+        .map(|n| {
+            let mut counts = vec![0usize; n_acc];
+            counts[acc] = n.cout;
+            (n.name.clone(), counts)
+        })
         .collect()
 }
 
+/// Convenience DIANA splits (2 accelerators).
+pub fn split_all_digital(graph: &Graph) -> ChannelSplit {
+    split_all_on(graph, 2, 0)
+}
+
 pub fn split_all_aimc(graph: &Graph) -> ChannelSplit {
-    graph
-        .mappable()
-        .iter()
-        .map(|n| (n.name.clone(), (0, n.cout)))
-        .collect()
+    split_all_on(graph, 2, 1)
 }
 
 #[cfg(test)]
@@ -135,25 +193,30 @@ mod tests {
     use super::*;
     use crate::model::{resnet20, tinycnn};
 
+    fn diana() -> Platform {
+        Platform::diana()
+    }
+
     #[test]
     fn all_digital_fully_utilizes_digital() {
         let g = tinycnn();
-        let r = simulate(&g, &split_all_digital(&g), SocConfig::default());
+        let r = simulate(&g, &split_all_digital(&g), &diana(), SocConfig::default());
         assert!((r.util[0] - 1.0).abs() < 1e-9, "digital util {}", r.util[0]);
         assert_eq!(r.util[1], 0.0);
-        assert_eq!(r.aimc_channel_frac, 0.0);
+        assert_eq!(r.aimc_channel_frac(), 0.0);
         assert!(r.latency_ms > 0.0 && r.energy_uj > 0.0);
     }
 
     #[test]
     fn all_aimc_is_faster_and_cheaper() {
         let g = resnet20();
-        let d = simulate(&g, &split_all_digital(&g), SocConfig::default());
-        let a = simulate(&g, &split_all_aimc(&g), SocConfig::default());
+        let p = diana();
+        let d = simulate(&g, &split_all_digital(&g), &p, SocConfig::default());
+        let a = simulate(&g, &split_all_aimc(&g), &p, SocConfig::default());
         assert!(a.total_cycles < d.total_cycles / 3,
                 "aimc {} vs dig {}", a.total_cycles, d.total_cycles);
         assert!(a.energy_uj < d.energy_uj);
-        assert!((a.aimc_channel_frac - 1.0).abs() < 1e-9);
+        assert!((a.aimc_channel_frac() - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -161,9 +224,9 @@ mod tests {
         let g = tinycnn();
         let mut split = ChannelSplit::new();
         for n in g.mappable() {
-            split.insert(n.name.clone(), (n.cout / 2, n.cout - n.cout / 2));
+            split.insert(n.name.clone(), vec![n.cout / 2, n.cout - n.cout / 2]);
         }
-        let r = simulate(&g, &split, SocConfig::default());
+        let r = simulate(&g, &split, &diana(), SocConfig::default());
         assert!(r.timeline.overlap_cycles() > 0);
         assert!(r.util[0] > 0.0 && r.util[1] > 0.0);
     }
@@ -173,12 +236,13 @@ mod tests {
         // moving channels to the (parallel, faster) AIMC can only shrink
         // the per-layer max
         let g = resnet20();
-        let d = simulate(&g, &split_all_digital(&g), SocConfig::default());
+        let p = diana();
+        let d = simulate(&g, &split_all_digital(&g), &p, SocConfig::default());
         let mut split = ChannelSplit::new();
         for n in g.mappable() {
-            split.insert(n.name.clone(), (n.cout / 2, n.cout - n.cout / 2));
+            split.insert(n.name.clone(), vec![n.cout / 2, n.cout - n.cout / 2]);
         }
-        let h = simulate(&g, &split, SocConfig::default());
+        let h = simulate(&g, &split, &p, SocConfig::default());
         assert!(h.total_cycles <= d.total_cycles);
     }
 
@@ -186,7 +250,7 @@ mod tests {
     #[should_panic(expected = "split missing layer")]
     fn missing_layer_panics() {
         let g = tinycnn();
-        simulate(&g, &ChannelSplit::new(), SocConfig::default());
+        simulate(&g, &ChannelSplit::new(), &diana(), SocConfig::default());
     }
 
     #[test]
@@ -194,8 +258,17 @@ mod tests {
     fn wrong_count_panics() {
         let g = tinycnn();
         let mut s = split_all_digital(&g);
-        s.insert("stem".into(), (3, 3));
-        simulate(&g, &s, SocConfig::default());
+        s.insert("stem".into(), vec![3, 3]);
+        simulate(&g, &s, &diana(), SocConfig::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "counts for")]
+    fn wrong_arity_panics() {
+        let g = tinycnn();
+        let mut s = split_all_digital(&g);
+        s.insert("stem".into(), vec![8]);
+        simulate(&g, &s, &diana(), SocConfig::default());
     }
 
     #[test]
@@ -205,8 +278,28 @@ mod tests {
         // on the same order of magnitude for the calibration to be
         // meaningful.
         let g = resnet20();
-        let r = simulate(&g, &split_all_digital(&g), SocConfig::default());
+        let r = simulate(&g, &split_all_digital(&g), &diana(), SocConfig::default());
         assert!(r.latency_ms > 0.3 && r.latency_ms < 8.0, "lat {}", r.latency_ms);
         assert!(r.energy_uj > 8.0 && r.energy_uj < 200.0, "en {}", r.energy_uj);
+    }
+
+    #[test]
+    fn three_acc_platform_runs_and_reports_all_units() {
+        let p = Platform::diana_ne16();
+        let g = resnet20();
+        // round-robin thirds per layer
+        let mut split = ChannelSplit::new();
+        for n in g.mappable() {
+            let a = n.cout / 3;
+            let b = n.cout / 3;
+            split.insert(n.name.clone(), vec![a, b, n.cout - a - b]);
+        }
+        let r = simulate(&g, &split, &p, SocConfig::default());
+        assert_eq!(r.util.len(), 3);
+        assert_eq!(r.channel_frac.len(), 3);
+        assert!(r.util.iter().all(|&u| (0.0..=1.0).contains(&u)));
+        assert!(r.util.iter().all(|&u| u > 0.0), "all units busy: {:?}", r.util);
+        assert!((r.channel_frac.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(r.total_cycles > 0 && r.energy_uj > 0.0);
     }
 }

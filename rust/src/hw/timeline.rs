@@ -1,19 +1,19 @@
 //! Execution timeline — per-accelerator busy intervals over one
 //! end-to-end inference. This is the substrate behind Table I's
-//! "D./A. util." columns and the Fig.-6 utilization breakdown.
+//! per-unit utilization columns and the Fig.-6 breakdown, generalized
+//! to N accelerators: a unit is an index into the platform's
+//! accelerator list, and layer names are interned into a shared table
+//! (`u32` ids) so the simulator hot loop allocates at most one `String`
+//! per unique layer instead of one per interval.
 
 use std::fmt::Write as _;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Unit {
-    Digital = 0,
-    Aimc = 1,
-}
-
-#[derive(Clone, Debug)]
 pub struct Interval {
-    pub unit: Unit,
-    pub layer: String,
+    /// Accelerator index (into the platform's ordered accelerators).
+    pub unit: usize,
+    /// Interned layer-name id — resolve with [`Timeline::layer_name`].
+    pub layer: u32,
     pub start: u64, // cycles
     pub end: u64,
 }
@@ -22,24 +22,53 @@ pub struct Interval {
 pub struct Timeline {
     pub intervals: Vec<Interval>,
     pub total_cycles: u64,
+    /// Interned layer names; `Interval::layer` indexes this table.
+    names: Vec<String>,
+    n_units: usize,
 }
 
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Utilization {
-    /// Fraction of total time each unit is busy (Table I "D./A. util.").
-    pub busy_frac: [f64; 2],
-    /// Fraction of total time both units are busy simultaneously
-    /// (the Fig.-6 "both working" share).
-    pub both_frac: f64,
-    /// Fraction with neither busy.
+    /// Fraction of total time each unit is busy (Table I util columns).
+    pub busy_frac: Vec<f64>,
+    /// Fraction of total time ALL units are busy simultaneously (the
+    /// Fig.-6 "everything working" share; for 2 units, "both busy").
+    pub all_busy_frac: f64,
+    /// Fraction with at least one unit busy.
+    pub union_frac: f64,
+    /// Fraction with no unit busy (`1 - union_frac` by construction).
     pub idle_frac: f64,
 }
 
 impl Timeline {
-    pub fn push(&mut self, unit: Unit, layer: &str, start: u64, end: u64) {
+    pub fn new(n_units: usize) -> Self {
+        Timeline { intervals: Vec::new(), total_cycles: 0, names: Vec::new(), n_units }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.n_units
+    }
+
+    /// Intern a layer name, returning its id. Idempotent; the common
+    /// simulator pattern is one `intern` per layer followed by one
+    /// `push` per unit, so repeated pushes are allocation-free.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(i) = self.names.iter().rposition(|n| n == name) {
+            return i as u32;
+        }
+        self.names.push(name.to_string());
+        (self.names.len() - 1) as u32
+    }
+
+    pub fn layer_name(&self, id: u32) -> &str {
+        &self.names[id as usize]
+    }
+
+    pub fn push(&mut self, unit: usize, layer: u32, start: u64, end: u64) {
         debug_assert!(end >= start);
+        debug_assert!(unit < self.n_units, "unit {unit} out of range");
         if end > start {
-            self.intervals.push(Interval { unit, layer: layer.to_string(), start, end });
+            self.intervals.push(Interval { unit, layer, start, end });
         }
         self.total_cycles = self.total_cycles.max(end);
     }
@@ -47,7 +76,7 @@ impl Timeline {
     /// Busy cycles of one unit (intervals of the same unit never overlap
     /// in this scheduler: layers are sequential, sub-layers parallel
     /// across units, not within one).
-    pub fn busy_cycles(&self, unit: Unit) -> u64 {
+    pub fn busy_cycles(&self, unit: usize) -> u64 {
         self.intervals
             .iter()
             .filter(|iv| iv.unit == unit)
@@ -57,97 +86,119 @@ impl Timeline {
 
     pub fn utilization(&self) -> Utilization {
         if self.total_cycles == 0 {
-            return Utilization::default();
+            return Utilization {
+                busy_frac: vec![0.0; self.n_units],
+                all_busy_frac: 0.0,
+                union_frac: 0.0,
+                idle_frac: 0.0,
+            };
         }
         let t = self.total_cycles as f64;
-        let bd = self.busy_cycles(Unit::Digital) as f64;
-        let ba = self.busy_cycles(Unit::Aimc) as f64;
-        let both = self.overlap_cycles() as f64;
+        let busy_frac: Vec<f64> = (0..self.n_units)
+            .map(|u| self.busy_cycles(u) as f64 / t)
+            .collect();
+        let (union, all) = self.union_all_cycles();
         Utilization {
-            busy_frac: [bd / t, ba / t],
-            both_frac: both / t,
-            idle_frac: ((t - bd - ba + both) / t).max(0.0),
+            busy_frac,
+            all_busy_frac: all as f64 / t,
+            union_frac: union as f64 / t,
+            idle_frac: (self.total_cycles - union) as f64 / t,
         }
     }
 
-    /// Cycles during which BOTH units are busy (sweep-line).
+    /// Cycles during which ALL units are busy (event sweep).
     pub fn overlap_cycles(&self) -> u64 {
-        let mut dig: Vec<(u64, u64)> = self
-            .intervals
-            .iter()
-            .filter(|iv| iv.unit == Unit::Digital)
-            .map(|iv| (iv.start, iv.end))
-            .collect();
-        let mut aimc: Vec<(u64, u64)> = self
-            .intervals
-            .iter()
-            .filter(|iv| iv.unit == Unit::Aimc)
-            .map(|iv| (iv.start, iv.end))
-            .collect();
-        dig.sort_unstable();
-        aimc.sort_unstable();
-        let (mut i, mut j, mut total) = (0usize, 0usize, 0u64);
-        while i < dig.len() && j < aimc.len() {
-            let lo = dig[i].0.max(aimc[j].0);
-            let hi = dig[i].1.min(aimc[j].1);
-            if hi > lo {
-                total += hi - lo;
-            }
-            if dig[i].1 < aimc[j].1 {
-                i += 1;
-            } else {
-                j += 1;
-            }
-        }
-        total
+        self.union_all_cycles().1
     }
 
-    /// Per-layer (digital_busy, aimc_busy, span) in cycles — the Fig.-6
-    /// rows. Layers appear in first-seen order.
-    pub fn per_layer(&self) -> Vec<(String, u64, u64, u64)> {
-        let mut order: Vec<String> = Vec::new();
+    /// (cycles with >=1 unit busy, cycles with every unit busy).
+    fn union_all_cycles(&self) -> (u64, u64) {
+        if self.intervals.is_empty() || self.n_units == 0 {
+            return (0, 0);
+        }
+        // events: (time, unit, +1/-1); per-unit counters tolerate
+        // overlapping same-unit intervals from hand-built timelines
+        let mut events: Vec<(u64, usize, i64)> = Vec::with_capacity(self.intervals.len() * 2);
+        for iv in &self.intervals {
+            events.push((iv.start, iv.unit, 1));
+            events.push((iv.end, iv.unit, -1));
+        }
+        events.sort_unstable();
+        let mut counts = vec![0i64; self.n_units];
+        let mut n_busy = 0usize;
+        let mut union = 0u64;
+        let mut all = 0u64;
+        let mut prev_t = events[0].0;
+        let mut i = 0usize;
+        while i < events.len() {
+            let t = events[i].0;
+            let seg = t - prev_t;
+            if seg > 0 {
+                if n_busy >= 1 {
+                    union += seg;
+                }
+                if n_busy == self.n_units {
+                    all += seg;
+                }
+            }
+            while i < events.len() && events[i].0 == t {
+                let (_, u, d) = events[i];
+                let was = counts[u] > 0;
+                counts[u] += d;
+                let is = counts[u] > 0;
+                if !was && is {
+                    n_busy += 1;
+                } else if was && !is {
+                    n_busy -= 1;
+                }
+                i += 1;
+            }
+            prev_t = t;
+        }
+        (union, all)
+    }
+
+    /// Per-layer (name, busy cycles per unit, span) in cycles — the
+    /// Fig.-6 rows. Layers appear in first-seen order.
+    pub fn per_layer(&self) -> Vec<(String, Vec<u64>, u64)> {
+        let mut order: Vec<u32> = Vec::new();
         for iv in &self.intervals {
             if !order.contains(&iv.layer) {
-                order.push(iv.layer.clone());
+                order.push(iv.layer);
             }
         }
         order
             .into_iter()
             .map(|layer| {
-                let mut d = 0;
-                let mut a = 0;
+                let mut busy = vec![0u64; self.n_units];
                 let mut lo = u64::MAX;
                 let mut hi = 0;
                 for iv in self.intervals.iter().filter(|iv| iv.layer == layer) {
-                    match iv.unit {
-                        Unit::Digital => d += iv.end - iv.start,
-                        Unit::Aimc => a += iv.end - iv.start,
-                    }
+                    busy[iv.unit] += iv.end - iv.start;
                     lo = lo.min(iv.start);
                     hi = hi.max(iv.end);
                 }
-                (layer, d, a, hi.saturating_sub(lo))
+                (self.names[layer as usize].clone(), busy, hi.saturating_sub(lo))
             })
             .collect()
     }
 
     /// ASCII rendering of the per-layer utilization (Fig.-6 substitute
-    /// for a plotting stack). One row per layer; '#' digital, '%' AIMC.
+    /// for a plotting stack). One row per interval; the fill character
+    /// cycles per unit ('#' unit 0, '%' unit 1, '@' unit 2, ...).
     pub fn render_ascii(&self, width: usize) -> String {
+        const UNIT_CHARS: [char; 8] = ['#', '%', '@', '+', '*', '=', '~', '$'];
         let mut out = String::new();
         let t = self.total_cycles.max(1) as f64;
         for iv in &self.intervals {
             let pre = (iv.start as f64 / t * width as f64) as usize;
             let len = (((iv.end - iv.start) as f64 / t) * width as f64).ceil() as usize;
-            let ch = match iv.unit {
-                Unit::Digital => '#',
-                Unit::Aimc => '%',
-            };
+            let ch = UNIT_CHARS[iv.unit % UNIT_CHARS.len()];
             let _ = writeln!(
                 out,
                 "{:>10} {} |{}{}{}|",
-                iv.layer,
-                if iv.unit == Unit::Digital { "D" } else { "A" },
+                self.names[iv.layer as usize],
+                iv.unit,
                 " ".repeat(pre.min(width)),
                 ch.to_string().repeat(len.clamp(1, width - pre.min(width))),
                 " ".repeat(width.saturating_sub(pre + len.max(1)))
@@ -163,21 +214,25 @@ mod tests {
 
     #[test]
     fn utilization_parallel_layer() {
-        let mut tl = Timeline::default();
-        tl.push(Unit::Digital, "c1", 0, 100);
-        tl.push(Unit::Aimc, "c1", 0, 60);
+        let mut tl = Timeline::new(2);
+        let c1 = tl.intern("c1");
+        tl.push(0, c1, 0, 100);
+        tl.push(1, c1, 0, 60);
         let u = tl.utilization();
         assert!((u.busy_frac[0] - 1.0).abs() < 1e-9);
         assert!((u.busy_frac[1] - 0.6).abs() < 1e-9);
-        assert!((u.both_frac - 0.6).abs() < 1e-9);
+        assert!((u.all_busy_frac - 0.6).abs() < 1e-9);
+        assert!((u.union_frac - 1.0).abs() < 1e-9);
         assert!(u.idle_frac.abs() < 1e-9);
     }
 
     #[test]
     fn overlap_disjoint_is_zero() {
-        let mut tl = Timeline::default();
-        tl.push(Unit::Digital, "a", 0, 50);
-        tl.push(Unit::Aimc, "b", 50, 100);
+        let mut tl = Timeline::new(2);
+        let a = tl.intern("a");
+        let b = tl.intern("b");
+        tl.push(0, a, 0, 50);
+        tl.push(1, b, 50, 100);
         assert_eq!(tl.overlap_cycles(), 0);
         let u = tl.utilization();
         assert!((u.busy_frac[0] - 0.5).abs() < 1e-9);
@@ -186,40 +241,75 @@ mod tests {
 
     #[test]
     fn idle_gap_counted() {
-        let mut tl = Timeline::default();
-        tl.push(Unit::Digital, "a", 0, 25);
-        tl.push(Unit::Digital, "b", 75, 100);
+        let mut tl = Timeline::new(2);
+        let a = tl.intern("a");
+        let b = tl.intern("b");
+        tl.push(0, a, 0, 25);
+        tl.push(0, b, 75, 100);
         let u = tl.utilization();
         assert!((u.idle_frac - 0.5).abs() < 1e-9);
+        assert!((u.union_frac - 0.5).abs() < 1e-9);
     }
 
     #[test]
     fn per_layer_rows() {
-        let mut tl = Timeline::default();
-        tl.push(Unit::Digital, "c1", 0, 100);
-        tl.push(Unit::Aimc, "c1", 0, 40);
-        tl.push(Unit::Digital, "c2", 100, 150);
+        let mut tl = Timeline::new(2);
+        let c1 = tl.intern("c1");
+        let c2 = tl.intern("c2");
+        tl.push(0, c1, 0, 100);
+        tl.push(1, c1, 0, 40);
+        tl.push(0, c2, 100, 150);
         let rows = tl.per_layer();
         assert_eq!(rows.len(), 2);
-        assert_eq!(rows[0], ("c1".to_string(), 100, 40, 100));
-        assert_eq!(rows[1], ("c2".to_string(), 50, 0, 50));
+        assert_eq!(rows[0], ("c1".to_string(), vec![100, 40], 100));
+        assert_eq!(rows[1], ("c2".to_string(), vec![50, 0], 50));
     }
 
     #[test]
     fn zero_len_intervals_skipped() {
-        let mut tl = Timeline::default();
-        tl.push(Unit::Aimc, "x", 10, 10);
+        let mut tl = Timeline::new(2);
+        let x = tl.intern("x");
+        tl.push(1, x, 10, 10);
         assert!(tl.intervals.is_empty());
         assert_eq!(tl.total_cycles, 10);
     }
 
     #[test]
+    fn intern_is_idempotent() {
+        let mut tl = Timeline::new(1);
+        let a = tl.intern("conv1");
+        let b = tl.intern("conv2");
+        assert_ne!(a, b);
+        assert_eq!(tl.intern("conv1"), a);
+        assert_eq!(tl.layer_name(a), "conv1");
+        assert_eq!(tl.layer_name(b), "conv2");
+    }
+
+    #[test]
     fn ascii_render_has_rows() {
-        let mut tl = Timeline::default();
-        tl.push(Unit::Digital, "c1", 0, 10);
-        tl.push(Unit::Aimc, "c1", 0, 5);
+        let mut tl = Timeline::new(2);
+        let c1 = tl.intern("c1");
+        tl.push(0, c1, 0, 10);
+        tl.push(1, c1, 0, 5);
         let s = tl.render_ascii(40);
         assert_eq!(s.lines().count(), 2);
         assert!(s.contains('#') && s.contains('%'));
+    }
+
+    #[test]
+    fn three_unit_all_busy_and_union() {
+        let mut tl = Timeline::new(3);
+        let l = tl.intern("l");
+        tl.push(0, l, 0, 100);
+        tl.push(1, l, 20, 80);
+        tl.push(2, l, 50, 120);
+        tl.total_cycles = 120;
+        let u = tl.utilization();
+        // all three overlap on [50, 80)
+        assert!((u.all_busy_frac - 30.0 / 120.0).abs() < 1e-9);
+        // union covers [0, 120)
+        assert!((u.union_frac - 1.0).abs() < 1e-9);
+        assert!(u.idle_frac.abs() < 1e-9);
+        assert!((u.busy_frac[2] - 70.0 / 120.0).abs() < 1e-9);
     }
 }

@@ -3,9 +3,10 @@
 //! Subcommands map 1:1 to the paper's experiments plus utilities:
 //!   fig4 | fig5 | table1 | fig6   regenerate a table/figure
 //!   search                        one ODiMO run at a fixed lambda
-//!   simulate                      cost a mapping on the DIANA simulator
+//!   simulate                      cost a mapping on the SoC simulator
 //!   inspect                       print a model's geometry + cost table
-//! Common flags: --model, --config, --smoke.
+//!   platforms                     list built-in platforms + their units
+//! Common flags: --model, --config, --platform, --smoke.
 
 use anyhow::{anyhow, Result};
 
@@ -13,8 +14,8 @@ use odimo::cli::Args;
 use odimo::config::RunConfig;
 use odimo::coordinator::{baselines, Pipeline, Regularizer, Schedule};
 use odimo::exp::{self, ExpContext};
-use odimo::hw::latency::layer_lats;
 use odimo::hw::soc::{simulate, SocConfig};
+use odimo::hw::Platform;
 use odimo::model::ALL_MODELS;
 use odimo::runtime::{ArtifactMeta, Runtime};
 use odimo::util::logging;
@@ -27,21 +28,25 @@ USAGE: odimo <command> [flags]
 COMMANDS
   fig4      accuracy-vs-latency/energy Pareto sweep (paper Fig. 4)
   fig5      abstract-hardware sweeps (paper Fig. 5)
-  table1    deployment table on the DIANA simulator (paper Table I)
+  table1    deployment table on the SoC simulator (paper Table I)
   fig6      per-layer utilization breakdown (paper Fig. 6)
   search    single ODiMO run: --lambda <v> [--reg lat|en]
   simulate  cost a mapping: --baseline <name> | --mapping <file.json>
   inspect   print model geometry and per-layer cost bounds
+  platforms list built-in platforms and their accelerators
   help      this text
 
 FLAGS
   --model <tinycnn|resnet20|resnet18s|mbv1_025>   (default resnet20)
   --config <file.toml>      load a RunConfig
+  --platform <name|file>    deployment SoC: built-in name (diana,
+                            diana_ne16) or a platform .toml path
   --artifacts <dir>         artifacts directory (default artifacts)
   --results <dir>           results directory (default results)
   --smoke                   tiny schedules (CI / smoke testing)
   --lambdas <a,b,c>         override the sweep lambda list
-  --baseline <name>         all_8bit|all_ternary|io8_backbone_ternary|min_cost_lat|min_cost_en
+  --baseline <name>         all_8bit|all_ternary|io8_backbone_ternary|\
+even_split|min_cost_lat|min_cost_en
   --non-ideal-l1            enable L1 tiling penalties in the simulator
 ";
 
@@ -55,6 +60,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
             return Err(anyhow!("unknown model '{m}' (choose from {ALL_MODELS:?})"));
         }
         cfg.model = m.to_string();
+    }
+    if let Some(p) = args.get("platform") {
+        cfg.platform = Platform::resolve(p)?;
     }
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = d.into();
@@ -78,7 +86,19 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-const COMMON_FLAGS: [&str; 6] = ["model", "config", "artifacts", "results", "lambdas", "baseline"];
+/// "name 12.3%/4.5%/..." per-accelerator utilization string.
+fn util_str(platform: &Platform, util: &[f64]) -> String {
+    platform
+        .accelerators
+        .iter()
+        .zip(util)
+        .map(|(a, u)| format!("{} {:.1}%", a.name, 100.0 * u))
+        .collect::<Vec<_>>()
+        .join(" / ")
+}
+
+const COMMON_FLAGS: [&str; 7] =
+    ["model", "config", "platform", "artifacts", "results", "lambdas", "baseline"];
 const SWITCHES: [&str; 2] = ["smoke", "non-ideal-l1"];
 
 fn main() {
@@ -128,16 +148,16 @@ fn run() -> Result<()> {
             let mut pipe = Pipeline::new(&rt, &meta, cfg.schedule);
             pipe.data_seed = cfg.data_seed;
             pipe.ckpt_dir = cfg.results_dir.clone();
+            pipe.platform = cfg.platform.clone();
             let folded = pipe.pretrained_folded()?;
-            let p = pipe.search_point(&folded, reg, lambda)?;
+            let p = pipe.search_point(&folded, &reg, lambda)?;
             println!(
-                "{}: acc {:.4} | {:.3} ms | {:.2} uJ | D/A util {:.1}%/{:.1}% | A.Ch {:.1}%",
+                "{}: acc {:.4} | {:.3} ms | {:.2} uJ | util {} | A.Ch {:.1}%",
                 p.label,
                 p.accuracy,
                 p.latency_ms,
                 p.energy_uj,
-                100.0 * p.util[0],
-                100.0 * p.util[1],
+                util_str(&cfg.platform, &p.util),
                 100.0 * p.aimc_channel_frac
             );
             Ok(())
@@ -147,57 +167,96 @@ fn run() -> Result<()> {
             flags.push("mapping");
             args.expect_only(&flags)?;
             let cfg = build_config(&args)?;
+            let platform = &cfg.platform;
             let graph = odimo::model::build(&cfg.model)?;
             let mapping = if let Some(file) = args.get("mapping") {
                 let text = std::fs::read_to_string(file)?;
                 odimo::coordinator::Mapping::from_json(&odimo::util::json::parse(&text)?)?
             } else {
                 let name = args.get_or("baseline", "all_8bit");
-                baselines::by_name(&graph, name)
+                baselines::by_name(&graph, platform, name)
                     .ok_or_else(|| anyhow!("unknown baseline '{name}'"))?
             };
-            mapping.validate(&graph)?;
+            mapping.validate(&graph, platform.n_acc())?;
             let rep = simulate(
                 &graph,
-                &mapping.channel_split(),
+                &mapping.channel_split(platform.n_acc()),
+                platform,
                 SocConfig { non_ideal_l1: cfg.non_ideal_l1 },
             );
             println!(
-                "{}: {:.3} ms | {:.2} uJ | {} cycles | D/A util {:.1}%/{:.1}% | A.Ch {:.1}%",
+                "{} on {}: {:.3} ms | {:.2} uJ | {} cycles | util {} | ch {}",
                 cfg.model,
+                platform.name,
                 rep.latency_ms,
                 rep.energy_uj,
                 rep.total_cycles,
-                100.0 * rep.util[0],
-                100.0 * rep.util[1],
-                100.0 * rep.aimc_channel_frac
+                util_str(platform, &rep.util),
+                rep.channel_frac
+                    .iter()
+                    .zip(&platform.accelerators)
+                    .map(|(f, a)| format!("{} {:.1}%", a.name, 100.0 * f))
+                    .collect::<Vec<_>>()
+                    .join(" / "),
             );
             Ok(())
         }
         "inspect" => {
             args.expect_only(&COMMON_FLAGS)?;
             let cfg = build_config(&args)?;
+            let platform = &cfg.platform;
             let graph = odimo::model::build(&cfg.model)?;
             println!(
-                "{}: input {:?}, {} classes, {} nodes, {} mappable, {:.1} MMACs",
+                "{}: input {:?}, {} classes, {} nodes, {} mappable, {:.1} MMACs (platform {})",
                 graph.name,
                 graph.input_shape,
                 graph.classes,
                 graph.nodes.len(),
                 graph.mappable().len(),
-                graph.total_macs() as f64 / 1e6
+                graph.total_macs() as f64 / 1e6,
+                platform.name,
             );
-            println!(
-                "{:<12} {:>5} {:>5} {:>3} {:>7} {:>12} {:>12}",
-                "layer", "cin", "cout", "k", "out", "lat_dig", "lat_aimc"
-            );
-            for n in graph.mappable() {
-                let (ld, la) = layer_lats(n, n.cout as u64, n.cout as u64);
-                println!(
-                    "{:<12} {:>5} {:>5} {:>3} {:>3}x{:<3} {:>12} {:>12}",
-                    n.name, n.cin, n.cout, n.k, n.out_hw.0, n.out_hw.1, ld, la
-                );
+            print!("{:<12} {:>5} {:>5} {:>3} {:>7}", "layer", "cin", "cout", "k", "out");
+            for a in &platform.accelerators {
+                print!(" {:>12}", format!("lat_{}", a.name));
             }
+            println!();
+            for n in graph.mappable() {
+                print!(
+                    "{:<12} {:>5} {:>5} {:>3} {:>3}x{:<3}",
+                    n.name, n.cin, n.cout, n.k, n.out_hw.0, n.out_hw.1
+                );
+                for acc in 0..platform.n_acc() {
+                    print!(" {:>12}", platform.layer_cycles(acc, n, n.cout as u64));
+                }
+                println!();
+            }
+            Ok(())
+        }
+        "platforms" => {
+            args.expect_only(&[])?;
+            for name in Platform::BUILTIN_NAMES {
+                let p = Platform::by_name(name).unwrap();
+                println!(
+                    "{name}: {} accelerators @ {:.0} MHz, L1 {} kB",
+                    p.n_acc(),
+                    p.f_clk_hz / 1e6,
+                    p.l1_bytes / 1024
+                );
+                for (i, a) in p.accelerators.iter().enumerate() {
+                    println!(
+                        "  [{i}] {:<6} w{}b/a{}b  {:?}  P_act {} mW  P_idle {} mW{}",
+                        a.name,
+                        a.weight_bits,
+                        a.act_bits,
+                        a.latency,
+                        a.p_act_mw,
+                        a.p_idle_mw,
+                        if i == p.dw_acc { "  (runs depthwise)" } else { "" },
+                    );
+                }
+            }
+            println!("\ncustom platforms: --platform <file.toml> (see config/diana_ne16.toml)");
             Ok(())
         }
         other => Err(anyhow!("unknown command '{other}' — try `odimo help`")),

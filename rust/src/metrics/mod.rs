@@ -37,47 +37,53 @@ pub fn dominates(a: &SearchPoint, b: &SearchPoint, cost: impl Fn(&SearchPoint) -
     (a.accuracy >= b.accuracy && ca <= cb) && (a.accuracy > b.accuracy || ca < cb)
 }
 
-/// Markdown table in the Table-I column layout.
+/// Markdown table in the Table-I column layout. The utilization column
+/// carries one slash-separated entry per platform accelerator.
 pub fn table_markdown(title: &str, points: &[SearchPoint]) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "### {title}\n");
-    let _ = writeln!(s, "| Network | Acc. | lat. [ms] | E. [uJ] | D./A. util. | A. Ch. |");
-    let _ = writeln!(s, "|---------|------|-----------|---------|-------------|--------|");
+    let _ = writeln!(s, "| Network | Acc. | lat. [ms] | E. [uJ] | Util. | A. Ch. |");
+    let _ = writeln!(s, "|---------|------|-----------|---------|-------|--------|");
     for p in points {
+        let util = p
+            .util
+            .iter()
+            .map(|&u| format!("{:.1}%", 100.0 * u))
+            .collect::<Vec<_>>()
+            .join(" / ");
         let _ = writeln!(
             s,
-            "| {} | {:.2} | {:.3} | {:.2} | {:.1}% / {:.1}% | {:.1}% |",
+            "| {} | {:.2} | {:.3} | {:.2} | {util} | {:.1}% |",
             p.label,
             100.0 * p.accuracy,
             p.latency_ms,
             p.energy_uj,
-            100.0 * p.util[0],
-            100.0 * p.util[1],
             100.0 * p.aimc_channel_frac,
         );
     }
     s
 }
 
-/// CSV rows (for plotting the Fig.-4/5 scatter externally).
+/// CSV rows (for plotting the Fig.-4/5 scatter externally). Utilization
+/// columns are emitted per accelerator (`util_0..util_{n-1}`, n from
+/// the first point).
 pub fn points_csv(points: &[SearchPoint]) -> String {
-    let mut s = String::from(
-        "label,lambda,accuracy,latency_ms,energy_uj,total_cycles,util_dig,util_aimc,aimc_ch_frac\n",
-    );
+    let n_acc = points.first().map(|p| p.util.len()).unwrap_or(2);
+    let mut s = String::from("label,lambda,accuracy,latency_ms,energy_uj,total_cycles");
+    for i in 0..n_acc {
+        let _ = write!(s, ",util_{i}");
+    }
+    s.push_str(",aimc_ch_frac\n");
     for p in points {
-        let _ = writeln!(
+        let _ = write!(
             s,
-            "{},{},{:.6},{:.6},{:.4},{},{:.4},{:.4},{:.4}",
-            p.label,
-            p.lambda,
-            p.accuracy,
-            p.latency_ms,
-            p.energy_uj,
-            p.total_cycles,
-            p.util[0],
-            p.util[1],
-            p.aimc_channel_frac
+            "{},{},{:.6},{:.6},{:.4},{}",
+            p.label, p.lambda, p.accuracy, p.latency_ms, p.energy_uj, p.total_cycles,
         );
+        for i in 0..n_acc {
+            let _ = write!(s, ",{:.4}", p.util.get(i).copied().unwrap_or(0.0));
+        }
+        let _ = writeln!(s, ",{:.4}", p.aimc_channel_frac);
     }
     s
 }
@@ -132,7 +138,7 @@ mod tests {
             latency_ms: lat,
             energy_uj: lat * 10.0,
             total_cycles: (lat * 1000.0) as u64,
-            util: [1.0, 0.0],
+            util: vec![1.0, 0.0],
             aimc_channel_frac: 0.0,
             mapping: Mapping { assign: BTreeMap::new() },
         }

@@ -13,10 +13,12 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
-pub const N_ACC: usize = 2;
+/// Accelerator indices of the built-in DIANA platform (the artifact /
+/// AOT-graph contract: row 0 = digital int8, row 1 = ternary AIMC).
+/// Platform-generic code queries `hw::Platform` instead — accelerator
+/// counts, precisions, and cost models all live there now.
 pub const DIG: usize = 0;
 pub const AIMC: usize = 1;
-pub const BITS: [u32; N_ACC] = [8, 2];
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Op {

@@ -27,6 +27,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::coordinator::Mapping;
+use crate::hw::Platform;
 use crate::model::Graph;
 use crate::runtime::ArtifactMeta;
 use crate::util::pool::ThreadPool;
@@ -44,15 +45,17 @@ pub struct QuantNet<'g> {
 }
 
 impl<'g> QuantNet<'g> {
-    /// Compile from an artifact parameter snapshot (leaf order per `meta`).
+    /// Compile from an artifact parameter snapshot (leaf order per
+    /// `meta`) for a deployment `platform`.
     pub fn compile(
         meta: &ArtifactMeta,
         graph: &'g Graph,
         values: &[Vec<f32>],
         mapping: &Mapping,
+        platform: &Platform,
     ) -> Result<Self> {
         let params = ParamSet::from_meta(meta, values);
-        Self::compile_params(&params, graph, mapping)
+        Self::compile_params(&params, graph, mapping, platform)
     }
 
     /// Compile from any name-indexed parameter set (tests/benches).
@@ -60,10 +63,11 @@ impl<'g> QuantNet<'g> {
         params: &ParamSet<'_>,
         graph: &'g Graph,
         mapping: &Mapping,
+        platform: &Platform,
     ) -> Result<Self> {
         Ok(QuantNet {
             graph,
-            plan: QuantPlan::compile_quant(params, graph, mapping)?,
+            plan: QuantPlan::compile_quant(params, graph, mapping, platform)?,
             ws: Mutex::new(Vec::new()),
         })
     }
@@ -186,7 +190,10 @@ pub fn calibrate_act_maxima_params(
 mod tests {
     use super::*;
     use crate::model::{resnet20, tinycnn, AIMC, DIG};
-    use crate::quant::{synth_mapping as random_mapping, synth_params, r#ref::RefNet};
+    use crate::quant::{
+        synth_mapping as random_mapping, synth_mapping_n, synth_params, synth_params_on,
+        r#ref::RefNet,
+    };
     use crate::util::prng::Pcg32;
 
     fn random_input(elems: usize, seed: u64) -> Vec<f32> {
@@ -197,11 +204,12 @@ mod tests {
     #[test]
     fn engine_matches_oracle_tinycnn() {
         let g = tinycnn();
+        let p = Platform::diana();
         let (names, values) = synth_params(&g, 3);
         let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
         let mapping = random_mapping(&g, 7);
-        let net = QuantNet::compile_params(&params, &g, &mapping).unwrap();
-        let oracle = RefNet::compile(&params, &g, &mapping).unwrap();
+        let net = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &p).unwrap();
         let (c, h, w) = g.input_shape;
         let x = random_input(4 * c * h * w, 13);
         let got = net.forward(&x, 4).unwrap();
@@ -215,14 +223,15 @@ mod tests {
     #[test]
     fn uniform_mappings_match_oracle() {
         let g = tinycnn();
+        let p = Platform::diana();
         let (names, values) = synth_params(&g, 4);
         let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
         let (c, h, w) = g.input_shape;
         let x = random_input(2 * c * h * w, 29);
         for acc in [DIG, AIMC] {
             let mapping = Mapping::uniform(&g, acc);
-            let net = QuantNet::compile_params(&params, &g, &mapping).unwrap();
-            let oracle = RefNet::compile(&params, &g, &mapping).unwrap();
+            let net = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+            let oracle = RefNet::compile(&params, &g, &mapping, &p).unwrap();
             let got = net.forward(&x, 2).unwrap();
             let want = oracle.forward(&x, 2).unwrap();
             for (a, b) in got.iter().zip(&want) {
@@ -232,8 +241,29 @@ mod tests {
     }
 
     #[test]
+    fn three_acc_engine_matches_oracle() {
+        // the 3-accelerator example platform through the full engine:
+        // int8 / ternary / int4 channel groups in one layer
+        let g = tinycnn();
+        let p = Platform::diana_ne16();
+        let (names, values) = synth_params_on(&g, &p, 9);
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+        let mapping = synth_mapping_n(&g, 3, 5);
+        let net = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &p).unwrap();
+        let (c, h, w) = g.input_shape;
+        let x = random_input(2 * c * h * w, 71);
+        let got = net.forward(&x, 2).unwrap();
+        let want = oracle.forward(&x, 2).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "3-acc engine {a} vs oracle {b}");
+        }
+    }
+
+    #[test]
     fn arena_recycles_buffers_on_deep_graph() {
         let g = resnet20();
+        let p = Platform::diana();
         let (names, values) = synth_params(&g, 5);
         let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
         // 67 nodes; the scan must reuse far fewer physical buffers —
@@ -241,7 +271,8 @@ mod tests {
         // through its 7-bit D/A view and must still be recycled
         for acc in [DIG, AIMC] {
             let net =
-                QuantNet::compile_params(&params, &g, &Mapping::uniform(&g, acc)).unwrap();
+                QuantNet::compile_params(&params, &g, &Mapping::uniform(&g, acc), &p)
+                    .unwrap();
             assert!(
                 net.arena_buffers() < g.nodes.len() / 3,
                 "acc {acc}: arena {} buffers for {} nodes",
@@ -254,9 +285,11 @@ mod tests {
     #[test]
     fn repeated_forward_is_stable() {
         let g = tinycnn();
+        let p = Platform::diana();
         let (names, values) = synth_params(&g, 6);
         let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
-        let net = QuantNet::compile_params(&params, &g, &random_mapping(&g, 2)).unwrap();
+        let net =
+            QuantNet::compile_params(&params, &g, &random_mapping(&g, 2), &p).unwrap();
         let (c, h, w) = g.input_shape;
         let x = random_input(3 * c * h * w, 31);
         let a = net.forward(&x, 3).unwrap();

@@ -59,12 +59,27 @@ impl<'a> ParamSet<'a> {
     }
 }
 
-/// Deterministic synthetic parameter snapshot for a graph — test and
-/// bench support for machines without trained artifacts: small random
-/// weights and plausible log-scales under the exact leaf layout the
-/// engines expect (`node/{w,b,ls8,lster,lsa}`).
-pub fn synth_params(graph: &crate::model::Graph, seed: u64) -> (Vec<String>, Vec<Vec<f32>>) {
+/// Deterministic synthetic parameter snapshot for a (graph, platform) —
+/// test and bench support for machines without trained artifacts: small
+/// random weights and plausible log-scales under the exact leaf layout
+/// the engines expect (`node/{w,b,<scale leaves>,lsa}`). One weight
+/// log-scale leaf is emitted per distinct accelerator precision, named
+/// per the artifact contract (`ls8`, `lster`, `ls<bits>`).
+pub fn synth_params_on(
+    graph: &crate::model::Graph,
+    platform: &crate::hw::Platform,
+    seed: u64,
+) -> (Vec<String>, Vec<Vec<f32>>) {
     use crate::model::Op;
+    // scale leaves in accelerator order, deduplicated
+    let mut leaves: Vec<String> = Vec::new();
+    for a in &platform.accelerators {
+        let l = a.scale_leaf();
+        if !leaves.contains(&l) {
+            leaves.push(l);
+        }
+    }
+    let dw_leaf = platform.accelerators[platform.dw_acc].scale_leaf();
     let mut rng = crate::util::prng::Pcg32::new(seed, 17);
     let mut names: Vec<String> = Vec::new();
     let mut values: Vec<Vec<f32>> = Vec::new();
@@ -78,15 +93,18 @@ pub fn synth_params(graph: &crate::model::Graph, seed: u64) -> (Vec<String>, Vec
                 let wlen = n.cout * n.cin * n.k * n.k;
                 push("w", (0..wlen).map(|_| (rng.next_f32() - 0.5) * 0.6).collect());
                 push("b", (0..n.cout).map(|_| (rng.next_f32() - 0.5) * 0.2).collect());
-                push("ls8", vec![(0.25 + 0.2 * rng.next_f32()).ln()]);
-                push("lster", vec![(0.15 + 0.2 * rng.next_f32()).ln()]);
+                for leaf in &leaves {
+                    // ternary grids get the tighter range, like fold_bn
+                    let lo = if leaf == "lster" { 0.15 } else { 0.25 };
+                    push(leaf, vec![(lo + 0.2 * rng.next_f32()).ln()]);
+                }
                 push("lsa", vec![(1.0 + rng.next_f32()).ln()]);
             }
             Op::DwConv => {
                 let wlen = n.cout * n.k * n.k;
                 push("w", (0..wlen).map(|_| (rng.next_f32() - 0.5) * 0.6).collect());
                 push("b", (0..n.cout).map(|_| (rng.next_f32() - 0.5) * 0.2).collect());
-                push("ls8", vec![(0.25 + 0.2 * rng.next_f32()).ln()]);
+                push(&dw_leaf, vec![(0.25 + 0.2 * rng.next_f32()).ln()]);
                 push("lsa", vec![(1.0 + rng.next_f32()).ln()]);
             }
             Op::Add => {
@@ -98,8 +116,31 @@ pub fn synth_params(graph: &crate::model::Graph, seed: u64) -> (Vec<String>, Vec
     (names, values)
 }
 
-/// Deterministic ~50/50 DIG/AIMC channel mapping — the companion of
-/// [`synth_params`] for tests and benches exercising mixed assignments.
+/// [`synth_params_on`] for the built-in DIANA platform (the historical
+/// `node/{w,b,ls8,lster,lsa}` layout).
+pub fn synth_params(graph: &crate::model::Graph, seed: u64) -> (Vec<String>, Vec<Vec<f32>>) {
+    synth_params_on(graph, &crate::hw::Platform::diana(), seed)
+}
+
+/// Deterministic uniform-random channel mapping over `n_acc`
+/// accelerators — the companion of [`synth_params_on`] for tests and
+/// benches exercising mixed assignments.
+pub fn synth_mapping_n(
+    graph: &crate::model::Graph,
+    n_acc: usize,
+    seed: u64,
+) -> crate::coordinator::Mapping {
+    let mut rng = crate::util::prng::Pcg32::new(seed, 33);
+    let mut m = crate::coordinator::Mapping::uniform(graph, 0);
+    for n in graph.mappable() {
+        let ids = (0..n.cout).map(|_| rng.below(n_acc as u32) as u8).collect();
+        m.assign.insert(n.name.clone(), ids);
+    }
+    m
+}
+
+/// Deterministic ~50/50 DIG/AIMC channel mapping (DIANA convenience;
+/// PRNG-stable with the pre-generalization generator).
 pub fn synth_mapping(graph: &crate::model::Graph, seed: u64) -> crate::coordinator::Mapping {
     use crate::model::{AIMC, DIG};
     let mut rng = crate::util::prng::Pcg32::new(seed, 33);
@@ -122,11 +163,13 @@ pub(crate) fn quant_act(v: f32, scale: f32, n_bits: u32) -> f32 {
     scale / levels * round_half_even(levels * (v / scale).clamp(0.0, 1.0))
 }
 
-/// The AIMC 7-bit D/A input read: fixed [0, 1] range LSB truncation,
-/// exactly as the deploy graph re-reads stored activations.
+/// Generic n-bit D/A input read: fixed [0, 1] range LSB truncation,
+/// exactly as the deploy graph re-reads stored activations. On DIANA
+/// the AIMC macro reads through a 7-bit D/A (`da_q(v, 7)`).
 #[inline]
-pub(crate) fn da7(v: f32) -> f32 {
-    round_half_even(v.clamp(0.0, 1.0) * 127.0) / 127.0
+pub(crate) fn da_q(v: f32, bits: u32) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    round_half_even(v.clamp(0.0, 1.0) * levels) / levels
 }
 
 /// Round half to even — the rounding mode of `jnp.round` (and the XLA

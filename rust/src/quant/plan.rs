@@ -25,13 +25,14 @@
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::Mapping;
-use crate::model::{Graph, Op, AIMC, DIG};
+use crate::hw::Platform;
+use crate::model::{Graph, Op};
 use crate::util::pool::ThreadPool;
 
 use super::gemm::{dwconv_one, gemm_seqk, im2col, transpose_into};
-use super::{da7, fake_quant, quant_act, round_half_even, ParamSet};
+use super::{da_q, fake_quant, quant_act, round_half_even, ParamSet};
 
-/// One contiguous run of output channels on a single accelerator.
+/// One packed run of output channels on a single accelerator.
 pub(crate) struct Group {
     /// packed row -> output channel index (ascending)
     rows: Vec<usize>,
@@ -39,9 +40,9 @@ pub(crate) struct Group {
     w: Vec<f32>,
     /// per packed row
     bias: Vec<f32>,
-    /// read the 7-bit D/A view of the input
+    /// read the D/A view of the input (accelerators with `da_bits`)
     from_x7: bool,
-    /// output activation bits (8 digital / 7 AIMC)
+    /// output activation bits (per the accelerator spec)
     bits: u32,
 }
 
@@ -80,6 +81,8 @@ pub(crate) struct DwP {
     bias: Vec<f32>,
     relu: bool,
     act_scale: f32,
+    /// output grid of the unit running depthwise convs
+    obits: u32,
 }
 
 pub(crate) enum PlanOp {
@@ -128,23 +131,27 @@ impl Workspace {
     }
 }
 
-/// A compiled (graph, mapping) ready to execute over an arena.
+/// A compiled (graph, mapping, platform) ready to execute over an arena.
 pub struct QuantPlan {
     nodes: Vec<PlanNode>,
     n_bufs: usize,
     in_elems: usize,
     out_elems: usize,
+    /// D/A truncation width for x7-view materialization (the platform's
+    /// shared `da_bits`; unused when no accelerator declares one).
+    da_bits: u32,
 }
 
 impl QuantPlan {
-    /// Compile the deploy-mode (quantized, mapped) plan.
+    /// Compile the deploy-mode (quantized, mapped) plan for `platform`.
     pub fn compile_quant(
         params: &ParamSet<'_>,
         graph: &Graph,
         mapping: &Mapping,
+        platform: &Platform,
     ) -> Result<Self> {
-        mapping.validate(graph)?;
-        Self::compile(params, graph, Some(mapping))
+        mapping.validate(graph, platform.n_acc())?;
+        Self::compile(params, graph, Some((mapping, platform)))
     }
 
     /// Compile the float (quantization-free) plan — the calibration
@@ -156,7 +163,7 @@ impl QuantPlan {
     fn compile(
         params: &ParamSet<'_>,
         graph: &Graph,
-        mapping: Option<&Mapping>,
+        mapping: Option<(&Mapping, &Platform)>,
     ) -> Result<Self> {
         let n_nodes = graph.nodes.len();
         if n_nodes == 0 {
@@ -172,6 +179,10 @@ impl QuantPlan {
 
         // ---- 1. lower each node to a PlanOp --------------------------
         let quant = mapping.is_some();
+        let da_bits = match mapping {
+            Some((_, p)) => p.da_bits()?.unwrap_or(7),
+            None => 7,
+        };
         let mut ops: Vec<PlanOp> = Vec::with_capacity(n_nodes);
         for n in &graph.nodes {
             let op = match n.op {
@@ -183,20 +194,19 @@ impl QuantPlan {
                         if quant { params.get(&n.name, "lsa")?[0].exp() } else { 0.0 };
                     let per = w.len() / n.cout;
                     let groups = match mapping {
-                        Some(m) => {
-                            let s8 = params.get(&n.name, "ls8")?[0].exp();
-                            let st = params.get(&n.name, "lster")?[0].exp();
+                        Some((m, platform)) => {
                             let assign = m.layer(&n.name);
                             let mut gs = Vec::new();
-                            for acc in [DIG, AIMC] {
+                            for (acc, spec) in platform.accelerators.iter().enumerate() {
                                 let rows: Vec<usize> = (0..n.cout)
                                     .filter(|&co| assign[co] as usize == acc)
                                     .collect();
                                 if rows.is_empty() {
                                     continue;
                                 }
-                                let (scale, wbits, obits) =
-                                    if acc == DIG { (s8, 8, 8) } else { (st, 2, 7) };
+                                let scale =
+                                    params.get(&n.name, &spec.scale_leaf())?[0].exp();
+                                let wbits = spec.weight_bits;
                                 let wp: Vec<f32> = rows
                                     .iter()
                                     .flat_map(|&co| {
@@ -209,8 +219,8 @@ impl QuantPlan {
                                     w: wp,
                                     bias: rows.iter().map(|&co| bias[co]).collect(),
                                     rows,
-                                    from_x7: acc == AIMC,
-                                    bits: obits,
+                                    from_x7: spec.da_bits.is_some(),
+                                    bits: spec.act_bits,
                                 });
                             }
                             gs
@@ -244,9 +254,10 @@ impl QuantPlan {
                 }
                 Op::DwConv => {
                     let w = params.get(&n.name, "w")?;
-                    let weff = if quant {
-                        let s8 = params.get(&n.name, "ls8")?[0].exp();
-                        w.iter().map(|&v| fake_quant(v, s8, 8)).collect()
+                    let weff = if let Some((_, platform)) = mapping {
+                        let spec = &platform.accelerators[platform.dw_acc];
+                        let s = params.get(&n.name, &spec.scale_leaf())?[0].exp();
+                        w.iter().map(|&v| fake_quant(v, s, spec.weight_bits)).collect()
                     } else {
                         w.to_vec()
                     };
@@ -266,6 +277,12 @@ impl QuantPlan {
                             params.get(&n.name, "lsa")?[0].exp()
                         } else {
                             0.0
+                        },
+                        obits: match mapping {
+                            Some((_, platform)) => {
+                                platform.accelerators[platform.dw_acc].act_bits
+                            }
+                            None => 8,
                         },
                     })
                 }
@@ -450,6 +467,7 @@ impl QuantPlan {
             n_bufs: buf_cap.len(),
             in_elems: c0 * h0 * w0,
             nodes,
+            da_bits,
         })
     }
 
@@ -541,7 +559,7 @@ impl QuantPlan {
                 x7b.clear();
                 x7b.resize(dst.len(), 0.0);
                 for (d, &v) in x7b.iter_mut().zip(dst.iter()) {
-                    *d = da7(v);
+                    *d = da_q(v, self.da_bits);
                 }
                 ws.bufs[x7id] = x7b;
             }
@@ -701,7 +719,7 @@ impl QuantPlan {
                 x7b.clear();
                 x7b.resize(dst.len(), 0.0);
                 for (d, &v) in x7b.iter_mut().zip(dst.iter()) {
-                    *d = da7(v);
+                    *d = da_q(v, self.da_bits);
                 }
                 ws.bufs[x7id] = x7b;
             }
@@ -800,7 +818,7 @@ fn dw_channel(dp: &DwP, src: &[f32], b: usize, ch: usize, drow: &mut [f32]) {
     for v in drow.iter_mut() {
         let t = *v + dp.bias[ch];
         let t = if dp.relu { t.max(0.0) } else { t };
-        *v = if dp.act_scale > 0.0 { quant_act(t, dp.act_scale, 8) } else { t };
+        *v = if dp.act_scale > 0.0 { quant_act(t, dp.act_scale, dp.obits) } else { t };
     }
 }
 

@@ -21,18 +21,25 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::coordinator::Mapping;
-use crate::model::{Graph, NodeDef, Op, DIG};
+use crate::hw::Platform;
+use crate::model::{Graph, NodeDef, Op};
 
-use super::{da7, fake_quant, quant_act, ParamSet};
+use super::{da_q, fake_quant, quant_act, ParamSet};
 
 struct QLayer {
     /// per-channel effective fake-quantized weights (already masked by
-    /// the assignment: digital channels int8-grid, aimc channels
-    /// ternary-grid), OIHW
+    /// the assignment: each channel on its accelerator's grid), OIHW
     w_eff: Vec<f32>,
     bias: Vec<f32>,
     act_scale: f32,
     assign: Vec<u8>,
+}
+
+/// Per-accelerator facts the forward pass needs (index = acc id).
+#[derive(Clone, Copy)]
+struct AccView {
+    from_da: bool,
+    act_bits: u32,
 }
 
 /// The naive interpreter: string-keyed tensor map, fresh allocations
@@ -42,16 +49,29 @@ pub struct RefNet<'g> {
     layers: BTreeMap<String, QLayer>,
     dw: BTreeMap<String, QLayer>,
     add_scales: BTreeMap<String, f32>,
+    accs: Vec<AccView>,
+    dw_acc: usize,
+    da_bits: u32,
 }
 
 impl<'g> RefNet<'g> {
-    /// Compile from a parameter snapshot.
+    /// Compile from a parameter snapshot for `platform`.
     pub fn compile(
         params: &ParamSet<'_>,
         graph: &'g Graph,
         mapping: &Mapping,
+        platform: &Platform,
     ) -> Result<Self> {
-        mapping.validate(graph)?;
+        mapping.validate(graph, platform.n_acc())?;
+        let accs: Vec<AccView> = platform
+            .accelerators
+            .iter()
+            .map(|a| AccView { from_da: a.da_bits.is_some(), act_bits: a.act_bits })
+            .collect();
+        let scales: Vec<String> =
+            platform.accelerators.iter().map(|a| a.scale_leaf()).collect();
+        let wbits: Vec<u32> = platform.accelerators.iter().map(|a| a.weight_bits).collect();
+        let da_bits = platform.da_bits()?.unwrap_or(7);
         let mut layers = BTreeMap::new();
         let mut dw = BTreeMap::new();
         let mut add_scales = BTreeMap::new();
@@ -59,20 +79,25 @@ impl<'g> RefNet<'g> {
             match n.op {
                 Op::Conv | Op::Fc => {
                     let w = params.get(&n.name, "w")?;
-                    let s8 = params.get(&n.name, "ls8")?[0].exp();
-                    let st = params.get(&n.name, "lster")?[0].exp();
                     let assign = mapping.layer(&n.name).to_vec();
+                    // per-accelerator scales, fetched lazily so layers
+                    // with no channels on a unit don't require its leaf
+                    let mut acc_scale = vec![None::<f32>; platform.n_acc()];
                     let per_ch = w.len() / n.cout;
                     let mut w_eff = vec![0f32; w.len()];
                     for co in 0..n.cout {
-                        let (scale, bits) = if assign[co] as usize == DIG {
-                            (s8, 8)
-                        } else {
-                            (st, 2)
+                        let acc = assign[co] as usize;
+                        let scale = match acc_scale[acc] {
+                            Some(s) => s,
+                            None => {
+                                let s = params.get(&n.name, &scales[acc])?[0].exp();
+                                acc_scale[acc] = Some(s);
+                                s
+                            }
                         };
                         for k in 0..per_ch {
                             w_eff[co * per_ch + k] =
-                                fake_quant(w[co * per_ch + k], scale, bits);
+                                fake_quant(w[co * per_ch + k], scale, wbits[acc]);
                         }
                     }
                     layers.insert(
@@ -87,14 +112,16 @@ impl<'g> RefNet<'g> {
                 }
                 Op::DwConv => {
                     let w = params.get(&n.name, "w")?;
-                    let s8 = params.get(&n.name, "ls8")?[0].exp();
+                    let leaf = &scales[platform.dw_acc];
+                    let s = params.get(&n.name, leaf)?[0].exp();
+                    let b = wbits[platform.dw_acc];
                     dw.insert(
                         n.name.clone(),
                         QLayer {
-                            w_eff: w.iter().map(|&v| fake_quant(v, s8, 8)).collect(),
+                            w_eff: w.iter().map(|&v| fake_quant(v, s, b)).collect(),
                             bias: params.get(&n.name, "b")?.to_vec(),
                             act_scale: params.get(&n.name, "lsa")?[0].exp(),
-                            assign: vec![DIG as u8; n.cout],
+                            assign: vec![platform.dw_acc as u8; n.cout],
                         },
                     );
                 }
@@ -105,7 +132,15 @@ impl<'g> RefNet<'g> {
                 _ => {}
             }
         }
-        Ok(RefNet { graph, layers, dw, add_scales })
+        Ok(RefNet {
+            graph,
+            layers,
+            dw,
+            add_scales,
+            accs,
+            dw_acc: platform.dw_acc,
+            da_bits,
+        })
     }
 
     /// Forward one batch (NCHW in [0,1]); returns (batch, classes) logits.
@@ -157,26 +192,26 @@ impl<'g> RefNet<'g> {
 
     fn conv_mapped(&self, n: &NodeDef, inp: &[f32], batch: usize) -> Vec<f32> {
         let q = &self.layers[&n.name];
-        // AIMC 7-bit D/A input read (fixed [0,1] range, like the graph)
-        let x7: Vec<f32> = inp.iter().map(|&v| da7(v)).collect();
+        // D/A input read (fixed [0,1] range, like the graph) for the
+        // accelerators that re-read through a converter
+        let x7: Vec<f32> = inp.iter().map(|&v| da_q(v, self.da_bits)).collect();
         let (oh, ow) = n.out_hw;
         let mut y = vec![0f32; batch * n.cout * oh * ow];
         for b in 0..batch {
             for co in 0..n.cout {
-                let dig = q.assign[co] as usize == DIG;
-                let src = if dig { inp } else { &x7 };
+                let acc = self.accs[q.assign[co] as usize];
+                let src = if acc.from_da { &x7 } else { inp };
                 conv_one_channel(
                     src, b, n.cin, n.in_hw, &q.w_eff, co, n.k, n.stride, n.pad,
                     oh, ow,
                     &mut y[(b * n.cout + co) * oh * ow..(b * n.cout + co + 1) * oh * ow],
                 );
-                let bits = if dig { 8 } else { 7 };
                 for v in
                     y[(b * n.cout + co) * oh * ow..(b * n.cout + co + 1) * oh * ow].iter_mut()
                 {
                     let t = *v + q.bias[co];
                     let t = if n.relu { t.max(0.0) } else { t };
-                    *v = quant_act(t, q.act_scale, bits);
+                    *v = quant_act(t, q.act_scale, acc.act_bits);
                 }
             }
         }
@@ -185,11 +220,11 @@ impl<'g> RefNet<'g> {
 
     fn fc_mapped(&self, n: &NodeDef, inp: &[f32], batch: usize) -> Vec<f32> {
         let q = &self.layers[&n.name];
-        let x7: Vec<f32> = inp.iter().map(|&v| da7(v)).collect();
+        let x7: Vec<f32> = inp.iter().map(|&v| da_q(v, self.da_bits)).collect();
         let mut y = vec![0f32; batch * n.cout];
         for b in 0..batch {
             for co in 0..n.cout {
-                let src = if q.assign[co] as usize == DIG { inp } else { &x7 };
+                let src = if self.accs[q.assign[co] as usize].from_da { &x7 } else { inp };
                 let mut acc = 0f32;
                 for ci in 0..n.cin {
                     acc += src[b * n.cin + ci] * q.w_eff[co * n.cin + ci];
@@ -202,6 +237,7 @@ impl<'g> RefNet<'g> {
 
     fn dwconv(&self, n: &NodeDef, inp: &[f32], batch: usize) -> Vec<f32> {
         let q = &self.dw[&n.name];
+        let obits = self.accs[self.dw_acc].act_bits;
         let (oh, ow) = n.out_hw;
         let mut y = vec![0f32; batch * n.cout * oh * ow];
         for b in 0..batch {
@@ -213,7 +249,7 @@ impl<'g> RefNet<'g> {
                 for v in dst.iter_mut() {
                     let t = *v + q.bias[ch];
                     let t = if n.relu { t.max(0.0) } else { t };
-                    *v = quant_act(t, q.act_scale, 8);
+                    *v = quant_act(t, q.act_scale, obits);
                 }
             }
         }

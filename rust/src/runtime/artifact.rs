@@ -70,15 +70,24 @@ impl GraphMeta {
 }
 
 /// Hardware calibration constants exported by the python cost model —
-/// asserted against the rust mirrors in tests/model_parity.rs.
+/// asserted against the rust mirrors in tests/model_parity.rs. The
+/// power vectors carry one entry per accelerator; their length is the
+/// artifact's accelerator count (2 for the DIANA training graphs).
 #[derive(Clone, Debug)]
 pub struct HwMeta {
-    pub p_act: [f64; 2],
-    pub p_idle: [f64; 2],
+    pub p_act: Vec<f64>,
+    pub p_idle: Vec<f64>,
     pub f_clk_hz: f64,
     pub aimc_rows: u64,
     pub aimc_cols: u64,
     pub dig_pe: u64,
+}
+
+impl HwMeta {
+    /// Accelerator count of the artifact contract (alpha/assign rows).
+    pub fn n_acc(&self) -> usize {
+        self.p_act.len()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -149,16 +158,35 @@ impl ArtifactMeta {
             );
         }
         let hw = v.req("hw")?;
-        let pa = hw.req("p_act")?.as_arr().unwrap_or(&[]).to_vec();
-        let pi = hw.req("p_idle")?.as_arr().unwrap_or(&[]).to_vec();
+        let pa: Vec<f64> = hw
+            .req("p_act")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0))
+            .collect();
+        let pi: Vec<f64> = hw
+            .req("p_idle")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0))
+            .collect();
+        if pa.len() != pi.len() || pa.is_empty() {
+            return Err(anyhow!(
+                "hw meta: p_act ({}) and p_idle ({}) must be equal-length, non-empty",
+                pa.len(),
+                pi.len()
+            ));
+        }
         Ok(ArtifactMeta {
             model: graph,
             params,
             mappable,
             graphs,
             hw: HwMeta {
-                p_act: [pa[0].as_f64().unwrap_or(0.0), pa[1].as_f64().unwrap_or(0.0)],
-                p_idle: [pi[0].as_f64().unwrap_or(0.0), pi[1].as_f64().unwrap_or(0.0)],
+                p_act: pa,
+                p_idle: pi,
                 f_clk_hz: hw.req("f_clk_hz")?.as_f64().unwrap_or(0.0),
                 aimc_rows: hw.req("aimc_rows")?.as_i64().unwrap_or(0) as u64,
                 aimc_cols: hw.req("aimc_cols")?.as_i64().unwrap_or(0) as u64,

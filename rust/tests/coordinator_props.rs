@@ -1,12 +1,14 @@
 //! Property-based tests on coordinator invariants (mini-proptest built
 //! on the in-tree PRNG: randomized cases with printed seeds so failures
-//! reproduce deterministically).
+//! reproduce deterministically). Includes the N>=3 platform properties
+//! on the shipped 3-accelerator example SoC.
 
 use std::collections::BTreeMap;
 
 use odimo::coordinator::partition::{partition, sublayers};
 use odimo::coordinator::{baselines, discretize::discretize, Mapping, SearchPoint};
 use odimo::hw::soc::{simulate, SocConfig};
+use odimo::hw::Platform;
 use odimo::model::{build, Graph, ALL_MODELS, AIMC, DIG};
 use odimo::util::prng::Pcg32;
 
@@ -19,6 +21,15 @@ fn random_mapping(g: &Graph, rng: &mut Pcg32) -> Mapping {
         let ids = (0..n.cout)
             .map(|_| if rng.next_f32() < p { AIMC as u8 } else { DIG as u8 })
             .collect();
+        m.assign.insert(n.name.clone(), ids);
+    }
+    m
+}
+
+fn random_mapping_n(g: &Graph, n_acc: usize, rng: &mut Pcg32) -> Mapping {
+    let mut m = Mapping::uniform(g, 0);
+    for n in g.mappable() {
+        let ids = (0..n.cout).map(|_| rng.below(n_acc as u32) as u8).collect();
         m.assign.insert(n.name.clone(), ids);
     }
     m
@@ -42,14 +53,14 @@ fn prop_split_counts_sum_to_cout() {
         let mut rng = Pcg32::new(seed, 12);
         let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
         let m = random_mapping(&g, &mut rng);
-        let split = m.channel_split();
+        let split = m.channel_split(2);
         for n in g.mappable() {
-            let (d, a) = split[&n.name];
-            assert_eq!(d + a, n.cout, "seed {seed} layer {}", n.name);
+            let counts = &split[&n.name];
+            assert_eq!(counts.iter().sum::<usize>(), n.cout, "seed {seed} layer {}", n.name);
         }
         // aimc_fraction consistent with the split
         let total: usize = g.mappable().iter().map(|n| n.cout).sum();
-        let aimc: usize = split.values().map(|&(_, a)| a).sum();
+        let aimc: usize = split.values().map(|c| c[1]).sum();
         assert!((m.aimc_fraction() - aimc as f64 / total as f64).abs() < 1e-12);
     }
 }
@@ -59,21 +70,23 @@ fn prop_simulator_latency_bounded_by_extremes() {
     // any split's latency lies between the best single-accelerator
     // latency per layer (lower bound: max is at least each side alone
     // of the same split... we use global extremes as sanity bounds)
+    let p = Platform::diana();
     for seed in 0..CASES {
         let mut rng = Pcg32::new(seed, 13);
         let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
         let m = random_mapping(&g, &mut rng);
-        let r = simulate(&g, &m.channel_split(), SocConfig::default());
+        let r = simulate(&g, &m.channel_split(2), &p, SocConfig::default());
         let dig = simulate(
             &g,
-            &Mapping::uniform(&g, DIG).channel_split(),
+            &Mapping::uniform(&g, DIG).channel_split(2),
+            &p,
             SocConfig::default(),
         );
         assert!(r.total_cycles <= dig.total_cycles, "seed {seed}");
         assert!(r.total_cycles > 0);
         assert!(r.energy_uj > 0.0);
         // utilization fractions are fractions
-        assert!((0.0..=1.0).contains(&r.util[0]) && (0.0..=1.0).contains(&r.util[1]));
+        assert!(r.util.iter().all(|u| (0.0..=1.0).contains(u)));
     }
 }
 
@@ -81,25 +94,25 @@ fn prop_simulator_latency_bounded_by_extremes() {
 fn prop_min_cost_is_optimal_per_layer() {
     // exhaustive per-layer optimality: no random split may beat the
     // min_cost baseline's per-layer max-latency
-    use odimo::hw::latency::layer_lats;
+    let p = Platform::diana();
     let g = build("resnet20").unwrap();
-    let mc = baselines::min_cost(&g, baselines::CostObjective::Latency);
-    let split = mc.channel_split();
+    let mc = baselines::min_cost(&g, &p, baselines::CostObjective::Latency);
+    let split = mc.channel_split(2);
     for seed in 0..CASES {
         let mut rng = Pcg32::new(seed, 14);
         for n in g.mappable() {
             let cd = rng.below(n.cout as u32 + 1) as usize;
-            let (rd, ra) = layer_lats(n, cd as u64, (n.cout - cd) as u64);
-            let (md, ma) = {
-                let (d, a) = split[&n.name];
-                layer_lats(n, d as u64, a as u64)
-            };
+            let rand_span = p
+                .layer_cycles(0, n, cd as u64)
+                .max(p.layer_cycles(1, n, (n.cout - cd) as u64));
+            let counts = &split[&n.name];
+            let mc_span = p
+                .layer_cycles(0, n, counts[0] as u64)
+                .max(p.layer_cycles(1, n, counts[1] as u64));
             assert!(
-                md.max(ma) <= rd.max(ra),
-                "seed {seed} layer {}: min_cost {} beaten by random {}",
+                mc_span <= rand_span,
+                "seed {seed} layer {}: min_cost {mc_span} beaten by random {rand_span}",
                 n.name,
-                md.max(ma),
-                rd.max(ra)
             );
         }
     }
@@ -135,7 +148,7 @@ fn prop_discretize_respects_argmax() {
             let v: Vec<f32> = (0..2 * n.cout).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
             alphas.insert(n.name.clone(), v);
         }
-        let m = discretize(&g, &alphas).unwrap();
+        let m = discretize(&g, &alphas, 2).unwrap();
         for n in g.mappable() {
             let a = &alphas[&n.name];
             for c in 0..n.cout {
@@ -159,7 +172,7 @@ fn prop_pareto_front_is_nondominated() {
                 latency_ms: rng.next_f32() as f64 * 10.0,
                 energy_uj: rng.next_f32() as f64 * 100.0,
                 total_cycles: 1,
-                util: [0.5, 0.5],
+                util: vec![0.5, 0.5],
                 aimc_channel_frac: 0.0,
                 mapping: Mapping { assign: BTreeMap::new() },
             })
@@ -202,12 +215,98 @@ fn prop_partition_fragments_bounded() {
         let mut rng = Pcg32::new(seed, 18);
         let m = random_mapping(&meta.model, &mut rng);
         let part = partition(&meta, &meta.model, &m, &values).unwrap();
-        let before = m.channel_split();
-        let after = part.mapping.channel_split();
+        let before = m.channel_split(2);
+        let after = part.mapping.channel_split(2);
         assert_eq!(before, after, "seed {seed}: split counts changed");
         for (layer, frags) in &part.fragments {
             let n = meta.model.node(layer).unwrap();
             assert!(*frags <= n.cout, "seed {seed} {layer}");
+        }
+    }
+}
+
+// ---- N >= 3 platform properties (3-accelerator example SoC) ----------
+
+#[test]
+fn prop_nacc3_split_conservation() {
+    let p = Platform::diana_ne16();
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 19);
+        let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
+        let m = random_mapping_n(&g, p.n_acc(), &mut rng);
+        m.validate(&g, p.n_acc()).unwrap();
+        let split = m.channel_split(p.n_acc());
+        for n in g.mappable() {
+            let counts = &split[&n.name];
+            assert_eq!(counts.len(), p.n_acc(), "seed {seed} {}", n.name);
+            assert_eq!(
+                counts.iter().sum::<usize>(),
+                n.cout,
+                "seed {seed} layer {}: counts {counts:?} do not conserve channels",
+                n.name
+            );
+        }
+        let fr = m.channel_frac(p.n_acc());
+        assert!((fr.iter().sum::<f64>() - 1.0).abs() < 1e-9, "seed {seed}: {fr:?}");
+    }
+}
+
+#[test]
+fn prop_nacc3_busy_frac_bounded() {
+    let p = Platform::diana_ne16();
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 20);
+        let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
+        let m = random_mapping_n(&g, p.n_acc(), &mut rng);
+        let r = simulate(&g, &m.channel_split(p.n_acc()), &p, SocConfig::default());
+        assert_eq!(r.util.len(), p.n_acc());
+        for (i, &u) in r.util.iter().enumerate() {
+            assert!(
+                (0.0..=1.0 + 1e-12).contains(&u),
+                "seed {seed}: busy_frac[{i}] = {u} out of [0, 1]"
+            );
+        }
+        assert!(r.total_cycles > 0 && r.energy_uj > 0.0, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_nacc3_idle_plus_union_is_one() {
+    let p = Platform::diana_ne16();
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 21);
+        let g = build(ALL_MODELS[(seed % 4) as usize]).unwrap();
+        let m = random_mapping_n(&g, p.n_acc(), &mut rng);
+        let r = simulate(&g, &m.channel_split(p.n_acc()), &p, SocConfig::default());
+        let u = r.timeline.utilization();
+        assert!(
+            (u.idle_frac + u.union_frac - 1.0).abs() < 1e-9,
+            "seed {seed}: idle {} + union {} != 1",
+            u.idle_frac,
+            u.union_frac
+        );
+        // union is bounded by the sum of per-unit busy fractions and is
+        // at least the largest of them
+        let max_busy = u.busy_frac.iter().copied().fold(0.0f64, f64::max);
+        let sum_busy: f64 = u.busy_frac.iter().sum();
+        assert!(u.union_frac >= max_busy - 1e-9, "seed {seed}");
+        assert!(u.union_frac <= sum_busy + 1e-9, "seed {seed}");
+        assert!(u.all_busy_frac <= u.union_frac + 1e-12, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_nacc3_sublayers_cover_all_units() {
+    let p = Platform::diana_ne16();
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 22);
+        let g = build("resnet20").unwrap();
+        let m = random_mapping_n(&g, p.n_acc(), &mut rng);
+        for n in g.mappable() {
+            let subs = sublayers(n, m.layer(&n.name));
+            let covered: usize = subs.iter().map(|s| s.2).sum();
+            assert_eq!(covered, n.cout, "seed {seed}");
+            assert!(subs.iter().all(|s| (s.0 as usize) < p.n_acc()), "seed {seed}");
         }
     }
 }

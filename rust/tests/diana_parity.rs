@@ -1,0 +1,205 @@
+//! Golden DIANA parity: the generalized `Platform::diana()` path must
+//! reproduce the pre-refactor hardwired 2-accelerator simulator
+//! byte-for-byte.
+//!
+//! Two pins:
+//!  1. a local, self-contained re-implementation of the seed's cost
+//!     model (Eq. 6/7 integer latencies, Eq. 4 energy with the exact
+//!     accumulation order of the old `hw::{latency,energy,soc}` code)
+//!     is compared against `simulate(..., &Platform::diana(), ..)` with
+//!     exact `==` on every Table-I metric, over fixed mappings on all
+//!     four benchmark models;
+//!  2. hardcoded golden `total_cycles` (computed from the seed formulas
+//!     when this test was introduced) guard against the oracle and the
+//!     platform path drifting together.
+
+use odimo::hw::soc::{simulate, split_all_aimc, split_all_digital, ChannelSplit, SocConfig};
+use odimo::hw::Platform;
+use odimo::model::{build, Graph, Op, ALL_MODELS};
+
+// ---- the seed simulator, frozen --------------------------------------
+
+const AIMC_ROWS: u64 = 1152;
+const AIMC_COLS: u64 = 512;
+const DIG_PE: u64 = 16;
+const F_CLK_HZ: f64 = 260e6;
+const P_ACT: [f64; 2] = [24.0, 26.0];
+const P_IDLE: [f64; 2] = [1.3, 1.3];
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+fn lat_aimc(cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout_a: u64) -> u64 {
+    if cout_a == 0 {
+        return 0;
+    }
+    let tiles_in = ceil_div(cin * fx * fy, AIMC_ROWS);
+    let tiles_out = ceil_div(cout_a, AIMC_COLS);
+    tiles_in * tiles_out * ox * oy + 2 * 4 * cin * tiles_out
+}
+
+fn lat_dig(cin: u64, fx: u64, fy: u64, ox: u64, oy: u64, cout_d: u64) -> u64 {
+    if cout_d == 0 {
+        return 0;
+    }
+    ceil_div(cout_d, DIG_PE) * ceil_div(oy, DIG_PE) * cin * ox * fx * fy
+        + cin * cout_d * fx * fy
+}
+
+fn lat_dw(k: u64, ox: u64, oy: u64, cout: u64) -> u64 {
+    ceil_div(cout, DIG_PE) * ceil_div(oy, DIG_PE) * ox * k * k + cout * k * k
+}
+
+fn layer_energy_uj(active_cycles: [u64; 2], span_cycles: u64) -> f64 {
+    let mut e_mw_cycles = 0.0;
+    for i in 0..2 {
+        let act = active_cycles[i].min(span_cycles) as f64;
+        let idle = (span_cycles - active_cycles[i].min(span_cycles)) as f64;
+        e_mw_cycles += P_ACT[i] * act + P_IDLE[i] * idle;
+    }
+    e_mw_cycles / F_CLK_HZ * 1e3
+}
+
+struct SeedReport {
+    total_cycles: u64,
+    latency_ms: f64,
+    energy_uj: f64,
+    util: [f64; 2],
+    aimc_channel_frac: f64,
+}
+
+/// The seed `hw::soc::simulate`, with the exact same statement order.
+fn seed_simulate(graph: &Graph, split: &ChannelSplit) -> SeedReport {
+    let mut t = 0u64;
+    let mut energy = 0.0;
+    let mut ch_total = 0usize;
+    let mut ch_aimc = 0usize;
+    let mut busy = [0u64; 2];
+    for node in &graph.nodes {
+        match node.op {
+            Op::Conv | Op::Fc => {
+                let counts = &split[&node.name];
+                let (cd, ca) = (counts[0], counts[1]);
+                assert_eq!(cd + ca, node.cout);
+                ch_total += node.cout;
+                ch_aimc += ca;
+                let (oy, ox) = (node.out_hw.0 as u64, node.out_hw.1 as u64);
+                let (cin, k) = (node.cin as u64, node.k as u64);
+                let ld = lat_dig(cin, k, k, ox, oy, cd as u64);
+                let la = lat_aimc(cin, k, k, ox, oy, ca as u64);
+                let span = ld.max(la);
+                busy[0] += ld;
+                busy[1] += la;
+                energy += layer_energy_uj([ld, la], span);
+                t += span;
+            }
+            Op::DwConv => {
+                let (oy, ox) = (node.out_hw.0 as u64, node.out_hw.1 as u64);
+                let ld = lat_dw(node.k as u64, ox, oy, node.cout as u64);
+                busy[0] += ld;
+                energy += layer_energy_uj([ld, 0], ld);
+                t += ld;
+            }
+            _ => {}
+        }
+    }
+    SeedReport {
+        total_cycles: t,
+        latency_ms: t as f64 / F_CLK_HZ * 1e3,
+        energy_uj: energy,
+        util: [busy[0] as f64 / t as f64, busy[1] as f64 / t as f64],
+        aimc_channel_frac: if ch_total == 0 { 0.0 } else { ch_aimc as f64 / ch_total as f64 },
+    }
+}
+
+fn half_split(graph: &Graph) -> ChannelSplit {
+    graph
+        .mappable()
+        .iter()
+        .map(|n| (n.name.clone(), vec![n.cout / 2, n.cout - n.cout / 2]))
+        .collect()
+}
+
+#[test]
+fn platform_diana_reproduces_seed_simulator_exactly() {
+    let p = Platform::diana();
+    for model in ALL_MODELS {
+        let g = build(model).unwrap();
+        for (tag, split) in [
+            ("all_digital", split_all_digital(&g)),
+            ("all_aimc", split_all_aimc(&g)),
+            ("half", half_split(&g)),
+        ] {
+            let want = seed_simulate(&g, &split);
+            let got = simulate(&g, &split, &p, SocConfig::default());
+            assert_eq!(got.total_cycles, want.total_cycles, "{model}/{tag}: cycles");
+            assert_eq!(got.latency_ms, want.latency_ms, "{model}/{tag}: latency_ms");
+            assert_eq!(got.energy_uj, want.energy_uj, "{model}/{tag}: energy_uj");
+            assert_eq!(got.util.len(), 2);
+            assert_eq!(got.util[0], want.util[0], "{model}/{tag}: util[0]");
+            assert_eq!(got.util[1], want.util[1], "{model}/{tag}: util[1]");
+            assert_eq!(
+                got.aimc_channel_frac(),
+                want.aimc_channel_frac,
+                "{model}/{tag}: aimc channel frac"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_total_cycles_literals() {
+    // computed from the seed Eq. 6/7 formulas at refactor time; exact
+    // integers, so any drift in either path trips this
+    let cases: [(&str, u64, u64, u64); 3] = [
+        // (model, all_digital, all_aimc, half)
+        ("tinycnn", 6_008, 729, 4_125),
+        ("resnet20", 481_584, 15_321, 269_465),
+        ("mbv1_025", 281_112, 35_699, 154_605),
+    ];
+    let p = Platform::diana();
+    for (model, dig, aimc, half) in cases {
+        let g = build(model).unwrap();
+        let cyc = |s: &ChannelSplit| simulate(&g, s, &p, SocConfig::default()).total_cycles;
+        assert_eq!(cyc(&split_all_digital(&g)), dig, "{model} all_digital");
+        assert_eq!(cyc(&split_all_aimc(&g)), aimc, "{model} all_aimc");
+        assert_eq!(cyc(&half_split(&g)), half, "{model} half");
+    }
+}
+
+#[test]
+fn golden_table1_scale_floats() {
+    // float spot-checks (latency in ms / energy in uJ for resnet20
+    // all-digital, from the seed model) — tight relative tolerance, the
+    // exact-equality pin above is the byte-identical guarantee
+    let p = Platform::diana();
+    let g = build("resnet20").unwrap();
+    let r = simulate(&g, &split_all_digital(&g), &p, SocConfig::default());
+    assert!((r.latency_ms - 1.8522461538461539).abs() < 1e-12);
+    assert!((r.energy_uj - 46.86182769230769).abs() / 46.86182769230769 < 1e-12);
+}
+
+#[test]
+fn deploy_fragment_overhead_matches_seed_rule() {
+    // the scheduler's fragmentation charge must stay the seed's
+    // digital-only rule on DIANA: (frags-1) * cin * k^2 per layer with
+    // >1 digital fragment
+    use odimo::coordinator::{scheduler::deploy, Mapping};
+    let g = build("tinycnn").unwrap();
+    let p = Platform::diana();
+    let mut m = Mapping::uniform(&g, 0);
+    for n in g.mappable() {
+        let ids = (0..n.cout).map(|i| (i % 2) as u8).collect();
+        m.assign.insert(n.name.clone(), ids);
+    }
+    let rep = deploy(&g, &m, &p, SocConfig::default());
+    let mut want = 0u64;
+    for n in g.mappable() {
+        let frags_dig = n.cout.div_ceil(2) as u64; // alternating, starts digital
+        if frags_dig > 1 {
+            want += (frags_dig - 1) * (n.cin * n.k * n.k) as u64;
+        }
+    }
+    assert_eq!(rep.fragment_overhead_cycles, want);
+}

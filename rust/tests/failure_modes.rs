@@ -101,7 +101,7 @@ fn mapping_json_garbage_rejected() {
             Err(_) => {}
             Ok(m) => {
                 // ids out of range must be caught by validate
-                assert!(m.validate(&tinycnn()).is_err(), "{bad} accepted");
+                assert!(m.validate(&tinycnn(), 2).is_err(), "{bad} accepted");
             }
         }
     }
@@ -112,7 +112,45 @@ fn mapping_for_wrong_model_rejected() {
     let g_small = tinycnn();
     let g_big = odimo::model::resnet20();
     let m = Mapping::uniform(&g_small, DIG);
-    assert!(m.validate(&g_big).is_err());
+    assert!(m.validate(&g_big, 2).is_err());
+}
+
+#[test]
+fn mapping_for_wrong_platform_rejected() {
+    // a 3-accelerator mapping must not validate on a 2-accelerator SoC
+    let g = tinycnn();
+    let mut m = Mapping::uniform(&g, DIG);
+    m.assign.get_mut("stem").unwrap()[0] = 2;
+    assert!(m.validate(&g, 3).is_ok());
+    assert!(m.validate(&g, 2).is_err());
+}
+
+#[test]
+fn platform_toml_garbage_rejected() {
+    use odimo::hw::Platform;
+    let d = tmpdir("badplat");
+    let p = d.join("p.toml");
+    // missing accelerators array
+    std::fs::write(&p, "[platform]\nname = \"x\"\nf_clk_hz = 1e6\n").unwrap();
+    assert!(Platform::from_toml_file(&p).is_err());
+    // unknown accelerator kind
+    std::fs::write(
+        &p,
+        "[platform]\nname = \"x\"\nf_clk_hz = 1e6\naccelerators = [\"a\"]\n\
+         [accel.a]\nkind = \"quantum\"\n",
+    )
+    .unwrap();
+    let err = Platform::from_toml_file(&p).unwrap_err().to_string();
+    assert!(err.contains("unknown kind"), "{err}");
+    // dw accelerator not in the list
+    std::fs::write(
+        &p,
+        "[platform]\nname = \"x\"\nf_clk_hz = 1e6\naccelerators = [\"a\"]\n\
+         dw_accelerator = \"b\"\n[accel.a]\nkind = \"digital_pe\"\npe = 16\n\
+         weight_bits = 8\nact_bits = 8\np_act_mw = 1.0\np_idle_mw = 0.1\n",
+    )
+    .unwrap();
+    assert!(Platform::from_toml_file(&p).is_err());
 }
 
 #[test]
@@ -144,9 +182,9 @@ fn json_fuzz_roundtrip_never_panics() {
 fn simulator_rejects_overfull_split() {
     let g = tinycnn();
     let mut split = odimo::hw::soc::split_all_digital(&g);
-    split.insert("stem".into(), (100, 100));
+    split.insert("stem".into(), vec![100, 100]);
     let r = std::panic::catch_unwind(|| {
-        odimo::hw::simulate(&g, &split, Default::default())
+        odimo::hw::simulate(&g, &split, &odimo::hw::Platform::diana(), Default::default())
     });
     assert!(r.is_err(), "overfull split must panic (coordinator bug guard)");
 }

@@ -21,12 +21,20 @@ fn hw_constants_match_python_export() {
         return;
     }
     let meta = ArtifactMeta::load(&art_dir(), "tinycnn").unwrap();
-    assert_eq!(meta.hw.p_act, P_ACT, "active power mismatch vs python");
-    assert_eq!(meta.hw.p_idle, P_IDLE, "idle power mismatch vs python");
+    assert_eq!(meta.hw.n_acc(), 2, "DIANA artifacts are 2-accelerator");
+    assert_eq!(meta.hw.p_act, P_ACT.to_vec(), "active power mismatch vs python");
+    assert_eq!(meta.hw.p_idle, P_IDLE.to_vec(), "idle power mismatch vs python");
     assert_eq!(meta.hw.f_clk_hz, F_CLK_HZ);
     assert_eq!(meta.hw.aimc_rows, AIMC_ROWS);
     assert_eq!(meta.hw.aimc_cols, AIMC_COLS);
     assert_eq!(meta.hw.dig_pe, DIG_PE);
+    // the built-in platform mirrors the python-exported constants
+    let p = odimo::hw::Platform::diana();
+    for (i, spec) in p.accelerators.iter().enumerate() {
+        assert_eq!(spec.p_act_mw, meta.hw.p_act[i]);
+        assert_eq!(spec.p_idle_mw, meta.hw.p_idle[i]);
+    }
+    assert_eq!(p.f_clk_hz, meta.hw.f_clk_hz);
 }
 
 #[test]
@@ -96,12 +104,19 @@ fn datagen_algo_version_matches() {
 
 #[test]
 fn bits_order_matches() {
+    // the platform registry's DIANA entry carries the accelerator-order
+    // contract the python export pins: [digital int8, ternary aimc]
+    let plat_bits: Vec<usize> = odimo::hw::Platform::diana()
+        .accelerators
+        .iter()
+        .map(|a| a.weight_bits as usize)
+        .collect();
+    assert_eq!(plat_bits, vec![8, 2], "accelerator order contract: [digital, aimc]");
     if !art_dir().join("tinycnn_meta.json").exists() {
         return;
     }
     let text = std::fs::read_to_string(art_dir().join("tinycnn_meta.json")).unwrap();
     let v = odimo::util::json::parse(&text).unwrap();
     let bits = v.req("bits").unwrap().usize_vec().unwrap();
-    assert_eq!(bits, vec![8, 2], "accelerator order contract: [digital, aimc]");
-    assert_eq!(odimo::model::BITS, [8, 2]);
+    assert_eq!(bits, plat_bits, "python export disagrees with Platform::diana()");
 }

@@ -54,7 +54,7 @@ fn infer_logits(
             let n = meta.model.node(name).unwrap();
             (
                 name.clone(),
-                literal_f32(&mapping.onehot(name), &[2, n.cout]).unwrap(),
+                literal_f32(&mapping.onehot(name, 2), &[2, n.cout]).unwrap(),
             )
         })
         .collect();
@@ -140,13 +140,13 @@ fn smoke_pipeline_beats_chance_and_baselines_run() {
     let folded = pipe.pretrained_folded().unwrap();
 
     let p = pipe
-        .search_point(&folded, Regularizer::EnergyDiana, 10.0)
+        .search_point(&folded, &Regularizer::EnergyDiana, 10.0)
         .unwrap();
     // tinycnn has 10 classes; even the smoke schedule should easily
     // beat chance after fine-tuning
     assert!(p.accuracy > 0.2, "acc {}", p.accuracy);
     assert!(p.energy_uj > 0.0 && p.latency_ms > 0.0);
-    assert!(p.mapping.validate(&meta.model).is_ok());
+    assert!(p.mapping.validate(&meta.model, 2).is_ok());
 
     let b = pipe.baseline_point(&folded, "all_8bit").unwrap();
     assert!(b.accuracy > 0.3, "all-8bit acc {}", b.accuracy);
@@ -178,7 +178,7 @@ fn search_alpha_movement_is_lambda_sensitive() {
             ..Default::default()
         };
         tr.run_phase("train_search_en", 40, h, None, None).unwrap();
-        let m = discretize(&meta.model, &tr.alphas().unwrap()).unwrap();
+        let m = discretize(&meta.model, &tr.alphas().unwrap(), meta.hw.n_acc()).unwrap();
         m.aimc_fraction()
     };
     let low = frac(0.0);
@@ -194,9 +194,10 @@ fn baseline_mappings_simulate_in_expected_order() {
     // pure-simulator sanity chain on the real resnet20 geometry:
     // min_cost_lat <= all_ternary < all_8bit in latency
     let g = odimo::model::resnet20();
+    let p = odimo::hw::Platform::diana();
     let lat = |name: &str| {
-        let m = baselines::by_name(&g, name).unwrap();
-        odimo::hw::simulate(&g, &m.channel_split(), Default::default()).total_cycles
+        let m = baselines::by_name(&g, &p, name).unwrap();
+        odimo::hw::simulate(&g, &m.channel_split(2), &p, Default::default()).total_cycles
     };
     assert!(lat("all_ternary") < lat("all_8bit"));
     assert!(lat("min_cost_lat") <= lat("all_ternary"));

@@ -5,6 +5,7 @@
 //! across thread counts. No artifacts needed — parameters are synthetic.
 
 use odimo::coordinator::Mapping;
+use odimo::hw::Platform;
 use odimo::model::{resnet20, tinycnn, Graph, AIMC};
 use odimo::quant::r#ref::{calibrate_act_maxima_ref, RefNet};
 use odimo::quant::{
@@ -33,8 +34,8 @@ fn engine_matches_oracle_random_mappings_tinycnn() {
     let x = random_input(&g, 6, 41);
     for seed in [1u64, 2, 3, 4, 5] {
         let mapping = random_mapping(&g, seed);
-        let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
-        let oracle = RefNet::compile(&params, &g, &mapping).unwrap();
+        let engine = QuantNet::compile_params(&params, &g, &mapping, &Platform::diana()).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &Platform::diana()).unwrap();
         let got = engine.forward(&x, 6).unwrap();
         let want = oracle.forward(&x, 6).unwrap();
         let d = max_abs_diff(&got, &want);
@@ -50,8 +51,8 @@ fn engine_matches_oracle_random_mapping_resnet20() {
     let x = random_input(&g, 2, 43);
     for seed in [9u64, 10] {
         let mapping = random_mapping(&g, seed);
-        let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
-        let oracle = RefNet::compile(&params, &g, &mapping).unwrap();
+        let engine = QuantNet::compile_params(&params, &g, &mapping, &Platform::diana()).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &Platform::diana()).unwrap();
         let got = engine.forward(&x, 2).unwrap();
         let want = oracle.forward(&x, 2).unwrap();
         let d = max_abs_diff(&got, &want);
@@ -67,10 +68,30 @@ fn uniform_aimc_matches_oracle_resnet20() {
     let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
     let x = random_input(&g, 1, 47);
     let mapping = Mapping::uniform(&g, AIMC);
-    let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
-    let oracle = RefNet::compile(&params, &g, &mapping).unwrap();
+    let engine = QuantNet::compile_params(&params, &g, &mapping, &Platform::diana()).unwrap();
+    let oracle = RefNet::compile(&params, &g, &mapping, &Platform::diana()).unwrap();
     let d = max_abs_diff(&engine.forward(&x, 1).unwrap(), &oracle.forward(&x, 1).unwrap());
     assert!(d < 1e-4, "all-AIMC diverged by {d}");
+}
+
+#[test]
+fn three_acc_engine_matches_oracle_random_mappings() {
+    // the shipped 3-accelerator example platform: int8 / ternary / int4
+    // channel groups coexist in every layer; the planned engine must
+    // still match the naive oracle
+    use odimo::quant::{synth_mapping_n, synth_params_on};
+    let g = tinycnn();
+    let p = Platform::diana_ne16();
+    let (names, values) = synth_params_on(&g, &p, 808);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let x = random_input(&g, 4, 67);
+    for seed in [11u64, 12, 13] {
+        let mapping = synth_mapping_n(&g, 3, seed);
+        let engine = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &p).unwrap();
+        let d = max_abs_diff(&engine.forward(&x, 4).unwrap(), &oracle.forward(&x, 4).unwrap());
+        assert!(d < 1e-4, "seed {seed}: 3-acc engine diverged from oracle by {d}");
+    }
 }
 
 #[test]
@@ -82,7 +103,7 @@ fn pool_parallelism_is_deterministic_resnet20() {
     let (names, values) = synth_params(&g, 404);
     let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
     let mapping = random_mapping(&g, 21);
-    let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
+    let engine = QuantNet::compile_params(&params, &g, &mapping, &Platform::diana()).unwrap();
     let x = random_input(&g, 4, 53);
     let want = engine.forward(&x, 4).unwrap();
     for threads in [1usize, 2, 8] {
@@ -99,7 +120,7 @@ fn tiled_small_batch_is_deterministic() {
     let (names, values) = synth_params(&g, 505);
     let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
     let mapping = random_mapping(&g, 31);
-    let engine = QuantNet::compile_params(&params, &g, &mapping).unwrap();
+    let engine = QuantNet::compile_params(&params, &g, &mapping, &Platform::diana()).unwrap();
     for batch in [1usize, 3] {
         let x = random_input(&g, batch, 59);
         let want = engine.forward(&x, batch).unwrap();

@@ -34,7 +34,7 @@ fn hlo_logits(
         .iter()
         .map(|name| {
             let n = meta.model.node(name).unwrap();
-            (name.clone(), literal_f32(&mapping.onehot(name), &[2, n.cout]).unwrap())
+            (name.clone(), literal_f32(&mapping.onehot(name, 2), &[2, n.cout]).unwrap())
         })
         .collect();
     let inputs = assemble_inputs(&exe.meta, |tm| match tm.name.as_str() {
@@ -73,7 +73,7 @@ fn quantnet_matches_hlo_logits_tinycnn() {
             mapping.assign.insert(n.name.clone(), ids);
         }
         let want = hlo_logits(&rt, &meta, &values, &mapping, &batch.x, &shape);
-        let net = QuantNet::compile(&meta, g, &values, &mapping).unwrap();
+        let net = QuantNet::compile(&meta, g, &values, &mapping, &odimo::hw::Platform::diana()).unwrap();
         let got = net.forward(&batch.x, 8).unwrap();
         assert_eq!(want.len(), got.len());
         let max_diff = want
@@ -100,7 +100,7 @@ fn quantnet_matches_hlo_logits_uniform_mappings() {
     for acc in [DIG, AIMC] {
         let mapping = Mapping::uniform(g, acc);
         let want = hlo_logits(&rt, &meta, &values, &mapping, &batch.x, &shape);
-        let net = QuantNet::compile(&meta, g, &values, &mapping).unwrap();
+        let net = QuantNet::compile(&meta, g, &values, &mapping, &odimo::hw::Platform::diana()).unwrap();
         let got = net.forward(&batch.x, 8).unwrap();
         let max_diff = want
             .iter()
@@ -124,7 +124,7 @@ fn quantnet_mbv1_runs_with_dwconv() {
     let ds = DataSource::test(g, 33);
     let batch = ds.batch(0, 2);
     let mapping = Mapping::uniform(g, DIG);
-    let net = QuantNet::compile(&meta, g, &values, &mapping).unwrap();
+    let net = QuantNet::compile(&meta, g, &values, &mapping, &odimo::hw::Platform::diana()).unwrap();
     let y = net.forward(&batch.x, 2).unwrap();
     assert_eq!(y.len(), 2 * g.classes);
     assert!(y.iter().all(|v| v.is_finite()));

@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check bench-infer bench-sim bench artifacts clean
+.PHONY: build test check doc bench-infer bench-sim bench-mincost bench artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -17,6 +17,10 @@ check:
 	$(CARGO) fmt --check
 	$(CARGO) clippy -- -D warnings
 	$(CARGO) build --release && $(CARGO) test -q
+
+# API docs; broken intra-doc links are errors (CI runs this too).
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 # Quantized-inference engine throughput (engine vs naive oracle,
 # single-thread + pool scaling). Emits BENCH_infer.json at repo root
@@ -33,6 +37,15 @@ bench-sim:
 	$(CARGO) bench --bench bench_simulator
 	@test -f BENCH_simulator.json && echo "BENCH_simulator.json updated" || \
 		echo "warning: BENCH_simulator.json missing"
+
+# Min-cost mapper: exhaustive enumerator vs the water-filling/DP fast
+# path at N=2..4. Emits BENCH_mincost.json at repo root and appends to
+# results/bench_mincost.csv. CI smoke-runs this with --smoke so the
+# fast path never silently regresses to exponential enumeration.
+bench-mincost:
+	$(CARGO) bench --bench bench_mincost
+	@test -f BENCH_mincost.json && echo "BENCH_mincost.json updated" || \
+		echo "warning: BENCH_mincost.json missing"
 
 # All harness = false bench binaries.
 bench:

@@ -1,0 +1,77 @@
+//! Bench: min-cost mapping construction — the exhaustive composition
+//! enumerator (`min_cost_enum`, the historical algorithm) against the
+//! water-filling / Pareto-DP fast path (`min_cost`) at N = 2..4
+//! accelerators on the ResNet20 layer stack. Guards the fast path
+//! against silently regressing to exponential enumeration: CI runs this
+//! with `--smoke` (1 repetition) and `make bench-mincost` produces real
+//! timings. Writes `BENCH_mincost.json` at the repo root (same shape as
+//! the other BENCH_*.json files) and appends to
+//! `results/bench_mincost.csv`.
+
+use std::fmt::Write as _;
+
+use odimo::coordinator::baselines::{self, CostObjective};
+use odimo::hw::Platform;
+use odimo::model::build;
+use odimo::util::bench::{black_box, Bench};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = Bench::new("mincost");
+    if smoke {
+        b = b.smoke();
+    }
+    let g = build("resnet20").unwrap();
+    let platforms = [Platform::diana(), Platform::diana_ne16(), Platform::mpsoc4()];
+    let mut json = String::from("{\n");
+    let mut first = true;
+    for p in &platforms {
+        let n = p.n_acc();
+        // correctness guard: on exact-enumeration platforms the fast
+        // path must reproduce the enumerator's mapping bit-for-bit
+        if n <= 3 {
+            assert_eq!(
+                baselines::min_cost(&g, p, CostObjective::Latency),
+                baselines::min_cost_enum(&g, p, CostObjective::Latency),
+                "fast path diverged from the enumerator on {}",
+                p.name
+            );
+        }
+        let enum_lat = b.run(&format!("enum_lat_{}_n{n}", p.name), || {
+            black_box(baselines::min_cost_enum(&g, p, CostObjective::Latency));
+        });
+        let fast_lat = b.run(&format!("fast_lat_{}_n{n}", p.name), || {
+            black_box(baselines::min_cost(&g, p, CostObjective::Latency));
+        });
+        let enum_en = b.run(&format!("enum_en_{}_n{n}", p.name), || {
+            black_box(baselines::min_cost_enum(&g, p, CostObjective::Energy));
+        });
+        let fast_en = b.run(&format!("fast_en_{}_n{n}", p.name), || {
+            black_box(baselines::min_cost(&g, p, CostObjective::Energy));
+        });
+        if !first {
+            json.push_str(",\n");
+        }
+        first = false;
+        let _ = write!(
+            json,
+            "  \"{}_n{n}\": {{\n    \"enum_lat_ns\": {:.0},\n    \"fast_lat_ns\": {:.0},\n    \"speedup_lat\": {:.2},\n    \"enum_en_ns\": {:.0},\n    \"fast_en_ns\": {:.0},\n    \"speedup_en\": {:.2}\n  }}",
+            p.name,
+            enum_lat.median_ns,
+            fast_lat.median_ns,
+            enum_lat.median_ns / fast_lat.median_ns.max(1.0),
+            enum_en.median_ns,
+            fast_en.median_ns,
+            enum_en.median_ns / fast_en.median_ns.max(1.0)
+        );
+    }
+    json.push_str("\n}\n");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_mincost.json");
+    if let Err(e) = std::fs::write(path, &json) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
+    b.finish();
+}

@@ -60,10 +60,16 @@ fn main() {
     let mc3 = b.run("min_cost_lat3_resnet20", || {
         black_box(baselines::min_cost(&g, &tri, baselines::CostObjective::Latency));
     });
+    // 4-unit MPSoC: only tractable on the water-filling fast path (the
+    // enumerator-vs-fast-path comparison lives in bench_mincost)
+    let quad = Platform::mpsoc4();
+    let mc4 = b.run("min_cost_lat4_resnet20", || {
+        black_box(baselines::min_cost(&g, &quad, baselines::CostObjective::Latency));
+    });
     let _ = write!(
         json,
-        ",\n  \"min_cost\": {{\n    \"lat_resnet20_ns\": {:.0},\n    \"en_resnet20_ns\": {:.0},\n    \"lat3_resnet20_ns\": {:.0}\n  }}\n}}\n",
-        mc_lat.median_ns, mc_en.median_ns, mc3.median_ns
+        ",\n  \"min_cost\": {{\n    \"lat_resnet20_ns\": {:.0},\n    \"en_resnet20_ns\": {:.0},\n    \"lat3_resnet20_ns\": {:.0},\n    \"lat4_resnet20_ns\": {:.0}\n  }}\n}}\n",
+        mc_lat.median_ns, mc_en.median_ns, mc3.median_ns, mc4.median_ns
     );
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_simulator.json");

@@ -1,0 +1,71 @@
+//! GAP9-style deployment example — a platform with *no* IMC unit
+//! (`da_bits` absent everywhere): an 8-core RISC-V cluster modeled
+//! proportionally plus an NE16-style accelerator.
+//!
+//! Loads `config/gap9.toml` (falling back to the identical built-in),
+//! builds the water-filling min-cost and even-split mappings of
+//! ResNet20 across both units, deploys them on the simulator, and
+//! verifies the quantized engine against the naive oracle — with no
+//! D/A views materialized at all.
+//!
+//!     cargo run --release --example deploy_gap9
+
+use odimo::coordinator::{baselines, scheduler::deploy};
+use odimo::hw::soc::SocConfig;
+use odimo::hw::Platform;
+use odimo::quant::r#ref::RefNet;
+use odimo::quant::{synth_mapping_n, synth_params_on, ParamSet, QuantNet};
+use odimo::util::prng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    odimo::util::logging::init();
+    let platform = Platform::from_toml_file(std::path::Path::new("config/gap9.toml"))
+        .unwrap_or_else(|_| Platform::gap9());
+    let g = odimo::model::resnet20();
+    println!(
+        "platform {}: {} accelerators ({}), D/A widths {:?}",
+        platform.name,
+        platform.n_acc(),
+        platform.acc_names().join(", "),
+        platform.da_widths(),
+    );
+
+    for name in ["even_split", "min_cost_lat", "min_cost_en"] {
+        let mapping = baselines::by_name(&g, &platform, name).expect("baseline");
+        mapping.validate(&g, platform.n_acc())?;
+        let rep = deploy(&g, &mapping, &platform, SocConfig::default());
+        let util = platform
+            .accelerators
+            .iter()
+            .zip(&rep.run.util)
+            .map(|(a, u)| format!("{} {:5.1}%", a.name, 100.0 * u))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        println!(
+            "{name:>14}: {:.3} ms | {:.2} uJ | {} cycles | util {util}",
+            rep.run.latency_ms, rep.run.energy_uj, rep.run.total_cycles
+        );
+    }
+
+    // engine vs oracle on the tiny model (the oracle is a scalar
+    // interpreter): bit-exactness without any D/A view
+    let tg = odimo::model::tinycnn();
+    let (names, values) = synth_params_on(&tg, &platform, 7);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let mapping = synth_mapping_n(&tg, platform.n_acc(), 11);
+    let engine = QuantNet::compile_params(&params, &tg, &mapping, &platform)?;
+    let oracle = RefNet::compile(&params, &tg, &mapping, &platform)?;
+    let (c, h, w) = tg.input_shape;
+    let mut rng = Pcg32::new(5, 77);
+    let x: Vec<f32> = (0..2 * c * h * w).map(|_| rng.next_f32()).collect();
+    let got = engine.forward(&x, 2)?;
+    let want = oracle.forward(&x, 2)?;
+    let diff = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("\nquant engine vs oracle on {}: max |diff| = {diff:e}", tg.name);
+    assert!(diff < 1e-4, "engine diverged from oracle");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! 4-unit heterogeneous MPSoC deployment example — the many-unit
+//! stress case: an int8 NPU, two IMC macros with *distinct* D/A widths
+//! (7-bit + 6-bit), and a GPU-style proportional unit.
+//!
+//! Loads `config/mpsoc4.toml` (falling back to the identical built-in),
+//! builds the water-filling min-cost mapping of ResNet20 over all four
+//! units (the exhaustive enumerator would need ~cout^3 compositions per
+//! layer here — see `make bench-mincost` for the measured gap), deploys
+//! it on the simulator with per-unit utilization, and proves the
+//! per-width D/A engine bit-exact against the naive oracle.
+//!
+//!     cargo run --release --example deploy_mpsoc4
+
+use odimo::coordinator::{baselines, scheduler::deploy};
+use odimo::hw::soc::SocConfig;
+use odimo::hw::Platform;
+use odimo::quant::r#ref::RefNet;
+use odimo::quant::{synth_params_on, ParamSet, QuantNet};
+use odimo::util::prng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    odimo::util::logging::init();
+    let platform = Platform::from_toml_file(std::path::Path::new("config/mpsoc4.toml"))
+        .unwrap_or_else(|_| Platform::mpsoc4());
+    let g = odimo::model::resnet20();
+    println!(
+        "platform {}: {} accelerators ({}), D/A widths {:?}",
+        platform.name,
+        platform.n_acc(),
+        platform.acc_names().join(", "),
+        platform.da_widths(),
+    );
+
+    for name in ["even_split", "min_cost_lat", "min_cost_en", "all_8bit"] {
+        let mapping = baselines::by_name(&g, &platform, name).expect("baseline");
+        mapping.validate(&g, platform.n_acc())?;
+        let rep = deploy(&g, &mapping, &platform, SocConfig::default());
+        let util = platform
+            .accelerators
+            .iter()
+            .zip(&rep.run.util)
+            .map(|(a, u)| format!("{} {:5.1}%", a.name, 100.0 * u))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        let ch = platform
+            .accelerators
+            .iter()
+            .zip(&rep.run.channel_frac)
+            .map(|(a, f)| format!("{} {:4.1}%", a.name, 100.0 * f))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        println!(
+            "\n{name:>14}: {:.3} ms | {:.2} uJ | {} cycles",
+            rep.run.latency_ms, rep.run.energy_uj, rep.run.total_cycles
+        );
+        println!("{:>14}  util: {util}", "");
+        println!("{:>14}  ch:   {ch}", "");
+    }
+
+    // the acceptance gate: water-filling min-cost deployed through the
+    // quantized engine, bit-exact vs the oracle despite two distinct
+    // D/A widths coexisting per layer
+    let tg = odimo::model::tinycnn();
+    let (names, values) = synth_params_on(&tg, &platform, 13);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let mapping = baselines::min_cost(&tg, &platform, baselines::CostObjective::Latency);
+    mapping.validate(&tg, platform.n_acc())?;
+    let engine = QuantNet::compile_params(&params, &tg, &mapping, &platform)?;
+    let oracle = RefNet::compile(&params, &tg, &mapping, &platform)?;
+    let (c, h, w) = tg.input_shape;
+    let mut rng = Pcg32::new(17, 77);
+    let x: Vec<f32> = (0..2 * c * h * w).map(|_| rng.next_f32()).collect();
+    let got = engine.forward(&x, 2)?;
+    let want = oracle.forward(&x, 2)?;
+    let diff = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "\nwater-filled min-cost through the quant engine vs oracle on {}: max |diff| = {diff:e}",
+        tg.name
+    );
+    assert!(diff < 1e-4, "engine diverged from oracle");
+    println!("bit-exact: OK");
+    Ok(())
+}

@@ -11,22 +11,59 @@
 //!   minimizing Eq. 3 (latency) or Eq. 4 (energy) with no accuracy
 //!   term; ties maximize earlier accelerators ("digital channels are
 //!   maximized since this is expected to improve accuracy").
+//!
+//! # Min-cost algorithms
+//!
+//! [`min_cost`] no longer brute-forces N-way channel compositions
+//! (`O(cout^(N-1))` per layer). Per objective:
+//!
+//! * **Latency** — *water-filling*: binary-search the minimal feasible
+//!   span `T`, where a span is feasible iff the per-unit channel
+//!   capacities `cap_i(T) = max{c : lat_i(c) <= T}` (each a binary
+//!   search over a monotone latency model) sum to at least `cout`;
+//!   then fill units in platform order up to their capacity. Exact for
+//!   every accelerator count, `O(N log(cout) log(latmax))` per layer,
+//!   and reproduces the enumerator's lexicographic tie-break (earlier
+//!   units maximized) by construction.
+//! * **Energy** — a *bounded-granularity Pareto DP* over units: state =
+//!   channels assigned so far, value = the Pareto set of
+//!   `(weighted-latency sum, running max latency)` prefixes (dominated
+//!   prefixes can never complete into a cheaper split, because the
+//!   idle-power term is monotone in the span). The final candidates are
+//!   re-scored with the same cost function as the enumerator, so on
+//!   platforms where the grid is exact (step 1 — every built-in) the
+//!   minimal cost is identical to exhaustive enumeration. On many-unit
+//!   platforms the channel granularity coarsens (see `dp_step`) to
+//!   keep the DP polynomial; the last unit always absorbs the exact
+//!   remainder, so splits conserve channels at every granularity.
+//!
+//! The historical exhaustive enumerator survives as [`min_cost_enum`]:
+//! the parity oracle for differential tests
+//! (`tests/coordinator_props.rs`) and the slow side of
+//! `benches/bench_mincost.rs`.
+
+#![deny(missing_docs)]
 
 use crate::hw::Platform;
 use crate::model::{Graph, NodeDef, AIMC, DIG};
 
 use super::mapping::Mapping;
 
+/// Which static cost `min_cost` minimizes per layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CostObjective {
+    /// Paper Eq. 3: the per-layer span (max accelerator latency).
     Latency,
+    /// Paper Eq. 4: active + idle energy over the per-layer span.
     Energy,
 }
 
+/// Everything on accelerator 0 (the DIANA int8 digital unit).
 pub fn all_8bit(graph: &Graph) -> Mapping {
     Mapping::uniform(graph, DIG)
 }
 
+/// Everything on accelerator 1 (the DIANA ternary AIMC macro).
 pub fn all_ternary(graph: &Graph) -> Mapping {
     Mapping::uniform(graph, AIMC)
 }
@@ -80,13 +117,214 @@ fn layer_cost(
     }
 }
 
+// ---- water-filling (latency objective) --------------------------------
+
+/// Largest channel count `c <= cout` whose latency on `acc` stays
+/// within `span` (binary search; every latency model is monotone
+/// nondecreasing in the assigned channel count).
+fn cap_within(platform: &Platform, node: &NodeDef, acc: usize, cout: usize, span: u64) -> usize {
+    if platform.layer_cycles(acc, node, cout as u64) <= span {
+        return cout;
+    }
+    // invariant: lat(lo) <= span < lat(hi)
+    let (mut lo, mut hi) = (0usize, cout);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if platform.layer_cycles(acc, node, mid as u64) <= span {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Exact latency-optimal split by water-filling: binary-search the
+/// minimal feasible span, then fill units in platform order (the
+/// lexicographically largest minimizer — the enumerator's tie-break).
+fn water_fill_counts(platform: &Platform, node: &NodeDef) -> Vec<usize> {
+    let n_acc = platform.n_acc();
+    let cout = node.cout;
+    if n_acc == 1 {
+        return vec![cout];
+    }
+    let feasible = |span: u64| -> bool {
+        let mut total = 0usize;
+        for acc in 0..n_acc {
+            total += cap_within(platform, node, acc, cout, span);
+            if total >= cout {
+                return true;
+            }
+        }
+        false
+    };
+    // putting every channel on the single fastest unit is feasible
+    let mut hi = (0..n_acc)
+        .map(|acc| platform.layer_cycles(acc, node, cout as u64))
+        .min()
+        .unwrap_or(0);
+    let mut lo = 0u64;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let span = lo;
+    let mut counts = vec![0usize; n_acc];
+    let mut rem = cout;
+    for (acc, c) in counts.iter_mut().enumerate() {
+        *c = cap_within(platform, node, acc, cout, span).min(rem);
+        rem -= *c;
+    }
+    debug_assert_eq!(rem, 0, "water-filling must conserve channels");
+    counts
+}
+
+// ---- Pareto DP (energy objective) -------------------------------------
+
+/// One Pareto-optimal prefix: channel counts for the units processed so
+/// far, their weighted active-energy sum, and their running max latency.
+struct DpEntry {
+    wsum: f64,
+    max_lat: u64,
+    counts: Vec<usize>,
+}
+
+/// Channel granularity of the energy DP: step 1 (exact) whenever the
+/// worst-case transition count fits the budget — which covers every
+/// built-in platform at benchmark widths (`cout <= 512`, `N <= 4` after
+/// coarsening only above N=3) — doubling otherwise. The final unit
+/// always takes the exact remainder, so coarse grids still conserve
+/// channels (regression-pinned in `tests/coordinator_props.rs`).
+fn dp_step(cout: usize, n_acc: usize) -> usize {
+    const LIMIT: f64 = 600_000.0;
+    let mut step = 1usize;
+    loop {
+        let m = (cout / step) as f64 + 1.0;
+        if m * m * (n_acc as f64 - 1.0) <= LIMIT || step >= cout.max(1) {
+            return step;
+        }
+        step *= 2;
+    }
+}
+
+/// Insert `e` into a Pareto bucket: drop it if a kept entry weakly
+/// dominates it in `(wsum, max_lat)` (on full equality the
+/// lexicographically larger counts win — the enumerator's preference
+/// for earlier units), and evict entries it dominates.
+fn push_pruned(bucket: &mut Vec<DpEntry>, e: DpEntry) {
+    for q in bucket.iter() {
+        if q.wsum <= e.wsum
+            && q.max_lat <= e.max_lat
+            && (q.wsum < e.wsum || q.max_lat < e.max_lat || q.counts >= e.counts)
+        {
+            return;
+        }
+    }
+    bucket.retain(|q| {
+        !(e.wsum <= q.wsum
+            && e.max_lat <= q.max_lat
+            && (e.wsum < q.wsum || e.max_lat < q.max_lat || e.counts > q.counts))
+    });
+    bucket.push(e);
+}
+
+/// Energy-optimal split via the bounded-granularity Pareto DP; final
+/// candidates are re-scored through `layer_cost` so the selected cost
+/// (and the tie-break) matches exhaustive enumeration wherever the grid
+/// is exact.
+fn energy_dp_counts(platform: &Platform, node: &NodeDef) -> Vec<usize> {
+    let n_acc = platform.n_acc();
+    let cout = node.cout;
+    if n_acc == 1 {
+        return vec![cout];
+    }
+    let step = dp_step(cout, n_acc);
+    let mut cands: Vec<usize> = (0..=cout).step_by(step).collect();
+    if *cands.last().unwrap() != cout {
+        cands.push(cout); // the whole layer on one unit is always a candidate
+    }
+    let dp_weight: Vec<f64> = platform
+        .accelerators
+        .iter()
+        .map(|a| a.p_act_mw - a.p_idle_mw)
+        .collect();
+
+    // unit 0 seeds one prefix per candidate count
+    let mut buckets: Vec<Vec<DpEntry>> = Vec::with_capacity(cout + 1);
+    buckets.resize_with(cout + 1, Vec::new);
+    for &c in &cands {
+        let lat = platform.layer_cycles(0, node, c as u64);
+        buckets[c].push(DpEntry {
+            wsum: dp_weight[0] * lat as f64,
+            max_lat: lat,
+            counts: vec![c],
+        });
+    }
+    // middle units extend prefixes; the last unit is handled exactly
+    for acc in 1..n_acc - 1 {
+        let mut next: Vec<Vec<DpEntry>> = Vec::with_capacity(cout + 1);
+        next.resize_with(cout + 1, Vec::new);
+        for (b, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            for &c in &cands {
+                if b + c > cout {
+                    break;
+                }
+                let lat = platform.layer_cycles(acc, node, c as u64);
+                for e in bucket {
+                    let mut counts = e.counts.clone();
+                    counts.push(c);
+                    push_pruned(
+                        &mut next[b + c],
+                        DpEntry {
+                            wsum: e.wsum + dp_weight[acc] * lat as f64,
+                            max_lat: e.max_lat.max(lat),
+                            counts,
+                        },
+                    );
+                }
+            }
+        }
+        buckets = next;
+    }
+    // last unit absorbs the exact remainder; re-score candidates with
+    // the enumerator's cost function (identical f64 accumulation order)
+    let mut lats = vec![0u64; n_acc];
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    for (b, bucket) in buckets.iter().enumerate() {
+        for e in bucket {
+            let mut counts = e.counts.clone();
+            counts.push(cout - b);
+            let cost = layer_cost(platform, node, &counts, &mut lats, CostObjective::Energy);
+            let better = match &best {
+                // the enumerator's rule: strictly cheaper wins; exact
+                // ties go to the lexicographically larger split
+                Some((bc, bv)) => cost < *bc || (cost == *bc && counts > *bv),
+                None => true,
+            };
+            if better {
+                best = Some((cost, counts));
+            }
+        }
+    }
+    best.expect("at least one composition").1
+}
+
+// ---- retained exhaustive enumerator (parity oracle) -------------------
+
 /// Enumeration granularity keeping the per-layer composition count
 /// bounded on platforms with many accelerators: the number of
 /// compositions of `cout` channels in multiples of `step` over `n_acc`
 /// units is C(cout/step + n - 1, n - 1), which explodes for n > 3.
 /// Step 1 (exact enumeration) is preserved for every realistic
-/// (cout <= 512, n <= 3) case — including the built-in platforms —
-/// so the historical tie-break behavior is unchanged there.
+/// (cout <= 512, n <= 3) case — including the 2- and 3-unit built-in
+/// platforms — so the historical tie-break behavior is unchanged there.
 fn enum_step(cout: usize, n_acc: usize) -> usize {
     const LIMIT: f64 = 300_000.0;
     let mut step = 1usize;
@@ -145,31 +383,80 @@ fn min_cost_layer(
     }
 }
 
-/// Channel-wise static cost minimization. Per layer, enumerate every
-/// split (cout <= 512 for all benchmarks, so exhaustive search is exact
-/// and, for the 2-3 accelerator platforms modeled here, instant; many-
-/// accelerator TOML platforms fall back to a coarser channel
-/// granularity, see [`enum_step`]) and keep the cheapest; ties pick the
-/// split with the most channels on the earliest accelerators.
-pub fn min_cost(graph: &Graph, platform: &Platform, objective: CostObjective) -> Mapping {
+// ---- public min-cost API ----------------------------------------------
+
+/// Per-layer min-cost split on the fast path: water-filling for
+/// [`CostObjective::Latency`], the Pareto DP for
+/// [`CostObjective::Energy`]. Counts are in platform accelerator order
+/// and always sum to `node.cout`.
+pub fn layer_counts(
+    platform: &Platform,
+    node: &NodeDef,
+    objective: CostObjective,
+) -> Vec<usize> {
+    match objective {
+        CostObjective::Latency => water_fill_counts(platform, node),
+        CostObjective::Energy => energy_dp_counts(platform, node),
+    }
+}
+
+/// Per-layer min-cost split by exhaustive composition enumeration (the
+/// historical algorithm) — the parity oracle for [`layer_counts`].
+pub fn layer_counts_enum(
+    platform: &Platform,
+    node: &NodeDef,
+    objective: CostObjective,
+) -> Vec<usize> {
     let n_acc = platform.n_acc();
-    let mut m = Mapping::uniform(graph, 0);
     let mut lats = vec![0u64; n_acc];
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    let mut counts = vec![0usize; n_acc];
+    let step = enum_step(node.cout, n_acc);
+    min_cost_layer(platform, node, objective, 0, node.cout, step, &mut counts, &mut lats,
+                   &mut best);
+    best.expect("at least one composition").1
+}
+
+/// Channel-wise static cost minimization (the Min-Cost baseline),
+/// computed per layer on the fast path ([`layer_counts`]): exact
+/// water-filling under the latency objective, the bounded-granularity
+/// Pareto DP under energy. Ties pick the split with the most channels
+/// on the earliest accelerators. Differential parity against the
+/// retained enumerator is pinned in `tests/coordinator_props.rs`.
+pub fn min_cost(graph: &Graph, platform: &Platform, objective: CostObjective) -> Mapping {
+    let mut m = Mapping::uniform(graph, 0);
     for node in graph.mappable() {
-        let mut best: Option<(f64, Vec<usize>)> = None;
-        let mut counts = vec![0usize; n_acc];
-        let step = enum_step(node.cout, n_acc);
-        min_cost_layer(platform, node, objective, 0, node.cout, step, &mut counts,
-                       &mut lats, &mut best);
-        let (_, counts) = best.expect("at least one composition");
-        // contiguous runs: acc 0 channels first, then acc 1, ...
-        let mut ids = Vec::with_capacity(node.cout);
-        for (i, &c) in counts.iter().enumerate() {
-            ids.extend(std::iter::repeat(i as u8).take(c));
-        }
-        m.assign.insert(node.name.clone(), ids);
+        let counts = layer_counts(platform, node, objective);
+        m.set_layer_counts(&node.name, &counts);
     }
     m
+}
+
+/// Min-cost by exhaustive per-layer composition enumeration — the
+/// pre-water-filling algorithm, kept verbatim as the differential
+/// oracle and the slow side of `make bench-mincost`. `O(cout^(N-1))`
+/// per layer (granularity-coarsened above ~300k compositions, see
+/// `enum_step`); use [`min_cost`] everywhere else.
+pub fn min_cost_enum(graph: &Graph, platform: &Platform, objective: CostObjective) -> Mapping {
+    let mut m = Mapping::uniform(graph, 0);
+    for node in graph.mappable() {
+        let counts = layer_counts_enum(platform, node, objective);
+        m.set_layer_counts(&node.name, &counts);
+    }
+    m
+}
+
+/// Cost of an explicit per-unit channel-count vector under `objective`
+/// — the quantity both min-cost implementations minimize (exposed for
+/// differential tests and `bench_mincost`).
+pub fn cost_of_counts(
+    platform: &Platform,
+    node: &NodeDef,
+    counts: &[usize],
+    objective: CostObjective,
+) -> f64 {
+    let mut lats = vec![0u64; platform.n_acc()];
+    layer_cost(platform, node, counts, &mut lats, objective)
 }
 
 /// All baselines by name (experiment drivers / CLI).
@@ -185,6 +472,7 @@ pub fn by_name(graph: &Graph, platform: &Platform, name: &str) -> Option<Mapping
     })
 }
 
+/// Names accepted by [`by_name`] (CLI `--baseline` values).
 pub const BASELINE_NAMES: [&str; 6] = [
     "all_8bit",
     "all_ternary",
@@ -271,6 +559,48 @@ mod tests {
         assert_eq!(enum_step(512, 3), 1);
         assert_eq!(enum_step(64, 3), 1);
         assert!(enum_step(512, 6) > 1);
+    }
+
+    #[test]
+    fn dp_step_exact_for_builtin_platforms() {
+        assert_eq!(dp_step(512, 2), 1);
+        assert_eq!(dp_step(512, 3), 1);
+        assert_eq!(dp_step(64, 4), 1);
+        assert!(dp_step(512, 6) > 1);
+    }
+
+    #[test]
+    fn water_fill_matches_enum_on_diana_models() {
+        for g in [tinycnn(), resnet20()] {
+            for p in [Platform::diana(), Platform::diana_ne16()] {
+                let fast = min_cost(&g, &p, CostObjective::Latency);
+                let slow = min_cost_enum(&g, &p, CostObjective::Latency);
+                assert_eq!(fast, slow, "{} on {}", g.name, p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_dp_cost_matches_enum_on_diana_models() {
+        for g in [tinycnn(), resnet20()] {
+            for p in [Platform::diana(), Platform::diana_ne16()] {
+                let n = p.n_acc();
+                let mut lats = vec![0u64; n];
+                for node in g.mappable() {
+                    let fast = layer_counts(&p, node, CostObjective::Energy);
+                    let slow = layer_counts_enum(&p, node, CostObjective::Energy);
+                    let cf = layer_cost(&p, node, &fast, &mut lats, CostObjective::Energy);
+                    let cs = layer_cost(&p, node, &slow, &mut lats, CostObjective::Energy);
+                    assert!(
+                        (cf - cs).abs() <= 1e-9 * cs.abs().max(1.0),
+                        "{} {} on {}: {cf} vs {cs}",
+                        g.name,
+                        node.name,
+                        p.name
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -73,6 +73,18 @@ impl Mapping {
         Ok(())
     }
 
+    /// Overwrite `name`'s assignment with contiguous runs per
+    /// accelerator: `counts[i]` channels on accelerator `i`, earliest
+    /// accelerators first (the layout min-cost and the partition pass
+    /// produce — contiguous runs never fragment).
+    pub fn set_layer_counts(&mut self, name: &str, counts: &[usize]) {
+        let mut ids = Vec::with_capacity(counts.iter().sum());
+        for (i, &c) in counts.iter().enumerate() {
+            ids.extend(std::iter::repeat(i as u8).take(c));
+        }
+        self.assign.insert(name.to_string(), ids);
+    }
+
     /// Per-layer channel counts per accelerator for the simulator.
     pub fn channel_split(&self, n_acc: usize) -> ChannelSplit {
         self.assign
@@ -206,6 +218,17 @@ mod tests {
         for i in 0..c {
             assert_eq!(oh[i] + oh[c + i], 1.0);
         }
+    }
+
+    #[test]
+    fn set_layer_counts_contiguous() {
+        let g = tinycnn();
+        let mut m = Mapping::uniform(&g, DIG);
+        m.set_layer_counts("c1", &[6, 7, 3]);
+        assert!(m.validate(&g, 3).is_ok());
+        assert_eq!(m.channel_split(3)["c1"], vec![6, 7, 3]);
+        let ids = m.layer("c1");
+        assert!(ids.windows(2).all(|w| w[0] <= w[1]), "runs must be contiguous");
     }
 
     #[test]

@@ -109,6 +109,24 @@ mod tests {
     }
 
     #[test]
+    fn four_acc_water_filled_deploy() {
+        // water-filling min-cost end-to-end on the 4-unit MPSoC: the
+        // contiguous-run mapping deploys without fragmentation overhead
+        let g = tinycnn();
+        let p = Platform::mpsoc4();
+        let m = crate::coordinator::baselines::min_cost(
+            &g,
+            &p,
+            crate::coordinator::baselines::CostObjective::Latency,
+        );
+        m.validate(&g, 4).unwrap();
+        let rep = deploy(&g, &m, &p, SocConfig::default());
+        assert_eq!(rep.run.util.len(), 4);
+        assert_eq!(rep.fragment_overhead_cycles, 0, "contiguous runs never fragment");
+        assert!(rep.run.total_cycles > 0);
+    }
+
+    #[test]
     fn three_acc_deploy_reports_all_units() {
         let g = tinycnn();
         let p = Platform::diana_ne16();

@@ -6,8 +6,9 @@
 //!
 //! The built-in [`Platform::diana`] is the substitution for the
 //! physical DIANA chip — see DESIGN.md §Substitutions for the fidelity
-//! argument; `Platform::diana_ne16()` is the shipped 3-accelerator
-//! example SoC.
+//! argument. Further built-ins: `diana_ne16` (3 accelerators), `gap9`
+//! (no-IMC RISC-V cluster + NE16), and `mpsoc4` (4 units with two
+//! distinct D/A widths); arbitrary SoCs load from `config/*.toml`.
 
 pub mod abstracthw;
 pub mod energy;

@@ -9,14 +9,23 @@
 //! simulator, scheduler, baselines, quantized engine — iterates the
 //! platform's accelerators instead of matching on DIG/AIMC.
 //!
-//! Two platforms ship built in:
+//! Four platforms ship built in:
 //!   * [`Platform::diana`] — the paper's SoC, byte-identical to the
 //!     pre-refactor hardwired model (pinned by tests/diana_parity.rs);
 //!   * [`Platform::diana_ne16`] — DIANA plus an NE16-style 4-bit
-//!     digital unit, the shipped 3-accelerator example.
+//!     digital unit, the shipped 3-accelerator example;
+//!   * [`Platform::gap9`] — a GAP9-style SoC (RISC-V compute cluster +
+//!     NE16 accelerator), the no-IMC example: no unit re-reads
+//!     activations through a D/A;
+//!   * [`Platform::mpsoc4`] — a 4-unit heterogeneous MPSoC (NPU + two
+//!     IMC macros with *distinct* D/A widths + a GPU-style unit), the
+//!     many-unit stress case for min-cost water-filling and the
+//!     per-width D/A buffers of the quantized engine.
 //!
-//! Platforms also load from TOML (see `config/diana_ne16.toml` and the
-//! schema in EXPERIMENTS.md §Platforms).
+//! Platforms also load from TOML (see `config/*.toml` and the schema in
+//! EXPERIMENTS.md §Platforms).
+
+#![deny(missing_docs)]
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -36,12 +45,23 @@ use super::latency::{lat_dw_pe, lat_imc_macro, lat_pe_array, AIMC_COLS, AIMC_ROW
 pub enum LatencyModel {
     /// Eq.-7-style digital PE array (`pe` x `pe`): output-stationary
     /// passes plus a weight-load DMA term.
-    DigitalPe { pe: u64 },
+    DigitalPe {
+        /// PE grid edge (the array is `pe` x `pe`).
+        pe: u64,
+    },
     /// Eq.-6-style in-memory-compute macro (`rows` x `cols` cells):
     /// tile passes plus a cell-programming term.
-    ImcMacro { rows: u64, cols: u64 },
+    ImcMacro {
+        /// Compute-cell rows (input-side tile dimension).
+        rows: u64,
+        /// Compute-cell columns (output-channel tile dimension).
+        cols: u64,
+    },
     /// Abstract proportional model: `macs / macs_per_cycle` (Fig. 5).
-    Proportional { macs_per_cycle: f64 },
+    Proportional {
+        /// Sustained MAC throughput per cycle.
+        macs_per_cycle: f64,
+    },
 }
 
 impl LatencyModel {
@@ -84,14 +104,18 @@ impl LatencyModel {
 /// One accelerator of the SoC.
 #[derive(Clone, Debug, PartialEq)]
 pub struct AcceleratorSpec {
+    /// Unit name (unique within the platform; mapping reports use it).
     pub name: String,
     /// Weight precision in bits (8 = int8, 2 = ternary, 4 = int4...).
     pub weight_bits: u32,
     /// Output-activation grid in bits (8 digital / 7 AIMC on DIANA).
     pub act_bits: u32,
     /// Input D/A re-read truncation in bits (the AIMC 7-bit read);
-    /// `None` = the unit reads stored activations exactly.
+    /// `None` = the unit reads stored activations exactly. Units may
+    /// declare *distinct* widths — the quantized engine materializes
+    /// one D/A view per distinct width (see `quant/plan.rs`).
     pub da_bits: Option<u32>,
+    /// Analytical latency model costing this unit's channel sub-layers.
     pub latency: LatencyModel,
     /// Average active power, mW.
     pub p_act_mw: f64,
@@ -117,24 +141,30 @@ impl AcceleratorSpec {
 /// A multi-accelerator SoC: ordered accelerators + SoC-level facts.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Platform {
+    /// Platform id (CLI output, reports, cache keys).
     pub name: String,
+    /// SoC clock in Hz, for cycle -> time conversion.
     pub f_clk_hz: f64,
     /// Shared L1 activation scratchpad, bytes.
     pub l1_bytes: usize,
     /// Index of the accelerator that runs depthwise convolutions.
     pub dw_acc: usize,
+    /// Ordered unit list; a mapping's accelerator id indexes this.
     pub accelerators: Vec<AcceleratorSpec>,
 }
 
 impl Platform {
+    /// Number of accelerators on the SoC.
     pub fn n_acc(&self) -> usize {
         self.accelerators.len()
     }
 
+    /// Index of the accelerator named `name`, if present.
     pub fn acc_index(&self, name: &str) -> Option<usize> {
         self.accelerators.iter().position(|a| a.name == name)
     }
 
+    /// Unit names in platform order.
     pub fn acc_names(&self) -> Vec<&str> {
         self.accelerators.iter().map(|a| a.name.as_str()).collect()
     }
@@ -161,6 +191,7 @@ impl Platform {
             .dw_cycles(node.k as u64, ox, oy, node.cout as u64)
     }
 
+    /// Convert cycles to milliseconds at the platform clock.
     pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
         cycles as f64 / self.f_clk_hz * 1e3
     }
@@ -180,27 +211,16 @@ impl Platform {
         e_mw_cycles / self.f_clk_hz * 1e3
     }
 
-    /// The single D/A truncation width shared by every accelerator that
-    /// re-reads activations through a D/A (`None` if no unit does).
-    /// Errors if two units declare different widths — the quantized
-    /// engine materializes at most one D/A view per tensor.
-    pub fn da_bits(&self) -> Result<Option<u32>> {
-        let mut bits = None;
-        for a in &self.accelerators {
-            if let Some(b) = a.da_bits {
-                match bits {
-                    None => bits = Some(b),
-                    Some(prev) if prev == b => {}
-                    Some(prev) => {
-                        return Err(anyhow!(
-                            "platform {}: conflicting da_bits {prev} vs {b}",
-                            self.name
-                        ))
-                    }
-                }
-            }
-        }
-        Ok(bits)
+    /// Distinct D/A truncation widths declared across the platform's
+    /// accelerators, ascending and deduplicated (empty when no unit
+    /// re-reads activations through a D/A, e.g. [`Platform::gap9`]).
+    /// The quantized engine materializes one D/A view of an activation
+    /// tensor per width in this list that some consumer actually reads.
+    pub fn da_widths(&self) -> Vec<u32> {
+        let mut widths: Vec<u32> = self.accelerators.iter().filter_map(|a| a.da_bits).collect();
+        widths.sort_unstable();
+        widths.dedup();
+        widths
     }
 
     fn validate(self) -> Result<Self> {
@@ -223,8 +243,16 @@ impl Platform {
             if !seen.insert(a.name.clone()) {
                 return Err(anyhow!("platform {}: duplicate accelerator '{}'", self.name, a.name));
             }
+            if let Some(b) = a.da_bits {
+                if b == 0 || b > 16 {
+                    return Err(anyhow!(
+                        "platform {}: accelerator '{}' da_bits {b} out of range (1..=16)",
+                        self.name,
+                        a.name
+                    ));
+                }
+            }
         }
-        self.da_bits()?;
         Ok(self)
     }
 
@@ -284,16 +312,111 @@ impl Platform {
         p
     }
 
+    /// A GAP9-style SoC: an 8-core RISC-V compute cluster (abstract
+    /// proportional model, ~2 MACs/cycle/core) plus an NE16-style
+    /// convolution accelerator, sharing a 128 kB L1 at 370 MHz. The
+    /// no-IMC example — `da_bits` is absent on every unit, so the
+    /// quantized engine materializes no D/A views at all.
+    pub fn gap9() -> Platform {
+        Platform {
+            name: "gap9".into(),
+            f_clk_hz: 370e6,
+            l1_bytes: 128 * 1024,
+            dw_acc: 0,
+            accelerators: vec![
+                AcceleratorSpec {
+                    name: "cluster".into(),
+                    weight_bits: 8,
+                    act_bits: 8,
+                    da_bits: None,
+                    latency: LatencyModel::Proportional { macs_per_cycle: 16.0 },
+                    p_act_mw: 48.0,
+                    p_idle_mw: 2.5,
+                    wmem_bytes: None,
+                },
+                AcceleratorSpec {
+                    name: "ne16".into(),
+                    weight_bits: 4,
+                    act_bits: 8,
+                    da_bits: None,
+                    latency: LatencyModel::DigitalPe { pe: 32 },
+                    p_act_mw: 22.0,
+                    p_idle_mw: 1.5,
+                    wmem_bytes: Some(128 * 1024),
+                },
+            ],
+        }
+    }
+
+    /// A 4-unit heterogeneous MPSoC a la Map-and-Conquer: an int8 NPU
+    /// (PE array), two analog IMC macros with *distinct* D/A read
+    /// widths (7-bit and 6-bit — the case the quantized engine's
+    /// per-width D/A buffers exist for), and a GPU-style proportional
+    /// unit. Stresses the min-cost water-filling fast path at N=4.
+    pub fn mpsoc4() -> Platform {
+        Platform {
+            name: "mpsoc4".into(),
+            f_clk_hz: 500e6,
+            l1_bytes: 512 * 1024,
+            dw_acc: 0,
+            accelerators: vec![
+                AcceleratorSpec {
+                    name: "npu".into(),
+                    weight_bits: 8,
+                    act_bits: 8,
+                    da_bits: None,
+                    latency: LatencyModel::DigitalPe { pe: 32 },
+                    p_act_mw: 80.0,
+                    p_idle_mw: 4.0,
+                    wmem_bytes: Some(256 * 1024),
+                },
+                AcceleratorSpec {
+                    name: "imc0".into(),
+                    weight_bits: 2,
+                    act_bits: 7,
+                    da_bits: Some(7),
+                    latency: LatencyModel::ImcMacro { rows: 1152, cols: 512 },
+                    p_act_mw: 26.0,
+                    p_idle_mw: 1.3,
+                    wmem_bytes: None,
+                },
+                AcceleratorSpec {
+                    name: "imc1".into(),
+                    weight_bits: 2,
+                    act_bits: 6,
+                    da_bits: Some(6),
+                    latency: LatencyModel::ImcMacro { rows: 512, cols: 256 },
+                    p_act_mw: 14.0,
+                    p_idle_mw: 0.9,
+                    wmem_bytes: None,
+                },
+                AcceleratorSpec {
+                    name: "gpu".into(),
+                    weight_bits: 8,
+                    act_bits: 8,
+                    da_bits: None,
+                    latency: LatencyModel::Proportional { macs_per_cycle: 64.0 },
+                    p_act_mw: 220.0,
+                    p_idle_mw: 18.0,
+                    wmem_bytes: None,
+                },
+            ],
+        }
+    }
+
     /// Built-in platform registry (CLI `--platform <name>`).
     pub fn by_name(name: &str) -> Option<Platform> {
         match name {
             "diana" => Some(Platform::diana()),
             "diana_ne16" => Some(Platform::diana_ne16()),
+            "gap9" => Some(Platform::gap9()),
+            "mpsoc4" => Some(Platform::mpsoc4()),
             _ => None,
         }
     }
 
-    pub const BUILTIN_NAMES: [&'static str; 2] = ["diana", "diana_ne16"];
+    /// Names [`Platform::by_name`] accepts (CLI `platforms` listing).
+    pub const BUILTIN_NAMES: [&'static str; 4] = ["diana", "diana_ne16", "gap9", "mpsoc4"];
 
     /// Resolve a CLI argument: built-in name first, then TOML path.
     pub fn resolve(arg: &str) -> Result<Platform> {
@@ -321,6 +444,33 @@ impl Platform {
         Platform::from_toml(&doc)
     }
 
+    /// Build a platform from a parsed TOML document (flattened
+    /// `section.key` keys, as produced by [`crate::config::parse_toml`];
+    /// schema in EXPERIMENTS.md §Platforms).
+    ///
+    /// ```
+    /// use odimo::config::parse_toml;
+    /// use odimo::hw::Platform;
+    ///
+    /// let doc = parse_toml(
+    ///     "[platform]\n\
+    ///      name = \"mini\"\n\
+    ///      f_clk_hz = 100e6\n\
+    ///      accelerators = [\"pe\"]\n\
+    ///      [accel.pe]\n\
+    ///      kind = \"digital_pe\"\n\
+    ///      pe = 16\n\
+    ///      weight_bits = 8\n\
+    ///      act_bits = 8\n\
+    ///      p_act_mw = 10.0\n\
+    ///      p_idle_mw = 1.0\n",
+    /// )
+    /// .unwrap();
+    /// let p = Platform::from_toml(&doc).unwrap();
+    /// assert_eq!(p.name, "mini");
+    /// assert_eq!(p.n_acc(), 1);
+    /// assert_eq!(p.dw_acc, 0); // defaults to the first unit
+    /// ```
     pub fn from_toml(doc: &BTreeMap<String, TomlValue>) -> Result<Platform> {
         let get_str = |k: &str| -> Result<String> {
             match doc.get(k) {
@@ -468,7 +618,33 @@ mod tests {
         assert_eq!(p.acc_index("ne16"), Some(2));
         assert_eq!(p.accelerators[2].weight_bits, 4);
         assert_eq!(p.accelerators[2].scale_leaf(), "ls4");
-        assert_eq!(p.da_bits().unwrap(), Some(7));
+        assert_eq!(p.da_widths(), vec![7]);
+    }
+
+    #[test]
+    fn gap9_has_no_da_widths() {
+        let p = Platform::gap9();
+        assert_eq!(p.n_acc(), 2);
+        assert_eq!(p.acc_names(), vec!["cluster", "ne16"]);
+        assert!(p.da_widths().is_empty(), "gap9 models no D/A re-read");
+        assert_eq!(
+            p.accelerators[0].latency,
+            LatencyModel::Proportional { macs_per_cycle: 16.0 }
+        );
+        assert_eq!(p.accelerators[1].latency, LatencyModel::DigitalPe { pe: 32 });
+        assert_eq!(p.dw_acc, 0);
+    }
+
+    #[test]
+    fn mpsoc4_has_two_distinct_da_widths() {
+        let p = Platform::mpsoc4();
+        assert_eq!(p.n_acc(), 4);
+        assert_eq!(p.acc_names(), vec!["npu", "imc0", "imc1", "gpu"]);
+        assert_eq!(p.da_widths(), vec![6, 7]);
+        // both macros are ternary -> one shared scale leaf
+        assert_eq!(p.accelerators[1].scale_leaf(), "lster");
+        assert_eq!(p.accelerators[2].scale_leaf(), "lster");
+        assert_eq!(p.accelerators[2].act_bits, 6);
     }
 
     #[test]
@@ -527,6 +703,22 @@ p_idle_mw = 1.2
     }
 
     #[test]
+    fn shipped_tomls_match_builtins() {
+        for (name, built) in [
+            ("diana_ne16", Platform::diana_ne16()),
+            ("gap9", Platform::gap9()),
+            ("mpsoc4", Platform::mpsoc4()),
+        ] {
+            let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("..")
+                .join("config")
+                .join(format!("{name}.toml"));
+            let p = Platform::from_toml_file(&path).unwrap();
+            assert_eq!(p, built, "config/{name}.toml drifted from the built-in");
+        }
+    }
+
+    #[test]
     fn toml_errors_are_specific() {
         let no_order = parse_toml("[platform]\nname = \"x\"\nf_clk_hz = 1e6\n").unwrap();
         assert!(Platform::from_toml(&no_order).is_err());
@@ -555,16 +747,39 @@ p_idle_mw = 1.2
     }
 
     #[test]
-    fn conflicting_da_bits_rejected() {
+    fn distinct_da_bits_accepted() {
+        // two units with different D/A widths are a supported platform
+        // since the per-width D/A buffers landed in the quant engine
         let mut p = Platform::diana_ne16();
         p.accelerators[2].da_bits = Some(5);
+        let p = p.validate().unwrap();
+        assert_eq!(p.da_widths(), vec![5, 7]);
+    }
+
+    #[test]
+    fn absurd_da_bits_rejected() {
+        let mut p = Platform::diana();
+        p.accelerators[1].da_bits = Some(0);
+        assert!(p.clone().validate().is_err());
+        p.accelerators[1].da_bits = Some(17);
         assert!(p.validate().is_err());
     }
 
     #[test]
     fn resolve_prefers_builtin() {
         assert_eq!(Platform::resolve("diana").unwrap().n_acc(), 2);
+        assert_eq!(Platform::resolve("gap9").unwrap().n_acc(), 2);
+        assert_eq!(Platform::resolve("mpsoc4").unwrap().n_acc(), 4);
         assert!(Platform::resolve("no_such_platform").is_err());
+    }
+
+    #[test]
+    fn all_builtins_resolve_and_validate() {
+        for name in Platform::BUILTIN_NAMES {
+            let p = Platform::by_name(name).unwrap();
+            assert_eq!(p.name, name);
+            assert!(p.clone().validate().is_ok(), "{name}");
+        }
     }
 
     #[test]

@@ -284,6 +284,25 @@ mod tests {
     }
 
     #[test]
+    fn four_acc_mpsoc_runs_and_reports_all_units() {
+        // the 4-unit MPSoC (distinct D/A widths are a quant-engine
+        // concern; the simulator only sees latency/power specs)
+        let p = Platform::mpsoc4();
+        let g = resnet20();
+        let mut split = ChannelSplit::new();
+        for n in g.mappable() {
+            let q = n.cout / 4;
+            split.insert(n.name.clone(), vec![q, q, q, n.cout - 3 * q]);
+        }
+        let r = simulate(&g, &split, &p, SocConfig::default());
+        assert_eq!(r.util.len(), 4);
+        assert_eq!(r.channel_frac.len(), 4);
+        assert!(r.util.iter().all(|&u| (0.0..=1.0).contains(&u)));
+        assert!((r.channel_frac.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(r.total_cycles > 0 && r.energy_uj > 0.0);
+    }
+
+    #[test]
     fn three_acc_platform_runs_and_reports_all_units() {
         let p = Platform::diana_ne16();
         let g = resnet20();

@@ -297,6 +297,25 @@ mod tests {
     }
 
     #[test]
+    fn four_unit_staggered_layer() {
+        // the mpsoc4-shaped case: four units starting together on one
+        // layer, finishing at different times (water-filled spans)
+        let mut tl = Timeline::new(4);
+        let l = tl.intern("conv");
+        for (u, end) in [(0usize, 100u64), (1, 80), (2, 60), (3, 100)] {
+            tl.push(u, l, 0, end);
+        }
+        let u = tl.utilization();
+        assert!((u.all_busy_frac - 0.6).abs() < 1e-9);
+        assert!((u.union_frac - 1.0).abs() < 1e-9);
+        assert!((u.busy_frac[1] - 0.8).abs() < 1e-9);
+        let rows = tl.per_layer();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].1, vec![100, 80, 60, 100]);
+        assert_eq!(rows[0].2, 100);
+    }
+
+    #[test]
     fn three_unit_all_busy_and_union() {
         let mut tl = Timeline::new(3);
         let l = tl.intern("l");

@@ -40,7 +40,8 @@ FLAGS
   --model <tinycnn|resnet20|resnet18s|mbv1_025>   (default resnet20)
   --config <file.toml>      load a RunConfig
   --platform <name|file>    deployment SoC: built-in name (diana,
-                            diana_ne16) or a platform .toml path
+                            diana_ne16, gap9, mpsoc4) or a platform
+                            .toml path
   --artifacts <dir>         artifacts directory (default artifacts)
   --results <dir>           results directory (default results)
   --smoke                   tiny schedules (CI / smoke testing)
@@ -244,19 +245,24 @@ fn run() -> Result<()> {
                     p.l1_bytes / 1024
                 );
                 for (i, a) in p.accelerators.iter().enumerate() {
+                    let da = match a.da_bits {
+                        Some(b) => format!("  D/A {b}b"),
+                        None => String::new(),
+                    };
                     println!(
-                        "  [{i}] {:<6} w{}b/a{}b  {:?}  P_act {} mW  P_idle {} mW{}",
+                        "  [{i}] {:<7} w{}b/a{}b  {:?}  P_act {} mW  P_idle {} mW{}{}",
                         a.name,
                         a.weight_bits,
                         a.act_bits,
                         a.latency,
                         a.p_act_mw,
                         a.p_idle_mw,
+                        da,
                         if i == p.dw_acc { "  (runs depthwise)" } else { "" },
                     );
                 }
             }
-            println!("\ncustom platforms: --platform <file.toml> (see config/diana_ne16.toml)");
+            println!("\ncustom platforms: --platform <file.toml> (see config/*.toml)");
             Ok(())
         }
         other => Err(anyhow!("unknown command '{other}' — try `odimo help`")),

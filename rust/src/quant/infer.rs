@@ -16,6 +16,11 @@
 //!     pool, per-layer (image x output-channel-block) tiling;
 //!   * [`calibrate_act_maxima`] runs the same engine in float mode.
 //!
+//! Platforms with several IMC macros of *distinct* `da_bits` are fully
+//! supported: the plan materializes one D/A view per distinct width
+//! (see `super::plan`), and platforms with no D/A unit at all (e.g.
+//! `gap9`) materialize none.
+//!
 //! Numerics are bit-identical to the retired naive interpreter, which
 //! lives on as the differential oracle in [`super::r#ref`]; the HLO
 //! cross-check in `tests/quant_infer.rs` pins both against the AOT
@@ -257,6 +262,46 @@ mod tests {
         let want = oracle.forward(&x, 2).unwrap();
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-4, "3-acc engine {a} vs oracle {b}");
+        }
+    }
+
+    #[test]
+    fn gap9_no_da_platform_matches_oracle() {
+        // gap9 has no IMC unit: no D/A view is ever materialized, and
+        // the engine must still match the oracle bit-for-bit
+        let g = tinycnn();
+        let p = Platform::gap9();
+        let (names, values) = synth_params_on(&g, &p, 21);
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+        let mapping = synth_mapping_n(&g, 2, 23);
+        let net = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &p).unwrap();
+        let (c, h, w) = g.input_shape;
+        let x = random_input(2 * c * h * w, 25);
+        let got = net.forward(&x, 2).unwrap();
+        let want = oracle.forward(&x, 2).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "gap9 engine {a} vs oracle {b}");
+        }
+    }
+
+    #[test]
+    fn mpsoc4_distinct_da_widths_match_oracle() {
+        // two IMC macros with different da_bits (7 and 6) in the same
+        // layers: the per-width D/A views must reproduce the oracle
+        let g = tinycnn();
+        let p = Platform::mpsoc4();
+        let (names, values) = synth_params_on(&g, &p, 31);
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+        let mapping = synth_mapping_n(&g, 4, 37);
+        let net = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &p).unwrap();
+        let (c, h, w) = g.input_shape;
+        let x = random_input(3 * c * h * w, 41);
+        let got = net.forward(&x, 3).unwrap();
+        let want = oracle.forward(&x, 3).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "mpsoc4 engine {a} vs oracle {b}");
         }
     }
 

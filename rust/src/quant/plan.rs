@@ -13,14 +13,19 @@
 //!     consumer has run (ping-pong along chains, an extra slot per live
 //!     residual), so a [`Workspace`] reaches a fixed set of allocations
 //!     after the first block and `forward` allocates nothing per node;
-//!   * the 7-bit AIMC D/A re-read of an activation is materialized at
-//!     most once per tensor — and only when some consumer actually has
-//!     AIMC channels — instead of unconditionally per layer.
+//!   * D/A re-reads of an activation (the AIMC n-bit input truncation)
+//!     are materialized at most once per tensor *per distinct D/A
+//!     width* — platforms may carry several IMC macros with different
+//!     `da_bits`; each width that some consumer actually reads gets its
+//!     own arena view, and platforms with no D/A units (e.g. `gap9`)
+//!     materialize none at all.
 //!
 //! Execution is bit-identical to the `quant::ref` oracle: the GEMM
 //! accumulates each output strictly in the oracle's reduction order
 //! (see `quant::gemm`), and all element-wise epilogues share the same
 //! helper functions.
+
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
@@ -40,8 +45,9 @@ pub(crate) struct Group {
     w: Vec<f32>,
     /// per packed row
     bias: Vec<f32>,
-    /// read the D/A view of the input (accelerators with `da_bits`)
-    from_x7: bool,
+    /// index into the op's source-kind list (`ConvP::srcs` /
+    /// `FcP::srcs`): which input view this group reads
+    src: usize,
     /// output activation bits (per the accelerator spec)
     bits: u32,
 }
@@ -59,12 +65,17 @@ pub(crate) struct ConvP {
     relu: bool,
     /// <= 0.0 disables output quantization (float / calibration mode)
     act_scale: f32,
+    /// input views the groups read: `None` = the stored activation,
+    /// `Some(w)` = the w-bit D/A view (ascending widths after `None`)
+    srcs: Vec<Option<u32>>,
     groups: Vec<Group>,
 }
 
 pub(crate) struct FcP {
     cin: usize,
     cout: usize,
+    /// see `ConvP::srcs`
+    srcs: Vec<Option<u32>>,
     groups: Vec<Group>,
 }
 
@@ -100,12 +111,12 @@ pub(crate) struct PlanNode {
     /// arena buffer ids of the inputs (src[1] only used by Add)
     src: [usize; 2],
     dst: usize,
-    /// arena id of the 7-bit D/A view of the *input* tensor (conv/fc
-    /// with AIMC channels)
-    src_x7: Option<usize>,
-    /// arena id for the 7-bit view of *this* node's output, when some
-    /// consumer needs it
-    x7: Option<usize>,
+    /// conv/fc: arena ids of the *input* views, parallel to the op's
+    /// `srcs` list (plain entries alias `src[0]`)
+    src_views: Vec<usize>,
+    /// D/A views of *this* node's output to materialize: one
+    /// `(da_bits, arena id)` per distinct width some consumer reads
+    da_out: Vec<(u32, usize)>,
     /// per-image output elements
     out_elems: usize,
     /// record the post-epilogue max (calibration)
@@ -119,7 +130,7 @@ pub struct Workspace {
     bufs: Vec<Vec<f32>>,
     panel: Vec<f32>,
     cbuf: Vec<f32>,
-    /// tiled mode: per-image im2col panels
+    /// tiled mode: per-(image, view) im2col panels
     panels: Vec<f32>,
     /// tiled mode: per-job GEMM scratch
     tiles: Vec<f32>,
@@ -137,9 +148,6 @@ pub struct QuantPlan {
     n_bufs: usize,
     in_elems: usize,
     out_elems: usize,
-    /// D/A truncation width for x7-view materialization (the platform's
-    /// shared `da_bits`; unused when no accelerator declares one).
-    da_bits: u32,
 }
 
 impl QuantPlan {
@@ -179,10 +187,6 @@ impl QuantPlan {
 
         // ---- 1. lower each node to a PlanOp --------------------------
         let quant = mapping.is_some();
-        let da_bits = match mapping {
-            Some((_, p)) => p.da_bits()?.unwrap_or(7),
-            None => 7,
-        };
         let mut ops: Vec<PlanOp> = Vec::with_capacity(n_nodes);
         for n in &graph.nodes {
             let op = match n.op {
@@ -193,9 +197,20 @@ impl QuantPlan {
                     let act_scale =
                         if quant { params.get(&n.name, "lsa")?[0].exp() } else { 0.0 };
                     let per = w.len() / n.cout;
-                    let groups = match mapping {
+                    let (srcs, groups) = match mapping {
                         Some((m, platform)) => {
                             let assign = m.layer(&n.name);
+                            // source-kind list: plain first (if any unit
+                            // reads stored activations), then distinct
+                            // D/A widths ascending
+                            let mut srcs: Vec<Option<u32>> = Vec::new();
+                            for spec in &platform.accelerators {
+                                let kind = spec.da_bits;
+                                if !srcs.contains(&kind) {
+                                    srcs.push(kind);
+                                }
+                            }
+                            srcs.sort(); // None sorts before Some, widths ascend
                             let mut gs = Vec::new();
                             for (acc, spec) in platform.accelerators.iter().enumerate() {
                                 let rows: Vec<usize> = (0..n.cout)
@@ -215,26 +230,48 @@ impl QuantPlan {
                                             .map(move |&v| fake_quant(v, scale, wbits))
                                     })
                                     .collect();
+                                let src = srcs
+                                    .iter()
+                                    .position(|&k| k == spec.da_bits)
+                                    .expect("source kind registered above");
                                 gs.push(Group {
                                     w: wp,
                                     bias: rows.iter().map(|&co| bias[co]).collect(),
                                     rows,
-                                    from_x7: spec.da_bits.is_some(),
+                                    src,
                                     bits: spec.act_bits,
                                 });
                             }
-                            gs
+                            // keep only the kinds some group actually
+                            // reads (re-point group indices)
+                            let used: Vec<Option<u32>> = srcs
+                                .iter()
+                                .copied()
+                                .filter(|&k| {
+                                    gs.iter().any(|g| srcs[g.src] == k)
+                                })
+                                .collect();
+                            for g in &mut gs {
+                                g.src = used
+                                    .iter()
+                                    .position(|&k| k == srcs[g.src])
+                                    .expect("used kind present");
+                            }
+                            (used, gs)
                         }
-                        None => vec![Group {
-                            rows: (0..n.cout).collect(),
-                            w: w.to_vec(),
-                            bias: bias.to_vec(),
-                            from_x7: false,
-                            bits: 8,
-                        }],
+                        None => (
+                            vec![None],
+                            vec![Group {
+                                rows: (0..n.cout).collect(),
+                                w: w.to_vec(),
+                                bias: bias.to_vec(),
+                                src: 0,
+                                bits: 8,
+                            }],
+                        ),
                     };
                     if n.op == Op::Fc {
-                        PlanOp::Fc(FcP { cin: n.cin, cout: n.cout, groups })
+                        PlanOp::Fc(FcP { cin: n.cin, cout: n.cout, srcs, groups })
                     } else {
                         PlanOp::Conv(ConvP {
                             cin: n.cin,
@@ -248,6 +285,7 @@ impl QuantPlan {
                             cout: n.cout,
                             relu: n.relu,
                             act_scale: if quant { act_scale } else { 0.0 },
+                            srcs,
                             groups,
                         })
                     }
@@ -298,41 +336,38 @@ impl QuantPlan {
 
         // ---- 2. per-tensor use counts --------------------------------
         // plain_uses: consumers reading the stored activation;
-        // x7_uses: conv/fc consumers with AIMC channels reading the D/A view.
+        // da_uses: per D/A width, conv/fc consumers reading that view.
+        fn view_kinds(op: &PlanOp, ii: usize) -> Option<&[Option<u32>]> {
+            match op {
+                PlanOp::Conv(cp) if ii == 0 => Some(&cp.srcs),
+                PlanOp::Fc(fp) if ii == 0 => Some(&fp.srcs),
+                _ => None,
+            }
+        }
         let mut plain_uses = vec![0usize; n_nodes];
-        let mut x7_uses = vec![0usize; n_nodes];
+        let mut da_uses: Vec<BTreeMap<u32, usize>> = vec![BTreeMap::new(); n_nodes];
         for (i, n) in graph.nodes.iter().enumerate() {
             for (ii, inp) in n.inputs.iter().enumerate() {
                 let t = node_idx(inp)?;
-                match &ops[i] {
-                    PlanOp::Conv(cp) if ii == 0 => {
-                        if cp.groups.iter().any(|g| !g.from_x7) {
-                            plain_uses[t] += 1;
-                        }
-                        if cp.groups.iter().any(|g| g.from_x7) {
-                            x7_uses[t] += 1;
-                        }
-                    }
-                    PlanOp::Fc(fp) if ii == 0 => {
-                        if fp.groups.iter().any(|g| !g.from_x7) {
-                            plain_uses[t] += 1;
-                        }
-                        if fp.groups.iter().any(|g| g.from_x7) {
-                            x7_uses[t] += 1;
+                match view_kinds(&ops[i], ii) {
+                    Some(kinds) => {
+                        for k in kinds {
+                            match k {
+                                None => plain_uses[t] += 1,
+                                Some(w) => *da_uses[t].entry(*w).or_insert(0) += 1,
+                            }
                         }
                     }
-                    _ => plain_uses[t] += 1,
+                    None => plain_uses[t] += 1,
                 }
             }
         }
         plain_uses[n_nodes - 1] += 1; // keep the logits buffer alive
         for i in 0..n_nodes {
-            // materializing the x7 view reads the plain buffer once at
+            // materializing each D/A view reads the plain buffer once at
             // the producer itself — without this use a tensor consumed
-            // only through its D/A view would never be recycled
-            if quant && x7_uses[i] > 0 {
-                plain_uses[i] += 1;
-            }
+            // only through D/A views would never be recycled
+            plain_uses[i] += da_uses[i].len();
         }
 
         // ---- 3. linear-scan arena assignment -------------------------
@@ -382,7 +417,7 @@ impl QuantPlan {
         }
 
         let mut tensor_buf = vec![usize::MAX; n_nodes];
-        let mut tensor_x7 = vec![usize::MAX; n_nodes];
+        let mut tensor_da: Vec<BTreeMap<u32, usize>> = vec![BTreeMap::new(); n_nodes];
         let mut nodes: Vec<PlanNode> = Vec::with_capacity(n_nodes);
         for (i, (n, op)) in graph.nodes.iter().zip(ops.into_iter()).enumerate() {
             let out_elems = match &op {
@@ -396,54 +431,47 @@ impl QuantPlan {
             };
             let dst = grab(out_elems, plain_uses[i], &mut buf_cap, &mut remaining, &mut free);
             tensor_buf[i] = dst;
-            let x7 = if quant && x7_uses[i] > 0 {
-                let id =
-                    grab(out_elems, x7_uses[i], &mut buf_cap, &mut remaining, &mut free);
-                tensor_x7[i] = id;
-                // retire the x7-materialization read of dst (it happens
-                // at this node, right after dst is produced)
+            let mut da_out: Vec<(u32, usize)> = Vec::with_capacity(da_uses[i].len());
+            for (&w, &uses) in &da_uses[i] {
+                let id = grab(out_elems, uses, &mut buf_cap, &mut remaining, &mut free);
+                tensor_da[i].insert(w, id);
+                da_out.push((w, id));
+                // retire the materialization read of dst (it happens at
+                // this node, right after dst is produced)
                 remaining[dst] -= 1;
                 if remaining[dst] == 0 {
                     free.push(dst);
                 }
-                Some(id)
-            } else {
-                None
-            };
+            }
 
-            // resolve inputs, then release them (after dst/x7 are held,
-            // so a freed input can never alias this node's outputs)
+            // resolve inputs, then release them (after dst/views are
+            // held, so a freed input can never alias this node's outputs)
             let mut src = [usize::MAX; 2];
-            let mut src_x7 = None;
+            let mut src_views: Vec<usize> = Vec::new();
             for (ii, inp) in n.inputs.iter().enumerate().take(2) {
                 let t = node_idx(inp)?;
                 src[ii] = tensor_buf[t];
-                let (reads_plain, reads_x7) = match &op {
-                    PlanOp::Conv(cp) if ii == 0 => (
-                        cp.groups.iter().any(|g| !g.from_x7),
-                        cp.groups.iter().any(|g| g.from_x7),
-                    ),
-                    PlanOp::Fc(fp) if ii == 0 => (
-                        fp.groups.iter().any(|g| !g.from_x7),
-                        fp.groups.iter().any(|g| g.from_x7),
-                    ),
-                    _ => (true, false),
-                };
-                if reads_x7 {
-                    let xb = tensor_x7[t];
-                    if xb == usize::MAX {
-                        return Err(anyhow!("internal: no x7 buffer for '{inp}'"));
+                match view_kinds(&op, ii) {
+                    Some(kinds) => {
+                        for k in kinds {
+                            let id = match k {
+                                None => src[ii],
+                                Some(w) => *tensor_da[t].get(w).ok_or_else(|| {
+                                    anyhow!("internal: no {w}-bit D/A view for '{inp}'")
+                                })?,
+                            };
+                            src_views.push(id);
+                            remaining[id] -= 1;
+                            if remaining[id] == 0 {
+                                free.push(id);
+                            }
+                        }
                     }
-                    src_x7 = Some(xb);
-                    remaining[xb] -= 1;
-                    if remaining[xb] == 0 {
-                        free.push(xb);
-                    }
-                }
-                if reads_plain {
-                    remaining[src[ii]] -= 1;
-                    if remaining[src[ii]] == 0 {
-                        free.push(src[ii]);
+                    None => {
+                        remaining[src[ii]] -= 1;
+                        if remaining[src[ii]] == 0 {
+                            free.push(src[ii]);
+                        }
                     }
                 }
             }
@@ -454,8 +482,8 @@ impl QuantPlan {
                 op,
                 src,
                 dst,
-                src_x7,
-                x7,
+                src_views,
+                da_out,
                 out_elems,
                 track_max,
             });
@@ -467,7 +495,6 @@ impl QuantPlan {
             n_bufs: buf_cap.len(),
             in_elems: c0 * h0 * w0,
             nodes,
-            da_bits,
         })
     }
 
@@ -494,6 +521,20 @@ impl QuantPlan {
 
     pub(crate) fn n_nodes(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Materialize the D/A views of a just-produced activation: one
+    /// width-truncated copy per distinct `da_bits` consumers read.
+    fn materialize_da(node: &PlanNode, dst: &[f32], bufs: &mut [Vec<f32>]) {
+        for &(w, id) in &node.da_out {
+            let mut view = std::mem::take(&mut bufs[id]);
+            view.clear();
+            view.resize(dst.len(), 0.0);
+            for (d, &v) in view.iter_mut().zip(dst.iter()) {
+                *d = da_q(v, w);
+            }
+            bufs[id] = view;
+        }
     }
 
     /// Execute one batch block single-threaded. Returns the logits
@@ -526,14 +567,12 @@ impl QuantPlan {
                     }
                 }
                 PlanOp::Conv(cp) => {
-                    let src = ws.bufs[node.src[0]].as_slice();
-                    let src7 = node.src_x7.map(|id| ws.bufs[id].as_slice());
-                    exec_conv(cp, src, src7, batch, &mut ws.panel, &mut ws.cbuf, &mut dst);
+                    exec_conv(cp, &ws.bufs, &node.src_views, batch, &mut ws.panel,
+                              &mut ws.cbuf, &mut dst);
                 }
                 PlanOp::Fc(fp) => {
-                    let src = ws.bufs[node.src[0]].as_slice();
-                    let src7 = node.src_x7.map(|id| ws.bufs[id].as_slice());
-                    exec_fc(fp, src, src7, batch, &mut ws.panel, &mut ws.cbuf, &mut dst);
+                    exec_fc(fp, &ws.bufs, &node.src_views, batch, &mut ws.panel,
+                            &mut ws.cbuf, &mut dst);
                 }
                 PlanOp::Dw(dp) => {
                     let src = ws.bufs[node.src[0]].as_slice();
@@ -554,15 +593,7 @@ impl QuantPlan {
                     m[ni] = dst.iter().fold(m[ni], |acc, &v| acc.max(v));
                 }
             }
-            if let Some(x7id) = node.x7 {
-                let mut x7b = std::mem::take(&mut ws.bufs[x7id]);
-                x7b.clear();
-                x7b.resize(dst.len(), 0.0);
-                for (d, &v) in x7b.iter_mut().zip(dst.iter()) {
-                    *d = da_q(v, self.da_bits);
-                }
-                ws.bufs[x7id] = x7b;
-            }
+            Self::materialize_da(node, &dst, &mut ws.bufs);
             ws.bufs[node.dst] = dst;
         }
         std::mem::take(&mut ws.bufs[self.nodes.last().unwrap().dst])
@@ -598,30 +629,21 @@ impl QuantPlan {
                     }
                 }
                 PlanOp::Conv(cp) => {
-                    let src = ws.bufs[node.src[0]].as_slice();
-                    let src7 = node.src_x7.map(|id| ws.bufs[id].as_slice());
                     let n = cp.oh * cp.ow;
                     let kdim = cp.cin * cp.k * cp.k;
                     let in_elems = cp.cin * cp.hi * cp.wi;
-                    let need_plain = cp.groups.iter().any(|g| !g.from_x7);
-                    let need_x7 = cp.groups.iter().any(|g| g.from_x7);
-                    let nsrc = need_plain as usize + need_x7 as usize;
-                    // phase 1: parallel im2col, one panel per (image, source)
+                    let nsrc = cp.srcs.len();
+                    // phase 1: parallel im2col, one panel per (image, view)
                     ws.panels.clear();
                     ws.panels.resize(batch * nsrc * kdim * n, 0.0);
                     {
+                        let bufs = &ws.bufs;
+                        let src_views = node.src_views.as_slice();
                         let items: Vec<(usize, &mut [f32])> =
                             ws.panels.chunks_mut(kdim * n).enumerate().collect();
                         pool.scoped_map(items, |(ci, chunk)| {
                             let b = ci / nsrc;
-                            // panel kinds per image: [plain, x7] when both
-                            // are needed, otherwise the single one present
-                            let from_x7 = !need_plain || (nsrc == 2 && ci % 2 == 1);
-                            let s = if from_x7 {
-                                src7.expect("x7 buffer missing")
-                            } else {
-                                src
-                            };
+                            let s = bufs[src_views[ci % nsrc]].as_slice();
                             im2col(
                                 &s[b * in_elems..(b + 1) * in_elems],
                                 cp.cin, cp.hi, cp.wi, cp.k, cp.stride, cp.pad,
@@ -654,9 +676,9 @@ impl QuantPlan {
                     pool.scoped_map(items, |(b, co0, chunk, scratch)| {
                         let co1 = (co0 + cc).min(cp.cout);
                         for g in &cp.groups {
-                            let kind = if g.from_x7 && need_plain { 1 } else { 0 };
                             let panel = &panels
-                                [(b * nsrc + kind) * kdim * n..(b * nsrc + kind + 1) * kdim * n];
+                                [(b * nsrc + g.src) * kdim * n
+                                    ..(b * nsrc + g.src + 1) * kdim * n];
                             let r0 = g.rows.partition_point(|&c| c < co0);
                             let r1 = g.rows.partition_point(|&c| c < co1);
                             if r1 == r0 {
@@ -682,9 +704,8 @@ impl QuantPlan {
                     });
                 }
                 PlanOp::Fc(fp) => {
-                    let src = ws.bufs[node.src[0]].as_slice();
-                    let src7 = node.src_x7.map(|id| ws.bufs[id].as_slice());
-                    exec_fc(fp, src, src7, batch, &mut ws.panel, &mut ws.cbuf, &mut dst);
+                    exec_fc(fp, &ws.bufs, &node.src_views, batch, &mut ws.panel,
+                            &mut ws.cbuf, &mut dst);
                 }
                 PlanOp::Dw(dp) => {
                     let src = ws.bufs[node.src[0]].as_slice();
@@ -714,15 +735,7 @@ impl QuantPlan {
                     exec_gap(src, batch, *c, *hw, &mut dst);
                 }
             }
-            if let Some(x7id) = node.x7 {
-                let mut x7b = std::mem::take(&mut ws.bufs[x7id]);
-                x7b.clear();
-                x7b.resize(dst.len(), 0.0);
-                for (d, &v) in x7b.iter_mut().zip(dst.iter()) {
-                    *d = da_q(v, self.da_bits);
-                }
-                ws.bufs[x7id] = x7b;
-            }
+            Self::materialize_da(node, &dst, &mut ws.bufs);
             ws.bufs[node.dst] = dst;
         }
         std::mem::take(&mut ws.bufs[self.nodes.last().unwrap().dst])
@@ -748,8 +761,8 @@ fn epilogue(acc: &[f32], bias: f32, relu: bool, act_scale: f32, bits: u32, dst: 
 
 fn exec_conv(
     cp: &ConvP,
-    src: &[f32],
-    src7: Option<&[f32]>,
+    bufs: &[Vec<f32>],
+    src_views: &[usize],
     batch: usize,
     panel: &mut Vec<f32>,
     cbuf: &mut Vec<f32>,
@@ -761,20 +774,25 @@ fn exec_conv(
     panel.clear();
     panel.resize(kdim * n, 0.0);
     for b in 0..batch {
-        for g in &cp.groups {
-            let s = if g.from_x7 { src7.expect("x7 buffer missing") } else { src };
+        // one im2col per (image, view): groups sharing a view (e.g. two
+        // plain-reading units) reuse the panel
+        for si in 0..cp.srcs.len() {
+            let s = bufs[src_views[si]].as_slice();
             im2col(
                 &s[b * in_elems..(b + 1) * in_elems],
                 cp.cin, cp.hi, cp.wi, cp.k, cp.stride, cp.pad, cp.oh, cp.ow, panel,
             );
-            let m = g.rows.len();
-            cbuf.clear();
-            cbuf.resize(m * n, 0.0);
-            gemm_seqk(&g.w, panel, m, kdim, n, cbuf);
-            for (r, &co) in g.rows.iter().enumerate() {
-                let crow = &cbuf[r * n..(r + 1) * n];
-                let drow = &mut dst[(b * cp.cout + co) * n..(b * cp.cout + co + 1) * n];
-                epilogue(crow, g.bias[r], cp.relu, cp.act_scale, g.bits, drow);
+            for g in cp.groups.iter().filter(|g| g.src == si) {
+                let m = g.rows.len();
+                cbuf.clear();
+                cbuf.resize(m * n, 0.0);
+                gemm_seqk(&g.w, panel, m, kdim, n, cbuf);
+                for (r, &co) in g.rows.iter().enumerate() {
+                    let crow = &cbuf[r * n..(r + 1) * n];
+                    let drow =
+                        &mut dst[(b * cp.cout + co) * n..(b * cp.cout + co + 1) * n];
+                    epilogue(crow, g.bias[r], cp.relu, cp.act_scale, g.bits, drow);
+                }
             }
         }
     }
@@ -782,8 +800,8 @@ fn exec_conv(
 
 fn exec_fc(
     fp: &FcP,
-    src: &[f32],
-    src7: Option<&[f32]>,
+    bufs: &[Vec<f32>],
+    src_views: &[usize],
     batch: usize,
     panel: &mut Vec<f32>,
     cbuf: &mut Vec<f32>,
@@ -791,17 +809,20 @@ fn exec_fc(
 ) {
     panel.clear();
     panel.resize(fp.cin * batch, 0.0);
-    for g in &fp.groups {
-        let s = if g.from_x7 { src7.expect("x7 buffer missing") } else { src };
+    // one transpose per view; groups sharing a view reuse the panel
+    for si in 0..fp.srcs.len() {
+        let s = bufs[src_views[si]].as_slice();
         transpose_into(s, batch, fp.cin, panel);
-        let m = g.rows.len();
-        cbuf.clear();
-        cbuf.resize(m * batch, 0.0);
-        gemm_seqk(&g.w, panel, m, fp.cin, batch, cbuf);
-        for (r, &co) in g.rows.iter().enumerate() {
-            for b in 0..batch {
-                // logits stay float (no relu / no output grid)
-                dst[b * fp.cout + co] = cbuf[r * batch + b] + g.bias[r];
+        for g in fp.groups.iter().filter(|g| g.src == si) {
+            let m = g.rows.len();
+            cbuf.clear();
+            cbuf.resize(m * batch, 0.0);
+            gemm_seqk(&g.w, panel, m, fp.cin, batch, cbuf);
+            for (r, &co) in g.rows.iter().enumerate() {
+                for b in 0..batch {
+                    // logits stay float (no relu / no output grid)
+                    dst[b * fp.cout + co] = cbuf[r * batch + b] + g.bias[r];
+                }
             }
         }
     }

@@ -6,9 +6,10 @@
 //! HLO in `tests/quant_infer.rs`):
 //!   - weights fake-quantized to the assigned format per channel
 //!     (int8 digital / ternary AIMC, per-layer Eq.-5 scales)
-//!   - the digital sub-conv reads the stored 8-bit activations, the
-//!     AIMC sub-conv re-reads them through the 7-bit D/A (fixed-range
-//!     LSB truncation)
+//!   - digital sub-convs read the stored 8-bit activations; each
+//!     IMC-style sub-conv re-reads them through its unit's n-bit D/A
+//!     (fixed-range LSB truncation, one view per distinct `da_bits`
+//!     on multi-macro platforms)
 //!   - mixed output quantization: 8-bit digital channels, 7-bit AIMC
 //!
 //! All values live on their quantization grids; arithmetic is f32 like
@@ -38,7 +39,8 @@ struct QLayer {
 /// Per-accelerator facts the forward pass needs (index = acc id).
 #[derive(Clone, Copy)]
 struct AccView {
-    from_da: bool,
+    /// D/A read width of this unit (`None` = reads stored activations).
+    da: Option<u32>,
     act_bits: u32,
 }
 
@@ -51,7 +53,8 @@ pub struct RefNet<'g> {
     add_scales: BTreeMap<String, f32>,
     accs: Vec<AccView>,
     dw_acc: usize,
-    da_bits: u32,
+    /// distinct D/A widths on the platform (one input view per width)
+    da_widths: Vec<u32>,
 }
 
 impl<'g> RefNet<'g> {
@@ -66,12 +69,12 @@ impl<'g> RefNet<'g> {
         let accs: Vec<AccView> = platform
             .accelerators
             .iter()
-            .map(|a| AccView { from_da: a.da_bits.is_some(), act_bits: a.act_bits })
+            .map(|a| AccView { da: a.da_bits, act_bits: a.act_bits })
             .collect();
         let scales: Vec<String> =
             platform.accelerators.iter().map(|a| a.scale_leaf()).collect();
         let wbits: Vec<u32> = platform.accelerators.iter().map(|a| a.weight_bits).collect();
-        let da_bits = platform.da_bits()?.unwrap_or(7);
+        let da_widths = platform.da_widths();
         let mut layers = BTreeMap::new();
         let mut dw = BTreeMap::new();
         let mut add_scales = BTreeMap::new();
@@ -139,8 +142,18 @@ impl<'g> RefNet<'g> {
             add_scales,
             accs,
             dw_acc: platform.dw_acc,
-            da_bits,
+            da_widths,
         })
+    }
+
+    /// One D/A input view per distinct platform width (fixed [0,1]
+    /// range, like the graph) for the accelerators that re-read
+    /// activations through a converter.
+    fn da_views(&self, inp: &[f32]) -> Vec<(u32, Vec<f32>)> {
+        self.da_widths
+            .iter()
+            .map(|&w| (w, inp.iter().map(|&v| da_q(v, w)).collect()))
+            .collect()
     }
 
     /// Forward one batch (NCHW in [0,1]); returns (batch, classes) logits.
@@ -192,15 +205,16 @@ impl<'g> RefNet<'g> {
 
     fn conv_mapped(&self, n: &NodeDef, inp: &[f32], batch: usize) -> Vec<f32> {
         let q = &self.layers[&n.name];
-        // D/A input read (fixed [0,1] range, like the graph) for the
-        // accelerators that re-read through a converter
-        let x7: Vec<f32> = inp.iter().map(|&v| da_q(v, self.da_bits)).collect();
+        let views = self.da_views(inp);
         let (oh, ow) = n.out_hw;
         let mut y = vec![0f32; batch * n.cout * oh * ow];
         for b in 0..batch {
             for co in 0..n.cout {
                 let acc = self.accs[q.assign[co] as usize];
-                let src = if acc.from_da { &x7 } else { inp };
+                let src: &[f32] = match acc.da {
+                    Some(w) => &views.iter().find(|(vw, _)| *vw == w).unwrap().1,
+                    None => inp,
+                };
                 conv_one_channel(
                     src, b, n.cin, n.in_hw, &q.w_eff, co, n.k, n.stride, n.pad,
                     oh, ow,
@@ -220,11 +234,14 @@ impl<'g> RefNet<'g> {
 
     fn fc_mapped(&self, n: &NodeDef, inp: &[f32], batch: usize) -> Vec<f32> {
         let q = &self.layers[&n.name];
-        let x7: Vec<f32> = inp.iter().map(|&v| da_q(v, self.da_bits)).collect();
+        let views = self.da_views(inp);
         let mut y = vec![0f32; batch * n.cout];
         for b in 0..batch {
             for co in 0..n.cout {
-                let src = if self.accs[q.assign[co] as usize].from_da { &x7 } else { inp };
+                let src: &[f32] = match self.accs[q.assign[co] as usize].da {
+                    Some(w) => &views.iter().find(|(vw, _)| *vw == w).unwrap().1,
+                    None => inp,
+                };
                 let mut acc = 0f32;
                 for ci in 0..n.cin {
                     acc += src[b * n.cin + ci] * q.w_eff[co * n.cin + ci];

@@ -47,6 +47,15 @@ impl Bench {
         self
     }
 
+    /// Single-repetition smoke profile (CI: exercises the bench
+    /// plumbing and emits the JSON, without timing fidelity).
+    pub fn smoke(mut self) -> Self {
+        self.min_iters = 1;
+        self.min_time = Duration::from_millis(0);
+        self.warmup = Duration::from_millis(0);
+        self
+    }
+
     pub fn run<F: FnMut()>(&mut self, case: &str, mut f: F) -> Stats {
         // warmup
         let w0 = Instant::now();

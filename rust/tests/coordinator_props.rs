@@ -5,11 +5,12 @@
 
 use std::collections::BTreeMap;
 
+use odimo::coordinator::baselines::CostObjective;
 use odimo::coordinator::partition::{partition, sublayers};
 use odimo::coordinator::{baselines, discretize::discretize, Mapping, SearchPoint};
 use odimo::hw::soc::{simulate, SocConfig};
-use odimo::hw::Platform;
-use odimo::model::{build, Graph, ALL_MODELS, AIMC, DIG};
+use odimo::hw::{AcceleratorSpec, LatencyModel, Platform};
+use odimo::model::{build, Graph, NodeDef, Op, ALL_MODELS, AIMC, DIG};
 use odimo::util::prng::Pcg32;
 
 const CASES: u64 = 40;
@@ -221,6 +222,177 @@ fn prop_partition_fragments_bounded() {
         for (layer, frags) in &part.fragments {
             let n = meta.model.node(layer).unwrap();
             assert!(*frags <= n.cout, "seed {seed} {layer}");
+        }
+    }
+}
+
+// ---- min-cost fast path vs the exhaustive enumerator ------------------
+
+/// A random conv layer shape (the geometry min-cost splits over).
+fn random_conv_node(rng: &mut Pcg32, max_cout: usize) -> NodeDef {
+    let k = [1usize, 3, 3, 5][rng.below(4) as usize];
+    let oh = 1 + rng.below(28) as usize;
+    let ow = 1 + rng.below(28) as usize;
+    NodeDef {
+        name: "rand".into(),
+        op: Op::Conv,
+        inputs: vec!["x".into()],
+        cin: 1 + rng.below(128) as usize,
+        cout: 1 + rng.below(max_cout as u32) as usize,
+        k,
+        stride: 1,
+        pad: k / 2,
+        relu: true,
+        in_hw: (oh, ow),
+        out_hw: (oh, ow),
+    }
+}
+
+#[test]
+fn prop_water_fill_matches_enumerator() {
+    // the water-filling latency fast path must reproduce the exhaustive
+    // enumerator exactly — including the tie-break (earlier units
+    // maximized) — on both exact-enumeration built-ins
+    for (p, max_cout) in [(Platform::diana(), 512), (Platform::diana_ne16(), 192)] {
+        for seed in 0..CASES {
+            let mut rng = Pcg32::new(seed, 23);
+            let node = random_conv_node(&mut rng, max_cout);
+            let fast = baselines::layer_counts(&p, &node, CostObjective::Latency);
+            let slow = baselines::layer_counts_enum(&p, &node, CostObjective::Latency);
+            assert_eq!(
+                fast, slow,
+                "seed {seed} on {}: cout {} cin {} k {} out {:?}",
+                p.name, node.cout, node.cin, node.k, node.out_hw
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_water_fill_matches_enumerator_on_models() {
+    // whole-graph differential: identical mappings on every benchmark
+    // model (the shapes the paper's experiments actually use)
+    for name in ALL_MODELS {
+        let g = build(name).unwrap();
+        for p in [Platform::diana(), Platform::diana_ne16()] {
+            let fast = baselines::min_cost(&g, &p, CostObjective::Latency);
+            let slow = baselines::min_cost_enum(&g, &p, CostObjective::Latency);
+            assert_eq!(fast, slow, "{name} on {}", p.name);
+        }
+    }
+}
+
+#[test]
+fn prop_energy_dp_cost_matches_enumerator() {
+    // the Pareto DP must reach the enumerator's minimal energy cost
+    // exactly (mappings may differ only on exact cost ties)
+    for (p, max_cout) in [(Platform::diana(), 512), (Platform::diana_ne16(), 160)] {
+        for seed in 0..CASES {
+            let mut rng = Pcg32::new(seed, 24);
+            let node = random_conv_node(&mut rng, max_cout);
+            let fast = baselines::layer_counts(&p, &node, CostObjective::Energy);
+            let slow = baselines::layer_counts_enum(&p, &node, CostObjective::Energy);
+            assert_eq!(fast.iter().sum::<usize>(), node.cout, "seed {seed}");
+            let cf = baselines::cost_of_counts(&p, &node, &fast, CostObjective::Energy);
+            let cs = baselines::cost_of_counts(&p, &node, &slow, CostObjective::Energy);
+            // 1e-9 relative: exact parity modulo f64 association noise
+            // in the DP's internal prefix sums
+            assert!(
+                (cf - cs).abs() <= 1e-9 * cs.abs().max(1.0),
+                "seed {seed} on {}: DP cost {cf} != enum cost {cs} (cout {})",
+                p.name, node.cout
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_water_fill_is_latency_optimal_nacc4() {
+    // beyond the enumerator's exact range: on the 4-unit MPSoC no
+    // random split may beat the water-filled span
+    let p = Platform::mpsoc4();
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed, 25);
+        let node = random_conv_node(&mut rng, 256);
+        let counts = baselines::layer_counts(&p, &node, CostObjective::Latency);
+        assert_eq!(counts.iter().sum::<usize>(), node.cout, "seed {seed}");
+        let span = baselines::cost_of_counts(&p, &node, &counts, CostObjective::Latency);
+        // random competitor splits
+        for _ in 0..20 {
+            let mut rival = vec![0usize; p.n_acc()];
+            for _ in 0..node.cout {
+                rival[rng.below(p.n_acc() as u32) as usize] += 1;
+            }
+            let rs = baselines::cost_of_counts(&p, &node, &rival, CostObjective::Latency);
+            assert!(
+                span <= rs,
+                "seed {seed}: water-fill span {span} beaten by random {rs} ({rival:?})"
+            );
+        }
+    }
+}
+
+/// A synthetic many-unit platform that forces granularity coarsening in
+/// both min-cost implementations (6 units -> enum_step/dp_step > 1).
+fn six_unit_platform() -> Platform {
+    let unit = |i: usize, mpc: f64| AcceleratorSpec {
+        name: format!("u{i}"),
+        weight_bits: 8,
+        act_bits: 8,
+        da_bits: None,
+        latency: LatencyModel::Proportional { macs_per_cycle: mpc },
+        p_act_mw: 10.0 + i as f64,
+        p_idle_mw: 0.5 + 0.1 * i as f64,
+        wmem_bytes: None,
+    };
+    Platform {
+        name: "six".into(),
+        f_clk_hz: 1e9,
+        l1_bytes: 1 << 20,
+        dw_acc: 0,
+        accelerators: (0..6).map(|i| unit(i, [2.0, 3.0, 5.0, 7.0, 11.0, 13.0][i])).collect(),
+    }
+}
+
+#[test]
+fn regression_coarse_granularity_splits_sum_to_cout() {
+    // regression for the min-cost granularity bounding: when the
+    // channel grid coarsens (many units) and cout is not a multiple of
+    // the step, the remainder must still be assigned — every split has
+    // to sum to cout exactly, for every objective and implementation
+    let p = six_unit_platform();
+    let mut rng = Pcg32::new(99, 26);
+    for &cout in &[97usize, 250, 333, 500, 511] {
+        let mut node = random_conv_node(&mut rng, 512);
+        node.cout = cout;
+        for objective in [CostObjective::Latency, CostObjective::Energy] {
+            for (label, counts) in [
+                ("fast", baselines::layer_counts(&p, &node, objective)),
+                ("enum", baselines::layer_counts_enum(&p, &node, objective)),
+            ] {
+                assert_eq!(counts.len(), p.n_acc(), "{label} {objective:?} cout {cout}");
+                assert_eq!(
+                    counts.iter().sum::<usize>(),
+                    cout,
+                    "{label} {objective:?}: split {counts:?} does not sum to cout {cout}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn min_cost_mapping_valid_on_all_builtin_platforms() {
+    let g = build("tinycnn").unwrap();
+    for name in Platform::BUILTIN_NAMES {
+        let p = Platform::by_name(name).unwrap();
+        for objective in [CostObjective::Latency, CostObjective::Energy] {
+            let m = baselines::min_cost(&g, &p, objective);
+            m.validate(&g, p.n_acc()).unwrap();
+            let split = m.channel_split(p.n_acc());
+            for n in g.mappable() {
+                assert_eq!(split[&n.name].iter().sum::<usize>(), n.cout, "{name}");
+            }
         }
     }
 }

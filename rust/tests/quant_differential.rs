@@ -95,6 +95,58 @@ fn three_acc_engine_matches_oracle_random_mappings() {
 }
 
 #[test]
+fn distinct_da_width_macros_match_oracle() {
+    // two IMC macros with distinct da_bits (7-bit imc0, 6-bit imc1 on
+    // mpsoc4) plus digital/proportional units: per layer, channels read
+    // the input through *different* D/A views and quantize outputs on
+    // different grids; the planned engine must still be bit-exact vs
+    // the naive oracle under seeded random 4-way mappings
+    use odimo::quant::{synth_mapping_n, synth_params_on};
+    let g = tinycnn();
+    let p = Platform::mpsoc4();
+    assert_eq!(p.da_widths(), vec![6, 7], "mpsoc4 must carry two distinct D/A widths");
+    let (names, values) = synth_params_on(&g, &p, 909);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let x = random_input(&g, 4, 71);
+    for seed in [21u64, 22, 23] {
+        let mapping = synth_mapping_n(&g, 4, seed);
+        let engine = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &p).unwrap();
+        let d = max_abs_diff(&engine.forward(&x, 4).unwrap(), &oracle.forward(&x, 4).unwrap());
+        assert!(d < 1e-4, "seed {seed}: distinct-da engine diverged from oracle by {d}");
+    }
+    // and the pooled paths stay bit-deterministic with per-width views
+    let mapping = synth_mapping_n(&g, 4, 29);
+    let engine = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+    let want = engine.forward(&x, 4).unwrap();
+    for threads in [2usize, 8] {
+        let pool = ThreadPool::new(threads);
+        let got = engine.forward_pool(&x, 4, &pool).unwrap();
+        assert_eq!(got, want, "{threads}-thread pool changed mpsoc4 logits");
+    }
+}
+
+#[test]
+fn no_da_platform_matches_oracle() {
+    // gap9 carries no D/A unit at all: the engine must skip view
+    // materialization entirely and still match the oracle
+    use odimo::quant::{synth_mapping_n, synth_params_on};
+    let g = tinycnn();
+    let p = Platform::gap9();
+    assert!(p.da_widths().is_empty());
+    let (names, values) = synth_params_on(&g, &p, 910);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let x = random_input(&g, 3, 73);
+    for seed in [31u64, 32] {
+        let mapping = synth_mapping_n(&g, 2, seed);
+        let engine = QuantNet::compile_params(&params, &g, &mapping, &p).unwrap();
+        let oracle = RefNet::compile(&params, &g, &mapping, &p).unwrap();
+        let d = max_abs_diff(&engine.forward(&x, 3).unwrap(), &oracle.forward(&x, 3).unwrap());
+        assert!(d < 1e-4, "seed {seed}: gap9 engine diverged from oracle by {d}");
+    }
+}
+
+#[test]
 fn pool_parallelism_is_deterministic_resnet20() {
     // batch 4 against 1 / 2 / 8 workers walks every execution mode:
     // plain forward (t=1), batch-block (t=2, batch >= threads), and

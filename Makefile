@@ -4,7 +4,8 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check doc bench-infer bench-sim bench-mincost bench artifacts clean
+.PHONY: build test check doc bench-infer bench-sim bench-mincost bench-serve bench \
+	artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -46,6 +47,15 @@ bench-mincost:
 	$(CARGO) bench --bench bench_mincost
 	@test -f BENCH_mincost.json && echo "BENCH_mincost.json updated" || \
 		echo "warning: BENCH_mincost.json missing"
+
+# Closed-loop serving: img/s and simulated p95 latency at 1/2/8 worker
+# threads, batched vs unbatched. Emits BENCH_serve.json at repo root
+# and appends to results/bench_serve.csv. CI smoke-runs this with
+# --smoke alongside bench-mincost.
+bench-serve:
+	$(CARGO) bench --bench bench_serve
+	@test -f BENCH_serve.json && echo "BENCH_serve.json updated" || \
+		echo "warning: BENCH_serve.json missing"
 
 # All harness = false bench binaries.
 bench:

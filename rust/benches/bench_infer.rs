@@ -1,7 +1,9 @@
 //! Quantized-inference engine throughput: planned im2col/GEMM engine
 //! vs the naive interpreter oracle (`quant::ref`), single-thread and
-//! over the ThreadPool. Reports img/s and writes `BENCH_infer.json` at
-//! the repo root for the EXPERIMENTS.md §Perf trajectory.
+//! over the ThreadPool, plus serve-side plan-cache hit/miss timings so
+//! plan compilation cost stays visible in the perf trajectory. Reports
+//! img/s and writes `BENCH_infer.json` at the repo root for the
+//! EXPERIMENTS.md §Perf trajectory.
 //!
 //!     make bench-infer    # or: cargo bench --bench bench_infer
 
@@ -10,7 +12,9 @@ use std::fmt::Write as _;
 use odimo::hw::Platform;
 use odimo::model::{resnet20, tinycnn, Graph};
 use odimo::quant::r#ref::RefNet;
-use odimo::quant::{synth_mapping as random_mapping, synth_params, ParamSet, QuantNet};
+use odimo::quant::{synth_mapping as random_mapping, synth_params, ParamSet, QuantNet,
+                   QuantPlan};
+use odimo::serve::batcher::PlanCache;
 use odimo::util::bench::{black_box, Bench};
 use odimo::util::pool::ThreadPool;
 use odimo::util::prng::Pcg32;
@@ -87,12 +91,59 @@ fn bench_model(b: &mut Bench, g: &Graph, json: &mut String) {
     let _ = write!(json, "\n  }}");
 }
 
+/// Plan-cache handle cost: cold compile (miss) vs cached fetch (hit) —
+/// the amortization the serve batcher's LRU cache buys per batch.
+fn bench_plan_cache(b: &mut Bench, json: &mut String) {
+    let g = resnet20();
+    let p = Platform::diana();
+    let (names, values) = synth_params(&g, 19);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let mapping = random_mapping(&g, 5);
+    let key = QuantPlan::cache_key(&g.name, &p.name, &mapping);
+    let s_miss = b.run("plan_cache_miss_resnet20", || {
+        let mut cold = PlanCache::new(1);
+        cold.get_or_compile(key, &mapping, || {
+            QuantNet::compile_params(&params, &g, &mapping, &p)
+        })
+        .unwrap();
+        black_box(cold.misses);
+    });
+    let mut cache = PlanCache::new(2);
+    cache
+        .get_or_compile(key, &mapping, || QuantNet::compile_params(&params, &g, &mapping, &p))
+        .unwrap();
+    let s_hit = b.run("plan_cache_hit_resnet20", || {
+        cache
+            .get_or_compile(key, &mapping, || {
+                QuantNet::compile_params(&params, &g, &mapping, &p)
+            })
+            .unwrap();
+        black_box(cache.hits);
+    });
+    println!(
+        "plan cache: miss (compile) {:.3} ms | hit {:.0} ns | {:.0}x",
+        s_miss.median_ns / 1e6,
+        s_hit.median_ns,
+        s_miss.median_ns / s_hit.median_ns.max(1.0)
+    );
+    let _ = write!(
+        json,
+        "  \"plan_cache\": {{\n    \"miss_compile_ns\": {:.0},\n    \"hit_ns\": {:.0},\n    \
+         \"speedup\": {:.0}\n  }}",
+        s_miss.median_ns,
+        s_hit.median_ns,
+        s_miss.median_ns / s_hit.median_ns.max(1.0)
+    );
+}
+
 fn main() {
     let mut b = Bench::new("infer").slow();
     let mut json = String::from("{\n");
     bench_model(&mut b, &tinycnn(), &mut json);
     json.push_str(",\n");
     bench_model(&mut b, &resnet20(), &mut json);
+    json.push_str(",\n");
+    bench_plan_cache(&mut b, &mut json);
     json.push_str("\n}\n");
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_infer.json");
     if let Err(e) = std::fs::write(path, &json) {

@@ -1,0 +1,81 @@
+//! Bench: the closed-loop serve driver — engine throughput (img/s) and
+//! simulated p95 queue+compute latency at 1/2/8 worker threads, batched
+//! (max_batch 8) vs unbatched (max_batch 1). CI smoke-runs this with
+//! `--smoke` (tiny request stream, 1 repetition); `make bench-serve`
+//! produces real timings. Writes `BENCH_serve.json` at the repo root
+//! and appends to `results/bench_serve.csv`.
+
+use std::fmt::Write as _;
+
+use odimo::hw::Platform;
+use odimo::serve::{run_serve, ServeCfg, SweepCfg};
+use odimo::util::bench::{black_box, Bench};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = Bench::new("serve").slow();
+    if smoke {
+        b = b.smoke();
+    }
+    // a private results dir so bench runs never disturb real sweeps;
+    // the frontier cache persists across cases (first case sweeps, the
+    // rest are cache hits — exactly the serving-path behavior)
+    let dir = std::env::temp_dir().join("odimo_bench_serve");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut json = String::from("{\n");
+    let mut first = true;
+    for threads in [1usize, 2, 8] {
+        for (mode, max_batch) in [("batched", 8usize), ("unbatched", 1)] {
+            let cfg = ServeCfg {
+                model: "tinycnn".into(),
+                platform: Platform::diana(),
+                results_dir: dir.clone(),
+                n_requests: if smoke { 16 } else { 128 },
+                max_batch,
+                max_wait: 50_000,
+                mean_gap: 15_000,
+                launch_cycles: 10_000,
+                threads: Some(threads),
+                seed: 42,
+                plan_cache_cap: 8,
+                sweep: SweepCfg { seed: 42, calib: 8, blend_steps: 2 },
+            };
+            // metrics come from one instrumented run; the timed loop
+            // measures the whole closed loop (dispatch + batch + engine)
+            let rep = run_serve(&cfg).expect("serve run");
+            let s = b.run(&format!("{mode}_t{threads}"), || {
+                black_box(run_serve(&cfg).expect("serve run"));
+            });
+            println!(
+                "{mode} x{threads} threads: {:8.1} img/s | p95 {:.3} ms (simulated) | \
+                 loop {:.2} ms",
+                rep.throughput_img_s,
+                rep.p95_ms,
+                s.median_ns / 1e6
+            );
+            if !first {
+                json.push_str(",\n");
+            }
+            first = false;
+            let _ = write!(
+                json,
+                "  \"{mode}_t{threads}\": {{\n    \"img_s\": {:.1},\n    \
+                 \"p95_ms\": {:.4},\n    \"sla_hit_rate\": {:.4},\n    \
+                 \"batches\": {},\n    \"loop_ms\": {:.2}\n  }}",
+                rep.throughput_img_s,
+                rep.p95_ms,
+                rep.sla_hit_rate,
+                rep.total_batches,
+                s.median_ns / 1e6
+            );
+        }
+    }
+    json.push_str("\n}\n");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    if let Err(e) = std::fs::write(path, &json) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
+    b.finish();
+}

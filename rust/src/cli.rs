@@ -75,6 +75,12 @@ impl Args {
             .transpose()
     }
 
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().map_err(|_| anyhow!("--{key}: bad number '{v}'")))
+            .transpose()
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -110,6 +116,16 @@ mod tests {
         assert_eq!(a.get("lam"), Some("0.5"));
         assert!(a.has("smoke"));
         assert_eq!(a.get_f32("lam").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn parses_u64_values() {
+        let a = Args::parse(&argv("serve --seed 42 --threads 8"), &[]).unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), Some(42));
+        assert_eq!(a.get_usize("threads").unwrap(), Some(8));
+        assert!(a.get_u64("threads").is_ok());
+        let b = Args::parse(&argv("serve --seed nope"), &[]).unwrap();
+        assert!(b.get_u64("seed").is_err());
     }
 
     #[test]

@@ -1,12 +1,87 @@
 //! Persistence for evaluated search points (mapping + metrics), so the
 //! expensive sweeps (fig4) are computed once and reused by table1/fig6.
+//!
+//! All writers here are crash-safe: [`write_atomic`] stages the payload
+//! in a sibling temp file and `rename`s it into place, so a killed
+//! process can never leave a half-written cache that a later run would
+//! silently misparse. Long-lived caches (the serve frontier, the serve
+//! metrics report) additionally go through the
+//! [`save_versioned`]/[`load_versioned`] envelope, which pins a `kind`
+//! tag and a schema version and turns any mismatch into a clear error
+//! instead of a garbage parse.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{Mapping, SearchPoint};
 use crate::util::json::{self, Json};
+
+/// Write `text` to `path` atomically: stage in a uniquely named
+/// `<path>.<pid>.<n>.tmp` sibling (same directory, hence same
+/// filesystem, so the rename cannot cross devices) and rename over the
+/// destination. Readers either see the old file or the complete new
+/// one — never a truncated write — and concurrent writers to one path
+/// cannot clobber each other's staging file (last rename wins whole).
+pub fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    static COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    let tmp = PathBuf::from(tmp_name);
+    std::fs::write(&tmp, text).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow!("writing {}: {e}", tmp.display())
+    })?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display())
+    })?;
+    Ok(())
+}
+
+/// Wrap `payload` in a `{kind, schema_version, payload}` envelope and
+/// write it atomically. The companion [`load_versioned`] refuses files
+/// whose kind or version disagree, so cache-format evolutions surface
+/// as actionable errors instead of misparses.
+pub fn save_versioned(path: &Path, kind: &str, version: u32, payload: Json) -> Result<()> {
+    let doc = Json::obj(vec![
+        ("kind", Json::str(kind)),
+        ("schema_version", Json::num(version as f64)),
+        ("payload", payload),
+    ]);
+    write_atomic(path, &doc.to_string())
+}
+
+/// Load a [`save_versioned`] envelope, checking the `kind` tag and the
+/// schema version before handing back the payload.
+pub fn load_versioned(path: &Path, kind: &str, version: u32) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    let doc = json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let got_kind = doc.req("kind")?.as_str().unwrap_or("").to_string();
+    if got_kind != kind {
+        return Err(anyhow!(
+            "{}: cache kind '{got_kind}' != expected '{kind}'",
+            path.display()
+        ));
+    }
+    let got_v = doc.req("schema_version")?.as_usize().unwrap_or(0) as u32;
+    if got_v != version {
+        return Err(anyhow!(
+            "{}: schema version {got_v} != expected {version} — \
+             regenerate the cache (or delete the stale file)",
+            path.display()
+        ));
+    }
+    Ok(doc.req("payload")?.clone())
+}
 
 pub fn point_to_json(p: &SearchPoint) -> Json {
     Json::obj(vec![
@@ -45,12 +120,8 @@ pub fn point_from_json(v: &Json) -> Result<SearchPoint> {
 }
 
 pub fn save_points(path: &Path, points: &[SearchPoint]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
     let arr = Json::Arr(points.iter().map(point_to_json).collect());
-    std::fs::write(path, arr.to_string())?;
-    Ok(())
+    write_atomic(path, &arr.to_string())
 }
 
 pub fn load_points(path: &Path) -> Result<Vec<SearchPoint>> {
@@ -92,5 +163,37 @@ mod tests {
         assert_eq!(back[0].mapping, p.mapping);
         assert!((back[0].accuracy - p.accuracy).abs() < 1e-9);
         assert_eq!(back[0].total_cycles, p.total_cycles);
+        // crash-safety: no staging file survives a clean save
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+    }
+
+    #[test]
+    fn write_atomic_replaces_existing() {
+        let dir = std::env::temp_dir().join("odimo_store_atomic");
+        let path = dir.join("v.json");
+        write_atomic(&path, "old").unwrap();
+        write_atomic(&path, "new").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "new");
+    }
+
+    #[test]
+    fn versioned_envelope_roundtrip_and_mismatch() {
+        let dir = std::env::temp_dir().join("odimo_store_versioned");
+        let path = dir.join("cache.json");
+        let payload = Json::obj(vec![("x", Json::num(3.0))]);
+        save_versioned(&path, "frontier", 2, payload.clone()).unwrap();
+        let back = load_versioned(&path, "frontier", 2).unwrap();
+        assert_eq!(back, payload);
+        // wrong schema version -> a clear error, not a misparse
+        let e = load_versioned(&path, "frontier", 3).unwrap_err().to_string();
+        assert!(e.contains("schema version 2"), "{e}");
+        // wrong kind -> a clear error too
+        let e = load_versioned(&path, "serve_report", 2).unwrap_err().to_string();
+        assert!(e.contains("kind"), "{e}");
     }
 }

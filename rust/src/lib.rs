@@ -13,6 +13,9 @@
 //!   (pretrain → search → discretize → fine-tune → deploy,
 //!   [`coordinator`]), and deploys mappings on the DIANA SoC simulator
 //!   ([`hw`]). Python never runs on the request path.
+//! * **Serving ([`serve`])** — the online side: a cached per-platform
+//!   Pareto frontier of mappings, an SLA-aware dispatcher, a dynamic
+//!   batcher with an LRU plan cache, and the `serve-report` dashboard.
 
 pub mod cli;
 pub mod config;
@@ -24,6 +27,7 @@ pub mod metrics;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 pub mod xla;

@@ -6,7 +6,9 @@
 //!   simulate                      cost a mapping on the SoC simulator
 //!   inspect                       print a model's geometry + cost table
 //!   platforms                     list built-in platforms + their units
-//! Common flags: --model, --config, --platform, --smoke.
+//!   sweep | serve | serve-report  the online serving stack (serve/)
+//! Common flags: --model, --config, --platform, --smoke, --threads,
+//! --seed.
 
 use anyhow::{anyhow, Result};
 
@@ -34,10 +36,15 @@ COMMANDS
   simulate  cost a mapping: --baseline <name> | --mapping <file.json>
   inspect   print model geometry and per-layer cost bounds
   platforms list built-in platforms and their accelerators
+  sweep     build (or load) the cached mapping Pareto frontier
+  serve     closed-loop SLA-aware batched inference over the frontier
+            [--requests n --max-batch n --max-wait cyc --gap cyc]
+  serve-report  render the dashboard of the last serve run
   help      this text
 
 FLAGS
-  --model <tinycnn|resnet20|resnet18s|mbv1_025>   (default resnet20)
+  --model <tinycnn|resnet20|resnet18s|mbv1_025>   (default resnet20;
+                            sweep/serve default to tinycnn)
   --config <file.toml>      load a RunConfig
   --platform <name|file>    deployment SoC: built-in name (diana,
                             diana_ne16, gap9, mpsoc4) or a platform
@@ -49,6 +56,12 @@ FLAGS
   --baseline <name>         all_8bit|all_ternary|io8_backbone_ternary|\
 even_split|min_cost_lat|min_cost_en
   --non-ideal-l1            enable L1 tiling penalties in the simulator
+  --threads <n>             worker threads for sweep/serve engine runs
+                            (ThreadPool size; default: machine
+                            parallelism, capped; sweep/serve only)
+  --seed <u64>              global seed, default 1234: data_seed for the
+                            pipeline verbs, request/calibration streams
+                            for sweep/serve
 ";
 
 fn build_config(args: &Args) -> Result<RunConfig> {
@@ -84,7 +97,28 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     if args.has("non-ideal-l1") {
         cfg.non_ideal_l1 = true;
     }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.data_seed = s;
+    }
     Ok(cfg)
+}
+
+/// Model for the serving verbs: defaults to `tinycnn` (the closed loop
+/// executes the real engine per batch; see `serve::ServeCfg`).
+fn serve_model(args: &Args) -> Result<String> {
+    let m = args.get_or("model", "tinycnn");
+    if !ALL_MODELS.contains(&m) {
+        return Err(anyhow!("unknown model '{m}' (choose from {ALL_MODELS:?})"));
+    }
+    Ok(m.to_string())
+}
+
+/// Platform for the serving verbs (default DIANA).
+fn serve_platform(args: &Args) -> Result<Platform> {
+    match args.get("platform") {
+        Some(p) => Platform::resolve(p),
+        None => Ok(Platform::diana()),
+    }
 }
 
 /// "name 12.3%/4.5%/..." per-accelerator utilization string.
@@ -98,9 +132,37 @@ fn util_str(platform: &Platform, util: &[f64]) -> String {
         .join(" / ")
 }
 
-const COMMON_FLAGS: [&str; 7] =
-    ["model", "config", "platform", "artifacts", "results", "lambdas", "baseline"];
+// --seed is honored by every verb (build_config plumbs it to
+// data_seed); --threads only drives the serving verbs' thread pools,
+// so it lives in SERVE_FLAGS alone — a verb that would silently ignore
+// it must reject it.
+const COMMON_FLAGS: [&str; 8] =
+    ["model", "config", "platform", "artifacts", "results", "lambdas", "baseline", "seed"];
+/// The serving verbs honor only these (no --config/--lambdas/...): a
+/// flag they would silently ignore is an error, not a no-op.
+const SERVE_FLAGS: [&str; 5] = ["model", "platform", "results", "threads", "seed"];
+/// serve-report only reads a stored report; threads/seed do not apply.
+const SERVE_REPORT_FLAGS: [&str; 3] = ["model", "platform", "results"];
 const SWITCHES: [&str; 2] = ["smoke", "non-ideal-l1"];
+
+/// Switch hygiene for the serving verbs: the sweep scorer always uses
+/// the ideal-L1 simulator config, so `--non-ideal-l1` is an error (not
+/// a silent no-op that would make frontier numbers disagree with
+/// `simulate --non-ideal-l1`); `--smoke` is only meaningful where the
+/// caller says so (the serve request stream).
+fn reject_serve_switches(args: &Args, allow_smoke: bool) -> Result<()> {
+    if args.has("non-ideal-l1") {
+        return Err(anyhow!(
+            "--non-ideal-l1 is not supported by {} (the frontier is scored \
+             with the ideal-L1 simulator config)",
+            args.subcommand
+        ));
+    }
+    if !allow_smoke && args.has("smoke") {
+        return Err(anyhow!("--smoke has no effect on {}", args.subcommand));
+    }
+    Ok(())
+}
 
 fn main() {
     logging::init();
@@ -233,6 +295,56 @@ fn run() -> Result<()> {
                 println!();
             }
             Ok(())
+        }
+        "sweep" => {
+            args.expect_only(&SERVE_FLAGS)?;
+            reject_serve_switches(&args, false)?;
+            let platform = serve_platform(&args)?;
+            let model = serve_model(&args)?;
+            let results = std::path::PathBuf::from(args.get_or("results", "results"));
+            let seed = args.get_u64("seed")?.unwrap_or(1234);
+            odimo::serve::sweep_cmd(&model, &platform, &results, seed,
+                                    args.get_usize("threads")?)
+        }
+        "serve" => {
+            let mut flags = SERVE_FLAGS.to_vec();
+            flags.extend(["requests", "max-batch", "max-wait", "gap"]);
+            args.expect_only(&flags)?;
+            reject_serve_switches(&args, true)?;
+            let mut cfg = odimo::serve::ServeCfg {
+                model: serve_model(&args)?,
+                platform: serve_platform(&args)?,
+                results_dir: args.get_or("results", "results").into(),
+                threads: args.get_usize("threads")?,
+                seed: args.get_u64("seed")?.unwrap_or(1234),
+                ..Default::default()
+            };
+            if args.has("smoke") {
+                cfg.n_requests = 24;
+            }
+            if let Some(n) = args.get_usize("requests")? {
+                cfg.n_requests = n;
+            }
+            if let Some(n) = args.get_usize("max-batch")? {
+                cfg.max_batch = n;
+            }
+            if let Some(n) = args.get_u64("max-wait")? {
+                cfg.max_wait = n;
+            }
+            if let Some(n) = args.get_u64("gap")? {
+                cfg.mean_gap = n;
+            }
+            let report = odimo::serve::run_serve(&cfg)?;
+            println!("{}", report.dashboard());
+            Ok(())
+        }
+        "serve-report" => {
+            args.expect_only(&SERVE_REPORT_FLAGS)?;
+            reject_serve_switches(&args, false)?;
+            let platform = serve_platform(&args)?;
+            let model = serve_model(&args)?;
+            let results = std::path::PathBuf::from(args.get_or("results", "results"));
+            odimo::serve::report_cmd(&model, &platform.name, &results)
         }
         "platforms" => {
             args.expect_only(&[])?;

@@ -498,6 +498,37 @@ impl QuantPlan {
         })
     }
 
+    /// Stable cache key for a compiled (model, platform, mapping)
+    /// triple — the plan-cache handle: everything that changes the
+    /// compiled plan's packed weights or arena layout is folded in
+    /// (FNV-1a over the model name, the platform name, and every
+    /// per-layer channel assignment). The serve-side LRU plan cache
+    /// ([`crate::serve::batcher::PlanCache`]) uses this as its fast
+    /// lookup filter — verifying the stored mapping on every hit, since
+    /// a 64-bit hash alone cannot guarantee identity — so repeat
+    /// requests for the same mapping reuse one compiled plan.
+    pub fn cache_key(model: &str, platform: &str, mapping: &Mapping) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat(model.as_bytes());
+        eat(&[0xff]);
+        eat(platform.as_bytes());
+        eat(&[0xff]);
+        for (name, ids) in &mapping.assign {
+            eat(name.as_bytes());
+            eat(&[0xff]);
+            eat(ids);
+        }
+        h
+    }
+
     pub fn in_elems(&self) -> usize {
         self.in_elems
     }
@@ -867,5 +898,26 @@ fn exec_gap(src: &[f32], batch: usize, c: usize, hw: usize, dst: &mut [f32]) {
             let base = (b * c + ch) * hw;
             dst[b * c + ch] = src[base..base + hw].iter().sum::<f32>() / hw as f32;
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{tinycnn, DIG};
+    use crate::quant::synth_mapping_n;
+
+    #[test]
+    fn cache_key_separates_inputs() {
+        let g = tinycnn();
+        let uniform = Mapping::uniform(&g, DIG);
+        let mixed = synth_mapping_n(&g, 2, 3);
+        let k = |model: &str, plat: &str, m: &Mapping| QuantPlan::cache_key(model, plat, m);
+        // identical inputs -> identical keys (the cache-hit contract)
+        assert_eq!(k("tinycnn", "diana", &uniform), k("tinycnn", "diana", &uniform));
+        // any coordinate change -> a different key
+        assert_ne!(k("tinycnn", "diana", &uniform), k("tinycnn", "diana", &mixed));
+        assert_ne!(k("tinycnn", "diana", &uniform), k("resnet20", "diana", &uniform));
+        assert_ne!(k("tinycnn", "diana", &uniform), k("tinycnn", "mpsoc4", &uniform));
     }
 }

@@ -1,0 +1,309 @@
+//! Request queue + dynamic batcher + LRU plan cache.
+//!
+//! The [`Batcher`] coalesces requests that dispatched onto the *same*
+//! frontier mapping (same compiled plan) into batches, flushing a queue
+//! when it reaches `max_batch` requests or when its oldest request has
+//! waited `max_wait` simulated cycles. All bookkeeping is in virtual
+//! (simulated-cycle) time and iteration order is `BTreeMap`-stable, so
+//! batch composition is deterministic for a given request stream.
+//!
+//! The [`PlanCache`] keeps up to `cap` compiled [`QuantNet`] plans,
+//! keyed by [`QuantPlan::cache_key`](crate::quant::QuantPlan::cache_key)
+//! and evicted least-recently-used:
+//! a serve run touching a handful of frontier mappings compiles each
+//! plan once and replays it for every later batch (hit/miss counts and
+//! compile time feed the serve dashboard and `bench_infer`).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::Mapping;
+use crate::quant::QuantNet;
+
+use super::dispatch::Sla;
+
+/// One inference request in the closed-loop driver.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    /// Request id; doubles as the synthetic-input sample index.
+    pub id: u64,
+    /// Arrival time, simulated cycles.
+    pub arrival: u64,
+    /// The request's SLA (drives dispatch and hit-rate accounting).
+    pub sla: Sla,
+    /// Frontier index the dispatcher chose for this request.
+    pub point: usize,
+}
+
+/// A flushed batch: requests sharing one frontier mapping.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Frontier index all member requests dispatched to.
+    pub point: usize,
+    /// Virtual time the batch left the queue.
+    pub flushed_at: u64,
+    /// Member requests, in arrival order.
+    pub requests: Vec<Request>,
+}
+
+/// Dynamic same-mapping batcher (see module docs).
+pub struct Batcher {
+    max_batch: usize,
+    max_wait: u64,
+    queues: BTreeMap<usize, Vec<Request>>,
+}
+
+impl Batcher {
+    /// `max_batch` >= 1 requests per flush; `max_wait` in simulated
+    /// cycles (0 flushes every request immediately — unbatched mode).
+    pub fn new(max_batch: usize, max_wait: u64) -> Self {
+        Batcher { max_batch: max_batch.max(1), max_wait, queues: BTreeMap::new() }
+    }
+
+    /// Requests currently queued across all mappings.
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(Vec::len).sum()
+    }
+
+    /// Enqueue one request; returns the flushed batch if its queue just
+    /// reached `max_batch`.
+    pub fn push(&mut self, r: Request) -> Option<Batch> {
+        let (point, now) = (r.point, r.arrival);
+        let q = self.queues.entry(point).or_default();
+        q.push(r);
+        if q.len() >= self.max_batch {
+            return Some(self.flush(point, now));
+        }
+        None
+    }
+
+    /// Earliest flush deadline over all non-empty queues (oldest
+    /// member's arrival + `max_wait`).
+    pub fn next_deadline(&self) -> Option<u64> {
+        // saturating: max_wait = u64::MAX is a legal "never flush on
+        // wait" setting and must not wrap into an immediate deadline
+        self.queues
+            .values()
+            .filter_map(|q| q.first().map(|r| r.arrival.saturating_add(self.max_wait)))
+            .min()
+    }
+
+    /// Flush every queue whose deadline has passed at `now`, oldest
+    /// deadline first (ties in `point` order — deterministic).
+    pub fn due(&mut self, now: u64) -> Vec<Batch> {
+        let mut ripe: Vec<(u64, usize)> = self
+            .queues
+            .iter()
+            .filter_map(|(&point, q)| {
+                q.first()
+                    .map(|r| (r.arrival.saturating_add(self.max_wait), point))
+                    .filter(|&(deadline, _)| deadline <= now)
+            })
+            .collect();
+        ripe.sort_unstable();
+        ripe.into_iter().map(|(_, point)| self.flush(point, now)).collect()
+    }
+
+    /// Flush everything that remains, in `point` order.
+    pub fn drain(&mut self, now: u64) -> Vec<Batch> {
+        let points: Vec<usize> = self.queues.keys().copied().collect();
+        points.into_iter().map(|p| self.flush(p, now)).collect()
+    }
+
+    fn flush(&mut self, point: usize, now: u64) -> Batch {
+        let requests = self.queues.remove(&point).unwrap_or_default();
+        Batch { point, flushed_at: now, requests }
+    }
+}
+
+// ---- LRU plan cache ---------------------------------------------------
+
+struct CacheEntry<'g> {
+    key: u64,
+    /// The mapping the plan was compiled for: verified on every hit so
+    /// a (astronomically unlikely) 64-bit hash collision can never hand
+    /// back the wrong compiled plan — the hash is a fast filter, the
+    /// mapping is the identity.
+    mapping: Mapping,
+    last_used: u64,
+    net: QuantNet<'g>,
+}
+
+/// LRU cache of compiled plans, keyed by
+/// [`QuantPlan::cache_key`](crate::quant::QuantPlan::cache_key).
+pub struct PlanCache<'g> {
+    cap: usize,
+    tick: u64,
+    entries: Vec<CacheEntry<'g>>,
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to compile.
+    pub misses: u64,
+    /// Total nanoseconds spent compiling on misses.
+    pub compile_ns: u64,
+}
+
+impl<'g> PlanCache<'g> {
+    /// Cache holding at most `cap` compiled plans (>= 1).
+    pub fn new(cap: usize) -> Self {
+        PlanCache {
+            cap: cap.max(1),
+            tick: 0,
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            compile_ns: 0,
+        }
+    }
+
+    /// Compiled plans currently resident.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no plan is resident yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fetch the plan for (`key`, `mapping`), compiling (and caching)
+    /// it on a miss; evicts the least-recently-used entry when full. A
+    /// hit requires the stored mapping to match, not just the hash.
+    pub fn get_or_compile<F>(
+        &mut self,
+        key: u64,
+        mapping: &Mapping,
+        compile: F,
+    ) -> Result<&QuantNet<'g>>
+    where
+        F: FnOnce() -> Result<QuantNet<'g>>,
+    {
+        self.tick += 1;
+        if let Some(i) = self
+            .entries
+            .iter()
+            .position(|e| e.key == key && e.mapping == *mapping)
+        {
+            self.hits += 1;
+            self.entries[i].last_used = self.tick;
+            return Ok(&self.entries[i].net);
+        }
+        self.misses += 1;
+        let t0 = std::time::Instant::now();
+        let net = compile()?;
+        self.compile_ns += t0.elapsed().as_nanos() as u64;
+        if self.entries.len() >= self.cap {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("cache is non-empty when full");
+            self.entries.swap_remove(lru);
+        }
+        let tick = self.tick;
+        self.entries.push(CacheEntry { key, mapping: mapping.clone(), last_used: tick, net });
+        Ok(&self.entries.last().expect("just pushed").net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::Platform;
+    use crate::model::tinycnn;
+    use crate::quant::{synth_mapping_n, synth_params, ParamSet, QuantPlan};
+
+    fn req(id: u64, arrival: u64, point: usize) -> Request {
+        Request { id, arrival, sla: Sla::MinEnergy, point }
+    }
+
+    #[test]
+    fn full_queue_flushes_on_push() {
+        let mut b = Batcher::new(2, 1_000);
+        assert!(b.push(req(0, 10, 3)).is_none());
+        let batch = b.push(req(1, 20, 3)).expect("second push fills the batch");
+        assert_eq!(batch.point, 3);
+        assert_eq!(batch.flushed_at, 20);
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn distinct_mappings_never_share_a_batch() {
+        let mut b = Batcher::new(2, 1_000);
+        assert!(b.push(req(0, 10, 1)).is_none());
+        assert!(b.push(req(1, 11, 2)).is_none());
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.next_deadline(), Some(1_010));
+    }
+
+    #[test]
+    fn due_flushes_expired_queues_only() {
+        let mut b = Batcher::new(8, 100);
+        b.push(req(0, 10, 1));
+        b.push(req(1, 500, 2));
+        let out = b.due(110);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].point, 1);
+        assert_eq!(out[0].flushed_at, 110);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn drain_empties_everything() {
+        let mut b = Batcher::new(8, 100);
+        b.push(req(0, 10, 2));
+        b.push(req(1, 20, 1));
+        let out = b.drain(999);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].point, 1, "drain flushes in point order");
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn plan_cache_hits_and_lru_eviction() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let (names, values) = synth_params(&g, 3);
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+        let maps: Vec<_> = (0..3u64).map(|s| synth_mapping_n(&g, 2, s)).collect();
+        let keys: Vec<u64> = maps
+            .iter()
+            .map(|m| QuantPlan::cache_key(&g.name, &p.name, m))
+            .collect();
+        let mut cache = PlanCache::new(2);
+        for (k, m) in keys.iter().zip(&maps) {
+            cache
+                .get_or_compile(*k, m, || QuantNet::compile_params(&params, &g, m, &p))
+                .unwrap();
+        }
+        assert_eq!((cache.hits, cache.misses), (0, 3));
+        assert_eq!(cache.len(), 2, "cap 2 evicted the LRU entry");
+        // keys[1] and keys[2] are resident; keys[0] was evicted
+        cache
+            .get_or_compile(keys[2], &maps[2], || {
+                QuantNet::compile_params(&params, &g, &maps[2], &p)
+            })
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 3));
+        cache
+            .get_or_compile(keys[0], &maps[0], || {
+                QuantNet::compile_params(&params, &g, &maps[0], &p)
+            })
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 4));
+        assert!(cache.compile_ns > 0);
+        // identity is the mapping, not the hash: the same key with a
+        // different mapping must be treated as a miss, never a hit
+        cache
+            .get_or_compile(keys[0], &maps[1], || {
+                QuantNet::compile_params(&params, &g, &maps[1], &p)
+            })
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 5));
+    }
+}

@@ -1,0 +1,158 @@
+//! Deadline-aware dispatcher: map one request's SLA onto a frontier
+//! point.
+//!
+//! SLA semantics (documented in EXPERIMENTS.md §Serve):
+//!
+//!   * [`Sla::LatencyBudget`] — the request carries a latency budget in
+//!     simulated cycles. The dispatcher picks the *cheapest* (lowest
+//!     simulated energy) frontier mapping whose per-inference compute
+//!     latency fits the budget; ties prefer the faster mapping, then
+//!     the earlier frontier index. If no frontier point fits, it falls
+//!     back to the *fastest* mapping and flags the SLA miss.
+//!   * [`Sla::MinEnergy`] — no deadline; the globally cheapest mapping
+//!     wins (ties to the faster one).
+//!
+//! Dispatch is a pure function of (frontier, SLA): per-request mapping
+//! choices are fully deterministic, which is what makes serve runs
+//! reproducible end to end.
+
+use super::sweep::FrontierPoint;
+
+/// One request's service-level agreement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sla {
+    /// Finish within this many simulated cycles (compute-latency bound
+    /// at planning time; end-to-end accounting happens in metrics).
+    LatencyBudget(u64),
+    /// No deadline — minimize simulated energy.
+    MinEnergy,
+}
+
+/// A dispatch outcome: the chosen frontier index, and whether the
+/// choice satisfies the SLA at planning time (`false` means the
+/// fastest-mapping fallback was taken and the budget is already
+/// infeasible before any queueing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    /// Index into the frontier passed to [`dispatch`].
+    pub point: usize,
+    /// Planning-time SLA feasibility.
+    pub sla_met: bool,
+}
+
+/// Index of the cheapest point (min energy, ties to lower latency then
+/// lower index) among `idx`; `None` when `idx` is empty.
+fn cheapest(frontier: &[FrontierPoint], idx: impl Iterator<Item = usize>) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for i in idx {
+        best = Some(match best {
+            None => i,
+            Some(b) => {
+                let (pb, pi) = (&frontier[b], &frontier[i]);
+                if pi.energy_uj < pb.energy_uj
+                    || (pi.energy_uj == pb.energy_uj && pi.cycles < pb.cycles)
+                {
+                    i
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    best
+}
+
+/// Index of the fastest point (min cycles, ties to lower energy then
+/// lower index); `None` when the frontier is empty.
+fn fastest(frontier: &[FrontierPoint]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, p) in frontier.iter().enumerate() {
+        best = Some(match best {
+            None => i,
+            Some(b) => {
+                let pb = &frontier[b];
+                if p.cycles < pb.cycles
+                    || (p.cycles == pb.cycles && p.energy_uj < pb.energy_uj)
+                {
+                    i
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    best
+}
+
+/// Select the frontier mapping for one SLA (module docs give the full
+/// semantics). Returns `None` only on an empty frontier.
+pub fn dispatch(frontier: &[FrontierPoint], sla: Sla) -> Option<Decision> {
+    match sla {
+        Sla::MinEnergy => {
+            cheapest(frontier, 0..frontier.len()).map(|i| Decision { point: i, sla_met: true })
+        }
+        Sla::LatencyBudget(budget) => {
+            let feasible =
+                (0..frontier.len()).filter(|&i| frontier[i].cycles <= budget);
+            if let Some(i) = cheapest(frontier, feasible) {
+                return Some(Decision { point: i, sla_met: true });
+            }
+            fastest(frontier).map(|i| Decision { point: i, sla_met: false })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Mapping;
+    use std::collections::BTreeMap;
+
+    fn pt(cycles: u64, energy_uj: f64) -> FrontierPoint {
+        FrontierPoint {
+            label: format!("{cycles}c"),
+            mapping: Mapping { assign: BTreeMap::new() },
+            cycles,
+            latency_ms: cycles as f64 * 1e-6,
+            energy_uj,
+            acc_proxy: 0.5,
+        }
+    }
+
+    #[test]
+    fn budget_picks_cheapest_feasible() {
+        let f = vec![pt(100, 9.0), pt(200, 4.0), pt(400, 2.0)];
+        let d = dispatch(&f, Sla::LatencyBudget(250)).unwrap();
+        assert_eq!(d.point, 1, "cheapest among the two feasible points");
+        assert!(d.sla_met);
+    }
+
+    #[test]
+    fn infeasible_budget_falls_back_to_fastest() {
+        let f = vec![pt(100, 9.0), pt(200, 4.0)];
+        let d = dispatch(&f, Sla::LatencyBudget(50)).unwrap();
+        assert_eq!(d.point, 0, "fastest mapping under an infeasible budget");
+        assert!(!d.sla_met, "the miss must be flagged");
+    }
+
+    #[test]
+    fn min_energy_ignores_latency() {
+        let f = vec![pt(100, 9.0), pt(400, 2.0)];
+        let d = dispatch(&f, Sla::MinEnergy).unwrap();
+        assert_eq!(d.point, 1);
+        assert!(d.sla_met);
+    }
+
+    #[test]
+    fn energy_ties_prefer_faster_then_earlier() {
+        let f = vec![pt(300, 4.0), pt(200, 4.0), pt(200, 4.0)];
+        let d = dispatch(&f, Sla::MinEnergy).unwrap();
+        assert_eq!(d.point, 1, "tie broken to lower latency, then lower index");
+    }
+
+    #[test]
+    fn empty_frontier_is_none() {
+        assert_eq!(dispatch(&[], Sla::MinEnergy), None);
+        assert_eq!(dispatch(&[], Sla::LatencyBudget(1)), None);
+    }
+}

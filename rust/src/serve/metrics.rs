@@ -1,0 +1,429 @@
+//! Serve-side accounting: per-request outcomes, per-mapping
+//! aggregation, and the `serve-report` dashboard.
+//!
+//! The collector ([`ServeMetrics`]) records one [`RequestOutcome`] per
+//! served request in virtual (simulated-cycle) time plus wall-clock
+//! engine counters, then folds everything into a [`ServeReport`]: one
+//! row per frontier mapping (requests, mean batch size, p50/p95
+//! queue+compute latency, simulated energy, SLA hit-rate) and run-level
+//! totals (throughput over engine wall time, plan-cache hits/misses and
+//! compile time, virtual makespan). Reports serialize through the
+//! versioned store envelope so `serve-report` can render a dashboard
+//! from a past run without re-serving.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::exp::store;
+use crate::util::json::Json;
+
+/// Bump when the serve-report layout changes; [`load_report`] refuses
+/// files written under any other version.
+pub const SERVE_SCHEMA: u32 = 1;
+
+/// One served request, in virtual time.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestOutcome {
+    /// Request id.
+    pub id: u64,
+    /// Frontier index the request was served under.
+    pub point: usize,
+    /// Cycles spent queued (batching wait + device contention).
+    pub queue_cycles: u64,
+    /// Cycles of the batch computation that served the request.
+    pub compute_cycles: u64,
+    /// Whether queue + compute latency met the request's SLA.
+    pub sla_met: bool,
+    /// Size of the batch that carried the request.
+    pub batch_size: usize,
+    /// Simulated energy attributed to the request, uJ.
+    pub energy_uj: f64,
+}
+
+/// Collector filled by the closed-loop serve driver.
+pub struct ServeMetrics {
+    outcomes: Vec<RequestOutcome>,
+    batches: usize,
+    engine_wall_ns: u64,
+    /// Plan-cache counters, copied from the cache at the end of a run.
+    pub plan_hits: u64,
+    /// See [`ServeMetrics::plan_hits`].
+    pub plan_misses: u64,
+    /// Nanoseconds spent compiling plans on cache misses.
+    pub plan_compile_ns: u64,
+    /// Virtual completion time of the last batch (makespan).
+    pub end_cycle: u64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        ServeMetrics {
+            outcomes: Vec::new(),
+            batches: 0,
+            engine_wall_ns: 0,
+            plan_hits: 0,
+            plan_misses: 0,
+            plan_compile_ns: 0,
+            end_cycle: 0,
+        }
+    }
+
+    /// Record one executed batch's wall-clock engine time.
+    pub fn record_batch(&mut self, wall_ns: u64) {
+        self.batches += 1;
+        self.engine_wall_ns += wall_ns;
+    }
+
+    /// Record one served request.
+    pub fn record(&mut self, o: RequestOutcome) {
+        self.outcomes.push(o);
+    }
+
+    /// Requests recorded so far.
+    pub fn requests(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Fold the collected outcomes into a renderable report. `labels`
+    /// are the frontier point labels (row names); `f_clk_hz` converts
+    /// cycles to milliseconds for the dashboard.
+    pub fn report(
+        &self,
+        model: &str,
+        platform: &str,
+        threads: usize,
+        labels: &[String],
+        f_clk_hz: f64,
+    ) -> ServeReport {
+        let to_ms = |cycles: u64| cycles as f64 / f_clk_hz * 1e3;
+        let mut rows: Vec<PointRow> = Vec::new();
+        for (point, label) in labels.iter().enumerate() {
+            let outs: Vec<&RequestOutcome> =
+                self.outcomes.iter().filter(|o| o.point == point).collect();
+            if outs.is_empty() {
+                continue;
+            }
+            let mut lats: Vec<u64> =
+                outs.iter().map(|o| o.queue_cycles + o.compute_cycles).collect();
+            lats.sort_unstable();
+            let batch_sum: usize = outs.iter().map(|o| o.batch_size).sum();
+            rows.push(PointRow {
+                label: label.clone(),
+                requests: outs.len(),
+                sla_hits: outs.iter().filter(|o| o.sla_met).count(),
+                mean_batch: batch_sum as f64 / outs.len() as f64,
+                p50_ms: to_ms(percentile(&lats, 50)),
+                p95_ms: to_ms(percentile(&lats, 95)),
+                energy_uj: outs.iter().map(|o| o.energy_uj).sum(),
+            });
+        }
+        let mut all_lats: Vec<u64> = self
+            .outcomes
+            .iter()
+            .map(|o| o.queue_cycles + o.compute_cycles)
+            .collect();
+        all_lats.sort_unstable();
+        let n = self.outcomes.len();
+        let wall_s = self.engine_wall_ns as f64 * 1e-9;
+        ServeReport {
+            model: model.to_string(),
+            platform: platform.to_string(),
+            threads,
+            rows,
+            total_requests: n,
+            total_batches: self.batches,
+            p50_ms: to_ms(percentile(&all_lats, 50)),
+            p95_ms: to_ms(percentile(&all_lats, 95)),
+            sla_hit_rate: if n == 0 {
+                1.0
+            } else {
+                self.outcomes.iter().filter(|o| o.sla_met).count() as f64 / n as f64
+            },
+            throughput_img_s: if wall_s > 0.0 { n as f64 / wall_s } else { 0.0 },
+            sim_energy_uj: self.outcomes.iter().map(|o| o.energy_uj).sum(),
+            plan_hits: self.plan_hits,
+            plan_misses: self.plan_misses,
+            plan_compile_ms: self.plan_compile_ns as f64 * 1e-6,
+            makespan_ms: to_ms(self.end_cycle),
+        }
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `p`-th percentile of an ascending-sorted slice (nearest-rank).
+fn percentile(sorted: &[u64], p: usize) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (p * sorted.len()).div_ceil(100).max(1);
+    sorted[rank - 1]
+}
+
+/// One dashboard row: aggregates for a single frontier mapping.
+#[derive(Clone, Debug)]
+pub struct PointRow {
+    /// Frontier point label.
+    pub label: String,
+    /// Requests served under this mapping.
+    pub requests: usize,
+    /// Requests whose end-to-end latency met their SLA.
+    pub sla_hits: usize,
+    /// Mean batch size over this mapping's requests.
+    pub mean_batch: f64,
+    /// Median queue+compute latency, ms.
+    pub p50_ms: f64,
+    /// 95th-percentile queue+compute latency, ms.
+    pub p95_ms: f64,
+    /// Total simulated energy, uJ.
+    pub energy_uj: f64,
+}
+
+/// A finished serve run, ready to render or persist.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Model served.
+    pub model: String,
+    /// Platform served on.
+    pub platform: String,
+    /// Worker threads the engine ran with.
+    pub threads: usize,
+    /// Per-mapping rows (only mappings that served requests).
+    pub rows: Vec<PointRow>,
+    /// Requests served.
+    pub total_requests: usize,
+    /// Batches executed.
+    pub total_batches: usize,
+    /// Run-level median queue+compute latency, ms.
+    pub p50_ms: f64,
+    /// Run-level p95 queue+compute latency, ms.
+    pub p95_ms: f64,
+    /// Fraction of requests that met their SLA.
+    pub sla_hit_rate: f64,
+    /// Engine throughput over wall-clock compute time, img/s.
+    pub throughput_img_s: f64,
+    /// Total simulated energy, uJ.
+    pub sim_energy_uj: f64,
+    /// Plan-cache lookups served without compiling.
+    pub plan_hits: u64,
+    /// Plan-cache lookups that compiled.
+    pub plan_misses: u64,
+    /// Wall-clock spent compiling plans, ms.
+    pub plan_compile_ms: f64,
+    /// Virtual completion time of the run, ms.
+    pub makespan_ms: f64,
+}
+
+impl ServeReport {
+    /// Render the `serve-report` dashboard (markdown).
+    pub fn dashboard(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "# serve report — {} on {} ({} threads)\n",
+            self.model, self.platform, self.threads
+        );
+        let _ = writeln!(
+            s,
+            "requests {} | batches {} | throughput {:.1} img/s (engine wall) | \
+             SLA hit-rate {:.1}%",
+            self.total_requests,
+            self.total_batches,
+            self.throughput_img_s,
+            100.0 * self.sla_hit_rate
+        );
+        let _ = writeln!(
+            s,
+            "queue+compute latency p50 {:.3} ms | p95 {:.3} ms | simulated energy {:.1} uJ | \
+             makespan {:.3} ms",
+            self.p50_ms, self.p95_ms, self.sim_energy_uj, self.makespan_ms
+        );
+        let _ = writeln!(
+            s,
+            "plan cache: {} hits / {} misses | compile {:.2} ms\n",
+            self.plan_hits, self.plan_misses, self.plan_compile_ms
+        );
+        let _ = writeln!(
+            s,
+            "| mapping | req | mean batch | p50 [ms] | p95 [ms] | E [uJ] | SLA |"
+        );
+        let _ = writeln!(
+            s,
+            "|---------|-----|------------|----------|----------|--------|-----|"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {:.2} | {:.3} | {:.3} | {:.1} | {:.1}% |",
+                r.label,
+                r.requests,
+                r.mean_batch,
+                r.p50_ms,
+                r.p95_ms,
+                r.energy_uj,
+                100.0 * r.sla_hits as f64 / r.requests.max(1) as f64
+            );
+        }
+        s
+    }
+
+    fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("label", Json::str(r.label.clone())),
+                    ("requests", Json::num(r.requests as f64)),
+                    ("sla_hits", Json::num(r.sla_hits as f64)),
+                    ("mean_batch", Json::num(r.mean_batch)),
+                    ("p50_ms", Json::num(r.p50_ms)),
+                    ("p95_ms", Json::num(r.p95_ms)),
+                    ("energy_uj", Json::num(r.energy_uj)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("platform", Json::str(self.platform.clone())),
+            ("threads", Json::num(self.threads as f64)),
+            ("rows", Json::Arr(rows)),
+            ("total_requests", Json::num(self.total_requests as f64)),
+            ("total_batches", Json::num(self.total_batches as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("sla_hit_rate", Json::num(self.sla_hit_rate)),
+            ("throughput_img_s", Json::num(self.throughput_img_s)),
+            ("sim_energy_uj", Json::num(self.sim_energy_uj)),
+            ("plan_hits", Json::num(self.plan_hits as f64)),
+            ("plan_misses", Json::num(self.plan_misses as f64)),
+            ("plan_compile_ms", Json::num(self.plan_compile_ms)),
+            ("makespan_ms", Json::num(self.makespan_ms)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ServeReport> {
+        let rows = v
+            .req("rows")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("serve report: rows must be an array"))?
+            .iter()
+            .map(|r| -> Result<PointRow> {
+                Ok(PointRow {
+                    label: r.req("label")?.as_str().unwrap_or("").to_string(),
+                    requests: r.req_f64("requests")? as usize,
+                    sla_hits: r.req_f64("sla_hits")? as usize,
+                    mean_batch: r.req_f64("mean_batch")?,
+                    p50_ms: r.req_f64("p50_ms")?,
+                    p95_ms: r.req_f64("p95_ms")?,
+                    energy_uj: r.req_f64("energy_uj")?,
+                })
+            })
+            .collect::<Result<Vec<PointRow>>>()?;
+        Ok(ServeReport {
+            model: v.req("model")?.as_str().unwrap_or("").to_string(),
+            platform: v.req("platform")?.as_str().unwrap_or("").to_string(),
+            threads: v.req_f64("threads")? as usize,
+            rows,
+            total_requests: v.req_f64("total_requests")? as usize,
+            total_batches: v.req_f64("total_batches")? as usize,
+            p50_ms: v.req_f64("p50_ms")?,
+            p95_ms: v.req_f64("p95_ms")?,
+            sla_hit_rate: v.req_f64("sla_hit_rate")?,
+            throughput_img_s: v.req_f64("throughput_img_s")?,
+            sim_energy_uj: v.req_f64("sim_energy_uj")?,
+            plan_hits: v.req_f64("plan_hits")? as u64,
+            plan_misses: v.req_f64("plan_misses")? as u64,
+            plan_compile_ms: v.req_f64("plan_compile_ms")?,
+            makespan_ms: v.req_f64("makespan_ms")?,
+        })
+    }
+}
+
+/// Persist a report atomically under the versioned envelope.
+pub fn save_report(path: &Path, report: &ServeReport) -> Result<()> {
+    store::save_versioned(path, "serve_report", SERVE_SCHEMA, report.to_json())
+}
+
+/// Load a persisted report (clear error on kind/schema mismatch).
+pub fn load_report(path: &Path) -> Result<ServeReport> {
+    ServeReport::from_json(&store::load_versioned(path, "serve_report", SERVE_SCHEMA)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(point: usize, queue: u64, compute: u64, met: bool) -> RequestOutcome {
+        RequestOutcome {
+            id: 0,
+            point,
+            queue_cycles: queue,
+            compute_cycles: compute,
+            sla_met: met,
+            batch_size: 2,
+            energy_uj: 1.5,
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50), 50);
+        assert_eq!(percentile(&v, 95), 95);
+        assert_eq!(percentile(&v, 100), 100);
+        assert_eq!(percentile(&[7], 95), 7);
+        assert_eq!(percentile(&[], 50), 0);
+    }
+
+    #[test]
+    fn report_aggregates_per_point() {
+        let mut m = ServeMetrics::new();
+        m.record(outcome(0, 10, 100, true));
+        m.record(outcome(0, 30, 100, false));
+        m.record(outcome(1, 0, 50, true));
+        m.record_batch(1_000_000);
+        m.end_cycle = 500;
+        let labels = vec!["a".to_string(), "b".to_string()];
+        let rep = m.report("tinycnn", "diana", 2, &labels, 1e6);
+        assert_eq!(rep.rows.len(), 2);
+        assert_eq!(rep.rows[0].requests, 2);
+        assert_eq!(rep.rows[0].sla_hits, 1);
+        assert_eq!(rep.rows[1].requests, 1);
+        assert_eq!(rep.total_requests, 3);
+        assert!((rep.sla_hit_rate - 2.0 / 3.0).abs() < 1e-12);
+        // at 1 MHz, 110 cycles = 0.11 ms is the run-level median
+        assert!((rep.p50_ms - 0.11).abs() < 1e-9, "p50 {}", rep.p50_ms);
+        let dash = rep.dashboard();
+        assert!(dash.contains("| a |") && dash.contains("| b |"), "{dash}");
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let mut m = ServeMetrics::new();
+        m.record(outcome(0, 5, 20, true));
+        m.record_batch(2_000);
+        m.plan_hits = 3;
+        m.plan_misses = 1;
+        m.plan_compile_ns = 4_000_000;
+        m.end_cycle = 25;
+        let rep = m.report("tinycnn", "mpsoc4", 4, &["x".to_string()], 5e8);
+        let dir = std::env::temp_dir().join("odimo_serve_report");
+        let path = dir.join("report.json");
+        save_report(&path, &rep).unwrap();
+        let back = load_report(&path).unwrap();
+        assert_eq!(back.model, "tinycnn");
+        assert_eq!(back.platform, "mpsoc4");
+        assert_eq!(back.rows.len(), 1);
+        assert_eq!(back.rows[0].label, "x");
+        assert_eq!(back.plan_hits, 3);
+        assert!((back.p95_ms - rep.p95_ms).abs() < 1e-12);
+        assert_eq!(back.dashboard(), rep.dashboard());
+    }
+}

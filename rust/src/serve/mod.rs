@@ -1,0 +1,321 @@
+//! SLA-aware batched inference service over a cached Pareto frontier.
+//!
+//! The serving stack (docs/ARCHITECTURE.md §Serve):
+//!
+//! ```text
+//!  sweep.rs     candidate mappings -> simulator + engine scores
+//!               -> Pareto frontier -> versioned JSON cache
+//!  dispatch.rs  request SLA -> cheapest frontier mapping in budget
+//!  batcher.rs   per-mapping queues -> dynamic batches -> LRU plan cache
+//!  metrics.rs   per-request outcomes -> serve-report dashboard
+//! ```
+//!
+//! [`run_serve`] is the closed-loop driver behind the CLI `serve` verb:
+//! it pumps a seeded synthetic request stream (arrivals, SLAs and
+//! inputs all derived from one seed) through dispatch, the batcher and
+//! the quantized engine, advancing a virtual clock in simulated cycles
+//! while the engine executes each batch for real on the thread pool.
+//! Everything except wall-clock throughput is deterministic for a given
+//! (model, platform, seed, batching config).
+
+pub mod batcher;
+pub mod dispatch;
+pub mod metrics;
+pub mod sweep;
+
+pub use dispatch::{dispatch, Decision, Sla};
+pub use metrics::{ServeMetrics, ServeReport};
+pub use sweep::{FrontierPoint, SweepCfg};
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::synth::gen_sample;
+use crate::hw::Platform;
+use crate::model::Graph;
+use crate::quant::{synth_params_on, ParamSet, QuantNet, QuantPlan};
+use crate::util::pool::ThreadPool;
+use crate::util::prng::Pcg32;
+
+use batcher::{Batch, Batcher, PlanCache, Request};
+use metrics::RequestOutcome;
+
+/// Closed-loop serve configuration (all knobs CLI-settable).
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// Model to serve (`tinycnn` by default: the closed loop runs the
+    /// real engine per batch, and debug builds should stay snappy).
+    pub model: String,
+    /// Deployment platform.
+    pub platform: Platform,
+    /// Directory holding the frontier cache and the serve report.
+    pub results_dir: PathBuf,
+    /// Requests in the synthetic stream.
+    pub n_requests: usize,
+    /// Batcher flush threshold (1 = unbatched).
+    pub max_batch: usize,
+    /// Batcher wait bound, simulated cycles.
+    pub max_wait: u64,
+    /// Mean inter-arrival gap, simulated cycles.
+    pub mean_gap: u64,
+    /// Fixed per-batch launch overhead, simulated cycles (what dynamic
+    /// batching amortizes on the virtual timeline).
+    pub launch_cycles: u64,
+    /// Worker threads (`None` = machine default).
+    pub threads: Option<usize>,
+    /// Seed for arrivals, SLAs, parameters and inputs — and for the
+    /// sweep: `run_serve` forces `sweep.seed = seed` so the frontier is
+    /// always scored under the same parameters it is served with.
+    pub seed: u64,
+    /// LRU plan-cache capacity.
+    pub plan_cache_cap: usize,
+    /// Sweep knobs used when the frontier cache is cold (`sweep.seed`
+    /// is overridden by [`ServeCfg::seed`], see above).
+    pub sweep: SweepCfg,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            model: "tinycnn".into(),
+            platform: Platform::diana(),
+            results_dir: PathBuf::from("results"),
+            n_requests: 96,
+            max_batch: 8,
+            max_wait: 60_000,
+            mean_gap: 20_000,
+            launch_cycles: 10_000,
+            threads: None,
+            seed: 1234,
+            plan_cache_cap: 4,
+            sweep: SweepCfg::default(),
+        }
+    }
+}
+
+/// Report path for a (model, platform) serve run under `results_dir`.
+pub fn report_path(results_dir: &Path, model: &str, platform: &str) -> PathBuf {
+    results_dir.join(format!("serve_{model}_{platform}.json"))
+}
+
+/// Seeded synthetic request stream: arrivals with mean gap
+/// `cfg.mean_gap`, ~15% min-energy SLAs, the rest latency budgets drawn
+/// around the frontier's own latency range (so some are infeasible by
+/// construction and exercise the fallback path). Dispatch decisions are
+/// folded in immediately — they depend only on (frontier, SLA).
+fn synth_requests(cfg: &ServeCfg, frontier: &[FrontierPoint]) -> Vec<Request> {
+    let min_cyc = frontier.iter().map(|p| p.cycles).min().unwrap_or(0);
+    let max_cyc = frontier.iter().map(|p| p.cycles).max().unwrap_or(0);
+    let lo = (min_cyc as f64 * 0.8) as u64;
+    let hi = (max_cyc + cfg.launch_cycles) as f64 * 1.6;
+    let mut rng = Pcg32::new(cfg.seed, 101);
+    let mut t = 0u64;
+    let mut reqs = Vec::with_capacity(cfg.n_requests);
+    for id in 0..cfg.n_requests as u64 {
+        t += 1 + (rng.next_f32() as f64 * 2.0 * cfg.mean_gap as f64) as u64;
+        let sla = if rng.next_f32() < 0.15 {
+            Sla::MinEnergy
+        } else {
+            let u = rng.next_f32() as f64;
+            Sla::LatencyBudget(lo + (u * (hi - lo as f64).max(1.0)) as u64)
+        };
+        let d = dispatch(frontier, sla).expect("non-empty frontier");
+        reqs.push(Request { id, arrival: t, sla, point: d.point });
+    }
+    reqs
+}
+
+/// Execute one flushed batch: compile-or-fetch the plan, run the real
+/// engine on the pool, then advance the virtual device clock and record
+/// every member request's outcome.
+#[allow(clippy::too_many_arguments)]
+fn exec_batch<'g>(
+    batch: &Batch,
+    graph: &'g Graph,
+    params: &ParamSet<'_>,
+    frontier: &[FrontierPoint],
+    cfg: &ServeCfg,
+    pool: &ThreadPool,
+    cache: &mut PlanCache<'g>,
+    stats: &mut ServeMetrics,
+    device_free: &mut u64,
+) -> Result<()> {
+    let fp = &frontier[batch.point];
+    let bsz = batch.requests.len();
+    let (c, h, w) = graph.input_shape;
+    let mut x = Vec::with_capacity(bsz * c * h * w);
+    for r in &batch.requests {
+        let cls = (r.id % graph.classes as u64) as u32;
+        x.extend_from_slice(&gen_sample(cfg.seed, 1, r.id, cls, h, w));
+    }
+    let key = QuantPlan::cache_key(&graph.name, &cfg.platform.name, &fp.mapping);
+    // engine wall time excludes plan compilation: compile cost is
+    // tracked separately by the cache (and reported as its own
+    // dashboard line), so img/s measures steady-state compute only
+    let compile_before = cache.compile_ns;
+    let t0 = Instant::now();
+    {
+        let net = cache.get_or_compile(key, &fp.mapping, || {
+            QuantNet::compile_params(params, graph, &fp.mapping, &cfg.platform)
+        })?;
+        let y = net.forward_pool(&x, bsz, pool)?;
+        std::hint::black_box(&y);
+    }
+    let wall = t0.elapsed().as_nanos() as u64;
+    stats.record_batch(wall.saturating_sub(cache.compile_ns - compile_before));
+
+    let start = batch.flushed_at.max(*device_free);
+    let compute = cfg.launch_cycles + fp.cycles * bsz as u64;
+    let done = start + compute;
+    *device_free = done;
+    for r in &batch.requests {
+        let total = done - r.arrival;
+        let met = match r.sla {
+            Sla::MinEnergy => true,
+            Sla::LatencyBudget(b) => total <= b,
+        };
+        stats.record(RequestOutcome {
+            id: r.id,
+            point: batch.point,
+            queue_cycles: start - r.arrival,
+            compute_cycles: compute,
+            sla_met: met,
+            batch_size: bsz,
+            energy_uj: fp.energy_uj,
+        });
+    }
+    Ok(())
+}
+
+/// Run the closed loop end to end and persist the report. Returns the
+/// report so callers (CLI, tests, benches) can render or inspect it.
+pub fn run_serve(cfg: &ServeCfg) -> Result<ServeReport> {
+    let graph = crate::model::build(&cfg.model)?;
+    let pool = match cfg.threads {
+        Some(n) => ThreadPool::new(n),
+        None => ThreadPool::with_default_size(),
+    };
+    // one seed rules the whole run: the frontier must be swept under
+    // the same synthetic parameters the engine serves with, so the
+    // sweep seed is always derived from cfg.seed, never set separately
+    let sweep_cfg = SweepCfg { seed: cfg.seed, ..cfg.sweep };
+    let (frontier, cache_hit) =
+        sweep::load_or_sweep(&cfg.results_dir, &graph, &cfg.platform, &sweep_cfg, &pool)?;
+    if frontier.is_empty() {
+        return Err(anyhow!("empty frontier for {} on {}", graph.name, cfg.platform.name));
+    }
+    println!(
+        "serve: frontier {} ({} points, {})",
+        sweep::frontier_path(&cfg.results_dir, &graph.name, &cfg.platform.name).display(),
+        frontier.len(),
+        if cache_hit { "cache hit" } else { "swept fresh" }
+    );
+
+    let (names, values) = synth_params_on(&graph, &cfg.platform, cfg.seed);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let reqs = synth_requests(cfg, &frontier);
+    let mut batcher = Batcher::new(cfg.max_batch, cfg.max_wait);
+    let mut cache = PlanCache::new(cfg.plan_cache_cap);
+    let mut stats = ServeMetrics::new();
+    let mut device_free = 0u64;
+
+    // virtual-time event loop: interleave arrivals with queue-deadline
+    // flushes; once arrivals are exhausted the tail drains immediately
+    // at the final arrival time (the driver knows the stream ended —
+    // waiting out residual deadlines would only inflate queue time,
+    // and a saturated never-flush deadline must not reach the clock)
+    let mut i = 0usize;
+    while i < reqs.len() || batcher.pending() > 0 {
+        let next_arrival = reqs.get(i).map(|r| r.arrival);
+        let next_deadline = batcher.next_deadline();
+        let take_arrival = match (next_arrival, next_deadline) {
+            (Some(a), Some(d)) => a <= d,
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if take_arrival {
+            let r = reqs[i];
+            i += 1;
+            if let Some(b) = batcher.push(r) {
+                exec_batch(&b, &graph, &params, &frontier, cfg, &pool, &mut cache,
+                           &mut stats, &mut device_free)?;
+            }
+        } else if next_arrival.is_some() {
+            let d = next_deadline.expect("pending queue has a deadline");
+            for b in batcher.due(d) {
+                exec_batch(&b, &graph, &params, &frontier, cfg, &pool, &mut cache,
+                           &mut stats, &mut device_free)?;
+            }
+        } else {
+            let now = reqs.last().map(|r| r.arrival).unwrap_or(0);
+            for b in batcher.drain(now) {
+                exec_batch(&b, &graph, &params, &frontier, cfg, &pool, &mut cache,
+                           &mut stats, &mut device_free)?;
+            }
+        }
+    }
+
+    stats.plan_hits = cache.hits;
+    stats.plan_misses = cache.misses;
+    stats.plan_compile_ns = cache.compile_ns;
+    stats.end_cycle = device_free;
+    let labels: Vec<String> = frontier.iter().map(|p| p.label.clone()).collect();
+    let report = stats.report(
+        &graph.name,
+        &cfg.platform.name,
+        pool.threads(),
+        &labels,
+        cfg.platform.f_clk_hz,
+    );
+    let path = report_path(&cfg.results_dir, &graph.name, &cfg.platform.name);
+    metrics::save_report(&path, &report)?;
+    println!("serve: report written to {}", path.display());
+    Ok(report)
+}
+
+/// CLI `sweep` verb: build (or load) the frontier and print it.
+pub fn sweep_cmd(
+    model: &str,
+    platform: &Platform,
+    results_dir: &Path,
+    seed: u64,
+    threads: Option<usize>,
+) -> Result<()> {
+    let graph = crate::model::build(model)?;
+    let pool = match threads {
+        Some(n) => ThreadPool::new(n),
+        None => ThreadPool::with_default_size(),
+    };
+    let cfg = SweepCfg { seed, ..SweepCfg::default() };
+    let path = sweep::frontier_path(results_dir, &graph.name, &platform.name);
+    let (frontier, cache_hit) =
+        sweep::load_or_sweep(results_dir, &graph, platform, &cfg, &pool)?;
+    println!(
+        "frontier for {} on {}: {} points ({} at {})",
+        graph.name,
+        platform.name,
+        frontier.len(),
+        if cache_hit { "cache hit" } else { "computed and cached" },
+        path.display()
+    );
+    println!("{:<24} {:>12} {:>10} {:>10} {:>7}", "mapping", "cycles", "lat [ms]", "E [uJ]",
+             "acc~");
+    for p in &frontier {
+        println!(
+            "{:<24} {:>12} {:>10.4} {:>10.2} {:>7.3}",
+            p.label, p.cycles, p.latency_ms, p.energy_uj, p.acc_proxy
+        );
+    }
+    Ok(())
+}
+
+/// CLI `serve-report` verb: render the dashboard of a past serve run.
+pub fn report_cmd(model: &str, platform: &str, results_dir: &Path) -> Result<()> {
+    let path = report_path(results_dir, model, platform);
+    let report = metrics::load_report(&path)
+        .map_err(|e| anyhow!("{e:#}\nrun `odimo serve` first to produce the report"))?;
+    println!("{}", report.dashboard());
+    Ok(())
+}

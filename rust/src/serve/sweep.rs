@@ -1,0 +1,545 @@
+//! Mapping-sweep engine: enumerate candidate mappings for a
+//! (model, platform) pair, score each one on all three serving axes,
+//! prune to the Pareto frontier, and cache the result.
+//!
+//! Candidates come from three families (paper Sec. IV-A baselines plus
+//! a discretized search grid):
+//!
+//!   * **uniform** — all channels on each single accelerator
+//!     (`all_<unit>`), plus the IO-8bit/Backbone-Ternary heuristic and
+//!     the round-robin even split;
+//!   * **min-cost** — the static water-filling / Pareto-DP optima under
+//!     the latency and energy objectives ([`baselines::min_cost`]);
+//!   * **blends** — discretized interpolations between all-on-unit-0
+//!     (the accuracy-preserving extreme on DIANA-family platforms) and
+//!     each min-cost optimum, which populate the middle of the
+//!     accuracy-vs-cost trade-off the dispatcher selects from.
+//!
+//! Scoring: latency and energy come from the SoC simulator
+//! ([`simulate`]); the **accuracy proxy** runs the quantized engine on
+//! a seeded synthetic calibration batch and measures logit fidelity
+//! against the float (quantization-free) reference plan — argmax
+//! agreement blended with a normalized logit-error term — so mappings
+//! that push more channels onto low-precision units score lower, the
+//! same qualitative axis the paper's trained accuracy provides, without
+//! needing trained artifacts on the serving host.
+//!
+//! The pruned frontier persists through [`store`] as a versioned JSON
+//! cache keyed by (model, platform, schema version); a second sweep (or
+//! a serve run) loads it back without recomputation, and a
+//! schema-version mismatch is a clear error, never a misparse.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::baselines::{self, CostObjective};
+use crate::coordinator::Mapping;
+use crate::data::synth::gen_sample;
+use crate::exp::store;
+use crate::hw::soc::{simulate, SocConfig};
+use crate::hw::Platform;
+use crate::model::Graph;
+use crate::quant::{synth_params_on, ParamSet, QuantNet, QuantPlan, Workspace};
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+
+/// Bump when the frontier cache layout changes; [`load_frontier`]
+/// refuses files written under any other version.
+pub const FRONTIER_SCHEMA: u32 = 1;
+
+/// One frontier entry: a mapping plus its three serving-axis scores.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    /// Candidate label (`all_dig`, `min_cost_lat`, `blend_en_50`, ...).
+    pub label: String,
+    /// The channel-to-accelerator assignment itself.
+    pub mapping: Mapping,
+    /// Simulated per-inference latency, cycles (the dispatch axis).
+    pub cycles: u64,
+    /// Simulated per-inference latency at the platform clock, ms.
+    pub latency_ms: f64,
+    /// Simulated per-inference energy, uJ.
+    pub energy_uj: f64,
+    /// Calibration-set accuracy proxy in [0, 1] (see module docs).
+    pub acc_proxy: f64,
+}
+
+/// Sweep knobs (all deterministic given the seed).
+#[derive(Clone, Copy, Debug)]
+pub struct SweepCfg {
+    /// Seed for the synthetic parameters and the calibration batch.
+    pub seed: u64,
+    /// Calibration images scored per candidate.
+    pub calib: usize,
+    /// Blend grid density: `blend_steps - 1` interior points between
+    /// all-on-unit-0 and each min-cost optimum.
+    pub blend_steps: usize,
+}
+
+impl Default for SweepCfg {
+    fn default() -> Self {
+        SweepCfg { seed: 1234, calib: 16, blend_steps: 4 }
+    }
+}
+
+/// Enumerate the labelled candidate mappings for `platform` (module
+/// docs list the three families). Duplicate assignments are dropped so
+/// the frontier never carries two labels for one mapping.
+pub fn candidate_mappings(
+    graph: &Graph,
+    platform: &Platform,
+    blend_steps: usize,
+) -> Vec<(String, Mapping)> {
+    let n_acc = platform.n_acc();
+    let mut out: Vec<(String, Mapping)> = Vec::new();
+    let push = |label: String, m: Mapping, out: &mut Vec<(String, Mapping)>| {
+        if !out.iter().any(|(_, q)| *q == m) {
+            out.push((label, m));
+        }
+    };
+    for (acc, spec) in platform.accelerators.iter().enumerate() {
+        push(format!("all_{}", spec.name), Mapping::uniform(graph, acc), &mut out);
+    }
+    if n_acc >= 2 {
+        push("io8_backbone_ternary".into(), baselines::io8_backbone_ternary(graph), &mut out);
+        push("even_split".into(), baselines::even_split(graph, n_acc), &mut out);
+    }
+    for (objective, tag) in
+        [(CostObjective::Latency, "lat"), (CostObjective::Energy, "en")]
+    {
+        push(
+            format!("min_cost_{tag}"),
+            baselines::min_cost(graph, platform, objective),
+            &mut out,
+        );
+        // blends between all-on-unit-0 and the min-cost optimum: scale
+        // the channels min-cost moved off unit 0 by alpha, unit 0
+        // absorbs the remainder (conserves channels by construction)
+        for s in 1..blend_steps {
+            let alpha = s as f64 / blend_steps as f64;
+            let mut m = Mapping::uniform(graph, 0);
+            for node in graph.mappable() {
+                let mc = baselines::layer_counts(platform, node, objective);
+                let mut counts = vec![0usize; n_acc];
+                let mut moved = 0usize;
+                for (i, c) in counts.iter_mut().enumerate().skip(1) {
+                    *c = (alpha * mc[i] as f64).round() as usize;
+                    moved += *c;
+                }
+                counts[0] = node.cout - moved;
+                m.set_layer_counts(&node.name, &counts);
+            }
+            push(format!("blend_{tag}_{}", (100.0 * alpha) as u32), m, &mut out);
+        }
+    }
+    out
+}
+
+/// Accuracy proxy of one candidate: argmax agreement with the float
+/// reference logits, blended 50/50 with a normalized logit-error
+/// fidelity term so the proxy stays strictly ordered even when the
+/// small calibration set agrees on every argmax.
+fn acc_proxy(float_logits: &[f32], quant_logits: &[f32], batch: usize, classes: usize) -> f64 {
+    let argmax = |v: &[f32]| -> usize {
+        let mut best = 0usize;
+        for (i, &x) in v.iter().enumerate() {
+            if x > v[best] {
+                best = i;
+            }
+        }
+        best
+    };
+    let mut agree = 0usize;
+    let mut err = 0f64;
+    let mut mag = 0f64;
+    for b in 0..batch {
+        let f = &float_logits[b * classes..(b + 1) * classes];
+        let q = &quant_logits[b * classes..(b + 1) * classes];
+        if argmax(f) == argmax(q) {
+            agree += 1;
+        }
+        for (a, c) in f.iter().zip(q) {
+            err += (a - c).abs() as f64;
+            mag += a.abs() as f64;
+        }
+    }
+    let fidelity = 1.0 / (1.0 + err / mag.max(1e-9));
+    0.5 * (agree as f64 / batch.max(1) as f64) + 0.5 * fidelity
+}
+
+/// Run the full sweep for (graph, platform): enumerate candidates,
+/// score each on the simulator and the quantized engine, and return the
+/// Pareto-pruned frontier sorted by latency ascending.
+pub fn sweep_frontier(
+    graph: &Graph,
+    platform: &Platform,
+    cfg: &SweepCfg,
+    pool: &ThreadPool,
+) -> Result<Vec<FrontierPoint>> {
+    let (c, h, w) = graph.input_shape;
+    if c != 3 {
+        return Err(anyhow!("{}: calibration generator needs 3-channel inputs", graph.name));
+    }
+    let calib = cfg.calib.max(1);
+    let mut x = Vec::with_capacity(calib * c * h * w);
+    for i in 0..calib {
+        let cls = (i % graph.classes) as u32;
+        x.extend_from_slice(&gen_sample(cfg.seed, 1, i as u64, cls, h, w));
+    }
+    let (names, values) = synth_params_on(graph, platform, cfg.seed);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    // float reference logits, computed once for every candidate
+    let float_plan = QuantPlan::compile_float(&params, graph)?;
+    let mut ws = Workspace::new();
+    let yf = float_plan.run_block(&x, calib, &mut ws, None);
+
+    let n_acc = platform.n_acc();
+    let soc_cfg = SocConfig::default();
+    let mut points = Vec::new();
+    for (label, mapping) in candidate_mappings(graph, platform, cfg.blend_steps) {
+        mapping.validate(graph, n_acc)?;
+        let rep = simulate(graph, &mapping.channel_split(n_acc), platform, soc_cfg);
+        let net = QuantNet::compile_params(&params, graph, &mapping, platform)?;
+        let yq = net.forward_pool(&x, calib, pool)?;
+        let proxy = acc_proxy(&yf, &yq, calib, graph.classes);
+        points.push(FrontierPoint {
+            label,
+            mapping,
+            cycles: rep.total_cycles,
+            latency_ms: rep.latency_ms,
+            energy_uj: rep.energy_uj,
+            acc_proxy: proxy,
+        });
+    }
+    let kept = pareto_prune(&points);
+    log::info!(
+        "sweep {} on {}: {} candidates -> {} frontier points",
+        graph.name,
+        platform.name,
+        points.len(),
+        kept.len()
+    );
+    let mut frontier: Vec<FrontierPoint> = Vec::with_capacity(kept.len());
+    for i in kept {
+        frontier.push(points[i].clone());
+    }
+    Ok(frontier)
+}
+
+/// `q` dominates `p`: no worse on latency, energy and accuracy, and not
+/// the identical score tuple (identical tuples never dominate each
+/// other, so duplicates survive pruning).
+pub fn dominates(q: &FrontierPoint, p: &FrontierPoint) -> bool {
+    q.cycles <= p.cycles
+        && q.energy_uj <= p.energy_uj
+        && q.acc_proxy >= p.acc_proxy
+        && (q.cycles < p.cycles || q.energy_uj < p.energy_uj || q.acc_proxy > p.acc_proxy)
+}
+
+/// Max accuracy among staircase entries with energy <= `en` (the
+/// staircase is sorted energy-ascending with accuracy ascending, so the
+/// rightmost qualifying entry carries the maximum).
+fn dominated_by_stairs(stairs: &[(f64, f64)], en: f64, acc: f64) -> bool {
+    let pos = stairs.partition_point(|s| s.0 <= en);
+    pos > 0 && stairs[pos - 1].1 >= acc
+}
+
+/// Insert a kept point into the (energy, accuracy) staircase,
+/// discarding entries it makes redundant.
+fn push_stair(stairs: &mut Vec<(f64, f64)>, en: f64, acc: f64) {
+    let pos = stairs.partition_point(|s| s.0 <= en);
+    if pos > 0 && stairs[pos - 1].1 >= acc {
+        return; // an existing entry already covers this (en, acc)
+    }
+    let mut k = pos;
+    while k < stairs.len() && stairs[k].1 <= acc {
+        k += 1;
+    }
+    stairs.drain(pos..k);
+    stairs.insert(pos, (en, acc));
+}
+
+/// Indices of the non-dominated points, sorted by (latency, energy)
+/// ascending. One sorted sweep with an (energy, accuracy) staircase for
+/// the strictly-faster prefix — `O(n log n)` plus pairwise checks only
+/// inside equal-latency groups — differentially pinned against the
+/// all-pairs O(n^2) oracle in `tests/serve_props.rs`.
+pub fn pareto_prune(points: &[FrontierPoint]) -> Vec<usize> {
+    let n = points.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        points[a]
+            .cycles
+            .cmp(&points[b].cycles)
+            .then(points[a].energy_uj.partial_cmp(&points[b].energy_uj).unwrap())
+            .then(points[b].acc_proxy.partial_cmp(&points[a].acc_proxy).unwrap())
+    });
+    let mut kept: Vec<usize> = Vec::new();
+    let mut stairs: Vec<(f64, f64)> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j < n && points[order[j]].cycles == points[order[i]].cycles {
+            j += 1;
+        }
+        // process one equal-latency group: staircase entries all have
+        // strictly smaller latency, so a weak (energy, accuracy) match
+        // there dominates; within the group dominance needs a strict
+        // coordinate, checked pairwise against already-kept members
+        // (any dominator sorts earlier under (energy asc, acc desc))
+        let group_start = kept.len();
+        for &gi in &order[i..j] {
+            let p = &points[gi];
+            let mut dom = dominated_by_stairs(&stairs, p.energy_uj, p.acc_proxy);
+            if !dom {
+                dom = kept[group_start..]
+                    .iter()
+                    .any(|&qi| dominates(&points[qi], p));
+            }
+            if !dom {
+                kept.push(gi);
+            }
+        }
+        for &gi in &kept[group_start..] {
+            push_stair(&mut stairs, points[gi].energy_uj, points[gi].acc_proxy);
+        }
+        i = j;
+    }
+    kept
+}
+
+// ---- frontier cache ---------------------------------------------------
+
+/// Cache path for a (model, platform) frontier under `results_dir`.
+/// The schema version lives *inside* the file so stale caches are
+/// detected, not silently shadowed by a new filename.
+pub fn frontier_path(results_dir: &Path, model: &str, platform: &str) -> PathBuf {
+    results_dir.join(format!("frontier_{model}_{platform}.json"))
+}
+
+fn point_to_json(p: &FrontierPoint) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(p.label.clone())),
+        ("cycles", Json::num(p.cycles as f64)),
+        ("latency_ms", Json::num(p.latency_ms)),
+        ("energy_uj", Json::num(p.energy_uj)),
+        ("acc_proxy", Json::num(p.acc_proxy)),
+        ("mapping", p.mapping.to_json()),
+    ])
+}
+
+fn point_from_json(v: &Json) -> Result<FrontierPoint> {
+    // req_f64 errors on missing *or* mistyped fields: a corrupted cache
+    // must never decay into 0-cycle/0-energy points
+    Ok(FrontierPoint {
+        label: v.req("label")?.as_str().unwrap_or("").to_string(),
+        cycles: v.req_f64("cycles")? as u64,
+        latency_ms: v.req_f64("latency_ms")?,
+        energy_uj: v.req_f64("energy_uj")?,
+        acc_proxy: v.req_f64("acc_proxy")?,
+        mapping: Mapping::from_json(v.req("mapping")?)?,
+    })
+}
+
+/// Persist a frontier atomically under the versioned envelope. The
+/// sweep configuration is recorded alongside the points so a later
+/// load under different knobs is detected, not silently reused.
+pub fn save_frontier(
+    path: &Path,
+    model: &str,
+    platform: &str,
+    cfg: &SweepCfg,
+    frontier: &[FrontierPoint],
+) -> Result<()> {
+    let payload = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("platform", Json::str(platform)),
+        ("sweep_seed", Json::num(cfg.seed as f64)),
+        ("sweep_calib", Json::num(cfg.calib as f64)),
+        ("sweep_blend_steps", Json::num(cfg.blend_steps as f64)),
+        ("points", Json::Arr(frontier.iter().map(point_to_json).collect())),
+    ]);
+    store::save_versioned(path, "frontier", FRONTIER_SCHEMA, payload)
+}
+
+/// A loaded frontier cache file: the points plus the sweep knobs they
+/// were computed under.
+#[derive(Debug)]
+pub struct CachedFrontier {
+    /// The frontier points, latency-ascending.
+    pub points: Vec<FrontierPoint>,
+    /// The [`SweepCfg`] the cache was swept with.
+    pub swept_with: SweepCfg,
+}
+
+/// Load a cached frontier, erroring clearly on kind/schema mismatch or
+/// a (model, platform) key that does not match the request.
+pub fn load_frontier(path: &Path, model: &str, platform: &str) -> Result<CachedFrontier> {
+    let payload = store::load_versioned(path, "frontier", FRONTIER_SCHEMA)?;
+    let got_model = payload.req("model")?.as_str().unwrap_or("");
+    let got_platform = payload.req("platform")?.as_str().unwrap_or("");
+    if got_model != model || got_platform != platform {
+        return Err(anyhow!(
+            "{}: cached for ({got_model}, {got_platform}), requested ({model}, {platform})",
+            path.display()
+        ));
+    }
+    let swept_with = SweepCfg {
+        seed: payload.req_f64("sweep_seed")? as u64,
+        calib: payload.req_f64("sweep_calib")? as usize,
+        blend_steps: payload.req_f64("sweep_blend_steps")? as usize,
+    };
+    let points = payload
+        .req("points")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("frontier points must be a json array"))?
+        .iter()
+        .map(point_from_json)
+        .collect::<Result<Vec<FrontierPoint>>>()?;
+    Ok(CachedFrontier { points, swept_with })
+}
+
+/// Load the cached frontier if present and swept under the *same*
+/// [`SweepCfg`] (returning `cache_hit = true`); on a knob mismatch the
+/// cache is re-swept and overwritten — never silently reused — so
+/// serve runs stay deterministic in (model, platform, seed, config).
+pub fn load_or_sweep(
+    results_dir: &Path,
+    graph: &Graph,
+    platform: &Platform,
+    cfg: &SweepCfg,
+    pool: &ThreadPool,
+) -> Result<(Vec<FrontierPoint>, bool)> {
+    let path = frontier_path(results_dir, &graph.name, &platform.name);
+    if path.exists() {
+        let cached = load_frontier(&path, &graph.name, &platform.name)?;
+        let sw = &cached.swept_with;
+        if sw.seed == cfg.seed && sw.calib == cfg.calib && sw.blend_steps == cfg.blend_steps {
+            for p in &cached.points {
+                p.mapping.validate(graph, platform.n_acc())?;
+            }
+            log::info!("frontier cache hit: {}", path.display());
+            return Ok((cached.points, true));
+        }
+        log::info!(
+            "frontier cache {} swept under different knobs \
+             (seed {} calib {} blends {}); re-sweeping",
+            path.display(),
+            sw.seed,
+            sw.calib,
+            sw.blend_steps
+        );
+    }
+    let frontier = sweep_frontier(graph, platform, cfg, pool)?;
+    save_frontier(&path, &graph.name, &platform.name, cfg, &frontier)?;
+    log::info!("frontier cache written: {}", path.display());
+    Ok((frontier, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tinycnn;
+    use std::collections::BTreeMap;
+
+    fn pt(cycles: u64, energy_uj: f64, acc: f64) -> FrontierPoint {
+        FrontierPoint {
+            label: String::new(),
+            mapping: Mapping { assign: BTreeMap::new() },
+            cycles,
+            latency_ms: cycles as f64 * 1e-6,
+            energy_uj,
+            acc_proxy: acc,
+        }
+    }
+
+    #[test]
+    fn prune_keeps_only_nondominated() {
+        let pts = vec![
+            pt(100, 10.0, 0.9),
+            pt(100, 12.0, 0.8), // dominated by [0]
+            pt(200, 5.0, 0.7),
+            pt(300, 5.0, 0.7), // dominated by [2]
+            pt(300, 4.0, 0.95),
+        ];
+        let kept = pareto_prune(&pts);
+        assert_eq!(kept, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn prune_keeps_identical_duplicates() {
+        let pts = vec![pt(100, 10.0, 0.9), pt(100, 10.0, 0.9)];
+        let kept = pareto_prune(&pts);
+        assert_eq!(kept.len(), 2, "identical points never dominate each other");
+    }
+
+    #[test]
+    fn candidates_are_valid_and_distinct() {
+        let g = tinycnn();
+        for p in [Platform::diana(), Platform::mpsoc4()] {
+            let cands = candidate_mappings(&g, &p, 4);
+            assert!(cands.len() >= p.n_acc() + 2, "{}: {} candidates", p.name, cands.len());
+            for (label, m) in &cands {
+                m.validate(&g, p.n_acc()).unwrap_or_else(|e| panic!("{label}: {e}"));
+            }
+            for (i, (_, a)) in cands.iter().enumerate() {
+                for (_, b) in &cands[i + 1..] {
+                    assert_ne!(a, b, "duplicate candidate mapping on {}", p.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_cache_roundtrip() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let pool = ThreadPool::new(2);
+        let cfg = SweepCfg { seed: 11, calib: 4, blend_steps: 2 };
+        let dir = std::env::temp_dir().join("odimo_sweep_roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (a, hit_a) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        assert!(!hit_a);
+        let (b, hit_b) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        assert!(hit_b, "second load must be a cache hit");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.cycles, y.cycles);
+            assert_eq!(x.mapping, y.mapping);
+            assert!((x.acc_proxy - y.acc_proxy).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn wrong_platform_key_rejected() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let dir = std::env::temp_dir().join("odimo_sweep_wrong_key");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = frontier_path(&dir, &g.name, &p.name);
+        save_frontier(&path, &g.name, &p.name, &SweepCfg::default(), &[]).unwrap();
+        let e = load_frontier(&path, &g.name, "mpsoc4").unwrap_err().to_string();
+        assert!(e.contains("mpsoc4"), "{e}");
+    }
+
+    #[test]
+    fn different_sweep_knobs_resweep_instead_of_reusing() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let pool = ThreadPool::new(2);
+        let dir = std::env::temp_dir().join("odimo_sweep_knob_mismatch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg_a = SweepCfg { seed: 1, calib: 4, blend_steps: 2 };
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_a, &pool).unwrap();
+        assert!(!hit);
+        // a different seed must never silently reuse the seed-1 cache
+        let cfg_b = SweepCfg { seed: 2, calib: 4, blend_steps: 2 };
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_b, &pool).unwrap();
+        assert!(!hit, "knob mismatch must re-sweep");
+        // the overwritten cache now hits under the new knobs
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_b, &pool).unwrap();
+        assert!(hit);
+    }
+}

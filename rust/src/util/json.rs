@@ -42,6 +42,15 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json key '{key}'"))
     }
 
+    /// Required numeric field: errors (naming the key) when the field
+    /// is missing *or* mistyped — loaders of long-lived caches must
+    /// never let a malformed field silently decay to a default.
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("json key '{key}' must be a number"))
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -427,5 +436,14 @@ mod tests {
     fn usize_vec_helper() {
         let v = parse("[2, 16, 3, 3]").unwrap();
         assert_eq!(v.usize_vec().unwrap(), vec![2, 16, 3, 3]);
+    }
+
+    #[test]
+    fn req_f64_errors_on_missing_and_mistyped() {
+        let v = parse(r#"{"cycles": 12.5, "label": "x"}"#).unwrap();
+        assert_eq!(v.req_f64("cycles").unwrap(), 12.5);
+        assert!(v.req_f64("nope").unwrap_err().to_string().contains("nope"));
+        let e = v.req_f64("label").unwrap_err().to_string();
+        assert!(e.contains("must be a number"), "{e}");
     }
 }

@@ -1,0 +1,231 @@
+//! Property tests for the serving stack (serve/): frontier pruning
+//! (differential against an O(n^2) all-pairs oracle), the SLA
+//! dispatcher's selection invariants, and the end-to-end closed loop on
+//! the N = 2..4 built-in platforms. Randomized cases carry printed
+//! seeds so failures reproduce deterministically.
+
+use std::collections::BTreeMap;
+
+use odimo::coordinator::Mapping;
+use odimo::hw::Platform;
+use odimo::model::tinycnn;
+use odimo::serve::sweep::{self, dominates, pareto_prune};
+use odimo::serve::{dispatch, FrontierPoint, ServeCfg, Sla, SweepCfg};
+use odimo::util::pool::ThreadPool;
+use odimo::util::prng::Pcg32;
+
+const CASES: u64 = 40;
+
+/// Synthetic point cloud on small integer grids, so score ties (and
+/// exact duplicates) occur often — the pruning edge cases.
+fn synth_points(seed: u64, n: usize) -> Vec<FrontierPoint> {
+    let mut rng = Pcg32::new(seed, 51);
+    (0..n)
+        .map(|i| {
+            let cycles = 1_000 + 100 * rng.below(12) as u64;
+            FrontierPoint {
+                label: format!("p{i}"),
+                mapping: Mapping { assign: BTreeMap::new() },
+                cycles,
+                latency_ms: cycles as f64 * 1e-6,
+                energy_uj: 0.5 * rng.below(10) as f64,
+                acc_proxy: rng.below(8) as f64 / 8.0,
+            }
+        })
+        .collect()
+}
+
+/// The O(n^2) oracle: keep exactly the points no other point dominates.
+fn oracle_prune(points: &[FrontierPoint]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| !points.iter().any(|q| dominates(q, &points[i])))
+        .collect()
+}
+
+#[test]
+fn prop_prune_matches_oracle() {
+    for seed in 0..CASES {
+        let n = 1 + (seed as usize * 7) % 60;
+        let pts = synth_points(seed, n);
+        let mut fast = pareto_prune(&pts);
+        let mut want = oracle_prune(&pts);
+        fast.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(fast, want, "seed {seed} n {n}");
+    }
+}
+
+#[test]
+fn prop_prune_never_drops_nondominated() {
+    // the oracle property stated directly: every kept index is
+    // non-dominated, every dropped index is dominated by a kept one
+    for seed in 0..CASES {
+        let pts = synth_points(seed + 1000, 30);
+        let kept = pareto_prune(&pts);
+        for &i in &kept {
+            assert!(
+                !pts.iter().any(|q| dominates(q, &pts[i])),
+                "seed {seed}: kept a dominated point {i}"
+            );
+        }
+        for i in 0..pts.len() {
+            if !kept.contains(&i) {
+                assert!(
+                    kept.iter().any(|&k| dominates(&pts[k], &pts[i])),
+                    "seed {seed}: dropped point {i} has no kept dominator"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dispatch_selects_cheapest_feasible_on_frontier() {
+    for seed in 0..CASES {
+        let pts = synth_points(seed + 2000, 25);
+        let frontier: Vec<FrontierPoint> =
+            pareto_prune(&pts).into_iter().map(|i| pts[i].clone()).collect();
+        let mut rng = Pcg32::new(seed, 77);
+        for _ in 0..20 {
+            let budget = 900 + 100 * rng.below(16) as u64;
+            let d = dispatch(&frontier, Sla::LatencyBudget(budget)).unwrap();
+            let sel = &frontier[d.point];
+            // the selection is a frontier member and non-dominated
+            assert!(!frontier.iter().any(|q| dominates(q, sel)), "seed {seed}");
+            let feasible: Vec<&FrontierPoint> =
+                frontier.iter().filter(|p| p.cycles <= budget).collect();
+            if feasible.is_empty() {
+                assert!(!d.sla_met, "seed {seed}: miss must be flagged");
+                let min_cyc = frontier.iter().map(|p| p.cycles).min().unwrap();
+                assert_eq!(sel.cycles, min_cyc, "seed {seed}: fallback must be fastest");
+            } else {
+                // meets the budget whenever any frontier point does
+                assert!(d.sla_met && sel.cycles <= budget, "seed {seed}");
+                let min_en =
+                    feasible.iter().map(|p| p.energy_uj).fold(f64::INFINITY, f64::min);
+                assert_eq!(sel.energy_uj, min_en, "seed {seed}: not cheapest feasible");
+            }
+            // determinism: same inputs, same decision
+            assert_eq!(d, dispatch(&frontier, Sla::LatencyBudget(budget)).unwrap());
+        }
+        let d = dispatch(&frontier, Sla::MinEnergy).unwrap();
+        let min_en = frontier.iter().map(|p| p.energy_uj).fold(f64::INFINITY, f64::min);
+        assert_eq!(frontier[d.point].energy_uj, min_en, "seed {seed}");
+    }
+}
+
+#[test]
+fn swept_frontiers_are_nondominated_on_n2_to_n4() {
+    let g = tinycnn();
+    let pool = ThreadPool::new(2);
+    let cfg = SweepCfg { seed: 7, calib: 4, blend_steps: 2 };
+    for p in [Platform::diana(), Platform::diana_ne16(), Platform::mpsoc4()] {
+        let frontier = sweep::sweep_frontier(&g, &p, &cfg, &pool).unwrap();
+        assert!(!frontier.is_empty(), "{}: empty frontier", p.name);
+        for fp in &frontier {
+            fp.mapping.validate(&g, p.n_acc()).unwrap();
+            assert!(
+                !frontier.iter().any(|q| dominates(q, fp)),
+                "{}: dominated point '{}' on the frontier",
+                p.name,
+                fp.label
+            );
+        }
+        // dispatching at every frontier point's own latency must be
+        // feasible and land on a point at most that expensive
+        for fp in &frontier {
+            let d = dispatch(&frontier, Sla::LatencyBudget(fp.cycles)).unwrap();
+            assert!(d.sla_met, "{}: budget {} has a feasible point", p.name, fp.cycles);
+            assert!(frontier[d.point].cycles <= fp.cycles);
+            assert!(frontier[d.point].energy_uj <= fp.energy_uj);
+        }
+    }
+}
+
+#[test]
+fn frontier_cache_schema_mismatch_is_a_clear_error() {
+    let g = tinycnn();
+    let p = Platform::diana();
+    let pool = ThreadPool::new(2);
+    let cfg = SweepCfg { seed: 3, calib: 4, blend_steps: 2 };
+    let dir = std::env::temp_dir().join("odimo_serve_props_schema");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (_, hit) = sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+    assert!(!hit);
+    // tamper with the stored schema version; reloads must error clearly
+    let path = sweep::frontier_path(&dir, &g.name, &p.name);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let bumped = text.replace("\"schema_version\":1", "\"schema_version\":999");
+    assert_ne!(text, bumped, "version field must be present to tamper with");
+    std::fs::write(&path, bumped).unwrap();
+    let e = sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap_err().to_string();
+    assert!(e.contains("schema version 999"), "{e}");
+}
+
+fn serve_cfg(dir: &std::path::Path, max_batch: usize, threads: usize, seed: u64) -> ServeCfg {
+    ServeCfg {
+        model: "tinycnn".into(),
+        platform: Platform::diana(),
+        results_dir: dir.to_path_buf(),
+        n_requests: 24,
+        max_batch,
+        max_wait: 50_000,
+        mean_gap: 15_000,
+        launch_cycles: 10_000,
+        threads: Some(threads),
+        seed,
+        // larger than any tinycnn frontier, so each mapping compiles once
+        plan_cache_cap: 8,
+        sweep: SweepCfg { seed, calib: 4, blend_steps: 2 },
+    }
+}
+
+#[test]
+fn closed_loop_is_deterministic_and_accounts_every_request() {
+    let dir = std::env::temp_dir().join("odimo_serve_props_loop");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = serve_cfg(&dir, 4, 2, 9);
+    let a = odimo::serve::run_serve(&cfg).unwrap();
+    let b = odimo::serve::run_serve(&cfg).unwrap();
+    assert_eq!(a.total_requests, 24);
+    assert_eq!(a.total_requests, b.total_requests);
+    assert_eq!(a.total_batches, b.total_batches);
+    assert_eq!(a.p50_ms, b.p50_ms, "virtual-time latencies must be deterministic");
+    assert_eq!(a.p95_ms, b.p95_ms);
+    assert_eq!(a.sla_hit_rate, b.sla_hit_rate);
+    assert_eq!(a.sim_energy_uj, b.sim_energy_uj);
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.requests, y.requests);
+        assert_eq!(x.sla_hits, y.sla_hits);
+    }
+    let served: usize = a.rows.iter().map(|r| r.requests).sum();
+    assert_eq!(served, 24, "every request lands in exactly one row");
+    // the plan cache compiles each touched mapping once, then hits
+    assert_eq!(a.plan_misses as usize, a.rows.len());
+    assert_eq!(a.plan_hits + a.plan_misses, a.total_batches as u64);
+    // second run reused the frontier cache (report still written fresh)
+    assert!(sweep::frontier_path(&dir, "tinycnn", "diana").exists());
+}
+
+#[test]
+fn unbatched_mode_runs_one_request_per_batch() {
+    let dir = std::env::temp_dir().join("odimo_serve_props_unbatched");
+    let _ = std::fs::remove_dir_all(&dir);
+    let rep = odimo::serve::run_serve(&serve_cfg(&dir, 1, 2, 5)).unwrap();
+    assert_eq!(rep.total_batches, rep.total_requests);
+    for r in &rep.rows {
+        assert!((r.mean_batch - 1.0).abs() < 1e-12, "{}: batch {}", r.label, r.mean_batch);
+    }
+}
+
+#[test]
+fn serve_report_roundtrips_through_disk() {
+    let dir = std::env::temp_dir().join("odimo_serve_props_report");
+    let _ = std::fs::remove_dir_all(&dir);
+    let rep = odimo::serve::run_serve(&serve_cfg(&dir, 4, 2, 13)).unwrap();
+    let path = odimo::serve::report_path(&dir, "tinycnn", "diana");
+    let back = odimo::serve::metrics::load_report(&path).unwrap();
+    assert_eq!(back.dashboard(), rep.dashboard());
+}

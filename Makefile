@@ -4,8 +4,8 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check doc bench-infer bench-sim bench-mincost bench-serve bench \
-	artifacts clean
+.PHONY: build test check doc api-check examples bench-infer bench-sim bench-mincost \
+	bench-serve bench artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -22,6 +22,18 @@ check:
 # API docs; broken intra-doc links are errors (CI runs this too).
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+# The api facade's doc-tests (the SessionBuilder example in
+# rust/src/api/ is executable documentation — this runs it alone).
+api-check:
+	$(CARGO) test --doc api
+
+# Build and execute the three deployment examples (CI runs these too:
+# they are live end-to-end checks, not compile-only artifacts).
+examples:
+	$(CARGO) run --release --example deploy_tri
+	$(CARGO) run --release --example deploy_gap9
+	$(CARGO) run --release --example deploy_mpsoc4
 
 # Quantized-inference engine throughput (engine vs naive oracle,
 # single-thread + pool scaling). Emits BENCH_infer.json at repo root

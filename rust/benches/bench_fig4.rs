@@ -6,10 +6,8 @@
 
 use std::collections::BTreeMap;
 
-use odimo::coordinator::scheduler::deploy;
+use odimo::api::SessionBuilder;
 use odimo::coordinator::{discretize::discretize, Mapping, SearchPoint};
-use odimo::hw::soc::SocConfig;
-use odimo::hw::Platform;
 use odimo::metrics::{ascii_scatter, pareto_front, points_csv};
 use odimo::model::resnet20;
 use odimo::util::bench::{black_box, Bench};
@@ -19,6 +17,11 @@ fn main() {
     let g = resnet20();
     let mut rng = Pcg32::new(42, 1);
     let mut b = Bench::new("fig4");
+    let session = SessionBuilder::new("resnet20")
+        .platform("diana")
+        .threads(1)
+        .build()
+        .expect("session");
 
     // discretize from random alpha logits (22 mappable layers)
     let alphas: BTreeMap<String, Vec<f32>> = g
@@ -33,10 +36,10 @@ fn main() {
         black_box(discretize(&g, &alphas, 2).unwrap());
     });
 
-    // deployment costing of one mapping
+    // deployment costing of one mapping, through the facade
     let mapping = discretize(&g, &alphas, 2).unwrap();
     b.run("deploy_cost_resnet20", || {
-        black_box(deploy(&g, &mapping, &Platform::diana(), SocConfig::default()));
+        black_box(session.deploy(&mapping).unwrap());
     });
 
     // pareto + reporting over a sweep-sized point set

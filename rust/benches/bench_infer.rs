@@ -1,25 +1,27 @@
-//! Quantized-inference engine throughput: planned im2col/GEMM engine
-//! vs the naive interpreter oracle (`quant::ref`), single-thread and
-//! over the ThreadPool, plus serve-side plan-cache hit/miss timings so
-//! plan compilation cost stays visible in the perf trajectory. Reports
-//! img/s and writes `BENCH_infer.json` at the repo root for the
-//! EXPERIMENTS.md §Perf trajectory.
+//! Quantized-inference engine throughput: the planned im2col/GEMM
+//! engine driven through `odimo::api::Session::infer` (one session per
+//! thread count; plans compile once into the session's cache) vs the
+//! naive interpreter oracle (`quant::ref`), plus serve-side plan-cache
+//! hit/miss timings so plan compilation cost stays visible in the perf
+//! trajectory. Reports img/s and writes `BENCH_infer.json` at the repo
+//! root for the EXPERIMENTS.md §Perf trajectory.
 //!
 //!     make bench-infer    # or: cargo bench --bench bench_infer
 
 use std::fmt::Write as _;
 
+use odimo::api::{Session, SessionBuilder};
 use odimo::hw::Platform;
-use odimo::model::{resnet20, tinycnn, Graph};
+use odimo::model::{resnet20, Graph};
 use odimo::quant::r#ref::RefNet;
-use odimo::quant::{synth_mapping as random_mapping, synth_params, ParamSet, QuantNet,
-                   QuantPlan};
+use odimo::quant::{synth_mapping as random_mapping, synth_params, synth_params_on, ParamSet,
+                   QuantNet, QuantPlan};
 use odimo::serve::batcher::PlanCache;
 use odimo::util::bench::{black_box, Bench};
-use odimo::util::pool::ThreadPool;
 use odimo::util::prng::Pcg32;
 
 const BATCH: usize = 8;
+const SEED: u64 = 11;
 
 fn random_input(g: &Graph, batch: usize, seed: u64) -> Vec<f32> {
     let (c, h, w) = g.input_shape;
@@ -31,16 +33,27 @@ fn imgs_per_s(median_ns: f64) -> f64 {
     BATCH as f64 / (median_ns * 1e-9)
 }
 
-fn bench_model(b: &mut Bench, g: &Graph, json: &mut String) {
-    let (names, values) = synth_params(g, 11);
+fn session(model: &str, threads: usize) -> Session {
+    SessionBuilder::new(model)
+        .platform("diana")
+        .threads(threads)
+        .seed(SEED)
+        .build()
+        .expect("session")
+}
+
+fn bench_model(b: &mut Bench, model: &str, json: &mut String) {
+    let mut s1 = session(model, 1);
+    let g = s1.graph().clone();
+    let mapping = random_mapping(&g, 3);
+    // the oracle, over the session's own parameter derivation
+    let (names, values) = synth_params_on(&g, s1.platform(), SEED);
     let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
-    let mapping = random_mapping(g, 3);
-    let engine = QuantNet::compile_params(&params, g, &mapping, &Platform::diana()).unwrap();
-    let oracle = RefNet::compile(&params, g, &mapping, &Platform::diana()).unwrap();
-    let x = random_input(g, BATCH, 7);
+    let oracle = RefNet::compile(&params, &g, &mapping, s1.platform()).unwrap();
+    let x = random_input(&g, BATCH, 7);
 
     // correctness gate: never publish numbers off a diverged engine
-    let ye = engine.forward(&x, BATCH).unwrap();
+    let ye = s1.infer(&mapping, &x, BATCH).unwrap();
     let yr = oracle.forward(&x, BATCH).unwrap();
     let diff = ye
         .iter()
@@ -53,7 +66,7 @@ fn bench_model(b: &mut Bench, g: &Graph, json: &mut String) {
         black_box(oracle.forward(&x, BATCH).unwrap());
     });
     let s_eng = b.run(&format!("{}_engine_b{BATCH}", g.name), || {
-        black_box(engine.forward(&x, BATCH).unwrap());
+        black_box(s1.infer(&mapping, &x, BATCH).unwrap());
     });
     let speedup = s_ref.median_ns / s_eng.median_ns;
     println!(
@@ -72,9 +85,9 @@ fn bench_model(b: &mut Bench, g: &Graph, json: &mut String) {
         speedup
     );
     for threads in [2usize, 4, 8] {
-        let pool = ThreadPool::new(threads);
+        let mut st = session(model, threads);
         let s = b.run(&format!("{}_engine_b{BATCH}_t{threads}", g.name), || {
-            black_box(engine.forward_pool(&x, BATCH, &pool).unwrap());
+            black_box(st.infer(&mapping, &x, BATCH).unwrap());
         });
         println!(
             "{:>10}: engine x{threads} threads {:8.1} img/s ({:.2}x vs 1t)",
@@ -92,7 +105,7 @@ fn bench_model(b: &mut Bench, g: &Graph, json: &mut String) {
 }
 
 /// Plan-cache handle cost: cold compile (miss) vs cached fetch (hit) —
-/// the amortization the serve batcher's LRU cache buys per batch.
+/// the amortization the session-owned LRU cache buys per batch.
 fn bench_plan_cache(b: &mut Bench, json: &mut String) {
     let g = resnet20();
     let p = Platform::diana();
@@ -139,9 +152,9 @@ fn bench_plan_cache(b: &mut Bench, json: &mut String) {
 fn main() {
     let mut b = Bench::new("infer").slow();
     let mut json = String::from("{\n");
-    bench_model(&mut b, &tinycnn(), &mut json);
+    bench_model(&mut b, "tinycnn", &mut json);
     json.push_str(",\n");
-    bench_model(&mut b, &resnet20(), &mut json);
+    bench_model(&mut b, "resnet20", &mut json);
     json.push_str(",\n");
     bench_plan_cache(&mut b, &mut json);
     json.push_str("\n}\n");

@@ -1,17 +1,18 @@
 //! Bench: min-cost mapping construction — the exhaustive composition
-//! enumerator (`min_cost_enum`, the historical algorithm) against the
-//! water-filling / Pareto-DP fast path (`min_cost`) at N = 2..4
-//! accelerators on the ResNet20 layer stack. Guards the fast path
-//! against silently regressing to exponential enumeration: CI runs this
-//! with `--smoke` (1 repetition) and `make bench-mincost` produces real
-//! timings. Writes `BENCH_mincost.json` at the repo root (same shape as
-//! the other BENCH_*.json files) and appends to
+//! enumerator (`min_cost_enum`, the historical algorithm and parity
+//! oracle) against the water-filling / Pareto-DP fast path, driven the
+//! way workflows now reach it: `Session::mapping(MappingSpec::MinCost)`
+//! at N = 2..4 accelerators on the ResNet20 layer stack. Guards the
+//! fast path against silently regressing to exponential enumeration:
+//! CI runs this with `--smoke` (1 repetition) and `make bench-mincost`
+//! produces real timings. Writes `BENCH_mincost.json` at the repo root
+//! (same shape as the other BENCH_*.json files) and appends to
 //! `results/bench_mincost.csv`.
 
 use std::fmt::Write as _;
 
-use odimo::coordinator::baselines::{self, CostObjective};
-use odimo::hw::Platform;
+use odimo::api::{CostObjective, MappingSpec, SessionBuilder};
+use odimo::coordinator::baselines;
 use odimo::model::build;
 use odimo::util::bench::{black_box, Bench};
 
@@ -22,16 +23,21 @@ fn main() {
         b = b.smoke();
     }
     let g = build("resnet20").unwrap();
-    let platforms = [Platform::diana(), Platform::diana_ne16(), Platform::mpsoc4()];
     let mut json = String::from("{\n");
     let mut first = true;
-    for p in &platforms {
+    for plat in ["diana", "diana_ne16", "mpsoc4"] {
+        let session = SessionBuilder::new("resnet20")
+            .platform(plat)
+            .threads(1)
+            .build()
+            .expect("session");
+        let p = session.platform();
         let n = p.n_acc();
         // correctness guard: on exact-enumeration platforms the fast
         // path must reproduce the enumerator's mapping bit-for-bit
         if n <= 3 {
             assert_eq!(
-                baselines::min_cost(&g, p, CostObjective::Latency),
+                session.mapping(&MappingSpec::MinCost(CostObjective::Latency)).unwrap(),
                 baselines::min_cost_enum(&g, p, CostObjective::Latency),
                 "fast path diverged from the enumerator on {}",
                 p.name
@@ -41,13 +47,17 @@ fn main() {
             black_box(baselines::min_cost_enum(&g, p, CostObjective::Latency));
         });
         let fast_lat = b.run(&format!("fast_lat_{}_n{n}", p.name), || {
-            black_box(baselines::min_cost(&g, p, CostObjective::Latency));
+            black_box(
+                session.mapping(&MappingSpec::MinCost(CostObjective::Latency)).unwrap(),
+            );
         });
         let enum_en = b.run(&format!("enum_en_{}_n{n}", p.name), || {
             black_box(baselines::min_cost_enum(&g, p, CostObjective::Energy));
         });
         let fast_en = b.run(&format!("fast_en_{}_n{n}", p.name), || {
-            black_box(baselines::min_cost(&g, p, CostObjective::Energy));
+            black_box(
+                session.mapping(&MappingSpec::MinCost(CostObjective::Energy)).unwrap(),
+            );
         });
         if !first {
             json.push_str(",\n");

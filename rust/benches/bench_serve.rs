@@ -1,14 +1,16 @@
-//! Bench: the closed-loop serve driver — engine throughput (img/s) and
-//! simulated p95 queue+compute latency at 1/2/8 worker threads, batched
-//! (max_batch 8) vs unbatched (max_batch 1). CI smoke-runs this with
-//! `--smoke` (tiny request stream, 1 repetition); `make bench-serve`
-//! produces real timings. Writes `BENCH_serve.json` at the repo root
-//! and appends to `results/bench_serve.csv`.
+//! Bench: the closed-loop serve driver through `odimo::api::Session` —
+//! engine throughput (img/s) and simulated p95 queue+compute latency at
+//! 1/2/8 worker threads, batched (max_batch 8) vs unbatched
+//! (max_batch 1). One session per thread count owns the frontier and
+//! the LRU plan cache, so the timed loop measures steady-state serving
+//! (plans compile once, on the first instrumented run). CI smoke-runs
+//! this with `--smoke` (tiny request stream, 1 repetition); `make
+//! bench-serve` produces real timings. Writes `BENCH_serve.json` at the
+//! repo root and appends to `results/bench_serve.csv`.
 
 use std::fmt::Write as _;
 
-use odimo::hw::Platform;
-use odimo::serve::{run_serve, ServeCfg, SweepCfg};
+use odimo::api::{ServeOpts, SessionBuilder};
 use odimo::util::bench::{black_box, Bench};
 
 fn main() {
@@ -18,33 +20,37 @@ fn main() {
         b = b.smoke();
     }
     // a private results dir so bench runs never disturb real sweeps;
-    // the frontier cache persists across cases (first case sweeps, the
-    // rest are cache hits — exactly the serving-path behavior)
+    // the frontier cache persists across cases (first session sweeps,
+    // the rest load it back — exactly the serving-path behavior)
     let dir = std::env::temp_dir().join("odimo_bench_serve");
     let _ = std::fs::remove_dir_all(&dir);
     let mut json = String::from("{\n");
     let mut first = true;
     for threads in [1usize, 2, 8] {
+        let mut session = SessionBuilder::new("tinycnn")
+            .platform("diana")
+            .results_dir(&dir)
+            .threads(threads)
+            .seed(42)
+            .sweep_calib(8)
+            .sweep_blend_steps(2)
+            .plan_cache_cap(8)
+            .build()
+            .expect("session");
         for (mode, max_batch) in [("batched", 8usize), ("unbatched", 1)] {
-            let cfg = ServeCfg {
-                model: "tinycnn".into(),
-                platform: Platform::diana(),
-                results_dir: dir.clone(),
-                n_requests: if smoke { 16 } else { 128 },
+            let opts = ServeOpts {
+                n_requests: Some(if smoke { 16 } else { 128 }),
                 max_batch,
                 max_wait: 50_000,
                 mean_gap: 15_000,
                 launch_cycles: 10_000,
-                threads: Some(threads),
-                seed: 42,
-                plan_cache_cap: 8,
-                sweep: SweepCfg { seed: 42, calib: 8, blend_steps: 2 },
             };
             // metrics come from one instrumented run; the timed loop
             // measures the whole closed loop (dispatch + batch + engine)
-            let rep = run_serve(&cfg).expect("serve run");
+            // with the session's caches warm
+            let rep = session.serve(&opts).expect("serve run");
             let s = b.run(&format!("{mode}_t{threads}"), || {
-                black_box(run_serve(&cfg).expect("serve run"));
+                black_box(session.serve(&opts).expect("serve run"));
             });
             println!(
                 "{mode} x{threads} threads: {:8.1} img/s | p95 {:.3} ms (simulated) | \

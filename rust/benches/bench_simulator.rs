@@ -1,40 +1,53 @@
 //! Bench: SoC simulator throughput (the L3 inner loop behind every
-//! experiment driver). One full end-to-end inference costing per model
-//! on the DIANA platform, a 3-accelerator run on the example platform,
-//! plus the min-cost baseline construction (exhaustive per-layer split
-//! enumeration). Writes `BENCH_simulator.json` at the repo root (same
-//! shape as BENCH_infer.json) so the perf trajectory covers the
-//! simulator: `make bench-sim`.
+//! experiment driver), measured through the `odimo::api::Session`
+//! facade the workflows actually use. One full end-to-end inference
+//! costing per model on the DIANA platform, a 3-accelerator run on the
+//! example platform, plus min-cost baseline construction on the
+//! facade (water-filling fast path; the enumerator-vs-fast-path gap
+//! lives in bench_mincost). Writes `BENCH_simulator.json` at the repo
+//! root (same shape as BENCH_infer.json) so the perf trajectory covers
+//! the simulator: `make bench-sim`.
+//!
+//! Trajectory note (facade migration): `sim*` timings now include the
+//! facade's per-call mapping validation + channel-split construction —
+//! the real per-call cost of the serving path — where the pre-facade
+//! bench timed the bare kernel over a precomputed split. Compare
+//! numbers across that boundary accordingly.
 
 use std::fmt::Write as _;
 
-use odimo::coordinator::baselines;
-use odimo::hw::soc::{simulate, split_all_digital, SocConfig};
-use odimo::hw::Platform;
-use odimo::model::{build, ALL_MODELS};
+use odimo::api::{CostObjective, MappingSpec, Session, SessionBuilder};
+use odimo::model::ALL_MODELS;
 use odimo::util::bench::{black_box, Bench, Stats};
 
 fn runs_per_s(s: &Stats) -> f64 {
     1e9 / s.median_ns
 }
 
+fn session(model: &str, platform: &str) -> Session {
+    SessionBuilder::new(model)
+        .platform(platform)
+        .threads(1)
+        .build()
+        .expect("session")
+}
+
 fn main() {
     let mut b = Bench::new("simulator");
-    let diana = Platform::diana();
-    let tri = Platform::diana_ne16();
     let mut json = String::from("{\n");
     let mut first = true;
 
     for name in ALL_MODELS {
-        let g = build(name).unwrap();
-        let split = split_all_digital(&g);
-        let s2 = b.run(&format!("simulate_{name}"), || {
-            black_box(simulate(&g, &split, &diana, SocConfig::default()));
+        let s2 = session(name, "diana");
+        let all_dig = s2.mapping(&MappingSpec::Baseline("all_8bit".into())).unwrap();
+        let t2 = b.run(&format!("simulate_{name}"), || {
+            black_box(s2.simulate(&all_dig).unwrap());
         });
         // 3-accelerator example platform: even thirds per layer
-        let split3 = baselines::even_split(&g, 3).channel_split(3);
-        let s3 = b.run(&format!("simulate3_{name}"), || {
-            black_box(simulate(&g, &split3, &tri, SocConfig::default()));
+        let s3 = session(name, "diana_ne16");
+        let thirds = s3.mapping(&MappingSpec::Baseline("even_split".into())).unwrap();
+        let t3 = b.run(&format!("simulate3_{name}"), || {
+            black_box(s3.simulate(&thirds).unwrap());
         });
         if !first {
             json.push_str(",\n");
@@ -43,28 +56,29 @@ fn main() {
         let _ = write!(
             json,
             "  \"{name}\": {{\n    \"sim_median_ns\": {:.0},\n    \"sim_runs_per_s\": {:.1},\n    \"sim3_median_ns\": {:.0},\n    \"sim3_runs_per_s\": {:.1}\n  }}",
-            s2.median_ns,
-            runs_per_s(&s2),
-            s3.median_ns,
-            runs_per_s(&s3)
+            t2.median_ns,
+            runs_per_s(&t2),
+            t3.median_ns,
+            runs_per_s(&t3)
         );
     }
 
-    let g = build("resnet20").unwrap();
+    let diana = session("resnet20", "diana");
+    let tri = session("resnet20", "diana_ne16");
     let mc_lat = b.run("min_cost_lat_resnet20", || {
-        black_box(baselines::min_cost(&g, &diana, baselines::CostObjective::Latency));
+        black_box(diana.mapping(&MappingSpec::MinCost(CostObjective::Latency)).unwrap());
     });
     let mc_en = b.run("min_cost_en_resnet20", || {
-        black_box(baselines::min_cost(&g, &diana, baselines::CostObjective::Energy));
+        black_box(diana.mapping(&MappingSpec::MinCost(CostObjective::Energy)).unwrap());
     });
     let mc3 = b.run("min_cost_lat3_resnet20", || {
-        black_box(baselines::min_cost(&g, &tri, baselines::CostObjective::Latency));
+        black_box(tri.mapping(&MappingSpec::MinCost(CostObjective::Latency)).unwrap());
     });
     // 4-unit MPSoC: only tractable on the water-filling fast path (the
     // enumerator-vs-fast-path comparison lives in bench_mincost)
-    let quad = Platform::mpsoc4();
+    let quad = session("resnet20", "mpsoc4");
     let mc4 = b.run("min_cost_lat4_resnet20", || {
-        black_box(baselines::min_cost(&g, &quad, baselines::CostObjective::Latency));
+        black_box(quad.mapping(&MappingSpec::MinCost(CostObjective::Latency)).unwrap());
     });
     let _ = write!(
         json,

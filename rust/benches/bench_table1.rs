@@ -2,25 +2,30 @@
 //! fragmentation accounting + utilization) of every baseline mapping on
 //! every benchmark model — the exact per-row work of `odimo table1`.
 
-use odimo::coordinator::baselines::{self, BASELINE_NAMES};
-use odimo::coordinator::scheduler::deploy;
-use odimo::hw::soc::SocConfig;
-use odimo::hw::Platform;
-use odimo::model::{build, ALL_MODELS};
+use odimo::api::{MappingSpec, SessionBuilder};
+use odimo::coordinator::baselines::BASELINE_NAMES;
+use odimo::model::ALL_MODELS;
 use odimo::util::bench::{black_box, Bench};
 
 fn main() {
     let mut b = Bench::new("table1");
-    let p = Platform::diana();
     for name in ALL_MODELS {
-        let g = build(name).unwrap();
+        let session = SessionBuilder::new(name)
+            .platform("diana")
+            .threads(1)
+            .build()
+            .expect("session");
         let mappings: Vec<_> = BASELINE_NAMES
             .iter()
-            .map(|bn| baselines::by_name(&g, &p, bn).unwrap())
+            .map(|bn| {
+                session
+                    .mapping(&MappingSpec::Baseline((*bn).to_string()))
+                    .unwrap()
+            })
             .collect();
         b.run(&format!("deploy_all_baselines_{name}"), || {
             for m in &mappings {
-                black_box(deploy(&g, m, &p, SocConfig::default()));
+                black_box(session.deploy(m).unwrap());
             }
         });
     }

@@ -2,26 +2,30 @@
 //! (`da_bits` absent everywhere): an 8-core RISC-V cluster modeled
 //! proportionally plus an NE16-style accelerator.
 //!
-//! Loads `config/gap9.toml` (falling back to the identical built-in),
-//! builds the water-filling min-cost and even-split mappings of
-//! ResNet20 across both units, deploys them on the simulator, and
-//! verifies the quantized engine against the naive oracle — with no
-//! D/A views materialized at all.
+//! Loads `config/gap9.toml` (falling back to the identical built-in)
+//! into an `odimo::api::Session`, deploys the water-filling min-cost
+//! and even-split mappings of ResNet20 across both units, and verifies
+//! `Session::infer` (the planned quantized engine, plan-cached inside
+//! the session) against the naive oracle — with no D/A views
+//! materialized at all.
 //!
 //!     cargo run --release --example deploy_gap9
 
-use odimo::coordinator::{baselines, scheduler::deploy};
-use odimo::hw::soc::SocConfig;
-use odimo::hw::Platform;
+use odimo::api::{MappingSpec, SessionBuilder};
 use odimo::quant::r#ref::RefNet;
-use odimo::quant::{synth_mapping_n, synth_params_on, ParamSet, QuantNet};
+use odimo::quant::{synth_mapping_n, synth_params_on, ParamSet};
 use odimo::util::prng::Pcg32;
+
+fn builder(model: &str) -> SessionBuilder {
+    SessionBuilder::new(model).platform("config/gap9.toml")
+}
 
 fn main() -> anyhow::Result<()> {
     odimo::util::logging::init();
-    let platform = Platform::from_toml_file(std::path::Path::new("config/gap9.toml"))
-        .unwrap_or_else(|_| Platform::gap9());
-    let g = odimo::model::resnet20();
+    let session = builder("resnet20")
+        .build()
+        .or_else(|_| SessionBuilder::new("resnet20").platform("gap9").build())?;
+    let platform = session.platform();
     println!(
         "platform {}: {} accelerators ({}), D/A widths {:?}",
         platform.name,
@@ -31,9 +35,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     for name in ["even_split", "min_cost_lat", "min_cost_en"] {
-        let mapping = baselines::by_name(&g, &platform, name).expect("baseline");
-        mapping.validate(&g, platform.n_acc())?;
-        let rep = deploy(&g, &mapping, &platform, SocConfig::default());
+        let mapping = session.mapping(&MappingSpec::Baseline(name.into()))?;
+        let rep = session.deploy(&mapping)?;
         let util = platform
             .accelerators
             .iter()
@@ -48,17 +51,23 @@ fn main() -> anyhow::Result<()> {
     }
 
     // engine vs oracle on the tiny model (the oracle is a scalar
-    // interpreter): bit-exactness without any D/A view
-    let tg = odimo::model::tinycnn();
-    let (names, values) = synth_params_on(&tg, &platform, 7);
-    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
-    let mapping = synth_mapping_n(&tg, platform.n_acc(), 11);
-    let engine = QuantNet::compile_params(&params, &tg, &mapping, &platform)?;
-    let oracle = RefNet::compile(&params, &tg, &mapping, &platform)?;
+    // interpreter): bit-exactness without any D/A view. The session is
+    // seeded so its synthetic parameter snapshot is reproducible for
+    // the oracle side.
+    let mut tsession = builder("tinycnn")
+        .seed(7)
+        .build()
+        .or_else(|_| SessionBuilder::new("tinycnn").platform("gap9").seed(7).build())?;
+    let tg = tsession.graph().clone();
+    let mapping = synth_mapping_n(&tg, tsession.platform().n_acc(), 11);
     let (c, h, w) = tg.input_shape;
     let mut rng = Pcg32::new(5, 77);
     let x: Vec<f32> = (0..2 * c * h * w).map(|_| rng.next_f32()).collect();
-    let got = engine.forward(&x, 2)?;
+    let got = tsession.infer(&mapping, &x, 2)?;
+    // the oracle, compiled over the same seeded parameter derivation
+    let (names, values) = synth_params_on(&tg, tsession.platform(), tsession.seed());
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let oracle = RefNet::compile(&params, &tg, &mapping, tsession.platform())?;
     let want = oracle.forward(&x, 2)?;
     let diff = got
         .iter()

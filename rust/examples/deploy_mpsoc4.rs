@@ -2,27 +2,31 @@
 //! stress case: an int8 NPU, two IMC macros with *distinct* D/A widths
 //! (7-bit + 6-bit), and a GPU-style proportional unit.
 //!
-//! Loads `config/mpsoc4.toml` (falling back to the identical built-in),
-//! builds the water-filling min-cost mapping of ResNet20 over all four
-//! units (the exhaustive enumerator would need ~cout^3 compositions per
-//! layer here — see `make bench-mincost` for the measured gap), deploys
-//! it on the simulator with per-unit utilization, and proves the
-//! per-width D/A engine bit-exact against the naive oracle.
+//! Loads `config/mpsoc4.toml` (falling back to the identical built-in)
+//! into an `odimo::api::Session`, deploys the water-filling min-cost
+//! mapping of ResNet20 over all four units (the exhaustive enumerator
+//! would need ~cout^3 compositions per layer here — see `make
+//! bench-mincost` for the measured gap) with per-unit utilization, and
+//! proves the per-width D/A engine behind `Session::infer` bit-exact
+//! against the naive oracle.
 //!
 //!     cargo run --release --example deploy_mpsoc4
 
-use odimo::coordinator::{baselines, scheduler::deploy};
-use odimo::hw::soc::SocConfig;
-use odimo::hw::Platform;
+use odimo::api::{CostObjective, MappingSpec, SessionBuilder};
 use odimo::quant::r#ref::RefNet;
-use odimo::quant::{synth_params_on, ParamSet, QuantNet};
+use odimo::quant::{synth_params_on, ParamSet};
 use odimo::util::prng::Pcg32;
+
+fn builder(model: &str) -> SessionBuilder {
+    SessionBuilder::new(model).platform("config/mpsoc4.toml")
+}
 
 fn main() -> anyhow::Result<()> {
     odimo::util::logging::init();
-    let platform = Platform::from_toml_file(std::path::Path::new("config/mpsoc4.toml"))
-        .unwrap_or_else(|_| Platform::mpsoc4());
-    let g = odimo::model::resnet20();
+    let session = builder("resnet20")
+        .build()
+        .or_else(|_| SessionBuilder::new("resnet20").platform("mpsoc4").build())?;
+    let platform = session.platform();
     println!(
         "platform {}: {} accelerators ({}), D/A widths {:?}",
         platform.name,
@@ -32,9 +36,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     for name in ["even_split", "min_cost_lat", "min_cost_en", "all_8bit"] {
-        let mapping = baselines::by_name(&g, &platform, name).expect("baseline");
-        mapping.validate(&g, platform.n_acc())?;
-        let rep = deploy(&g, &mapping, &platform, SocConfig::default());
+        let mapping = session.mapping(&MappingSpec::Baseline(name.into()))?;
+        let rep = session.deploy(&mapping)?;
         let util = platform
             .accelerators
             .iter()
@@ -58,19 +61,21 @@ fn main() -> anyhow::Result<()> {
     }
 
     // the acceptance gate: water-filling min-cost deployed through the
-    // quantized engine, bit-exact vs the oracle despite two distinct
-    // D/A widths coexisting per layer
-    let tg = odimo::model::tinycnn();
-    let (names, values) = synth_params_on(&tg, &platform, 13);
-    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
-    let mapping = baselines::min_cost(&tg, &platform, baselines::CostObjective::Latency);
-    mapping.validate(&tg, platform.n_acc())?;
-    let engine = QuantNet::compile_params(&params, &tg, &mapping, &platform)?;
-    let oracle = RefNet::compile(&params, &tg, &mapping, &platform)?;
+    // session's quantized engine, bit-exact vs the oracle despite two
+    // distinct D/A widths coexisting per layer
+    let mut tsession = builder("tinycnn")
+        .seed(13)
+        .build()
+        .or_else(|_| SessionBuilder::new("tinycnn").platform("mpsoc4").seed(13).build())?;
+    let tg = tsession.graph().clone();
+    let mapping = tsession.mapping(&MappingSpec::MinCost(CostObjective::Latency))?;
     let (c, h, w) = tg.input_shape;
     let mut rng = Pcg32::new(17, 77);
     let x: Vec<f32> = (0..2 * c * h * w).map(|_| rng.next_f32()).collect();
-    let got = engine.forward(&x, 2)?;
+    let got = tsession.infer(&mapping, &x, 2)?;
+    let (names, values) = synth_params_on(&tg, tsession.platform(), tsession.seed());
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let oracle = RefNet::compile(&params, &tg, &mapping, tsession.platform())?;
     let want = oracle.forward(&x, 2)?;
     let diff = got
         .iter()
@@ -78,7 +83,7 @@ fn main() -> anyhow::Result<()> {
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
     println!(
-        "\nwater-filled min-cost through the quant engine vs oracle on {}: max |diff| = {diff:e}",
+        "\nwater-filled min-cost through the session engine vs oracle on {}: max |diff| = {diff:e}",
         tg.name
     );
     assert!(diff < 1e-4, "engine diverged from oracle");

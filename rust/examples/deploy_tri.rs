@@ -1,25 +1,30 @@
 //! 3-accelerator deployment example — proves the platform registry's
 //! generality end-to-end with no artifacts required.
 //!
-//! Loads the shipped `config/diana_ne16.toml` platform (DIANA's int8 PE
-//! array + ternary AIMC macro, plus an NE16-style 4-bit digital unit),
-//! builds min-cost and even-split mappings of ResNet20 across all three
-//! units, deploys them on the simulator, and prints a report with
-//! per-unit utilization for every accelerator.
+//! One `odimo::api::Session` is the whole setup: it loads the shipped
+//! `config/diana_ne16.toml` platform (DIANA's int8 PE array + ternary
+//! AIMC macro, plus an NE16-style 4-bit digital unit), builds min-cost
+//! and even-split mappings of ResNet20 across all three units from
+//! typed `MappingSpec`s, deploys them on the simulator, and prints a
+//! report with per-unit utilization for every accelerator.
 //!
 //!     cargo run --release --example deploy_tri
 
-use odimo::coordinator::{baselines, scheduler::deploy};
-use odimo::hw::soc::SocConfig;
-use odimo::hw::Platform;
+use odimo::api::{MappingSpec, Session, SessionBuilder};
+
+fn session() -> anyhow::Result<Session> {
+    // prefer the TOML (exercising the config path); fall back to the
+    // identical built-in when run from an unexpected cwd
+    SessionBuilder::new("resnet20")
+        .platform("config/diana_ne16.toml")
+        .build()
+        .or_else(|_| SessionBuilder::new("resnet20").platform("diana_ne16").build())
+}
 
 fn main() -> anyhow::Result<()> {
     odimo::util::logging::init();
-    // prefer the TOML (exercising the config path); fall back to the
-    // identical built-in when run from an unexpected cwd
-    let platform = Platform::from_toml_file(std::path::Path::new("config/diana_ne16.toml"))
-        .unwrap_or_else(|_| Platform::diana_ne16());
-    let g = odimo::model::resnet20();
+    let session = session()?;
+    let platform = session.platform();
     println!(
         "platform {}: {} accelerators ({})",
         platform.name,
@@ -28,9 +33,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     for name in ["even_split", "min_cost_lat", "min_cost_en", "all_8bit"] {
-        let mapping = baselines::by_name(&g, &platform, name).expect("baseline");
-        mapping.validate(&g, platform.n_acc())?;
-        let rep = deploy(&g, &mapping, &platform, SocConfig::default());
+        let mapping = session.mapping(&MappingSpec::Baseline(name.into()))?;
+        let rep = session.deploy(&mapping)?;
         let util = platform
             .accelerators
             .iter()
@@ -54,8 +58,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     // per-layer breakdown of the even split (first rows)
-    let mapping = baselines::even_split(&g, platform.n_acc());
-    let rep = deploy(&g, &mapping, &platform, SocConfig::default());
+    let mapping = session.mapping(&MappingSpec::Baseline("even_split".into()))?;
+    let rep = session.deploy(&mapping)?;
     println!("\nper-layer busy cycles, even_split (first 8 rows):");
     print!("{:<12}", "layer");
     for a in &platform.accelerators {

@@ -1,0 +1,35 @@
+//! `odimo::api` — the one typed entry point for the whole deploy flow:
+//! **map → simulate → deploy → infer → sweep → serve**.
+//!
+//! Everything the CLI verbs, the examples and the benches used to
+//! re-thread by hand (`Graph`, `&Platform`, mapping dispatch, thread
+//! pool, seed, directories, smoke sizing) is validated once by
+//! [`SessionBuilder::build`] and then owned by a [`Session`]:
+//!
+//! ```text
+//!   SessionBuilder ── validates once ──> Session
+//!     model ──────> Graph (loaded)        ├─ mapping(MappingSpec)   Mapping
+//!     platform ───> Platform (resolved)   ├─ simulate(&Mapping)     RunReport
+//!     threads ────> ThreadPool (spawned)  ├─ deploy(&Mapping)       DeployReport
+//!     seed, dirs,                         ├─ infer(&Mapping, x, n)  logits
+//!     smoke, knobs                        ├─ sweep()                SweepResult
+//!                                         └─ serve(&ServeOpts)      ServeReport
+//!               owned, reused state:  plan cache (LRU, shared by
+//!               infer + serve) and the lazily built/cached frontier
+//! ```
+//!
+//! The crate's internal engines (`hw::soc::simulate`, the scheduler,
+//! the closed-loop serve driver) stay where they are; this module is
+//! the only supported way to *drive* them. Scale-out follows from the
+//! ownership story: replicas are "N sessions", and anything async
+//! hangs off session-owned state instead of globals.
+//!
+//! See [`SessionBuilder`] for a doc-tested end-to-end example.
+
+#![deny(missing_docs)]
+
+mod session;
+
+pub use crate::coordinator::baselines::CostObjective;
+pub use crate::serve::ServeOpts;
+pub use session::{MappingSpec, Session, SessionBuilder, SweepResult};

@@ -1,0 +1,605 @@
+//! [`SessionBuilder`] / [`Session`] — the typed workflow facade.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+use once_cell::sync::OnceCell;
+
+use crate::config::RunConfig;
+use crate::coordinator::baselines::{self, CostObjective, BASELINE_NAMES};
+use crate::coordinator::scheduler::{self, DeployReport};
+use crate::coordinator::Mapping;
+use crate::hw::soc::{simulate, RunReport, SocConfig};
+use crate::hw::Platform;
+use crate::model::{self, Graph, ALL_MODELS};
+use crate::quant::{synth_params_on, ParamSet, QuantNet, QuantPlan};
+use crate::serve::batcher::PlanCache;
+use crate::serve::{self, metrics, sweep, FrontierPoint, ServeOpts, ServeReport, SweepCfg};
+use crate::util::json;
+use crate::util::pool::ThreadPool;
+
+/// How a [`Session`] produces a [`Mapping`] — the typed replacement for
+/// the stringly `--baseline <name> | --mapping <file>` dispatch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MappingSpec {
+    /// A named baseline (see `coordinator::baselines::BASELINE_NAMES`:
+    /// `all_8bit`, `all_ternary`, `io8_backbone_ternary`, `even_split`,
+    /// `min_cost_lat`, `min_cost_en`).
+    Baseline(String),
+    /// A mapping JSON file previously written by the pipeline.
+    File(PathBuf),
+    /// The static min-cost optimum under the given objective
+    /// (water-filling for latency, Pareto DP for energy).
+    MinCost(CostObjective),
+}
+
+/// The lazily built, in-memory + on-disk cached sweep frontier.
+#[derive(Debug)]
+pub struct SweepResult {
+    /// Pareto frontier points, latency-ascending.
+    pub points: Vec<FrontierPoint>,
+    /// Whether the points were loaded from a valid on-disk cache
+    /// (same sweep knobs *and* same platform spec hash).
+    pub cache_hit: bool,
+}
+
+/// Builder for a [`Session`]: collects (model, platform, threads, seed,
+/// directories, smoke) and validates everything once in
+/// [`SessionBuilder::build`].
+///
+/// ```
+/// # fn main() -> anyhow::Result<()> {
+/// use odimo::api::{MappingSpec, SessionBuilder};
+///
+/// let results = std::env::temp_dir().join("odimo_api_doc");
+/// let session = SessionBuilder::new("tinycnn")
+///     .platform("diana") // built-in name or a platform .toml path
+///     .threads(2)
+///     .seed(7)
+///     .results_dir(&results)
+///     .build()?;
+/// let mapping = session.mapping(&MappingSpec::Baseline("min_cost_lat".into()))?;
+/// let report = session.simulate(&mapping)?;
+/// assert!(report.total_cycles > 0);
+/// # Ok(()) }
+/// ```
+#[derive(Clone, Debug)]
+pub struct SessionBuilder {
+    model: String,
+    platform: PlatformArg,
+    threads: Option<usize>,
+    seed: u64,
+    smoke: bool,
+    non_ideal_l1: bool,
+    artifacts_dir: PathBuf,
+    results_dir: PathBuf,
+    plan_cache_cap: usize,
+    sweep_calib: usize,
+    sweep_blend_steps: usize,
+}
+
+#[derive(Clone, Debug)]
+enum PlatformArg {
+    /// Built-in name or TOML path, resolved at build time.
+    Named(String),
+    /// An already-resolved platform (programmatic use, tests).
+    Spec(Box<Platform>),
+}
+
+impl SessionBuilder {
+    /// Start a builder for `model` (see `model::ALL_MODELS`) with the
+    /// default platform (`diana`), seed 1234, machine-sized thread
+    /// pool, and `artifacts` / `results` directories.
+    pub fn new(model: impl Into<String>) -> Self {
+        let sweep = SweepCfg::default();
+        SessionBuilder {
+            model: model.into(),
+            platform: PlatformArg::Named("diana".into()),
+            threads: None,
+            seed: 1234,
+            smoke: false,
+            non_ideal_l1: false,
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            plan_cache_cap: 8,
+            sweep_calib: sweep.calib,
+            sweep_blend_steps: sweep.blend_steps,
+        }
+    }
+
+    /// Builder preset from a [`RunConfig`] (CLI `--config` path): model,
+    /// platform, directories, data seed and the L1 ablation switch.
+    pub fn from_run_config(cfg: &RunConfig) -> Self {
+        let mut b = SessionBuilder::new(cfg.model.clone());
+        b.platform = PlatformArg::Spec(Box::new(cfg.platform.clone()));
+        b.artifacts_dir = cfg.artifacts_dir.clone();
+        b.results_dir = cfg.results_dir.clone();
+        b.seed = cfg.data_seed;
+        b.non_ideal_l1 = cfg.non_ideal_l1;
+        b
+    }
+
+    /// Replace the model this builder targets (CLI override layering).
+    pub fn model(mut self, model: impl Into<String>) -> Self {
+        self.model = model.into();
+        self
+    }
+
+    /// Deployment platform: a built-in name (`diana`, `diana_ne16`,
+    /// `gap9`, `mpsoc4`) or a platform `.toml` path.
+    pub fn platform(mut self, name_or_path: impl Into<String>) -> Self {
+        self.platform = PlatformArg::Named(name_or_path.into());
+        self
+    }
+
+    /// Deployment platform from an already-constructed spec.
+    pub fn platform_spec(mut self, platform: Platform) -> Self {
+        self.platform = PlatformArg::Spec(Box::new(platform));
+        self
+    }
+
+    /// Worker threads for engine runs (sweep scoring, `infer`, serve
+    /// batches). Must be >= 1; default: machine parallelism, capped.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Global seed: synthetic parameters, calibration batches, and the
+    /// serve request stream all derive from it.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Smoke mode: tiny serve request streams (CI-sized defaults).
+    pub fn smoke(mut self, on: bool) -> Self {
+        self.smoke = on;
+        self
+    }
+
+    /// Enable L1 tiling penalties in the SoC simulator (ablation knob;
+    /// `simulate`/`deploy` only — `sweep`/`serve` refuse to run on a
+    /// non-ideal-L1 session because the frontier is always scored
+    /// ideal-L1, mirroring the CLI's `--non-ideal-l1` rejection).
+    pub fn non_ideal_l1(mut self, on: bool) -> Self {
+        self.non_ideal_l1 = on;
+        self
+    }
+
+    /// Directory holding AOT artifacts (reserved for pipeline verbs).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Directory for the frontier cache and serve reports.
+    pub fn results_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.results_dir = dir.into();
+        self
+    }
+
+    /// Capacity of the session-owned LRU plan cache (default 8).
+    pub fn plan_cache_cap(mut self, cap: usize) -> Self {
+        self.plan_cache_cap = cap;
+        self
+    }
+
+    /// Calibration images scored per sweep candidate (default 16).
+    pub fn sweep_calib(mut self, calib: usize) -> Self {
+        self.sweep_calib = calib;
+        self
+    }
+
+    /// Sweep blend grid density (default 4).
+    pub fn sweep_blend_steps(mut self, steps: usize) -> Self {
+        self.sweep_blend_steps = steps;
+        self
+    }
+
+    /// Validate everything once and construct the [`Session`]: the
+    /// model must exist, the platform must resolve (built-in name or
+    /// readable TOML), and `threads`, if set, must be >= 1.
+    pub fn build(self) -> Result<Session> {
+        if !ALL_MODELS.contains(&self.model.as_str()) {
+            return Err(anyhow!(
+                "unknown model '{}' (choose from {ALL_MODELS:?})",
+                self.model
+            ));
+        }
+        let graph = model::build(&self.model)?;
+        let platform = match self.platform {
+            PlatformArg::Named(s) => Platform::resolve(&s)?,
+            PlatformArg::Spec(p) => *p,
+        };
+        if self.threads == Some(0) {
+            return Err(anyhow!("threads must be >= 1 (got 0)"));
+        }
+        let sweep_cfg = SweepCfg {
+            seed: self.seed,
+            calib: self.sweep_calib,
+            blend_steps: self.sweep_blend_steps,
+        };
+        Ok(Session {
+            graph,
+            platform,
+            threads: self.threads,
+            pool: OnceCell::new(),
+            seed: self.seed,
+            smoke: self.smoke,
+            soc: SocConfig { non_ideal_l1: self.non_ideal_l1 },
+            artifacts_dir: self.artifacts_dir,
+            results_dir: self.results_dir,
+            sweep_cfg,
+            frontier: None,
+            plans: PlanCache::new(self.plan_cache_cap),
+            params: None,
+        })
+    }
+}
+
+/// One validated (model, platform) workflow context — the only public
+/// entry point for map → simulate → deploy → infer → sweep → serve.
+///
+/// The session owns the loaded [`Graph`], the resolved [`Platform`],
+/// the worker [`ThreadPool`], the LRU plan cache, and the lazily
+/// built/cached sweep frontier; every method reuses that state, so
+/// repeated calls never re-validate, re-resolve, re-spawn or
+/// re-compile what the session already holds. Replicas are "N
+/// sessions": each owns its pool and caches outright, nothing is
+/// global.
+pub struct Session {
+    graph: Graph,
+    platform: Platform,
+    /// Validated worker-thread request (`None` = machine default); the
+    /// pool itself spawns lazily so report-reading or simulator-only
+    /// sessions never start worker threads.
+    threads: Option<usize>,
+    pool: OnceCell<ThreadPool>,
+    seed: u64,
+    smoke: bool,
+    soc: SocConfig,
+    artifacts_dir: PathBuf,
+    results_dir: PathBuf,
+    sweep_cfg: SweepCfg,
+    frontier: Option<SweepResult>,
+    plans: PlanCache,
+    /// Synthetic parameter snapshot (names, values), built on first use
+    /// by `infer`/`serve` from (graph, platform, seed) — the same
+    /// derivation the sweep scorer uses, so served logits match swept
+    /// logits.
+    params: Option<(Vec<String>, Vec<Vec<f32>>)>,
+}
+
+impl Session {
+    /// The loaded model graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The resolved deployment platform.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// The session's worker pool (spawned on first use).
+    pub fn pool(&self) -> &ThreadPool {
+        init_pool(&self.pool, self.threads)
+    }
+
+    /// The session seed (parameters, calibration, request streams).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Whether the session runs smoke-sized defaults.
+    pub fn smoke(&self) -> bool {
+        self.smoke
+    }
+
+    /// The artifacts directory the session was built with.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// The results directory (frontier cache, serve reports).
+    pub fn results_dir(&self) -> &Path {
+        &self.results_dir
+    }
+
+    /// The session-owned plan cache (hit/miss/compile-time counters).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
+    }
+
+    /// On-disk path of this session's frontier cache file.
+    pub fn frontier_path(&self) -> PathBuf {
+        sweep::frontier_path(&self.results_dir, &self.graph.name, &self.platform.name)
+    }
+
+    /// On-disk path of this session's serve report.
+    pub fn report_path(&self) -> PathBuf {
+        serve::report_path(&self.results_dir, &self.graph.name, &self.platform.name)
+    }
+
+    /// Produce (and validate) a mapping from a typed [`MappingSpec`].
+    pub fn mapping(&self, spec: &MappingSpec) -> Result<Mapping> {
+        let mapping = match spec {
+            MappingSpec::Baseline(name) => baselines::by_name(&self.graph, &self.platform, name)
+                .ok_or_else(|| {
+                    anyhow!("unknown baseline '{name}' (choose from {BASELINE_NAMES:?})")
+                })?,
+            MappingSpec::File(path) => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("reading mapping {}: {e}", path.display()))?;
+                Mapping::from_json(&json::parse(&text)?)?
+            }
+            MappingSpec::MinCost(objective) => {
+                baselines::min_cost(&self.graph, &self.platform, *objective)
+            }
+        };
+        mapping.validate(&self.graph, self.platform.n_acc())?;
+        Ok(mapping)
+    }
+
+    /// Cost `mapping` on the SoC simulator (cycles, ms, uJ, per-unit
+    /// utilization, Fig.-6 timeline) under the session's simulator
+    /// config.
+    pub fn simulate(&self, mapping: &Mapping) -> Result<RunReport> {
+        mapping.validate(&self.graph, self.platform.n_acc())?;
+        Ok(simulate(
+            &self.graph,
+            &mapping.channel_split(self.platform.n_acc()),
+            &self.platform,
+            self.soc,
+        ))
+    }
+
+    /// Deploy `mapping` through the scheduler: simulator cost plus
+    /// fragmentation overhead and per-layer fragment counts.
+    pub fn deploy(&self, mapping: &Mapping) -> Result<DeployReport> {
+        mapping.validate(&self.graph, self.platform.n_acc())?;
+        Ok(scheduler::deploy(&self.graph, mapping, &self.platform, self.soc))
+    }
+
+    /// Run one quantized-engine batch under `mapping`: `x` is NCHW in
+    /// [0, 1], `batch` images; returns (batch, classes) logits. Plans
+    /// compile once per mapping into the session-owned LRU cache and
+    /// are replayed on every later call (the serve path shares the same
+    /// cache). Parameters are the session's seeded synthetic snapshot.
+    pub fn infer(&mut self, mapping: &Mapping, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        mapping.validate(&self.graph, self.platform.n_acc())?;
+        self.ensure_params();
+        let (names, values) = self.params.as_ref().expect("params just ensured");
+        let key = QuantPlan::cache_key(&self.graph.name, &self.platform.name, mapping);
+        let graph = &self.graph;
+        let platform = &self.platform;
+        let pool = init_pool(&self.pool, self.threads);
+        // the ParamSet (a name-indexed view) is only needed when the
+        // plan actually compiles, so build it inside the miss closure —
+        // the steady-state hit path pays one hash + mapping compare
+        let net = self.plans.get_or_compile(key, mapping, || {
+            let params = ParamSet::new(names.iter().map(|s| s.as_str()), values);
+            QuantNet::compile_params(&params, graph, mapping, platform)
+        })?;
+        net.forward_pool(x, batch, pool)
+    }
+
+    /// Build — or load from the invalidation-aware disk cache — the
+    /// sweep frontier for this (model, platform). The result is also
+    /// cached in memory, so later calls (and `serve`) are free. The
+    /// disk cache is keyed by sweep knobs *and* the platform's
+    /// [`Platform::spec_hash`], so an edited platform TOML re-sweeps
+    /// instead of silently reusing stale points.
+    pub fn sweep(&mut self) -> Result<&SweepResult> {
+        // mirror the CLI's rejection of --non-ideal-l1 on sweep/serve:
+        // the frontier is always scored under the ideal-L1 simulator
+        // config, so serving from it with a different simulate() config
+        // would make SLA decisions disagree with the session's own
+        // simulator numbers
+        if self.soc.non_ideal_l1 {
+            return Err(anyhow!(
+                "sweep/serve score the ideal-L1 simulator config; build the \
+                 session without non_ideal_l1 to use the frontier"
+            ));
+        }
+        if self.frontier.is_none() {
+            let (points, cache_hit) = sweep::load_or_sweep(
+                &self.results_dir,
+                &self.graph,
+                &self.platform,
+                &self.sweep_cfg,
+                init_pool(&self.pool, self.threads),
+            )?;
+            if points.is_empty() {
+                return Err(anyhow!(
+                    "empty frontier for {} on {}",
+                    self.graph.name,
+                    self.platform.name
+                ));
+            }
+            self.frontier = Some(SweepResult { points, cache_hit });
+        }
+        Ok(self.frontier.as_ref().expect("frontier just filled"))
+    }
+
+    /// Run the closed-loop SLA-aware serving driver over the session's
+    /// frontier and plan cache, persist the report under the results
+    /// directory, and return it. Deterministic in (model, platform
+    /// spec, seed, opts) for everything except wall-clock throughput.
+    pub fn serve(&mut self, opts: &ServeOpts) -> Result<ServeReport> {
+        let n_requests = opts
+            .n_requests
+            .unwrap_or(if self.smoke { 24 } else { 96 });
+        self.sweep()?;
+        self.ensure_params();
+        let (names, values) = self.params.as_ref().expect("params just ensured");
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), values);
+        let frontier = &self.frontier.as_ref().expect("sweep just ran").points;
+        let report = serve::run_serve(
+            &self.graph,
+            &self.platform,
+            &params,
+            frontier,
+            init_pool(&self.pool, self.threads),
+            &mut self.plans,
+            opts,
+            n_requests,
+            self.seed,
+        )?;
+        let path = serve::report_path(&self.results_dir, &self.graph.name, &self.platform.name);
+        metrics::save_report(&path, &report)?;
+        log::info!("serve report written to {}", path.display());
+        Ok(report)
+    }
+
+    /// Load the dashboard report of the last `serve` run for this
+    /// (model, platform) from the results directory.
+    pub fn serve_report(&self) -> Result<ServeReport> {
+        let path = serve::report_path(&self.results_dir, &self.graph.name, &self.platform.name);
+        metrics::load_report(&path)
+            .map_err(|e| anyhow!("{e:#}\nrun `odimo serve` first to produce the report"))
+    }
+
+    fn ensure_params(&mut self) {
+        if self.params.is_none() {
+            let (names, values) = synth_params_on(&self.graph, &self.platform, self.seed);
+            self.params = Some((names, values));
+        }
+    }
+}
+
+/// Spawn-on-first-use accessor for the session pool. A free function
+/// over the cell (not a `&self` method) so callers holding disjoint
+/// `&mut` borrows of other session fields can still reach the pool.
+fn init_pool(cell: &OnceCell<ThreadPool>, threads: Option<usize>) -> &ThreadPool {
+    cell.get_or_init(|| match threads {
+        Some(n) => ThreadPool::new(n),
+        None => ThreadPool::with_default_size(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn session(model: &str, platform: &str, dir: &str) -> Session {
+        let results = std::env::temp_dir().join(dir);
+        let _ = std::fs::remove_dir_all(&results);
+        SessionBuilder::new(model)
+            .platform(platform)
+            .threads(2)
+            .seed(7)
+            .results_dir(results)
+            .sweep_calib(4)
+            .sweep_blend_steps(2)
+            .build()
+            .unwrap()
+    }
+
+    // ---- golden parity: the facade must be bit-identical to the ----
+    // ---- pre-refactor free-function paths it wraps             ----
+
+    #[test]
+    fn simulate_parity_with_direct_path() {
+        for plat in ["diana", "mpsoc4"] {
+            let s = session("tinycnn", plat, "odimo_api_sim_parity");
+            for name in ["all_8bit", "even_split", "min_cost_lat", "min_cost_en"] {
+                let m = s.mapping(&MappingSpec::Baseline(name.into())).unwrap();
+                let got = s.simulate(&m).unwrap();
+                let want = simulate(
+                    s.graph(),
+                    &m.channel_split(s.platform().n_acc()),
+                    s.platform(),
+                    SocConfig::default(),
+                );
+                assert_eq!(got.total_cycles, want.total_cycles, "{plat}/{name}");
+                assert_eq!(got.energy_uj, want.energy_uj, "{plat}/{name}");
+                assert_eq!(got.util, want.util, "{plat}/{name}");
+                assert_eq!(got.channel_frac, want.channel_frac, "{plat}/{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn deploy_parity_with_direct_path() {
+        for plat in ["diana", "mpsoc4"] {
+            let s = session("tinycnn", plat, "odimo_api_dep_parity");
+            for name in ["even_split", "min_cost_lat"] {
+                let m = s.mapping(&MappingSpec::Baseline(name.into())).unwrap();
+                let got = s.deploy(&m).unwrap();
+                let want =
+                    scheduler::deploy(s.graph(), &m, s.platform(), SocConfig::default());
+                assert_eq!(got.run.total_cycles, want.run.total_cycles, "{plat}/{name}");
+                assert_eq!(got.run.energy_uj, want.run.energy_uj, "{plat}/{name}");
+                assert_eq!(
+                    got.fragment_overhead_cycles, want.fragment_overhead_cycles,
+                    "{plat}/{name}"
+                );
+                assert_eq!(got.fragments, want.fragments, "{plat}/{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_parity_with_direct_path() {
+        for plat in ["diana", "mpsoc4"] {
+            let mut s = session("tinycnn", plat, &format!("odimo_api_sweep_parity_{plat}"));
+            let want =
+                sweep::sweep_frontier(s.graph(), s.platform(), &s.sweep_cfg, s.pool()).unwrap();
+            let got = s.sweep().unwrap();
+            assert!(!got.cache_hit, "first facade sweep computes fresh");
+            assert_eq!(got.points.len(), want.len(), "{plat}");
+            for (a, b) in got.points.iter().zip(&want) {
+                assert_eq!(a.label, b.label, "{plat}");
+                assert_eq!(a.cycles, b.cycles, "{plat}");
+                assert_eq!(a.energy_uj, b.energy_uj, "{plat}");
+                assert_eq!(a.acc_proxy, b.acc_proxy, "{plat}");
+                assert_eq!(a.mapping, b.mapping, "{plat}");
+            }
+        }
+    }
+
+    #[test]
+    fn infer_parity_with_direct_engine() {
+        let mut s = session("tinycnn", "diana", "odimo_api_infer_parity");
+        let m = s.mapping(&MappingSpec::MinCost(CostObjective::Latency)).unwrap();
+        let (c, h, w) = s.graph().input_shape;
+        let mut rng = Pcg32::new(5, 77);
+        let x: Vec<f32> = (0..2 * c * h * w).map(|_| rng.next_f32()).collect();
+        let got = s.infer(&m, &x, 2).unwrap();
+        // the direct path, with the session's own parameter derivation
+        let (names, values) = synth_params_on(s.graph(), s.platform(), s.seed());
+        let params = ParamSet::new(names.iter().map(|n| n.as_str()), &values);
+        let net = QuantNet::compile_params(&params, s.graph(), &m, s.platform()).unwrap();
+        let want = net.forward_pool(&x, 2, s.pool()).unwrap();
+        assert_eq!(got, want, "facade infer must be bit-identical");
+        // second call is a plan-cache hit
+        assert_eq!(s.plan_cache().misses, 1);
+        let again = s.infer(&m, &x, 2).unwrap();
+        assert_eq!(again, want);
+        assert_eq!(s.plan_cache().hits, 1);
+    }
+
+    #[test]
+    fn non_ideal_l1_flows_into_simulate() {
+        let results = std::env::temp_dir().join("odimo_api_l1");
+        let s = SessionBuilder::new("resnet20")
+            .platform("diana")
+            .threads(1)
+            .results_dir(&results)
+            .non_ideal_l1(true)
+            .build()
+            .unwrap();
+        let m = s.mapping(&MappingSpec::Baseline("even_split".into())).unwrap();
+        let got = s.simulate(&m).unwrap();
+        let want = simulate(
+            s.graph(),
+            &m.channel_split(2),
+            s.platform(),
+            SocConfig { non_ideal_l1: true },
+        );
+        assert_eq!(got.total_cycles, want.total_cycles);
+    }
+}

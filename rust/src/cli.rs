@@ -98,6 +98,298 @@ impl Args {
         }
         Ok(())
     }
+
+    /// Validate every given flag and switch against one [`VerbSpec`]
+    /// row of the shared verb table — a flag the verb would silently
+    /// ignore is an error, not a no-op.
+    pub fn expect_verb(&self, verb: &VerbSpec) -> Result<()> {
+        for k in self.flags.keys() {
+            if !verb.flags.contains(&k.as_str()) {
+                return Err(anyhow!(
+                    "unknown flag --{k} for '{}' (known: {})",
+                    self.subcommand,
+                    verb.flags
+                        .iter()
+                        .map(|f| format!("--{f}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                ));
+            }
+        }
+        for sw in &self.switches {
+            if !verb.switches.contains(&sw.as_str()) {
+                return Err(anyhow!("--{sw} has no effect on '{}'", self.subcommand));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---- CLI specification ------------------------------------------------
+//
+// The single source of truth for verbs and flags: `usage()` renders the
+// help text from these tables and `Args::expect_verb` validates against
+// the same rows, so the help can never drift from what is accepted
+// (pinned by the `spec_*` tests below).
+
+/// One flag the CLI understands. `value` is the placeholder rendered in
+/// the usage text; `None` marks a switch (present/absent, no value).
+pub struct FlagSpec {
+    /// Flag name without the `--` prefix.
+    pub name: &'static str,
+    /// Value placeholder (`None` = switch).
+    pub value: Option<&'static str>,
+    /// One-line help rendered in the FLAGS section.
+    pub help: &'static str,
+}
+
+/// Every flag or switch any verb accepts, in usage-text order.
+pub const FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "model",
+        value: Some("<tinycnn|resnet20|resnet18s|mbv1_025>"),
+        help: "model to operate on (default resnet20; sweep/serve default to tinycnn)",
+    },
+    FlagSpec { name: "config", value: Some("<file.toml>"), help: "load a RunConfig" },
+    FlagSpec {
+        name: "platform",
+        value: Some("<name|file>"),
+        help: "deployment SoC: built-in name (diana, diana_ne16, gap9, mpsoc4) or a \
+               platform .toml path",
+    },
+    FlagSpec {
+        name: "artifacts",
+        value: Some("<dir>"),
+        help: "artifacts directory (default artifacts)",
+    },
+    FlagSpec {
+        name: "results",
+        value: Some("<dir>"),
+        help: "results directory (default results)",
+    },
+    FlagSpec {
+        name: "smoke",
+        value: None,
+        help: "tiny schedules / request streams (CI, smoke testing)",
+    },
+    FlagSpec {
+        name: "lambdas",
+        value: Some("<a,b,c>"),
+        help: "override the sweep lambda list",
+    },
+    FlagSpec {
+        name: "baseline",
+        value: Some("<name>"),
+        help: "one of: all_8bit, all_ternary, io8_backbone_ternary, even_split, \
+               min_cost_lat, min_cost_en",
+    },
+    FlagSpec {
+        name: "non-ideal-l1",
+        value: None,
+        help: "enable L1 tiling penalties in the simulator",
+    },
+    FlagSpec {
+        name: "threads",
+        value: Some("<n>"),
+        help: "worker threads for engine runs (ThreadPool size; default: machine \
+               parallelism, capped)",
+    },
+    FlagSpec {
+        name: "seed",
+        value: Some("<u64>"),
+        help: "global seed, default 1234: data seed for the pipeline verbs, \
+               parameter/request streams for sweep/serve",
+    },
+    FlagSpec {
+        name: "mapping",
+        value: Some("<file.json>"),
+        help: "simulate a mapping loaded from JSON instead of a baseline",
+    },
+    FlagSpec {
+        name: "lambda",
+        value: Some("<v>"),
+        help: "search: regularization strength (default 0.5)",
+    },
+    FlagSpec { name: "reg", value: Some("<lat|en>"), help: "search: regularizer (default en)" },
+    FlagSpec {
+        name: "requests",
+        value: Some("<n>"),
+        help: "serve: requests in the synthetic stream (default 96; 24 with --smoke)",
+    },
+    FlagSpec {
+        name: "max-batch",
+        value: Some("<n>"),
+        help: "serve: batcher flush threshold (1 = unbatched)",
+    },
+    FlagSpec {
+        name: "max-wait",
+        value: Some("<cyc>"),
+        help: "serve: batcher wait bound, simulated cycles",
+    },
+    FlagSpec {
+        name: "gap",
+        value: Some("<cyc>"),
+        help: "serve: mean inter-arrival gap, simulated cycles",
+    },
+];
+
+/// One subcommand: its help line plus exactly the flags and switches it
+/// accepts (everything else is an error).
+pub struct VerbSpec {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// One-line help rendered in the COMMANDS section.
+    pub help: &'static str,
+    /// Accepted value flags (names into [`FLAGS`]).
+    pub flags: &'static [&'static str],
+    /// Accepted switches (names into [`FLAGS`] with `value: None`).
+    pub switches: &'static [&'static str],
+}
+
+/// Flags shared by the pipeline/experiment verbs.
+const COMMON_FLAGS: &[&str] =
+    &["model", "config", "platform", "artifacts", "results", "lambdas", "seed"];
+const COMMON_SWITCHES: &[&str] = &["smoke", "non-ideal-l1"];
+/// The serving verbs honor only these — `--config`/`--lambdas`/... and
+/// `--non-ideal-l1` would be silent no-ops (the sweep always scores the
+/// ideal-L1 simulator config), so they are rejected, not ignored.
+const SERVE_FLAGS: &[&str] = &["model", "platform", "results", "threads", "seed"];
+
+/// Every subcommand, in usage-text order.
+pub const VERBS: &[VerbSpec] = &[
+    VerbSpec {
+        name: "fig4",
+        help: "accuracy-vs-latency/energy Pareto sweep (paper Fig. 4)",
+        flags: COMMON_FLAGS,
+        switches: COMMON_SWITCHES,
+    },
+    VerbSpec {
+        name: "fig5",
+        help: "abstract-hardware sweeps (paper Fig. 5)",
+        flags: COMMON_FLAGS,
+        switches: COMMON_SWITCHES,
+    },
+    VerbSpec {
+        name: "table1",
+        help: "deployment table on the SoC simulator (paper Table I)",
+        flags: COMMON_FLAGS,
+        switches: COMMON_SWITCHES,
+    },
+    VerbSpec {
+        name: "fig6",
+        help: "per-layer utilization breakdown (paper Fig. 6)",
+        flags: COMMON_FLAGS,
+        switches: COMMON_SWITCHES,
+    },
+    VerbSpec {
+        name: "search",
+        help: "single ODiMO run at a fixed lambda",
+        flags: &["model", "config", "platform", "artifacts", "results", "lambdas",
+                 "seed", "lambda", "reg"],
+        switches: COMMON_SWITCHES,
+    },
+    VerbSpec {
+        name: "simulate",
+        help: "cost a baseline or mapping file on the SoC simulator",
+        flags: &["model", "config", "platform", "baseline", "mapping"],
+        switches: &["non-ideal-l1"],
+    },
+    VerbSpec {
+        name: "inspect",
+        help: "print model geometry and per-layer cost bounds",
+        flags: &["model", "config", "platform"],
+        switches: &[],
+    },
+    VerbSpec {
+        name: "platforms",
+        help: "list built-in platforms and their accelerators",
+        flags: &[],
+        switches: &[],
+    },
+    VerbSpec {
+        name: "sweep",
+        help: "build (or load) the cached mapping Pareto frontier",
+        flags: SERVE_FLAGS,
+        switches: &[],
+    },
+    VerbSpec {
+        name: "serve",
+        help: "closed-loop SLA-aware batched inference over the frontier",
+        flags: &["model", "platform", "results", "threads", "seed", "requests",
+                 "max-batch", "max-wait", "gap"],
+        switches: &["smoke"],
+    },
+    VerbSpec {
+        name: "serve-report",
+        help: "render the dashboard of the last serve run",
+        flags: &["model", "platform", "results"],
+        switches: &[],
+    },
+];
+
+/// Look up a verb's spec row by subcommand name.
+pub fn verb(name: &str) -> Option<&'static VerbSpec> {
+    VERBS.iter().find(|v| v.name == name)
+}
+
+/// Look up a flag's spec row by name.
+pub fn flag(name: &str) -> Option<&'static FlagSpec> {
+    FLAGS.iter().find(|f| f.name == name)
+}
+
+/// Names of every switch in [`FLAGS`] (what [`Args::parse`] must treat
+/// as valueless).
+pub fn switch_names() -> Vec<&'static str> {
+    FLAGS.iter().filter(|f| f.value.is_none()).map(|f| f.name).collect()
+}
+
+/// Append `text` word-wrapped at `width` columns, continuation lines
+/// indented by `indent` spaces.
+fn push_wrapped(out: &mut String, first_prefix: &str, indent: usize, width: usize, text: &str) {
+    let mut line = first_prefix.to_string();
+    for word in text.split_whitespace() {
+        if line.len() + 1 + word.len() > width && line.len() > indent {
+            out.push_str(line.trim_end());
+            out.push('\n');
+            line = " ".repeat(indent);
+        }
+        line.push(' ');
+        line.push_str(word);
+    }
+    out.push_str(line.trim_end());
+    out.push('\n');
+}
+
+/// Render the complete `odimo help` text from [`VERBS`] and [`FLAGS`]
+/// — the only generator, so help and accepted flags cannot drift.
+pub fn usage() -> String {
+    let mut s = String::from(
+        "odimo — precision-aware DNN mapping on multi-accelerator SoCs (ODiMO)\n\n\
+         USAGE: odimo <command> [flags]\n\nCOMMANDS\n",
+    );
+    for v in VERBS {
+        push_wrapped(&mut s, &format!("  {:<13}", v.name), 15, 78, v.help);
+        let mut toks: Vec<String> = v.flags.iter().map(|f| format!("--{f}")).collect();
+        toks.extend(v.switches.iter().map(|f| format!("[--{f}]")));
+        if !toks.is_empty() {
+            push_wrapped(&mut s, "                  flags:", 24, 78, &toks.join(" "));
+        }
+    }
+    s.push_str("  help          this text\n\nFLAGS\n");
+    for f in FLAGS {
+        let head = match f.value {
+            Some(v) => format!("  --{} {}", f.name, v),
+            None => format!("  --{}", f.name),
+        };
+        if head.len() >= 28 {
+            s.push_str(&head);
+            s.push('\n');
+            push_wrapped(&mut s, &" ".repeat(27), 27, 78, f.help);
+        } else {
+            push_wrapped(&mut s, &format!("{head:<27}"), 27, 78, f.help);
+        }
+    }
+    s
 }
 
 #[cfg(test)]
@@ -145,5 +437,94 @@ mod tests {
     #[test]
     fn positional_rejected() {
         assert!(Args::parse(&argv("fig4 oops"), &[]).is_err());
+    }
+
+    // ---- spec-table consistency: help text cannot drift ----
+
+    #[test]
+    fn spec_verbs_reference_only_declared_flags() {
+        for v in VERBS {
+            for f in v.flags {
+                let spec = flag(f).unwrap_or_else(|| panic!("{}: unknown flag '{f}'", v.name));
+                assert!(
+                    spec.value.is_some(),
+                    "{}: '{f}' is a switch but listed under flags",
+                    v.name
+                );
+            }
+            for sw in v.switches {
+                let spec =
+                    flag(sw).unwrap_or_else(|| panic!("{}: unknown switch '{sw}'", v.name));
+                assert!(
+                    spec.value.is_none(),
+                    "{}: '{sw}' takes a value but listed under switches",
+                    v.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spec_every_flag_is_used_by_some_verb() {
+        for f in FLAGS {
+            let used = VERBS
+                .iter()
+                .any(|v| v.flags.contains(&f.name) || v.switches.contains(&f.name));
+            assert!(used, "flag '--{}' is declared but no verb accepts it", f.name);
+        }
+    }
+
+    #[test]
+    fn spec_names_are_unique() {
+        for (i, v) in VERBS.iter().enumerate() {
+            assert!(VERBS[i + 1..].iter().all(|w| w.name != v.name), "dup verb {}", v.name);
+        }
+        for (i, f) in FLAGS.iter().enumerate() {
+            assert!(FLAGS[i + 1..].iter().all(|g| g.name != f.name), "dup flag {}", f.name);
+        }
+    }
+
+    #[test]
+    fn usage_mentions_every_verb_and_flag() {
+        let text = usage();
+        for v in VERBS {
+            assert!(
+                text.lines().any(|l| l.trim_start().starts_with(v.name)),
+                "usage lost verb '{}'",
+                v.name
+            );
+            // every flag the verb accepts appears on its flags line(s)
+            for f in v.flags.iter().chain(v.switches.iter()) {
+                assert!(text.contains(&format!("--{f}")), "usage lost --{f}");
+            }
+        }
+        for f in FLAGS {
+            assert!(
+                text.contains(&format!("--{}", f.name)),
+                "FLAGS section lost --{}",
+                f.name
+            );
+        }
+    }
+
+    #[test]
+    fn expect_verb_accepts_declared_rejects_undeclared() {
+        let serve = verb("serve").unwrap();
+        let ok = Args::parse(
+            &argv("serve --model tinycnn --requests 8 --smoke"),
+            &switch_names(),
+        )
+        .unwrap();
+        ok.expect_verb(serve).unwrap();
+        // a declared-elsewhere flag is rejected for this verb
+        let bad = Args::parse(&argv("serve --lambda 0.5"), &switch_names()).unwrap();
+        assert!(bad.expect_verb(serve).is_err());
+        // a globally-known switch the verb does not take is rejected
+        let sw = Args::parse(&argv("serve --non-ideal-l1"), &switch_names()).unwrap();
+        let e = sw.expect_verb(serve).unwrap_err().to_string();
+        assert!(e.contains("non-ideal-l1"), "{e}");
+        let sweep = verb("sweep").unwrap();
+        let smk = Args::parse(&argv("sweep --smoke"), &switch_names()).unwrap();
+        assert!(smk.expect_verb(sweep).is_err(), "--smoke has no effect on sweep");
     }
 }

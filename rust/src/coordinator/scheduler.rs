@@ -26,7 +26,11 @@ pub struct DeployReport {
 }
 
 /// Cost a mapping on the simulator, including fragmentation overhead.
-pub fn deploy(
+///
+/// Crate-internal since the `api::Session` facade landed: external
+/// callers go through [`Session::deploy`](crate::api::Session::deploy),
+/// which adds validation and carries the session's simulator config.
+pub(crate) fn deploy(
     graph: &Graph,
     mapping: &Mapping,
     platform: &Platform,

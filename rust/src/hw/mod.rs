@@ -9,6 +9,12 @@
 //! argument. Further built-ins: `diana_ne16` (3 accelerators), `gap9`
 //! (no-IMC RISC-V cluster + NE16), and `mpsoc4` (4 units with two
 //! distinct D/A widths); arbitrary SoCs load from `config/*.toml`.
+//!
+//! [`soc::simulate`] is the low-level costing kernel (raw
+//! [`ChannelSplit`] in, [`RunReport`] out) kept public for parity
+//! oracles and property tests; workflow code goes through
+//! [`Session::simulate`](crate::api::Session::simulate), which owns
+//! validation and the simulator config.
 
 pub mod abstracthw;
 pub mod energy;
@@ -20,5 +26,5 @@ pub mod timeline;
 
 pub use abstracthw::AbstractHw;
 pub use platform::{AcceleratorSpec, LatencyModel, Platform};
-pub use soc::{simulate, ChannelSplit, RunReport, SocConfig};
+pub use soc::{ChannelSplit, RunReport, SocConfig};
 pub use timeline::{Timeline, Utilization};

@@ -223,6 +223,72 @@ impl Platform {
         widths
     }
 
+    /// FNV-1a hash over the *resolved* platform spec — every field that
+    /// changes simulated cost or engine numerics (clock, L1, dw unit,
+    /// and each accelerator's precision/latency/power/D-A/wmem facts).
+    /// Two platforms sharing a `name` but differing in any spec field
+    /// hash differently, so caches keyed by name alone (e.g. the sweep
+    /// frontier) can detect an edited platform TOML instead of silently
+    /// serving stale points. Floats are hashed by their exact bit
+    /// pattern — any numeric edit, however small, changes the hash.
+    pub fn spec_hash(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        let eat_str = |s: &str, eat: &mut dyn FnMut(&[u8])| {
+            eat(&(s.len() as u64).to_le_bytes());
+            eat(s.as_bytes());
+        };
+        eat_str(&self.name, &mut eat);
+        eat(&self.f_clk_hz.to_bits().to_le_bytes());
+        eat(&(self.l1_bytes as u64).to_le_bytes());
+        eat(&(self.dw_acc as u64).to_le_bytes());
+        eat(&(self.accelerators.len() as u64).to_le_bytes());
+        for a in &self.accelerators {
+            eat_str(&a.name, &mut eat);
+            eat(&a.weight_bits.to_le_bytes());
+            eat(&a.act_bits.to_le_bytes());
+            // Option fields: tag byte then payload, so None never
+            // collides with a zero-valued Some
+            match a.da_bits {
+                Some(b) => {
+                    eat(&[1]);
+                    eat(&b.to_le_bytes());
+                }
+                None => eat(&[0]),
+            }
+            match a.latency {
+                LatencyModel::DigitalPe { pe } => {
+                    eat(&[1]);
+                    eat(&pe.to_le_bytes());
+                }
+                LatencyModel::ImcMacro { rows, cols } => {
+                    eat(&[2]);
+                    eat(&rows.to_le_bytes());
+                    eat(&cols.to_le_bytes());
+                }
+                LatencyModel::Proportional { macs_per_cycle } => {
+                    eat(&[3]);
+                    eat(&macs_per_cycle.to_bits().to_le_bytes());
+                }
+            }
+            eat(&a.p_act_mw.to_bits().to_le_bytes());
+            eat(&a.p_idle_mw.to_bits().to_le_bytes());
+            match a.wmem_bytes {
+                Some(w) => {
+                    eat(&[1]);
+                    eat(&(w as u64).to_le_bytes());
+                }
+                None => eat(&[0]),
+            }
+        }
+        h
+    }
+
     fn validate(self) -> Result<Self> {
         if self.accelerators.is_empty() {
             return Err(anyhow!("platform {}: no accelerators", self.name));
@@ -583,6 +649,27 @@ mod tests {
             p.accelerators[1].latency,
             LatencyModel::ImcMacro { rows: AIMC_ROWS, cols: AIMC_COLS }
         );
+    }
+
+    #[test]
+    fn spec_hash_tracks_every_cost_field() {
+        let base = Platform::diana();
+        assert_eq!(base.spec_hash(), Platform::diana().spec_hash(), "deterministic");
+        assert_ne!(base.spec_hash(), Platform::diana_ne16().spec_hash());
+        assert_ne!(base.spec_hash(), Platform::mpsoc4().spec_hash());
+        // same name, one edited power number: the hash must move (this
+        // is exactly the "operator edited the platform TOML" case the
+        // frontier cache invalidates on)
+        let mut edited = Platform::diana();
+        edited.accelerators[1].p_act_mw += 0.5;
+        assert_ne!(base.spec_hash(), edited.spec_hash());
+        let mut clocked = Platform::diana();
+        clocked.f_clk_hz *= 1.01;
+        assert_ne!(base.spec_hash(), clocked.spec_hash());
+        // None vs Some(0)-adjacent fields must not collide
+        let mut da = Platform::diana();
+        da.accelerators[0].da_bits = Some(8);
+        assert_ne!(base.spec_hash(), da.spec_hash());
     }
 
     #[test]

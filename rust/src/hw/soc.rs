@@ -56,6 +56,11 @@ impl RunReport {
 
 /// Simulate one inference of `graph` under `split` on `platform`.
 ///
+/// Low-level costing kernel: workflow code goes through
+/// [`Session::simulate`](crate::api::Session::simulate), which owns
+/// validation and the simulator config; this raw-`ChannelSplit` entry
+/// stays public for parity oracles and property tests.
+///
 /// Panics if `split` is missing a mappable layer, has the wrong number
 /// of per-accelerator counts, or counts that do not sum to the layer
 /// width — those are coordinator bugs, not run-time conditions.

@@ -16,7 +16,14 @@
 //! * **Serving ([`serve`])** — the online side: a cached per-platform
 //!   Pareto frontier of mappings, an SLA-aware dispatcher, a dynamic
 //!   batcher with an LRU plan cache, and the `serve-report` dashboard.
+//! * **API ([`api`])** — the typed workflow facade: a
+//!   [`api::SessionBuilder`] validates (model, platform, threads, seed,
+//!   dirs) once and yields a [`api::Session`] that owns the loaded
+//!   graph, platform, thread pool, plan cache and cached frontier —
+//!   the only supported entry point for
+//!   map → simulate → deploy → infer → sweep → serve.
 
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

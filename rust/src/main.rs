@@ -1,68 +1,24 @@
 //! `odimo` — CLI entrypoint (L3 leader).
 //!
-//! Subcommands map 1:1 to the paper's experiments plus utilities:
-//!   fig4 | fig5 | table1 | fig6   regenerate a table/figure
-//!   search                        one ODiMO run at a fixed lambda
-//!   simulate                      cost a mapping on the SoC simulator
-//!   inspect                       print a model's geometry + cost table
-//!   platforms                     list built-in platforms + their units
-//!   sweep | serve | serve-report  the online serving stack (serve/)
-//! Common flags: --model, --config, --platform, --smoke, --threads,
-//! --seed.
+//! Subcommands map 1:1 to the paper's experiments plus utilities; the
+//! verb/flag table (and the generated `help` text) lives in
+//! `odimo::cli` so accepted flags and documentation cannot drift. The
+//! deploy-flow verbs (`simulate`, `inspect`, `sweep`, `serve`,
+//! `serve-report`) all route through one `odimo::api::Session`; only
+//! the training-pipeline verbs (`fig*`, `search`) still drive the AOT
+//! runtime directly.
 
 use anyhow::{anyhow, Result};
 
-use odimo::cli::Args;
+use odimo::api::{MappingSpec, ServeOpts, Session, SessionBuilder};
+use odimo::cli::{self, Args};
 use odimo::config::RunConfig;
-use odimo::coordinator::{baselines, Pipeline, Regularizer, Schedule};
+use odimo::coordinator::{Pipeline, Regularizer, Schedule};
 use odimo::exp::{self, ExpContext};
-use odimo::hw::soc::{simulate, SocConfig};
 use odimo::hw::Platform;
 use odimo::model::ALL_MODELS;
 use odimo::runtime::{ArtifactMeta, Runtime};
 use odimo::util::logging;
-
-const USAGE: &str = "\
-odimo — precision-aware DNN mapping on multi-accelerator SoCs (ODiMO)
-
-USAGE: odimo <command> [flags]
-
-COMMANDS
-  fig4      accuracy-vs-latency/energy Pareto sweep (paper Fig. 4)
-  fig5      abstract-hardware sweeps (paper Fig. 5)
-  table1    deployment table on the SoC simulator (paper Table I)
-  fig6      per-layer utilization breakdown (paper Fig. 6)
-  search    single ODiMO run: --lambda <v> [--reg lat|en]
-  simulate  cost a mapping: --baseline <name> | --mapping <file.json>
-  inspect   print model geometry and per-layer cost bounds
-  platforms list built-in platforms and their accelerators
-  sweep     build (or load) the cached mapping Pareto frontier
-  serve     closed-loop SLA-aware batched inference over the frontier
-            [--requests n --max-batch n --max-wait cyc --gap cyc]
-  serve-report  render the dashboard of the last serve run
-  help      this text
-
-FLAGS
-  --model <tinycnn|resnet20|resnet18s|mbv1_025>   (default resnet20;
-                            sweep/serve default to tinycnn)
-  --config <file.toml>      load a RunConfig
-  --platform <name|file>    deployment SoC: built-in name (diana,
-                            diana_ne16, gap9, mpsoc4) or a platform
-                            .toml path
-  --artifacts <dir>         artifacts directory (default artifacts)
-  --results <dir>           results directory (default results)
-  --smoke                   tiny schedules (CI / smoke testing)
-  --lambdas <a,b,c>         override the sweep lambda list
-  --baseline <name>         all_8bit|all_ternary|io8_backbone_ternary|\
-even_split|min_cost_lat|min_cost_en
-  --non-ideal-l1            enable L1 tiling penalties in the simulator
-  --threads <n>             worker threads for sweep/serve engine runs
-                            (ThreadPool size; default: machine
-                            parallelism, capped; sweep/serve only)
-  --seed <u64>              global seed, default 1234: data_seed for the
-                            pipeline verbs, request/calibration streams
-                            for sweep/serve
-";
 
 fn build_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
@@ -103,65 +59,53 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-/// Model for the serving verbs: defaults to `tinycnn` (the closed loop
-/// executes the real engine per batch; see `serve::ServeCfg`).
-fn serve_model(args: &Args) -> Result<String> {
-    let m = args.get_or("model", "tinycnn");
-    if !ALL_MODELS.contains(&m) {
-        return Err(anyhow!("unknown model '{m}' (choose from {ALL_MODELS:?})"));
+/// Build the session every deploy-flow verb runs on, from the same
+/// flags: `--config` seeds the builder, explicit flags override it.
+/// `default_model` differs per verb (the serving verbs default to
+/// `tinycnn` — the closed loop executes the real engine per batch).
+fn build_session(args: &Args, default_model: &str) -> Result<Session> {
+    let mut b = match args.get("config") {
+        Some(path) => {
+            SessionBuilder::from_run_config(&RunConfig::from_file(std::path::Path::new(path))?)
+        }
+        None => SessionBuilder::new(default_model),
+    };
+    if let Some(m) = args.get("model") {
+        b = b.model(m);
     }
-    Ok(m.to_string())
+    if let Some(p) = args.get("platform") {
+        b = b.platform(p);
+    }
+    if let Some(d) = args.get("artifacts") {
+        b = b.artifacts_dir(d);
+    }
+    if let Some(d) = args.get("results") {
+        b = b.results_dir(d);
+    }
+    if let Some(n) = args.get_usize("threads")? {
+        b = b.threads(n);
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        b = b.seed(s);
+    }
+    if args.has("smoke") {
+        b = b.smoke(true);
+    }
+    if args.has("non-ideal-l1") {
+        b = b.non_ideal_l1(true);
+    }
+    b.build()
 }
 
-/// Platform for the serving verbs (default DIANA).
-fn serve_platform(args: &Args) -> Result<Platform> {
-    match args.get("platform") {
-        Some(p) => Platform::resolve(p),
-        None => Ok(Platform::diana()),
-    }
-}
-
-/// "name 12.3%/4.5%/..." per-accelerator utilization string.
-fn util_str(platform: &Platform, util: &[f64]) -> String {
+/// "name 12.3% / ..." per-accelerator percentage string.
+fn pct_str(platform: &Platform, vals: &[f64]) -> String {
     platform
         .accelerators
         .iter()
-        .zip(util)
-        .map(|(a, u)| format!("{} {:.1}%", a.name, 100.0 * u))
+        .zip(vals)
+        .map(|(a, v)| format!("{} {:.1}%", a.name, 100.0 * v))
         .collect::<Vec<_>>()
         .join(" / ")
-}
-
-// --seed is honored by every verb (build_config plumbs it to
-// data_seed); --threads only drives the serving verbs' thread pools,
-// so it lives in SERVE_FLAGS alone — a verb that would silently ignore
-// it must reject it.
-const COMMON_FLAGS: [&str; 8] =
-    ["model", "config", "platform", "artifacts", "results", "lambdas", "baseline", "seed"];
-/// The serving verbs honor only these (no --config/--lambdas/...): a
-/// flag they would silently ignore is an error, not a no-op.
-const SERVE_FLAGS: [&str; 5] = ["model", "platform", "results", "threads", "seed"];
-/// serve-report only reads a stored report; threads/seed do not apply.
-const SERVE_REPORT_FLAGS: [&str; 3] = ["model", "platform", "results"];
-const SWITCHES: [&str; 2] = ["smoke", "non-ideal-l1"];
-
-/// Switch hygiene for the serving verbs: the sweep scorer always uses
-/// the ideal-L1 simulator config, so `--non-ideal-l1` is an error (not
-/// a silent no-op that would make frontier numbers disagree with
-/// `simulate --non-ideal-l1`); `--smoke` is only meaningful where the
-/// caller says so (the serve request stream).
-fn reject_serve_switches(args: &Args, allow_smoke: bool) -> Result<()> {
-    if args.has("non-ideal-l1") {
-        return Err(anyhow!(
-            "--non-ideal-l1 is not supported by {} (the frontier is scored \
-             with the ideal-L1 simulator config)",
-            args.subcommand
-        ));
-    }
-    if !allow_smoke && args.has("smoke") {
-        return Err(anyhow!("--smoke has no effect on {}", args.subcommand));
-    }
-    Ok(())
 }
 
 fn main() {
@@ -173,32 +117,21 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&SWITCHES)?;
-    match args.subcommand.as_str() {
-        "" | "help" | "--help" | "-h" => {
-            println!("{USAGE}");
-            Ok(())
-        }
-        "fig4" => {
-            args.expect_only(&COMMON_FLAGS)?;
-            exp::fig4(&ExpContext::new(build_config(&args)?)?)
-        }
-        "fig5" => {
-            args.expect_only(&COMMON_FLAGS)?;
-            exp::fig5(&ExpContext::new(build_config(&args)?)?)
-        }
-        "table1" => {
-            args.expect_only(&COMMON_FLAGS)?;
-            exp::table1(&ExpContext::new(build_config(&args)?)?)
-        }
-        "fig6" => {
-            args.expect_only(&COMMON_FLAGS)?;
-            exp::fig6(&ExpContext::new(build_config(&args)?)?)
-        }
+    let switches = cli::switch_names();
+    let args = Args::from_env(&switches)?;
+    let name = args.subcommand.as_str();
+    if matches!(name, "" | "help" | "--help" | "-h") {
+        println!("{}", cli::usage());
+        return Ok(());
+    }
+    let verb = cli::verb(name).ok_or_else(|| anyhow!("unknown command '{name}' — try `odimo help`"))?;
+    args.expect_verb(verb)?;
+    match name {
+        "fig4" => exp::fig4(&ExpContext::new(build_config(&args)?)?),
+        "fig5" => exp::fig5(&ExpContext::new(build_config(&args)?)?),
+        "table1" => exp::table1(&ExpContext::new(build_config(&args)?)?),
+        "fig6" => exp::fig6(&ExpContext::new(build_config(&args)?)?),
         "search" => {
-            let mut flags = COMMON_FLAGS.to_vec();
-            flags.extend(["lambda", "reg"]);
-            args.expect_only(&flags)?;
             let cfg = build_config(&args)?;
             let lambda = args.get_f32("lambda")?.unwrap_or(0.5);
             let reg = match args.get_or("reg", "en") {
@@ -220,55 +153,36 @@ fn run() -> Result<()> {
                 p.accuracy,
                 p.latency_ms,
                 p.energy_uj,
-                util_str(&cfg.platform, &p.util),
+                pct_str(&cfg.platform, &p.util),
                 100.0 * p.aimc_channel_frac
             );
             Ok(())
         }
         "simulate" => {
-            let mut flags = COMMON_FLAGS.to_vec();
-            flags.push("mapping");
-            args.expect_only(&flags)?;
-            let cfg = build_config(&args)?;
-            let platform = &cfg.platform;
-            let graph = odimo::model::build(&cfg.model)?;
-            let mapping = if let Some(file) = args.get("mapping") {
-                let text = std::fs::read_to_string(file)?;
-                odimo::coordinator::Mapping::from_json(&odimo::util::json::parse(&text)?)?
-            } else {
-                let name = args.get_or("baseline", "all_8bit");
-                baselines::by_name(&graph, platform, name)
-                    .ok_or_else(|| anyhow!("unknown baseline '{name}'"))?
+            let session = build_session(&args, "resnet20")?;
+            let spec = match args.get("mapping") {
+                Some(file) => MappingSpec::File(file.into()),
+                None => MappingSpec::Baseline(args.get_or("baseline", "all_8bit").to_string()),
             };
-            mapping.validate(&graph, platform.n_acc())?;
-            let rep = simulate(
-                &graph,
-                &mapping.channel_split(platform.n_acc()),
-                platform,
-                SocConfig { non_ideal_l1: cfg.non_ideal_l1 },
-            );
+            let mapping = session.mapping(&spec)?;
+            let rep = session.simulate(&mapping)?;
+            let platform = session.platform();
             println!(
                 "{} on {}: {:.3} ms | {:.2} uJ | {} cycles | util {} | ch {}",
-                cfg.model,
+                session.graph().name,
                 platform.name,
                 rep.latency_ms,
                 rep.energy_uj,
                 rep.total_cycles,
-                util_str(platform, &rep.util),
-                rep.channel_frac
-                    .iter()
-                    .zip(&platform.accelerators)
-                    .map(|(f, a)| format!("{} {:.1}%", a.name, 100.0 * f))
-                    .collect::<Vec<_>>()
-                    .join(" / "),
+                pct_str(platform, &rep.util),
+                pct_str(platform, &rep.channel_frac),
             );
             Ok(())
         }
         "inspect" => {
-            args.expect_only(&COMMON_FLAGS)?;
-            let cfg = build_config(&args)?;
-            let platform = &cfg.platform;
-            let graph = odimo::model::build(&cfg.model)?;
+            let session = build_session(&args, "resnet20")?;
+            let graph = session.graph();
+            let platform = session.platform();
             println!(
                 "{}: input {:?}, {} classes, {} nodes, {} mappable, {:.1} MMACs (platform {})",
                 graph.name,
@@ -297,57 +211,66 @@ fn run() -> Result<()> {
             Ok(())
         }
         "sweep" => {
-            args.expect_only(&SERVE_FLAGS)?;
-            reject_serve_switches(&args, false)?;
-            let platform = serve_platform(&args)?;
-            let model = serve_model(&args)?;
-            let results = std::path::PathBuf::from(args.get_or("results", "results"));
-            let seed = args.get_u64("seed")?.unwrap_or(1234);
-            odimo::serve::sweep_cmd(&model, &platform, &results, seed,
-                                    args.get_usize("threads")?)
+            let mut session = build_session(&args, "tinycnn")?;
+            let (n_points, cache_hit) = {
+                let sw = session.sweep()?;
+                (sw.points.len(), sw.cache_hit)
+            };
+            println!(
+                "frontier for {} on {}: {} points ({} at {})",
+                session.graph().name,
+                session.platform().name,
+                n_points,
+                if cache_hit { "cache hit" } else { "computed and cached" },
+                session.frontier_path().display()
+            );
+            println!(
+                "{:<24} {:>12} {:>10} {:>10} {:>7}",
+                "mapping", "cycles", "lat [ms]", "E [uJ]", "acc~"
+            );
+            for p in &session.sweep()?.points {
+                println!(
+                    "{:<24} {:>12} {:>10.4} {:>10.2} {:>7.3}",
+                    p.label, p.cycles, p.latency_ms, p.energy_uj, p.acc_proxy
+                );
+            }
+            Ok(())
         }
         "serve" => {
-            let mut flags = SERVE_FLAGS.to_vec();
-            flags.extend(["requests", "max-batch", "max-wait", "gap"]);
-            args.expect_only(&flags)?;
-            reject_serve_switches(&args, true)?;
-            let mut cfg = odimo::serve::ServeCfg {
-                model: serve_model(&args)?,
-                platform: serve_platform(&args)?,
-                results_dir: args.get_or("results", "results").into(),
-                threads: args.get_usize("threads")?,
-                seed: args.get_u64("seed")?.unwrap_or(1234),
-                ..Default::default()
-            };
-            if args.has("smoke") {
-                cfg.n_requests = 24;
-            }
+            let mut session = build_session(&args, "tinycnn")?;
+            let mut opts = ServeOpts::default();
             if let Some(n) = args.get_usize("requests")? {
-                cfg.n_requests = n;
+                opts.n_requests = Some(n);
             }
             if let Some(n) = args.get_usize("max-batch")? {
-                cfg.max_batch = n;
+                opts.max_batch = n;
             }
             if let Some(n) = args.get_u64("max-wait")? {
-                cfg.max_wait = n;
+                opts.max_wait = n;
             }
             if let Some(n) = args.get_u64("gap")? {
-                cfg.mean_gap = n;
+                opts.mean_gap = n;
             }
-            let report = odimo::serve::run_serve(&cfg)?;
+            let (n_points, cache_hit) = {
+                let sw = session.sweep()?;
+                (sw.points.len(), sw.cache_hit)
+            };
+            println!(
+                "serve: frontier {} ({n_points} points, {})",
+                session.frontier_path().display(),
+                if cache_hit { "cache hit" } else { "swept fresh" }
+            );
+            let report = session.serve(&opts)?;
+            println!("serve: report written to {}", session.report_path().display());
             println!("{}", report.dashboard());
             Ok(())
         }
         "serve-report" => {
-            args.expect_only(&SERVE_REPORT_FLAGS)?;
-            reject_serve_switches(&args, false)?;
-            let platform = serve_platform(&args)?;
-            let model = serve_model(&args)?;
-            let results = std::path::PathBuf::from(args.get_or("results", "results"));
-            odimo::serve::report_cmd(&model, &platform.name, &results)
+            let session = build_session(&args, "tinycnn")?;
+            println!("{}", session.serve_report()?.dashboard());
+            Ok(())
         }
         "platforms" => {
-            args.expect_only(&[])?;
             for name in Platform::BUILTIN_NAMES {
                 let p = Platform::by_name(name).unwrap();
                 println!(

@@ -40,21 +40,23 @@ use crate::util::pool::ThreadPool;
 use super::plan::{QuantPlan, Workspace};
 use super::ParamSet;
 
-/// A fully quantized network ready to execute.
-pub struct QuantNet<'g> {
-    graph: &'g Graph,
+/// A fully quantized network ready to execute. Owns its compiled plan
+/// outright (no borrow of the source [`Graph`]), so caches — e.g. the
+/// [`Session`](crate::api::Session)-owned plan cache — can hold nets
+/// alongside the graph they were compiled from.
+pub struct QuantNet {
     plan: QuantPlan,
     /// reusable per-thread workspaces (allocation converges after the
     /// first forward at a given batch shape)
     ws: Mutex<Vec<Workspace>>,
 }
 
-impl<'g> QuantNet<'g> {
+impl QuantNet {
     /// Compile from an artifact parameter snapshot (leaf order per
     /// `meta`) for a deployment `platform`.
     pub fn compile(
         meta: &ArtifactMeta,
-        graph: &'g Graph,
+        graph: &Graph,
         values: &[Vec<f32>],
         mapping: &Mapping,
         platform: &Platform,
@@ -66,12 +68,11 @@ impl<'g> QuantNet<'g> {
     /// Compile from any name-indexed parameter set (tests/benches).
     pub fn compile_params(
         params: &ParamSet<'_>,
-        graph: &'g Graph,
+        graph: &Graph,
         mapping: &Mapping,
         platform: &Platform,
     ) -> Result<Self> {
         Ok(QuantNet {
-            graph,
             plan: QuantPlan::compile_quant(params, graph, mapping, platform)?,
             ws: Mutex::new(Vec::new()),
         })
@@ -93,8 +94,7 @@ impl<'g> QuantNet<'g> {
     /// Forward one batch (NCHW in [0,1]); returns (batch, classes)
     /// logits, moved out of the plan's arena (no trailing clone).
     pub fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let (c0, h0, w0) = self.graph.input_shape;
-        assert_eq!(x.len(), batch * c0 * h0 * w0, "input size");
+        assert_eq!(x.len(), batch * self.plan.in_elems(), "input size");
         let mut ws = self.take_ws();
         let y = self.plan.run_block(x, batch, &mut ws, None);
         self.put_ws(ws);

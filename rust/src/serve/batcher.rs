@@ -119,7 +119,7 @@ impl Batcher {
 
 // ---- LRU plan cache ---------------------------------------------------
 
-struct CacheEntry<'g> {
+struct CacheEntry {
     key: u64,
     /// The mapping the plan was compiled for: verified on every hit so
     /// a (astronomically unlikely) 64-bit hash collision can never hand
@@ -127,15 +127,18 @@ struct CacheEntry<'g> {
     /// mapping is the identity.
     mapping: Mapping,
     last_used: u64,
-    net: QuantNet<'g>,
+    net: QuantNet,
 }
 
 /// LRU cache of compiled plans, keyed by
 /// [`QuantPlan::cache_key`](crate::quant::QuantPlan::cache_key).
-pub struct PlanCache<'g> {
+/// Plans own their data outright, so the cache can live as long as the
+/// owner likes — e.g. across every call of a
+/// [`Session`](crate::api::Session).
+pub struct PlanCache {
     cap: usize,
     tick: u64,
-    entries: Vec<CacheEntry<'g>>,
+    entries: Vec<CacheEntry>,
     /// Lookups served from the cache.
     pub hits: u64,
     /// Lookups that had to compile.
@@ -144,7 +147,7 @@ pub struct PlanCache<'g> {
     pub compile_ns: u64,
 }
 
-impl<'g> PlanCache<'g> {
+impl PlanCache {
     /// Cache holding at most `cap` compiled plans (>= 1).
     pub fn new(cap: usize) -> Self {
         PlanCache {
@@ -175,9 +178,9 @@ impl<'g> PlanCache<'g> {
         key: u64,
         mapping: &Mapping,
         compile: F,
-    ) -> Result<&QuantNet<'g>>
+    ) -> Result<&QuantNet>
     where
-        F: FnOnce() -> Result<QuantNet<'g>>,
+        F: FnOnce() -> Result<QuantNet>,
     {
         self.tick += 1;
         if let Some(i) = self

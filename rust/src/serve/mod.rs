@@ -10,13 +10,19 @@
 //!  metrics.rs   per-request outcomes -> serve-report dashboard
 //! ```
 //!
-//! [`run_serve`] is the closed-loop driver behind the CLI `serve` verb:
-//! it pumps a seeded synthetic request stream (arrivals, SLAs and
-//! inputs all derived from one seed) through dispatch, the batcher and
-//! the quantized engine, advancing a virtual clock in simulated cycles
-//! while the engine executes each batch for real on the thread pool.
-//! Everything except wall-clock throughput is deterministic for a given
-//! (model, platform, seed, batching config).
+//! The closed-loop driver (`run_serve`, crate-internal) pumps a seeded
+//! synthetic request stream (arrivals, SLAs and inputs all derived
+//! from one seed) through dispatch, the batcher and the quantized
+//! engine, advancing a virtual clock in simulated cycles while the
+//! engine executes each batch for real on the thread pool. Everything
+//! except wall-clock throughput is deterministic for a given (model,
+//! platform, seed, [`ServeOpts`]).
+//!
+//! The workflow entry point is [`Session::serve`](crate::api::Session::serve):
+//! the session owns the frontier, the thread pool and the LRU plan
+//! cache, so repeated serve runs (and interleaved
+//! [`Session::infer`](crate::api::Session::infer) calls) reuse compiled
+//! plans instead of rebuilding them.
 
 pub mod batcher;
 pub mod dispatch;
@@ -30,30 +36,26 @@ pub use sweep::{FrontierPoint, SweepCfg};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::data::synth::gen_sample;
 use crate::hw::Platform;
 use crate::model::Graph;
-use crate::quant::{synth_params_on, ParamSet, QuantNet, QuantPlan};
+use crate::quant::{ParamSet, QuantNet, QuantPlan};
 use crate::util::pool::ThreadPool;
 use crate::util::prng::Pcg32;
 
 use batcher::{Batch, Batcher, PlanCache, Request};
 use metrics::RequestOutcome;
 
-/// Closed-loop serve configuration (all knobs CLI-settable).
-#[derive(Clone, Debug)]
-pub struct ServeCfg {
-    /// Model to serve (`tinycnn` by default: the closed loop runs the
-    /// real engine per batch, and debug builds should stay snappy).
-    pub model: String,
-    /// Deployment platform.
-    pub platform: Platform,
-    /// Directory holding the frontier cache and the serve report.
-    pub results_dir: PathBuf,
-    /// Requests in the synthetic stream.
-    pub n_requests: usize,
+/// Closed-loop serve knobs (every field CLI-settable). The session
+/// supplies model, platform, seed, threads and directories; these are
+/// only the per-run stream/batching parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Requests in the synthetic stream. `None` picks the default: 96,
+    /// or 24 when the session was built with `smoke(true)`.
+    pub n_requests: Option<usize>,
     /// Batcher flush threshold (1 = unbatched).
     pub max_batch: usize,
     /// Batcher wait bound, simulated cycles.
@@ -63,34 +65,16 @@ pub struct ServeCfg {
     /// Fixed per-batch launch overhead, simulated cycles (what dynamic
     /// batching amortizes on the virtual timeline).
     pub launch_cycles: u64,
-    /// Worker threads (`None` = machine default).
-    pub threads: Option<usize>,
-    /// Seed for arrivals, SLAs, parameters and inputs — and for the
-    /// sweep: `run_serve` forces `sweep.seed = seed` so the frontier is
-    /// always scored under the same parameters it is served with.
-    pub seed: u64,
-    /// LRU plan-cache capacity.
-    pub plan_cache_cap: usize,
-    /// Sweep knobs used when the frontier cache is cold (`sweep.seed`
-    /// is overridden by [`ServeCfg::seed`], see above).
-    pub sweep: SweepCfg,
 }
 
-impl Default for ServeCfg {
+impl Default for ServeOpts {
     fn default() -> Self {
-        ServeCfg {
-            model: "tinycnn".into(),
-            platform: Platform::diana(),
-            results_dir: PathBuf::from("results"),
-            n_requests: 96,
+        ServeOpts {
+            n_requests: None,
             max_batch: 8,
             max_wait: 60_000,
             mean_gap: 20_000,
             launch_cycles: 10_000,
-            threads: None,
-            seed: 1234,
-            plan_cache_cap: 4,
-            sweep: SweepCfg::default(),
         }
     }
 }
@@ -101,20 +85,26 @@ pub fn report_path(results_dir: &Path, model: &str, platform: &str) -> PathBuf {
 }
 
 /// Seeded synthetic request stream: arrivals with mean gap
-/// `cfg.mean_gap`, ~15% min-energy SLAs, the rest latency budgets drawn
-/// around the frontier's own latency range (so some are infeasible by
-/// construction and exercise the fallback path). Dispatch decisions are
-/// folded in immediately — they depend only on (frontier, SLA).
-fn synth_requests(cfg: &ServeCfg, frontier: &[FrontierPoint]) -> Vec<Request> {
+/// `opts.mean_gap`, ~15% min-energy SLAs, the rest latency budgets
+/// drawn around the frontier's own latency range (so some are
+/// infeasible by construction and exercise the fallback path).
+/// Dispatch decisions are folded in immediately — they depend only on
+/// (frontier, SLA).
+fn synth_requests(
+    opts: &ServeOpts,
+    n_requests: usize,
+    seed: u64,
+    frontier: &[FrontierPoint],
+) -> Vec<Request> {
     let min_cyc = frontier.iter().map(|p| p.cycles).min().unwrap_or(0);
     let max_cyc = frontier.iter().map(|p| p.cycles).max().unwrap_or(0);
     let lo = (min_cyc as f64 * 0.8) as u64;
-    let hi = (max_cyc + cfg.launch_cycles) as f64 * 1.6;
-    let mut rng = Pcg32::new(cfg.seed, 101);
+    let hi = (max_cyc + opts.launch_cycles) as f64 * 1.6;
+    let mut rng = Pcg32::new(seed, 101);
     let mut t = 0u64;
-    let mut reqs = Vec::with_capacity(cfg.n_requests);
-    for id in 0..cfg.n_requests as u64 {
-        t += 1 + (rng.next_f32() as f64 * 2.0 * cfg.mean_gap as f64) as u64;
+    let mut reqs = Vec::with_capacity(n_requests);
+    for id in 0..n_requests as u64 {
+        t += 1 + (rng.next_f32() as f64 * 2.0 * opts.mean_gap as f64) as u64;
         let sla = if rng.next_f32() < 0.15 {
             Sla::MinEnergy
         } else {
@@ -131,14 +121,16 @@ fn synth_requests(cfg: &ServeCfg, frontier: &[FrontierPoint]) -> Vec<Request> {
 /// engine on the pool, then advance the virtual device clock and record
 /// every member request's outcome.
 #[allow(clippy::too_many_arguments)]
-fn exec_batch<'g>(
+fn exec_batch(
     batch: &Batch,
-    graph: &'g Graph,
+    graph: &Graph,
+    platform: &Platform,
     params: &ParamSet<'_>,
     frontier: &[FrontierPoint],
-    cfg: &ServeCfg,
+    opts: &ServeOpts,
+    seed: u64,
     pool: &ThreadPool,
-    cache: &mut PlanCache<'g>,
+    cache: &mut PlanCache,
     stats: &mut ServeMetrics,
     device_free: &mut u64,
 ) -> Result<()> {
@@ -148,9 +140,9 @@ fn exec_batch<'g>(
     let mut x = Vec::with_capacity(bsz * c * h * w);
     for r in &batch.requests {
         let cls = (r.id % graph.classes as u64) as u32;
-        x.extend_from_slice(&gen_sample(cfg.seed, 1, r.id, cls, h, w));
+        x.extend_from_slice(&gen_sample(seed, 1, r.id, cls, h, w));
     }
-    let key = QuantPlan::cache_key(&graph.name, &cfg.platform.name, &fp.mapping);
+    let key = QuantPlan::cache_key(&graph.name, &platform.name, &fp.mapping);
     // engine wall time excludes plan compilation: compile cost is
     // tracked separately by the cache (and reported as its own
     // dashboard line), so img/s measures steady-state compute only
@@ -158,7 +150,7 @@ fn exec_batch<'g>(
     let t0 = Instant::now();
     {
         let net = cache.get_or_compile(key, &fp.mapping, || {
-            QuantNet::compile_params(params, graph, &fp.mapping, &cfg.platform)
+            QuantNet::compile_params(params, graph, &fp.mapping, platform)
         })?;
         let y = net.forward_pool(&x, bsz, pool)?;
         std::hint::black_box(&y);
@@ -167,7 +159,7 @@ fn exec_batch<'g>(
     stats.record_batch(wall.saturating_sub(cache.compile_ns - compile_before));
 
     let start = batch.flushed_at.max(*device_free);
-    let compute = cfg.launch_cycles + fp.cycles * bsz as u64;
+    let compute = opts.launch_cycles + fp.cycles * bsz as u64;
     let done = start + compute;
     *device_free = done;
     for r in &batch.requests {
@@ -189,37 +181,29 @@ fn exec_batch<'g>(
     Ok(())
 }
 
-/// Run the closed loop end to end and persist the report. Returns the
-/// report so callers (CLI, tests, benches) can render or inspect it.
-pub fn run_serve(cfg: &ServeCfg) -> Result<ServeReport> {
-    let graph = crate::model::build(&cfg.model)?;
-    let pool = match cfg.threads {
-        Some(n) => ThreadPool::new(n),
-        None => ThreadPool::with_default_size(),
-    };
-    // one seed rules the whole run: the frontier must be swept under
-    // the same synthetic parameters the engine serves with, so the
-    // sweep seed is always derived from cfg.seed, never set separately
-    let sweep_cfg = SweepCfg { seed: cfg.seed, ..cfg.sweep };
-    let (frontier, cache_hit) =
-        sweep::load_or_sweep(&cfg.results_dir, &graph, &cfg.platform, &sweep_cfg, &pool)?;
-    if frontier.is_empty() {
-        return Err(anyhow!("empty frontier for {} on {}", graph.name, cfg.platform.name));
-    }
-    println!(
-        "serve: frontier {} ({} points, {})",
-        sweep::frontier_path(&cfg.results_dir, &graph.name, &cfg.platform.name).display(),
-        frontier.len(),
-        if cache_hit { "cache hit" } else { "swept fresh" }
-    );
-
-    let (names, values) = synth_params_on(&graph, &cfg.platform, cfg.seed);
-    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
-    let reqs = synth_requests(cfg, &frontier);
-    let mut batcher = Batcher::new(cfg.max_batch, cfg.max_wait);
-    let mut cache = PlanCache::new(cfg.plan_cache_cap);
+/// Run the closed loop end to end over a pre-built frontier and a
+/// caller-owned plan cache; plan-cache dashboard numbers are the
+/// *deltas* of this run, so a warm session cache reports honestly.
+/// Crate-internal: the public surface is
+/// [`Session::serve`](crate::api::Session::serve).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_serve(
+    graph: &Graph,
+    platform: &Platform,
+    params: &ParamSet<'_>,
+    frontier: &[FrontierPoint],
+    pool: &ThreadPool,
+    plans: &mut PlanCache,
+    opts: &ServeOpts,
+    n_requests: usize,
+    seed: u64,
+) -> Result<ServeReport> {
+    assert!(!frontier.is_empty(), "run_serve needs a non-empty frontier");
+    let reqs = synth_requests(opts, n_requests, seed, frontier);
+    let mut batcher = Batcher::new(opts.max_batch, opts.max_wait);
     let mut stats = ServeMetrics::new();
     let mut device_free = 0u64;
+    let (hits0, misses0, compile0) = (plans.hits, plans.misses, plans.compile_ns);
 
     // virtual-time event loop: interleave arrivals with queue-deadline
     // flushes; once arrivals are exhausted the tail drains immediately
@@ -239,83 +223,28 @@ pub fn run_serve(cfg: &ServeCfg) -> Result<ServeReport> {
             let r = reqs[i];
             i += 1;
             if let Some(b) = batcher.push(r) {
-                exec_batch(&b, &graph, &params, &frontier, cfg, &pool, &mut cache,
+                exec_batch(&b, graph, platform, params, frontier, opts, seed, pool, plans,
                            &mut stats, &mut device_free)?;
             }
         } else if next_arrival.is_some() {
             let d = next_deadline.expect("pending queue has a deadline");
             for b in batcher.due(d) {
-                exec_batch(&b, &graph, &params, &frontier, cfg, &pool, &mut cache,
+                exec_batch(&b, graph, platform, params, frontier, opts, seed, pool, plans,
                            &mut stats, &mut device_free)?;
             }
         } else {
             let now = reqs.last().map(|r| r.arrival).unwrap_or(0);
             for b in batcher.drain(now) {
-                exec_batch(&b, &graph, &params, &frontier, cfg, &pool, &mut cache,
+                exec_batch(&b, graph, platform, params, frontier, opts, seed, pool, plans,
                            &mut stats, &mut device_free)?;
             }
         }
     }
 
-    stats.plan_hits = cache.hits;
-    stats.plan_misses = cache.misses;
-    stats.plan_compile_ns = cache.compile_ns;
+    stats.plan_hits = plans.hits - hits0;
+    stats.plan_misses = plans.misses - misses0;
+    stats.plan_compile_ns = plans.compile_ns - compile0;
     stats.end_cycle = device_free;
     let labels: Vec<String> = frontier.iter().map(|p| p.label.clone()).collect();
-    let report = stats.report(
-        &graph.name,
-        &cfg.platform.name,
-        pool.threads(),
-        &labels,
-        cfg.platform.f_clk_hz,
-    );
-    let path = report_path(&cfg.results_dir, &graph.name, &cfg.platform.name);
-    metrics::save_report(&path, &report)?;
-    println!("serve: report written to {}", path.display());
-    Ok(report)
-}
-
-/// CLI `sweep` verb: build (or load) the frontier and print it.
-pub fn sweep_cmd(
-    model: &str,
-    platform: &Platform,
-    results_dir: &Path,
-    seed: u64,
-    threads: Option<usize>,
-) -> Result<()> {
-    let graph = crate::model::build(model)?;
-    let pool = match threads {
-        Some(n) => ThreadPool::new(n),
-        None => ThreadPool::with_default_size(),
-    };
-    let cfg = SweepCfg { seed, ..SweepCfg::default() };
-    let path = sweep::frontier_path(results_dir, &graph.name, &platform.name);
-    let (frontier, cache_hit) =
-        sweep::load_or_sweep(results_dir, &graph, platform, &cfg, &pool)?;
-    println!(
-        "frontier for {} on {}: {} points ({} at {})",
-        graph.name,
-        platform.name,
-        frontier.len(),
-        if cache_hit { "cache hit" } else { "computed and cached" },
-        path.display()
-    );
-    println!("{:<24} {:>12} {:>10} {:>10} {:>7}", "mapping", "cycles", "lat [ms]", "E [uJ]",
-             "acc~");
-    for p in &frontier {
-        println!(
-            "{:<24} {:>12} {:>10.4} {:>10.2} {:>7.3}",
-            p.label, p.cycles, p.latency_ms, p.energy_uj, p.acc_proxy
-        );
-    }
-    Ok(())
-}
-
-/// CLI `serve-report` verb: render the dashboard of a past serve run.
-pub fn report_cmd(model: &str, platform: &str, results_dir: &Path) -> Result<()> {
-    let path = report_path(results_dir, model, platform);
-    let report = metrics::load_report(&path)
-        .map_err(|e| anyhow!("{e:#}\nrun `odimo serve` first to produce the report"))?;
-    println!("{}", report.dashboard());
-    Ok(())
+    Ok(stats.report(&graph.name, &platform.name, pool.threads(), &labels, platform.f_clk_hz))
 }

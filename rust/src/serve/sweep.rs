@@ -45,8 +45,11 @@ use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 
 /// Bump when the frontier cache layout changes; [`load_frontier`]
-/// refuses files written under any other version.
-pub const FRONTIER_SCHEMA: u32 = 1;
+/// refuses files written under any other version. v2 added
+/// `platform_hash` ([`Platform::spec_hash`]) so an edited platform
+/// TOML invalidates the cache instead of silently reusing stale
+/// points.
+pub const FRONTIER_SCHEMA: u32 = 2;
 
 /// One frontier entry: a mapping plus its three serving-axis scores.
 #[derive(Clone, Debug)]
@@ -343,19 +346,24 @@ fn point_from_json(v: &Json) -> Result<FrontierPoint> {
 }
 
 /// Persist a frontier atomically under the versioned envelope. The
-/// sweep configuration is recorded alongside the points so a later
-/// load under different knobs is detected, not silently reused.
+/// sweep configuration *and* the resolved platform's
+/// [`Platform::spec_hash`] are recorded alongside the points so a
+/// later load under different knobs — or against an edited platform
+/// spec — is detected, not silently reused.
 pub fn save_frontier(
     path: &Path,
     model: &str,
-    platform: &str,
+    platform: &Platform,
     cfg: &SweepCfg,
     frontier: &[FrontierPoint],
 ) -> Result<()> {
     let payload = Json::obj(vec![
         ("model", Json::str(model)),
-        ("platform", Json::str(platform)),
-        ("sweep_seed", Json::num(cfg.seed as f64)),
+        ("platform", Json::str(platform.name.clone())),
+        // strings: 64-bit values do not fit a JSON f64 exactly, and a
+        // rounded seed would make the cache permanently miss
+        ("platform_hash", Json::str(format!("{:016x}", platform.spec_hash()))),
+        ("sweep_seed", Json::str(cfg.seed.to_string())),
         ("sweep_calib", Json::num(cfg.calib as f64)),
         ("sweep_blend_steps", Json::num(cfg.blend_steps as f64)),
         ("points", Json::Arr(frontier.iter().map(point_to_json).collect())),
@@ -363,14 +371,16 @@ pub fn save_frontier(
     store::save_versioned(path, "frontier", FRONTIER_SCHEMA, payload)
 }
 
-/// A loaded frontier cache file: the points plus the sweep knobs they
-/// were computed under.
+/// A loaded frontier cache file: the points plus the sweep knobs and
+/// platform-spec hash they were computed under.
 #[derive(Debug)]
 pub struct CachedFrontier {
     /// The frontier points, latency-ascending.
     pub points: Vec<FrontierPoint>,
     /// The [`SweepCfg`] the cache was swept with.
     pub swept_with: SweepCfg,
+    /// [`Platform::spec_hash`] of the platform the cache was swept on.
+    pub platform_hash: u64,
 }
 
 /// Load a cached frontier, erroring clearly on kind/schema mismatch or
@@ -385,8 +395,15 @@ pub fn load_frontier(path: &Path, model: &str, platform: &str) -> Result<CachedF
             path.display()
         ));
     }
+    let hash_hex = payload.req("platform_hash")?.as_str().unwrap_or("").to_string();
+    let platform_hash = u64::from_str_radix(&hash_hex, 16)
+        .map_err(|_| anyhow!("{}: bad platform_hash '{hash_hex}'", path.display()))?;
+    let seed_str = payload.req("sweep_seed")?.as_str().unwrap_or("").to_string();
+    let seed = seed_str
+        .parse::<u64>()
+        .map_err(|_| anyhow!("{}: bad sweep_seed '{seed_str}'", path.display()))?;
     let swept_with = SweepCfg {
-        seed: payload.req_f64("sweep_seed")? as u64,
+        seed,
         calib: payload.req_f64("sweep_calib")? as usize,
         blend_steps: payload.req_f64("sweep_blend_steps")? as usize,
     };
@@ -397,13 +414,16 @@ pub fn load_frontier(path: &Path, model: &str, platform: &str) -> Result<CachedF
         .iter()
         .map(point_from_json)
         .collect::<Result<Vec<FrontierPoint>>>()?;
-    Ok(CachedFrontier { points, swept_with })
+    Ok(CachedFrontier { points, swept_with, platform_hash })
 }
 
-/// Load the cached frontier if present and swept under the *same*
-/// [`SweepCfg`] (returning `cache_hit = true`); on a knob mismatch the
-/// cache is re-swept and overwritten — never silently reused — so
-/// serve runs stay deterministic in (model, platform, seed, config).
+/// Load the cached frontier if present, swept under the *same*
+/// [`SweepCfg`], and computed on a platform whose
+/// [`Platform::spec_hash`] still matches (returning
+/// `cache_hit = true`); on a knob or spec mismatch the cache is
+/// re-swept and overwritten — never silently reused — so serve runs
+/// stay deterministic in (model, platform spec, seed, config) and an
+/// edited platform TOML invalidates `frontier_<model>_<platform>.json`.
 pub fn load_or_sweep(
     results_dir: &Path,
     graph: &Graph,
@@ -412,29 +432,71 @@ pub fn load_or_sweep(
     pool: &ThreadPool,
 ) -> Result<(Vec<FrontierPoint>, bool)> {
     let path = frontier_path(results_dir, &graph.name, &platform.name);
-    if path.exists() {
+    // a cache written under a *known older* schema is stale, not an
+    // error: upgrading must not require hand-deleting regenerable
+    // files. Unknown/newer versions (and corruption) still refuse —
+    // they could mean a downgraded binary or a tampered file.
+    if path.exists() && written_under_older_schema(&path) {
+        log::info!(
+            "frontier cache {} predates schema v{FRONTIER_SCHEMA}; re-sweeping",
+            path.display()
+        );
+    } else if path.exists() {
         let cached = load_frontier(&path, &graph.name, &platform.name)?;
         let sw = &cached.swept_with;
-        if sw.seed == cfg.seed && sw.calib == cfg.calib && sw.blend_steps == cfg.blend_steps {
+        let knobs_match =
+            sw.seed == cfg.seed && sw.calib == cfg.calib && sw.blend_steps == cfg.blend_steps;
+        if knobs_match && cached.platform_hash == platform.spec_hash() {
             for p in &cached.points {
                 p.mapping.validate(graph, platform.n_acc())?;
             }
             log::info!("frontier cache hit: {}", path.display());
             return Ok((cached.points, true));
         }
-        log::info!(
-            "frontier cache {} swept under different knobs \
-             (seed {} calib {} blends {}); re-sweeping",
-            path.display(),
-            sw.seed,
-            sw.calib,
-            sw.blend_steps
-        );
+        if knobs_match {
+            log::info!(
+                "frontier cache {}: platform spec changed \
+                 (cached {:016x}, resolved {:016x}); re-sweeping",
+                path.display(),
+                cached.platform_hash,
+                platform.spec_hash()
+            );
+        } else {
+            log::info!(
+                "frontier cache {} swept under different knobs \
+                 (seed {} calib {} blends {}); re-sweeping",
+                path.display(),
+                sw.seed,
+                sw.calib,
+                sw.blend_steps
+            );
+        }
     }
     let frontier = sweep_frontier(graph, platform, cfg, pool)?;
-    save_frontier(&path, &graph.name, &platform.name, cfg, &frontier)?;
+    save_frontier(&path, &graph.name, platform, cfg, &frontier)?;
     log::info!("frontier cache written: {}", path.display());
     Ok((frontier, false))
+}
+
+/// True when `path` is a readable frontier envelope whose
+/// `schema_version` is a *lower* known version than
+/// [`FRONTIER_SCHEMA`] — the overwrite-on-upgrade case. Anything else
+/// (newer version, wrong kind, unreadable) returns false so the
+/// strict loader reports it.
+fn written_under_older_schema(path: &Path) -> bool {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return false;
+    };
+    let Ok(doc) = crate::util::json::parse(&text) else {
+        return false;
+    };
+    if doc.req("kind").ok().and_then(|k| k.as_str()) != Some("frontier") {
+        return false;
+    }
+    match doc.req("schema_version").ok().and_then(|v| v.as_usize()) {
+        Some(v) => (v as u32) < FRONTIER_SCHEMA,
+        None => false,
+    }
 }
 
 #[cfg(test)]
@@ -519,9 +581,55 @@ mod tests {
         let dir = std::env::temp_dir().join("odimo_sweep_wrong_key");
         let _ = std::fs::remove_dir_all(&dir);
         let path = frontier_path(&dir, &g.name, &p.name);
-        save_frontier(&path, &g.name, &p.name, &SweepCfg::default(), &[]).unwrap();
+        save_frontier(&path, &g.name, &p, &SweepCfg::default(), &[]).unwrap();
         let e = load_frontier(&path, &g.name, "mpsoc4").unwrap_err().to_string();
         assert!(e.contains("mpsoc4"), "{e}");
+    }
+
+    #[test]
+    fn older_schema_cache_is_stale_not_fatal() {
+        // upgrade path: a v1-era cache re-sweeps; a *newer*/unknown
+        // version still errors (see serve_props schema-tamper test)
+        let g = tinycnn();
+        let p = Platform::diana();
+        let pool = ThreadPool::new(2);
+        let cfg = SweepCfg { seed: 21, calib: 4, blend_steps: 2 };
+        let dir = std::env::temp_dir().join("odimo_sweep_old_schema");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        assert!(!hit);
+        let path = frontier_path(&dir, &g.name, &p.name);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let old = text.replace("\"schema_version\":2", "\"schema_version\":1");
+        assert_ne!(text, old);
+        std::fs::write(&path, old).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        assert!(!hit, "older schema must re-sweep, not error or reuse");
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        assert!(hit, "rewritten cache hits again");
+    }
+
+    #[test]
+    fn edited_platform_spec_invalidates_cache() {
+        // the ROADMAP "frontier refresh" case: a platform whose TOML
+        // was edited keeps its name, so the spec hash must catch it
+        let g = tinycnn();
+        let pool = ThreadPool::new(2);
+        let cfg = SweepCfg { seed: 5, calib: 4, blend_steps: 2 };
+        let dir = std::env::temp_dir().join("odimo_sweep_platform_edit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (_, hit) = load_or_sweep(&dir, &g, &Platform::diana(), &cfg, &pool).unwrap();
+        assert!(!hit);
+        let mut edited = Platform::diana();
+        edited.accelerators[0].p_act_mw += 1.0;
+        let (_, hit) = load_or_sweep(&dir, &g, &edited, &cfg, &pool).unwrap();
+        assert!(!hit, "edited platform spec must re-sweep, not reuse");
+        // the rewritten cache now hits under the edited spec...
+        let (_, hit) = load_or_sweep(&dir, &g, &edited, &cfg, &pool).unwrap();
+        assert!(hit);
+        // ...and misses again if the edit is reverted
+        let (_, hit) = load_or_sweep(&dir, &g, &Platform::diana(), &cfg, &pool).unwrap();
+        assert!(!hit, "reverting the spec is also a cache-key change");
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Integration tests for the `odimo::api` facade through the public
+//! surface only: builder validation errors, typed mapping dispatch,
+//! the lazily cached sweep frontier (including platform-spec
+//! invalidation), and smoke-sized serving defaults.
+
+use odimo::api::{CostObjective, MappingSpec, ServeOpts, Session, SessionBuilder};
+use odimo::hw::Platform;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("odimo_api_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn tiny(dir: &std::path::Path) -> Session {
+    SessionBuilder::new("tinycnn")
+        .platform("diana")
+        .threads(2)
+        .seed(7)
+        .results_dir(dir)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .build()
+        .unwrap()
+}
+
+// ---- builder validation -----------------------------------------------
+
+#[test]
+fn unknown_model_is_a_build_error() {
+    let e = SessionBuilder::new("resnet999").build().unwrap_err().to_string();
+    assert!(e.contains("resnet999"), "{e}");
+    assert!(e.contains("tinycnn"), "error should list the known models: {e}");
+}
+
+#[test]
+fn unknown_platform_is_a_build_error() {
+    let e = SessionBuilder::new("tinycnn")
+        .platform("tpu9000")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("tpu9000"), "{e}");
+    assert!(e.contains("diana"), "error should list the built-ins: {e}");
+}
+
+#[test]
+fn zero_threads_is_a_build_error() {
+    let e = SessionBuilder::new("tinycnn").threads(0).build().unwrap_err().to_string();
+    assert!(e.contains("threads"), "{e}");
+}
+
+#[test]
+fn missing_platform_toml_path_is_a_build_error() {
+    let e = SessionBuilder::new("tinycnn")
+        .platform("/no/such/platform.toml")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("platform"), "{e}");
+}
+
+#[test]
+fn garbage_platform_toml_is_a_build_error() {
+    let dir = tmpdir("badtoml");
+    let path = dir.join("broken.toml");
+    std::fs::write(&path, "[platform\nname = ").unwrap();
+    let e = SessionBuilder::new("tinycnn")
+        .platform(path.to_str().unwrap())
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(!e.is_empty(), "{e}");
+}
+
+#[test]
+fn platform_toml_builds_a_working_session() {
+    let dir = tmpdir("goodtoml");
+    let path = dir.join("mini.toml");
+    std::fs::write(
+        &path,
+        "[platform]\nname = \"mini\"\nf_clk_hz = 100e6\naccelerators = [\"pe\"]\n\
+         [accel.pe]\nkind = \"digital_pe\"\npe = 16\nweight_bits = 8\nact_bits = 8\n\
+         p_act_mw = 10.0\np_idle_mw = 1.0\n",
+    )
+    .unwrap();
+    let s = SessionBuilder::new("tinycnn")
+        .platform(path.to_str().unwrap())
+        .threads(1)
+        .build()
+        .unwrap();
+    assert_eq!(s.platform().name, "mini");
+    let m = s.mapping(&MappingSpec::Baseline("all_8bit".into())).unwrap();
+    assert!(s.simulate(&m).unwrap().total_cycles > 0);
+}
+
+// ---- typed mapping dispatch -------------------------------------------
+
+#[test]
+fn unknown_baseline_is_a_clear_error() {
+    let dir = tmpdir("badbaseline");
+    let s = tiny(&dir);
+    let e = s
+        .mapping(&MappingSpec::Baseline("fastest_please".into()))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("fastest_please"), "{e}");
+    assert!(e.contains("min_cost_lat"), "error should list the baselines: {e}");
+}
+
+#[test]
+fn mapping_file_roundtrips_and_validates() {
+    let dir = tmpdir("mapfile");
+    let s = tiny(&dir);
+    let m = s.mapping(&MappingSpec::MinCost(CostObjective::Latency)).unwrap();
+    let path = dir.join("mapping.json");
+    std::fs::write(&path, m.to_json().to_string()).unwrap();
+    let back = s.mapping(&MappingSpec::File(path.clone())).unwrap();
+    assert_eq!(back, m);
+    // a file for the wrong model fails validation, not simulation
+    let other = SessionBuilder::new("resnet20")
+        .platform("diana")
+        .threads(1)
+        .build()
+        .unwrap();
+    assert!(other.mapping(&MappingSpec::File(path)).is_err());
+    // a missing file is a read error with the path in it
+    let e = s
+        .mapping(&MappingSpec::File(dir.join("nope.json")))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("nope.json"), "{e}");
+}
+
+#[test]
+fn min_cost_spec_matches_named_baseline() {
+    let dir = tmpdir("mincost");
+    let s = tiny(&dir);
+    let a = s.mapping(&MappingSpec::MinCost(CostObjective::Latency)).unwrap();
+    let b = s.mapping(&MappingSpec::Baseline("min_cost_lat".into())).unwrap();
+    assert_eq!(a, b);
+    let a = s.mapping(&MappingSpec::MinCost(CostObjective::Energy)).unwrap();
+    let b = s.mapping(&MappingSpec::Baseline("min_cost_en".into())).unwrap();
+    assert_eq!(a, b);
+}
+
+// ---- frontier caching & invalidation ----------------------------------
+
+#[test]
+fn sweep_caches_in_memory_and_on_disk() {
+    let dir = tmpdir("sweepcache");
+    let mut s = tiny(&dir);
+    let first_len = {
+        let r = s.sweep().unwrap();
+        assert!(!r.cache_hit, "first sweep computes");
+        r.points.len()
+    };
+    // in-memory: same session, same result object
+    assert_eq!(s.sweep().unwrap().points.len(), first_len);
+    assert!(s.frontier_path().exists());
+    // on-disk: a fresh session over the same results dir hits the cache
+    let mut s2 = tiny(&dir);
+    let r2 = s2.sweep().unwrap();
+    assert!(r2.cache_hit, "second session must hit the disk cache");
+    assert_eq!(r2.points.len(), first_len);
+}
+
+#[test]
+fn non_ideal_l1_sessions_refuse_to_sweep() {
+    // same contract as the CLI rejecting --non-ideal-l1 on sweep/serve:
+    // the frontier is ideal-L1-scored, so a mismatched simulator config
+    // must be an error, not a silent inconsistency
+    let dir = tmpdir("l1sweep");
+    let mut s = SessionBuilder::new("tinycnn")
+        .platform("diana")
+        .threads(1)
+        .results_dir(&dir)
+        .non_ideal_l1(true)
+        .build()
+        .unwrap();
+    let e = s.sweep().unwrap_err().to_string();
+    assert!(e.contains("ideal-L1"), "{e}");
+    assert!(s.serve(&ServeOpts::default()).is_err());
+}
+
+#[test]
+fn edited_platform_spec_invalidates_frontier_through_facade() {
+    let dir = tmpdir("sweepedit");
+    let mut s = tiny(&dir);
+    s.sweep().unwrap();
+    // same platform *name*, one edited power number — as if the
+    // operator edited config/diana.toml between runs
+    let mut edited = Platform::diana();
+    edited.accelerators[1].p_act_mw += 0.5;
+    let mut s2 = SessionBuilder::new("tinycnn")
+        .platform_spec(edited)
+        .threads(2)
+        .seed(7)
+        .results_dir(&dir)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .build()
+        .unwrap();
+    let r = s2.sweep().unwrap();
+    assert!(!r.cache_hit, "edited platform spec must re-sweep, not reuse the cache");
+}
+
+// ---- serving through the facade ---------------------------------------
+
+#[test]
+fn smoke_sessions_default_to_tiny_request_streams() {
+    let dir = tmpdir("smokeserve");
+    let mut s = SessionBuilder::new("tinycnn")
+        .platform("diana")
+        .threads(2)
+        .seed(7)
+        .results_dir(&dir)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .smoke(true)
+        .build()
+        .unwrap();
+    let rep = s.serve(&ServeOpts::default()).unwrap();
+    assert_eq!(rep.total_requests, 24, "smoke default stream size");
+    // explicit n_requests overrides the smoke default
+    let rep = s.serve(&ServeOpts { n_requests: Some(10), ..ServeOpts::default() }).unwrap();
+    assert_eq!(rep.total_requests, 10);
+    // and the report is loadable back through the facade
+    assert_eq!(s.serve_report().unwrap().total_requests, 10);
+}

@@ -184,16 +184,21 @@ fn golden_table1_scale_floats() {
 fn deploy_fragment_overhead_matches_seed_rule() {
     // the scheduler's fragmentation charge must stay the seed's
     // digital-only rule on DIANA: (frags-1) * cin * k^2 per layer with
-    // >1 digital fragment
-    use odimo::coordinator::{scheduler::deploy, Mapping};
-    let g = build("tinycnn").unwrap();
-    let p = Platform::diana();
+    // >1 digital fragment (driven through the api facade, which wraps
+    // the scheduler unchanged)
+    use odimo::coordinator::Mapping;
+    let session = odimo::api::SessionBuilder::new("tinycnn")
+        .platform("diana")
+        .threads(1)
+        .build()
+        .unwrap();
+    let g = session.graph().clone();
     let mut m = Mapping::uniform(&g, 0);
     for n in g.mappable() {
         let ids = (0..n.cout).map(|i| (i % 2) as u8).collect();
         m.assign.insert(n.name.clone(), ids);
     }
-    let rep = deploy(&g, &m, &p, SocConfig::default());
+    let rep = session.deploy(&m).unwrap();
     let mut want = 0u64;
     for n in g.mappable() {
         let frags_dig = n.cout.div_ceil(2) as u64; // alternating, starts digital

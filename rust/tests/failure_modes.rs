@@ -184,7 +184,7 @@ fn simulator_rejects_overfull_split() {
     let mut split = odimo::hw::soc::split_all_digital(&g);
     split.insert("stem".into(), vec![100, 100]);
     let r = std::panic::catch_unwind(|| {
-        odimo::hw::simulate(&g, &split, &odimo::hw::Platform::diana(), Default::default())
+        odimo::hw::soc::simulate(&g, &split, &odimo::hw::Platform::diana(), Default::default())
     });
     assert!(r.is_err(), "overfull split must panic (coordinator bug guard)");
 }

@@ -10,7 +10,7 @@ use std::path::PathBuf;
 use anyhow::anyhow;
 use odimo::coordinator::partition::partition;
 use odimo::coordinator::{
-    baselines, discretize::discretize, Mapping, Pipeline, Regularizer, Schedule, Trainer,
+    discretize::discretize, Mapping, Pipeline, Regularizer, Schedule, Trainer,
 };
 use odimo::data::DataSource;
 use odimo::model::{AIMC, DIG};
@@ -191,13 +191,19 @@ fn search_alpha_movement_is_lambda_sensitive() {
 
 #[test]
 fn baseline_mappings_simulate_in_expected_order() {
-    // pure-simulator sanity chain on the real resnet20 geometry:
-    // min_cost_lat <= all_ternary < all_8bit in latency
-    let g = odimo::model::resnet20();
-    let p = odimo::hw::Platform::diana();
+    // pure-simulator sanity chain on the real resnet20 geometry,
+    // through the api facade: min_cost_lat <= all_ternary < all_8bit
+    // in latency
+    let session = odimo::api::SessionBuilder::new("resnet20")
+        .platform("diana")
+        .threads(1)
+        .build()
+        .unwrap();
     let lat = |name: &str| {
-        let m = baselines::by_name(&g, &p, name).unwrap();
-        odimo::hw::simulate(&g, &m.channel_split(2), &p, Default::default()).total_cycles
+        let m = session
+            .mapping(&odimo::api::MappingSpec::Baseline(name.into()))
+            .unwrap();
+        session.simulate(&m).unwrap().total_cycles
     };
     assert!(lat("all_ternary") < lat("all_8bit"));
     assert!(lat("min_cost_lat") <= lat("all_ternary"));

@@ -6,11 +6,12 @@
 
 use std::collections::BTreeMap;
 
+use odimo::api::{ServeOpts, Session, SessionBuilder};
 use odimo::coordinator::Mapping;
 use odimo::hw::Platform;
 use odimo::model::tinycnn;
 use odimo::serve::sweep::{self, dominates, pareto_prune};
-use odimo::serve::{dispatch, FrontierPoint, ServeCfg, Sla, SweepCfg};
+use odimo::serve::{dispatch, FrontierPoint, Sla, SweepCfg};
 use odimo::util::pool::ThreadPool;
 use odimo::util::prng::Pcg32;
 
@@ -155,28 +156,34 @@ fn frontier_cache_schema_mismatch_is_a_clear_error() {
     // tamper with the stored schema version; reloads must error clearly
     let path = sweep::frontier_path(&dir, &g.name, &p.name);
     let text = std::fs::read_to_string(&path).unwrap();
-    let bumped = text.replace("\"schema_version\":1", "\"schema_version\":999");
+    let bumped = text.replace("\"schema_version\":2", "\"schema_version\":999");
     assert_ne!(text, bumped, "version field must be present to tamper with");
     std::fs::write(&path, bumped).unwrap();
     let e = sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap_err().to_string();
     assert!(e.contains("schema version 999"), "{e}");
 }
 
-fn serve_cfg(dir: &std::path::Path, max_batch: usize, threads: usize, seed: u64) -> ServeCfg {
-    ServeCfg {
-        model: "tinycnn".into(),
-        platform: Platform::diana(),
-        results_dir: dir.to_path_buf(),
-        n_requests: 24,
+fn serve_session(dir: &std::path::Path, threads: usize, seed: u64) -> Session {
+    SessionBuilder::new("tinycnn")
+        .platform("diana")
+        .results_dir(dir)
+        .threads(threads)
+        .seed(seed)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        // larger than any tinycnn frontier, so each mapping compiles once
+        .plan_cache_cap(8)
+        .build()
+        .unwrap()
+}
+
+fn serve_opts(max_batch: usize) -> ServeOpts {
+    ServeOpts {
+        n_requests: Some(24),
         max_batch,
         max_wait: 50_000,
         mean_gap: 15_000,
         launch_cycles: 10_000,
-        threads: Some(threads),
-        seed,
-        // larger than any tinycnn frontier, so each mapping compiles once
-        plan_cache_cap: 8,
-        sweep: SweepCfg { seed, calib: 4, blend_steps: 2 },
     }
 }
 
@@ -184,9 +191,10 @@ fn serve_cfg(dir: &std::path::Path, max_batch: usize, threads: usize, seed: u64)
 fn closed_loop_is_deterministic_and_accounts_every_request() {
     let dir = std::env::temp_dir().join("odimo_serve_props_loop");
     let _ = std::fs::remove_dir_all(&dir);
-    let cfg = serve_cfg(&dir, 4, 2, 9);
-    let a = odimo::serve::run_serve(&cfg).unwrap();
-    let b = odimo::serve::run_serve(&cfg).unwrap();
+    // two independent sessions: bitwise-identical reports (frontier
+    // cache shared through disk, plan caches cold in both)
+    let a = serve_session(&dir, 2, 9).serve(&serve_opts(4)).unwrap();
+    let b = serve_session(&dir, 2, 9).serve(&serve_opts(4)).unwrap();
     assert_eq!(a.total_requests, 24);
     assert_eq!(a.total_requests, b.total_requests);
     assert_eq!(a.total_batches, b.total_batches);
@@ -210,10 +218,27 @@ fn closed_loop_is_deterministic_and_accounts_every_request() {
 }
 
 #[test]
+fn session_plan_cache_is_warm_on_second_serve() {
+    let dir = std::env::temp_dir().join("odimo_serve_props_warm");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut session = serve_session(&dir, 2, 9);
+    let a = session.serve(&serve_opts(4)).unwrap();
+    assert!(a.plan_misses > 0, "cold cache compiles");
+    // same session, same stream: every plan is already resident, and
+    // the virtual-time metrics are unchanged
+    let b = session.serve(&serve_opts(4)).unwrap();
+    assert_eq!(b.plan_misses, 0, "warm session must not recompile");
+    assert_eq!(b.plan_hits, b.total_batches as u64);
+    assert_eq!(a.p50_ms, b.p50_ms);
+    assert_eq!(a.p95_ms, b.p95_ms);
+    assert_eq!(a.sla_hit_rate, b.sla_hit_rate);
+}
+
+#[test]
 fn unbatched_mode_runs_one_request_per_batch() {
     let dir = std::env::temp_dir().join("odimo_serve_props_unbatched");
     let _ = std::fs::remove_dir_all(&dir);
-    let rep = odimo::serve::run_serve(&serve_cfg(&dir, 1, 2, 5)).unwrap();
+    let rep = serve_session(&dir, 2, 5).serve(&serve_opts(1)).unwrap();
     assert_eq!(rep.total_batches, rep.total_requests);
     for r in &rep.rows {
         assert!((r.mean_batch - 1.0).abs() < 1e-12, "{}: batch {}", r.label, r.mean_batch);
@@ -224,8 +249,12 @@ fn unbatched_mode_runs_one_request_per_batch() {
 fn serve_report_roundtrips_through_disk() {
     let dir = std::env::temp_dir().join("odimo_serve_props_report");
     let _ = std::fs::remove_dir_all(&dir);
-    let rep = odimo::serve::run_serve(&serve_cfg(&dir, 4, 2, 13)).unwrap();
-    let path = odimo::serve::report_path(&dir, "tinycnn", "diana");
-    let back = odimo::serve::metrics::load_report(&path).unwrap();
+    let mut session = serve_session(&dir, 2, 13);
+    let rep = session.serve(&serve_opts(4)).unwrap();
+    // the facade loader and a raw metrics load agree with the returned
+    // in-memory report
+    let back = session.serve_report().unwrap();
     assert_eq!(back.dashboard(), rep.dashboard());
+    let raw = odimo::serve::metrics::load_report(&session.report_path()).unwrap();
+    assert_eq!(raw.dashboard(), rep.dashboard());
 }

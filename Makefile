@@ -4,14 +4,20 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check doc api-check examples bench-infer bench-sim bench-mincost \
-	bench-serve bench artifacts clean
+.PHONY: build test check chaos doc api-check examples bench-infer bench-sim \
+	bench-mincost bench-serve bench artifacts clean
 
 build:
 	$(CARGO) build --release
 
 test:
 	$(CARGO) test -q
+
+# Fault-injection property suite alone: seeded chaos plans against the
+# serving loop (no request lost, degraded re-mapping conserves
+# channels, reports bit-identical across re-runs and thread counts).
+chaos:
+	$(CARGO) test --test chaos_props
 
 # Full gate: formatting, lints-as-errors, then the tier-1 command.
 check:
@@ -61,13 +67,15 @@ bench-mincost:
 		echo "warning: BENCH_mincost.json missing"
 
 # Closed-loop serving: img/s and simulated p95 latency at 1/2/8 worker
-# threads, batched vs unbatched. Emits BENCH_serve.json at repo root
-# and appends to results/bench_serve.csv. CI smoke-runs this with
-# --smoke alongside bench-mincost.
+# threads, batched vs unbatched, plus a faults0 case (empty fault plan)
+# whose loop time the overhead gate holds within 5% of batched. Emits
+# BENCH_serve.json at repo root and appends to results/bench_serve.csv.
+# CI smoke-runs this with --smoke alongside bench-mincost.
 bench-serve:
 	$(CARGO) bench --bench bench_serve
 	@test -f BENCH_serve.json && echo "BENCH_serve.json updated" || \
 		echo "warning: BENCH_serve.json missing"
+	$(PYTHON) tools/check_bench_overhead.py BENCH_serve.json
 
 # All harness = false bench binaries.
 bench:

@@ -1,16 +1,20 @@
 //! Bench: the closed-loop serve driver through `odimo::api::Session` —
 //! engine throughput (img/s) and simulated p95 queue+compute latency at
 //! 1/2/8 worker threads, batched (max_batch 8) vs unbatched
-//! (max_batch 1). One session per thread count owns the frontier and
-//! the LRU plan cache, so the timed loop measures steady-state serving
-//! (plans compile once, on the first instrumented run). CI smoke-runs
-//! this with `--smoke` (tiny request stream, 1 repetition); `make
-//! bench-serve` produces real timings. Writes `BENCH_serve.json` at the
-//! repo root and appends to `results/bench_serve.csv`.
+//! (max_batch 1), plus a `faults0` case per thread count: batched
+//! serving with an *empty* fault plan attached, which must cost the
+//! same as plain batched serving (the zero-fault overhead gate —
+//! `tools/check_bench_overhead.py` compares the two loop times). One
+//! session per thread count owns the frontier and the LRU plan cache,
+//! so the timed loop measures steady-state serving (plans compile once,
+//! on the first instrumented run). CI smoke-runs this with `--smoke`
+//! (tiny request stream, 1 repetition); `make bench-serve` produces
+//! real timings. Writes `BENCH_serve.json` at the repo root and appends
+//! to `results/bench_serve.csv`.
 
 use std::fmt::Write as _;
 
-use odimo::api::{ServeOpts, SessionBuilder};
+use odimo::api::{FaultPlan, ServeOpts, SessionBuilder};
 use odimo::util::bench::{black_box, Bench};
 
 fn main() {
@@ -37,13 +41,22 @@ fn main() {
             .plan_cache_cap(8)
             .build()
             .expect("session");
-        for (mode, max_batch) in [("batched", 8usize), ("unbatched", 1)] {
+        let cases = [
+            ("batched", 8usize, None),
+            ("unbatched", 1, None),
+            // fault machinery attached but inert: its cost at zero
+            // faults is the overhead the gate keeps below 5%
+            ("faults0", 8, Some(FaultPlan::empty())),
+        ];
+        for (mode, max_batch, fault_plan) in cases {
             let opts = ServeOpts {
                 n_requests: Some(if smoke { 16 } else { 128 }),
                 max_batch,
                 max_wait: 50_000,
                 mean_gap: 15_000,
                 launch_cycles: 10_000,
+                fault_plan,
+                ..ServeOpts::default()
             };
             // metrics come from one instrumented run; the timed loop
             // measures the whole closed loop (dispatch + batch + engine)

@@ -25,11 +25,18 @@
 //! hangs off session-owned state instead of globals.
 //!
 //! See [`SessionBuilder`] for a doc-tested end-to-end example.
+//!
+//! Fault-tolerant serving is part of the same surface: put a
+//! [`FaultPlan`] and an [`AdmissionCfg`] into [`ServeOpts`] and
+//! [`Session::serve`] runs the degraded-mode driver
+//! (docs/ARCHITECTURE.md §Faults) — no separate entry point.
 
 #![deny(missing_docs)]
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 mod session;
 
 pub use crate::coordinator::baselines::CostObjective;
-pub use crate::serve::ServeOpts;
+pub use crate::hw::faults::{FaultEvent, FaultPlan};
+pub use crate::serve::{AdmissionCfg, ServeError, ServeOpts, ServeReport};
 pub use session::{MappingSpec, Session, SessionBuilder, SweepResult};

@@ -370,7 +370,10 @@ impl Session {
     pub fn infer(&mut self, mapping: &Mapping, x: &[f32], batch: usize) -> Result<Vec<f32>> {
         mapping.validate(&self.graph, self.platform.n_acc())?;
         self.ensure_params();
-        let (names, values) = self.params.as_ref().expect("params just ensured");
+        let (names, values) = self
+            .params
+            .as_ref()
+            .ok_or_else(|| anyhow!("internal: parameter snapshot missing after ensure_params"))?;
         let key = QuantPlan::cache_key(&self.graph.name, &self.platform.name, mapping);
         let graph = &self.graph;
         let platform = &self.platform;
@@ -420,22 +423,35 @@ impl Session {
             }
             self.frontier = Some(SweepResult { points, cache_hit });
         }
-        Ok(self.frontier.as_ref().expect("frontier just filled"))
+        self.frontier
+            .as_ref()
+            .ok_or_else(|| anyhow!("internal: frontier missing after sweep"))
     }
 
     /// Run the closed-loop SLA-aware serving driver over the session's
     /// frontier and plan cache, persist the report under the results
     /// directory, and return it. Deterministic in (model, platform
-    /// spec, seed, opts) for everything except wall-clock throughput.
+    /// spec, seed, opts) for everything except wall-clock throughput —
+    /// including faults: `opts.fault_plan` scripts unit failures on the
+    /// virtual timeline and `opts.admission` bounds overload, and the
+    /// returned report accounts every request as served, shed, or
+    /// failed (`ServeReport::accounted`).
     pub fn serve(&mut self, opts: &ServeOpts) -> Result<ServeReport> {
         let n_requests = opts
             .n_requests
             .unwrap_or(if self.smoke { 24 } else { 96 });
         self.sweep()?;
         self.ensure_params();
-        let (names, values) = self.params.as_ref().expect("params just ensured");
+        let (names, values) = self
+            .params
+            .as_ref()
+            .ok_or_else(|| anyhow!("internal: parameter snapshot missing after ensure_params"))?;
         let params = ParamSet::new(names.iter().map(|s| s.as_str()), values);
-        let frontier = &self.frontier.as_ref().expect("sweep just ran").points;
+        let frontier = &self
+            .frontier
+            .as_ref()
+            .ok_or_else(|| anyhow!("internal: frontier missing after sweep"))?
+            .points;
         let report = serve::run_serve(
             &self.graph,
             &self.platform,
@@ -481,6 +497,8 @@ fn init_pool(cell: &OnceCell<ThreadPool>, threads: Option<usize>) -> &ThreadPool
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::prng::Pcg32;
 

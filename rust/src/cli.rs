@@ -231,6 +231,24 @@ pub const FLAGS: &[FlagSpec] = &[
         value: Some("<cyc>"),
         help: "serve: mean inter-arrival gap, simulated cycles",
     },
+    FlagSpec {
+        name: "faults",
+        value: Some("<file.toml|json>"),
+        help: "serve: inject a scripted accelerator fault plan on the virtual timeline \
+               (see EXPERIMENTS.md for the schema)",
+    },
+    FlagSpec {
+        name: "overload-wait",
+        value: Some("<cyc>"),
+        help: "serve: admission control — shed/degrade arrivals whose projected device \
+               wait exceeds this many simulated cycles (default: never)",
+    },
+    FlagSpec {
+        name: "max-retries",
+        value: Some("<n>"),
+        help: "serve: re-enqueue budget per request before it is accounted failed \
+               (default 3)",
+    },
 ];
 
 /// One subcommand: its help line plus exactly the flags and switches it
@@ -316,7 +334,8 @@ pub const VERBS: &[VerbSpec] = &[
         name: "serve",
         help: "closed-loop SLA-aware batched inference over the frontier",
         flags: &["model", "platform", "results", "threads", "seed", "requests",
-                 "max-batch", "max-wait", "gap"],
+                 "max-batch", "max-wait", "gap", "faults", "overload-wait",
+                 "max-retries"],
         switches: &["smoke"],
     },
     VerbSpec {

@@ -1,0 +1,705 @@
+//! Accelerator fault model for fault-tolerant serving.
+//!
+//! A [`FaultPlan`] is a deterministic script of unit-level fault events
+//! on the serve loop's *virtual* cycle timeline — nothing here is
+//! sampled at run time, so a (seed, plan) pair always reproduces the
+//! same degraded run byte-for-byte:
+//!
+//!   * [`FaultEvent::UnitDown`] — the unit is permanently lost from
+//!     `at_cycle` on;
+//!   * [`FaultEvent::UnitDerated`] — the unit keeps running from
+//!     `at_cycle` on but `factor`x slower (thermal throttling, a dead
+//!     sub-array); overlapping deratings take the worst factor;
+//!   * [`FaultEvent::Transient`] — the unit is down for
+//!     `[at_cycle, at_cycle + duration)` and then healthy again (a
+//!     recoverable hang + reset).
+//!
+//! Plans load from TOML (`config/faults_demo.toml`, schema in
+//! EXPERIMENTS.md §Fault plans) or JSON, or are synthesized
+//! deterministically from a seed ([`FaultPlan::synth`]). Unit names are
+//! resolved against a concrete [`Platform`] once, up front
+//! ([`FaultPlan::resolve`]), so a typo'd unit is a load-time error, not
+//! a silently ignored event. The resolved form answers the questions
+//! the serve health tracker actually asks: the [`FaultState`] at a
+//! cycle, the next state-change cycle after a cycle, and the earliest
+//! cycle in a window at which a unit is down.
+
+#![deny(missing_docs)]
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{parse_toml, TomlValue};
+use crate::util::json::Json;
+use crate::util::prng::Pcg32;
+
+use super::platform::Platform;
+
+/// One scripted fault on the virtual serve timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// `unit` is permanently lost from `at_cycle` on.
+    UnitDown {
+        /// Accelerator name (resolved against the platform at load).
+        unit: String,
+        /// Virtual cycle at which the unit dies.
+        at_cycle: u64,
+    },
+    /// `unit` runs `factor`x slower from `at_cycle` on (factor >= 1.0;
+    /// overlapping deratings take the worst factor).
+    UnitDerated {
+        /// Accelerator name.
+        unit: String,
+        /// Slowdown factor (>= 1.0).
+        factor: f64,
+        /// Virtual cycle at which the derating starts.
+        at_cycle: u64,
+    },
+    /// `unit` is down for `[at_cycle, at_cycle + duration)`, then
+    /// healthy again.
+    Transient {
+        /// Accelerator name.
+        unit: String,
+        /// Virtual cycle at which the outage starts.
+        at_cycle: u64,
+        /// Outage length in cycles (> 0).
+        duration: u64,
+    },
+}
+
+impl FaultEvent {
+    /// The accelerator name this event targets.
+    pub fn unit(&self) -> &str {
+        match self {
+            FaultEvent::UnitDown { unit, .. }
+            | FaultEvent::UnitDerated { unit, .. }
+            | FaultEvent::Transient { unit, .. } => unit,
+        }
+    }
+
+    /// The virtual cycle at which this event takes effect.
+    pub fn at_cycle(&self) -> u64 {
+        match *self {
+            FaultEvent::UnitDown { at_cycle, .. }
+            | FaultEvent::UnitDerated { at_cycle, .. }
+            | FaultEvent::Transient { at_cycle, .. } => at_cycle,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            FaultEvent::UnitDown { unit, at_cycle } => Json::obj(vec![
+                ("kind", Json::str("unit_down")),
+                ("unit", Json::str(unit.clone())),
+                ("at_cycle", Json::num(*at_cycle as f64)),
+            ]),
+            FaultEvent::UnitDerated { unit, factor, at_cycle } => Json::obj(vec![
+                ("kind", Json::str("derated")),
+                ("unit", Json::str(unit.clone())),
+                ("factor", Json::num(*factor)),
+                ("at_cycle", Json::num(*at_cycle as f64)),
+            ]),
+            FaultEvent::Transient { unit, at_cycle, duration } => Json::obj(vec![
+                ("kind", Json::str("transient")),
+                ("unit", Json::str(unit.clone())),
+                ("at_cycle", Json::num(*at_cycle as f64)),
+                ("duration", Json::num(*duration as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<FaultEvent> {
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow!("fault event: 'kind' must be a string"))?;
+        let unit = v
+            .req("unit")?
+            .as_str()
+            .ok_or_else(|| anyhow!("fault event: 'unit' must be a string"))?
+            .to_string();
+        let at_cycle = v.req_f64("at_cycle")? as u64;
+        match kind {
+            "unit_down" => Ok(FaultEvent::UnitDown { unit, at_cycle }),
+            "derated" => {
+                Ok(FaultEvent::UnitDerated { unit, factor: v.req_f64("factor")?, at_cycle })
+            }
+            "transient" => Ok(FaultEvent::Transient {
+                unit,
+                at_cycle,
+                duration: v.req_f64("duration")? as u64,
+            }),
+            other => {
+                Err(anyhow!("fault event: unknown kind '{other}' (unit_down|derated|transient)"))
+            }
+        }
+    }
+}
+
+/// Health of one accelerator at one instant of the virtual timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UnitHealth {
+    /// Fully operational.
+    Up,
+    /// Operational, but all layer latencies scale by this factor.
+    Derated(f64),
+    /// Not accepting work.
+    Down,
+}
+
+/// Per-unit health snapshot (indexed like `Platform::accelerators`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultState {
+    /// Health of each accelerator, in platform order.
+    pub health: Vec<UnitHealth>,
+}
+
+impl FaultState {
+    /// The all-healthy state for an `n`-unit platform.
+    pub fn healthy(n: usize) -> FaultState {
+        FaultState { health: vec![UnitHealth::Up; n] }
+    }
+
+    /// True when every unit is `Up`.
+    pub fn all_up(&self) -> bool {
+        self.health.iter().all(|h| matches!(h, UnitHealth::Up))
+    }
+
+    /// True when unit `i` is down.
+    pub fn is_down(&self, i: usize) -> bool {
+        matches!(self.health.get(i), Some(UnitHealth::Down))
+    }
+
+    /// Latency scale factor of unit `i` (1.0 for `Up`; a down unit has
+    /// no meaningful factor and also reports 1.0 — callers gate on
+    /// [`FaultState::is_down`] first).
+    pub fn factor(&self, i: usize) -> f64 {
+        match self.health.get(i) {
+            Some(UnitHealth::Derated(f)) => *f,
+            _ => 1.0,
+        }
+    }
+
+    /// Indices of the units that are *not* down, in platform order.
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.health.len()).filter(|&i| !self.is_down(i)).collect()
+    }
+
+    /// FNV-1a hash of the snapshot — the cache key for per-fault-state
+    /// artifacts (degraded platforms, re-mapped frontier points).
+    /// Derating factors hash by exact bit pattern.
+    pub fn key(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(&(self.health.len() as u64).to_le_bytes());
+        for u in &self.health {
+            match u {
+                UnitHealth::Up => eat(&[0]),
+                UnitHealth::Derated(f) => {
+                    eat(&[1]);
+                    eat(&f.to_bits().to_le_bytes());
+                }
+                UnitHealth::Down => eat(&[2]),
+            }
+        }
+        h
+    }
+}
+
+/// A deterministic script of fault events (unit names unresolved).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The scripted events, in file/declaration order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan (no faults; serve behaves exactly as without one).
+    pub fn empty() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// Structural validation: finite factors >= 1.0, non-zero
+    /// transient durations. (Unit names are checked at
+    /// [`FaultPlan::resolve`] time, against a concrete platform.)
+    pub fn validate(&self) -> Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            match e {
+                FaultEvent::UnitDerated { factor, .. } => {
+                    if !factor.is_finite() || *factor < 1.0 {
+                        return Err(anyhow!(
+                            "fault plan event {i}: derating factor {factor} must be finite \
+                             and >= 1.0"
+                        ));
+                    }
+                }
+                FaultEvent::Transient { duration, .. } => {
+                    if *duration == 0 {
+                        return Err(anyhow!(
+                            "fault plan event {i}: transient duration must be > 0"
+                        ));
+                    }
+                }
+                FaultEvent::UnitDown { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a plan from a `.toml` or `.json` file (by extension).
+    pub fn from_file(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+        match ext {
+            "toml" => FaultPlan::from_toml_text(&text),
+            "json" => FaultPlan::from_json_text(&text),
+            other => Err(anyhow!(
+                "fault plan {}: unsupported extension '{other}' (.toml or .json)",
+                path.display()
+            )),
+        }
+    }
+
+    /// Parse the TOML schema (EXPERIMENTS.md §Fault plans): a `[plan]`
+    /// section with an `events` ordering array, one `[event.<id>]`
+    /// section per event.
+    pub fn from_toml_text(text: &str) -> Result<FaultPlan> {
+        let doc = parse_toml(text)?;
+        let order = match doc.get("plan.events") {
+            Some(TomlValue::Arr(a)) => a
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Str(s) => Ok(s.clone()),
+                    _ => Err(anyhow!("fault plan toml: plan.events entries must be strings")),
+                })
+                .collect::<Result<Vec<String>>>()?,
+            _ => return Err(anyhow!("fault plan toml: missing plan.events array")),
+        };
+        let mut events = Vec::with_capacity(order.len());
+        for id in &order {
+            let key = |f: &str| format!("event.{id}.{f}");
+            let get_str = |f: &str| -> Result<String> {
+                match doc.get(&key(f)) {
+                    Some(TomlValue::Str(s)) => Ok(s.clone()),
+                    Some(_) => Err(anyhow!("fault plan toml: {} must be a string", key(f))),
+                    None => Err(anyhow!("fault plan toml: missing {}", key(f))),
+                }
+            };
+            let get_num = |f: &str| -> Result<f64> {
+                match doc.get(&key(f)) {
+                    Some(TomlValue::Num(n)) => Ok(*n),
+                    Some(_) => Err(anyhow!("fault plan toml: {} must be a number", key(f))),
+                    None => Err(anyhow!("fault plan toml: missing {}", key(f))),
+                }
+            };
+            let kind = get_str("kind")?;
+            let unit = get_str("unit")?;
+            let at_cycle = get_num("at_cycle")? as u64;
+            events.push(match kind.as_str() {
+                "unit_down" => FaultEvent::UnitDown { unit, at_cycle },
+                "derated" => {
+                    FaultEvent::UnitDerated { unit, factor: get_num("factor")?, at_cycle }
+                }
+                "transient" => FaultEvent::Transient {
+                    unit,
+                    at_cycle,
+                    duration: get_num("duration")? as u64,
+                },
+                other => {
+                    return Err(anyhow!(
+                        "fault plan toml: event.{id}: unknown kind '{other}' \
+                         (unit_down|derated|transient)"
+                    ))
+                }
+            });
+        }
+        let plan = FaultPlan { events };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Parse the JSON form: `{"events": [{...}, ...]}`.
+    pub fn from_json_text(text: &str) -> Result<FaultPlan> {
+        let v = crate::util::json::parse(text)
+            .map_err(|e| anyhow!("fault plan json: {e}"))?;
+        FaultPlan::from_json(&v)
+    }
+
+    /// Serialize to the JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "events",
+            Json::Arr(self.events.iter().map(|e| e.to_json()).collect()),
+        )])
+    }
+
+    /// Deserialize the JSON form (inverse of [`FaultPlan::to_json`]).
+    pub fn from_json(v: &Json) -> Result<FaultPlan> {
+        let arr = v
+            .req("events")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("fault plan json: 'events' must be an array"))?;
+        let events =
+            arr.iter().map(FaultEvent::from_json).collect::<Result<Vec<FaultEvent>>>()?;
+        let plan = FaultPlan { events };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Synthesize a seed-deterministic plan against `platform`: 1-4
+    /// events over `[0, horizon)` cycles, never downing the last
+    /// surviving unit (at most `n_acc - 1` permanent losses, and the
+    /// one transient outage the generator emits never overlaps them).
+    pub fn synth(seed: u64, platform: &Platform, horizon: u64) -> FaultPlan {
+        let mut rng = Pcg32::new(seed, 909);
+        let n = platform.n_acc();
+        let horizon = horizon.max(8);
+        let half = (horizon / 2).min(u32::MAX as u64) as u32;
+        let quarter = (horizon / 4).min(u32::MAX as u64) as u32;
+        let n_events = 1 + rng.below(4) as usize;
+        let mut permanently_down = vec![false; n];
+        let mut transient_done = false;
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            let unit_idx = rng.below(n as u32) as usize;
+            let unit = platform.accelerators[unit_idx].name.clone();
+            let at_cycle = rng.below(half) as u64;
+            let kind = rng.below(3);
+            let down_budget_left =
+                permanently_down.iter().filter(|&&d| d).count() + 1 < n;
+            match kind {
+                0 if down_budget_left && !permanently_down[unit_idx] => {
+                    permanently_down[unit_idx] = true;
+                    events.push(FaultEvent::UnitDown { unit, at_cycle });
+                }
+                // a transient outage also removes a unit for its span;
+                // cap at one so a synthetic plan can never have every
+                // unit simultaneously unavailable
+                2 if !transient_done
+                    && down_budget_left
+                    && !permanently_down[unit_idx] =>
+                {
+                    transient_done = true;
+                    permanently_down[unit_idx] = true;
+                    let duration = horizon / 8 + rng.below(quarter) as u64;
+                    events.push(FaultEvent::Transient { unit, at_cycle, duration });
+                }
+                _ => {
+                    let factor = 1.25 + 2.75 * rng.next_f32() as f64;
+                    events.push(FaultEvent::UnitDerated { unit, factor, at_cycle });
+                }
+            }
+        }
+        FaultPlan { events }
+    }
+
+    /// Resolve unit names against `platform`, producing the indexed
+    /// form the serve health tracker queries. Errors on unknown units
+    /// and on structural problems ([`FaultPlan::validate`]).
+    pub fn resolve(&self, platform: &Platform) -> Result<ResolvedFaults> {
+        self.validate()?;
+        let mut events = Vec::with_capacity(self.events.len());
+        for e in &self.events {
+            let unit = platform.acc_index(e.unit()).ok_or_else(|| {
+                anyhow!(
+                    "fault plan: unknown unit '{}' on platform {} (units: {:?})",
+                    e.unit(),
+                    platform.name,
+                    platform.acc_names()
+                )
+            })?;
+            events.push(ResolvedEvent { unit, event: e.clone() });
+        }
+        let mut changes: Vec<u64> = Vec::new();
+        for e in &events {
+            changes.push(e.event.at_cycle());
+            if let FaultEvent::Transient { at_cycle, duration, .. } = e.event {
+                changes.push(at_cycle.saturating_add(duration));
+            }
+        }
+        changes.sort_unstable();
+        changes.dedup();
+        Ok(ResolvedFaults { n_units: platform.n_acc(), events, changes })
+    }
+}
+
+/// One event with its unit name resolved to a platform index.
+#[derive(Clone, Debug)]
+struct ResolvedEvent {
+    unit: usize,
+    event: FaultEvent,
+}
+
+/// A [`FaultPlan`] resolved against a concrete platform: the queryable
+/// timeline form.
+#[derive(Clone, Debug)]
+pub struct ResolvedFaults {
+    n_units: usize,
+    events: Vec<ResolvedEvent>,
+    /// Sorted, deduplicated cycles at which the fault state changes.
+    changes: Vec<u64>,
+}
+
+impl ResolvedFaults {
+    /// Number of scripted events.
+    pub fn n_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Number of platform units the plan was resolved against.
+    pub fn n_units(&self) -> usize {
+        self.n_units
+    }
+
+    /// The health snapshot at virtual cycle `t`.
+    pub fn state_at(&self, t: u64) -> FaultState {
+        let mut health = vec![UnitHealth::Up; self.n_units];
+        // down wins over derated; overlapping deratings take the max
+        let mut factor = vec![1.0f64; self.n_units];
+        let mut down = vec![false; self.n_units];
+        for e in &self.events {
+            match e.event {
+                FaultEvent::UnitDown { at_cycle, .. } => {
+                    if t >= at_cycle {
+                        down[e.unit] = true;
+                    }
+                }
+                FaultEvent::Transient { at_cycle, duration, .. } => {
+                    if t >= at_cycle && t < at_cycle.saturating_add(duration) {
+                        down[e.unit] = true;
+                    }
+                }
+                FaultEvent::UnitDerated { factor: f, at_cycle, .. } => {
+                    if t >= at_cycle && f > factor[e.unit] {
+                        factor[e.unit] = f;
+                    }
+                }
+            }
+        }
+        for i in 0..self.n_units {
+            health[i] = if down[i] {
+                UnitHealth::Down
+            } else if factor[i] > 1.0 {
+                UnitHealth::Derated(factor[i])
+            } else {
+                UnitHealth::Up
+            };
+        }
+        FaultState { health }
+    }
+
+    /// The first state-change cycle strictly after `t`, if any.
+    pub fn next_change_after(&self, t: u64) -> Option<u64> {
+        self.changes.iter().copied().find(|&c| c > t)
+    }
+
+    /// Earliest cycle in `[from, to)` at which unit `u` is down, if
+    /// any — the abort point for a batch occupying `u` over that span.
+    pub fn down_in(&self, u: usize, from: u64, to: u64) -> Option<u64> {
+        let mut earliest: Option<u64> = None;
+        for e in &self.events {
+            if e.unit != u {
+                continue;
+            }
+            let (a, b) = match e.event {
+                FaultEvent::UnitDown { at_cycle, .. } => (at_cycle, u64::MAX),
+                FaultEvent::Transient { at_cycle, duration, .. } => {
+                    (at_cycle, at_cycle.saturating_add(duration))
+                }
+                FaultEvent::UnitDerated { .. } => continue,
+            };
+            if b > from && a < to {
+                let hit = a.max(from);
+                match earliest {
+                    Some(cur) if hit >= cur => {}
+                    _ => earliest = Some(hit),
+                }
+            }
+        }
+        earliest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn demo_plan() -> FaultPlan {
+        FaultPlan {
+            events: vec![
+                FaultEvent::UnitDerated { unit: "npu".into(), factor: 2.0, at_cycle: 1_000 },
+                FaultEvent::UnitDown { unit: "imc0".into(), at_cycle: 5_000 },
+                FaultEvent::Transient { unit: "gpu".into(), at_cycle: 8_000, duration: 2_000 },
+            ],
+        }
+    }
+
+    #[test]
+    fn state_timeline_matches_events() {
+        let r = demo_plan().resolve(&Platform::mpsoc4()).unwrap();
+        assert_eq!(r.n_events(), 3);
+        assert!(r.state_at(0).all_up());
+        let s = r.state_at(1_000);
+        assert_eq!(s.health[0], UnitHealth::Derated(2.0));
+        assert!(!s.is_down(1));
+        let s = r.state_at(6_000);
+        assert!(s.is_down(1), "imc0 down from 5000");
+        assert_eq!(s.survivors(), vec![0, 2, 3]);
+        // transient: down inside the window, back up after
+        assert!(r.state_at(9_999).is_down(3));
+        assert!(!r.state_at(10_000).is_down(3));
+        // factors: derated reports its factor, up/down report 1.0
+        assert_eq!(r.state_at(2_000).factor(0), 2.0);
+        assert_eq!(r.state_at(0).factor(0), 1.0);
+    }
+
+    #[test]
+    fn change_cycles_and_down_windows() {
+        let r = demo_plan().resolve(&Platform::mpsoc4()).unwrap();
+        assert_eq!(r.next_change_after(0), Some(1_000));
+        assert_eq!(r.next_change_after(1_000), Some(5_000));
+        assert_eq!(r.next_change_after(8_000), Some(10_000));
+        assert_eq!(r.next_change_after(10_000), None);
+        // permanent down: any window past at_cycle hits
+        assert_eq!(r.down_in(1, 0, 4_000), None);
+        assert_eq!(r.down_in(1, 0, 6_000), Some(5_000));
+        assert_eq!(r.down_in(1, 7_000, 8_000), Some(7_000), "already down at start");
+        // transient: only inside its span
+        assert_eq!(r.down_in(3, 0, 8_000), None);
+        assert_eq!(r.down_in(3, 0, 9_000), Some(8_000));
+        assert_eq!(r.down_in(3, 10_000, u64::MAX), None);
+        // derated unit never reports down
+        assert_eq!(r.down_in(0, 0, u64::MAX), None);
+    }
+
+    #[test]
+    fn state_key_distinguishes_states() {
+        let r = demo_plan().resolve(&Platform::mpsoc4()).unwrap();
+        let healthy = r.state_at(0);
+        assert_eq!(healthy.key(), FaultState::healthy(4).key());
+        let keys: Vec<u64> =
+            [0, 1_000, 5_000, 8_000, 10_000].iter().map(|&t| r.state_at(t).key()).collect();
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j], "states at steps {i} and {j} must key apart");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_unit_is_a_load_error() {
+        let plan = FaultPlan {
+            events: vec![FaultEvent::UnitDown { unit: "warp_core".into(), at_cycle: 0 }],
+        };
+        let e = plan.resolve(&Platform::diana()).unwrap_err().to_string();
+        assert!(e.contains("warp_core"), "{e}");
+        assert!(e.contains("diana"), "{e}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        let bad = FaultPlan {
+            events: vec![FaultEvent::UnitDerated {
+                unit: "dig".into(),
+                factor: 0.5,
+                at_cycle: 0,
+            }],
+        };
+        assert!(bad.validate().is_err(), "factor < 1.0");
+        let bad = FaultPlan {
+            events: vec![FaultEvent::Transient {
+                unit: "dig".into(),
+                at_cycle: 0,
+                duration: 0,
+            }],
+        };
+        assert!(bad.validate().is_err(), "zero duration");
+        assert!(FaultPlan::empty().validate().is_ok());
+    }
+
+    #[test]
+    fn toml_and_json_roundtrip() {
+        let text = "\
+[plan]
+events = [\"e0\", \"e1\", \"e2\"]
+
+[event.e0]
+kind = \"derated\"
+unit = \"npu\"
+factor = 2.0
+at_cycle = 1000
+
+[event.e1]
+kind = \"unit_down\"
+unit = \"imc0\"
+at_cycle = 5000
+
+[event.e2]
+kind = \"transient\"
+unit = \"gpu\"
+at_cycle = 8000
+duration = 2000
+";
+        let from_toml = FaultPlan::from_toml_text(text).unwrap();
+        assert_eq!(from_toml, demo_plan());
+        let back = FaultPlan::from_json(&from_toml.to_json()).unwrap();
+        assert_eq!(back, from_toml);
+    }
+
+    #[test]
+    fn toml_errors_are_specific() {
+        assert!(FaultPlan::from_toml_text("x = 1\n").is_err(), "missing plan.events");
+        let e = FaultPlan::from_toml_text(
+            "[plan]\nevents = [\"e0\"]\n[event.e0]\nkind = \"warp\"\nunit = \"a\"\n\
+             at_cycle = 0\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("unknown kind"), "{e}");
+        let e = FaultPlan::from_toml_text("[plan]\nevents = [\"e0\"]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("event.e0"), "{e}");
+    }
+
+    #[test]
+    fn synth_is_deterministic_and_never_kills_every_unit() {
+        let p = Platform::mpsoc4();
+        for seed in 0..50u64 {
+            let a = FaultPlan::synth(seed, &p, 1_000_000);
+            let b = FaultPlan::synth(seed, &p, 1_000_000);
+            assert_eq!(a, b, "seed {seed}");
+            assert!(!a.events.is_empty() && a.events.len() <= 4, "seed {seed}");
+            a.validate().unwrap();
+            let r = a.resolve(&p).unwrap();
+            // at every state change at least one unit survives
+            for t in [0u64, 1, 250_000, 500_000, 999_999, u64::MAX / 2] {
+                assert!(
+                    !r.state_at(t).survivors().is_empty(),
+                    "seed {seed}: all units down at {t}"
+                );
+            }
+        }
+        // single-unit platform: synth can only derate
+        let mut solo = Platform::diana();
+        solo.accelerators.truncate(1);
+        for seed in 0..20u64 {
+            let plan = FaultPlan::synth(seed, &solo, 100_000);
+            for e in &plan.events {
+                assert!(
+                    matches!(e, FaultEvent::UnitDerated { .. }),
+                    "seed {seed}: single unit must never go down"
+                );
+            }
+        }
+    }
+}

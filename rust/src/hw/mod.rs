@@ -18,6 +18,7 @@
 
 pub mod abstracthw;
 pub mod energy;
+pub mod faults;
 pub mod l1;
 pub mod latency;
 pub mod platform;
@@ -25,6 +26,7 @@ pub mod soc;
 pub mod timeline;
 
 pub use abstracthw::AbstractHw;
+pub use faults::{FaultEvent, FaultPlan, FaultState, ResolvedFaults, UnitHealth};
 pub use platform::{AcceleratorSpec, LatencyModel, Platform};
 pub use soc::{ChannelSplit, RunReport, SocConfig};
 pub use timeline::{Timeline, Utilization};

@@ -36,6 +36,7 @@ use crate::config::{parse_toml, TomlValue};
 use crate::model::NodeDef;
 
 use super::energy::{P_ACT, P_IDLE};
+use super::faults::{FaultState, UnitHealth};
 use super::l1::L1_BYTES;
 use super::latency::{lat_dw_pe, lat_imc_macro, lat_pe_array, AIMC_COLS, AIMC_ROWS, DIG_PE,
                      F_CLK_HZ};
@@ -96,6 +97,24 @@ impl LatencyModel {
             }
             LatencyModel::Proportional { macs_per_cycle } => {
                 ((cout * k * k * ox * oy) as f64 / macs_per_cycle).ceil() as u64
+            }
+        }
+    }
+
+    /// This model slowed down by `factor` (>= 1.0). Proportional units
+    /// scale throughput exactly; grid models shrink each edge by
+    /// `sqrt(factor)` (floor, min 1) — the discrete approximation of a
+    /// partially disabled array, so a derated grid is never *faster*
+    /// than the healthy one.
+    pub fn derated(&self, factor: f64) -> LatencyModel {
+        let shrink = |edge: u64| ((edge as f64 / factor.sqrt()).floor() as u64).max(1);
+        match *self {
+            LatencyModel::DigitalPe { pe } => LatencyModel::DigitalPe { pe: shrink(pe) },
+            LatencyModel::ImcMacro { rows, cols } => {
+                LatencyModel::ImcMacro { rows: shrink(rows), cols: shrink(cols) }
+            }
+            LatencyModel::Proportional { macs_per_cycle } => {
+                LatencyModel::Proportional { macs_per_cycle: macs_per_cycle / factor }
             }
         }
     }
@@ -287,6 +306,52 @@ impl Platform {
             }
         }
         h
+    }
+
+    /// A degraded *view* of this platform under a fault state: down
+    /// units are removed (surviving order preserved), derated units
+    /// keep their name with a latency model scaled `factor`x slower
+    /// (see [`LatencyModel::derated`]). The view's `name` embeds
+    /// [`FaultState::key`], so its [`Platform::spec_hash`] — and every
+    /// cache keyed by it (frontier, plan cache) — is distinct from the
+    /// healthy platform's and from every other fault state's. The
+    /// all-up state returns the platform unchanged. If the depthwise
+    /// unit is down, depthwise layers fall back to the first surviving
+    /// unit. Errors when the state's arity mismatches or no unit
+    /// survives.
+    pub fn degraded(&self, state: &FaultState) -> Result<Platform> {
+        if state.health.len() != self.n_acc() {
+            return Err(anyhow!(
+                "fault state covers {} units but platform {} has {}",
+                state.health.len(),
+                self.name,
+                self.n_acc()
+            ));
+        }
+        if state.all_up() {
+            return Ok(self.clone());
+        }
+        let survivors = state.survivors();
+        if survivors.is_empty() {
+            return Err(anyhow!("platform {}: every accelerator is down", self.name));
+        }
+        let mut accelerators = Vec::with_capacity(survivors.len());
+        for &i in &survivors {
+            let mut spec = self.accelerators[i].clone();
+            if let UnitHealth::Derated(f) = state.health[i] {
+                spec.latency = spec.latency.derated(f);
+            }
+            accelerators.push(spec);
+        }
+        let dw_acc = survivors.iter().position(|&i| i == self.dw_acc).unwrap_or(0);
+        Platform {
+            name: format!("{}~f{:016x}", self.name, state.key()),
+            f_clk_hz: self.f_clk_hz,
+            l1_bytes: self.l1_bytes,
+            dw_acc,
+            accelerators,
+        }
+        .validate()
     }
 
     fn validate(self) -> Result<Self> {
@@ -867,6 +932,67 @@ p_idle_mw = 1.2
             assert_eq!(p.name, name);
             assert!(p.clone().validate().is_ok(), "{name}");
         }
+    }
+
+    #[test]
+    fn degraded_view_drops_down_units_and_rekeys() {
+        use crate::hw::faults::{FaultState, UnitHealth};
+        let p = Platform::mpsoc4();
+        // all-up state: the view is the platform itself
+        let same = p.degraded(&FaultState::healthy(4)).unwrap();
+        assert_eq!(same, p);
+        // imc0 down: three survivors in platform order, distinct hash
+        let mut st = FaultState::healthy(4);
+        st.health[1] = UnitHealth::Down;
+        let d = p.degraded(&st).unwrap();
+        assert_eq!(d.acc_names(), vec!["npu", "imc1", "gpu"]);
+        assert_ne!(d.spec_hash(), p.spec_hash());
+        assert!(d.name.starts_with("mpsoc4~f"), "{}", d.name);
+        assert_eq!(d.dw_acc, 0, "dw unit npu survives at index 0");
+        assert_eq!(d.da_widths(), vec![6], "imc0's 7-bit D/A went with it");
+        // two distinct fault states never collide on name/hash
+        let mut st2 = FaultState::healthy(4);
+        st2.health[3] = UnitHealth::Down;
+        let d2 = p.degraded(&st2).unwrap();
+        assert_ne!(d.name, d2.name);
+        assert_ne!(d.spec_hash(), d2.spec_hash());
+        // dw unit down: depthwise falls back to the first survivor
+        let mut st3 = FaultState::healthy(4);
+        st3.health[0] = UnitHealth::Down;
+        assert_eq!(p.degraded(&st3).unwrap().dw_acc, 0);
+        // no survivors is an error, as is an arity mismatch
+        let all_down = FaultState { health: vec![UnitHealth::Down; 4] };
+        assert!(p.degraded(&all_down).is_err());
+        assert!(p.degraded(&FaultState::healthy(2)).is_err());
+    }
+
+    #[test]
+    fn derated_models_are_never_faster() {
+        use crate::hw::faults::{FaultState, UnitHealth};
+        for model in [
+            LatencyModel::DigitalPe { pe: DIG_PE },
+            LatencyModel::ImcMacro { rows: AIMC_ROWS, cols: AIMC_COLS },
+            LatencyModel::Proportional { macs_per_cycle: 64.0 },
+        ] {
+            for factor in [1.0, 1.5, 2.0, 10.0] {
+                let slow = model.derated(factor);
+                let base = model.cycles(64, 3, 3, 16, 16, 128);
+                assert!(
+                    slow.cycles(64, 3, 3, 16, 16, 128) >= base,
+                    "{model:?} derated {factor} got faster"
+                );
+            }
+            // extreme factors clamp the grid at 1x1 instead of zeroing
+            let floor = model.derated(1e12);
+            assert!(floor.cycles(8, 3, 3, 4, 4, 16) > 0);
+        }
+        // derating changes the spec hash through the platform view
+        let p = Platform::diana();
+        let mut st = FaultState::healthy(2);
+        st.health[0] = UnitHealth::Derated(2.0);
+        let d = p.degraded(&st).unwrap();
+        assert_eq!(d.n_acc(), 2, "derated units stay present");
+        assert_ne!(d.spec_hash(), p.spec_hash());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use anyhow::{anyhow, Result};
 
-use odimo::api::{MappingSpec, ServeOpts, Session, SessionBuilder};
+use odimo::api::{FaultPlan, MappingSpec, ServeOpts, Session, SessionBuilder};
 use odimo::cli::{self, Args};
 use odimo::config::RunConfig;
 use odimo::coordinator::{Pipeline, Regularizer, Schedule};
@@ -250,6 +250,17 @@ fn run() -> Result<()> {
             }
             if let Some(n) = args.get_u64("gap")? {
                 opts.mean_gap = n;
+            }
+            if let Some(file) = args.get("faults") {
+                let plan = FaultPlan::from_file(std::path::Path::new(file))?;
+                println!("serve: fault plan {} ({} events)", file, plan.events.len());
+                opts.fault_plan = Some(plan);
+            }
+            if let Some(n) = args.get_u64("overload-wait")? {
+                opts.admission.overload_wait = n;
+            }
+            if let Some(n) = args.get_usize("max-retries")? {
+                opts.max_retries = n as u32;
             }
             let (n_points, cache_hit) = {
                 let sw = session.sweep()?;

@@ -197,23 +197,28 @@ impl PlanCache {
         let net = compile()?;
         self.compile_ns += t0.elapsed().as_nanos() as u64;
         if self.entries.len() >= self.cap {
-            let lru = self
+            // min_by_key is Some exactly because len >= cap >= 1
+            if let Some(lru) = self
                 .entries
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i)
-                .expect("cache is non-empty when full");
-            self.entries.swap_remove(lru);
+            {
+                self.entries.swap_remove(lru);
+            }
         }
         let tick = self.tick;
         self.entries.push(CacheEntry { key, mapping: mapping.clone(), last_used: tick, net });
-        Ok(&self.entries.last().expect("just pushed").net)
+        let last = self.entries.len() - 1;
+        Ok(&self.entries[last].net)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::hw::Platform;
     use crate::model::tinycnn;

@@ -63,16 +63,16 @@ fn cheapest(frontier: &[FrontierPoint], idx: impl Iterator<Item = usize>) -> Opt
 }
 
 /// Index of the fastest point (min cycles, ties to lower energy then
-/// lower index); `None` when the frontier is empty.
-fn fastest(frontier: &[FrontierPoint]) -> Option<usize> {
+/// lower index) among `idx`; `None` when `idx` is empty.
+fn fastest(frontier: &[FrontierPoint], idx: impl Iterator<Item = usize>) -> Option<usize> {
     let mut best: Option<usize> = None;
-    for (i, p) in frontier.iter().enumerate() {
+    for i in idx {
         best = Some(match best {
             None => i,
             Some(b) => {
-                let pb = &frontier[b];
-                if p.cycles < pb.cycles
-                    || (p.cycles == pb.cycles && p.energy_uj < pb.energy_uj)
+                let (pb, pi) = (&frontier[b], &frontier[i]);
+                if pi.cycles < pb.cycles
+                    || (pi.cycles == pb.cycles && pi.energy_uj < pb.energy_uj)
                 {
                     i
                 } else {
@@ -87,23 +87,46 @@ fn fastest(frontier: &[FrontierPoint]) -> Option<usize> {
 /// Select the frontier mapping for one SLA (module docs give the full
 /// semantics). Returns `None` only on an empty frontier.
 pub fn dispatch(frontier: &[FrontierPoint], sla: Sla) -> Option<Decision> {
+    dispatch_filtered(frontier, |_| true, sla)
+}
+
+/// [`dispatch`] restricted to the points `keep` admits — the
+/// fault-aware form: the serve loop passes the health tracker's
+/// enabled mask so dead-unit mappings are never selected. Selection
+/// among the kept points follows the exact [`dispatch`] semantics.
+/// Returns `None` when `keep` admits no point at all (every unit a
+/// mapping needs is down) — the caller decides whether to defer or
+/// fail, never this function.
+pub fn dispatch_filtered(
+    frontier: &[FrontierPoint],
+    keep: impl Fn(usize) -> bool,
+    sla: Sla,
+) -> Option<Decision> {
+    let kept = || (0..frontier.len()).filter(|&i| keep(i));
     match sla {
         Sla::MinEnergy => {
-            cheapest(frontier, 0..frontier.len()).map(|i| Decision { point: i, sla_met: true })
+            cheapest(frontier, kept()).map(|i| Decision { point: i, sla_met: true })
         }
         Sla::LatencyBudget(budget) => {
-            let feasible =
-                (0..frontier.len()).filter(|&i| frontier[i].cycles <= budget);
+            let feasible = kept().filter(|&i| frontier[i].cycles <= budget);
             if let Some(i) = cheapest(frontier, feasible) {
                 return Some(Decision { point: i, sla_met: true });
             }
-            fastest(frontier).map(|i| Decision { point: i, sla_met: false })
+            fastest(frontier, kept()).map(|i| Decision { point: i, sla_met: false })
         }
     }
 }
 
+/// Index of the fastest kept point (the admission controller's
+/// degraded-service target); `None` when `keep` admits nothing.
+pub fn fastest_filtered(frontier: &[FrontierPoint], keep: impl Fn(usize) -> bool) -> Option<usize> {
+    fastest(frontier, (0..frontier.len()).filter(|&i| keep(i)))
+}
+
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::coordinator::Mapping;
     use std::collections::BTreeMap;
@@ -154,5 +177,29 @@ mod tests {
     fn empty_frontier_is_none() {
         assert_eq!(dispatch(&[], Sla::MinEnergy), None);
         assert_eq!(dispatch(&[], Sla::LatencyBudget(1)), None);
+    }
+
+    #[test]
+    fn filtered_dispatch_respects_the_mask() {
+        let f = vec![pt(100, 9.0), pt(200, 4.0), pt(400, 2.0)];
+        let mask = [true, false, true];
+        // the cheapest feasible point is masked out: next-best wins
+        let d = dispatch_filtered(&f, |i| mask[i], Sla::LatencyBudget(250)).unwrap();
+        assert_eq!(d.point, 0, "point 1 is masked; 0 is the only feasible survivor");
+        assert!(d.sla_met);
+        let d = dispatch_filtered(&f, |i| mask[i], Sla::MinEnergy).unwrap();
+        assert_eq!(d.point, 2);
+        // fallback also honors the mask
+        let d = dispatch_filtered(&f, |i| mask[i], Sla::LatencyBudget(50)).unwrap();
+        assert_eq!(d.point, 0, "fastest surviving point");
+        assert!(!d.sla_met);
+        // an all-false mask dispatches nothing
+        assert_eq!(dispatch_filtered(&f, |_| false, Sla::MinEnergy), None);
+        assert_eq!(fastest_filtered(&f, |_| false), None);
+        assert_eq!(fastest_filtered(&f, |i| mask[i]), Some(0));
+        // the unmasked form is exactly dispatch()
+        for sla in [Sla::MinEnergy, Sla::LatencyBudget(250), Sla::LatencyBudget(50)] {
+            assert_eq!(dispatch(&f, sla), dispatch_filtered(&f, |_| true, sla));
+        }
     }
 }

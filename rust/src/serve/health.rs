@@ -1,0 +1,466 @@
+//! Serve-time degradation layer: unit-health tracking, per-fault-state
+//! degraded re-mapping, and admission control.
+//!
+//! The [`HealthTracker`] sits between the fault timeline
+//! ([`crate::hw::faults`]) and the closed-loop driver (`mod.rs`). It
+//! owns a *growing* frontier point set: the original swept points keep
+//! their indices forever (so batches in flight never see an index
+//! shift), and degraded re-map points are appended behind them. An
+//! `enabled` mask — recomputed whenever the fault state changes —
+//! decides what the dispatcher may pick *right now*:
+//!
+//!   * an original point is enabled iff none of the units its mapping
+//!     assigns channels to (plus the depthwise unit, when the graph has
+//!     depthwise layers) is down;
+//!   * when a fault state disables at least one original point, the
+//!     tracker re-runs water-filling `min_cost` (latency and energy
+//!     objectives) on the [`Platform::degraded`] view, scores the
+//!     resulting mappings on the simulator, and appends them as
+//!     `deg[...]` points enabled only under that exact fault state.
+//!     Re-mapping is cached per [`FaultState::key`], so a transient
+//!     outage that recurs reuses its points (and their compiled plans).
+//!
+//! Derated (but up) units do not trigger re-mapping: their original
+//! points stay enabled and the driver stretches execution by the
+//! tracker's [`HealthTracker::exec_factor`] at run time — a
+//! conservative whole-pipeline approximation documented in
+//! ARCHITECTURE.md §Faults. Degraded re-map points are scored on the
+//! already-derated platform view, so the factor is never applied twice.
+//!
+//! [`AdmissionCfg`] is the overload policy: an arrival whose projected
+//! device wait exceeds `overload_wait` is shed when it has no deadline
+//! (min-energy requests are the lowest priority) and degraded to the
+//! fastest healthy mapping when it has one it could still meet —
+//! predictable degradation instead of an unbounded queue.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::baselines::{min_cost, CostObjective};
+use crate::coordinator::Mapping;
+use crate::hw::faults::{FaultState, ResolvedFaults};
+use crate::hw::soc::{simulate, SocConfig};
+use crate::hw::Platform;
+use crate::model::{Graph, Op};
+
+use super::sweep::FrontierPoint;
+
+/// Overload admission policy for [`ServeOpts`](super::ServeOpts).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionCfg {
+    /// Projected device wait (cycles the device backlog is ahead of an
+    /// arrival) beyond which the arrival is shed (min-energy SLA) or
+    /// degraded to the fastest healthy mapping (latency SLA that the
+    /// fastest mapping could still meet; otherwise shed). The default
+    /// `u64::MAX` never sheds — byte-identical to pre-fault serving.
+    pub overload_wait: u64,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> Self {
+        AdmissionCfg { overload_wait: u64::MAX }
+    }
+}
+
+/// Cached degraded re-mapping for one fault state.
+struct DegradedCtx {
+    /// The degraded platform view (spec-hash distinct, see
+    /// [`Platform::degraded`]).
+    platform: Platform,
+    /// Indices (into the tracker's point set) of this state's re-map
+    /// points.
+    point_idx: Vec<usize>,
+}
+
+/// Unit-health tracker + growing point set (module docs).
+pub(crate) struct HealthTracker {
+    resolved: Option<ResolvedFaults>,
+    base: Platform,
+    state: FaultState,
+    state_key: u64,
+    /// Original frontier points followed by appended re-map points;
+    /// indices are stable for the lifetime of a run.
+    pub points: Vec<FrontierPoint>,
+    /// Dispatch mask, parallel to `points`.
+    pub enabled: Vec<bool>,
+    /// Units (original-platform indices) each point occupies.
+    units: Vec<Vec<usize>>,
+    /// `Some(ctx index)` for re-map points, `None` for originals.
+    ctx_of: Vec<Option<usize>>,
+    n_original: usize,
+    ctxs: Vec<DegradedCtx>,
+    ctx_by_key: BTreeMap<u64, usize>,
+    graph_has_dw: bool,
+}
+
+/// Original-platform units a mapping assigns channels to (ascending),
+/// plus `dw` when the graph routes depthwise layers there. `to_orig`
+/// translates the mapping's accelerator index space into original
+/// indices (identity for mappings on the full platform, the survivor
+/// list for degraded ones); `base_n` is the original unit count.
+fn used_units(
+    mapping: &Mapping,
+    n_acc: usize,
+    to_orig: &[usize],
+    dw: Option<usize>,
+    base_n: usize,
+) -> Vec<usize> {
+    let split = mapping.channel_split(n_acc);
+    let mut used = vec![false; base_n];
+    for counts in split.values() {
+        for (i, &c) in counts.iter().enumerate() {
+            if c > 0 {
+                used[to_orig[i]] = true;
+            }
+        }
+    }
+    if let Some(d) = dw {
+        used[d] = true;
+    }
+    (0..base_n).filter(|&u| used[u]).collect()
+}
+
+impl HealthTracker {
+    /// Wrap a swept frontier. `resolved` is `None` when serving without
+    /// a fault plan — every query then degenerates to the healthy fast
+    /// path and the driver's behavior is byte-identical to pre-fault
+    /// serving.
+    pub fn new(
+        frontier: &[FrontierPoint],
+        platform: &Platform,
+        resolved: Option<ResolvedFaults>,
+        graph: &Graph,
+    ) -> HealthTracker {
+        let n_acc = platform.n_acc();
+        let graph_has_dw = graph.nodes.iter().any(|n| n.op == Op::DwConv);
+        let identity: Vec<usize> = (0..n_acc).collect();
+        let dw = if graph_has_dw { Some(platform.dw_acc) } else { None };
+        let units = frontier
+            .iter()
+            .map(|p| used_units(&p.mapping, n_acc, &identity, dw, n_acc))
+            .collect();
+        HealthTracker {
+            resolved,
+            base: platform.clone(),
+            state: FaultState::healthy(n_acc),
+            state_key: FaultState::healthy(n_acc).key(),
+            points: frontier.to_vec(),
+            enabled: vec![true; frontier.len()],
+            units,
+            ctx_of: vec![None; frontier.len()],
+            n_original: frontier.len(),
+            ctxs: Vec::new(),
+            ctx_by_key: BTreeMap::new(),
+            graph_has_dw,
+        }
+    }
+
+    /// Bring the mask up to date with the fault state at cycle `t`.
+    /// Cheap when the state is unchanged (one key compare); on a state
+    /// change, re-derives the mask and (first time per state) builds
+    /// the degraded re-mapping.
+    pub fn advance(&mut self, t: u64, graph: &Graph) -> Result<()> {
+        let Some(r) = &self.resolved else {
+            return Ok(());
+        };
+        let st = r.state_at(t);
+        let key = st.key();
+        if key == self.state_key {
+            return Ok(());
+        }
+        self.state = st;
+        self.state_key = key;
+        for i in 0..self.n_original {
+            self.enabled[i] = !self.units[i].iter().any(|&u| self.state.is_down(u));
+        }
+        for e in self.enabled.iter_mut().skip(self.n_original) {
+            *e = false;
+        }
+        let any_disabled = !self.enabled[..self.n_original].iter().all(|&e| e);
+        let any_down = (0..self.base.n_acc()).any(|u| self.state.is_down(u));
+        if any_down && any_disabled {
+            let ci = self.ensure_ctx(graph)?;
+            for pi in self.ctxs[ci].point_idx.clone() {
+                self.enabled[pi] = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Build (or fetch) the re-mapping for the current fault state.
+    fn ensure_ctx(&mut self, graph: &Graph) -> Result<usize> {
+        if let Some(&ci) = self.ctx_by_key.get(&self.state_key) {
+            return Ok(ci);
+        }
+        let degraded = self.base.degraded(&self.state)?;
+        let survivors = self.state.survivors();
+        let n_acc = degraded.n_acc();
+        let downs: Vec<&str> = (0..self.base.n_acc())
+            .filter(|&u| self.state.is_down(u))
+            .map(|u| self.base.accelerators[u].name.as_str())
+            .collect();
+        let soc = SocConfig::default();
+        let ci = self.ctxs.len();
+        let mut point_idx = Vec::new();
+        let mut seen: Vec<Mapping> = Vec::new();
+        for (objective, tag) in [(CostObjective::Latency, "lat"), (CostObjective::Energy, "en")]
+        {
+            let m = min_cost(graph, &degraded, objective);
+            if seen.iter().any(|q| *q == m) {
+                continue;
+            }
+            seen.push(m.clone());
+            m.validate(graph, n_acc)?;
+            let rep = simulate(graph, &m.channel_split(n_acc), &degraded, soc);
+            let dw = if self.graph_has_dw { Some(survivors[degraded.dw_acc]) } else { None };
+            let units = used_units(&m, n_acc, &survivors, dw, self.base.n_acc());
+            self.points.push(FrontierPoint {
+                label: format!("deg[{}]_min_cost_{tag}", downs.join("+")),
+                mapping: m,
+                cycles: rep.total_cycles,
+                latency_ms: rep.latency_ms,
+                energy_uj: rep.energy_uj,
+                // no calibration pass at serve time — the proxy axis is
+                // not meaningful for emergency re-map points
+                acc_proxy: 0.0,
+            });
+            self.enabled.push(false);
+            self.units.push(units);
+            self.ctx_of.push(Some(ci));
+            point_idx.push(self.points.len() - 1);
+        }
+        self.ctxs.push(DegradedCtx { platform: degraded, point_idx });
+        self.ctx_by_key.insert(self.state_key, ci);
+        Ok(ci)
+    }
+
+    /// The platform a point's plan compiles against: the degraded view
+    /// for re-map points, the base platform otherwise.
+    pub fn platform_for(&self, point: usize) -> &Platform {
+        match self.ctx_of[point] {
+            Some(ci) => &self.ctxs[ci].platform,
+            None => &self.base,
+        }
+    }
+
+    /// True for appended re-map points (served in degraded mode).
+    pub fn is_degraded_point(&self, point: usize) -> bool {
+        self.ctx_of[point].is_some()
+    }
+
+    /// Latency stretch for executing `point` starting at cycle `t`:
+    /// the worst derating factor over the units the point occupies.
+    /// Re-map points return 1.0 — their cycles were scored on the
+    /// already-derated platform view.
+    pub fn exec_factor(&self, point: usize, t: u64) -> f64 {
+        let Some(r) = &self.resolved else {
+            return 1.0;
+        };
+        if self.ctx_of[point].is_some() {
+            return 1.0;
+        }
+        let st = r.state_at(t);
+        let mut f = 1.0f64;
+        for &u in &self.units[point] {
+            let uf = st.factor(u);
+            if uf > f {
+                f = uf;
+            }
+        }
+        f
+    }
+
+    /// Earliest cycle in `[from, to)` at which a unit `point` occupies
+    /// is down — the abort point for a batch spanning that window.
+    pub fn abort_cycle(&self, point: usize, from: u64, to: u64) -> Option<u64> {
+        let r = self.resolved.as_ref()?;
+        let mut earliest: Option<u64> = None;
+        for &u in &self.units[point] {
+            if let Some(c) = r.down_in(u, from, to) {
+                match earliest {
+                    Some(cur) if c >= cur => {}
+                    _ => earliest = Some(c),
+                }
+            }
+        }
+        earliest
+    }
+
+    /// First fault-state change strictly after `t` (retry horizon for
+    /// requests that currently have no dispatchable point).
+    pub fn next_change_after(&self, t: u64) -> Option<u64> {
+        self.resolved.as_ref().and_then(|r| r.next_change_after(t))
+    }
+
+    /// Scripted fault events in the plan (0 without a plan).
+    pub fn n_events(&self) -> usize {
+        self.resolved.as_ref().map_or(0, ResolvedFaults::n_events)
+    }
+
+    /// Currently dispatchable points (error-context helper).
+    pub fn enabled_count(&self) -> usize {
+        self.enabled.iter().filter(|&&e| e).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::hw::faults::{FaultEvent, FaultPlan};
+    use crate::model::tinycnn;
+    use crate::serve::sweep::{sweep_frontier, SweepCfg};
+    use crate::util::pool::ThreadPool;
+
+    /// Frontier + platform fixture on mpsoc4, plus the name and
+    /// original index of a unit that point 0's mapping provably uses —
+    /// downing *that* unit is guaranteed to disable an original point.
+    fn mpsoc4_fixture() -> (Vec<FrontierPoint>, Platform, Graph, String, usize) {
+        let g = tinycnn();
+        let p = Platform::mpsoc4();
+        let pool = ThreadPool::new(2);
+        let cfg = SweepCfg { seed: 7, calib: 4, blend_steps: 2 };
+        let frontier = sweep_frontier(&g, &p, &cfg, &pool).unwrap();
+        let probe = HealthTracker::new(&frontier, &p, None, &g);
+        let victim = probe.units[0][0];
+        let vname = p.accelerators[victim].name.clone();
+        (frontier, p, g, vname, victim)
+    }
+
+    fn tracker(plan: &FaultPlan) -> (HealthTracker, Graph, String, usize) {
+        let (frontier, p, g, vname, victim) = mpsoc4_fixture();
+        let resolved = plan.resolve(&p).unwrap();
+        (HealthTracker::new(&frontier, &p, Some(resolved), &g), g, vname, victim)
+    }
+
+    #[test]
+    fn mask_follows_unit_down_and_remap_appends() {
+        let (_, p, _, vname, _) = mpsoc4_fixture();
+        let plan = FaultPlan {
+            events: vec![FaultEvent::UnitDown { unit: vname.clone(), at_cycle: 50_000 }],
+        };
+        let resolved = plan.resolve(&p).unwrap();
+        let (frontier, p, g, _, victim) = mpsoc4_fixture();
+        let mut t = HealthTracker::new(&frontier, &p, Some(resolved), &g);
+        let n0 = t.points.len();
+        assert!(t.enabled.iter().all(|&e| e), "healthy: everything enabled");
+        t.advance(10_000, &g).unwrap();
+        assert_eq!(t.points.len(), n0, "no state change, no remap");
+        t.advance(60_000, &g).unwrap();
+        // every enabled point avoids the dead unit; point 0 is disabled
+        assert!(!t.enabled[0], "point 0 uses the victim and must be masked");
+        for (i, &e) in t.enabled.iter().enumerate() {
+            if e {
+                assert!(!t.units[i].contains(&victim), "enabled point {i} uses a dead unit");
+            }
+        }
+        // disabled originals forced at least one appended remap point
+        assert!(t.points.len() > n0, "remap points appended");
+        assert!(t.enabled_count() > 0, "degraded mode still dispatches");
+        for i in n0..t.points.len() {
+            assert!(t.is_degraded_point(i));
+            let want = format!("deg[{vname}]");
+            assert!(t.points[i].label.starts_with(&want), "{}", t.points[i].label);
+            assert!(t.platform_for(i).name.starts_with("mpsoc4~f"));
+            assert!(!t.units[i].contains(&victim), "remap touches the dead unit");
+        }
+        // advancing again at the same state is a no-op (cached ctx)
+        let n1 = t.points.len();
+        t.advance(70_000, &g).unwrap();
+        assert_eq!(t.points.len(), n1);
+    }
+
+    #[test]
+    fn transient_recovers_and_reuses_cached_remap() {
+        let (_, _, _, vname, _) = mpsoc4_fixture();
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Transient {
+                    unit: vname.clone(),
+                    at_cycle: 10_000,
+                    duration: 5_000,
+                },
+                FaultEvent::Transient { unit: vname, at_cycle: 40_000, duration: 5_000 },
+            ],
+        };
+        let (mut t, g, _, _) = tracker(&plan);
+        t.advance(12_000, &g).unwrap();
+        let grown = t.points.len();
+        assert!(grown > t.n_original, "outage appends remap points");
+        let enabled_down: Vec<bool> = t.enabled.clone();
+        t.advance(20_000, &g).unwrap();
+        assert!(t.enabled[..t.n_original].iter().all(|&e| e), "recovery re-enables");
+        assert!(t.enabled[t.n_original..].iter().all(|&e| !e), "remaps parked");
+        // the same outage later reuses the cached ctx — no new points
+        t.advance(42_000, &g).unwrap();
+        assert_eq!(t.points.len(), grown, "recurring state must reuse its remap");
+        assert_eq!(t.enabled, enabled_down, "identical state, identical mask");
+    }
+
+    #[test]
+    fn derated_states_stretch_without_remapping() {
+        let (_, _, _, vname, victim) = mpsoc4_fixture();
+        let plan = FaultPlan {
+            events: vec![FaultEvent::UnitDerated { unit: vname, factor: 3.0, at_cycle: 1_000 }],
+        };
+        let (mut t, g, _, _) = tracker(&plan);
+        let n0 = t.points.len();
+        t.advance(2_000, &g).unwrap();
+        assert_eq!(t.points.len(), n0, "derating must not trigger remap");
+        assert!(t.enabled.iter().all(|&e| e));
+        for i in 0..n0 {
+            let f = t.exec_factor(i, 2_000);
+            if t.units[i].contains(&victim) {
+                assert_eq!(f, 3.0, "point {i}");
+            } else {
+                assert_eq!(f, 1.0, "point {i}");
+            }
+            assert_eq!(t.exec_factor(i, 500), 1.0, "before the event: no stretch");
+        }
+        assert_eq!(t.exec_factor(0, 2_000), 3.0, "point 0 uses the derated unit");
+    }
+
+    #[test]
+    fn abort_cycle_matches_down_windows() {
+        let (_, _, _, vname, victim) = mpsoc4_fixture();
+        let plan = FaultPlan {
+            events: vec![FaultEvent::Transient {
+                unit: vname,
+                at_cycle: 30_000,
+                duration: 10_000,
+            }],
+        };
+        let (t, _g, _, _) = tracker(&plan);
+        let using = 0usize; // point 0 uses the victim by construction
+        assert_eq!(t.abort_cycle(using, 0, 30_000), None);
+        assert_eq!(t.abort_cycle(using, 0, 30_001), Some(30_000));
+        assert_eq!(t.abort_cycle(using, 35_000, 90_000), Some(35_000));
+        assert_eq!(t.abort_cycle(using, 40_000, 90_000), None);
+        if let Some(av) = (0..t.points.len()).find(|&i| !t.units[i].contains(&victim)) {
+            assert_eq!(t.abort_cycle(av, 0, u64::MAX), None);
+        }
+        assert_eq!(t.next_change_after(0), Some(30_000));
+        assert_eq!(t.next_change_after(30_000), Some(40_000));
+        assert_eq!(t.next_change_after(40_000), None);
+    }
+
+    #[test]
+    fn no_plan_is_a_pure_pass_through() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let pool = ThreadPool::new(2);
+        let cfg = SweepCfg { seed: 7, calib: 4, blend_steps: 2 };
+        let frontier = sweep_frontier(&g, &p, &cfg, &pool).unwrap();
+        let mut t = HealthTracker::new(&frontier, &p, None, &g);
+        t.advance(1_000_000, &g).unwrap();
+        assert_eq!(t.points.len(), frontier.len());
+        assert!(t.enabled.iter().all(|&e| e));
+        assert_eq!(t.exec_factor(0, 123), 1.0);
+        assert_eq!(t.abort_cycle(0, 0, u64::MAX), None);
+        assert_eq!(t.next_change_after(0), None);
+        assert_eq!(t.n_events(), 0);
+        assert_eq!(t.enabled_count(), frontier.len());
+    }
+}

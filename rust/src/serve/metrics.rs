@@ -10,6 +10,15 @@
 //! compile time, virtual makespan). Reports serialize through the
 //! versioned store envelope so `serve-report` can render a dashboard
 //! from a past run without re-serving.
+//!
+//! Fault accounting rides along: the report carries the injected-fault,
+//! batch-abort, retry, shed and failed counters plus a degraded-service
+//! p95, and every request the driver synthesized is accounted exactly
+//! once as served, shed, or failed ([`ServeReport::accounted`]).
+//! [`ServeReport::deterministic_digest`] hashes everything *except* the
+//! two wall-clock-derived fields (`throughput_img_s`,
+//! `plan_compile_ms`), so two runs with the same seed, opts and fault
+//! plan agree digest-for-digest even though engine wall time differs.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -20,8 +29,9 @@ use crate::exp::store;
 use crate::util::json::Json;
 
 /// Bump when the serve-report layout changes; [`load_report`] refuses
-/// files written under any other version.
-pub const SERVE_SCHEMA: u32 = 1;
+/// files written under any other version. v2 added the fault/admission
+/// accounting fields (`faults_injected` … `degraded_p95_ms`).
+pub const SERVE_SCHEMA: u32 = 2;
 
 /// One served request, in virtual time.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +50,10 @@ pub struct RequestOutcome {
     pub batch_size: usize,
     /// Simulated energy attributed to the request, uJ.
     pub energy_uj: f64,
+    /// Whether the request received degraded service: served on a
+    /// degraded-mode re-mapping, stretched by a derated unit, retried
+    /// after a batch abort, or force-routed by the overload controller.
+    pub degraded: bool,
 }
 
 /// Collector filled by the closed-loop serve driver.
@@ -55,6 +69,16 @@ pub struct ServeMetrics {
     pub plan_compile_ns: u64,
     /// Virtual completion time of the last batch (makespan).
     pub end_cycle: u64,
+    /// Fault events in the resolved plan for this run.
+    pub faults_injected: u64,
+    /// Batches aborted because a unit died mid-flight.
+    pub batch_aborts: u64,
+    /// Request re-enqueues (abort recovery + no-dispatchable-point).
+    pub retries: u64,
+    /// Requests shed by the overload admission controller.
+    pub shed_requests: u64,
+    /// Requests dropped after exhausting their retry budget.
+    pub failed_requests: u64,
 }
 
 impl ServeMetrics {
@@ -67,6 +91,11 @@ impl ServeMetrics {
             plan_misses: 0,
             plan_compile_ns: 0,
             end_cycle: 0,
+            faults_injected: 0,
+            batch_aborts: 0,
+            retries: 0,
+            shed_requests: 0,
+            failed_requests: 0,
         }
     }
 
@@ -125,6 +154,13 @@ impl ServeMetrics {
             .map(|o| o.queue_cycles + o.compute_cycles)
             .collect();
         all_lats.sort_unstable();
+        let mut deg_lats: Vec<u64> = self
+            .outcomes
+            .iter()
+            .filter(|o| o.degraded)
+            .map(|o| o.queue_cycles + o.compute_cycles)
+            .collect();
+        deg_lats.sort_unstable();
         let n = self.outcomes.len();
         let wall_s = self.engine_wall_ns as f64 * 1e-9;
         ServeReport {
@@ -147,6 +183,13 @@ impl ServeMetrics {
             plan_misses: self.plan_misses,
             plan_compile_ms: self.plan_compile_ns as f64 * 1e-6,
             makespan_ms: to_ms(self.end_cycle),
+            faults_injected: self.faults_injected,
+            batch_aborts: self.batch_aborts,
+            retries: self.retries,
+            shed_requests: self.shed_requests,
+            failed_requests: self.failed_requests,
+            degraded_requests: deg_lats.len(),
+            degraded_p95_ms: to_ms(percentile(&deg_lats, 95)),
         }
     }
 }
@@ -218,6 +261,22 @@ pub struct ServeReport {
     pub plan_compile_ms: f64,
     /// Virtual completion time of the run, ms.
     pub makespan_ms: f64,
+    /// Fault events in the resolved plan for this run.
+    pub faults_injected: u64,
+    /// Batches aborted because a unit died mid-flight.
+    pub batch_aborts: u64,
+    /// Request re-enqueues (abort recovery + no-dispatchable-point).
+    pub retries: u64,
+    /// Requests shed by the overload admission controller.
+    pub shed_requests: u64,
+    /// Requests dropped after exhausting their retry budget.
+    pub failed_requests: u64,
+    /// Requests that received degraded service (see
+    /// [`RequestOutcome::degraded`]).
+    pub degraded_requests: usize,
+    /// p95 queue+compute latency over degraded requests only, ms
+    /// (0 when nothing was degraded).
+    pub degraded_p95_ms: f64,
 }
 
 impl ServeReport {
@@ -246,8 +305,20 @@ impl ServeReport {
         );
         let _ = writeln!(
             s,
-            "plan cache: {} hits / {} misses | compile {:.2} ms\n",
+            "plan cache: {} hits / {} misses | compile {:.2} ms",
             self.plan_hits, self.plan_misses, self.plan_compile_ms
+        );
+        let _ = writeln!(
+            s,
+            "faults: {} injected | {} batch aborts | {} retries | {} shed | {} failed | \
+             degraded {} req p95 {:.3} ms\n",
+            self.faults_injected,
+            self.batch_aborts,
+            self.retries,
+            self.shed_requests,
+            self.failed_requests,
+            self.degraded_requests,
+            self.degraded_p95_ms
         );
         let _ = writeln!(
             s,
@@ -271,6 +342,58 @@ impl ServeReport {
             );
         }
         s
+    }
+
+    /// Requests this run accounted for: served + shed + failed. The
+    /// serve driver guarantees this equals the synthesized stream
+    /// length — no request is ever silently lost, faults or not.
+    pub fn accounted(&self) -> usize {
+        self.total_requests + self.shed_requests as usize + self.failed_requests as usize
+    }
+
+    /// FNV-1a digest over every *virtual-time* field of the report —
+    /// everything except `threads` (run configuration, not outcome)
+    /// and the two wall-clock fields `throughput_img_s` /
+    /// `plan_compile_ms`, which measure engine/compiler time and
+    /// legitimately differ between identical runs. Two serve runs with
+    /// the same model, platform, seed, opts and fault plan produce
+    /// equal digests regardless of thread count or machine load.
+    pub fn deterministic_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(self.model.as_bytes());
+        eat(self.platform.as_bytes());
+        for r in &self.rows {
+            eat(r.label.as_bytes());
+            eat(&(r.requests as u64).to_le_bytes());
+            eat(&(r.sla_hits as u64).to_le_bytes());
+            eat(&r.mean_batch.to_bits().to_le_bytes());
+            eat(&r.p50_ms.to_bits().to_le_bytes());
+            eat(&r.p95_ms.to_bits().to_le_bytes());
+            eat(&r.energy_uj.to_bits().to_le_bytes());
+        }
+        eat(&(self.total_requests as u64).to_le_bytes());
+        eat(&(self.total_batches as u64).to_le_bytes());
+        eat(&self.p50_ms.to_bits().to_le_bytes());
+        eat(&self.p95_ms.to_bits().to_le_bytes());
+        eat(&self.sla_hit_rate.to_bits().to_le_bytes());
+        eat(&self.sim_energy_uj.to_bits().to_le_bytes());
+        eat(&self.plan_hits.to_le_bytes());
+        eat(&self.plan_misses.to_le_bytes());
+        eat(&self.makespan_ms.to_bits().to_le_bytes());
+        eat(&self.faults_injected.to_le_bytes());
+        eat(&self.batch_aborts.to_le_bytes());
+        eat(&self.retries.to_le_bytes());
+        eat(&self.shed_requests.to_le_bytes());
+        eat(&self.failed_requests.to_le_bytes());
+        eat(&(self.degraded_requests as u64).to_le_bytes());
+        eat(&self.degraded_p95_ms.to_bits().to_le_bytes());
+        h
     }
 
     fn to_json(&self) -> Json {
@@ -305,6 +428,13 @@ impl ServeReport {
             ("plan_misses", Json::num(self.plan_misses as f64)),
             ("plan_compile_ms", Json::num(self.plan_compile_ms)),
             ("makespan_ms", Json::num(self.makespan_ms)),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
+            ("batch_aborts", Json::num(self.batch_aborts as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("shed_requests", Json::num(self.shed_requests as f64)),
+            ("failed_requests", Json::num(self.failed_requests as f64)),
+            ("degraded_requests", Json::num(self.degraded_requests as f64)),
+            ("degraded_p95_ms", Json::num(self.degraded_p95_ms)),
         ])
     }
 
@@ -342,6 +472,13 @@ impl ServeReport {
             plan_misses: v.req_f64("plan_misses")? as u64,
             plan_compile_ms: v.req_f64("plan_compile_ms")?,
             makespan_ms: v.req_f64("makespan_ms")?,
+            faults_injected: v.req_f64("faults_injected")? as u64,
+            batch_aborts: v.req_f64("batch_aborts")? as u64,
+            retries: v.req_f64("retries")? as u64,
+            shed_requests: v.req_f64("shed_requests")? as u64,
+            failed_requests: v.req_f64("failed_requests")? as u64,
+            degraded_requests: v.req_f64("degraded_requests")? as usize,
+            degraded_p95_ms: v.req_f64("degraded_p95_ms")?,
         })
     }
 }
@@ -358,6 +495,8 @@ pub fn load_report(path: &Path) -> Result<ServeReport> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     fn outcome(point: usize, queue: u64, compute: u64, met: bool) -> RequestOutcome {
@@ -369,6 +508,7 @@ mod tests {
             sla_met: met,
             batch_size: 2,
             energy_uj: 1.5,
+            degraded: false,
         }
     }
 
@@ -425,5 +565,56 @@ mod tests {
         assert_eq!(back.plan_hits, 3);
         assert!((back.p95_ms - rep.p95_ms).abs() < 1e-12);
         assert_eq!(back.dashboard(), rep.dashboard());
+        assert_eq!(back.deterministic_digest(), rep.deterministic_digest());
+    }
+
+    #[test]
+    fn fault_counters_flow_into_report_and_digest() {
+        let mut m = ServeMetrics::new();
+        m.record(outcome(0, 10, 100, true));
+        m.record(RequestOutcome { degraded: true, ..outcome(0, 400, 100, false) });
+        m.record_batch(1_000);
+        m.faults_injected = 2;
+        m.batch_aborts = 1;
+        m.retries = 3;
+        m.shed_requests = 4;
+        m.failed_requests = 1;
+        m.end_cycle = 900;
+        let rep = m.report("tinycnn", "mpsoc4", 2, &["a".to_string()], 1e6);
+        assert_eq!(rep.faults_injected, 2);
+        assert_eq!(rep.batch_aborts, 1);
+        assert_eq!(rep.retries, 3);
+        assert_eq!(rep.shed_requests, 4);
+        assert_eq!(rep.failed_requests, 1);
+        assert_eq!(rep.degraded_requests, 1);
+        // one degraded request: its own latency is the degraded p95
+        assert!((rep.degraded_p95_ms - 0.5).abs() < 1e-9, "{}", rep.degraded_p95_ms);
+        assert_eq!(rep.accounted(), 2 + 4 + 1);
+        let dash = rep.dashboard();
+        assert!(
+            dash.contains("faults: 2 injected | 1 batch aborts | 3 retries | 4 shed | 1 failed"),
+            "{dash}"
+        );
+        // the digest tracks fault accounting but not wall-clock fields
+        let mut other = rep.clone();
+        other.throughput_img_s += 123.0;
+        other.plan_compile_ms += 9.0;
+        other.threads = 8;
+        assert_eq!(other.deterministic_digest(), rep.deterministic_digest());
+        other.shed_requests += 1;
+        assert_ne!(other.deterministic_digest(), rep.deterministic_digest());
+    }
+
+    #[test]
+    fn zero_fault_report_prints_zero_fault_line() {
+        let mut m = ServeMetrics::new();
+        m.record(outcome(0, 1, 2, true));
+        let rep = m.report("tinycnn", "diana", 1, &["a".to_string()], 1e6);
+        assert!(
+            rep.dashboard().contains("faults: 0 injected | 0 batch aborts"),
+            "fault line must always be printed so dashboards diff cleanly"
+        );
+        assert_eq!(rep.degraded_requests, 0);
+        assert_eq!(rep.degraded_p95_ms, 0.0);
     }
 }

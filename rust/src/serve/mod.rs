@@ -5,7 +5,8 @@
 //! ```text
 //!  sweep.rs     candidate mappings -> simulator + engine scores
 //!               -> Pareto frontier -> versioned JSON cache
-//!  dispatch.rs  request SLA -> cheapest frontier mapping in budget
+//!  dispatch.rs  request SLA -> cheapest *healthy* frontier mapping
+//!  health.rs    fault-state mask + degraded re-mapping + admission
 //!  batcher.rs   per-mapping queues -> dynamic batches -> LRU plan cache
 //!  metrics.rs   per-request outcomes -> serve-report dashboard
 //! ```
@@ -16,7 +17,20 @@
 //! engine, advancing a virtual clock in simulated cycles while the
 //! engine executes each batch for real on the thread pool. Everything
 //! except wall-clock throughput is deterministic for a given (model,
-//! platform, seed, [`ServeOpts`]).
+//! platform, seed, [`ServeOpts`]) — including fault handling: a
+//! [`FaultPlan`] scripts unit failures on the same virtual timeline
+//! (docs/ARCHITECTURE.md §Faults), so a faulted run replays exactly.
+//!
+//! Fault handling in one paragraph: batches whose unit dies mid-flight
+//! are aborted and their requests re-enqueued with a virtual-cycle
+//! backoff, bounded by [`ServeOpts::max_retries`] and then accounted
+//! as failed; dispatch only ever sees mappings whose units are up
+//! (dead-unit points are masked, water-filled re-mappings on the
+//! degraded platform are appended per fault state); and an admission
+//! controller ([`AdmissionCfg`]) sheds or degrades arrivals
+//! predictably when the projected device wait exceeds its overload
+//! threshold. The serve report carries the full accounting: every
+//! synthesized request ends exactly one of served, shed, or failed.
 //!
 //! The workflow entry point is [`Session::serve`](crate::api::Session::serve):
 //! the session owns the frontier, the thread pool and the LRU plan
@@ -24,21 +38,28 @@
 //! [`Session::infer`](crate::api::Session::infer) calls) reuse compiled
 //! plans instead of rebuilding them.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod batcher;
 pub mod dispatch;
+pub mod health;
 pub mod metrics;
 pub mod sweep;
 
-pub use dispatch::{dispatch, Decision, Sla};
+pub use dispatch::{dispatch, dispatch_filtered, Decision, Sla};
+pub use health::AdmissionCfg;
 pub use metrics::{ServeMetrics, ServeReport};
 pub use sweep::{FrontierPoint, SweepCfg};
 
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::data::synth::gen_sample;
+use crate::hw::faults::FaultPlan;
 use crate::hw::Platform;
 use crate::model::Graph;
 use crate::quant::{ParamSet, QuantNet, QuantPlan};
@@ -46,12 +67,14 @@ use crate::util::pool::ThreadPool;
 use crate::util::prng::Pcg32;
 
 use batcher::{Batch, Batcher, PlanCache, Request};
+use dispatch::fastest_filtered;
+use health::HealthTracker;
 use metrics::RequestOutcome;
 
 /// Closed-loop serve knobs (every field CLI-settable). The session
 /// supplies model, platform, seed, threads and directories; these are
-/// only the per-run stream/batching parameters.
-#[derive(Clone, Copy, Debug)]
+/// only the per-run stream/batching/robustness parameters.
+#[derive(Clone, Debug)]
 pub struct ServeOpts {
     /// Requests in the synthetic stream. `None` picks the default: 96,
     /// or 24 when the session was built with `smoke(true)`.
@@ -65,6 +88,17 @@ pub struct ServeOpts {
     /// Fixed per-batch launch overhead, simulated cycles (what dynamic
     /// batching amortizes on the virtual timeline).
     pub launch_cycles: u64,
+    /// Scripted accelerator faults on the virtual timeline; `None`
+    /// serves exactly as before faults existed.
+    pub fault_plan: Option<FaultPlan>,
+    /// Overload admission policy (default: never shed).
+    pub admission: AdmissionCfg,
+    /// Times one request may be re-enqueued (batch abort or no
+    /// dispatchable mapping) before it is accounted as failed.
+    pub max_retries: u32,
+    /// Virtual-cycle backoff between a batch abort and the re-enqueue
+    /// of its member requests.
+    pub retry_backoff: u64,
 }
 
 impl Default for ServeOpts {
@@ -75,9 +109,52 @@ impl Default for ServeOpts {
             max_wait: 60_000,
             mean_gap: 20_000,
             launch_cycles: 10_000,
+            fault_plan: None,
+            admission: AdmissionCfg::default(),
+            max_retries: 3,
+            retry_backoff: 20_000,
         }
     }
 }
+
+/// Typed serve-loop failures — conditions the closed loop used to
+/// panic on. They surface through `anyhow` with full context so a
+/// service embedding the loop can match on them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The sweep produced (or the cache returned) zero frontier points.
+    EmptyFrontier {
+        /// Model being served.
+        model: String,
+        /// Platform being served on.
+        platform: String,
+    },
+    /// Internal scheduling invariant broke: requests are pending but no
+    /// event source (arrival, retry, queue deadline) can make progress.
+    MissingDeadline {
+        /// Requests stuck in the batcher when the invariant broke.
+        pending: usize,
+    },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::EmptyFrontier { model, platform } => write!(
+                f,
+                "serve: empty frontier for {model} on {platform} — run `sweep` or check \
+                 the frontier cache"
+            ),
+            ServeError::MissingDeadline { pending } => write!(
+                f,
+                "serve: scheduling stalled with {pending} queued request(s) and no next \
+                 event — this is a driver bug, please report it"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Report path for a (model, platform) serve run under `results_dir`.
 pub fn report_path(results_dir: &Path, model: &str, platform: &str) -> PathBuf {
@@ -88,8 +165,9 @@ pub fn report_path(results_dir: &Path, model: &str, platform: &str) -> PathBuf {
 /// `opts.mean_gap`, ~15% min-energy SLAs, the rest latency budgets
 /// drawn around the frontier's own latency range (so some are
 /// infeasible by construction and exercise the fallback path).
-/// Dispatch decisions are folded in immediately — they depend only on
-/// (frontier, SLA).
+/// Dispatch happens at *arrival* in the driver loop — under faults the
+/// right mapping depends on the unit-health mask at arrival time —
+/// so the `point` here is a placeholder.
 fn synth_requests(
     opts: &ServeOpts,
     n_requests: usize,
@@ -111,31 +189,122 @@ fn synth_requests(
             let u = rng.next_f32() as f64;
             Sla::LatencyBudget(lo + (u * (hi - lo as f64).max(1.0)) as u64)
         };
-        let d = dispatch(frontier, sla).expect("non-empty frontier");
-        reqs.push(Request { id, arrival: t, sla, point: d.point });
+        reqs.push(Request { id, arrival: t, sla, point: 0 });
     }
     reqs
 }
 
-/// Execute one flushed batch: compile-or-fetch the plan, run the real
-/// engine on the pool, then advance the virtual device clock and record
-/// every member request's outcome.
+/// Retry-side bookkeeping, kept out of [`Request`] (which stays a
+/// small `Copy` struct) in id-keyed tables.
+struct RetryState {
+    /// Re-enqueued requests, keyed by their retry cycle.
+    q: BTreeMap<u64, Vec<Request>>,
+    /// Times each request has been re-enqueued.
+    attempts: BTreeMap<u64, u32>,
+    /// Original arrival of retried requests (latency accounting spans
+    /// aborts: queue time is measured from the *first* arrival).
+    orig_arrival: BTreeMap<u64, u64>,
+    /// Requests that received degraded service (retried, or admitted
+    /// in degraded mode by the overload controller).
+    degraded_ids: BTreeSet<u64>,
+}
+
+impl RetryState {
+    fn new() -> Self {
+        RetryState {
+            q: BTreeMap::new(),
+            attempts: BTreeMap::new(),
+            orig_arrival: BTreeMap::new(),
+            degraded_ids: BTreeSet::new(),
+        }
+    }
+
+    /// Earliest scheduled retry cycle, if any.
+    fn next_time(&self) -> Option<u64> {
+        self.q.keys().next().copied()
+    }
+
+    /// Remove and return the requests scheduled at exactly `t`.
+    fn pop_at(&mut self, t: u64) -> Vec<Request> {
+        self.q.remove(&t).unwrap_or_default()
+    }
+
+    /// The request's first arrival (its own, unless it was retried).
+    fn orig(&self, r: &Request) -> u64 {
+        self.orig_arrival.get(&r.id).copied().unwrap_or(r.arrival)
+    }
+
+    /// Count one more attempt for `r` and either re-enqueue it at
+    /// `retry_at` or — when attempts are exhausted or there is no
+    /// useful retry time — account it as failed.
+    fn schedule(
+        &mut self,
+        r: &Request,
+        retry_at: Option<u64>,
+        max_retries: u32,
+        stats: &mut ServeMetrics,
+    ) {
+        let att = self.attempts.entry(r.id).or_insert(0);
+        *att += 1;
+        self.orig_arrival.entry(r.id).or_insert(r.arrival);
+        self.degraded_ids.insert(r.id);
+        match retry_at {
+            Some(t) if *att <= max_retries => {
+                stats.retries += 1;
+                self.q
+                    .entry(t)
+                    .or_default()
+                    .push(Request { id: r.id, arrival: t, sla: r.sla, point: r.point });
+            }
+            _ => stats.failed_requests += 1,
+        }
+    }
+}
+
+/// Execute one flushed batch: check the fault timeline for a mid-batch
+/// unit loss (abort + re-enqueue), otherwise compile-or-fetch the
+/// plan, run the real engine on the pool, then advance the virtual
+/// device clock and record every member request's outcome.
 #[allow(clippy::too_many_arguments)]
 fn exec_batch(
     batch: &Batch,
     graph: &Graph,
-    platform: &Platform,
     params: &ParamSet<'_>,
-    frontier: &[FrontierPoint],
+    tracker: &HealthTracker,
     opts: &ServeOpts,
     seed: u64,
     pool: &ThreadPool,
     cache: &mut PlanCache,
     stats: &mut ServeMetrics,
     device_free: &mut u64,
+    retry: &mut RetryState,
 ) -> Result<()> {
-    let fp = &frontier[batch.point];
+    let fp = &tracker.points[batch.point];
+    let platform = tracker.platform_for(batch.point);
     let bsz = batch.requests.len();
+    let start = batch.flushed_at.max(*device_free);
+    // derated units stretch the whole batch by the worst factor over
+    // the units the mapping occupies (ARCHITECTURE.md §Faults); the
+    // healthy factor 1.0 keeps the original integer arithmetic exactly
+    let factor = tracker.exec_factor(batch.point, start);
+    let per_img = if factor > 1.0 {
+        (fp.cycles as f64 * factor).ceil() as u64
+    } else {
+        fp.cycles
+    };
+    let compute = opts.launch_cycles + per_img * bsz as u64;
+    let done = start + compute;
+    if let Some(abort_at) = tracker.abort_cycle(batch.point, start, done) {
+        // the unit died under the batch: the work is lost, the device
+        // pays an abort/cleanup cost, the members go back for retry
+        stats.batch_aborts += 1;
+        *device_free = abort_at.saturating_add(opts.launch_cycles);
+        let retry_at = abort_at.saturating_add(opts.retry_backoff.max(1));
+        for r in &batch.requests {
+            retry.schedule(r, Some(retry_at), opts.max_retries, stats);
+        }
+        return Ok(());
+    }
     let (c, h, w) = graph.input_shape;
     let mut x = Vec::with_capacity(bsz * c * h * w);
     for r in &batch.requests {
@@ -158,27 +327,40 @@ fn exec_batch(
     let wall = t0.elapsed().as_nanos() as u64;
     stats.record_batch(wall.saturating_sub(cache.compile_ns - compile_before));
 
-    let start = batch.flushed_at.max(*device_free);
-    let compute = opts.launch_cycles + fp.cycles * bsz as u64;
-    let done = start + compute;
     *device_free = done;
     for r in &batch.requests {
-        let total = done - r.arrival;
+        let orig = retry.orig(r);
+        let total = done - orig;
         let met = match r.sla {
             Sla::MinEnergy => true,
             Sla::LatencyBudget(b) => total <= b,
         };
+        let degraded = tracker.is_degraded_point(batch.point)
+            || factor > 1.0
+            || retry.degraded_ids.contains(&r.id);
         stats.record(RequestOutcome {
             id: r.id,
             point: batch.point,
-            queue_cycles: start - r.arrival,
+            queue_cycles: start - orig,
             compute_cycles: compute,
             sla_met: met,
             batch_size: bsz,
             energy_uj: fp.energy_uj,
+            degraded,
         });
     }
     Ok(())
+}
+
+/// What the admission/dispatch stage decided for one arrival.
+enum Admission {
+    /// Serve on this point; `true` marks degraded (overload) service.
+    Serve(usize, bool),
+    /// Shed under overload (reported, never silently dropped).
+    Shed,
+    /// No dispatchable point right now — retry at the next fault-state
+    /// change (or fail when attempts run out).
+    Defer,
 }
 
 /// Run the closed loop end to end over a pre-built frontier and a
@@ -198,45 +380,188 @@ pub(crate) fn run_serve(
     n_requests: usize,
     seed: u64,
 ) -> Result<ServeReport> {
-    assert!(!frontier.is_empty(), "run_serve needs a non-empty frontier");
+    if frontier.is_empty() {
+        return Err(ServeError::EmptyFrontier {
+            model: graph.name.clone(),
+            platform: platform.name.clone(),
+        }
+        .into());
+    }
+    let resolved = match &opts.fault_plan {
+        Some(plan) => Some(plan.resolve(platform)?),
+        None => None,
+    };
     let reqs = synth_requests(opts, n_requests, seed, frontier);
+    let mut tracker = HealthTracker::new(frontier, platform, resolved, graph);
     let mut batcher = Batcher::new(opts.max_batch, opts.max_wait);
     let mut stats = ServeMetrics::new();
+    let mut retry = RetryState::new();
     let mut device_free = 0u64;
     let (hits0, misses0, compile0) = (plans.hits, plans.misses, plans.compile_ns);
+    stats.faults_injected = tracker.n_events() as u64;
 
-    // virtual-time event loop: interleave arrivals with queue-deadline
-    // flushes; once arrivals are exhausted the tail drains immediately
-    // at the final arrival time (the driver knows the stream ended —
-    // waiting out residual deadlines would only inflate queue time,
-    // and a saturated never-flush deadline must not reach the clock)
+    // virtual-time event loop: interleave retries, arrivals and
+    // queue-deadline flushes, earliest first (ties: retry, then
+    // arrival, then deadline — arrival <= deadline preserves the
+    // pre-fault ordering exactly); once arrivals and retries are
+    // exhausted the tail drains immediately at the last event time
+    // (the driver knows the stream ended — waiting out residual
+    // deadlines would only inflate queue time, and a saturated
+    // never-flush deadline must not reach the clock)
     let mut i = 0usize;
-    while i < reqs.len() || batcher.pending() > 0 {
+    let mut tail_now = reqs.last().map(|r| r.arrival).unwrap_or(0);
+    while i < reqs.len() || batcher.pending() > 0 || retry.next_time().is_some() {
         let next_arrival = reqs.get(i).map(|r| r.arrival);
-        let next_deadline = batcher.next_deadline();
-        let take_arrival = match (next_arrival, next_deadline) {
-            (Some(a), Some(d)) => a <= d,
-            (Some(_), None) => true,
-            (None, _) => false,
+        let next_retry = retry.next_time();
+        if next_arrival.is_none() && next_retry.is_none() {
+            for b in batcher.drain(tail_now) {
+                exec_batch(
+                    &b,
+                    graph,
+                    params,
+                    &tracker,
+                    opts,
+                    seed,
+                    pool,
+                    plans,
+                    &mut stats,
+                    &mut device_free,
+                    &mut retry,
+                )?;
+            }
+            continue;
+        }
+        let candidates = [
+            next_retry.map(|t| (t, 0u8)),
+            next_arrival.map(|t| (t, 1u8)),
+            batcher.next_deadline().map(|t| (t, 2u8)),
+        ];
+        let Some((now, source)) = candidates.iter().flatten().min().copied() else {
+            // unreachable: an arrival or retry exists on this branch —
+            // guarded instead of panicking inside the serve loop
+            return Err(ServeError::MissingDeadline { pending: batcher.pending() }.into());
         };
-        if take_arrival {
-            let r = reqs[i];
-            i += 1;
-            if let Some(b) = batcher.push(r) {
-                exec_batch(&b, graph, platform, params, frontier, opts, seed, pool, plans,
-                           &mut stats, &mut device_free)?;
+        match source {
+            // scheduled retries: re-dispatch under the current mask
+            0 => {
+                tail_now = tail_now.max(now);
+                tracker.advance(now, graph)?;
+                for r in retry.pop_at(now) {
+                    let d = dispatch_filtered(&tracker.points, |j| tracker.enabled[j], r.sla);
+                    match d {
+                        Some(d) => {
+                            let queued = Request { point: d.point, ..r };
+                            if let Some(b) = batcher.push(queued) {
+                                exec_batch(
+                                    &b,
+                                    graph,
+                                    params,
+                                    &tracker,
+                                    opts,
+                                    seed,
+                                    pool,
+                                    plans,
+                                    &mut stats,
+                                    &mut device_free,
+                                    &mut retry,
+                                )?;
+                            }
+                        }
+                        None => {
+                            let at = tracker.next_change_after(now);
+                            retry.schedule(&r, at, opts.max_retries, &mut stats);
+                        }
+                    }
+                }
             }
-        } else if next_arrival.is_some() {
-            let d = next_deadline.expect("pending queue has a deadline");
-            for b in batcher.due(d) {
-                exec_batch(&b, graph, platform, params, frontier, opts, seed, pool, plans,
-                           &mut stats, &mut device_free)?;
+            // arrivals: admission control, then masked dispatch
+            1 => {
+                let r = reqs[i];
+                i += 1;
+                tracker.advance(r.arrival, graph)?;
+                let wait = device_free.saturating_sub(r.arrival);
+                let keep = |j: usize| tracker.enabled[j];
+                let decision = if wait > opts.admission.overload_wait {
+                    match r.sla {
+                        // min-energy requests are the lowest priority:
+                        // under overload they shed first
+                        Sla::MinEnergy => Admission::Shed,
+                        Sla::LatencyBudget(b) => {
+                            match fastest_filtered(&tracker.points, keep) {
+                                None => Admission::Defer,
+                                Some(f) => {
+                                    let eta = wait
+                                        .saturating_add(tracker.points[f].cycles)
+                                        .saturating_add(opts.launch_cycles);
+                                    if eta <= b {
+                                        Admission::Serve(f, true)
+                                    } else {
+                                        Admission::Shed
+                                    }
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    match dispatch_filtered(&tracker.points, keep, r.sla) {
+                        Some(d) => Admission::Serve(d.point, false),
+                        None => Admission::Defer,
+                    }
+                };
+                match decision {
+                    Admission::Serve(point, degraded) => {
+                        if degraded {
+                            retry.degraded_ids.insert(r.id);
+                        }
+                        let queued = Request { point, ..r };
+                        if let Some(b) = batcher.push(queued) {
+                            exec_batch(
+                                &b,
+                                graph,
+                                params,
+                                &tracker,
+                                opts,
+                                seed,
+                                pool,
+                                plans,
+                                &mut stats,
+                                &mut device_free,
+                                &mut retry,
+                            )?;
+                        }
+                    }
+                    Admission::Shed => stats.shed_requests += 1,
+                    Admission::Defer => {
+                        log::debug!(
+                            "serve: request {} has no dispatchable mapping at cycle {} \
+                             ({}/{} points enabled)",
+                            r.id,
+                            r.arrival,
+                            tracker.enabled_count(),
+                            tracker.points.len()
+                        );
+                        let at = tracker.next_change_after(r.arrival);
+                        retry.schedule(&r, at, opts.max_retries, &mut stats);
+                    }
+                }
             }
-        } else {
-            let now = reqs.last().map(|r| r.arrival).unwrap_or(0);
-            for b in batcher.drain(now) {
-                exec_batch(&b, graph, platform, params, frontier, opts, seed, pool, plans,
-                           &mut stats, &mut device_free)?;
+            // queue deadlines: flush every ripe batch
+            _ => {
+                for b in batcher.due(now) {
+                    exec_batch(
+                        &b,
+                        graph,
+                        params,
+                        &tracker,
+                        opts,
+                        seed,
+                        pool,
+                        plans,
+                        &mut stats,
+                        &mut device_free,
+                        &mut retry,
+                    )?;
+                }
             }
         }
     }
@@ -245,6 +570,6 @@ pub(crate) fn run_serve(
     stats.plan_misses = plans.misses - misses0;
     stats.plan_compile_ns = plans.compile_ns - compile0;
     stats.end_cycle = device_free;
-    let labels: Vec<String> = frontier.iter().map(|p| p.label.clone()).collect();
+    let labels: Vec<String> = tracker.points.iter().map(|p| p.label.clone()).collect();
     Ok(stats.report(&graph.name, &platform.name, pool.threads(), &labels, platform.f_clk_hz))
 }

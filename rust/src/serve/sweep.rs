@@ -275,8 +275,8 @@ pub fn pareto_prune(points: &[FrontierPoint]) -> Vec<usize> {
         points[a]
             .cycles
             .cmp(&points[b].cycles)
-            .then(points[a].energy_uj.partial_cmp(&points[b].energy_uj).unwrap())
-            .then(points[b].acc_proxy.partial_cmp(&points[a].acc_proxy).unwrap())
+            .then(points[a].energy_uj.total_cmp(&points[b].energy_uj))
+            .then(points[b].acc_proxy.total_cmp(&points[a].acc_proxy))
     });
     let mut kept: Vec<usize> = Vec::new();
     let mut stairs: Vec<(f64, f64)> = Vec::new();
@@ -501,6 +501,8 @@ fn written_under_older_schema(path: &Path) -> bool {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::model::tinycnn;
     use std::collections::BTreeMap;

@@ -19,12 +19,22 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse failure with a byte-precise position. Display/Error are
+/// hand-rolled: thiserror is not in the vendored crate set (see
+/// Cargo.toml), and two impls are cheaper than a dependency.
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---- typed accessors (panic-free, Option-based) ------------------

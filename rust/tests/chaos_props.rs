@@ -1,0 +1,298 @@
+//! Chaos property tests for fault-tolerant serving: under any seeded
+//! fault plan every admitted request completes or is reported shed
+//! (none silently lost), degraded-mode re-mapping conserves channel
+//! splits on the surviving units, and the serve report is
+//! bit-deterministic — across re-runs with the same seed + plan and
+//! across 1/2/8 worker threads. Scenarios run the real closed loop on
+//! `mpsoc4` (4 units) at smoke sweep sizes; the victim unit is probed
+//! from the swept frontier, never hard-coded, so the injected fault is
+//! guaranteed to hit a unit the mapper actually uses.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use odimo::api::{AdmissionCfg, FaultPlan, ServeOpts, Session, SessionBuilder};
+use odimo::coordinator::baselines::{min_cost, CostObjective};
+use odimo::hw::{FaultEvent, FaultState, Platform, UnitHealth};
+use odimo::model::tinycnn;
+use odimo::serve::sweep;
+use odimo::serve::{FrontierPoint, SweepCfg};
+use odimo::util::pool::ThreadPool;
+
+const N_REQUESTS: usize = 24;
+const SEED: u64 = 9;
+
+fn chaos_session(dir: &Path, threads: usize) -> Session {
+    SessionBuilder::new("tinycnn")
+        .platform("mpsoc4")
+        .results_dir(dir)
+        .threads(threads)
+        .seed(SEED)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .plan_cache_cap(8)
+        .build()
+        .unwrap()
+}
+
+fn chaos_opts(plan: Option<FaultPlan>) -> ServeOpts {
+    ServeOpts {
+        n_requests: Some(N_REQUESTS),
+        max_batch: 4,
+        max_wait: 50_000,
+        mean_gap: 15_000,
+        launch_cycles: 10_000,
+        fault_plan: plan,
+        ..ServeOpts::default()
+    }
+}
+
+/// The frontier the sessions above will serve from (same sweep config,
+/// same seed — the disk cache makes this literal agreement, but the
+/// sweep itself is deterministic so a fresh compute agrees too).
+fn probe_frontier(p: &Platform) -> Vec<FrontierPoint> {
+    let pool = ThreadPool::new(2);
+    let cfg = SweepCfg { seed: SEED, calib: 4, blend_steps: 2 };
+    sweep::sweep_frontier(&tinycnn(), p, &cfg, &pool).unwrap()
+}
+
+/// Unit indices a frontier point assigns at least one channel to.
+fn units_used(point: &FrontierPoint, n_acc: usize) -> BTreeSet<usize> {
+    let mut used = BTreeSet::new();
+    for counts in point.mapping.channel_split(n_acc).values() {
+        for (i, &c) in counts.iter().enumerate() {
+            if c > 0 {
+                used.insert(i);
+            }
+        }
+    }
+    used
+}
+
+fn assert_reports_identical(
+    a: &odimo::api::ServeReport,
+    b: &odimo::api::ServeReport,
+    ctx: &str,
+) {
+    assert_eq!(a.deterministic_digest(), b.deterministic_digest(), "{ctx}: digest drift");
+    assert_eq!(a.rows.len(), b.rows.len(), "{ctx}");
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.label, y.label, "{ctx}");
+        assert_eq!(x.requests, y.requests, "{ctx}");
+        assert_eq!(x.sla_hits, y.sla_hits, "{ctx}");
+    }
+}
+
+/// A unit that dies before the first request ever arrives: every batch
+/// in the run must land on points that do not touch it — either
+/// surviving originals or `deg[..]` re-map points.
+#[test]
+fn unit_down_from_cycle_zero_serves_only_surviving_units() {
+    let dir = std::env::temp_dir().join("odimo_chaos_down0");
+    let _ = std::fs::remove_dir_all(&dir);
+    let p = Platform::mpsoc4();
+    let frontier = probe_frontier(&p);
+    // victim: a unit the fastest frontier point actually uses, so the
+    // fault provably removes at least one dispatchable point
+    let victim = units_used(&frontier[0], p.n_acc())
+        .first()
+        .copied()
+        .expect("fastest point maps at least one unit");
+    let victim_name = p.accelerators[victim].name.clone();
+    let banned: BTreeSet<String> = frontier
+        .iter()
+        .filter(|fp| units_used(fp, p.n_acc()).contains(&victim))
+        .map(|fp| fp.label.clone())
+        .collect();
+    assert!(!banned.is_empty(), "victim {victim_name} must appear in some mapping");
+    let plan = FaultPlan {
+        events: vec![FaultEvent::UnitDown { unit: victim_name.clone(), at_cycle: 0 }],
+    };
+    let rep = chaos_session(&dir, 2).serve(&chaos_opts(Some(plan))).unwrap();
+    assert_eq!(rep.faults_injected, 1);
+    assert_eq!(
+        rep.accounted(),
+        N_REQUESTS,
+        "served {} + shed {} + failed {} must cover every request",
+        rep.total_requests,
+        rep.shed_requests,
+        rep.failed_requests
+    );
+    assert_eq!(rep.shed_requests, 0, "no admission threshold configured");
+    assert_eq!(rep.failed_requests, 0, "survivor points always dispatchable");
+    assert_eq!(rep.batch_aborts, 0, "nothing was in flight when the unit died");
+    for r in &rep.rows {
+        assert!(
+            !banned.contains(&r.label),
+            "row '{}' executed on dead unit {victim_name}",
+            r.label
+        );
+    }
+}
+
+/// The acceptance scenario: a unit dies mid-stream on `mpsoc4`. The
+/// run completes with zero lost requests (in-flight batches abort and
+/// retry on the degraded platform) and the report replays byte-for-byte
+/// from a fresh session with the same seed and plan.
+#[test]
+fn unit_down_mid_run_loses_no_requests_and_replays_byte_for_byte() {
+    let dir = std::env::temp_dir().join("odimo_chaos_midrun");
+    let _ = std::fs::remove_dir_all(&dir);
+    let p = Platform::mpsoc4();
+    let frontier = probe_frontier(&p);
+    let victim = units_used(&frontier[0], p.n_acc())
+        .first()
+        .copied()
+        .expect("fastest point maps at least one unit");
+    let victim_name = p.accelerators[victim].name.clone();
+    // arrivals span roughly mean_gap * n ~ 360k cycles; kill mid-stream
+    let plan = FaultPlan {
+        events: vec![FaultEvent::UnitDown { unit: victim_name, at_cycle: 120_000 }],
+    };
+    let a = chaos_session(&dir, 2).serve(&chaos_opts(Some(plan.clone()))).unwrap();
+    assert_eq!(a.faults_injected, 1);
+    assert_eq!(
+        a.accounted(),
+        N_REQUESTS,
+        "served {} + shed {} + failed {}: a request was silently lost",
+        a.total_requests,
+        a.shed_requests,
+        a.failed_requests
+    );
+    assert_eq!(a.shed_requests, 0, "no admission threshold configured");
+    assert_eq!(
+        a.failed_requests, 0,
+        "a permanent down always leaves dispatchable survivors, so the first \
+         retry must succeed"
+    );
+    assert!(
+        a.retries >= a.batch_aborts,
+        "every aborted batch ({}) re-enters the queue ({} retries)",
+        a.batch_aborts,
+        a.retries
+    );
+    // byte-for-byte replay from a fresh session (cold plan cache, same
+    // frontier via the disk cache)
+    let b = chaos_session(&dir, 2).serve(&chaos_opts(Some(plan))).unwrap();
+    assert_reports_identical(&a, &b, "mid-run replay");
+    assert_eq!(a.batch_aborts, b.batch_aborts);
+    assert_eq!(a.retries, b.retries);
+}
+
+/// Randomized chaos: for a range of synthesized fault plans (downs,
+/// deratings, transients — by construction never all units at once)
+/// with overload admission control active, the accounting identity
+/// `completed + shed + failed == admitted` holds. Nothing is lost.
+#[test]
+fn synthesized_fault_plans_account_every_request() {
+    let dir = std::env::temp_dir().join("odimo_chaos_synth");
+    let _ = std::fs::remove_dir_all(&dir);
+    let p = Platform::mpsoc4();
+    for seed in 0..5u64 {
+        let plan = FaultPlan::synth(seed, &p, 400_000);
+        plan.validate().unwrap();
+        assert!(!plan.events.is_empty(), "seed {seed}: synth plan is empty");
+        let mut opts = chaos_opts(Some(plan.clone()));
+        opts.admission = AdmissionCfg { overload_wait: 60_000 };
+        opts.max_retries = 4;
+        let rep = chaos_session(&dir, 2).serve(&opts).unwrap();
+        assert_eq!(rep.faults_injected, plan.events.len() as u64, "seed {seed}");
+        let served: usize = rep.rows.iter().map(|r| r.requests).sum();
+        assert_eq!(served, rep.total_requests, "seed {seed}: rows disagree with total");
+        assert_eq!(
+            rep.accounted(),
+            N_REQUESTS,
+            "seed {seed}: served {} + shed {} + failed {} != {N_REQUESTS}",
+            rep.total_requests,
+            rep.shed_requests,
+            rep.failed_requests
+        );
+    }
+}
+
+/// Degraded re-mapping is a real mapping: for every single-unit-down
+/// state (and a representative derated state) the water-filling
+/// `min_cost` on the degraded platform view conserves each layer's
+/// channel count across exactly the surviving units.
+#[test]
+fn degraded_min_cost_conserves_channels_on_survivors() {
+    let g = tinycnn();
+    let p = Platform::mpsoc4();
+    let n = p.n_acc();
+    for down in 0..n {
+        let mut health = vec![UnitHealth::Up; n];
+        health[down] = UnitHealth::Down;
+        let d = p.degraded(&FaultState { health }).unwrap();
+        assert_eq!(d.n_acc(), n - 1, "down={down}: one unit must be gone");
+        assert_ne!(d.spec_hash(), p.spec_hash(), "degraded view must re-key caches");
+        for obj in [CostObjective::Latency, CostObjective::Energy] {
+            let m = min_cost(&g, &d, obj);
+            m.validate(&g, d.n_acc()).unwrap();
+            let split = m.channel_split(d.n_acc());
+            for node in g.mappable() {
+                let counts = &split[&node.name];
+                assert_eq!(counts.len(), d.n_acc(), "down={down} {}", node.name);
+                let total: usize = counts.iter().sum();
+                assert_eq!(
+                    total, node.cout,
+                    "down={down} {obj:?} {}: split loses channels",
+                    node.name
+                );
+            }
+        }
+    }
+    // derated: all units survive (mapping domain unchanged), but the
+    // view is still cache-distinct from the healthy platform
+    let mut health = vec![UnitHealth::Up; n];
+    health[0] = UnitHealth::Derated(2.0);
+    let d = p.degraded(&FaultState { health }).unwrap();
+    assert_eq!(d.n_acc(), n);
+    assert_ne!(d.spec_hash(), p.spec_hash());
+    min_cost(&g, &d, CostObjective::Latency).validate(&g, n).unwrap();
+}
+
+/// The virtual-time schedule is independent of the worker-pool size:
+/// the same seed + fault plan produces digest-identical reports at 1,
+/// 2 and 8 threads. (The digest covers every outcome field and
+/// excludes only wall-clock rates and the thread count itself.)
+#[test]
+fn reports_are_identical_across_1_2_8_threads() {
+    let dir = std::env::temp_dir().join("odimo_chaos_threads");
+    let _ = std::fs::remove_dir_all(&dir);
+    let p = Platform::mpsoc4();
+    let plan = FaultPlan::synth(3, &p, 400_000);
+    let base = chaos_session(&dir, 1).serve(&chaos_opts(Some(plan.clone()))).unwrap();
+    for threads in [2usize, 8] {
+        let rep =
+            chaos_session(&dir, threads).serve(&chaos_opts(Some(plan.clone()))).unwrap();
+        assert_reports_identical(&base, &rep, &format!("threads {threads}"));
+        assert_eq!(rep.threads, threads, "report must still record its own config");
+    }
+}
+
+/// Attaching an *empty* fault plan must cost nothing semantically: the
+/// report is byte-identical to serving with no plan at all, and all
+/// fault counters stay zero. (The perf side of the same claim is the
+/// `faults0` bench case gated by `tools/check_bench_overhead.py`.)
+#[test]
+fn empty_fault_plan_is_byte_identical_to_no_plan() {
+    let dir = std::env::temp_dir().join("odimo_chaos_empty");
+    let _ = std::fs::remove_dir_all(&dir);
+    let bare = chaos_session(&dir, 2).serve(&chaos_opts(None)).unwrap();
+    let inert = chaos_session(&dir, 2)
+        .serve(&chaos_opts(Some(FaultPlan::empty())))
+        .unwrap();
+    assert_reports_identical(&bare, &inert, "empty plan");
+    assert_eq!(bare.p50_ms, inert.p50_ms);
+    assert_eq!(bare.p95_ms, inert.p95_ms);
+    assert_eq!(bare.total_batches, inert.total_batches);
+    for rep in [&bare, &inert] {
+        assert_eq!(rep.faults_injected, 0);
+        assert_eq!(rep.batch_aborts, 0);
+        assert_eq!(rep.retries, 0);
+        assert_eq!(rep.shed_requests, 0);
+        assert_eq!(rep.failed_requests, 0);
+        assert_eq!(rep.degraded_requests, 0);
+        assert_eq!(rep.accounted(), N_REQUESTS);
+    }
+}

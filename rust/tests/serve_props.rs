@@ -184,6 +184,7 @@ fn serve_opts(max_batch: usize) -> ServeOpts {
         max_wait: 50_000,
         mean_gap: 15_000,
         launch_cycles: 10_000,
+        ..ServeOpts::default()
     }
 }
 

@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Gate the zero-fault overhead of the serve fault machinery.
+
+``BENCH_serve.json`` (written by ``cargo bench --bench bench_serve``)
+contains, per thread count N, a ``batched_tN`` case (no fault plan) and
+a ``faults0_tN`` case (identical options plus an *empty* fault plan —
+the health tracker attached but inert). This script fails if the inert
+tracker costs more than TOLERANCE (5%) of the batched loop time, with a
+small absolute slack so sub-millisecond smoke runs don't trip on timer
+noise.
+
+Usage: python3 tools/check_bench_overhead.py [BENCH_serve.json]
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.05  # relative: faults0 may cost at most 5% over batched
+SLACK_MS = 1.0  # absolute: ignore sub-ms jitter (smoke runs are tiny)
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json"
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except OSError as e:
+        print(f"check_bench_overhead: cannot read {path}: {e}")
+        return 1
+
+    pairs = []
+    for key, case in sorted(bench.items()):
+        if not key.startswith("faults0_t"):
+            continue
+        threads = key[len("faults0_t") :]
+        base = bench.get(f"batched_t{threads}")
+        if base is None:
+            print(f"check_bench_overhead: {key} has no batched_t{threads} baseline")
+            return 1
+        pairs.append((threads, base["loop_ms"], case["loop_ms"]))
+
+    if not pairs:
+        print(f"check_bench_overhead: no faults0_t* cases in {path} — "
+              "re-run `make bench-serve` (or the CI smoke) first")
+        return 1
+
+    failed = False
+    for threads, base_ms, faults_ms in pairs:
+        limit = base_ms * (1.0 + TOLERANCE) + SLACK_MS
+        rel = (faults_ms / base_ms - 1.0) * 100.0 if base_ms > 0 else 0.0
+        verdict = "ok" if faults_ms <= limit else "FAIL"
+        print(f"t{threads}: batched {base_ms:8.2f} ms | faults0 {faults_ms:8.2f} ms "
+              f"({rel:+5.1f}%) | limit {limit:8.2f} ms .. {verdict}")
+        failed |= faults_ms > limit
+
+    if failed:
+        print("check_bench_overhead: zero-fault serve overhead exceeds "
+              f"{TOLERANCE:.0%} (+{SLACK_MS} ms slack) — the fault machinery "
+              "must stay off the hot path when no plan is attached")
+        return 1
+    print("check_bench_overhead: zero-fault overhead within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

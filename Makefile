@@ -41,13 +41,20 @@ examples:
 	$(CARGO) run --release --example deploy_gap9
 	$(CARGO) run --release --example deploy_mpsoc4
 
-# Quantized-inference engine throughput (engine vs naive oracle,
-# single-thread + pool scaling). Emits BENCH_infer.json at repo root
-# and appends to results/bench_infer.csv.
+# Quantized-inference engine throughput (engine vs naive oracle, scalar
+# vs SIMD kernel backends, direct conv vs forced im2col, pool scaling).
+# Emits BENCH_infer.json at repo root and appends to
+# results/bench_infer.csv, then gates the kernel numbers: SIMD never
+# slower than scalar, and the scalar path within 5% of the
+# previously-committed BENCH_infer.json (stashed before the bench
+# overwrites it).
 bench-infer:
+	@cp BENCH_infer.json /tmp/odimo_bench_infer_baseline.json 2>/dev/null || true
 	$(CARGO) bench --bench bench_infer
 	@test -f BENCH_infer.json && echo "BENCH_infer.json updated" || \
 		echo "warning: BENCH_infer.json missing"
+	$(PYTHON) tools/check_bench_infer.py BENCH_infer.json \
+		--baseline /tmp/odimo_bench_infer_baseline.json
 
 # SoC simulator throughput (DIANA + the 3-accelerator example platform,
 # plus min-cost construction). Emits BENCH_simulator.json at repo root

@@ -1,12 +1,17 @@
 //! Quantized-inference engine throughput: the planned im2col/GEMM
 //! engine driven through `odimo::api::Session::infer` (one session per
 //! thread count; plans compile once into the session's cache) vs the
-//! naive interpreter oracle (`quant::ref`), plus serve-side plan-cache
+//! naive interpreter oracle (`quant::ref`), plus a per-model kernel
+//! head-to-head (scalar reference loops vs the SIMD backend, and the
+//! direct-convolution paths vs forced im2col) and serve-side plan-cache
 //! hit/miss timings so plan compilation cost stays visible in the perf
 //! trajectory. Reports img/s and writes `BENCH_infer.json` at the repo
-//! root for the EXPERIMENTS.md §Perf trajectory.
+//! root; `tools/check_bench_infer.py` gates it (SIMD never slower than
+//! scalar, scalar unregressed vs the committed baseline).
 //!
 //!     make bench-infer    # or: cargo bench --bench bench_infer
+//!
+//! CI smoke-runs this with `--smoke` (1 repetition per case).
 
 use std::fmt::Write as _;
 
@@ -14,8 +19,10 @@ use odimo::api::{Session, SessionBuilder};
 use odimo::hw::Platform;
 use odimo::model::{resnet20, Graph};
 use odimo::quant::r#ref::RefNet;
-use odimo::quant::{synth_mapping as random_mapping, synth_params, synth_params_on, ParamSet,
-                   QuantNet, QuantPlan};
+use odimo::quant::{
+    synth_mapping as random_mapping, synth_params, synth_params_on, ConvAlgo, KernelBackend,
+    ParamSet, QuantNet, QuantPlan,
+};
 use odimo::serve::batcher::PlanCache;
 use odimo::util::bench::{black_box, Bench};
 use odimo::util::prng::Pcg32;
@@ -101,6 +108,61 @@ fn bench_model(b: &mut Bench, model: &str, json: &mut String) {
             imgs_per_s(s.median_ns)
         );
     }
+
+    // kernel backends head-to-head on the raw engine (no session, no
+    // pool): scalar reference loops vs the resolved SIMD backend, plus
+    // the same SIMD plan with every conv forced back onto im2col so the
+    // direct-convolution win is visible on its own
+    let p = s1.platform();
+    let scalar_net =
+        QuantNet::compile_params_backend(&params, &g, &mapping, p, KernelBackend::Scalar).unwrap();
+    let simd_net =
+        QuantNet::compile_params_backend(&params, &g, &mapping, p, KernelBackend::Simd).unwrap();
+    let im2col_net = QuantNet::compile_params_with(
+        &params,
+        &g,
+        &mapping,
+        p,
+        KernelBackend::Simd,
+        Some(ConvAlgo::Im2col),
+    )
+    .unwrap();
+    assert_eq!(
+        simd_net.forward(&x, BATCH).unwrap(),
+        scalar_net.forward(&x, BATCH).unwrap(),
+        "{}: SIMD backend diverged from scalar",
+        g.name
+    );
+    let s_scalar = b.run(&format!("{}_scalar_b{BATCH}", g.name), || {
+        black_box(scalar_net.forward(&x, BATCH).unwrap());
+    });
+    let s_simd = b.run(&format!("{}_simd_b{BATCH}", g.name), || {
+        black_box(simd_net.forward(&x, BATCH).unwrap());
+    });
+    let s_im2col = b.run(&format!("{}_im2col_b{BATCH}", g.name), || {
+        black_box(im2col_net.forward(&x, BATCH).unwrap());
+    });
+    println!(
+        "{:>10}: scalar {:8.1} img/s | simd[{:?}] {:8.1} img/s ({:.2}x) | \
+         im2col-only {:8.1} img/s",
+        g.name,
+        imgs_per_s(s_scalar.median_ns),
+        simd_net.isa(),
+        imgs_per_s(s_simd.median_ns),
+        s_scalar.median_ns / s_simd.median_ns,
+        imgs_per_s(s_im2col.median_ns)
+    );
+    let _ = write!(
+        json,
+        ",\n    \"scalar_img_s\": {:.1},\n    \"simd_img_s\": {:.1},\n    \
+         \"simd_speedup\": {:.2},\n    \"im2col_img_s\": {:.1},\n    \
+         \"direct_img_s\": {:.1}",
+        imgs_per_s(s_scalar.median_ns),
+        imgs_per_s(s_simd.median_ns),
+        s_scalar.median_ns / s_simd.median_ns,
+        imgs_per_s(s_im2col.median_ns),
+        imgs_per_s(s_simd.median_ns)
+    );
     let _ = write!(json, "\n  }}");
 }
 
@@ -112,7 +174,7 @@ fn bench_plan_cache(b: &mut Bench, json: &mut String) {
     let (names, values) = synth_params(&g, 19);
     let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
     let mapping = random_mapping(&g, 5);
-    let key = QuantPlan::cache_key(&g.name, &p.name, &mapping);
+    let key = QuantPlan::cache_key(&g.name, &p.name, &mapping, KernelBackend::Auto);
     let s_miss = b.run("plan_cache_miss_resnet20", || {
         let mut cold = PlanCache::new(1);
         cold.get_or_compile(key, &mapping, || {
@@ -150,7 +212,11 @@ fn bench_plan_cache(b: &mut Bench, json: &mut String) {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut b = Bench::new("infer").slow();
+    if smoke {
+        b = b.smoke();
+    }
     let mut json = String::from("{\n");
     bench_model(&mut b, "tinycnn", &mut json);
     json.push_str(",\n");

@@ -9,8 +9,10 @@
 //! so the timed loop measures steady-state serving (plans compile once,
 //! on the first instrumented run). CI smoke-runs this with `--smoke`
 //! (tiny request stream, 1 repetition); `make bench-serve` produces
-//! real timings. Writes `BENCH_serve.json` at the repo root and appends
-//! to `results/bench_serve.csv`.
+//! real timings. Every case also reports the per-request latency split
+//! (mean queue wait vs mean engine compute, simulated ms) so batching
+//! pressure stays visible next to throughput. Writes `BENCH_serve.json`
+//! at the repo root and appends to `results/bench_serve.csv`.
 
 use std::fmt::Write as _;
 
@@ -67,9 +69,11 @@ fn main() {
             });
             println!(
                 "{mode} x{threads} threads: {:8.1} img/s | p95 {:.3} ms (simulated) | \
-                 loop {:.2} ms",
+                 queue {:.3} / compute {:.3} ms | loop {:.2} ms",
                 rep.throughput_img_s,
                 rep.p95_ms,
+                rep.mean_queue_ms,
+                rep.mean_compute_ms,
                 s.median_ns / 1e6
             );
             if !first {
@@ -80,11 +84,14 @@ fn main() {
                 json,
                 "  \"{mode}_t{threads}\": {{\n    \"img_s\": {:.1},\n    \
                  \"p95_ms\": {:.4},\n    \"sla_hit_rate\": {:.4},\n    \
-                 \"batches\": {},\n    \"loop_ms\": {:.2}\n  }}",
+                 \"batches\": {},\n    \"queue_ms\": {:.4},\n    \
+                 \"compute_ms\": {:.4},\n    \"loop_ms\": {:.2}\n  }}",
                 rep.throughput_img_s,
                 rep.p95_ms,
                 rep.sla_hit_rate,
                 rep.total_batches,
+                rep.mean_queue_ms,
+                rep.mean_compute_ms,
                 s.median_ns / 1e6
             );
         }

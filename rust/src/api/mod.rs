@@ -38,5 +38,6 @@ mod session;
 
 pub use crate::coordinator::baselines::CostObjective;
 pub use crate::hw::faults::{FaultEvent, FaultPlan};
+pub use crate::quant::{ConvAlgo, Isa, KernelBackend};
 pub use crate::serve::{AdmissionCfg, ServeError, ServeOpts, ServeReport};
 pub use session::{MappingSpec, Session, SessionBuilder, SweepResult};

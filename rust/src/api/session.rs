@@ -12,7 +12,7 @@ use crate::coordinator::Mapping;
 use crate::hw::soc::{simulate, RunReport, SocConfig};
 use crate::hw::Platform;
 use crate::model::{self, Graph, ALL_MODELS};
-use crate::quant::{synth_params_on, ParamSet, QuantNet, QuantPlan};
+use crate::quant::{synth_params_on, KernelBackend, ParamSet, QuantNet, QuantPlan};
 use crate::serve::batcher::PlanCache;
 use crate::serve::{self, metrics, sweep, FrontierPoint, ServeOpts, ServeReport, SweepCfg};
 use crate::util::json;
@@ -76,6 +76,7 @@ pub struct SessionBuilder {
     plan_cache_cap: usize,
     sweep_calib: usize,
     sweep_blend_steps: usize,
+    kernels: KernelBackend,
 }
 
 #[derive(Clone, Debug)]
@@ -104,6 +105,7 @@ impl SessionBuilder {
             plan_cache_cap: 8,
             sweep_calib: sweep.calib,
             sweep_blend_steps: sweep.blend_steps,
+            kernels: KernelBackend::Auto,
         }
     }
 
@@ -197,6 +199,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Kernel backend for every engine run this session compiles
+    /// (`infer` and `serve`; the CLI `--kernels` flag lands here).
+    /// Default [`KernelBackend::Auto`]: runtime CPU-feature dispatch,
+    /// overridable via the `ODIMO_KERNELS` environment variable. All
+    /// backends are bit-identical, so this is purely a speed knob.
+    pub fn kernels(mut self, backend: KernelBackend) -> Self {
+        self.kernels = backend;
+        self
+    }
+
     /// Validate everything once and construct the [`Session`]: the
     /// model must exist, the platform must resolve (built-in name or
     /// readable TOML), and `threads`, if set, must be >= 1.
@@ -234,6 +246,7 @@ impl SessionBuilder {
             frontier: None,
             plans: PlanCache::new(self.plan_cache_cap),
             params: None,
+            kernels: self.kernels,
         })
     }
 }
@@ -269,6 +282,8 @@ pub struct Session {
     /// derivation the sweep scorer uses, so served logits match swept
     /// logits.
     params: Option<(Vec<String>, Vec<Vec<f32>>)>,
+    /// Kernel backend for every plan this session compiles.
+    kernels: KernelBackend,
 }
 
 impl Session {
@@ -290,6 +305,11 @@ impl Session {
     /// The session seed (parameters, calibration, request streams).
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// The kernel backend this session compiles plans with.
+    pub fn kernels(&self) -> KernelBackend {
+        self.kernels
     }
 
     /// Whether the session runs smoke-sized defaults.
@@ -374,16 +394,18 @@ impl Session {
             .params
             .as_ref()
             .ok_or_else(|| anyhow!("internal: parameter snapshot missing after ensure_params"))?;
-        let key = QuantPlan::cache_key(&self.graph.name, &self.platform.name, mapping);
+        let key =
+            QuantPlan::cache_key(&self.graph.name, &self.platform.name, mapping, self.kernels);
         let graph = &self.graph;
         let platform = &self.platform;
+        let backend = self.kernels;
         let pool = init_pool(&self.pool, self.threads);
         // the ParamSet (a name-indexed view) is only needed when the
         // plan actually compiles, so build it inside the miss closure —
         // the steady-state hit path pays one hash + mapping compare
         let net = self.plans.get_or_compile(key, mapping, || {
             let params = ParamSet::new(names.iter().map(|s| s.as_str()), values);
-            QuantNet::compile_params(&params, graph, mapping, platform)
+            QuantNet::compile_params_backend(&params, graph, mapping, platform, backend)
         })?;
         net.forward_pool(x, batch, pool)
     }
@@ -462,6 +484,7 @@ impl Session {
             opts,
             n_requests,
             self.seed,
+            self.kernels,
         )?;
         let path = serve::report_path(&self.results_dir, &self.graph.name, &self.platform.name);
         metrics::save_report(&path, &report)?;

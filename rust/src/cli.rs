@@ -249,6 +249,13 @@ pub const FLAGS: &[FlagSpec] = &[
         help: "serve: re-enqueue budget per request before it is accounted failed \
                (default 3)",
     },
+    FlagSpec {
+        name: "kernels",
+        value: Some("<scalar|simd|auto>"),
+        help: "engine kernel backend: scalar reference loops, simd (AVX2/NEON when the \
+               CPU has them, portable chunked otherwise), or auto runtime detection \
+               (default auto; ODIMO_KERNELS overrides auto)",
+    },
 ];
 
 /// One subcommand: its help line plus exactly the flags and switches it
@@ -271,7 +278,7 @@ const COMMON_SWITCHES: &[&str] = &["smoke", "non-ideal-l1"];
 /// The serving verbs honor only these — `--config`/`--lambdas`/... and
 /// `--non-ideal-l1` would be silent no-ops (the sweep always scores the
 /// ideal-L1 simulator config), so they are rejected, not ignored.
-const SERVE_FLAGS: &[&str] = &["model", "platform", "results", "threads", "seed"];
+const SERVE_FLAGS: &[&str] = &["model", "platform", "results", "threads", "seed", "kernels"];
 
 /// Every subcommand, in usage-text order.
 pub const VERBS: &[VerbSpec] = &[
@@ -335,7 +342,7 @@ pub const VERBS: &[VerbSpec] = &[
         help: "closed-loop SLA-aware batched inference over the frontier",
         flags: &["model", "platform", "results", "threads", "seed", "requests",
                  "max-batch", "max-wait", "gap", "faults", "overload-wait",
-                 "max-retries"],
+                 "max-retries", "kernels"],
         switches: &["smoke"],
     },
     VerbSpec {

@@ -88,6 +88,9 @@ fn build_session(args: &Args, default_model: &str) -> Result<Session> {
     if let Some(s) = args.get_u64("seed")? {
         b = b.seed(s);
     }
+    if let Some(kb) = args.get("kernels") {
+        b = b.kernels(kb.parse()?);
+    }
     if args.has("smoke") {
         b = b.smoke(true);
     }

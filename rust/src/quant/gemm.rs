@@ -10,13 +10,14 @@
 //! never the reduction itself.
 
 /// Register tile height (output channels per microkernel call).
-const MR: usize = 4;
+/// Shared with the explicit-SIMD mirrors in `super::simd`.
+pub(crate) const MR: usize = 4;
 /// Register tile width (output pixels per microkernel call) — 16 f32
 /// lanes autovectorize to 2-4 SIMD accumulator registers per row.
-const NR: usize = 16;
+pub(crate) const NR: usize = 16;
 /// Cache block over the panel columns: NB * K floats of the panel stay
 /// resident in L1/L2 while the whole A (weight) block streams past.
-const NB: usize = 256;
+pub(crate) const NB: usize = 256;
 
 /// C[r, j] = sum_p A[r, p] * B[p, j] for r < m, j < n, p < k.
 /// `a` is m x k row-major (packed weights), `b` is k x n row-major (the
@@ -67,9 +68,11 @@ fn micro_mr_nr(a: &[f32], b: &[f32], i0: usize, j0: usize, k: usize, n: usize, c
 }
 
 /// Scalar fallback for row/column remainders (same accumulation order).
+/// The `super::simd` kernels call it for their own edge tiles, so the
+/// remainder path is one shared implementation across every backend.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn edge_rows(
+pub(crate) fn edge_rows(
     a: &[f32],
     b: &[f32],
     i0: usize,

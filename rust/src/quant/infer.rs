@@ -37,7 +37,8 @@ use crate::model::Graph;
 use crate::runtime::ArtifactMeta;
 use crate::util::pool::ThreadPool;
 
-use super::plan::{QuantPlan, Workspace};
+use super::plan::{ConvAlgo, QuantPlan, Scratch};
+use super::simd::{Isa, KernelBackend};
 use super::ParamSet;
 
 /// A fully quantized network ready to execute. Owns its compiled plan
@@ -46,9 +47,9 @@ use super::ParamSet;
 /// alongside the graph they were compiled from.
 pub struct QuantNet {
     plan: QuantPlan,
-    /// reusable per-thread workspaces (allocation converges after the
-    /// first forward at a given batch shape)
-    ws: Mutex<Vec<Workspace>>,
+    /// reusable per-thread scratches (presized from the plan's capacity
+    /// classes on first use, then allocation-free)
+    ws: Mutex<Vec<Scratch>>,
 }
 
 impl QuantNet {
@@ -65,15 +66,42 @@ impl QuantNet {
         Self::compile_params(&params, graph, mapping, platform)
     }
 
-    /// Compile from any name-indexed parameter set (tests/benches).
+    /// Compile from any name-indexed parameter set (tests/benches) with
+    /// the default ([`KernelBackend::Auto`]) kernel backend.
     pub fn compile_params(
         params: &ParamSet<'_>,
         graph: &Graph,
         mapping: &Mapping,
         platform: &Platform,
     ) -> Result<Self> {
+        Self::compile_params_with(params, graph, mapping, platform, KernelBackend::Auto, None)
+    }
+
+    /// [`Self::compile_params`] with an explicit kernel backend.
+    pub fn compile_params_backend(
+        params: &ParamSet<'_>,
+        graph: &Graph,
+        mapping: &Mapping,
+        platform: &Platform,
+        backend: KernelBackend,
+    ) -> Result<Self> {
+        Self::compile_params_with(params, graph, mapping, platform, backend, None)
+    }
+
+    /// Full-control compile: explicit backend plus an optional per-conv
+    /// algorithm override (see [`QuantPlan::compile_quant_with`]).
+    pub fn compile_params_with(
+        params: &ParamSet<'_>,
+        graph: &Graph,
+        mapping: &Mapping,
+        platform: &Platform,
+        backend: KernelBackend,
+        force_algo: Option<ConvAlgo>,
+    ) -> Result<Self> {
         Ok(QuantNet {
-            plan: QuantPlan::compile_quant(params, graph, mapping, platform)?,
+            plan: QuantPlan::compile_quant_with(
+                params, graph, mapping, platform, backend, force_algo,
+            )?,
             ws: Mutex::new(Vec::new()),
         })
     }
@@ -83,11 +111,29 @@ impl QuantNet {
         self.plan.arena_buffers()
     }
 
-    fn take_ws(&self) -> Workspace {
+    /// The concrete ISA this net's kernels dispatch to.
+    pub fn isa(&self) -> Isa {
+        self.plan.isa()
+    }
+
+    /// Per-conv algorithm decisions recorded at compile time.
+    pub fn conv_algos(&self) -> Vec<(String, ConvAlgo)> {
+        self.plan.conv_algos()
+    }
+
+    /// Total heap allocations performed by every pooled scratch so far
+    /// (see [`Scratch::alloc_audit`]): converges after the first block
+    /// per batch shape, so the delta across steady-state forwards is
+    /// zero — the allocation regression tests pin exactly that.
+    pub fn scratch_allocs(&self) -> usize {
+        self.ws.lock().unwrap().iter().map(Scratch::alloc_audit).sum()
+    }
+
+    fn take_ws(&self) -> Scratch {
         self.ws.lock().unwrap().pop().unwrap_or_default()
     }
 
-    fn put_ws(&self, w: Workspace) {
+    fn put_ws(&self, w: Scratch) {
         self.ws.lock().unwrap().push(w);
     }
 
@@ -180,7 +226,7 @@ pub fn calibrate_act_maxima_params(
     batch: usize,
 ) -> Result<BTreeMap<String, f32>> {
     let plan = QuantPlan::compile_float(params, graph)?;
-    let mut ws = Workspace::new();
+    let mut ws = Scratch::new();
     // the reference pass folds from 0.0 (post-ReLU maxima are >= 0)
     let mut maxima = vec![0f32; plan.n_nodes()];
     let _ = plan.run_block(x, batch, &mut ws, Some(&mut maxima));

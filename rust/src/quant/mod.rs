@@ -11,9 +11,11 @@ pub mod gemm;
 pub mod infer;
 pub mod plan;
 pub mod r#ref;
+pub mod simd;
 
 pub use infer::{calibrate_act_maxima, calibrate_act_maxima_params, QuantNet};
-pub use plan::{QuantPlan, Workspace};
+pub use plan::{ConvAlgo, QuantPlan, Scratch};
+pub use simd::{Isa, KernelBackend};
 
 use std::collections::BTreeMap;
 

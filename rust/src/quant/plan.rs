@@ -11,19 +11,31 @@
 //!   * a liveness-scanned buffer arena: activation buffers are assigned
 //!     by a linear scan over the DAG and recycled as soon as their last
 //!     consumer has run (ping-pong along chains, an extra slot per live
-//!     residual), so a [`Workspace`] reaches a fixed set of allocations
-//!     after the first block and `forward` allocates nothing per node;
+//!     residual), so a [`Scratch`] reaches a fixed set of allocations
+//!     after the first block and `forward` allocates nothing per node —
+//!     the plan records per-buffer capacity classes and presizes every
+//!     scratch vector up front, and [`Scratch::alloc_audit`] counts
+//!     capacity growths so tests pin the steady state to zero;
 //!   * D/A re-reads of an activation (the AIMC n-bit input truncation)
 //!     are materialized at most once per tensor *per distinct D/A
 //!     width* — platforms may carry several IMC macros with different
 //!     `da_bits`; each width that some consumer actually reads gets its
 //!     own arena view, and platforms with no D/A units (e.g. `gap9`)
-//!     materialize none at all.
+//!     materialize none at all;
+//!   * a [`KernelBackend`] resolved once to a concrete
+//!     [`Isa`](super::simd::Isa) — every hot loop dispatches through
+//!     `super::simd`, and the resolved ISA is folded into
+//!     [`QuantPlan::cache_key`] so plan caches never mix backends;
+//!   * a per-conv [`ConvAlgo`] chosen at compile time: 1x1 stride-1
+//!     convs run the GEMM straight over the stored activation (the
+//!     im2col panel would be a verbatim copy), and small 3x3 stride-1
+//!     convs take a direct-convolution kernel that skips panel
+//!     materialization entirely.
 //!
-//! Execution is bit-identical to the `quant::ref` oracle: the GEMM
+//! Execution is bit-identical to the `quant::ref` oracle: every kernel
 //! accumulates each output strictly in the oracle's reduction order
-//! (see `quant::gemm`), and all element-wise epilogues share the same
-//! helper functions.
+//! (see `quant::gemm` and `quant::simd`), and all element-wise
+//! epilogues share the same helper functions.
 
 use std::collections::BTreeMap;
 
@@ -34,8 +46,9 @@ use crate::hw::Platform;
 use crate::model::{Graph, Op};
 use crate::util::pool::ThreadPool;
 
-use super::gemm::{dwconv_one, gemm_seqk, im2col, transpose_into};
-use super::{da_q, fake_quant, quant_act, round_half_even, ParamSet};
+use super::gemm::{im2col, transpose_into};
+use super::simd::{self, Isa, KernelBackend};
+use super::{fake_quant, ParamSet};
 
 /// One packed run of output channels on a single accelerator.
 pub(crate) struct Group {
@@ -50,6 +63,59 @@ pub(crate) struct Group {
     src: usize,
     /// output activation bits (per the accelerator spec)
     bits: u32,
+}
+
+/// Per-conv kernel algorithm, chosen once at compile time and recorded
+/// in the plan ([`QuantPlan::conv_algos`] exposes the decisions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvAlgo {
+    /// im2col panel + GEMM — the general path.
+    Im2col,
+    /// 1x1 stride-1 pad-0 conv: the im2col panel would be a verbatim
+    /// copy of the stored activation, so the GEMM runs straight over
+    /// the input slice. Bit-identical to [`ConvAlgo::Im2col`] by
+    /// construction (same values in the same reduction order).
+    Direct1x1,
+    /// 3x3 stride-1 direct convolution that skips panel
+    /// materialization. Taken when the input image stays cache-resident
+    /// (`DIRECT_L1_ELEMS`); bit-identical to the im2col+GEMM result up
+    /// to the sign of zero (an out-of-bounds tap skipped by the direct
+    /// kernel is a `+0.0 * w` term in the panel path).
+    Direct3x3,
+}
+
+/// Direct-3x3 eligibility cap: input images up to this many `f32`
+/// elements (128 KiB) are treated as cache-resident. Below it the
+/// direct kernel's overlapping re-reads hit L1/L2 and beat the im2col
+/// panel's 9x memory blow-up; above it the panel's streaming access
+/// pattern wins, so the plan falls back to [`ConvAlgo::Im2col`]. This
+/// is the arithmetic-intensity heuristic recorded per op in the plan.
+const DIRECT_L1_ELEMS: usize = 32 * 1024;
+
+impl ConvAlgo {
+    /// Plan-time choice for one conv. `force` (tests/benches) overrides
+    /// the size heuristic but never geometry eligibility: forcing
+    /// `Direct3x3` on a 5x5 conv still compiles the im2col path.
+    fn choose(
+        k: usize,
+        stride: usize,
+        pad: usize,
+        cin: usize,
+        hi: usize,
+        wi: usize,
+        force: Option<ConvAlgo>,
+    ) -> ConvAlgo {
+        let fits_1x1 = k == 1 && stride == 1 && pad == 0;
+        let fits_3x3 = k == 3 && stride == 1;
+        match force {
+            Some(ConvAlgo::Direct1x1) if fits_1x1 => ConvAlgo::Direct1x1,
+            Some(ConvAlgo::Direct3x3) if fits_3x3 => ConvAlgo::Direct3x3,
+            Some(_) => ConvAlgo::Im2col,
+            None if fits_1x1 => ConvAlgo::Direct1x1,
+            None if fits_3x3 && cin * hi * wi <= DIRECT_L1_ELEMS => ConvAlgo::Direct3x3,
+            None => ConvAlgo::Im2col,
+        }
+    }
 }
 
 pub(crate) struct ConvP {
@@ -69,6 +135,8 @@ pub(crate) struct ConvP {
     /// `Some(w)` = the w-bit D/A view (ascending widths after `None`)
     srcs: Vec<Option<u32>>,
     groups: Vec<Group>,
+    /// kernel algorithm recorded at compile time
+    algo: ConvAlgo,
 }
 
 pub(crate) struct FcP {
@@ -123,55 +191,124 @@ pub(crate) struct PlanNode {
     pub(crate) track_max: bool,
 }
 
-/// Per-thread scratch: the arena plus im2col/GEMM panels. Allocation
-/// converges after the first block (buffers are `resize`d in place).
+/// Per-thread scratch: the arena plus im2col/GEMM panels.
+/// [`QuantPlan::presize`] grows every vector to the plan's recorded
+/// capacity classes up front, so steady-state execution performs zero
+/// heap allocations; [`Scratch::alloc_audit`] counts capacity growths
+/// and the regression tests pin the steady-state delta to zero.
 #[derive(Default)]
-pub struct Workspace {
+pub struct Scratch {
     bufs: Vec<Vec<f32>>,
     panel: Vec<f32>,
     cbuf: Vec<f32>,
     /// tiled mode: per-(image, view) im2col panels
     panels: Vec<f32>,
-    /// tiled mode: per-job GEMM scratch
+    /// tiled mode: per-job kernel scratch
     tiles: Vec<f32>,
+    /// capacity growths since construction (see [`Self::alloc_audit`])
+    audit: usize,
 }
 
-impl Workspace {
+impl Scratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Heap allocations this scratch has performed: one count per
+    /// vector growth past its capacity. Converges after the first block
+    /// per (plan, batch, tiling) shape — repeat blocks add nothing, and
+    /// a 3-batch run from fresh costs no more counts than a 1-batch
+    /// run, because [`QuantPlan::presize`] reserves from compile-time
+    /// capacity classes rather than growing on demand.
+    pub fn alloc_audit(&self) -> usize {
+        self.audit
+    }
+
+    /// Reset `buf` to `len` zeroed elements, counting a capacity growth
+    /// in `audit` if the existing allocation cannot hold it (after
+    /// presize that never fires — any hit is a missed capacity class).
+    #[inline]
+    pub(crate) fn ensure(buf: &mut Vec<f32>, len: usize, audit: &mut usize) {
+        if buf.capacity() < len {
+            *audit += 1;
+        }
+        buf.clear();
+        buf.resize(len, 0.0);
     }
 }
 
 /// A compiled (graph, mapping, platform) ready to execute over an arena.
 pub struct QuantPlan {
     nodes: Vec<PlanNode>,
-    n_bufs: usize,
+    /// per-arena-buffer capacity class, in per-image elements
+    buf_caps: Vec<usize>,
     in_elems: usize,
     out_elems: usize,
+    /// concrete ISA every kernel dispatches to, resolved once at
+    /// compile time from the requested [`KernelBackend`]
+    isa: Isa,
 }
 
 impl QuantPlan {
-    /// Compile the deploy-mode (quantized, mapped) plan for `platform`.
+    /// Compile the deploy-mode (quantized, mapped) plan for `platform`
+    /// with the default ([`KernelBackend::Auto`]) kernel backend.
     pub fn compile_quant(
         params: &ParamSet<'_>,
         graph: &Graph,
         mapping: &Mapping,
         platform: &Platform,
     ) -> Result<Self> {
+        Self::compile_quant_with(params, graph, mapping, platform, KernelBackend::Auto, None)
+    }
+
+    /// [`Self::compile_quant`] with an explicit kernel backend.
+    pub fn compile_quant_backend(
+        params: &ParamSet<'_>,
+        graph: &Graph,
+        mapping: &Mapping,
+        platform: &Platform,
+        backend: KernelBackend,
+    ) -> Result<Self> {
+        Self::compile_quant_with(params, graph, mapping, platform, backend, None)
+    }
+
+    /// Full-control compile: explicit kernel backend plus an optional
+    /// [`ConvAlgo`] override. The override applies only where the
+    /// geometry is eligible (see [`ConvAlgo`]); tests and benches use
+    /// it to pin the im2col-vs-direct comparison through public API.
+    pub fn compile_quant_with(
+        params: &ParamSet<'_>,
+        graph: &Graph,
+        mapping: &Mapping,
+        platform: &Platform,
+        backend: KernelBackend,
+        force_algo: Option<ConvAlgo>,
+    ) -> Result<Self> {
         mapping.validate(graph, platform.n_acc())?;
-        Self::compile(params, graph, Some((mapping, platform)))
+        Self::compile(params, graph, Some((mapping, platform)), backend, force_algo)
     }
 
     /// Compile the float (quantization-free) plan — the calibration
     /// forward: raw weights, bias+ReLU epilogues, no grids anywhere.
     pub fn compile_float(params: &ParamSet<'_>, graph: &Graph) -> Result<Self> {
-        Self::compile(params, graph, None)
+        Self::compile(params, graph, None, KernelBackend::Auto, None)
+    }
+
+    /// [`Self::compile_float`] with an explicit kernel backend.
+    pub fn compile_float_backend(
+        params: &ParamSet<'_>,
+        graph: &Graph,
+        backend: KernelBackend,
+    ) -> Result<Self> {
+        Self::compile(params, graph, None, backend, None)
     }
 
     fn compile(
         params: &ParamSet<'_>,
         graph: &Graph,
         mapping: Option<(&Mapping, &Platform)>,
+        backend: KernelBackend,
+        force_algo: Option<ConvAlgo>,
     ) -> Result<Self> {
         let n_nodes = graph.nodes.len();
         if n_nodes == 0 {
@@ -287,6 +424,10 @@ impl QuantPlan {
                             act_scale: if quant { act_scale } else { 0.0 },
                             srcs,
                             groups,
+                            algo: ConvAlgo::choose(
+                                n.k, n.stride, n.pad, n.cin, n.in_hw.0, n.in_hw.1,
+                                force_algo,
+                            ),
                         })
                     }
                 }
@@ -492,22 +633,33 @@ impl QuantPlan {
         let (c0, h0, w0) = graph.input_shape;
         Ok(QuantPlan {
             out_elems: nodes.last().unwrap().out_elems,
-            n_bufs: buf_cap.len(),
             in_elems: c0 * h0 * w0,
+            isa: backend.resolve(),
+            buf_caps: buf_cap,
             nodes,
         })
     }
 
-    /// Stable cache key for a compiled (model, platform, mapping)
-    /// triple — the plan-cache handle: everything that changes the
-    /// compiled plan's packed weights or arena layout is folded in
-    /// (FNV-1a over the model name, the platform name, and every
-    /// per-layer channel assignment). The serve-side LRU plan cache
+    /// Stable cache key for a compiled (model, platform, mapping,
+    /// backend) tuple — the plan-cache handle: everything that changes
+    /// the compiled plan's packed weights, arena layout, or kernel
+    /// dispatch is folded in (FNV-1a over the model name, the platform
+    /// name, the *resolved* kernel ISA, and every per-layer channel
+    /// assignment). Folding the resolved [`Isa`] rather than the
+    /// requested [`KernelBackend`] means `Auto` shares a key with
+    /// whatever it resolves to on this host — the compiled plans are
+    /// identical — while scalar- and SIMD-compiled plans never collide.
+    /// The serve-side LRU plan cache
     /// ([`crate::serve::batcher::PlanCache`]) uses this as its fast
     /// lookup filter — verifying the stored mapping on every hit, since
     /// a 64-bit hash alone cannot guarantee identity — so repeat
     /// requests for the same mapping reuse one compiled plan.
-    pub fn cache_key(model: &str, platform: &str, mapping: &Mapping) -> u64 {
+    pub fn cache_key(
+        model: &str,
+        platform: &str,
+        mapping: &Mapping,
+        backend: KernelBackend,
+    ) -> u64 {
         const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
         const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
         let mut h = FNV_OFFSET;
@@ -520,6 +672,8 @@ impl QuantPlan {
         eat(model.as_bytes());
         eat(&[0xff]);
         eat(platform.as_bytes());
+        eat(&[0xff]);
+        eat(&[backend.resolve().code()]);
         eat(&[0xff]);
         for (name, ids) in &mapping.assign {
             eat(name.as_bytes());
@@ -540,7 +694,90 @@ impl QuantPlan {
     /// Number of distinct arena buffers (tests: should be far below the
     /// node count on deep graphs).
     pub fn arena_buffers(&self) -> usize {
-        self.n_bufs
+        self.buf_caps.len()
+    }
+
+    /// The concrete ISA this plan's kernels dispatch to.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Per-conv algorithm decisions recorded at compile time, in graph
+    /// order: `(layer name, algo)`.
+    pub fn conv_algos(&self) -> Vec<(String, ConvAlgo)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                PlanOp::Conv(cp) => Some((n.name.clone(), cp.algo)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Grow every scratch vector to this plan's steady-state capacity
+    /// in one planned step: arena buffers from the compile-time
+    /// capacity classes scaled by `batch`, panels/tiles from a walk
+    /// over the plan's ops (`jobs_target = Some(_)` sizes the tiled
+    /// path's per-job scratch as well). After presize the hot loop's
+    /// [`Scratch::ensure`] calls never grow — audited growths here are
+    /// the *first* sizing per (plan, batch, tiling) shape only.
+    ///
+    /// The logits buffer (the last node's `dst`) is excluded from the
+    /// audit: `run_block` hands it to the caller by move, so its
+    /// re-reservation on the next block is planned output traffic, not
+    /// scratch churn.
+    fn presize(&self, ws: &mut Scratch, batch: usize, jobs_target: Option<usize>) {
+        let Scratch { bufs, panel, cbuf, panels, tiles, audit } = ws;
+        if bufs.len() < self.buf_caps.len() {
+            bufs.resize_with(self.buf_caps.len(), Vec::new);
+        }
+        let out_buf = self.nodes.last().map(|n| n.dst).unwrap_or(usize::MAX);
+        for (id, (buf, &cap)) in bufs.iter_mut().zip(&self.buf_caps).enumerate() {
+            let need = cap * batch;
+            if buf.capacity() < need {
+                if id != out_buf {
+                    *audit += 1;
+                }
+                buf.reserve_exact(need - buf.len());
+            }
+        }
+        let (mut p, mut cb, mut pp, mut tt) = (0usize, 0usize, 0usize, 0usize);
+        for node in &self.nodes {
+            match &node.op {
+                PlanOp::Conv(cp) => {
+                    let n = cp.oh * cp.ow;
+                    let kdim = cp.cin * cp.k * cp.k;
+                    let rows = cp.groups.iter().map(|g| g.rows.len()).max().unwrap_or(0);
+                    match jobs_target {
+                        None => {
+                            if cp.algo == ConvAlgo::Im2col {
+                                p = p.max(kdim * n);
+                            }
+                            cb = cb.max(rows * n);
+                        }
+                        Some(jt) => {
+                            if cp.algo == ConvAlgo::Im2col {
+                                pp = pp.max(batch * cp.srcs.len() * kdim * n);
+                            }
+                            let (cc, n_jobs) = conv_tile_shape(cp.cout, batch, jt);
+                            tt = tt.max(n_jobs * cc * n);
+                        }
+                    }
+                }
+                PlanOp::Fc(fp) => {
+                    let rows = fp.groups.iter().map(|g| g.rows.len()).max().unwrap_or(0);
+                    p = p.max(fp.cin * batch);
+                    cb = cb.max(rows * batch);
+                }
+                _ => {}
+            }
+        }
+        for (buf, need) in [(panel, p), (cbuf, cb), (panels, pp), (tiles, tt)] {
+            if buf.capacity() < need {
+                *audit += 1;
+                buf.reserve_exact(need - buf.len());
+            }
+        }
     }
 
     pub(crate) fn node_names(&self) -> impl Iterator<Item = (usize, &str, bool)> {
@@ -556,14 +793,17 @@ impl QuantPlan {
 
     /// Materialize the D/A views of a just-produced activation: one
     /// width-truncated copy per distinct `da_bits` consumers read.
-    fn materialize_da(node: &PlanNode, dst: &[f32], bufs: &mut [Vec<f32>]) {
+    fn materialize_da(
+        node: &PlanNode,
+        dst: &[f32],
+        bufs: &mut [Vec<f32>],
+        audit: &mut usize,
+        isa: Isa,
+    ) {
         for &(w, id) in &node.da_out {
             let mut view = std::mem::take(&mut bufs[id]);
-            view.clear();
-            view.resize(dst.len(), 0.0);
-            for (d, &v) in view.iter_mut().zip(dst.iter()) {
-                *d = da_q(v, w);
-            }
+            Scratch::ensure(&mut view, dst.len(), audit);
+            simd::da_q_into(isa, dst, w, &mut view);
             bufs[id] = view;
         }
     }
@@ -576,43 +816,57 @@ impl QuantPlan {
         &self,
         x: &[f32],
         batch: usize,
-        ws: &mut Workspace,
+        ws: &mut Scratch,
         mut maxima: Option<&mut [f32]>,
     ) -> Vec<f32> {
         assert_eq!(x.len(), batch * self.in_elems, "input size");
-        if ws.bufs.len() < self.n_bufs {
-            ws.bufs.resize_with(self.n_bufs, Vec::new);
-        }
+        self.presize(ws, batch, None);
+        let isa = self.isa;
         for (ni, node) in self.nodes.iter().enumerate() {
             let mut dst = std::mem::take(&mut ws.bufs[node.dst]);
-            dst.clear();
-            dst.resize(node.out_elems * batch, 0.0);
+            Scratch::ensure(&mut dst, node.out_elems * batch, &mut ws.audit);
             match &node.op {
                 PlanOp::Input { quantize } => {
                     if *quantize {
-                        for (d, &v) in dst.iter_mut().zip(x) {
-                            *d = round_half_even(v * 255.0) / 255.0;
-                        }
+                        simd::input_quant(isa, x, &mut dst);
                     } else {
                         dst.copy_from_slice(x);
                     }
                 }
                 PlanOp::Conv(cp) => {
-                    exec_conv(cp, &ws.bufs, &node.src_views, batch, &mut ws.panel,
-                              &mut ws.cbuf, &mut dst);
+                    exec_conv(
+                        cp,
+                        &ws.bufs,
+                        &node.src_views,
+                        batch,
+                        &mut ws.panel,
+                        &mut ws.cbuf,
+                        &mut ws.audit,
+                        isa,
+                        &mut dst,
+                    );
                 }
                 PlanOp::Fc(fp) => {
-                    exec_fc(fp, &ws.bufs, &node.src_views, batch, &mut ws.panel,
-                            &mut ws.cbuf, &mut dst);
+                    exec_fc(
+                        fp,
+                        &ws.bufs,
+                        &node.src_views,
+                        batch,
+                        &mut ws.panel,
+                        &mut ws.cbuf,
+                        &mut ws.audit,
+                        isa,
+                        &mut dst,
+                    );
                 }
                 PlanOp::Dw(dp) => {
                     let src = ws.bufs[node.src[0]].as_slice();
-                    exec_dw(dp, src, batch, 0, dp.c, &mut dst);
+                    exec_dw(dp, src, batch, 0, dp.c, isa, &mut dst);
                 }
                 PlanOp::Add { relu, scale, quantize } => {
                     let a = ws.bufs[node.src[0]].as_slice();
                     let b = ws.bufs[node.src[1]].as_slice();
-                    exec_add(a, b, *relu, *scale, *quantize, &mut dst);
+                    simd::add_relu_quant(isa, a, b, *relu, *scale, *quantize, &mut dst);
                 }
                 PlanOp::Gap { c, hw } => {
                     let src = ws.bufs[node.src[0]].as_slice();
@@ -624,7 +878,7 @@ impl QuantPlan {
                     m[ni] = dst.iter().fold(m[ni], |acc, &v| acc.max(v));
                 }
             }
-            Self::materialize_da(node, &dst, &mut ws.bufs);
+            Self::materialize_da(node, &dst, &mut ws.bufs, &mut ws.audit, isa);
             ws.bufs[node.dst] = dst;
         }
         std::mem::take(&mut ws.bufs[self.nodes.last().unwrap().dst])
@@ -637,24 +891,20 @@ impl QuantPlan {
         &self,
         x: &[f32],
         batch: usize,
-        ws: &mut Workspace,
+        ws: &mut Scratch,
         pool: &ThreadPool,
     ) -> Vec<f32> {
         assert_eq!(x.len(), batch * self.in_elems, "input size");
-        if ws.bufs.len() < self.n_bufs {
-            ws.bufs.resize_with(self.n_bufs, Vec::new);
-        }
         let jobs_target = pool.threads().max(1) * 2;
+        self.presize(ws, batch, Some(jobs_target));
+        let isa = self.isa;
         for node in self.nodes.iter() {
             let mut dst = std::mem::take(&mut ws.bufs[node.dst]);
-            dst.clear();
-            dst.resize(node.out_elems * batch, 0.0);
+            Scratch::ensure(&mut dst, node.out_elems * batch, &mut ws.audit);
             match &node.op {
                 PlanOp::Input { quantize } => {
                     if *quantize {
-                        for (d, &v) in dst.iter_mut().zip(x) {
-                            *d = round_half_even(v * 255.0) / 255.0;
-                        }
+                        simd::input_quant(isa, x, &mut dst);
                     } else {
                         dst.copy_from_slice(x);
                     }
@@ -664,12 +914,15 @@ impl QuantPlan {
                     let kdim = cp.cin * cp.k * cp.k;
                     let in_elems = cp.cin * cp.hi * cp.wi;
                     let nsrc = cp.srcs.len();
-                    // phase 1: parallel im2col, one panel per (image, view)
-                    ws.panels.clear();
-                    ws.panels.resize(batch * nsrc * kdim * n, 0.0);
-                    {
-                        let bufs = &ws.bufs;
-                        let src_views = node.src_views.as_slice();
+                    let bufs = &ws.bufs;
+                    let src_views = node.src_views.as_slice();
+                    // phase 1: parallel im2col, one panel per (image,
+                    // view) — the direct algorithms read the stored
+                    // activation in place and skip it entirely
+                    if cp.algo == ConvAlgo::Im2col {
+                        Scratch::ensure(
+                            &mut ws.panels, batch * nsrc * kdim * n, &mut ws.audit,
+                        );
                         let items: Vec<(usize, &mut [f32])> =
                             ws.panels.chunks_mut(kdim * n).enumerate().collect();
                         pool.scoped_map(items, |(ci, chunk)| {
@@ -682,12 +935,10 @@ impl QuantPlan {
                             );
                         });
                     }
-                    // phase 2: parallel GEMM + epilogue over channel blocks
-                    let per_image = (jobs_target / batch.max(1)).max(1);
-                    let cc = ((cp.cout + per_image - 1) / per_image).max(1);
-                    let n_jobs = batch * ((cp.cout + cc - 1) / cc);
-                    ws.tiles.clear();
-                    ws.tiles.resize(n_jobs * cc * n, 0.0);
+                    // phase 2: parallel kernel + epilogue over channel
+                    // blocks
+                    let (cc, n_jobs) = conv_tile_shape(cp.cout, batch, jobs_target);
+                    Scratch::ensure(&mut ws.tiles, n_jobs * cc * n, &mut ws.audit);
                     let panels = ws.panels.as_slice();
                     let mut items: Vec<(usize, usize, &mut [f32], &mut [f32])> =
                         Vec::with_capacity(n_jobs);
@@ -707,43 +958,70 @@ impl QuantPlan {
                     pool.scoped_map(items, |(b, co0, chunk, scratch)| {
                         let co1 = (co0 + cc).min(cp.cout);
                         for g in &cp.groups {
-                            let panel = &panels
-                                [(b * nsrc + g.src) * kdim * n
-                                    ..(b * nsrc + g.src + 1) * kdim * n];
                             let r0 = g.rows.partition_point(|&c| c < co0);
                             let r1 = g.rows.partition_point(|&c| c < co1);
                             if r1 == r0 {
                                 continue;
                             }
                             let m = r1 - r0;
-                            gemm_seqk(
-                                &g.w[r0 * kdim..r1 * kdim],
-                                panel,
-                                m,
-                                kdim,
-                                n,
-                                &mut scratch[..m * n],
-                            );
+                            let gw = &g.w[r0 * kdim..r1 * kdim];
+                            let out = &mut scratch[..m * n];
+                            match cp.algo {
+                                ConvAlgo::Im2col => {
+                                    let panel = &panels
+                                        [(b * nsrc + g.src) * kdim * n
+                                            ..(b * nsrc + g.src + 1) * kdim * n];
+                                    simd::gemm(isa, gw, panel, m, kdim, n, out);
+                                }
+                                ConvAlgo::Direct1x1 => {
+                                    let s = bufs[src_views[g.src]].as_slice();
+                                    let img = &s[b * in_elems..(b + 1) * in_elems];
+                                    simd::gemm(isa, gw, img, m, kdim, n, out);
+                                }
+                                ConvAlgo::Direct3x3 => {
+                                    let s = bufs[src_views[g.src]].as_slice();
+                                    let img = &s[b * in_elems..(b + 1) * in_elems];
+                                    simd::conv3x3(
+                                        isa, img, cp.cin, cp.hi, cp.wi, gw, m,
+                                        cp.pad, cp.oh, cp.ow, out,
+                                    );
+                                }
+                            }
                             for r in 0..m {
                                 let co = g.rows[r0 + r];
-                                let crow = &scratch[r * n..(r + 1) * n];
                                 let drow = &mut chunk[(co - co0) * n..(co - co0 + 1) * n];
-                                epilogue(crow, g.bias[r0 + r], cp.relu, cp.act_scale,
-                                         g.bits, drow);
+                                drow.copy_from_slice(&scratch[r * n..(r + 1) * n]);
+                                simd::epilogue(
+                                    isa,
+                                    drow,
+                                    g.bias[r0 + r],
+                                    cp.relu,
+                                    cp.act_scale,
+                                    g.bits,
+                                );
                             }
                         }
                     });
                 }
                 PlanOp::Fc(fp) => {
-                    exec_fc(fp, &ws.bufs, &node.src_views, batch, &mut ws.panel,
-                            &mut ws.cbuf, &mut dst);
+                    exec_fc(
+                        fp,
+                        &ws.bufs,
+                        &node.src_views,
+                        batch,
+                        &mut ws.panel,
+                        &mut ws.cbuf,
+                        &mut ws.audit,
+                        isa,
+                        &mut dst,
+                    );
                 }
                 PlanOp::Dw(dp) => {
                     let src = ws.bufs[node.src[0]].as_slice();
                     let n = dp.oh * dp.ow;
-                    let per_image = (jobs_target / batch.max(1)).max(1);
-                    let cc = ((dp.c + per_image - 1) / per_image).max(1);
-                    let mut items: Vec<(usize, usize, &mut [f32])> = Vec::new();
+                    let (cc, n_jobs) = conv_tile_shape(dp.c, batch, jobs_target);
+                    let mut items: Vec<(usize, usize, &mut [f32])> =
+                        Vec::with_capacity(n_jobs);
                     for (b, img) in dst.chunks_mut(dp.c * n).enumerate() {
                         for (cb, chunk) in img.chunks_mut(cc * n).enumerate() {
                             items.push((b, cb * cc, chunk));
@@ -752,44 +1030,39 @@ impl QuantPlan {
                     pool.scoped_map(items, |(b, c0, chunk)| {
                         let c1 = (c0 + cc).min(dp.c);
                         for (j, ch) in (c0..c1).enumerate() {
-                            dw_channel(dp, src, b, ch, &mut chunk[j * n..(j + 1) * n]);
+                            dw_channel(dp, src, b, ch, isa, &mut chunk[j * n..(j + 1) * n]);
                         }
                     });
                 }
                 PlanOp::Add { relu, scale, quantize } => {
                     let a = ws.bufs[node.src[0]].as_slice();
                     let b = ws.bufs[node.src[1]].as_slice();
-                    exec_add(a, b, *relu, *scale, *quantize, &mut dst);
+                    simd::add_relu_quant(isa, a, b, *relu, *scale, *quantize, &mut dst);
                 }
                 PlanOp::Gap { c, hw } => {
                     let src = ws.bufs[node.src[0]].as_slice();
                     exec_gap(src, batch, *c, *hw, &mut dst);
                 }
             }
-            Self::materialize_da(node, &dst, &mut ws.bufs);
+            Self::materialize_da(node, &dst, &mut ws.bufs, &mut ws.audit, isa);
             ws.bufs[node.dst] = dst;
         }
         std::mem::take(&mut ws.bufs[self.nodes.last().unwrap().dst])
     }
 }
 
-/// Fused bias + ReLU + output-grid quantization over one channel row.
+/// Shared (exec, presize) tiling geometry for the pooled conv/dw path:
+/// channel-block size and total job count for `cout` channels over
+/// `batch` images aiming at `jobs_target` jobs.
 #[inline]
-fn epilogue(acc: &[f32], bias: f32, relu: bool, act_scale: f32, bits: u32, dst: &mut [f32]) {
-    if act_scale > 0.0 {
-        for (d, &v) in dst.iter_mut().zip(acc) {
-            let t = v + bias;
-            let t = if relu { t.max(0.0) } else { t };
-            *d = quant_act(t, act_scale, bits);
-        }
-    } else {
-        for (d, &v) in dst.iter_mut().zip(acc) {
-            let t = v + bias;
-            *d = if relu { t.max(0.0) } else { t };
-        }
-    }
+fn conv_tile_shape(cout: usize, batch: usize, jobs_target: usize) -> (usize, usize) {
+    let per_image = (jobs_target / batch.max(1)).max(1);
+    let cc = ((cout + per_image - 1) / per_image).max(1);
+    let n_jobs = batch * ((cout + cc - 1) / cc);
+    (cc, n_jobs)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn exec_conv(
     cp: &ConvP,
     bufs: &[Vec<f32>],
@@ -797,38 +1070,53 @@ fn exec_conv(
     batch: usize,
     panel: &mut Vec<f32>,
     cbuf: &mut Vec<f32>,
+    audit: &mut usize,
+    isa: Isa,
     dst: &mut [f32],
 ) {
     let n = cp.oh * cp.ow;
     let kdim = cp.cin * cp.k * cp.k;
     let in_elems = cp.cin * cp.hi * cp.wi;
-    panel.clear();
-    panel.resize(kdim * n, 0.0);
+    if cp.algo == ConvAlgo::Im2col {
+        Scratch::ensure(panel, kdim * n, audit);
+    }
     for b in 0..batch {
         // one im2col per (image, view): groups sharing a view (e.g. two
         // plain-reading units) reuse the panel
         for si in 0..cp.srcs.len() {
             let s = bufs[src_views[si]].as_slice();
-            im2col(
-                &s[b * in_elems..(b + 1) * in_elems],
-                cp.cin, cp.hi, cp.wi, cp.k, cp.stride, cp.pad, cp.oh, cp.ow, panel,
-            );
+            let img = &s[b * in_elems..(b + 1) * in_elems];
+            if cp.algo == ConvAlgo::Im2col {
+                im2col(
+                    img, cp.cin, cp.hi, cp.wi, cp.k, cp.stride, cp.pad, cp.oh,
+                    cp.ow, panel,
+                );
+            }
             for g in cp.groups.iter().filter(|g| g.src == si) {
                 let m = g.rows.len();
-                cbuf.clear();
-                cbuf.resize(m * n, 0.0);
-                gemm_seqk(&g.w, panel, m, kdim, n, cbuf);
+                Scratch::ensure(cbuf, m * n, audit);
+                match cp.algo {
+                    ConvAlgo::Im2col => simd::gemm(isa, &g.w, panel, m, kdim, n, cbuf),
+                    // the im2col panel would be a verbatim copy of the
+                    // image, so the GEMM reads the activation directly
+                    ConvAlgo::Direct1x1 => simd::gemm(isa, &g.w, img, m, kdim, n, cbuf),
+                    ConvAlgo::Direct3x3 => simd::conv3x3(
+                        isa, img, cp.cin, cp.hi, cp.wi, &g.w, m, cp.pad, cp.oh,
+                        cp.ow, cbuf,
+                    ),
+                }
                 for (r, &co) in g.rows.iter().enumerate() {
-                    let crow = &cbuf[r * n..(r + 1) * n];
                     let drow =
                         &mut dst[(b * cp.cout + co) * n..(b * cp.cout + co + 1) * n];
-                    epilogue(crow, g.bias[r], cp.relu, cp.act_scale, g.bits, drow);
+                    drow.copy_from_slice(&cbuf[r * n..(r + 1) * n]);
+                    simd::epilogue(isa, drow, g.bias[r], cp.relu, cp.act_scale, g.bits);
                 }
             }
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn exec_fc(
     fp: &FcP,
     bufs: &[Vec<f32>],
@@ -836,19 +1124,19 @@ fn exec_fc(
     batch: usize,
     panel: &mut Vec<f32>,
     cbuf: &mut Vec<f32>,
+    audit: &mut usize,
+    isa: Isa,
     dst: &mut [f32],
 ) {
-    panel.clear();
-    panel.resize(fp.cin * batch, 0.0);
+    Scratch::ensure(panel, fp.cin * batch, audit);
     // one transpose per view; groups sharing a view reuse the panel
     for si in 0..fp.srcs.len() {
         let s = bufs[src_views[si]].as_slice();
         transpose_into(s, batch, fp.cin, panel);
         for g in fp.groups.iter().filter(|g| g.src == si) {
             let m = g.rows.len();
-            cbuf.clear();
-            cbuf.resize(m * batch, 0.0);
-            gemm_seqk(&g.w, panel, m, fp.cin, batch, cbuf);
+            Scratch::ensure(cbuf, m * batch, audit);
+            simd::gemm(isa, &g.w, panel, m, fp.cin, batch, cbuf);
             for (r, &co) in g.rows.iter().enumerate() {
                 for b in 0..batch {
                     // logits stay float (no relu / no output grid)
@@ -860,35 +1148,31 @@ fn exec_fc(
 }
 
 #[inline]
-fn dw_channel(dp: &DwP, src: &[f32], b: usize, ch: usize, drow: &mut [f32]) {
+fn dw_channel(dp: &DwP, src: &[f32], b: usize, ch: usize, isa: Isa, drow: &mut [f32]) {
     let ie = dp.hi * dp.wi;
     let xs = &src[(b * dp.c + ch) * ie..(b * dp.c + ch + 1) * ie];
-    dwconv_one(
-        xs, dp.hi, dp.wi, &dp.w[ch * dp.k * dp.k..(ch + 1) * dp.k * dp.k], dp.k,
-        dp.stride, dp.pad, dp.oh, dp.ow, drow,
+    simd::dwconv(
+        isa, xs, dp.hi, dp.wi, &dp.w[ch * dp.k * dp.k..(ch + 1) * dp.k * dp.k],
+        dp.k, dp.stride, dp.pad, dp.oh, dp.ow, drow,
     );
-    for v in drow.iter_mut() {
-        let t = *v + dp.bias[ch];
-        let t = if dp.relu { t.max(0.0) } else { t };
-        *v = if dp.act_scale > 0.0 { quant_act(t, dp.act_scale, dp.obits) } else { t };
-    }
+    simd::epilogue(isa, drow, dp.bias[ch], dp.relu, dp.act_scale, dp.obits);
 }
 
-fn exec_dw(dp: &DwP, src: &[f32], batch: usize, c0: usize, c1: usize, dst: &mut [f32]) {
+fn exec_dw(
+    dp: &DwP,
+    src: &[f32],
+    batch: usize,
+    c0: usize,
+    c1: usize,
+    isa: Isa,
+    dst: &mut [f32],
+) {
     let n = dp.oh * dp.ow;
     for b in 0..batch {
         for ch in c0..c1 {
             let drow = &mut dst[(b * dp.c + ch) * n..(b * dp.c + ch + 1) * n];
-            dw_channel(dp, src, b, ch, drow);
+            dw_channel(dp, src, b, ch, isa, drow);
         }
-    }
-}
-
-fn exec_add(a: &[f32], b: &[f32], relu: bool, scale: f32, quantize: bool, dst: &mut [f32]) {
-    for (i, d) in dst.iter_mut().enumerate() {
-        let v = a[i] + b[i];
-        let v = if relu { v.max(0.0) } else { v };
-        *d = if quantize { quant_act(v, scale, 8) } else { v };
     }
 }
 
@@ -912,12 +1196,45 @@ mod tests {
         let g = tinycnn();
         let uniform = Mapping::uniform(&g, DIG);
         let mixed = synth_mapping_n(&g, 2, 3);
-        let k = |model: &str, plat: &str, m: &Mapping| QuantPlan::cache_key(model, plat, m);
+        let k = |model: &str, plat: &str, m: &Mapping| {
+            QuantPlan::cache_key(model, plat, m, KernelBackend::Scalar)
+        };
         // identical inputs -> identical keys (the cache-hit contract)
         assert_eq!(k("tinycnn", "diana", &uniform), k("tinycnn", "diana", &uniform));
         // any coordinate change -> a different key
         assert_ne!(k("tinycnn", "diana", &uniform), k("tinycnn", "diana", &mixed));
         assert_ne!(k("tinycnn", "diana", &uniform), k("resnet20", "diana", &uniform));
         assert_ne!(k("tinycnn", "diana", &uniform), k("tinycnn", "mpsoc4", &uniform));
+        // backend is part of the key: Simd resolves to a non-scalar ISA
+        // (a vector unit or the portable chunked fallback), so scalar-
+        // and SIMD-compiled plans can never collide in a cache
+        assert_ne!(
+            QuantPlan::cache_key("tinycnn", "diana", &uniform, KernelBackend::Scalar),
+            QuantPlan::cache_key("tinycnn", "diana", &uniform, KernelBackend::Simd),
+        );
+    }
+
+    #[test]
+    fn conv_algo_choice_respects_geometry() {
+        // heuristic picks
+        assert_eq!(ConvAlgo::choose(1, 1, 0, 16, 8, 8, None), ConvAlgo::Direct1x1);
+        assert_eq!(ConvAlgo::choose(3, 1, 1, 16, 8, 8, None), ConvAlgo::Direct3x3);
+        assert_eq!(ConvAlgo::choose(3, 2, 1, 16, 8, 8, None), ConvAlgo::Im2col);
+        assert_eq!(ConvAlgo::choose(5, 1, 2, 16, 8, 8, None), ConvAlgo::Im2col);
+        // above the cache-residency cap the 3x3 path falls back
+        assert_eq!(ConvAlgo::choose(3, 1, 1, 64, 64, 64, None), ConvAlgo::Im2col);
+        // force overrides the size cap but never geometry eligibility
+        assert_eq!(
+            ConvAlgo::choose(3, 1, 1, 64, 64, 64, Some(ConvAlgo::Direct3x3)),
+            ConvAlgo::Direct3x3
+        );
+        assert_eq!(
+            ConvAlgo::choose(5, 1, 2, 16, 8, 8, Some(ConvAlgo::Direct3x3)),
+            ConvAlgo::Im2col
+        );
+        assert_eq!(
+            ConvAlgo::choose(1, 1, 0, 16, 8, 8, Some(ConvAlgo::Im2col)),
+            ConvAlgo::Im2col
+        );
     }
 }

@@ -16,6 +16,12 @@
 //! the reference graph. The planned engine reproduces this path
 //! bit-for-bit (identical per-element accumulation order), so the
 //! differential tolerance in tests is a safety margin, not slack.
+//!
+//! The same ascending-k, separate-mul-add order is the anchor for the
+//! SIMD backends too (`quant::simd`, no-FMA contract): scalar, AVX2,
+//! NEON and the portable fallback all reduce to this interpreter's
+//! arithmetic, which is what lets `tests/kernel_differential.rs` pin
+//! backend equality with `assert_eq!` rather than a tolerance.
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,1468 @@
+//! Runtime-dispatched SIMD micro-kernels for the quantized engine.
+//!
+//! The engine's hot loops — the cache-blocked GEMM, the depthwise
+//! convolution, the direct 3x3 convolution, and the element-wise
+//! quantize / clamp / D-A passes — each exist in up to four
+//! implementations behind one [`Isa`] dispatch:
+//!
+//!   * `scalar`  — the original register-tiled kernels in
+//!     [`super::gemm`], kept verbatim as the differential oracle;
+//!   * `avx2`    — x86_64 `std::arch` 8-lane kernels, selected at
+//!     runtime via `is_x86_feature_detected!("avx2")`;
+//!   * `neon`    — aarch64 4-lane mirrors of the AVX2 kernels;
+//!   * `portable`— fixed-width chunked scalar loops (the compiler's
+//!     autovectorizer handles them) for `--kernels simd` on hosts
+//!     where no hand-written kernel exists.
+//!
+//! # Bit-exactness contract
+//!
+//! Every SIMD kernel is bit-identical to its scalar counterpart, up to
+//! the sign of zero (see below), on finite inputs:
+//!
+//!   * **No FMA.** Accumulation uses separate multiply + add
+//!     (`_mm256_add_ps(acc, _mm256_mul_ps(..))`, `vaddq_f32` +
+//!     `vmulq_f32`) so no intermediate is kept at extended precision.
+//!     Vectorization is across *independent outputs* only; every
+//!     output element accumulates its K products in the same strictly
+//!     ascending order as the scalar kernel and the `quant::ref`
+//!     oracle.
+//!   * **Same rounding.** `super::round_half_even` is IEEE
+//!     round-to-nearest-even, which is exactly `_mm256_round_ps` with
+//!     `_MM_FROUND_TO_NEAREST_INT` (and `vrndnq_f32` on aarch64).
+//!     Divisions stay divisions (`_mm256_div_ps`) — never a
+//!     reciprocal-multiply.
+//!   * **Sign of zero.** `f32::clamp(-0.0, 0.0, 1.0)` keeps `-0.0`
+//!     while the vector `max(min(x, 1), 0)` form returns `+0.0`; both
+//!     compare equal and the difference cannot propagate into any
+//!     nonzero magnitude, so outputs are equal under `==` everywhere
+//!     (`assert_eq!` on `f32` treats `-0.0 == 0.0` as equal).
+//!
+//! The knob users see is [`KernelBackend`]; plans resolve it to an
+//! [`Isa`] once at compile time and the resolved ISA is folded into
+//! [`super::QuantPlan::cache_key`] so caches never mix backends.
+
+use anyhow::anyhow;
+
+use super::gemm::{dwconv_one, gemm_seqk};
+use super::{da_q, quant_act, round_half_even};
+
+/// Portable-fallback chunk width (f32 lanes per inner loop trip).
+const CHUNK: usize = 8;
+
+/// Which kernel family the engine compiles against — the `--kernels`
+/// CLI knob, threaded through
+/// [`SessionBuilder::kernels`](crate::api::SessionBuilder::kernels).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// The scalar register-tiled kernels (the differential oracle).
+    Scalar,
+    /// Explicit SIMD: AVX2 / NEON when available, else the portable
+    /// chunked fallback.
+    Simd,
+    /// SIMD when the host supports it, scalar otherwise (default).
+    #[default]
+    Auto,
+}
+
+impl KernelBackend {
+    /// Canonical lowercase name (the CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+            KernelBackend::Auto => "auto",
+        }
+    }
+
+    /// Resolve the knob to a concrete [`Isa`] on this host.
+    ///
+    /// `Scalar` always resolves to `Isa::Scalar`. `Simd` resolves to
+    /// the best detected vector ISA, falling back to `Isa::Portable`
+    /// (never scalar — the explicit-SIMD request is honored with the
+    /// chunked kernels). `Auto` resolves like `Simd` but falls back to
+    /// `Isa::Scalar`; the env var `ODIMO_KERNELS=scalar|simd` overrides
+    /// `Auto` only (an explicit backend always wins), which is how the
+    /// CI matrix runs the whole tier-1 suite per backend.
+    pub fn resolve(self) -> Isa {
+        match self {
+            KernelBackend::Scalar => Isa::Scalar,
+            KernelBackend::Simd => detect().unwrap_or(Isa::Portable),
+            KernelBackend::Auto => match env_override() {
+                Some(KernelBackend::Scalar) => Isa::Scalar,
+                Some(KernelBackend::Simd) => detect().unwrap_or(Isa::Portable),
+                _ => detect().unwrap_or(Isa::Scalar),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KernelBackend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "simd" => Ok(KernelBackend::Simd),
+            "auto" => Ok(KernelBackend::Auto),
+            other => Err(anyhow!(
+                "unknown kernel backend '{other}' (expected scalar|simd|auto)"
+            )),
+        }
+    }
+}
+
+/// A concrete kernel implementation, resolved once per compiled plan.
+/// `Avx2` / `Neon` are only ever constructed on a host where the
+/// feature was positively detected (see [`KernelBackend::resolve`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Scalar register-tiled kernels.
+    Scalar,
+    /// x86_64 AVX2 8-lane kernels.
+    Avx2,
+    /// aarch64 NEON 4-lane kernels.
+    Neon,
+    /// Chunked autovectorizable fallback.
+    Portable,
+}
+
+impl Isa {
+    /// Stable one-byte code, folded into plan cache keys.
+    pub fn code(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2 => 1,
+            Isa::Neon => 2,
+            Isa::Portable => 3,
+        }
+    }
+
+    /// Lowercase name for reports and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Portable => "portable",
+        }
+    }
+}
+
+fn env_override() -> Option<KernelBackend> {
+    std::env::var("ODIMO_KERNELS").ok()?.parse().ok()
+}
+
+/// Best vector ISA on this host, or `None` when only scalar/portable
+/// kernels apply.
+fn detect() -> Option<Isa> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Some(Isa::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is baseline on aarch64 (std already requires it).
+        return Some(Isa::Neon);
+    }
+    #[allow(unreachable_code)]
+    None
+}
+
+// ---------------------------------------------------------------------
+// dispatchers
+// ---------------------------------------------------------------------
+
+/// `C = A * B` with the engine's reduction-order contract (see
+/// [`super::gemm::gemm_seqk`]); `a` is m x k, `b` is k x n, `c` is
+/// m x n, all row-major.
+pub fn gemm(isa: Isa, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    match isa {
+        Isa::Scalar => gemm_seqk(a, b, m, k, n, c),
+        Isa::Portable => portable::gemm(a, b, m, k, n, c),
+        _ => accel::gemm(a, b, m, k, n, c),
+    }
+}
+
+/// One depthwise channel (see [`super::gemm::dwconv_one`]).
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv(
+    isa: Isa,
+    x: &[f32],
+    hi: usize,
+    wi: usize,
+    w: &[f32],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    match isa {
+        Isa::Scalar => dwconv_one(x, hi, wi, w, k, stride, pad, oh, ow, out),
+        Isa::Portable => portable::dwconv(x, hi, wi, w, k, stride, pad, oh, ow, out),
+        _ => accel::dwconv(x, hi, wi, w, k, stride, pad, oh, ow, out),
+    }
+}
+
+/// Direct 3x3 stride-1 convolution: `m` filter rows (each cin x 3 x 3,
+/// the packed-group weight layout) over one NCHW image, no im2col
+/// panel. Accumulation order per output is (ci, ky, kx) with
+/// out-of-bounds taps skipped — bit-identical (up to the sign of zero)
+/// to lowering through `im2col` + [`gemm`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3(
+    isa: Isa,
+    x: &[f32],
+    cin: usize,
+    hi: usize,
+    wi: usize,
+    w: &[f32],
+    m: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(x.len() >= cin * hi * wi);
+    debug_assert!(w.len() >= m * cin * 9);
+    debug_assert!(out.len() >= m * oh * ow);
+    match isa {
+        Isa::Scalar => conv3x3_scalar(x, cin, hi, wi, w, m, pad, oh, ow, out),
+        Isa::Portable => portable::conv3x3(x, cin, hi, wi, w, m, pad, oh, ow, out),
+        _ => accel::conv3x3(x, cin, hi, wi, w, m, pad, oh, ow, out),
+    }
+}
+
+/// Input-grid quantization: `dst[i] = rne(x[i] * 255) / 255`.
+pub(crate) fn input_quant(isa: Isa, x: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(x.len(), dst.len());
+    match isa {
+        Isa::Scalar => input_quant_scalar(x, dst),
+        Isa::Portable => portable::input_quant(x, dst),
+        _ => accel::input_quant(x, dst),
+    }
+}
+
+/// Fused bias + ReLU + output-grid quantization, in place over one
+/// channel row (`act_scale <= 0` = float/calibration mode: bias+ReLU
+/// only).
+pub(crate) fn epilogue(
+    isa: Isa,
+    buf: &mut [f32],
+    bias: f32,
+    relu: bool,
+    act_scale: f32,
+    bits: u32,
+) {
+    match isa {
+        Isa::Scalar => epilogue_scalar(buf, bias, relu, act_scale, bits),
+        Isa::Portable => portable::epilogue(buf, bias, relu, act_scale, bits),
+        _ => accel::epilogue(buf, bias, relu, act_scale, bits),
+    }
+}
+
+/// Residual-add + ReLU + optional 8-bit requantization.
+pub(crate) fn add_relu_quant(
+    isa: Isa,
+    a: &[f32],
+    b: &[f32],
+    relu: bool,
+    scale: f32,
+    quantize: bool,
+    dst: &mut [f32],
+) {
+    debug_assert!(a.len() >= dst.len() && b.len() >= dst.len());
+    match isa {
+        Isa::Scalar => add_scalar(a, b, relu, scale, quantize, dst),
+        Isa::Portable => portable::add_relu_quant(a, b, relu, scale, quantize, dst),
+        _ => accel::add_relu_quant(a, b, relu, scale, quantize, dst),
+    }
+}
+
+/// Materialize a D/A view: `dst[i] = da_q(src[i], bits)`.
+pub(crate) fn da_q_into(isa: Isa, src: &[f32], bits: u32, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    match isa {
+        Isa::Scalar => da_scalar(src, bits, dst),
+        Isa::Portable => portable::da_q_into(src, bits, dst),
+        _ => accel::da_q_into(src, bits, dst),
+    }
+}
+
+// ---------------------------------------------------------------------
+// scalar element-wise bodies (also the vector kernels' remainder tails)
+// ---------------------------------------------------------------------
+
+/// One epilogue element — the single definition every backend's scalar
+/// tail shares with the pure-scalar path.
+#[inline]
+fn epi1(v: f32, bias: f32, relu: bool, act_scale: f32, bits: u32) -> f32 {
+    let t = v + bias;
+    let t = if relu { t.max(0.0) } else { t };
+    if act_scale > 0.0 {
+        quant_act(t, act_scale, bits)
+    } else {
+        t
+    }
+}
+
+fn epilogue_scalar(buf: &mut [f32], bias: f32, relu: bool, act_scale: f32, bits: u32) {
+    for v in buf.iter_mut() {
+        *v = epi1(*v, bias, relu, act_scale, bits);
+    }
+}
+
+fn input_quant_scalar(x: &[f32], dst: &mut [f32]) {
+    for (d, &v) in dst.iter_mut().zip(x) {
+        *d = round_half_even(v * 255.0) / 255.0;
+    }
+}
+
+fn add_scalar(a: &[f32], b: &[f32], relu: bool, scale: f32, quantize: bool, dst: &mut [f32]) {
+    for (i, d) in dst.iter_mut().enumerate() {
+        let v = a[i] + b[i];
+        let v = if relu { v.max(0.0) } else { v };
+        *d = if quantize { quant_act(v, scale, 8) } else { v };
+    }
+}
+
+fn da_scalar(src: &[f32], bits: u32, dst: &mut [f32]) {
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = da_q(v, bits);
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared direct-conv scalar bodies
+// ---------------------------------------------------------------------
+
+/// Interior output rectangle for a 3x3 stride-1 conv: every tap in
+/// bounds (same derivation as `dwconv_one`'s interior split).
+fn interior3(
+    hi: usize,
+    wi: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+) -> (usize, usize, usize, usize) {
+    let oy0 = pad.min(oh);
+    let oy1 = if hi + pad >= 3 { (hi + pad - 2).min(oh) } else { oy0 };
+    let ox0 = pad.min(ow);
+    let ox1 = if wi + pad >= 3 { (wi + pad - 2).min(ow) } else { ox0 };
+    (oy0, oy1, ox0, ox1)
+}
+
+/// One border output point of a 3x3 stride-1 conv for one filter row
+/// `wr` (cin x 3 x 3): checked taps in (ci, ky, kx) order, skipping
+/// out-of-bounds — the oracle's reduction order.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_point(
+    x: &[f32],
+    cin: usize,
+    hi: usize,
+    wi: usize,
+    wr: &[f32],
+    pad: usize,
+    oy: usize,
+    ox: usize,
+) -> f32 {
+    let mut acc = 0f32;
+    for ci in 0..cin {
+        let xc = &x[ci * hi * wi..(ci + 1) * hi * wi];
+        let wc = &wr[ci * 9..(ci + 1) * 9];
+        for ky in 0..3 {
+            let iy = (oy + ky) as isize - pad as isize;
+            if iy < 0 || iy >= hi as isize {
+                continue;
+            }
+            for kx in 0..3 {
+                let ix = (ox + kx) as isize - pad as isize;
+                if ix < 0 || ix >= wi as isize {
+                    continue;
+                }
+                acc += xc[iy as usize * wi + ix as usize] * wc[ky * 3 + kx];
+            }
+        }
+    }
+    acc
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_scalar(
+    x: &[f32],
+    cin: usize,
+    hi: usize,
+    wi: usize,
+    w: &[f32],
+    m: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    let n = oh * ow;
+    let (oy0, oy1, ox0, ox1) = interior3(hi, wi, pad, oh, ow);
+    for r in 0..m {
+        let wr = &w[r * cin * 9..(r + 1) * cin * 9];
+        for oy in 0..oh {
+            let interior_y = (oy0..oy1).contains(&oy);
+            for ox in 0..ow {
+                let acc = if interior_y && (ox0..ox1).contains(&ox) {
+                    let iy = oy - pad;
+                    let ix = ox - pad;
+                    let mut acc = 0f32;
+                    for ci in 0..cin {
+                        let xc = &x[ci * hi * wi..];
+                        let wc = &wr[ci * 9..(ci + 1) * 9];
+                        for ky in 0..3 {
+                            let base = (iy + ky) * wi + ix;
+                            let xrow = &xc[base..base + 3];
+                            for kx in 0..3 {
+                                acc += xrow[kx] * wc[ky * 3 + kx];
+                            }
+                        }
+                    }
+                    acc
+                } else {
+                    conv3x3_point(x, cin, hi, wi, wr, pad, oy, ox)
+                };
+                out[r * n + oy * ow + ox] = acc;
+            }
+        }
+    }
+}
+
+/// One checked depthwise output point (the scalar body of
+/// `dwconv_one`'s border branch; the vector kernels use it for borders
+/// and non-unit strides).
+#[allow(clippy::too_many_arguments)]
+fn dw_point(
+    x: &[f32],
+    hi: usize,
+    wi: usize,
+    w: &[f32],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oy: usize,
+    ox: usize,
+) -> f32 {
+    let mut acc = 0f32;
+    for ky in 0..k {
+        let iy = (oy * stride + ky) as isize - pad as isize;
+        if iy < 0 || iy >= hi as isize {
+            continue;
+        }
+        for kx in 0..k {
+            let ix = (ox * stride + kx) as isize - pad as isize;
+            if ix < 0 || ix >= wi as isize {
+                continue;
+            }
+            acc += x[iy as usize * wi + ix as usize] * w[ky * k + kx];
+        }
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// portable: fixed-width chunks the autovectorizer can lower
+// ---------------------------------------------------------------------
+
+mod portable {
+    use super::CHUNK;
+
+    pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        // gemm_seqk is already register-tiled in autovectorizable form
+        super::gemm_seqk(a, b, m, k, n, c);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn dwconv(
+        x: &[f32],
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        k: usize,
+        stride: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        super::dwconv_one(x, hi, wi, w, k, stride, pad, oh, ow, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3x3(
+        x: &[f32],
+        cin: usize,
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        m: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        super::conv3x3_scalar(x, cin, hi, wi, w, m, pad, oh, ow, out);
+    }
+
+    pub fn input_quant(x: &[f32], dst: &mut [f32]) {
+        let mut it = dst.chunks_exact_mut(CHUNK);
+        let mut xs = x.chunks_exact(CHUNK);
+        for (d, s) in (&mut it).zip(&mut xs) {
+            super::input_quant_scalar(s, d);
+        }
+        super::input_quant_scalar(xs.remainder(), it.into_remainder());
+    }
+
+    pub fn epilogue(buf: &mut [f32], bias: f32, relu: bool, act_scale: f32, bits: u32) {
+        let mut it = buf.chunks_exact_mut(CHUNK);
+        for ch in &mut it {
+            super::epilogue_scalar(ch, bias, relu, act_scale, bits);
+        }
+        super::epilogue_scalar(it.into_remainder(), bias, relu, act_scale, bits);
+    }
+
+    pub fn add_relu_quant(
+        a: &[f32],
+        b: &[f32],
+        relu: bool,
+        scale: f32,
+        quantize: bool,
+        dst: &mut [f32],
+    ) {
+        let nl = dst.len() / CHUNK * CHUNK;
+        let mut i = 0;
+        while i < nl {
+            super::add_scalar(
+                &a[i..i + CHUNK],
+                &b[i..i + CHUNK],
+                relu,
+                scale,
+                quantize,
+                &mut dst[i..i + CHUNK],
+            );
+            i += CHUNK;
+        }
+        super::add_scalar(
+            &a[nl..dst.len()],
+            &b[nl..dst.len()],
+            relu,
+            scale,
+            quantize,
+            &mut dst[nl..],
+        );
+    }
+
+    pub fn da_q_into(src: &[f32], bits: u32, dst: &mut [f32]) {
+        let mut it = dst.chunks_exact_mut(CHUNK);
+        let mut xs = src.chunks_exact(CHUNK);
+        for (d, s) in (&mut it).zip(&mut xs) {
+            super::da_scalar(s, bits, d);
+        }
+        super::da_scalar(xs.remainder(), bits, it.into_remainder());
+    }
+}
+
+// ---------------------------------------------------------------------
+// accel: the arch-specific module `_ =>` dispatch arms resolve to.
+// `Isa::Avx2` / `Isa::Neon` are only constructed on the matching arch
+// after positive runtime detection, so each wrapper's feature
+// precondition holds by construction.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod accel {
+    use super::avx2;
+
+    pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        unsafe { avx2::gemm(a, b, m, k, n, c) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn dwconv(
+        x: &[f32],
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        k: usize,
+        stride: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        unsafe { avx2::dwconv(x, hi, wi, w, k, stride, pad, oh, ow, out) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3x3(
+        x: &[f32],
+        cin: usize,
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        m: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        unsafe { avx2::conv3x3(x, cin, hi, wi, w, m, pad, oh, ow, out) }
+    }
+
+    pub fn input_quant(x: &[f32], dst: &mut [f32]) {
+        unsafe { avx2::input_quant(x, dst) }
+    }
+
+    pub fn epilogue(buf: &mut [f32], bias: f32, relu: bool, act_scale: f32, bits: u32) {
+        unsafe { avx2::epilogue(buf, bias, relu, act_scale, bits) }
+    }
+
+    pub fn add_relu_quant(
+        a: &[f32],
+        b: &[f32],
+        relu: bool,
+        scale: f32,
+        quantize: bool,
+        dst: &mut [f32],
+    ) {
+        unsafe { avx2::add_relu_quant(a, b, relu, scale, quantize, dst) }
+    }
+
+    pub fn da_q_into(src: &[f32], bits: u32, dst: &mut [f32]) {
+        unsafe { avx2::da_q_into(src, bits, dst) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod accel {
+    use super::neon;
+
+    pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        unsafe { neon::gemm(a, b, m, k, n, c) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn dwconv(
+        x: &[f32],
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        k: usize,
+        stride: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        unsafe { neon::dwconv(x, hi, wi, w, k, stride, pad, oh, ow, out) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3x3(
+        x: &[f32],
+        cin: usize,
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        m: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        unsafe { neon::conv3x3(x, cin, hi, wi, w, m, pad, oh, ow, out) }
+    }
+
+    pub fn input_quant(x: &[f32], dst: &mut [f32]) {
+        unsafe { neon::input_quant(x, dst) }
+    }
+
+    pub fn epilogue(buf: &mut [f32], bias: f32, relu: bool, act_scale: f32, bits: u32) {
+        unsafe { neon::epilogue(buf, bias, relu, act_scale, bits) }
+    }
+
+    pub fn add_relu_quant(
+        a: &[f32],
+        b: &[f32],
+        relu: bool,
+        scale: f32,
+        quantize: bool,
+        dst: &mut [f32],
+    ) {
+        unsafe { neon::add_relu_quant(a, b, relu, scale, quantize, dst) }
+    }
+
+    pub fn da_q_into(src: &[f32], bits: u32, dst: &mut [f32]) {
+        unsafe { neon::da_q_into(src, bits, dst) }
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod accel {
+    // no hand-written kernels for this arch: resolve() never yields
+    // Avx2/Neon here, and Simd falls back to Portable
+    pub use super::portable::*;
+}
+
+// ---------------------------------------------------------------------
+// AVX2 (x86_64, runtime-detected)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    #![allow(clippy::missing_safety_doc)] // mod-private: callers are the
+                                          // `accel` wrappers above, whose
+                                          // precondition is documented
+
+    use std::arch::x86_64::*;
+
+    use crate::quant::gemm::{edge_rows, MR, NB, NR};
+    use crate::quant::simd::{
+        add_scalar, da_scalar, dw_point, epilogue_scalar, input_quant_scalar, interior3,
+    };
+
+    const RNE: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+    /// AVX2 mirror of `gemm_seqk`: same NB/MR/NR blocking, same strict
+    /// ascending-k accumulation per output, separate mul + add (no FMA)
+    /// so every partial sum is bit-identical to the scalar kernel.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * k);
+        debug_assert!(b.len() >= k * n);
+        debug_assert!(c.len() >= m * n);
+        let mut j0 = 0;
+        while j0 < n {
+            let jn = (j0 + NB).min(n);
+            let mut i0 = 0;
+            while i0 + MR <= m {
+                let mut j = j0;
+                while j + NR <= jn {
+                    micro(a, b, i0, j, k, n, c);
+                    j += NR;
+                }
+                if j < jn {
+                    edge_rows(a, b, i0, MR, j, jn, k, n, c);
+                }
+                i0 += MR;
+            }
+            if i0 < m {
+                edge_rows(a, b, i0, m - i0, j0, jn, k, n, c);
+            }
+            j0 = jn;
+        }
+    }
+
+    /// MR x NR tile: 2 ymm accumulators per row, broadcast-A x load-B.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro(a: &[f32], b: &[f32], i0: usize, j0: usize, k: usize, n: usize, c: &mut [f32]) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for p in 0..k {
+            let b0 = _mm256_loadu_ps(bp.add(p * n + j0));
+            let b1 = _mm256_loadu_ps(bp.add(p * n + j0 + 8));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*ap.add((i0 + r) * k + p));
+                accr[0] = _mm256_add_ps(accr[0], _mm256_mul_ps(av, b0));
+                accr[1] = _mm256_add_ps(accr[1], _mm256_mul_ps(av, b1));
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let cp = c.as_mut_ptr().add((i0 + r) * n + j0);
+            _mm256_storeu_ps(cp, accr[0]);
+            _mm256_storeu_ps(cp.add(8), accr[1]);
+        }
+    }
+
+    /// Depthwise conv: 8-lane interior for stride 1, checked scalar
+    /// taps for borders and other strides (same tap order everywhere).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dwconv(
+        x: &[f32],
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        k: usize,
+        stride: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert!(x.len() >= hi * wi);
+        debug_assert!(w.len() >= k * k);
+        debug_assert!(out.len() >= oh * ow);
+        let oy0 = ((pad + stride - 1) / stride).min(oh);
+        let oy1 = if hi + pad >= k { ((hi + pad - k) / stride + 1).min(oh) } else { oy0 };
+        let ox0 = ((pad + stride - 1) / stride).min(ow);
+        let ox1 = if wi + pad >= k { ((wi + pad - k) / stride + 1).min(ow) } else { ox0 };
+        for oy in 0..oh {
+            let interior_y = stride == 1 && oy >= oy0 && oy < oy1;
+            let mut ox = 0;
+            while ox < ow {
+                if interior_y && ox >= ox0 && ox + 8 <= ox1 {
+                    let iy = oy - pad;
+                    let ix = ox - pad;
+                    let mut acc = _mm256_setzero_ps();
+                    for ky in 0..k {
+                        let rowp = x.as_ptr().add((iy + ky) * wi + ix);
+                        let wrow = w.as_ptr().add(ky * k);
+                        for kx in 0..k {
+                            let wv = _mm256_set1_ps(*wrow.add(kx));
+                            let xv = _mm256_loadu_ps(rowp.add(kx));
+                            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+                        }
+                    }
+                    _mm256_storeu_ps(out.as_mut_ptr().add(oy * ow + ox), acc);
+                    ox += 8;
+                } else {
+                    out[oy * ow + ox] = dw_point(x, hi, wi, w, k, stride, pad, oy, ox);
+                    ox += 1;
+                }
+            }
+        }
+    }
+
+    /// Direct 3x3 stride-1 conv: 8 output pixels per step, taps in
+    /// (ci, ky, kx) order, checked scalar borders.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conv3x3(
+        x: &[f32],
+        cin: usize,
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        m: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        let n = oh * ow;
+        let (oy0, oy1, ox0, ox1) = interior3(hi, wi, pad, oh, ow);
+        for r in 0..m {
+            let wr = &w[r * cin * 9..(r + 1) * cin * 9];
+            for oy in 0..oh {
+                let interior_y = oy >= oy0 && oy < oy1;
+                let mut ox = 0;
+                while ox < ow {
+                    if interior_y && ox >= ox0 && ox + 8 <= ox1 {
+                        let iy = oy - pad;
+                        let ix = ox - pad;
+                        let mut acc = _mm256_setzero_ps();
+                        for ci in 0..cin {
+                            let xp = x.as_ptr().add(ci * hi * wi);
+                            let wc = wr.as_ptr().add(ci * 9);
+                            for ky in 0..3 {
+                                let rowp = xp.add((iy + ky) * wi + ix);
+                                for kx in 0..3 {
+                                    let wv = _mm256_set1_ps(*wc.add(ky * 3 + kx));
+                                    let xv = _mm256_loadu_ps(rowp.add(kx));
+                                    acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+                                }
+                            }
+                        }
+                        _mm256_storeu_ps(out.as_mut_ptr().add(r * n + oy * ow + ox), acc);
+                        ox += 8;
+                    } else {
+                        out[r * n + oy * ow + ox] =
+                            super::conv3x3_point(x, cin, hi, wi, wr, pad, oy, ox);
+                        ox += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn input_quant(x: &[f32], dst: &mut [f32]) {
+        let v255 = _mm256_set1_ps(255.0);
+        let nl = x.len() / 8 * 8;
+        let mut i = 0;
+        while i < nl {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let r = _mm256_round_ps::<RNE>(_mm256_mul_ps(v, v255));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_div_ps(r, v255));
+            i += 8;
+        }
+        input_quant_scalar(&x[nl..], &mut dst[nl..]);
+    }
+
+    /// Quantize one lane group to the act grid: exact op-for-op mirror
+    /// of `quant_act` (div, clamp via min/max, rne, scale-back).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn qact(
+        t: __m256,
+        vscale: __m256,
+        vlev: __m256,
+        vout: __m256,
+        one: __m256,
+        zero: __m256,
+    ) -> __m256 {
+        let q = _mm256_max_ps(_mm256_min_ps(_mm256_div_ps(t, vscale), one), zero);
+        let r = _mm256_round_ps::<RNE>(_mm256_mul_ps(vlev, q));
+        _mm256_mul_ps(vout, r)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn epilogue(buf: &mut [f32], bias: f32, relu: bool, act_scale: f32, bits: u32) {
+        let nl = buf.len() / 8 * 8;
+        let vb = _mm256_set1_ps(bias);
+        let zero = _mm256_setzero_ps();
+        if act_scale > 0.0 {
+            let levels = ((1u32 << bits) - 1) as f32;
+            let vscale = _mm256_set1_ps(act_scale);
+            let vlev = _mm256_set1_ps(levels);
+            let vout = _mm256_set1_ps(act_scale / levels);
+            let one = _mm256_set1_ps(1.0);
+            let mut i = 0;
+            while i < nl {
+                let p = buf.as_mut_ptr().add(i);
+                let mut t = _mm256_add_ps(_mm256_loadu_ps(p), vb);
+                if relu {
+                    t = _mm256_max_ps(t, zero);
+                }
+                _mm256_storeu_ps(p, qact(t, vscale, vlev, vout, one, zero));
+                i += 8;
+            }
+        } else {
+            let mut i = 0;
+            while i < nl {
+                let p = buf.as_mut_ptr().add(i);
+                let mut t = _mm256_add_ps(_mm256_loadu_ps(p), vb);
+                if relu {
+                    t = _mm256_max_ps(t, zero);
+                }
+                _mm256_storeu_ps(p, t);
+                i += 8;
+            }
+        }
+        epilogue_scalar(&mut buf[nl..], bias, relu, act_scale, bits);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_relu_quant(
+        a: &[f32],
+        b: &[f32],
+        relu: bool,
+        scale: f32,
+        quantize: bool,
+        dst: &mut [f32],
+    ) {
+        let n = dst.len();
+        let nl = n / 8 * 8;
+        let zero = _mm256_setzero_ps();
+        let levels = 255.0f32; // quantize path is always 8-bit
+        let vscale = _mm256_set1_ps(scale);
+        let vlev = _mm256_set1_ps(levels);
+        let vout = _mm256_set1_ps(scale / levels);
+        let one = _mm256_set1_ps(1.0);
+        let mut i = 0;
+        while i < nl {
+            let mut v = _mm256_add_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            if relu {
+                v = _mm256_max_ps(v, zero);
+            }
+            if quantize {
+                v = qact(v, vscale, vlev, vout, one, zero);
+            }
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        add_scalar(&a[nl..n], &b[nl..n], relu, scale, quantize, &mut dst[nl..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn da_q_into(src: &[f32], bits: u32, dst: &mut [f32]) {
+        let levels = ((1u32 << bits) - 1) as f32;
+        let vlev = _mm256_set1_ps(levels);
+        let one = _mm256_set1_ps(1.0);
+        let zero = _mm256_setzero_ps();
+        let nl = src.len() / 8 * 8;
+        let mut i = 0;
+        while i < nl {
+            let v = _mm256_loadu_ps(src.as_ptr().add(i));
+            let q = _mm256_max_ps(_mm256_min_ps(v, one), zero);
+            let r = _mm256_round_ps::<RNE>(_mm256_mul_ps(q, vlev));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_div_ps(r, vlev));
+            i += 8;
+        }
+        da_scalar(&src[nl..], bits, &mut dst[nl..]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (aarch64; baseline feature)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    #![allow(clippy::missing_safety_doc)]
+
+    use std::arch::aarch64::*;
+
+    use crate::quant::gemm::{edge_rows, MR, NB, NR};
+    use crate::quant::simd::{
+        add_scalar, da_scalar, dw_point, epilogue_scalar, input_quant_scalar, interior3,
+    };
+
+    /// NEON mirror of `gemm_seqk`: same blocking, mul + add (no FMA).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * k);
+        debug_assert!(b.len() >= k * n);
+        debug_assert!(c.len() >= m * n);
+        let mut j0 = 0;
+        while j0 < n {
+            let jn = (j0 + NB).min(n);
+            let mut i0 = 0;
+            while i0 + MR <= m {
+                let mut j = j0;
+                while j + NR <= jn {
+                    micro(a, b, i0, j, k, n, c);
+                    j += NR;
+                }
+                if j < jn {
+                    edge_rows(a, b, i0, MR, j, jn, k, n, c);
+                }
+                i0 += MR;
+            }
+            if i0 < m {
+                edge_rows(a, b, i0, m - i0, j0, jn, k, n, c);
+            }
+            j0 = jn;
+        }
+    }
+
+    /// MR x NR tile: 4 q-regs per row (NR = 16 = 4 x 4 lanes).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn micro(a: &[f32], b: &[f32], i0: usize, j0: usize, k: usize, n: usize, c: &mut [f32]) {
+        let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for p in 0..k {
+            let base = bp.add(p * n + j0);
+            let b0 = vld1q_f32(base);
+            let b1 = vld1q_f32(base.add(4));
+            let b2 = vld1q_f32(base.add(8));
+            let b3 = vld1q_f32(base.add(12));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = vdupq_n_f32(*ap.add((i0 + r) * k + p));
+                accr[0] = vaddq_f32(accr[0], vmulq_f32(av, b0));
+                accr[1] = vaddq_f32(accr[1], vmulq_f32(av, b1));
+                accr[2] = vaddq_f32(accr[2], vmulq_f32(av, b2));
+                accr[3] = vaddq_f32(accr[3], vmulq_f32(av, b3));
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let cp = c.as_mut_ptr().add((i0 + r) * n + j0);
+            vst1q_f32(cp, accr[0]);
+            vst1q_f32(cp.add(4), accr[1]);
+            vst1q_f32(cp.add(8), accr[2]);
+            vst1q_f32(cp.add(12), accr[3]);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dwconv(
+        x: &[f32],
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        k: usize,
+        stride: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert!(x.len() >= hi * wi);
+        debug_assert!(w.len() >= k * k);
+        debug_assert!(out.len() >= oh * ow);
+        let oy0 = ((pad + stride - 1) / stride).min(oh);
+        let oy1 = if hi + pad >= k { ((hi + pad - k) / stride + 1).min(oh) } else { oy0 };
+        let ox0 = ((pad + stride - 1) / stride).min(ow);
+        let ox1 = if wi + pad >= k { ((wi + pad - k) / stride + 1).min(ow) } else { ox0 };
+        for oy in 0..oh {
+            let interior_y = stride == 1 && oy >= oy0 && oy < oy1;
+            let mut ox = 0;
+            while ox < ow {
+                if interior_y && ox >= ox0 && ox + 4 <= ox1 {
+                    let iy = oy - pad;
+                    let ix = ox - pad;
+                    let mut acc = vdupq_n_f32(0.0);
+                    for ky in 0..k {
+                        let rowp = x.as_ptr().add((iy + ky) * wi + ix);
+                        let wrow = w.as_ptr().add(ky * k);
+                        for kx in 0..k {
+                            let wv = vdupq_n_f32(*wrow.add(kx));
+                            let xv = vld1q_f32(rowp.add(kx));
+                            acc = vaddq_f32(acc, vmulq_f32(wv, xv));
+                        }
+                    }
+                    vst1q_f32(out.as_mut_ptr().add(oy * ow + ox), acc);
+                    ox += 4;
+                } else {
+                    out[oy * ow + ox] = dw_point(x, hi, wi, w, k, stride, pad, oy, ox);
+                    ox += 1;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn conv3x3(
+        x: &[f32],
+        cin: usize,
+        hi: usize,
+        wi: usize,
+        w: &[f32],
+        m: usize,
+        pad: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        let n = oh * ow;
+        let (oy0, oy1, ox0, ox1) = interior3(hi, wi, pad, oh, ow);
+        for r in 0..m {
+            let wr = &w[r * cin * 9..(r + 1) * cin * 9];
+            for oy in 0..oh {
+                let interior_y = oy >= oy0 && oy < oy1;
+                let mut ox = 0;
+                while ox < ow {
+                    if interior_y && ox >= ox0 && ox + 4 <= ox1 {
+                        let iy = oy - pad;
+                        let ix = ox - pad;
+                        let mut acc = vdupq_n_f32(0.0);
+                        for ci in 0..cin {
+                            let xp = x.as_ptr().add(ci * hi * wi);
+                            let wc = wr.as_ptr().add(ci * 9);
+                            for ky in 0..3 {
+                                let rowp = xp.add((iy + ky) * wi + ix);
+                                for kx in 0..3 {
+                                    let wv = vdupq_n_f32(*wc.add(ky * 3 + kx));
+                                    let xv = vld1q_f32(rowp.add(kx));
+                                    acc = vaddq_f32(acc, vmulq_f32(wv, xv));
+                                }
+                            }
+                        }
+                        vst1q_f32(out.as_mut_ptr().add(r * n + oy * ow + ox), acc);
+                        ox += 4;
+                    } else {
+                        out[r * n + oy * ow + ox] =
+                            super::conv3x3_point(x, cin, hi, wi, wr, pad, oy, ox);
+                        ox += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn input_quant(x: &[f32], dst: &mut [f32]) {
+        let v255 = vdupq_n_f32(255.0);
+        let nl = x.len() / 4 * 4;
+        let mut i = 0;
+        while i < nl {
+            let v = vld1q_f32(x.as_ptr().add(i));
+            let r = vrndnq_f32(vmulq_f32(v, v255));
+            vst1q_f32(dst.as_mut_ptr().add(i), vdivq_f32(r, v255));
+            i += 4;
+        }
+        input_quant_scalar(&x[nl..], &mut dst[nl..]);
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn qact(
+        t: float32x4_t,
+        vscale: float32x4_t,
+        vlev: float32x4_t,
+        vout: float32x4_t,
+        one: float32x4_t,
+        zero: float32x4_t,
+    ) -> float32x4_t {
+        let q = vmaxq_f32(vminq_f32(vdivq_f32(t, vscale), one), zero);
+        let r = vrndnq_f32(vmulq_f32(vlev, q));
+        vmulq_f32(vout, r)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn epilogue(buf: &mut [f32], bias: f32, relu: bool, act_scale: f32, bits: u32) {
+        let nl = buf.len() / 4 * 4;
+        let vb = vdupq_n_f32(bias);
+        let zero = vdupq_n_f32(0.0);
+        if act_scale > 0.0 {
+            let levels = ((1u32 << bits) - 1) as f32;
+            let vscale = vdupq_n_f32(act_scale);
+            let vlev = vdupq_n_f32(levels);
+            let vout = vdupq_n_f32(act_scale / levels);
+            let one = vdupq_n_f32(1.0);
+            let mut i = 0;
+            while i < nl {
+                let p = buf.as_mut_ptr().add(i);
+                let mut t = vaddq_f32(vld1q_f32(p), vb);
+                if relu {
+                    t = vmaxq_f32(t, zero);
+                }
+                vst1q_f32(p, qact(t, vscale, vlev, vout, one, zero));
+                i += 4;
+            }
+        } else {
+            let mut i = 0;
+            while i < nl {
+                let p = buf.as_mut_ptr().add(i);
+                let mut t = vaddq_f32(vld1q_f32(p), vb);
+                if relu {
+                    t = vmaxq_f32(t, zero);
+                }
+                vst1q_f32(p, t);
+                i += 4;
+            }
+        }
+        epilogue_scalar(&mut buf[nl..], bias, relu, act_scale, bits);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_relu_quant(
+        a: &[f32],
+        b: &[f32],
+        relu: bool,
+        scale: f32,
+        quantize: bool,
+        dst: &mut [f32],
+    ) {
+        let n = dst.len();
+        let nl = n / 4 * 4;
+        let zero = vdupq_n_f32(0.0);
+        let levels = 255.0f32;
+        let vscale = vdupq_n_f32(scale);
+        let vlev = vdupq_n_f32(levels);
+        let vout = vdupq_n_f32(scale / levels);
+        let one = vdupq_n_f32(1.0);
+        let mut i = 0;
+        while i < nl {
+            let mut v = vaddq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            if relu {
+                v = vmaxq_f32(v, zero);
+            }
+            if quantize {
+                v = qact(v, vscale, vlev, vout, one, zero);
+            }
+            vst1q_f32(dst.as_mut_ptr().add(i), v);
+            i += 4;
+        }
+        add_scalar(&a[nl..n], &b[nl..n], relu, scale, quantize, &mut dst[nl..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn da_q_into(src: &[f32], bits: u32, dst: &mut [f32]) {
+        let levels = ((1u32 << bits) - 1) as f32;
+        let vlev = vdupq_n_f32(levels);
+        let one = vdupq_n_f32(1.0);
+        let zero = vdupq_n_f32(0.0);
+        let nl = src.len() / 4 * 4;
+        let mut i = 0;
+        while i < nl {
+            let v = vld1q_f32(src.as_ptr().add(i));
+            let q = vmaxq_f32(vminq_f32(v, one), zero);
+            let r = vrndnq_f32(vmulq_f32(q, vlev));
+            vst1q_f32(dst.as_mut_ptr().add(i), vdivq_f32(r, vlev));
+            i += 4;
+        }
+        da_scalar(&src[nl..], bits, &mut dst[nl..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gemm::im2col;
+    use crate::util::prng::Pcg32;
+
+    /// Every ISA exercisable on this host: scalar + portable always,
+    /// plus whatever `detect()` finds.
+    fn isas() -> Vec<Isa> {
+        let mut v = vec![Isa::Scalar, Isa::Portable];
+        if let Some(i) = detect() {
+            v.push(i);
+        }
+        v
+    }
+
+    fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn backend_parse_and_display_roundtrip() {
+        for b in [KernelBackend::Scalar, KernelBackend::Simd, KernelBackend::Auto] {
+            assert_eq!(b.name().parse::<KernelBackend>().unwrap(), b);
+            assert_eq!(format!("{b}").as_str(), b.name());
+        }
+        assert!("avx9000".parse::<KernelBackend>().is_err());
+    }
+
+    #[test]
+    fn resolve_contract() {
+        assert_eq!(KernelBackend::Scalar.resolve(), Isa::Scalar);
+        // Simd never silently degrades to the scalar kernels
+        assert_ne!(KernelBackend::Simd.resolve(), Isa::Scalar);
+        // codes are distinct (the cache-key fold relies on this)
+        let codes: Vec<u8> =
+            [Isa::Scalar, Isa::Avx2, Isa::Neon, Isa::Portable].iter().map(|i| i.code()).collect();
+        let mut dedup = codes.clone();
+        dedup.dedup();
+        assert_eq!(codes, dedup);
+    }
+
+    #[test]
+    fn gemm_matches_scalar_on_ragged_shapes() {
+        // m/n/k deliberately off the 4/16/8-lane grid
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 16, 16),
+            (5, 27, 33),
+            (13, 100, 37),
+            (17, 64, 300),
+            (8, 9, 130),
+            (16, 288, 64),
+        ];
+        for isa in isas() {
+            let mut rng = Pcg32::new(11, 3);
+            for &(m, k, n) in &shapes {
+                let a = rand_vec(&mut rng, m * k);
+                let b = rand_vec(&mut rng, k * n);
+                let mut want = vec![0f32; m * n];
+                gemm_seqk(&a, &b, m, k, n, &mut want);
+                let mut got = vec![0f32; m * n];
+                gemm(isa, &a, &b, m, k, n, &mut got);
+                assert_eq!(got, want, "{} m={m} k={k} n={n}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_matches_scalar() {
+        for isa in isas() {
+            let mut rng = Pcg32::new(21, 2);
+            for &(hi, wi, k, stride, pad) in &[
+                (8usize, 8usize, 3usize, 1usize, 1usize),
+                (13, 11, 3, 1, 1),
+                (7, 9, 3, 2, 1),
+                (5, 5, 5, 1, 2),
+                (4, 4, 3, 1, 0),
+                (3, 3, 3, 1, 2),
+            ] {
+                let oh = (hi + 2 * pad - k) / stride + 1;
+                let ow = (wi + 2 * pad - k) / stride + 1;
+                let x = rand_vec(&mut rng, hi * wi);
+                let w = rand_vec(&mut rng, k * k);
+                let mut want = vec![0f32; oh * ow];
+                dwconv_one(&x, hi, wi, &w, k, stride, pad, oh, ow, &mut want);
+                let mut got = vec![0f32; oh * ow];
+                dwconv(isa, &x, hi, wi, &w, k, stride, pad, oh, ow, &mut got);
+                assert_eq!(got, want, "{} hw=({hi},{wi}) k={k} s={stride}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn conv3x3_matches_im2col_gemm() {
+        for isa in isas() {
+            let mut rng = Pcg32::new(5, 9);
+            for &(cin, hi, wi, pad, m) in &[
+                (3usize, 8usize, 8usize, 1usize, 4usize),
+                (1, 5, 7, 1, 3),
+                (4, 6, 6, 0, 5),
+                (2, 9, 5, 1, 1),
+                (2, 19, 13, 1, 2),
+            ] {
+                let oh = hi + 2 * pad - 2;
+                let ow = wi + 2 * pad - 2;
+                let n = oh * ow;
+                let kdim = cin * 9;
+                let x = rand_vec(&mut rng, cin * hi * wi);
+                let w = rand_vec(&mut rng, m * kdim);
+                let mut panel = vec![0f32; kdim * n];
+                im2col(&x, cin, hi, wi, 3, 1, pad, oh, ow, &mut panel);
+                let mut want = vec![0f32; m * n];
+                gemm_seqk(&w, &panel, m, kdim, n, &mut want);
+                let mut got = vec![0f32; m * n];
+                conv3x3(isa, &x, cin, hi, wi, &w, m, pad, oh, ow, &mut got);
+                assert_eq!(got, want, "{} cin={cin} hw=({hi},{wi}) p={pad}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar() {
+        let mut rng = Pcg32::new(7, 5);
+        // length off the lane grid; include exact rounding ties
+        // (v * 255 = k + 0.5) so RNE behavior is actually pinned
+        let mut x = rand_vec(&mut rng, 203);
+        for (i, v) in x.iter_mut().enumerate().take(40) {
+            *v = (2 * i + 1) as f32 / 510.0;
+        }
+        let y = rand_vec(&mut rng, 203);
+        for isa in isas() {
+            let mut want = vec![0f32; x.len()];
+            input_quant_scalar(&x, &mut want);
+            let mut got = vec![0f32; x.len()];
+            input_quant(isa, &x, &mut got);
+            assert_eq!(got, want, "{} input_quant", isa.name());
+
+            for (act_scale, bits) in [(0.73f32, 8u32), (1.31, 4), (0.2, 2), (0.0, 8)] {
+                for relu in [false, true] {
+                    let mut want = x.clone();
+                    epilogue_scalar(&mut want, 0.11, relu, act_scale, bits);
+                    let mut got = x.clone();
+                    epilogue(isa, &mut got, 0.11, relu, act_scale, bits);
+                    assert_eq!(got, want, "{} epilogue s={act_scale} b={bits}", isa.name());
+                }
+            }
+
+            for quantize in [false, true] {
+                let mut want = vec![0f32; x.len()];
+                add_scalar(&x, &y, true, 0.9, quantize, &mut want);
+                let mut got = vec![0f32; x.len()];
+                add_relu_quant(isa, &x, &y, true, 0.9, quantize, &mut got);
+                assert_eq!(got, want, "{} add q={quantize}", isa.name());
+            }
+
+            for bits in [2u32, 6, 7, 8] {
+                let mut want = vec![0f32; x.len()];
+                da_scalar(&x, bits, &mut want);
+                let mut got = vec![0f32; x.len()];
+                da_q_into(isa, &x, bits, &mut got);
+                assert_eq!(got, want, "{} da_q bits={bits}", isa.name());
+            }
+        }
+    }
+}

@@ -222,7 +222,7 @@ mod tests {
     use super::*;
     use crate::hw::Platform;
     use crate::model::tinycnn;
-    use crate::quant::{synth_mapping_n, synth_params, ParamSet, QuantPlan};
+    use crate::quant::{synth_mapping_n, synth_params, KernelBackend, ParamSet, QuantPlan};
 
     fn req(id: u64, arrival: u64, point: usize) -> Request {
         Request { id, arrival, sla: Sla::MinEnergy, point }
@@ -281,7 +281,7 @@ mod tests {
         let maps: Vec<_> = (0..3u64).map(|s| synth_mapping_n(&g, 2, s)).collect();
         let keys: Vec<u64> = maps
             .iter()
-            .map(|m| QuantPlan::cache_key(&g.name, &p.name, m))
+            .map(|m| QuantPlan::cache_key(&g.name, &p.name, m, KernelBackend::Auto))
             .collect();
         let mut cache = PlanCache::new(2);
         for (k, m) in keys.iter().zip(&maps) {

@@ -33,6 +33,13 @@ use crate::util::json::Json;
 /// accounting fields (`faults_injected` … `degraded_p95_ms`).
 pub const SERVE_SCHEMA: u32 = 2;
 
+/// Additive revision within [`SERVE_SCHEMA`]: minor bumps add optional
+/// fields that old readers may ignore and old files may lack. v2.1
+/// added the run-level queue-wait / engine-compute latency split
+/// (`mean_queue_ms`, `mean_compute_ms`); loaders default both to 0
+/// when reading a v2.0 file.
+pub const SERVE_SCHEMA_MINOR: u32 = 1;
+
 /// One served request, in virtual time.
 #[derive(Clone, Copy, Debug)]
 pub struct RequestOutcome {
@@ -177,6 +184,16 @@ impl ServeMetrics {
             } else {
                 self.outcomes.iter().filter(|o| o.sla_met).count() as f64 / n as f64
             },
+            mean_queue_ms: if n == 0 {
+                0.0
+            } else {
+                to_ms(self.outcomes.iter().map(|o| o.queue_cycles).sum::<u64>()) / n as f64
+            },
+            mean_compute_ms: if n == 0 {
+                0.0
+            } else {
+                to_ms(self.outcomes.iter().map(|o| o.compute_cycles).sum::<u64>()) / n as f64
+            },
             throughput_img_s: if wall_s > 0.0 { n as f64 / wall_s } else { 0.0 },
             sim_energy_uj: self.outcomes.iter().map(|o| o.energy_uj).sum(),
             plan_hits: self.plan_hits,
@@ -249,6 +266,13 @@ pub struct ServeReport {
     pub p95_ms: f64,
     /// Fraction of requests that met their SLA.
     pub sla_hit_rate: f64,
+    /// Mean per-request queue wait (batching + device contention), ms.
+    /// Added in v2.1; excluded from [`ServeReport::deterministic_digest`]
+    /// so v2.0 and v2.1 reports of the same run digest identically.
+    pub mean_queue_ms: f64,
+    /// Mean per-request batch compute latency, ms. Added in v2.1;
+    /// excluded from the digest for the same reason as `mean_queue_ms`.
+    pub mean_compute_ms: f64,
     /// Engine throughput over wall-clock compute time, img/s.
     pub throughput_img_s: f64,
     /// Total simulated energy, uJ.
@@ -305,6 +329,11 @@ impl ServeReport {
         );
         let _ = writeln!(
             s,
+            "latency split: queue wait mean {:.3} ms | engine compute mean {:.3} ms",
+            self.mean_queue_ms, self.mean_compute_ms
+        );
+        let _ = writeln!(
+            s,
             "plan cache: {} hits / {} misses | compile {:.2} ms",
             self.plan_hits, self.plan_misses, self.plan_compile_ms
         );
@@ -358,6 +387,11 @@ impl ServeReport {
     /// legitimately differ between identical runs. Two serve runs with
     /// the same model, platform, seed, opts and fault plan produce
     /// equal digests regardless of thread count or machine load.
+    ///
+    /// The v2.1 latency-split fields (`mean_queue_ms`,
+    /// `mean_compute_ms`) are also excluded: they are derived from the
+    /// already-digested outcome stream, and excluding them keeps v2.0
+    /// and v2.1 reports of the same run digest-compatible.
     pub fn deterministic_digest(&self) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         let mut eat = |bytes: &[u8]| {
@@ -422,6 +456,9 @@ impl ServeReport {
             ("p50_ms", Json::num(self.p50_ms)),
             ("p95_ms", Json::num(self.p95_ms)),
             ("sla_hit_rate", Json::num(self.sla_hit_rate)),
+            ("schema_minor", Json::num(SERVE_SCHEMA_MINOR as f64)),
+            ("mean_queue_ms", Json::num(self.mean_queue_ms)),
+            ("mean_compute_ms", Json::num(self.mean_compute_ms)),
             ("throughput_img_s", Json::num(self.throughput_img_s)),
             ("sim_energy_uj", Json::num(self.sim_energy_uj)),
             ("plan_hits", Json::num(self.plan_hits as f64)),
@@ -466,6 +503,9 @@ impl ServeReport {
             p50_ms: v.req_f64("p50_ms")?,
             p95_ms: v.req_f64("p95_ms")?,
             sla_hit_rate: v.req_f64("sla_hit_rate")?,
+            // v2.1 additions: lenient so v2.0 files still load
+            mean_queue_ms: v.get("mean_queue_ms").and_then(|j| j.as_f64()).unwrap_or(0.0),
+            mean_compute_ms: v.get("mean_compute_ms").and_then(|j| j.as_f64()).unwrap_or(0.0),
             throughput_img_s: v.req_f64("throughput_img_s")?,
             sim_energy_uj: v.req_f64("sim_energy_uj")?,
             plan_hits: v.req_f64("plan_hits")? as u64,
@@ -564,6 +604,10 @@ mod tests {
         assert_eq!(back.rows[0].label, "x");
         assert_eq!(back.plan_hits, 3);
         assert!((back.p95_ms - rep.p95_ms).abs() < 1e-12);
+        // v2.1 latency split survives the roundtrip
+        assert!(rep.mean_queue_ms > 0.0 && rep.mean_compute_ms > 0.0);
+        assert!((back.mean_queue_ms - rep.mean_queue_ms).abs() < 1e-12);
+        assert!((back.mean_compute_ms - rep.mean_compute_ms).abs() < 1e-12);
         assert_eq!(back.dashboard(), rep.dashboard());
         assert_eq!(back.deterministic_digest(), rep.deterministic_digest());
     }
@@ -600,6 +644,9 @@ mod tests {
         other.throughput_img_s += 123.0;
         other.plan_compile_ms += 9.0;
         other.threads = 8;
+        // v2.1 split fields are derived, not digested
+        other.mean_queue_ms += 1.0;
+        other.mean_compute_ms += 1.0;
         assert_eq!(other.deterministic_digest(), rep.deterministic_digest());
         other.shed_requests += 1;
         assert_ne!(other.deterministic_digest(), rep.deterministic_digest());

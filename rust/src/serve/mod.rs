@@ -62,7 +62,7 @@ use crate::data::synth::gen_sample;
 use crate::hw::faults::FaultPlan;
 use crate::hw::Platform;
 use crate::model::Graph;
-use crate::quant::{ParamSet, QuantNet, QuantPlan};
+use crate::quant::{KernelBackend, ParamSet, QuantNet, QuantPlan};
 use crate::util::pool::ThreadPool;
 use crate::util::prng::Pcg32;
 
@@ -278,6 +278,7 @@ fn exec_batch(
     stats: &mut ServeMetrics,
     device_free: &mut u64,
     retry: &mut RetryState,
+    backend: KernelBackend,
 ) -> Result<()> {
     let fp = &tracker.points[batch.point];
     let platform = tracker.platform_for(batch.point);
@@ -311,7 +312,7 @@ fn exec_batch(
         let cls = (r.id % graph.classes as u64) as u32;
         x.extend_from_slice(&gen_sample(seed, 1, r.id, cls, h, w));
     }
-    let key = QuantPlan::cache_key(&graph.name, &platform.name, &fp.mapping);
+    let key = QuantPlan::cache_key(&graph.name, &platform.name, &fp.mapping, backend);
     // engine wall time excludes plan compilation: compile cost is
     // tracked separately by the cache (and reported as its own
     // dashboard line), so img/s measures steady-state compute only
@@ -319,7 +320,7 @@ fn exec_batch(
     let t0 = Instant::now();
     {
         let net = cache.get_or_compile(key, &fp.mapping, || {
-            QuantNet::compile_params(params, graph, &fp.mapping, platform)
+            QuantNet::compile_params_backend(params, graph, &fp.mapping, platform, backend)
         })?;
         let y = net.forward_pool(&x, bsz, pool)?;
         std::hint::black_box(&y);
@@ -379,6 +380,7 @@ pub(crate) fn run_serve(
     opts: &ServeOpts,
     n_requests: usize,
     seed: u64,
+    backend: KernelBackend,
 ) -> Result<ServeReport> {
     if frontier.is_empty() {
         return Err(ServeError::EmptyFrontier {
@@ -427,6 +429,7 @@ pub(crate) fn run_serve(
                     &mut stats,
                     &mut device_free,
                     &mut retry,
+                    backend,
                 )?;
             }
             continue;
@@ -464,6 +467,7 @@ pub(crate) fn run_serve(
                                     &mut stats,
                                     &mut device_free,
                                     &mut retry,
+                                    backend,
                                 )?;
                             }
                         }
@@ -527,6 +531,7 @@ pub(crate) fn run_serve(
                                 &mut stats,
                                 &mut device_free,
                                 &mut retry,
+                                backend,
                             )?;
                         }
                     }
@@ -560,6 +565,7 @@ pub(crate) fn run_serve(
                         &mut stats,
                         &mut device_free,
                         &mut retry,
+                        backend,
                     )?;
                 }
             }

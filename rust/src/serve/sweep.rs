@@ -40,7 +40,7 @@ use crate::exp::store;
 use crate::hw::soc::{simulate, SocConfig};
 use crate::hw::Platform;
 use crate::model::Graph;
-use crate::quant::{synth_params_on, ParamSet, QuantNet, QuantPlan, Workspace};
+use crate::quant::{synth_params_on, ParamSet, QuantNet, QuantPlan, Scratch};
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 
@@ -192,9 +192,11 @@ pub fn sweep_frontier(
     }
     let (names, values) = synth_params_on(graph, platform, cfg.seed);
     let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
-    // float reference logits, computed once for every candidate
+    // float reference logits, computed once for every candidate. The
+    // accuracy proxy is backend-invariant: every kernel backend is
+    // bit-identical, so the frontier never needs a per-backend sweep.
     let float_plan = QuantPlan::compile_float(&params, graph)?;
-    let mut ws = Workspace::new();
+    let mut ws = Scratch::new();
     let yf = float_plan.run_block(&x, calib, &mut ws, None);
 
     let n_acc = platform.n_acc();

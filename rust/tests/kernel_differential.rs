@@ -1,0 +1,218 @@
+//! SIMD-vs-scalar differential suite for the kernel backends.
+//!
+//! The no-FMA contract (docs/ARCHITECTURE.md §Kernels) makes every
+//! backend bit-exact against the scalar reference loops: SIMD lanes
+//! vectorize across *independent outputs* while each reduction walks k
+//! in the same ascending order with separate mul+add rounding. These
+//! tests pin that contract with `assert_eq!` (not a tolerance) across
+//! every bundled model, three platforms, ragged GEMM shapes, thread
+//! counts, and the direct-vs-im2col convolution paths — plus the
+//! panel-reuse guarantee: zero scratch heap allocations in steady
+//! state.
+
+use odimo::hw::Platform;
+use odimo::model::{mbv1_025, resnet18s, resnet20, tinycnn, Graph};
+use odimo::quant::simd;
+use odimo::quant::{
+    synth_mapping, synth_mapping_n, synth_params, synth_params_on, ConvAlgo, Isa, KernelBackend,
+    ParamSet, QuantNet,
+};
+use odimo::util::pool::ThreadPool;
+use odimo::util::prng::Pcg32;
+
+fn random_input(g: &Graph, batch: usize, seed: u64) -> Vec<f32> {
+    let (c, h, w) = g.input_shape;
+    let mut rng = Pcg32::new(seed, 77);
+    (0..batch * c * h * w).map(|_| rng.next_f32()).collect()
+}
+
+fn compile(
+    g: &Graph,
+    p: &Platform,
+    params: &ParamSet<'_>,
+    mapping: &odimo::coordinator::Mapping,
+    backend: KernelBackend,
+) -> QuantNet {
+    QuantNet::compile_params_backend(params, g, mapping, p, backend).unwrap()
+}
+
+#[test]
+fn simd_matches_scalar_on_every_bundled_model() {
+    // all four bundled models on diana; big models at batch 1 to keep
+    // the suite quick, small ones with a real batch
+    for (g, batch, seed) in [
+        (tinycnn(), 4usize, 1001u64),
+        (resnet20(), 2, 1002),
+        (resnet18s(), 1, 1003),
+        (mbv1_025(), 1, 1004),
+    ] {
+        let p = Platform::diana();
+        let (names, values) = synth_params(&g, seed);
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+        let mapping = synth_mapping(&g, seed ^ 7);
+        let x = random_input(&g, batch, seed ^ 13);
+        let scalar = compile(&g, &p, &params, &mapping, KernelBackend::Scalar);
+        let fast = compile(&g, &p, &params, &mapping, KernelBackend::Simd);
+        assert_eq!(scalar.isa(), Isa::Scalar);
+        assert_ne!(fast.isa(), Isa::Scalar, "{}: Simd must not resolve to Scalar", g.name);
+        let want = scalar.forward(&x, batch).unwrap();
+        let got = fast.forward(&x, batch).unwrap();
+        assert_eq!(got, want, "{}: {:?} diverged from scalar", g.name, fast.isa());
+    }
+}
+
+#[test]
+fn simd_matches_scalar_on_gap9_and_mpsoc4() {
+    // gap9 has no D/A unit; mpsoc4 carries two distinct D/A widths, so
+    // the per-width view materialization runs through the SIMD D/A pass
+    let g = tinycnn();
+    for (p, n_acc, seed) in [(Platform::gap9(), 2usize, 2001u64), (Platform::mpsoc4(), 4, 2002)] {
+        let (names, values) = synth_params_on(&g, &p, seed);
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+        let x = random_input(&g, 3, seed ^ 5);
+        for ms in [31u64, 32, 33] {
+            let mapping = synth_mapping_n(&g, n_acc, ms);
+            let scalar = compile(&g, &p, &params, &mapping, KernelBackend::Scalar);
+            let fast = compile(&g, &p, &params, &mapping, KernelBackend::Simd);
+            let want = scalar.forward(&x, 3).unwrap();
+            let got = fast.forward(&x, 3).unwrap();
+            assert_eq!(got, want, "{}/{ms}: simd diverged from scalar", p.name);
+        }
+    }
+}
+
+#[test]
+fn backends_deterministic_across_thread_counts() {
+    // every pooled execution mode (plain, batch-block, channel-tiled)
+    // must be bit-identical across backends *and* thread counts
+    let g = resnet20();
+    let (names, values) = synth_params(&g, 3003);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let mapping = synth_mapping(&g, 35);
+    let p = Platform::diana();
+    let x = random_input(&g, 4, 3007);
+    let scalar = compile(&g, &p, &params, &mapping, KernelBackend::Scalar);
+    let fast = compile(&g, &p, &params, &mapping, KernelBackend::Simd);
+    let want = scalar.forward(&x, 4).unwrap();
+    assert_eq!(fast.forward(&x, 4).unwrap(), want);
+    for threads in [1usize, 2, 8] {
+        let pool = ThreadPool::new(threads);
+        for (engine, tag) in [(&scalar, "scalar"), (&fast, "simd")] {
+            let got = engine.forward_pool(&x, 4, &pool).unwrap();
+            assert_eq!(got, want, "{tag} x {threads} threads diverged");
+        }
+    }
+}
+
+#[test]
+fn direct_conv_paths_match_im2col() {
+    // resnet20 is full of 3x3 stride-1 convs (Direct3x3); mbv1_025's
+    // pointwise layers are 1x1 stride-1 pad-0 (Direct1x1). Forcing
+    // Im2col everywhere must not change a single bit, on either backend.
+    for (g, want_algo, batch, seed) in [
+        (resnet20(), ConvAlgo::Direct3x3, 2usize, 4001u64),
+        (mbv1_025(), ConvAlgo::Direct1x1, 1, 4002),
+    ] {
+        let p = Platform::diana();
+        let (names, values) = synth_params(&g, seed);
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+        let mapping = synth_mapping(&g, seed ^ 3);
+        let x = random_input(&g, batch, seed ^ 9);
+        for backend in [KernelBackend::Scalar, KernelBackend::Simd] {
+            let auto = compile(&g, &p, &params, &mapping, backend);
+            assert!(
+                auto.conv_algos().iter().any(|(_, a)| *a == want_algo),
+                "{}: heuristic never picked {want_algo:?}: {:?}",
+                g.name,
+                auto.conv_algos()
+            );
+            let im2col = QuantNet::compile_params_with(
+                &params,
+                &g,
+                &mapping,
+                &p,
+                backend,
+                Some(ConvAlgo::Im2col),
+            )
+            .unwrap();
+            assert!(im2col.conv_algos().iter().all(|(_, a)| *a == ConvAlgo::Im2col));
+            let want = im2col.forward(&x, batch).unwrap();
+            let got = auto.forward(&x, batch).unwrap();
+            assert_eq!(got, want, "{} ({backend:?}): direct path diverged from im2col", g.name);
+        }
+    }
+}
+
+#[test]
+fn gemm_backends_agree_on_ragged_shapes() {
+    // shapes straddling every register-tile edge: m < MR, n % lane
+    // width != 0, k == 1, and combinations thereof
+    let fast = KernelBackend::Simd.resolve();
+    let mut rng = Pcg32::new(909, 17);
+    for &m in &[1usize, 2, 3, 4, 5, 7] {
+        for &n in &[1usize, 5, 15, 16, 17, 31, 33] {
+            for &k in &[1usize, 3, 8, 9] {
+                let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+                let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+                let mut want = vec![0f32; m * n];
+                let mut got = vec![0f32; m * n];
+                simd::gemm(Isa::Scalar, &a, &b, m, k, n, &mut want);
+                simd::gemm(fast, &a, &b, m, k, n, &mut got);
+                assert_eq!(got, want, "gemm {m}x{k}x{n} diverged on {fast:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scratch_allocations_reach_steady_state() {
+    // panel reuse: after the first forward per batch shape the pooled
+    // scratches never touch the heap again — repeated runs allocate
+    // exactly as much as a single run
+    let g = tinycnn();
+    let (names, values) = synth_params(&g, 5005);
+    let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
+    let mapping = synth_mapping(&g, 51);
+    let p = Platform::diana();
+    let x = random_input(&g, 3, 5009);
+
+    let once = compile(&g, &p, &params, &mapping, KernelBackend::Simd);
+    once.forward(&x, 3).unwrap();
+    let single_run = once.scratch_allocs();
+    assert!(single_run > 0, "presize must report its initial reservations");
+
+    let thrice = compile(&g, &p, &params, &mapping, KernelBackend::Simd);
+    for _ in 0..3 {
+        thrice.forward(&x, 3).unwrap();
+    }
+    assert!(
+        thrice.scratch_allocs() <= single_run,
+        "3 runs allocated {} > 1 run's {}",
+        thrice.scratch_allocs(),
+        single_run
+    );
+
+    // steady-state delta is exactly zero on the sequential path...
+    let before = thrice.scratch_allocs();
+    thrice.forward(&x, 3).unwrap();
+    assert_eq!(thrice.scratch_allocs(), before, "steady-state forward hit the heap");
+
+    // ...and on the pooled paths. One engine per path: channel-tiled
+    // (batch < threads, one scratch) and batch-block with uniform
+    // blocks (batch % threads == 0, so any scratch fits any block —
+    // the pool hands scratches back in nondeterministic order).
+    let pool = ThreadPool::new(2);
+    let tiled = compile(&g, &p, &params, &mapping, KernelBackend::Simd);
+    let x1 = random_input(&g, 1, 5011);
+    tiled.forward_pool(&x1, 1, &pool).unwrap();
+    let warm = tiled.scratch_allocs();
+    tiled.forward_pool(&x1, 1, &pool).unwrap();
+    assert_eq!(tiled.scratch_allocs(), warm, "tiled steady-state forward hit the heap");
+
+    let block = compile(&g, &p, &params, &mapping, KernelBackend::Simd);
+    let x4 = random_input(&g, 4, 5013);
+    block.forward_pool(&x4, 4, &pool).unwrap();
+    let warm = block.scratch_allocs();
+    block.forward_pool(&x4, 4, &pool).unwrap();
+    assert_eq!(block.scratch_allocs(), warm, "batch-block steady-state forward hit the heap");
+}

@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Gate the kernel-backend numbers in ``BENCH_infer.json``.
+
+``BENCH_infer.json`` (written by ``cargo bench --bench bench_infer``)
+carries, per model, a ``scalar_img_s`` case (the reference loops) and a
+``simd_img_s`` case (the resolved SIMD backend on the same plan). Two
+gates:
+
+1. SIMD must never be slower than scalar beyond SIMD_TOLERANCE — the
+   dispatch layer must be free and the vector kernels must win (or at
+   worst tie, e.g. on the portable fallback of an exotic host).
+2. With ``--baseline <file>`` (the committed ``BENCH_infer.json``),
+   ``scalar_img_s`` must stay within BASE_TOLERANCE of the baseline per
+   model — the SIMD work must not regress the scalar path. Models
+   missing from the baseline (or a baseline without kernel cases, e.g.
+   from before the backend split) are skipped, not failed, so the gate
+   bootstraps cleanly.
+
+Smoke runs (1 iteration) are noisy, hence the generous tolerances:
+this is a cliff detector, not a profiler.
+
+Usage: python3 tools/check_bench_infer.py [BENCH_infer.json]
+           [--baseline committed/BENCH_infer.json]
+"""
+
+import json
+import sys
+
+SIMD_TOLERANCE = 0.10  # simd_img_s >= scalar_img_s * (1 - 10%)
+BASE_TOLERANCE = 0.05  # scalar_img_s >= baseline * (1 - 5%)
+SMOKE_SLACK = 0.40  # widen both gates when either run was a smoke run
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        print(f"check_bench_infer: cannot read {path}: {e}")
+        return None
+
+
+def kernel_cases(bench):
+    return {
+        key: case
+        for key, case in sorted(bench.items())
+        if isinstance(case, dict) and "scalar_img_s" in case and "simd_img_s" in case
+    }
+
+
+def main() -> int:
+    argv = sys.argv[1:]
+    baseline_path = None
+    if "--baseline" in argv:
+        i = argv.index("--baseline")
+        baseline_path = argv[i + 1] if i + 1 < len(argv) else None
+        if baseline_path is None:
+            print("check_bench_infer: --baseline needs a file argument")
+            return 1
+        del argv[i : i + 2]
+    smoke = "--smoke" in argv
+    if smoke:
+        argv.remove("--smoke")
+    path = argv[0] if argv else "BENCH_infer.json"
+
+    bench = load(path)
+    if bench is None:
+        return 1
+    cases = kernel_cases(bench)
+    if not cases:
+        print(f"check_bench_infer: no scalar/simd cases in {path} — "
+              "re-run `make bench-infer` (or the CI smoke) first")
+        return 1
+
+    simd_floor = 1.0 - SIMD_TOLERANCE - (SMOKE_SLACK if smoke else 0.0)
+    base_floor = 1.0 - BASE_TOLERANCE - (SMOKE_SLACK if smoke else 0.0)
+
+    baseline = {}
+    if baseline_path is not None:
+        base_bench = load(baseline_path)
+        if base_bench is not None:
+            baseline = kernel_cases(base_bench)
+        else:
+            print("check_bench_infer: baseline unreadable — skipping the "
+                  "scalar-regression gate")
+
+    failed = False
+    for model, case in cases.items():
+        scalar = case["scalar_img_s"]
+        simd = case["simd_img_s"]
+        limit = scalar * simd_floor
+        verdict = "ok" if simd >= limit else "FAIL"
+        ratio = simd / scalar if scalar > 0 else 0.0
+        print(f"{model}: scalar {scalar:10.1f} img/s | simd {simd:10.1f} img/s "
+              f"({ratio:4.2f}x) | floor {limit:10.1f} .. {verdict}")
+        failed |= simd < limit
+
+        base_case = baseline.get(model)
+        if base_case is None:
+            continue
+        base_scalar = base_case["scalar_img_s"]
+        blimit = base_scalar * base_floor
+        bverdict = "ok" if scalar >= blimit else "FAIL"
+        print(f"{model}: scalar vs committed baseline {base_scalar:10.1f} img/s "
+              f"| floor {blimit:10.1f} .. {bverdict}")
+        failed |= scalar < blimit
+
+    if failed:
+        print("check_bench_infer: kernel gate failed — SIMD slower than scalar "
+              "or the scalar path regressed vs the committed baseline")
+        return 1
+    print("check_bench_infer: kernel backends within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,8 +4,8 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check chaos doc api-check examples bench-infer bench-sim \
-	bench-mincost bench-serve bench artifacts clean
+.PHONY: build test check chaos cluster doc api-check examples bench-infer \
+	bench-sim bench-mincost bench-serve bench artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -18,6 +18,13 @@ test:
 # channels, reports bit-identical across re-runs and thread counts).
 chaos:
 	$(CARGO) test --test chaos_props
+
+# Cluster serving suite: the r=1 differential pin against the single
+# session, conservation under replicas + faults + stealing, digest
+# invariance across thread counts, and the trace-format roundtrip
+# (golden fixture, typed errors, > 2^53 decimal-string transport).
+cluster:
+	$(CARGO) test --test cluster_props --test trace_roundtrip
 
 # Full gate: formatting, lints-as-errors, then the tier-1 command.
 check:
@@ -75,7 +82,9 @@ bench-mincost:
 
 # Closed-loop serving: img/s and simulated p95 latency at 1/2/8 worker
 # threads, batched vs unbatched, plus a faults0 case (empty fault plan)
-# whose loop time the overhead gate holds within 5% of batched. Emits
+# whose loop time the overhead gate holds within 5% of batched, and
+# cluster cases (one dense trace at r=1 vs r=4) whose deterministic
+# virtual img/s the same gate holds at >= 2.5x scaling. Emits
 # BENCH_serve.json at repo root and appends to results/bench_serve.csv.
 # CI smoke-runs this with --smoke alongside bench-mincost.
 bench-serve:

@@ -11,12 +11,16 @@
 //! (tiny request stream, 1 repetition); `make bench-serve` produces
 //! real timings. Every case also reports the per-request latency split
 //! (mean queue wait vs mean engine compute, simulated ms) so batching
-//! pressure stays visible next to throughput. Writes `BENCH_serve.json`
-//! at the repo root and appends to `results/bench_serve.csv`.
+//! pressure stays visible next to throughput. Cluster cases replay one
+//! dense trace at `--replicas 1` vs `4` (continuous vs flush batching);
+//! their deterministic virtual img/s feed the replica-scaling gate in
+//! `tools/check_bench_overhead.py` (r4 must reach >= 2.5x r1). Writes
+//! `BENCH_serve.json` at the repo root and appends to
+//! `results/bench_serve.csv`.
 
 use std::fmt::Write as _;
 
-use odimo::api::{FaultPlan, ServeOpts, SessionBuilder};
+use odimo::api::{ClusterOpts, FaultPlan, ServeOpts, SessionBuilder};
 use odimo::util::bench::{black_box, Bench};
 
 fn main() {
@@ -95,6 +99,66 @@ fn main() {
                 s.median_ns / 1e6
             );
         }
+    }
+    // cluster cases: one dense synthesized trace (mean gap far below
+    // the service time, so a single replica saturates) replayed at
+    // r=1 and r=4, continuous batching vs flush-only. The replica
+    // scaling gate compares the *virtual* throughput figures — they
+    // are deterministic, so the gate holds even on smoke runs.
+    let mut session = SessionBuilder::new("tinycnn")
+        .platform("diana")
+        .results_dir(&dir)
+        .threads(2)
+        .seed(42)
+        .sweep_calib(8)
+        .sweep_blend_steps(2)
+        .plan_cache_cap(8)
+        .build()
+        .expect("session");
+    let dense = ServeOpts {
+        n_requests: Some(if smoke { 32 } else { 96 }),
+        max_batch: 8,
+        max_wait: 50_000,
+        mean_gap: 2_000,
+        launch_cycles: 10_000,
+        ..ServeOpts::default()
+    };
+    let trace = session.synth_trace(&dense).expect("trace");
+    let cluster_cases = [
+        ("cluster_r1", 1usize, true),
+        ("cluster_r4", 4, true),
+        ("cluster_r4_flush", 4, false),
+    ];
+    for (name, replicas, continuous) in cluster_cases {
+        let copts = ClusterOpts {
+            replicas,
+            serve: dense.clone(),
+            continuous,
+            steal_max: 2,
+            compile_cycles: 5_000,
+            plan_cache_cap: 8,
+        };
+        let rep = session.serve_cluster(&copts, Some(&trace)).expect("cluster run");
+        let s = b.run(name, || {
+            black_box(session.serve_cluster(&copts, Some(&trace)).expect("cluster run"));
+        });
+        println!(
+            "{name}: {:8.1} virtual img/s | makespan {:.3} ms | {} steal(s) | loop {:.2} ms",
+            rep.virtual_img_s,
+            rep.makespan_ms,
+            rep.steals,
+            s.median_ns / 1e6
+        );
+        let _ = write!(
+            json,
+            ",\n  \"{name}\": {{\n    \"virtual_img_s\": {:.4},\n    \
+             \"makespan_ms\": {:.4},\n    \"steals\": {},\n    \
+             \"loop_ms\": {:.2}\n  }}",
+            rep.virtual_img_s,
+            rep.makespan_ms,
+            rep.steals,
+            s.median_ns / 1e6
+        );
     }
     json.push_str("\n}\n");
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");

@@ -13,7 +13,9 @@
 //!     threads ────> ThreadPool (spawned)  ├─ deploy(&Mapping)       DeployReport
 //!     seed, dirs,                         ├─ infer(&Mapping, x, n)  logits
 //!     smoke, knobs                        ├─ sweep()                SweepResult
-//!                                         └─ serve(&ServeOpts)      ServeReport
+//!                                         ├─ serve(&ServeOpts)      ServeReport
+//!                                         └─ serve_cluster(&ClusterOpts, Option<&Trace>)
+//!                                                                   ClusterReport
 //!               owned, reused state:  plan cache (LRU, shared by
 //!               infer + serve) and the lazily built/cached frontier
 //! ```
@@ -39,5 +41,8 @@ mod session;
 pub use crate::coordinator::baselines::CostObjective;
 pub use crate::hw::faults::{FaultEvent, FaultPlan};
 pub use crate::quant::{ConvAlgo, Isa, KernelBackend};
-pub use crate::serve::{AdmissionCfg, ServeError, ServeOpts, ServeReport};
+pub use crate::serve::{
+    AdmissionCfg, ClusterOpts, ClusterReport, ServeError, ServeOpts, ServeReport, TenantRow,
+    Trace, TraceError, TraceRecord,
+};
 pub use session::{MappingSpec, Session, SessionBuilder, SweepResult};

@@ -14,7 +14,10 @@ use crate::hw::Platform;
 use crate::model::{self, Graph, ALL_MODELS};
 use crate::quant::{synth_params_on, KernelBackend, ParamSet, QuantNet, QuantPlan};
 use crate::serve::batcher::PlanCache;
-use crate::serve::{self, metrics, sweep, FrontierPoint, ServeOpts, ServeReport, SweepCfg};
+use crate::serve::{
+    self, cluster, metrics, sweep, ClusterOpts, ClusterReport, FrontierPoint, ServeOpts,
+    ServeReport, SweepCfg, Trace,
+};
 use crate::util::json;
 use crate::util::pool::ThreadPool;
 
@@ -489,6 +492,76 @@ impl Session {
         let path = serve::report_path(&self.results_dir, &self.graph.name, &self.platform.name);
         metrics::save_report(&path, &report)?;
         log::info!("serve report written to {}", path.display());
+        Ok(report)
+    }
+
+    /// Synthesize the session's canonical request trace for `opts`:
+    /// the exact stream `serve` would generate internally (arrivals,
+    /// SLAs, tenants, per-record seeds), as a saveable/replayable
+    /// [`Trace`]. Sweeps the frontier first (arrival SLA budgets are
+    /// drawn around the frontier's own latency range).
+    pub fn synth_trace(&mut self, opts: &ServeOpts) -> Result<Trace> {
+        let n_requests = opts
+            .n_requests
+            .unwrap_or(if self.smoke { 24 } else { 96 });
+        self.sweep()?;
+        let frontier = &self
+            .frontier
+            .as_ref()
+            .ok_or_else(|| anyhow!("internal: frontier missing after sweep"))?
+            .points;
+        Ok(Trace::synth(opts, n_requests, self.seed, frontier, &self.graph.name))
+    }
+
+    /// Run the replicated cluster driver (`opts.replicas` virtual
+    /// replicas, least-loaded routing, bounded work stealing,
+    /// continuous batching, compile-ahead gating) over `trace` — or
+    /// over the synthesized canonical trace when `trace` is `None` —
+    /// persist the [`ClusterReport`] under the results directory, and
+    /// return it. Fully deterministic in (trace, platform spec, opts):
+    /// the digest is invariant across worker thread counts.
+    pub fn serve_cluster(
+        &mut self,
+        opts: &ClusterOpts,
+        trace: Option<&Trace>,
+    ) -> Result<ClusterReport> {
+        let owned;
+        let trace = match trace {
+            Some(t) => t,
+            None => {
+                owned = self.synth_trace(&opts.serve)?;
+                &owned
+            }
+        };
+        self.sweep()?;
+        self.ensure_params();
+        let (names, values) = self
+            .params
+            .as_ref()
+            .ok_or_else(|| anyhow!("internal: parameter snapshot missing after ensure_params"))?;
+        let params = ParamSet::new(names.iter().map(|s| s.as_str()), values);
+        let frontier = &self
+            .frontier
+            .as_ref()
+            .ok_or_else(|| anyhow!("internal: frontier missing after sweep"))?
+            .points;
+        let report = cluster::run_cluster(
+            &self.graph,
+            &self.platform,
+            &params,
+            frontier,
+            init_pool(&self.pool, self.threads),
+            trace,
+            opts,
+            self.kernels,
+        )?;
+        let path = cluster::cluster_report_path(
+            &self.results_dir,
+            &self.graph.name,
+            &self.platform.name,
+        );
+        cluster::save_cluster_report(&path, &report)?;
+        log::info!("cluster report written to {}", path.display());
         Ok(report)
     }
 

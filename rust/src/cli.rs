@@ -250,6 +250,42 @@ pub const FLAGS: &[FlagSpec] = &[
                (default 3)",
     },
     FlagSpec {
+        name: "replicas",
+        value: Some("<n>"),
+        help: "serve: replica count for the cluster driver (default 1; >1 enables \
+               least-loaded routing + work stealing)",
+    },
+    FlagSpec {
+        name: "trace",
+        value: Some("<file.jsonl>"),
+        help: "serve: replay this request trace instead of synthesizing one (JSONL, \
+               see EXPERIMENTS.md for the schema)",
+    },
+    FlagSpec {
+        name: "record-trace",
+        value: Some("<file.jsonl>"),
+        help: "serve: write the request trace this run used (synthesized or replayed) \
+               for later replay",
+    },
+    FlagSpec {
+        name: "steal-max",
+        value: Some("<n>"),
+        help: "serve: most requests one work-stealing event may move between replicas \
+               (default 2; 0 disables stealing)",
+    },
+    FlagSpec {
+        name: "compile-cycles",
+        value: Some("<cyc>"),
+        help: "serve: virtual cycles the first batch on a frontier point waits for \
+               async plan compilation (default 0 = warm)",
+    },
+    FlagSpec {
+        name: "flush",
+        value: None,
+        help: "serve: disable continuous batching (flush-and-wait, the single-session \
+               behavior)",
+    },
+    FlagSpec {
         name: "kernels",
         value: Some("<scalar|simd|auto>"),
         help: "engine kernel backend: scalar reference loops, simd (AVX2/NEON when the \
@@ -342,8 +378,9 @@ pub const VERBS: &[VerbSpec] = &[
         help: "closed-loop SLA-aware batched inference over the frontier",
         flags: &["model", "platform", "results", "threads", "seed", "requests",
                  "max-batch", "max-wait", "gap", "faults", "overload-wait",
-                 "max-retries", "kernels"],
-        switches: &["smoke"],
+                 "max-retries", "replicas", "trace", "record-trace", "steal-max",
+                 "compile-cycles", "kernels"],
+        switches: &["smoke", "flush"],
     },
     VerbSpec {
         name: "serve-report",

@@ -10,7 +10,7 @@
 
 use anyhow::{anyhow, Result};
 
-use odimo::api::{FaultPlan, MappingSpec, ServeOpts, Session, SessionBuilder};
+use odimo::api::{ClusterOpts, FaultPlan, MappingSpec, ServeOpts, Session, SessionBuilder, Trace};
 use odimo::cli::{self, Args};
 use odimo::config::RunConfig;
 use odimo::coordinator::{Pipeline, Regularizer, Schedule};
@@ -274,9 +274,50 @@ fn run() -> Result<()> {
                 session.frontier_path().display(),
                 if cache_hit { "cache hit" } else { "swept fresh" }
             );
-            let report = session.serve(&opts)?;
-            println!("serve: report written to {}", session.report_path().display());
-            println!("{}", report.dashboard());
+            let cluster_mode = args.get("replicas").is_some()
+                || args.get("trace").is_some()
+                || args.get("record-trace").is_some()
+                || args.get("steal-max").is_some()
+                || args.get("compile-cycles").is_some()
+                || args.has("flush");
+            if cluster_mode {
+                let mut copts = ClusterOpts { serve: opts, ..ClusterOpts::default() };
+                if let Some(n) = args.get_usize("replicas")? {
+                    copts.replicas = n.max(1);
+                }
+                if let Some(n) = args.get_usize("steal-max")? {
+                    copts.steal_max = n;
+                }
+                if let Some(n) = args.get_u64("compile-cycles")? {
+                    copts.compile_cycles = n;
+                }
+                if args.has("flush") {
+                    copts.continuous = false;
+                }
+                let trace = match args.get("trace") {
+                    Some(file) => {
+                        let t = Trace::load(std::path::Path::new(file))?;
+                        println!("serve: replaying trace {} ({} requests)", file, t.len());
+                        Some(t)
+                    }
+                    None => None,
+                };
+                let trace = match trace {
+                    Some(t) => t,
+                    None => session.synth_trace(&copts.serve)?,
+                };
+                if let Some(out) = args.get("record-trace") {
+                    let path = std::path::Path::new(out);
+                    trace.save(path)?;
+                    println!("serve: trace recorded to {out}");
+                }
+                let report = session.serve_cluster(&copts, Some(&trace))?;
+                println!("{}", report.dashboard());
+            } else {
+                let report = session.serve(&opts)?;
+                println!("serve: report written to {}", session.report_path().display());
+                println!("{}", report.dashboard());
+            }
             Ok(())
         }
         "serve-report" => {

@@ -105,6 +105,32 @@ impl Batcher {
         ripe.into_iter().map(|(_, point)| self.flush(point, now)).collect()
     }
 
+    /// Remove up to `k` queued requests, oldest first by (arrival, id)
+    /// across all mapping queues — the work-stealing donor side. Each
+    /// victim queue keeps its remaining requests in order, so deadlines
+    /// stay monotone for what stays behind.
+    pub fn steal_oldest(&mut self, k: usize) -> Vec<Request> {
+        let mut all: Vec<(u64, u64, usize)> = self
+            .queues
+            .iter()
+            .flat_map(|(&point, q)| q.iter().map(move |r| (r.arrival, r.id, point)))
+            .collect();
+        all.sort_unstable();
+        all.truncate(k);
+        let mut stolen = Vec::with_capacity(all.len());
+        for (_, id, point) in all {
+            if let Some(q) = self.queues.get_mut(&point) {
+                if let Some(i) = q.iter().position(|r| r.id == id) {
+                    stolen.push(q.remove(i));
+                }
+                if q.is_empty() {
+                    self.queues.remove(&point);
+                }
+            }
+        }
+        stolen
+    }
+
     /// Flush everything that remains, in `point` order.
     pub fn drain(&mut self, now: u64) -> Vec<Batch> {
         let points: Vec<usize> = self.queues.keys().copied().collect();

@@ -1,0 +1,960 @@
+//! Replica cluster: shard one trace across R virtual serve replicas.
+//!
+//! The cluster layer (docs/ARCHITECTURE.md §Cluster) scales the
+//! single-Session closed loop horizontally without giving up the
+//! determinism contract:
+//!
+//! * **Router** — every trace arrival goes to the least-loaded replica
+//!   (smallest projected device wait, ties broken by fewer queued
+//!   requests then lower replica index). Each replica owns its own
+//!   virtual device timeline, health tracker, batcher, retry table and
+//!   LRU plan cache.
+//! * **Work stealing** — after every event, a fully idle replica may
+//!   steal up to [`ClusterOpts::steal_max`] of the oldest queued
+//!   requests from the most-backlogged busy replica. Stolen requests
+//!   are re-stamped to the steal cycle but keep their *first* arrival
+//!   for queue-time/SLA accounting (the same `orig_arrival` table the
+//!   retry path uses).
+//! * **Continuous batching** — with [`ClusterOpts::continuous`] on, a
+//!   flushed batch becomes an *in-flight* window on the device
+//!   timeline; later same-mapping arrivals join it (up to `max_batch`)
+//!   instead of waiting for the next flush-and-wait cycle. With it off
+//!   every replica behaves byte-identically to the single-session
+//!   loop — the differential pin in `tests/cluster_props.rs`.
+//! * **Compile-ahead gate** — [`ClusterOpts::compile_cycles`] models
+//!   async plan compilation: the first batch on a frontier point
+//!   cannot *start* before `first_flush + compile_cycles`, but the
+//!   replica keeps serving already-warm mappings in the meantime
+//!   (compilation overlaps serving instead of stalling the queue).
+//!
+//! Everything is single-threaded virtual time — the thread pool only
+//! accelerates the real engine work inside each batch — so the
+//! [`ClusterReport::deterministic_digest`] is invariant across worker
+//! thread counts and host schedules.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::synth::gen_sample;
+use crate::exp::store;
+use crate::hw::Platform;
+use crate::model::Graph;
+use crate::quant::{KernelBackend, ParamSet, QuantNet, QuantPlan};
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+
+use super::batcher::{Batch, Batcher, PlanCache, Request};
+use super::dispatch::{dispatch_filtered, fastest_filtered, Sla};
+use super::health::HealthTracker;
+use super::metrics::{RequestOutcome, ServeMetrics, ServeReport};
+use super::trace::Trace;
+use super::{Admission, RetryState, SeedLookup, ServeError, ServeOpts};
+
+/// Cluster report schema version (envelope kind `cluster_report`).
+pub const CLUSTER_SCHEMA: u32 = 1;
+
+/// Cluster-level serve knobs wrapping the per-replica [`ServeOpts`].
+#[derive(Clone, Debug)]
+pub struct ClusterOpts {
+    /// Replica count (>= 1). Each replica is an independent virtual
+    /// device with its own timeline, batcher and plan cache.
+    pub replicas: usize,
+    /// Per-replica closed-loop knobs (batching, faults, admission,
+    /// retries). `serve.n_requests` sizes the synthesized trace when
+    /// no explicit trace is given.
+    pub serve: ServeOpts,
+    /// Continuous batching: admit same-mapping arrivals into the
+    /// replica's in-flight batch instead of flush-and-wait. Off
+    /// reproduces the single-session loop exactly.
+    pub continuous: bool,
+    /// Most requests one work-stealing event may move (0 disables
+    /// stealing).
+    pub steal_max: usize,
+    /// Virtual cycles the first batch on a frontier point waits for
+    /// plan compilation (0 = plans are warm, the historical behavior).
+    pub compile_cycles: u64,
+    /// Per-replica LRU plan-cache capacity.
+    pub plan_cache_cap: usize,
+}
+
+impl Default for ClusterOpts {
+    fn default() -> Self {
+        ClusterOpts {
+            replicas: 1,
+            serve: ServeOpts::default(),
+            continuous: true,
+            steal_max: 2,
+            compile_cycles: 0,
+            plan_cache_cap: 8,
+        }
+    }
+}
+
+/// Per-tenant accounting row in the cluster dashboard.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantRow {
+    /// Tenant label from the trace.
+    pub tenant: String,
+    /// Requests the trace carried for this tenant.
+    pub arrivals: u64,
+    /// Requests served to completion.
+    pub served: u64,
+    /// Served requests that met their SLA.
+    pub sla_hits: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Requests that exhausted their retries.
+    pub failed: u64,
+}
+
+/// Aggregated result of one cluster run: the per-replica
+/// [`ServeReport`]s plus router/steal/compile counters and per-tenant
+/// rows. Satisfies the same determinism contract as [`ServeReport`]:
+/// every virtual-time field is a pure function of
+/// (trace, platform, [`ClusterOpts`]).
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Model served.
+    pub model: String,
+    /// Platform served on.
+    pub platform: String,
+    /// One report per replica, indexed by replica id.
+    pub replicas: Vec<ServeReport>,
+    /// Arrivals the router sent to each replica.
+    pub dispatched: Vec<u64>,
+    /// Work-stealing events that moved at least one request.
+    pub steals: u64,
+    /// Requests moved by work stealing in total.
+    pub stolen_requests: u64,
+    /// Frontier points that paid the compile-ahead gate (first batch
+    /// per point per replica).
+    pub cold_compiles: u64,
+    /// Requests served to completion across all replicas.
+    pub total_requests: u64,
+    /// Requests shed by admission control across all replicas.
+    pub shed_requests: u64,
+    /// Requests that exhausted retries across all replicas.
+    pub failed_requests: u64,
+    /// Wall of the cluster's virtual timeline: latest replica
+    /// end-cycle, in milliseconds.
+    pub makespan_ms: f64,
+    /// Served requests per *virtual* second (served / makespan) — the
+    /// deterministic throughput figure the bench gate compares across
+    /// replica counts.
+    pub virtual_img_s: f64,
+    /// Per-tenant accounting, sorted by tenant label.
+    pub tenants: Vec<TenantRow>,
+}
+
+impl ClusterReport {
+    /// Conservation identity: served + shed + failed. Tests pin this
+    /// to the trace length — every request ends in exactly one bucket.
+    pub fn accounted(&self) -> u64 {
+        self.total_requests + self.shed_requests + self.failed_requests
+    }
+
+    /// FNV-1a digest over every deterministic field (replica digests,
+    /// router counters, tenant rows, virtual metrics). Invariant
+    /// across worker thread counts and host schedules; sensitive to
+    /// trace, platform and every [`ClusterOpts`] knob.
+    pub fn deterministic_digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(self.model.as_bytes());
+        eat(self.platform.as_bytes());
+        eat(&(self.replicas.len() as u64).to_le_bytes());
+        for r in &self.replicas {
+            eat(&r.deterministic_digest().to_le_bytes());
+        }
+        for d in &self.dispatched {
+            eat(&d.to_le_bytes());
+        }
+        eat(&self.steals.to_le_bytes());
+        eat(&self.stolen_requests.to_le_bytes());
+        eat(&self.cold_compiles.to_le_bytes());
+        eat(&self.total_requests.to_le_bytes());
+        eat(&self.shed_requests.to_le_bytes());
+        eat(&self.failed_requests.to_le_bytes());
+        eat(&self.makespan_ms.to_bits().to_le_bytes());
+        eat(&self.virtual_img_s.to_bits().to_le_bytes());
+        for t in &self.tenants {
+            eat(t.tenant.as_bytes());
+            eat(&t.arrivals.to_le_bytes());
+            eat(&t.served.to_le_bytes());
+            eat(&t.sla_hits.to_le_bytes());
+            eat(&t.shed.to_le_bytes());
+            eat(&t.failed.to_le_bytes());
+        }
+        h
+    }
+
+    /// Multi-line human dashboard (mirrors the single-session one).
+    pub fn dashboard(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "cluster serve: {} on {} — {} replica(s)\n",
+            self.model,
+            self.platform,
+            self.replicas.len()
+        ));
+        out.push_str(&format!(
+            "  requests: {} served / {} shed / {} failed   virtual {:.1} img/s   \
+             makespan {:.3} ms\n",
+            self.total_requests,
+            self.shed_requests,
+            self.failed_requests,
+            self.virtual_img_s,
+            self.makespan_ms
+        ));
+        out.push_str(&format!(
+            "  router: dispatched {:?}, {} steal(s) moving {} request(s), {} cold \
+             compile(s)\n",
+            self.dispatched, self.steals, self.stolen_requests, self.cold_compiles
+        ));
+        for (j, r) in self.replicas.iter().enumerate() {
+            out.push_str(&format!(
+                "  replica {j}: {} req in {} batch(es), p95 {:.3} ms, sla {:.1}%\n",
+                r.total_requests,
+                r.total_batches,
+                r.p95_ms,
+                r.sla_hit_rate * 100.0
+            ));
+        }
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "  tenant {}: {} arrived, {} served, {} sla-hit, {} shed, {} failed\n",
+                t.tenant, t.arrivals, t.served, t.sla_hits, t.shed, t.failed
+            ));
+        }
+        out
+    }
+
+    pub(crate) fn to_json(&self) -> Json {
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("tenant", Json::str(t.tenant.clone())),
+                    ("arrivals", Json::num(t.arrivals as f64)),
+                    ("served", Json::num(t.served as f64)),
+                    ("sla_hits", Json::num(t.sla_hits as f64)),
+                    ("shed", Json::num(t.shed as f64)),
+                    ("failed", Json::num(t.failed as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("platform", Json::str(self.platform.clone())),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "dispatched",
+                Json::Arr(self.dispatched.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("steals", Json::num(self.steals as f64)),
+            ("stolen_requests", Json::num(self.stolen_requests as f64)),
+            ("cold_compiles", Json::num(self.cold_compiles as f64)),
+            ("total_requests", Json::num(self.total_requests as f64)),
+            ("shed_requests", Json::num(self.shed_requests as f64)),
+            ("failed_requests", Json::num(self.failed_requests as f64)),
+            ("makespan_ms", Json::num(self.makespan_ms)),
+            ("virtual_img_s", Json::num(self.virtual_img_s)),
+            ("tenants", Json::Arr(tenants)),
+        ])
+    }
+
+    pub(crate) fn from_json(v: &Json) -> Result<ClusterReport> {
+        let replicas = v
+            .req("replicas")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("cluster report: replicas must be an array"))?
+            .iter()
+            .map(ServeReport::from_json)
+            .collect::<Result<Vec<ServeReport>>>()?;
+        let dispatched = v
+            .req("dispatched")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("cluster report: dispatched must be an array"))?
+            .iter()
+            .map(|d| {
+                d.as_f64()
+                    .map(|x| x as u64)
+                    .ok_or_else(|| anyhow!("cluster report: dispatched entries are numbers"))
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        let tenants = v
+            .req("tenants")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("cluster report: tenants must be an array"))?
+            .iter()
+            .map(|t| -> Result<TenantRow> {
+                Ok(TenantRow {
+                    tenant: t.req("tenant")?.as_str().unwrap_or("").to_string(),
+                    arrivals: t.req_f64("arrivals")? as u64,
+                    served: t.req_f64("served")? as u64,
+                    sla_hits: t.req_f64("sla_hits")? as u64,
+                    shed: t.req_f64("shed")? as u64,
+                    failed: t.req_f64("failed")? as u64,
+                })
+            })
+            .collect::<Result<Vec<TenantRow>>>()?;
+        Ok(ClusterReport {
+            model: v.req("model")?.as_str().unwrap_or("").to_string(),
+            platform: v.req("platform")?.as_str().unwrap_or("").to_string(),
+            replicas,
+            dispatched,
+            steals: v.req_f64("steals")? as u64,
+            stolen_requests: v.req_f64("stolen_requests")? as u64,
+            cold_compiles: v.req_f64("cold_compiles")? as u64,
+            total_requests: v.req_f64("total_requests")? as u64,
+            shed_requests: v.req_f64("shed_requests")? as u64,
+            failed_requests: v.req_f64("failed_requests")? as u64,
+            makespan_ms: v.req_f64("makespan_ms")?,
+            virtual_img_s: v.req_f64("virtual_img_s")?,
+            tenants,
+        })
+    }
+}
+
+/// Report path for a (model, platform) cluster run under `results_dir`.
+pub fn cluster_report_path(results_dir: &Path, model: &str, platform: &str) -> PathBuf {
+    results_dir.join(format!("cluster_{model}_{platform}.json"))
+}
+
+/// Persist a cluster report atomically under the versioned envelope.
+pub fn save_cluster_report(path: &Path, report: &ClusterReport) -> Result<()> {
+    store::save_versioned(path, "cluster_report", CLUSTER_SCHEMA, report.to_json())
+}
+
+/// Load a persisted cluster report (clear error on kind/schema
+/// mismatch).
+pub fn load_cluster_report(path: &Path) -> Result<ClusterReport> {
+    ClusterReport::from_json(&store::load_versioned(path, "cluster_report", CLUSTER_SCHEMA)?)
+}
+
+// ---------------------------------------------------------------------------
+// the deterministic multi-replica event loop
+// ---------------------------------------------------------------------------
+
+/// A batch the replica launched on its device window and may still
+/// extend with same-mapping joiners (continuous batching).
+struct InFlight {
+    point: usize,
+    start: u64,
+    per_img: u64,
+    done: u64,
+    derated: bool,
+    requests: Vec<Request>,
+}
+
+/// One virtual serve replica: the same state `run_serve` keeps in
+/// locals, boxed per replica.
+struct Replica {
+    tracker: HealthTracker,
+    batcher: Batcher,
+    stats: ServeMetrics,
+    retry: RetryState,
+    plans: PlanCache,
+    device_free: u64,
+    inflight: Option<InFlight>,
+    /// Per-point compile-ahead gate: cycle the point's plan is warm.
+    warm_at: BTreeMap<usize, u64>,
+}
+
+/// Shared read-only context threaded through the event handlers.
+struct Ctx<'a> {
+    graph: &'a Graph,
+    params: &'a ParamSet<'a>,
+    pool: &'a ThreadPool,
+    opts: &'a ClusterOpts,
+    seeds: SeedLookup<'a>,
+    backend: KernelBackend,
+}
+
+/// Mutably borrow two distinct replicas.
+fn two(v: &mut [Replica], i: usize, j: usize) -> (&mut Replica, &mut Replica) {
+    debug_assert_ne!(i, j);
+    if i < j {
+        let (a, b) = v.split_at_mut(j);
+        (&mut a[i], &mut b[0])
+    } else {
+        let (a, b) = v.split_at_mut(i);
+        (&mut b[0], &mut a[j])
+    }
+}
+
+/// Least-loaded routing: smallest projected device wait, then fewest
+/// queued requests, then lowest index.
+fn route(replicas: &[Replica], now: u64) -> usize {
+    let mut best = 0usize;
+    let mut best_key = (u64::MAX, usize::MAX);
+    for (j, rep) in replicas.iter().enumerate() {
+        let key = (rep.device_free.saturating_sub(now), rep.batcher.pending());
+        if key < best_key {
+            best_key = key;
+            best = j;
+        }
+    }
+    best
+}
+
+/// First-flush compile gate for `point`: the cycle its plan is warm.
+/// A zero-cycle gate is free and is not counted as a cold compile.
+fn warm_gate(rep: &mut Replica, point: usize, t: u64, compile_cycles: u64, cold: &mut u64) -> u64 {
+    if compile_cycles == 0 {
+        return t;
+    }
+    *rep.warm_at.entry(point).or_insert_with(|| {
+        *cold += 1;
+        t.saturating_add(compile_cycles)
+    })
+}
+
+/// A batch left the batcher: launch it as the replica's in-flight
+/// window (continuous mode, device idle) or execute it flush-style on
+/// the virtual timeline behind whatever is already running.
+fn handle_batch(rep: &mut Replica, b: &Batch, ctx: &Ctx<'_>, cold: &mut u64) -> Result<()> {
+    let gate = warm_gate(rep, b.point, b.flushed_at, ctx.opts.compile_cycles, cold);
+    if ctx.opts.continuous && rep.inflight.is_none() {
+        let start = b.flushed_at.max(rep.device_free).max(gate);
+        let fp = &rep.tracker.points[b.point];
+        let factor = rep.tracker.exec_factor(b.point, start);
+        let per_img = if factor > 1.0 {
+            (fp.cycles as f64 * factor).ceil() as u64
+        } else {
+            fp.cycles
+        };
+        let done = start + ctx.opts.serve.launch_cycles + per_img * b.requests.len() as u64;
+        rep.device_free = done;
+        rep.inflight = Some(InFlight {
+            point: b.point,
+            start,
+            per_img,
+            done,
+            derated: factor > 1.0,
+            requests: b.requests.clone(),
+        });
+        return Ok(());
+    }
+    rep.device_free = rep.device_free.max(gate);
+    super::exec_batch(
+        b,
+        ctx.graph,
+        ctx.params,
+        &rep.tracker,
+        &ctx.opts.serve,
+        &ctx.seeds,
+        ctx.pool,
+        &mut rep.plans,
+        &mut rep.stats,
+        &mut rep.device_free,
+        &mut rep.retry,
+        ctx.backend,
+    )
+}
+
+/// A dispatched request enters the replica: join the in-flight batch
+/// when continuous batching allows it, otherwise queue it (flushing
+/// through [`handle_batch`] when the queue fills).
+fn serve_on(rep: &mut Replica, q: Request, ctx: &Ctx<'_>, cold: &mut u64) -> Result<()> {
+    if ctx.opts.continuous {
+        if let Some(inf) = rep.inflight.as_mut() {
+            // joining is only sound while the window is still open
+            // (now < done), has capacity, runs the same plan, and no
+            // later batch already queued behind it on the device
+            if inf.point == q.point
+                && inf.requests.len() < ctx.opts.serve.max_batch
+                && q.arrival < inf.done
+                && rep.device_free == inf.done
+            {
+                inf.requests.push(q);
+                inf.done += inf.per_img;
+                rep.device_free = inf.done;
+                return Ok(());
+            }
+        }
+    }
+    if let Some(b) = rep.batcher.push(q) {
+        handle_batch(rep, &b, ctx, cold)?;
+    }
+    Ok(())
+}
+
+/// The in-flight window closed: abort it if its unit died under it,
+/// otherwise run the real engine once over the final member set and
+/// record every outcome.
+fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>) -> Result<()> {
+    let bsz = inf.requests.len();
+    if let Some(abort_at) = rep.tracker.abort_cycle(inf.point, inf.start, inf.done) {
+        rep.stats.batch_aborts += 1;
+        if rep.device_free == inf.done {
+            // nothing queued behind the window: rewind the device to
+            // the abort + cleanup cost, as the flush path does
+            rep.device_free = abort_at.saturating_add(ctx.opts.serve.launch_cycles);
+        }
+        let retry_at = abort_at.saturating_add(ctx.opts.serve.retry_backoff.max(1));
+        for r in &inf.requests {
+            rep.retry.schedule(r, Some(retry_at), ctx.opts.serve.max_retries, &mut rep.stats);
+        }
+        return Ok(());
+    }
+    let fp = &rep.tracker.points[inf.point];
+    let platform = rep.tracker.platform_for(inf.point);
+    let (c, h, w) = ctx.graph.input_shape;
+    let mut x = Vec::with_capacity(bsz * c * h * w);
+    for r in &inf.requests {
+        let cls = (r.id % ctx.graph.classes as u64) as u32;
+        x.extend_from_slice(&gen_sample(ctx.seeds.seed_for(r.id), 1, r.id, cls, h, w));
+    }
+    let key = QuantPlan::cache_key(&ctx.graph.name, &platform.name, &fp.mapping, ctx.backend);
+    let compile_before = rep.plans.compile_ns;
+    let t0 = Instant::now();
+    {
+        let net = rep.plans.get_or_compile(key, &fp.mapping, || {
+            QuantNet::compile_params_backend(
+                ctx.params,
+                ctx.graph,
+                &fp.mapping,
+                platform,
+                ctx.backend,
+            )
+        })?;
+        let y = net.forward_pool(&x, bsz, ctx.pool)?;
+        std::hint::black_box(&y);
+    }
+    let wall = t0.elapsed().as_nanos() as u64;
+    rep.stats.record_batch(wall.saturating_sub(rep.plans.compile_ns - compile_before));
+    let compute = inf.done - inf.start;
+    for r in &inf.requests {
+        let orig = rep.retry.orig(r);
+        let total = inf.done.saturating_sub(orig);
+        let met = match r.sla {
+            Sla::MinEnergy => true,
+            Sla::LatencyBudget(b) => total <= b,
+        };
+        let degraded = rep.tracker.is_degraded_point(inf.point)
+            || inf.derated
+            || rep.retry.degraded_ids.contains(&r.id);
+        rep.stats.record(RequestOutcome {
+            id: r.id,
+            point: inf.point,
+            queue_cycles: inf.start.saturating_sub(orig),
+            compute_cycles: compute,
+            sla_met: met,
+            batch_size: bsz,
+            energy_uj: fp.energy_uj,
+            degraded,
+        });
+    }
+    Ok(())
+}
+
+/// Dispatch one request on `rep` under its current health mask, or
+/// schedule a retry at the next fault-state change.
+fn dispatch_or_retry(
+    rep: &mut Replica,
+    r: Request,
+    now: u64,
+    ctx: &Ctx<'_>,
+    cold: &mut u64,
+) -> Result<()> {
+    let d = {
+        let tr = &rep.tracker;
+        dispatch_filtered(&tr.points, |x| tr.enabled[x], r.sla)
+    };
+    match d {
+        Some(d) => serve_on(rep, Request { point: d.point, ..r }, ctx, cold),
+        None => {
+            let at = rep.tracker.next_change_after(now);
+            rep.retry.schedule(&r, at, ctx.opts.serve.max_retries, &mut rep.stats);
+            Ok(())
+        }
+    }
+}
+
+/// Bounded work stealing: each fully idle replica may pull the oldest
+/// `steal_max` queued requests from the most-backlogged busy replica.
+#[allow(clippy::too_many_arguments)]
+fn steal_pass(
+    replicas: &mut [Replica],
+    now: u64,
+    ctx: &Ctx<'_>,
+    cold: &mut u64,
+    steals: &mut u64,
+    stolen_requests: &mut u64,
+) -> Result<()> {
+    if ctx.opts.steal_max == 0 || replicas.len() < 2 {
+        return Ok(());
+    }
+    for t in 0..replicas.len() {
+        let idle = {
+            let rep = &replicas[t];
+            rep.inflight.is_none() && rep.batcher.pending() == 0 && rep.device_free <= now
+        };
+        if !idle {
+            continue;
+        }
+        let mut victim: Option<(usize, usize)> = None; // (pending, index)
+        for (v, rep) in replicas.iter().enumerate() {
+            if v == t {
+                continue;
+            }
+            let p = rep.batcher.pending();
+            if rep.device_free > now && p > 0 && victim.map_or(true, |(bp, _)| p > bp) {
+                victim = Some((p, v));
+            }
+        }
+        let Some((_, v)) = victim else {
+            continue;
+        };
+        let (thief, vict) = two(replicas, t, v);
+        let stolen = vict.batcher.steal_oldest(ctx.opts.steal_max);
+        if stolen.is_empty() {
+            continue;
+        }
+        *steals += 1;
+        *stolen_requests += stolen.len() as u64;
+        thief.tracker.advance(now, ctx.graph)?;
+        for r in stolen {
+            // queue time and SLA accounting span the move: the thief
+            // inherits the request's first arrival, attempt count and
+            // degraded mark before re-stamping it to the steal cycle
+            let orig = vict.retry.orig(&r);
+            thief.retry.orig_arrival.entry(r.id).or_insert(orig);
+            if let Some(&att) = vict.retry.attempts.get(&r.id) {
+                let e = thief.retry.attempts.entry(r.id).or_insert(0);
+                *e = (*e).max(att);
+            }
+            if vict.retry.degraded_ids.contains(&r.id) {
+                thief.retry.degraded_ids.insert(r.id);
+            }
+            let restamped = Request { arrival: now, ..r };
+            dispatch_or_retry(thief, restamped, now, ctx, cold)?;
+        }
+    }
+    Ok(())
+}
+
+/// Run the deterministic multi-replica closed loop over `trace`.
+/// Crate-internal: the public surface is
+/// [`Session::serve_cluster`](crate::api::Session::serve_cluster).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_cluster(
+    graph: &Graph,
+    platform: &Platform,
+    params: &ParamSet<'_>,
+    frontier: &[super::FrontierPoint],
+    pool: &ThreadPool,
+    trace: &Trace,
+    opts: &ClusterOpts,
+    backend: KernelBackend,
+) -> Result<ClusterReport> {
+    if frontier.is_empty() {
+        return Err(ServeError::EmptyFrontier {
+            model: graph.name.clone(),
+            platform: platform.name.clone(),
+        }
+        .into());
+    }
+    for (i, rec) in trace.records.iter().enumerate() {
+        if rec.model != graph.name {
+            return Err(anyhow!(
+                "cluster: trace record {} targets model '{}' but the session serves '{}'",
+                i,
+                rec.model,
+                graph.name
+            ));
+        }
+    }
+    let n_replicas = opts.replicas.max(1);
+    let seed_table = trace.seeds();
+    let fallback = seed_table.first().copied().unwrap_or(0);
+    let ctx = Ctx {
+        graph,
+        params,
+        pool,
+        opts,
+        seeds: SeedLookup::PerRequest { seeds: &seed_table, fallback },
+        backend,
+    };
+    let mut replicas = Vec::with_capacity(n_replicas);
+    for _ in 0..n_replicas {
+        let resolved = match &opts.serve.fault_plan {
+            Some(plan) => Some(plan.resolve(platform)?),
+            None => None,
+        };
+        let tracker = HealthTracker::new(frontier, platform, resolved, graph);
+        let mut stats = ServeMetrics::new();
+        stats.faults_injected = tracker.n_events() as u64;
+        replicas.push(Replica {
+            tracker,
+            batcher: Batcher::new(opts.serve.max_batch, opts.serve.max_wait),
+            stats,
+            retry: RetryState::new(),
+            plans: PlanCache::new(opts.plan_cache_cap),
+            device_free: 0,
+            inflight: None,
+            warm_at: BTreeMap::new(),
+        });
+    }
+
+    let reqs = trace.to_requests();
+    let mut dispatched = vec![0u64; n_replicas];
+    let mut shed_ids: Vec<u64> = Vec::new();
+    let mut cold_compiles = 0u64;
+    let mut steals = 0u64;
+    let mut stolen_requests = 0u64;
+
+    // the same virtual-time event loop as `run_serve`, generalized to
+    // R replicas: earliest event first with ties broken by source rank
+    // (retry 0, arrival 1, queue deadline 2, in-flight completion 3)
+    // then replica index — all state is BTreeMap-ordered, so the
+    // schedule is a pure function of (trace, platform, opts)
+    let mut i = 0usize;
+    let mut tail_now = reqs.last().map(|r| r.arrival).unwrap_or(0);
+    loop {
+        let more = i < reqs.len()
+            || replicas.iter().any(|r| {
+                r.batcher.pending() > 0 || r.retry.next_time().is_some() || r.inflight.is_some()
+            });
+        if !more {
+            break;
+        }
+        let next_arrival = reqs.get(i).map(|r| r.arrival);
+        let quiet = next_arrival.is_none()
+            && replicas
+                .iter()
+                .all(|r| r.retry.next_time().is_none() && r.inflight.is_none());
+        if quiet {
+            // stream over, nothing in flight: drain every replica's
+            // residual queues at the tail cycle (run_serve's tail rule)
+            for rep in replicas.iter_mut() {
+                let batches = rep.batcher.drain(tail_now);
+                for b in batches {
+                    handle_batch(rep, &b, &ctx, &mut cold_compiles)?;
+                }
+                // continuous mode may have left the drained batch in
+                // flight — close it immediately, the stream is over
+                if let Some(inf) = rep.inflight.take() {
+                    tail_now = tail_now.max(inf.done);
+                    rep.tracker.advance(inf.done, graph)?;
+                    complete_inflight(rep, inf, &ctx)?;
+                }
+            }
+            continue;
+        }
+        let mut best: Option<(u64, u8, usize)> = None;
+        let mut consider = |cand: Option<(u64, u8, usize)>| {
+            if let Some(c) = cand {
+                if best.map_or(true, |b| c < b) {
+                    best = Some(c);
+                }
+            }
+        };
+        for (j, rep) in replicas.iter().enumerate() {
+            consider(rep.retry.next_time().map(|t| (t, 0u8, j)));
+        }
+        consider(next_arrival.map(|t| (t, 1u8, 0)));
+        for (j, rep) in replicas.iter().enumerate() {
+            consider(rep.batcher.next_deadline().map(|t| (t, 2u8, j)));
+        }
+        for (j, rep) in replicas.iter().enumerate() {
+            consider(rep.inflight.as_ref().map(|f| (f.done, 3u8, j)));
+        }
+        let Some((now, source, j)) = best else {
+            let pending = replicas.iter().map(|r| r.batcher.pending()).sum();
+            return Err(ServeError::MissingDeadline { pending }.into());
+        };
+        match source {
+            // scheduled retries: re-dispatch under the replica's mask
+            0 => {
+                tail_now = tail_now.max(now);
+                let rep = &mut replicas[j];
+                rep.tracker.advance(now, graph)?;
+                for r in rep.retry.pop_at(now) {
+                    dispatch_or_retry(rep, r, now, &ctx, &mut cold_compiles)?;
+                }
+            }
+            // arrivals: route, then the single-session admission path
+            1 => {
+                let r = reqs[i];
+                i += 1;
+                let target = route(&replicas, now);
+                dispatched[target] += 1;
+                let rep = &mut replicas[target];
+                rep.tracker.advance(r.arrival, graph)?;
+                let wait = rep.device_free.saturating_sub(r.arrival);
+                let decision = {
+                    let tr = &rep.tracker;
+                    let keep = |x: usize| tr.enabled[x];
+                    if wait > opts.serve.admission.overload_wait {
+                        match r.sla {
+                            Sla::MinEnergy => Admission::Shed,
+                            Sla::LatencyBudget(b) => {
+                                match fastest_filtered(&tr.points, keep) {
+                                    None => Admission::Defer,
+                                    Some(f) => {
+                                        let eta = wait
+                                            .saturating_add(tr.points[f].cycles)
+                                            .saturating_add(opts.serve.launch_cycles);
+                                        if eta <= b {
+                                            Admission::Serve(f, true)
+                                        } else {
+                                            Admission::Shed
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    } else {
+                        match dispatch_filtered(&tr.points, keep, r.sla) {
+                            Some(d) => Admission::Serve(d.point, false),
+                            None => Admission::Defer,
+                        }
+                    }
+                };
+                match decision {
+                    Admission::Serve(point, degraded) => {
+                        if degraded {
+                            rep.retry.degraded_ids.insert(r.id);
+                        }
+                        serve_on(rep, Request { point, ..r }, &ctx, &mut cold_compiles)?;
+                    }
+                    Admission::Shed => {
+                        rep.stats.shed_requests += 1;
+                        shed_ids.push(r.id);
+                    }
+                    Admission::Defer => {
+                        let at = rep.tracker.next_change_after(r.arrival);
+                        rep.retry.schedule(&r, at, opts.serve.max_retries, &mut rep.stats);
+                    }
+                }
+            }
+            // queue deadlines: flush every ripe batch on the replica
+            2 => {
+                let batches = replicas[j].batcher.due(now);
+                for b in batches {
+                    handle_batch(&mut replicas[j], &b, &ctx, &mut cold_compiles)?;
+                }
+            }
+            // in-flight completions (continuous batching only)
+            _ => {
+                tail_now = tail_now.max(now);
+                let rep = &mut replicas[j];
+                rep.tracker.advance(now, graph)?;
+                if let Some(inf) = rep.inflight.take() {
+                    complete_inflight(rep, inf, &ctx)?;
+                }
+            }
+        }
+        steal_pass(
+            &mut replicas,
+            now,
+            &ctx,
+            &mut cold_compiles,
+            &mut steals,
+            &mut stolen_requests,
+        )?;
+    }
+
+    // fold per-replica stats into reports + cluster aggregates
+    let mut tenants: BTreeMap<String, TenantRow> = BTreeMap::new();
+    for rec in &trace.records {
+        tenants
+            .entry(rec.tenant.clone())
+            .or_insert_with(|| TenantRow {
+                tenant: rec.tenant.clone(),
+                arrivals: 0,
+                served: 0,
+                sla_hits: 0,
+                shed: 0,
+                failed: 0,
+            })
+            .arrivals += 1;
+    }
+    let tenant_of = |id: u64| trace.records.get(id as usize).map(|r| r.tenant.as_str());
+    let mut reports = Vec::with_capacity(n_replicas);
+    let mut total_served = 0u64;
+    let mut total_shed = 0u64;
+    let mut total_failed = 0u64;
+    let mut max_end = 0u64;
+    for rep in replicas.iter_mut() {
+        rep.stats.plan_hits = rep.plans.hits;
+        rep.stats.plan_misses = rep.plans.misses;
+        rep.stats.plan_compile_ns = rep.plans.compile_ns;
+        rep.stats.end_cycle = rep.device_free;
+        max_end = max_end.max(rep.device_free);
+        total_shed += rep.stats.shed_requests;
+        total_failed += rep.stats.failed_requests;
+        for o in rep.stats.outcomes() {
+            total_served += 1;
+            if let Some(t) = tenant_of(o.id).and_then(|t| tenants.get_mut(t)) {
+                t.served += 1;
+                if o.sla_met {
+                    t.sla_hits += 1;
+                }
+            }
+        }
+        let rep_labels: Vec<String> =
+            rep.tracker.points.iter().map(|p| p.label.clone()).collect();
+        reports.push(rep.stats.report(
+            &graph.name,
+            &platform.name,
+            pool.threads(),
+            &rep_labels,
+            platform.f_clk_hz,
+        ));
+    }
+    for id in &shed_ids {
+        if let Some(t) = tenant_of(*id).and_then(|t| tenants.get_mut(t)) {
+            t.shed += 1;
+        }
+    }
+    for t in tenants.values_mut() {
+        t.failed = t.arrivals.saturating_sub(t.served + t.shed);
+    }
+    let accounted = total_served + total_shed + total_failed;
+    if accounted != trace.len() as u64 {
+        return Err(anyhow!(
+            "cluster: accounting broke — {} served + {} shed + {} failed != {} trace \
+             requests",
+            total_served,
+            total_shed,
+            total_failed,
+            trace.len()
+        ));
+    }
+    let makespan_ms = max_end as f64 / platform.f_clk_hz * 1e3;
+    let virtual_img_s = if max_end > 0 {
+        total_served as f64 / (max_end as f64 / platform.f_clk_hz)
+    } else {
+        0.0
+    };
+    Ok(ClusterReport {
+        model: graph.name.clone(),
+        platform: platform.name.clone(),
+        replicas: reports,
+        dispatched,
+        steals,
+        stolen_requests,
+        cold_compiles,
+        total_requests: total_served,
+        shed_requests: total_shed,
+        failed_requests: total_failed,
+        makespan_ms,
+        virtual_img_s,
+        tenants: tenants.into_values().collect(),
+    })
+}

@@ -122,6 +122,12 @@ impl ServeMetrics {
         self.outcomes.len()
     }
 
+    /// The recorded per-request outcomes (the cluster driver reads
+    /// these back for per-tenant attribution).
+    pub fn outcomes(&self) -> &[RequestOutcome] {
+        &self.outcomes
+    }
+
     /// Fold the collected outcomes into a renderable report. `labels`
     /// are the frontier point labels (row names); `f_clk_hz` converts
     /// cycles to milliseconds for the dashboard.
@@ -430,7 +436,7 @@ impl ServeReport {
         h
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         let rows = self
             .rows
             .iter()
@@ -475,7 +481,7 @@ impl ServeReport {
         ])
     }
 
-    fn from_json(v: &Json) -> Result<ServeReport> {
+    pub(crate) fn from_json(v: &Json) -> Result<ServeReport> {
         let rows = v
             .req("rows")?
             .as_arr()

@@ -41,15 +41,19 @@
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
+pub mod cluster;
 pub mod dispatch;
 pub mod health;
 pub mod metrics;
 pub mod sweep;
+pub mod trace;
 
+pub use cluster::{ClusterOpts, ClusterReport, TenantRow};
 pub use dispatch::{dispatch, dispatch_filtered, Decision, Sla};
 pub use health::AdmissionCfg;
 pub use metrics::{ServeMetrics, ServeReport};
 pub use sweep::{FrontierPoint, SweepCfg};
+pub use trace::{Trace, TraceError, TraceRecord};
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
@@ -64,7 +68,6 @@ use crate::hw::Platform;
 use crate::model::Graph;
 use crate::quant::{KernelBackend, ParamSet, QuantNet, QuantPlan};
 use crate::util::pool::ThreadPool;
-use crate::util::prng::Pcg32;
 
 use batcher::{Batch, Batcher, PlanCache, Request};
 use dispatch::fastest_filtered;
@@ -161,37 +164,32 @@ pub fn report_path(results_dir: &Path, model: &str, platform: &str) -> PathBuf {
     results_dir.join(format!("serve_{model}_{platform}.json"))
 }
 
-/// Seeded synthetic request stream: arrivals with mean gap
-/// `opts.mean_gap`, ~15% min-energy SLAs, the rest latency budgets
-/// drawn around the frontier's own latency range (so some are
-/// infeasible by construction and exercise the fallback path).
-/// Dispatch happens at *arrival* in the driver loop — under faults the
-/// right mapping depends on the unit-health mask at arrival time —
-/// so the `point` here is a placeholder.
-fn synth_requests(
-    opts: &ServeOpts,
-    n_requests: usize,
-    seed: u64,
-    frontier: &[FrontierPoint],
-) -> Vec<Request> {
-    let min_cyc = frontier.iter().map(|p| p.cycles).min().unwrap_or(0);
-    let max_cyc = frontier.iter().map(|p| p.cycles).max().unwrap_or(0);
-    let lo = (min_cyc as f64 * 0.8) as u64;
-    let hi = (max_cyc + opts.launch_cycles) as f64 * 1.6;
-    let mut rng = Pcg32::new(seed, 101);
-    let mut t = 0u64;
-    let mut reqs = Vec::with_capacity(n_requests);
-    for id in 0..n_requests as u64 {
-        t += 1 + (rng.next_f32() as f64 * 2.0 * opts.mean_gap as f64) as u64;
-        let sla = if rng.next_f32() < 0.15 {
-            Sla::MinEnergy
-        } else {
-            let u = rng.next_f32() as f64;
-            Sla::LatencyBudget(lo + (u * (hi - lo as f64).max(1.0)) as u64)
-        };
-        reqs.push(Request { id, arrival: t, sla, point: 0 });
+/// Where a request's synthetic-input seed comes from. The single-
+/// session loop seeds every request identically (the historical
+/// behavior); trace replay carries a per-record seed, so the cluster
+/// driver looks seeds up by request id.
+pub(crate) enum SeedLookup<'a> {
+    /// One seed for the whole stream.
+    Uniform(u64),
+    /// Per-request seeds indexed by request id, with a fallback for
+    /// ids past the table (defensive — ids are always in range).
+    PerRequest {
+        /// `seeds[id]` is request `id`'s input seed.
+        seeds: &'a [u64],
+        /// Seed for out-of-table ids.
+        fallback: u64,
+    },
+}
+
+impl SeedLookup<'_> {
+    pub(crate) fn seed_for(&self, id: u64) -> u64 {
+        match self {
+            SeedLookup::Uniform(s) => *s,
+            SeedLookup::PerRequest { seeds, fallback } => {
+                seeds.get(id as usize).copied().unwrap_or(*fallback)
+            }
+        }
     }
-    reqs
 }
 
 /// Retry-side bookkeeping, kept out of [`Request`] (which stays a
@@ -272,7 +270,7 @@ fn exec_batch(
     params: &ParamSet<'_>,
     tracker: &HealthTracker,
     opts: &ServeOpts,
-    seed: u64,
+    seeds: &SeedLookup<'_>,
     pool: &ThreadPool,
     cache: &mut PlanCache,
     stats: &mut ServeMetrics,
@@ -310,7 +308,7 @@ fn exec_batch(
     let mut x = Vec::with_capacity(bsz * c * h * w);
     for r in &batch.requests {
         let cls = (r.id % graph.classes as u64) as u32;
-        x.extend_from_slice(&gen_sample(seed, 1, r.id, cls, h, w));
+        x.extend_from_slice(&gen_sample(seeds.seed_for(r.id), 1, r.id, cls, h, w));
     }
     let key = QuantPlan::cache_key(&graph.name, &platform.name, &fp.mapping, backend);
     // engine wall time excludes plan compilation: compile cost is
@@ -393,7 +391,8 @@ pub(crate) fn run_serve(
         Some(plan) => Some(plan.resolve(platform)?),
         None => None,
     };
-    let reqs = synth_requests(opts, n_requests, seed, frontier);
+    let reqs = trace::Trace::synth(opts, n_requests, seed, frontier, &graph.name).to_requests();
+    let seeds = SeedLookup::Uniform(seed);
     let mut tracker = HealthTracker::new(frontier, platform, resolved, graph);
     let mut batcher = Batcher::new(opts.max_batch, opts.max_wait);
     let mut stats = ServeMetrics::new();
@@ -423,7 +422,7 @@ pub(crate) fn run_serve(
                     params,
                     &tracker,
                     opts,
-                    seed,
+                    &seeds,
                     pool,
                     plans,
                     &mut stats,
@@ -461,7 +460,7 @@ pub(crate) fn run_serve(
                                     params,
                                     &tracker,
                                     opts,
-                                    seed,
+                                    &seeds,
                                     pool,
                                     plans,
                                     &mut stats,
@@ -525,7 +524,7 @@ pub(crate) fn run_serve(
                                 params,
                                 &tracker,
                                 opts,
-                                seed,
+                                &seeds,
                                 pool,
                                 plans,
                                 &mut stats,
@@ -559,7 +558,7 @@ pub(crate) fn run_serve(
                         params,
                         &tracker,
                         opts,
-                        seed,
+                        &seeds,
                         pool,
                         plans,
                         &mut stats,

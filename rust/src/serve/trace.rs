@@ -1,0 +1,463 @@
+//! Replayable JSONL request traces — the canonical serve load source.
+//!
+//! A trace is a sequence of [`TraceRecord`]s, one JSON object per line:
+//!
+//! ```text
+//! {"arrival_cycle":"21345","sla":{"latency_budget":"800000"},"tenant":"interactive","model":"tinycnn","seed":"1234"}
+//! {"arrival_cycle":"40190","sla":"min_energy","tenant":"batch","model":"tinycnn","seed":"1234"}
+//! ```
+//!
+//! Every u64 (arrival cycle, latency budget, seed) travels as a
+//! *decimal string*, never a JSON number: JSON numbers are f64 and
+//! silently lose precision above 2^53 — the same hazard the seed cache
+//! fixed in the frontier store. Arrivals must be non-decreasing;
+//! `tenant` is a free-form label restricted to `[a-z0-9_-]+` (so
+//! emission never needs escaping); `model` must name a bundled model.
+//! Malformed input surfaces as a typed [`TraceError`], never a panic.
+//!
+//! [`Trace::synth`] is the old synthetic generator re-homed as one
+//! trace *producer*: it replays the exact `Pcg32(seed, 101)` stream the
+//! serve loop has always used, so a synthesized trace replays
+//! byte-identical to the historical in-memory request stream.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use crate::model::ALL_MODELS;
+use crate::util::json::{self, Json};
+use crate::util::prng::Pcg32;
+
+use super::batcher::Request;
+use super::dispatch::Sla;
+use super::sweep::FrontierPoint;
+use super::ServeOpts;
+
+/// Typed trace-format failures. Each parse-side variant carries the
+/// 1-based line number, so a bad record in a million-line trace is
+/// addressable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceError {
+    /// Reading or writing the trace file failed.
+    Io {
+        /// Path the operation targeted.
+        path: String,
+        /// Underlying I/O error text.
+        msg: String,
+    },
+    /// A line is not a well-formed JSON object.
+    Parse {
+        /// 1-based line number.
+        line: usize,
+        /// Parser diagnostic.
+        msg: String,
+    },
+    /// A required field is absent.
+    MissingField {
+        /// 1-based line number.
+        line: usize,
+        /// The missing field.
+        field: &'static str,
+    },
+    /// A u64 field is not a decimal string (JSON numbers are rejected:
+    /// they are f64 and corrupt values above 2^53).
+    BadNumber {
+        /// 1-based line number.
+        line: usize,
+        /// The offending field.
+        field: &'static str,
+        /// What the line actually contained.
+        value: String,
+    },
+    /// Arrival cycles went backwards between consecutive records.
+    OutOfOrder {
+        /// 1-based line number of the offending record.
+        line: usize,
+        /// Previous record's arrival cycle.
+        prev: u64,
+        /// This record's (earlier) arrival cycle.
+        got: u64,
+    },
+    /// Tenant label violates the `[a-z0-9_-]+` charset.
+    BadTenant {
+        /// 1-based line number.
+        line: usize,
+        /// The offending label.
+        tenant: String,
+    },
+    /// Model is not one of the bundled models.
+    UnknownModel {
+        /// 1-based line number.
+        line: usize,
+        /// The offending model name.
+        model: String,
+    },
+    /// The `sla` field is neither `"min_energy"` nor
+    /// `{"latency_budget": "<cycles>"}`.
+    BadSla {
+        /// 1-based line number.
+        line: usize,
+        /// What was wrong with it.
+        msg: String,
+    },
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Io { path, msg } => write!(f, "trace: io error on {path}: {msg}"),
+            TraceError::Parse { line, msg } => {
+                write!(f, "trace line {line}: not a json object ({msg})")
+            }
+            TraceError::MissingField { line, field } => {
+                write!(f, "trace line {line}: missing field '{field}'")
+            }
+            TraceError::BadNumber { line, field, value } => write!(
+                f,
+                "trace line {line}: field '{field}' must be a u64 decimal string \
+                 (json numbers are f64 and corrupt cycles above 2^53), got {value}"
+            ),
+            TraceError::OutOfOrder { line, prev, got } => write!(
+                f,
+                "trace line {line}: arrival_cycle {got} is earlier than the previous \
+                 record's {prev} — traces must be sorted by arrival"
+            ),
+            TraceError::BadTenant { line, tenant } => write!(
+                f,
+                "trace line {line}: tenant '{tenant}' must be non-empty [a-z0-9_-]+"
+            ),
+            TraceError::UnknownModel { line, model } => write!(
+                f,
+                "trace line {line}: unknown model '{model}' (choose from {ALL_MODELS:?})"
+            ),
+            TraceError::BadSla { line, msg } => write!(f, "trace line {line}: bad sla: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// One request in a trace (one JSONL line).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Arrival time on the shared virtual timeline, simulated cycles.
+    pub arrival_cycle: u64,
+    /// The request's SLA.
+    pub sla: Sla,
+    /// Tenant label (`[a-z0-9_-]+`), carried into per-tenant dashboards.
+    pub tenant: String,
+    /// Model the request targets (must match the serving session's).
+    pub model: String,
+    /// Per-request input seed (drives `gen_sample` for this request).
+    pub seed: u64,
+}
+
+/// A replayable request trace: records sorted by arrival cycle.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    /// The records, in non-decreasing `arrival_cycle` order.
+    pub records: Vec<TraceRecord>,
+}
+
+fn valid_label(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes().all(|c| {
+            c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_' || c == b'-'
+        })
+}
+
+/// Required u64 field, transported as a decimal string.
+fn u64_field(v: &Json, line: usize, field: &'static str) -> Result<u64, TraceError> {
+    let node = v.get(field).ok_or(TraceError::MissingField { line, field })?;
+    let s = node
+        .as_str()
+        .ok_or_else(|| TraceError::BadNumber { line, field, value: node.to_string() })?;
+    s.parse::<u64>()
+        .map_err(|_| TraceError::BadNumber { line, field, value: format!("\"{s}\"") })
+}
+
+fn str_field<'a>(v: &'a Json, line: usize, field: &'static str) -> Result<&'a str, TraceError> {
+    let node = v.get(field).ok_or(TraceError::MissingField { line, field })?;
+    node.as_str().ok_or(TraceError::MissingField { line, field })
+}
+
+fn sla_from_json(v: &Json, line: usize) -> Result<Sla, TraceError> {
+    let node = v.get("sla").ok_or(TraceError::MissingField { line, field: "sla" })?;
+    match node {
+        Json::Str(s) if s == "min_energy" => Ok(Sla::MinEnergy),
+        Json::Obj(_) => {
+            if node.get("latency_budget").is_none() {
+                return Err(TraceError::BadSla {
+                    line,
+                    msg: "object form must be {\"latency_budget\": \"<cycles>\"}".to_string(),
+                });
+            }
+            let b = u64_field(node, line, "latency_budget")?;
+            Ok(Sla::LatencyBudget(b))
+        }
+        other => Err(TraceError::BadSla {
+            line,
+            msg: format!(
+                "expected \"min_energy\" or {{\"latency_budget\": \"<cycles>\"}}, got {other}"
+            ),
+        }),
+    }
+}
+
+impl TraceRecord {
+    /// One JSONL line (no trailing newline). Labels are charset-checked
+    /// at construction/parse time, so no JSON escaping is ever needed.
+    fn to_line(&self) -> String {
+        let sla = match self.sla {
+            Sla::MinEnergy => "\"min_energy\"".to_string(),
+            Sla::LatencyBudget(b) => format!("{{\"latency_budget\":\"{b}\"}}"),
+        };
+        format!(
+            "{{\"arrival_cycle\":\"{}\",\"sla\":{},\"tenant\":\"{}\",\"model\":\"{}\",\"seed\":\"{}\"}}",
+            self.arrival_cycle, sla, self.tenant, self.model, self.seed
+        )
+    }
+
+    fn from_line(line_no: usize, text: &str) -> Result<TraceRecord, TraceError> {
+        let v = json::parse(text)
+            .map_err(|e| TraceError::Parse { line: line_no, msg: e.to_string() })?;
+        if v.as_obj().is_none() {
+            return Err(TraceError::Parse {
+                line: line_no,
+                msg: "expected a json object".to_string(),
+            });
+        }
+        let arrival_cycle = u64_field(&v, line_no, "arrival_cycle")?;
+        let sla = sla_from_json(&v, line_no)?;
+        let tenant = str_field(&v, line_no, "tenant")?.to_string();
+        if !valid_label(&tenant) {
+            return Err(TraceError::BadTenant { line: line_no, tenant });
+        }
+        let model = str_field(&v, line_no, "model")?.to_string();
+        if !ALL_MODELS.contains(&model.as_str()) {
+            return Err(TraceError::UnknownModel { line: line_no, model });
+        }
+        let seed = u64_field(&v, line_no, "seed")?;
+        Ok(TraceRecord { arrival_cycle, sla, tenant, model, seed })
+    }
+}
+
+impl Trace {
+    /// Records in the trace.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when the trace has no records.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Parse a full JSONL document (blank lines ignored). Enforces the
+    /// sorted-arrival invariant across records.
+    pub fn from_jsonl_text(text: &str) -> Result<Trace, TraceError> {
+        let mut records = Vec::new();
+        let mut prev: Option<u64> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            if raw.trim().is_empty() {
+                continue;
+            }
+            let rec = TraceRecord::from_line(line_no, raw)?;
+            if let Some(p) = prev {
+                if rec.arrival_cycle < p {
+                    return Err(TraceError::OutOfOrder {
+                        line: line_no,
+                        prev: p,
+                        got: rec.arrival_cycle,
+                    });
+                }
+            }
+            prev = Some(rec.arrival_cycle);
+            records.push(rec);
+        }
+        Ok(Trace { records })
+    }
+
+    /// Emit the full JSONL document (one record per line, trailing
+    /// newline when non-empty).
+    pub fn to_jsonl_text(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.to_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Load a trace from a JSONL file.
+    pub fn load(path: &Path) -> Result<Trace, TraceError> {
+        let text = fs::read_to_string(path).map_err(|e| TraceError::Io {
+            path: path.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        Trace::from_jsonl_text(&text)
+    }
+
+    /// Save the trace as a JSONL file (atomic via tempfile-rename).
+    pub fn save(&self, path: &Path) -> Result<(), TraceError> {
+        crate::exp::store::write_atomic(path, &self.to_jsonl_text()).map_err(|e| {
+            TraceError::Io { path: path.display().to_string(), msg: e.to_string() }
+        })
+    }
+
+    /// The historical synthetic generator, now a trace producer: mean
+    /// inter-arrival gap `opts.mean_gap`, ~15% min-energy SLAs, the
+    /// rest latency budgets drawn around the frontier's own latency
+    /// range (so some are infeasible by construction and exercise the
+    /// fallback path). The `Pcg32::new(seed, 101)` draw sequence is
+    /// byte-identical to the pre-trace `synth_requests`; tenants derive
+    /// from the SLA (no extra draws) and every record carries the
+    /// session seed, so replay regenerates the same inputs.
+    pub fn synth(
+        opts: &ServeOpts,
+        n_requests: usize,
+        seed: u64,
+        frontier: &[FrontierPoint],
+        model: &str,
+    ) -> Trace {
+        let min_cyc = frontier.iter().map(|p| p.cycles).min().unwrap_or(0);
+        let max_cyc = frontier.iter().map(|p| p.cycles).max().unwrap_or(0);
+        let lo = (min_cyc as f64 * 0.8) as u64;
+        let hi = (max_cyc + opts.launch_cycles) as f64 * 1.6;
+        let mut rng = Pcg32::new(seed, 101);
+        let mut t = 0u64;
+        let mut records = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            t += 1 + (rng.next_f32() as f64 * 2.0 * opts.mean_gap as f64) as u64;
+            let sla = if rng.next_f32() < 0.15 {
+                Sla::MinEnergy
+            } else {
+                let u = rng.next_f32() as f64;
+                Sla::LatencyBudget(lo + (u * (hi - lo as f64).max(1.0)) as u64)
+            };
+            let tenant = match sla {
+                Sla::MinEnergy => "batch",
+                Sla::LatencyBudget(_) => "interactive",
+            };
+            records.push(TraceRecord {
+                arrival_cycle: t,
+                sla,
+                tenant: tenant.to_string(),
+                model: model.to_string(),
+                seed,
+            });
+        }
+        Trace { records }
+    }
+
+    /// Materialize driver requests: ids are record indices (they double
+    /// as the synthetic-input sample index), `point` is a placeholder
+    /// until dispatch.
+    pub fn to_requests(&self) -> Vec<Request> {
+        self.records
+            .iter()
+            .enumerate()
+            .map(|(i, rec)| Request {
+                id: i as u64,
+                arrival: rec.arrival_cycle,
+                sla: rec.sla,
+                point: 0,
+            })
+            .collect()
+    }
+
+    /// Per-record input seeds, indexed like [`Trace::to_requests`] ids.
+    pub fn seeds(&self) -> Vec<u64> {
+        self.records.iter().map(|r| r.seed).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn rec(t: u64, sla: Sla) -> TraceRecord {
+        TraceRecord {
+            arrival_cycle: t,
+            sla,
+            tenant: "interactive".to_string(),
+            model: "tinycnn".to_string(),
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_records() {
+        let tr = Trace {
+            records: vec![
+                rec(10, Sla::LatencyBudget(800_000)),
+                rec(20, Sla::MinEnergy),
+                rec(20, Sla::LatencyBudget(u64::MAX)),
+            ],
+        };
+        let text = tr.to_jsonl_text();
+        let back = Trace::from_jsonl_text(&text).unwrap();
+        assert_eq!(tr, back);
+    }
+
+    #[test]
+    fn u64_above_f64_precision_survives() {
+        // 2^53 + 1 is unrepresentable as f64; the decimal-string
+        // transport must carry it exactly
+        let big = (1u64 << 53) + 1;
+        let mut r = rec(big, Sla::LatencyBudget(big));
+        r.seed = u64::MAX;
+        let tr = Trace { records: vec![r] };
+        let back = Trace::from_jsonl_text(&tr.to_jsonl_text()).unwrap();
+        assert_eq!(back.records[0].arrival_cycle, big);
+        assert_eq!(back.records[0].sla, Sla::LatencyBudget(big));
+        assert_eq!(back.records[0].seed, u64::MAX);
+    }
+
+    #[test]
+    fn numeric_cycle_field_is_a_typed_error() {
+        let line = r#"{"arrival_cycle":9007199254740993,"sla":"min_energy","tenant":"t","model":"tinycnn","seed":"1"}"#;
+        match Trace::from_jsonl_text(line) {
+            Err(TraceError::BadNumber { line: 1, field: "arrival_cycle", .. }) => {}
+            other => panic!("expected BadNumber, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_order_arrivals_rejected() {
+        let tr = Trace {
+            records: vec![rec(100, Sla::MinEnergy), rec(99, Sla::MinEnergy)],
+        };
+        match Trace::from_jsonl_text(&tr.to_jsonl_text()) {
+            Err(TraceError::OutOfOrder { line: 2, prev: 100, got: 99 }) => {}
+            other => panic!("expected OutOfOrder, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn synth_matches_request_stream_shape() {
+        let opts = ServeOpts::default();
+        let tr = Trace::synth(&opts, 16, 7, &[], "tinycnn");
+        assert_eq!(tr.len(), 16);
+        let reqs = tr.to_requests();
+        assert_eq!(reqs.len(), 16);
+        for (i, (r, rc)) in reqs.iter().zip(&tr.records).enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.arrival, rc.arrival_cycle);
+            assert_eq!(r.sla, rc.sla);
+            let want = match rc.sla {
+                Sla::MinEnergy => "batch",
+                Sla::LatencyBudget(_) => "interactive",
+            };
+            assert_eq!(rc.tenant, want);
+            assert_eq!(rc.seed, 7);
+        }
+        // arrivals strictly increase (gap >= 1 per step)
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival < w[1].arrival);
+        }
+    }
+}

@@ -8,80 +8,18 @@
 //! from the swept frontier, never hard-coded, so the injected fault is
 //! guaranteed to hit a unit the mapper actually uses.
 
-use std::collections::BTreeSet;
-use std::path::Path;
+mod common;
 
-use odimo::api::{AdmissionCfg, FaultPlan, ServeOpts, Session, SessionBuilder};
+use std::collections::BTreeSet;
+
+use common::{
+    assert_reports_identical, chaos_opts, chaos_session, probe_frontier, units_used,
+    N_REQUESTS,
+};
+use odimo::api::{AdmissionCfg, FaultPlan};
 use odimo::coordinator::baselines::{min_cost, CostObjective};
 use odimo::hw::{FaultEvent, FaultState, Platform, UnitHealth};
 use odimo::model::tinycnn;
-use odimo::serve::sweep;
-use odimo::serve::{FrontierPoint, SweepCfg};
-use odimo::util::pool::ThreadPool;
-
-const N_REQUESTS: usize = 24;
-const SEED: u64 = 9;
-
-fn chaos_session(dir: &Path, threads: usize) -> Session {
-    SessionBuilder::new("tinycnn")
-        .platform("mpsoc4")
-        .results_dir(dir)
-        .threads(threads)
-        .seed(SEED)
-        .sweep_calib(4)
-        .sweep_blend_steps(2)
-        .plan_cache_cap(8)
-        .build()
-        .unwrap()
-}
-
-fn chaos_opts(plan: Option<FaultPlan>) -> ServeOpts {
-    ServeOpts {
-        n_requests: Some(N_REQUESTS),
-        max_batch: 4,
-        max_wait: 50_000,
-        mean_gap: 15_000,
-        launch_cycles: 10_000,
-        fault_plan: plan,
-        ..ServeOpts::default()
-    }
-}
-
-/// The frontier the sessions above will serve from (same sweep config,
-/// same seed — the disk cache makes this literal agreement, but the
-/// sweep itself is deterministic so a fresh compute agrees too).
-fn probe_frontier(p: &Platform) -> Vec<FrontierPoint> {
-    let pool = ThreadPool::new(2);
-    let cfg = SweepCfg { seed: SEED, calib: 4, blend_steps: 2 };
-    sweep::sweep_frontier(&tinycnn(), p, &cfg, &pool).unwrap()
-}
-
-/// Unit indices a frontier point assigns at least one channel to.
-fn units_used(point: &FrontierPoint, n_acc: usize) -> BTreeSet<usize> {
-    let mut used = BTreeSet::new();
-    for counts in point.mapping.channel_split(n_acc).values() {
-        for (i, &c) in counts.iter().enumerate() {
-            if c > 0 {
-                used.insert(i);
-            }
-        }
-    }
-    used
-}
-
-fn assert_reports_identical(
-    a: &odimo::api::ServeReport,
-    b: &odimo::api::ServeReport,
-    ctx: &str,
-) {
-    assert_eq!(a.deterministic_digest(), b.deterministic_digest(), "{ctx}: digest drift");
-    assert_eq!(a.rows.len(), b.rows.len(), "{ctx}");
-    for (x, y) in a.rows.iter().zip(&b.rows) {
-        assert_eq!(x.label, y.label, "{ctx}");
-        assert_eq!(x.requests, y.requests, "{ctx}");
-        assert_eq!(x.sla_hits, y.sla_hits, "{ctx}");
-    }
-}
 
 /// A unit that dies before the first request ever arrives: every batch
 /// in the run must land on points that do not touch it — either

@@ -1,0 +1,314 @@
+//! Differential/property pins for the cluster serving layer
+//! (serve/cluster.rs): a one-replica cluster with continuous batching
+//! off replays the single-Session loop digest-for-digest; every trace
+//! request is accounted exactly once (served / shed / failed) under
+//! replicas, faults and admission control; digests are invariant
+//! across 1/2/8 worker threads; and a constructed overload scenario
+//! forces a work-steal whose queue-time accounting provably spans the
+//! move (measured from the request's *first* arrival, not the steal).
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use common::{
+    assert_reports_identical, chaos_opts, chaos_session, probe_frontier, serve_opts,
+    serve_session, units_used, N_REQUESTS, SEED,
+};
+use odimo::api::{AdmissionCfg, ClusterOpts, FaultEvent, FaultPlan, ServeOpts};
+use odimo::hw::Platform;
+use odimo::serve::{Sla, Trace, TraceRecord};
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fixture_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../config/trace_demo.jsonl")
+}
+
+/// The differential pin: `--replicas 1` with continuous batching off,
+/// stealing off and a zero compile gate is the single-session loop —
+/// the embedded replica report digests identically to `Session::serve`
+/// (both sides cold, so plan-cache counters agree too).
+#[test]
+fn one_flush_replica_replays_single_session_digest_for_digest() {
+    let dir = fresh_dir("odimo_cluster_pin");
+    let single = serve_session(&dir, 2, SEED).serve(&serve_opts(4)).unwrap();
+    let copts = ClusterOpts {
+        replicas: 1,
+        serve: serve_opts(4),
+        continuous: false,
+        steal_max: 0,
+        compile_cycles: 0,
+        plan_cache_cap: 8,
+    };
+    let cluster = serve_session(&dir, 2, SEED).serve_cluster(&copts, None).unwrap();
+    assert_eq!(cluster.replicas.len(), 1);
+    assert_reports_identical(&single, &cluster.replicas[0], "r=1 flush pin");
+    assert_eq!(cluster.dispatched, vec![N_REQUESTS as u64]);
+    assert_eq!(cluster.steals, 0);
+    assert_eq!(cluster.cold_compiles, 0, "zero-cycle gate must not be counted");
+    assert_eq!(cluster.accounted(), N_REQUESTS as u64);
+    // cluster-level aggregates agree with the embedded report
+    assert_eq!(cluster.total_requests as usize, single.total_requests);
+    assert_eq!(cluster.makespan_ms, single.makespan_ms);
+}
+
+/// The same pin under a scripted fault plan on `mpsoc4`: aborts,
+/// retries and degraded re-maps all replay identically through the
+/// cluster path.
+#[test]
+fn one_flush_replica_pin_holds_under_faults() {
+    let dir = fresh_dir("odimo_cluster_pin_faults");
+    let p = Platform::mpsoc4();
+    let plan = FaultPlan::synth(3, &p, 400_000);
+    let single = chaos_session(&dir, 2).serve(&chaos_opts(Some(plan.clone()))).unwrap();
+    let copts = ClusterOpts {
+        replicas: 1,
+        serve: chaos_opts(Some(plan)),
+        continuous: false,
+        steal_max: 0,
+        compile_cycles: 0,
+        plan_cache_cap: 8,
+    };
+    let cluster = chaos_session(&dir, 2).serve_cluster(&copts, None).unwrap();
+    assert_reports_identical(&single, &cluster.replicas[0], "r=1 fault pin");
+    assert_eq!(cluster.replicas[0].batch_aborts, single.batch_aborts);
+    assert_eq!(cluster.replicas[0].retries, single.retries);
+    assert_eq!(cluster.accounted(), N_REQUESTS as u64);
+}
+
+/// Conservation at `--replicas 4` with continuous batching, stealing,
+/// a compile gate, synthesized fault plans and overload admission all
+/// active at once: every trace request ends served, shed or failed
+/// exactly once, the router accounts every arrival, and the per-tenant
+/// rows partition the trace.
+#[test]
+fn four_replicas_account_every_request_under_chaos() {
+    let dir = fresh_dir("odimo_cluster_conserve");
+    let p = Platform::mpsoc4();
+    for seed in 0..3u64 {
+        let plan = FaultPlan::synth(seed, &p, 400_000);
+        let mut sopts = chaos_opts(Some(plan));
+        sopts.admission = AdmissionCfg { overload_wait: 60_000 };
+        sopts.max_retries = 4;
+        let copts = ClusterOpts {
+            replicas: 4,
+            serve: sopts,
+            continuous: true,
+            steal_max: 2,
+            compile_cycles: 5_000,
+            plan_cache_cap: 8,
+        };
+        let rep = chaos_session(&dir, 2).serve_cluster(&copts, None).unwrap();
+        assert_eq!(rep.replicas.len(), 4, "seed {seed}");
+        assert_eq!(
+            rep.accounted(),
+            N_REQUESTS as u64,
+            "seed {seed}: {} served + {} shed + {} failed != {N_REQUESTS}",
+            rep.total_requests,
+            rep.shed_requests,
+            rep.failed_requests
+        );
+        let routed: u64 = rep.dispatched.iter().sum();
+        assert_eq!(routed, N_REQUESTS as u64, "seed {seed}: router lost an arrival");
+        let arrivals: u64 = rep.tenants.iter().map(|t| t.arrivals).sum();
+        assert_eq!(arrivals, N_REQUESTS as u64, "seed {seed}");
+        for t in &rep.tenants {
+            assert_eq!(
+                t.served + t.shed + t.failed,
+                t.arrivals,
+                "seed {seed}: tenant {} leaks requests",
+                t.tenant
+            );
+        }
+        let per_replica: u64 = rep.replicas.iter().map(|r| r.total_requests as u64).sum();
+        assert_eq!(per_replica, rep.total_requests, "seed {seed}");
+        assert!(rep.cold_compiles > 0, "seed {seed}: gate never charged a first batch");
+    }
+}
+
+/// The digest is a pure function of (trace, platform, opts): invariant
+/// across 1/2/8 worker threads for one, two and four replicas — the
+/// thread pool only accelerates the real engine work inside a batch,
+/// never the virtual schedule.
+#[test]
+fn digest_is_invariant_across_threads_and_replica_counts() {
+    let dir = fresh_dir("odimo_cluster_threads");
+    let p = Platform::mpsoc4();
+    for replicas in [1usize, 2, 4] {
+        let copts = ClusterOpts {
+            replicas,
+            serve: chaos_opts(Some(FaultPlan::synth(3, &p, 400_000))),
+            continuous: true,
+            steal_max: 2,
+            compile_cycles: 5_000,
+            plan_cache_cap: 8,
+        };
+        let base = chaos_session(&dir, 1).serve_cluster(&copts, None).unwrap();
+        assert_eq!(base.accounted(), N_REQUESTS as u64, "r={replicas}");
+        for threads in [2usize, 8] {
+            let rep = chaos_session(&dir, threads).serve_cluster(&copts, None).unwrap();
+            assert_eq!(
+                base.deterministic_digest(),
+                rep.deterministic_digest(),
+                "r={replicas}: digest drifted between 1 and {threads} threads"
+            );
+        }
+    }
+}
+
+/// Replaying the checked-in golden trace is deterministic run-to-run,
+/// and conservation holds against the trace length (not the synthetic
+/// default).
+#[test]
+fn golden_trace_replay_is_deterministic() {
+    let dir = fresh_dir("odimo_cluster_golden");
+    let trace = Trace::load(&fixture_path()).unwrap();
+    assert!(!trace.is_empty(), "golden fixture must not be empty");
+    let copts = ClusterOpts {
+        replicas: 4,
+        serve: chaos_opts(None),
+        continuous: true,
+        steal_max: 2,
+        compile_cycles: 5_000,
+        plan_cache_cap: 8,
+    };
+    let a = chaos_session(&dir, 2).serve_cluster(&copts, Some(&trace)).unwrap();
+    let b = chaos_session(&dir, 2).serve_cluster(&copts, Some(&trace)).unwrap();
+    assert_eq!(a.deterministic_digest(), b.deterministic_digest());
+    assert_eq!(a.accounted(), trace.len() as u64);
+    let routed: u64 = a.dispatched.iter().sum();
+    assert_eq!(routed, trace.len() as u64);
+    // tenant rows come from the trace, not the synthetic generator
+    let arrivals: u64 = a.tenants.iter().map(|t| t.arrivals).sum();
+    assert_eq!(arrivals, trace.len() as u64);
+}
+
+/// A constructed two-replica overload: six min-energy requests pile
+/// onto replica 0 and six tight-budget requests onto replica 1 (the
+/// least-loaded router alternates them exactly), and once the stream
+/// ends the quiet drain flushes both batches at the tail cycle. A
+/// unit death strictly inside replica 0's exec window (and past
+/// replica 1's) aborts only replica 0's batch; its six requests are
+/// re-queued below `max_batch` at the retry cycle, where replica 1 is
+/// provably idle while replica 0's device is still busy — the only
+/// legal steal window. The steal must happen, move work to replica 1,
+/// conserve every request, keep the whole schedule replayable, and
+/// account stolen queue time from the requests' *first* arrival (not
+/// the steal cycle).
+#[test]
+fn forced_steal_moves_backlog_and_accounts_queue_time_from_first_arrival() {
+    let dir = fresh_dir("odimo_cluster_steal");
+    let p = Platform::mpsoc4();
+    let frontier = probe_frontier(&p);
+    assert!(frontier.len() >= 2, "need distinct fastest and cheapest points");
+    // E: the min-energy point (where min-energy requests dispatch);
+    // Cf: the fastest point's cycles (a budget of exactly Cf admits
+    // only that point). Pareto non-domination makes Ce > Cf strict.
+    let e = frontier
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.energy_uj.total_cmp(&b.energy_uj))
+        .map(|(i, _)| i)
+        .unwrap();
+    let ce = frontier[e].cycles;
+    let cf = frontier.iter().map(|fp| fp.cycles).min().unwrap();
+    assert!(ce > cf, "frontier degenerate: cheapest point is also fastest");
+    let victim_unit = units_used(&frontier[e], p.n_acc())
+        .first()
+        .copied()
+        .expect("min-energy point maps at least one unit");
+    let victim_name = p.accelerators[victim_unit].name.clone();
+
+    const W: u64 = 50_000; // max_wait: never reached — the quiet drain preempts it
+    const L: u64 = 10_000; // launch_cycles
+    const BACKOFF: u64 = 1_000; // < L, so the retry lands while replica 0 is busy
+    const TAIL: u64 = 11; // last arrival cycle: the quiet drain flushes here
+    // Once arrival 11 is consumed the loop quiet-drains both residual
+    // batches at the tail cycle: replica 0's six min-energy requests
+    // run to d0, replica 1's six budget requests to d1 < d0. A unit
+    // death strictly between them lands inside replica 0's exec
+    // window only.
+    let d0 = TAIL + L + 6 * ce;
+    let d1 = TAIL + L + 6 * cf;
+    assert!(d1 < d0);
+    let kill_at = d1 + (d0 - d1) / 2;
+    let retry_at = kill_at + BACKOFF;
+    assert!(d1 < kill_at && kill_at < d0);
+
+    let mut records = Vec::new();
+    for t in 0..12u64 {
+        let (sla, tenant) = if t % 2 == 0 {
+            (Sla::MinEnergy, "batch")
+        } else {
+            (Sla::LatencyBudget(cf), "interactive")
+        };
+        records.push(TraceRecord {
+            arrival_cycle: t,
+            sla,
+            tenant: tenant.to_string(),
+            model: "tinycnn".to_string(),
+            seed: SEED,
+        });
+    }
+    let trace = Trace { records };
+
+    let sopts = ServeOpts {
+        n_requests: None,
+        max_batch: 8,
+        max_wait: W,
+        mean_gap: 15_000,
+        launch_cycles: L,
+        fault_plan: Some(FaultPlan {
+            events: vec![FaultEvent::UnitDown { unit: victim_name, at_cycle: kill_at }],
+        }),
+        retry_backoff: BACKOFF,
+        ..ServeOpts::default()
+    };
+    let copts = ClusterOpts {
+        replicas: 2,
+        serve: sopts,
+        continuous: false,
+        steal_max: 4,
+        compile_cycles: 0,
+        plan_cache_cap: 8,
+    };
+    let rep = chaos_session(&dir, 2).serve_cluster(&copts, Some(&trace)).unwrap();
+
+    assert_eq!(rep.dispatched, vec![6, 6], "router must alternate the arrivals");
+    assert!(rep.steals >= 1, "constructed steal window never fired");
+    assert!(rep.stolen_requests >= 1);
+    assert_eq!(rep.accounted(), 12, "stealing lost or duplicated a request");
+    assert_eq!(rep.shed_requests, 0);
+    assert_eq!(rep.failed_requests, 0, "stolen requests must still be served");
+    assert_eq!(rep.replicas[0].batch_aborts, 1, "only replica 0's batch spans the kill");
+    assert_eq!(rep.replicas[1].batch_aborts, 0);
+    assert!(
+        rep.replicas[1].total_requests > 6,
+        "replica 1 was routed 6 arrivals but served {}; the steal moved nothing",
+        rep.replicas[1].total_requests
+    );
+    // queue-time accounting spans the move: a stolen request's wait
+    // runs from its first arrival (~cycle 0) to its launch on the
+    // thief at the retry cycle, which sits past kill_at. Replica 1's
+    // own six requests launch at the tail drain with near-zero waits,
+    // so its mean over 6 own + 4 stolen is ~0.4 * (kill_at + backoff)
+    // — strictly above kill_at / 3. If stealing re-based queue time
+    // at the steal cycle instead, all ten waits would be ~0 cycles
+    // and the mean would collapse far below the floor.
+    let to_ms = |cycles: u64| cycles as f64 / p.f_clk_hz * 1e3;
+    assert!(
+        rep.replicas[1].mean_queue_ms > to_ms(kill_at / 3),
+        "stolen queue time was not measured from first arrival: mean {} ms vs floor {} ms \
+         (retry was due at cycle {retry_at})",
+        rep.replicas[1].mean_queue_ms,
+        to_ms(kill_at / 3)
+    );
+    // the whole constructed schedule replays digest-for-digest
+    let again = chaos_session(&dir, 2).serve_cluster(&copts, Some(&trace)).unwrap();
+    assert_eq!(rep.deterministic_digest(), again.deterministic_digest());
+}

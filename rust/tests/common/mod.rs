@@ -1,0 +1,110 @@
+//! Shared fixtures for the serve-family integration suites
+//! (`serve_props`, `chaos_props`, `cluster_props`, `trace_roundtrip`).
+//! One place owns the canonical session/opts shapes so the
+//! differential pins in `cluster_props` compare against exactly the
+//! configuration the older suites exercise.
+
+#![allow(dead_code)]
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use odimo::api::{FaultPlan, ServeOpts, ServeReport, Session, SessionBuilder};
+use odimo::hw::Platform;
+use odimo::model::tinycnn;
+use odimo::serve::sweep;
+use odimo::serve::{FrontierPoint, SweepCfg};
+use odimo::util::pool::ThreadPool;
+
+/// Request count shared by the closed-loop suites.
+pub const N_REQUESTS: usize = 24;
+/// Seed shared by the chaos/cluster suites.
+pub const SEED: u64 = 9;
+
+/// A `tinycnn`-on-`diana` session at smoke sweep sizes. The plan
+/// cache cap is larger than any tinycnn frontier, so each mapping
+/// compiles exactly once per cold session.
+pub fn serve_session(dir: &Path, threads: usize, seed: u64) -> Session {
+    SessionBuilder::new("tinycnn")
+        .platform("diana")
+        .results_dir(dir)
+        .threads(threads)
+        .seed(seed)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .plan_cache_cap(8)
+        .build()
+        .unwrap()
+}
+
+/// The canonical serve load: 24 requests, 15k-cycle mean gap.
+pub fn serve_opts(max_batch: usize) -> ServeOpts {
+    ServeOpts {
+        n_requests: Some(N_REQUESTS),
+        max_batch,
+        max_wait: 50_000,
+        mean_gap: 15_000,
+        launch_cycles: 10_000,
+        ..ServeOpts::default()
+    }
+}
+
+/// A `tinycnn`-on-`mpsoc4` session (4 units) for fault/cluster runs.
+pub fn chaos_session(dir: &Path, threads: usize) -> Session {
+    SessionBuilder::new("tinycnn")
+        .platform("mpsoc4")
+        .results_dir(dir)
+        .threads(threads)
+        .seed(SEED)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .plan_cache_cap(8)
+        .build()
+        .unwrap()
+}
+
+/// The canonical chaos load with an optional fault plan attached.
+pub fn chaos_opts(plan: Option<FaultPlan>) -> ServeOpts {
+    ServeOpts {
+        n_requests: Some(N_REQUESTS),
+        max_batch: 4,
+        max_wait: 50_000,
+        mean_gap: 15_000,
+        launch_cycles: 10_000,
+        fault_plan: plan,
+        ..ServeOpts::default()
+    }
+}
+
+/// The frontier the sessions above will serve from (same sweep config,
+/// same seed — the disk cache makes this literal agreement, but the
+/// sweep itself is deterministic so a fresh compute agrees too).
+pub fn probe_frontier(p: &Platform) -> Vec<FrontierPoint> {
+    let pool = ThreadPool::new(2);
+    let cfg = SweepCfg { seed: SEED, calib: 4, blend_steps: 2 };
+    sweep::sweep_frontier(&tinycnn(), p, &cfg, &pool).unwrap()
+}
+
+/// Unit indices a frontier point assigns at least one channel to.
+pub fn units_used(point: &FrontierPoint, n_acc: usize) -> BTreeSet<usize> {
+    let mut used = BTreeSet::new();
+    for counts in point.mapping.channel_split(n_acc).values() {
+        for (i, &c) in counts.iter().enumerate() {
+            if c > 0 {
+                used.insert(i);
+            }
+        }
+    }
+    used
+}
+
+/// Digest-plus-rows equality between two serve reports.
+pub fn assert_reports_identical(a: &ServeReport, b: &ServeReport, ctx: &str) {
+    assert_eq!(a.deterministic_digest(), b.deterministic_digest(), "{ctx}: digest drift");
+    assert_eq!(a.rows.len(), b.rows.len(), "{ctx}");
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.label, y.label, "{ctx}");
+        assert_eq!(x.requests, y.requests, "{ctx}");
+        assert_eq!(x.sla_hits, y.sla_hits, "{ctx}");
+    }
+}

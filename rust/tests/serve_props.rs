@@ -4,9 +4,11 @@
 //! the N = 2..4 built-in platforms. Randomized cases carry printed
 //! seeds so failures reproduce deterministically.
 
+mod common;
+
 use std::collections::BTreeMap;
 
-use odimo::api::{ServeOpts, Session, SessionBuilder};
+use common::{serve_opts, serve_session};
 use odimo::coordinator::Mapping;
 use odimo::hw::Platform;
 use odimo::model::tinycnn;
@@ -161,31 +163,6 @@ fn frontier_cache_schema_mismatch_is_a_clear_error() {
     std::fs::write(&path, bumped).unwrap();
     let e = sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap_err().to_string();
     assert!(e.contains("schema version 999"), "{e}");
-}
-
-fn serve_session(dir: &std::path::Path, threads: usize, seed: u64) -> Session {
-    SessionBuilder::new("tinycnn")
-        .platform("diana")
-        .results_dir(dir)
-        .threads(threads)
-        .seed(seed)
-        .sweep_calib(4)
-        .sweep_blend_steps(2)
-        // larger than any tinycnn frontier, so each mapping compiles once
-        .plan_cache_cap(8)
-        .build()
-        .unwrap()
-}
-
-fn serve_opts(max_batch: usize) -> ServeOpts {
-    ServeOpts {
-        n_requests: Some(24),
-        max_batch,
-        max_wait: 50_000,
-        mean_gap: 15_000,
-        launch_cycles: 10_000,
-        ..ServeOpts::default()
-    }
 }
 
 #[test]

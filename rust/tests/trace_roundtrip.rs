@@ -1,0 +1,216 @@
+//! Trace-format pins: the checked-in golden fixture is canonical
+//! (load → re-emit reproduces the file byte-for-byte), record-then-
+//! replay closes the loop (a synthesized trace saved to disk and
+//! replayed through a fresh cluster digests identically to serving the
+//! in-memory synthetic stream), malformed input surfaces as the typed
+//! [`TraceError`] variant it documents (never a panic), and u64 values
+//! above f64's 2^53 integer ceiling survive the decimal-string
+//! transport through a real file on disk.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use common::{chaos_opts, chaos_session};
+use odimo::api::{ClusterOpts, Trace, TraceError};
+use odimo::serve::{Sla, TraceRecord};
+
+fn fixture_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../config/trace_demo.jsonl")
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A syntactically perfect line to mutate one field at a time.
+fn good_line() -> String {
+    concat!(
+        r#"{"arrival_cycle":"100","sla":{"latency_budget":"800000"},"#,
+        r#""tenant":"interactive","model":"tinycnn","seed":"42"}"#
+    )
+    .to_string()
+}
+
+#[test]
+fn golden_fixture_is_canonical_and_well_formed() {
+    let trace = Trace::load(&fixture_path()).unwrap();
+    assert_eq!(trace.len(), 24, "golden fixture carries 24 requests");
+    // canonical: re-emitting reproduces the checked-in bytes exactly,
+    // so hand edits that drift from the writer's format fail loudly
+    let on_disk = std::fs::read_to_string(fixture_path()).unwrap();
+    assert_eq!(trace.to_jsonl_text(), on_disk, "fixture must stay in canonical form");
+    let mut prev = 0u64;
+    let mut min_energy = 0usize;
+    let mut budget = 0usize;
+    for r in &trace.records {
+        assert!(r.arrival_cycle >= prev, "fixture arrivals must be sorted");
+        prev = r.arrival_cycle;
+        assert_eq!(r.model, "tinycnn");
+        assert!(
+            ["interactive", "batch", "bulk"].contains(&r.tenant.as_str()),
+            "unexpected tenant {}",
+            r.tenant
+        );
+        match r.sla {
+            Sla::MinEnergy => min_energy += 1,
+            Sla::LatencyBudget(_) => budget += 1,
+        }
+    }
+    assert!(min_energy > 0 && budget > 0, "fixture must exercise both SLA kinds");
+}
+
+/// Record-then-replay: `serve --record-trace` then `serve --trace` is
+/// the identity. A synthesized trace saved to disk, loaded back and
+/// replayed through a fresh cluster produces the same digest as a
+/// fresh cluster consuming the in-memory synthetic stream directly.
+#[test]
+fn recorded_trace_replays_digest_for_digest() {
+    let dir = fresh_dir("odimo_trace_record_replay");
+    let copts = ClusterOpts {
+        replicas: 2,
+        serve: chaos_opts(None),
+        continuous: true,
+        steal_max: 2,
+        compile_cycles: 5_000,
+        plan_cache_cap: 8,
+    };
+    let trace = chaos_session(&dir, 2).synth_trace(&copts.serve).unwrap();
+    let path = dir.join("recorded.jsonl");
+    trace.save(&path).unwrap();
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(trace, loaded, "save/load must be the identity on records");
+    let replayed = chaos_session(&dir, 2).serve_cluster(&copts, Some(&loaded)).unwrap();
+    let synthetic = chaos_session(&dir, 2).serve_cluster(&copts, None).unwrap();
+    assert_eq!(
+        replayed.deterministic_digest(),
+        synthetic.deterministic_digest(),
+        "replaying the recorded trace must match serving the synthetic stream"
+    );
+    assert_eq!(replayed.accounted(), trace.len() as u64);
+}
+
+#[test]
+fn u64_above_f64_precision_survives_a_file_roundtrip() {
+    let dir = fresh_dir("odimo_trace_big_u64");
+    std::fs::create_dir_all(&dir).unwrap();
+    let big = (1u64 << 53) + 1; // unrepresentable as f64
+    let trace = Trace {
+        records: vec![TraceRecord {
+            arrival_cycle: big,
+            sla: Sla::LatencyBudget(u64::MAX),
+            tenant: "bulk".to_string(),
+            model: "tinycnn".to_string(),
+            seed: u64::MAX - 1,
+        }],
+    };
+    let path = dir.join("big.jsonl");
+    trace.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        text.contains(&big.to_string()) && text.contains(&u64::MAX.to_string()),
+        "values must travel as exact decimal strings: {text}"
+    );
+    let back = Trace::load(&path).unwrap();
+    assert_eq!(back, trace);
+}
+
+#[test]
+fn missing_file_is_a_typed_io_error() {
+    let path = std::env::temp_dir().join("odimo_trace_does_not_exist.jsonl");
+    let _ = std::fs::remove_file(&path);
+    match Trace::load(&path) {
+        Err(TraceError::Io { path: p, .. }) => {
+            assert!(p.contains("odimo_trace_does_not_exist"), "{p}")
+        }
+        other => panic!("expected TraceError::Io, got {other:?}"),
+    }
+}
+
+#[test]
+fn truncated_json_is_a_parse_error_with_line_number() {
+    let text = format!("{}\n{}\n", good_line(), r#"{"arrival_cycle":"200","#);
+    match Trace::from_jsonl_text(&text) {
+        Err(TraceError::Parse { line: 2, .. }) => {}
+        other => panic!("expected Parse at line 2, got {other:?}"),
+    }
+    // a bare non-object is also Parse, not a panic
+    match Trace::from_jsonl_text("[1, 2, 3]") {
+        Err(TraceError::Parse { line: 1, .. }) => {}
+        other => panic!("expected Parse at line 1, got {other:?}"),
+    }
+}
+
+#[test]
+fn each_field_failure_maps_to_its_documented_variant() {
+    // missing field (drop tenant)
+    let no_tenant = good_line().replace(r#""tenant":"interactive","#, "");
+    match Trace::from_jsonl_text(&no_tenant) {
+        Err(TraceError::MissingField { line: 1, field: "tenant" }) => {}
+        other => panic!("expected MissingField(tenant), got {other:?}"),
+    }
+    // JSON-number cycle value: rejected to protect > 2^53 integers
+    let numeric = good_line().replace(r#""arrival_cycle":"100""#, r#""arrival_cycle":100"#);
+    match Trace::from_jsonl_text(&numeric) {
+        Err(TraceError::BadNumber { line: 1, field: "arrival_cycle", .. }) => {}
+        other => panic!("expected BadNumber(arrival_cycle), got {other:?}"),
+    }
+    // non-decimal seed string
+    let bad_seed = good_line().replace(r#""seed":"42""#, r#""seed":"forty-two""#);
+    match Trace::from_jsonl_text(&bad_seed) {
+        Err(TraceError::BadNumber { line: 1, field: "seed", value }) => {
+            assert!(value.contains("forty-two"), "{value}")
+        }
+        other => panic!("expected BadNumber(seed), got {other:?}"),
+    }
+    // uppercase tenant violates [a-z0-9_-]+
+    let bad_tenant = good_line().replace(r#""tenant":"interactive""#, r#""tenant":"Interactive""#);
+    match Trace::from_jsonl_text(&bad_tenant) {
+        Err(TraceError::BadTenant { line: 1, tenant }) => assert_eq!(tenant, "Interactive"),
+        other => panic!("expected BadTenant, got {other:?}"),
+    }
+    // unknown model
+    let bad_model = good_line().replace(r#""model":"tinycnn""#, r#""model":"resnet999""#);
+    match Trace::from_jsonl_text(&bad_model) {
+        Err(TraceError::UnknownModel { line: 1, model }) => assert_eq!(model, "resnet999"),
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    // sla neither "min_energy" nor {"latency_budget": "..."}
+    let bad_sla = good_line().replace(r#"{"latency_budget":"800000"}"#, r#""fastest""#);
+    match Trace::from_jsonl_text(&bad_sla) {
+        Err(TraceError::BadSla { line: 1, .. }) => {}
+        other => panic!("expected BadSla, got {other:?}"),
+    }
+    // sorted-arrival enforcement across records
+    let text = format!(
+        "{}\n{}\n",
+        good_line(),
+        good_line().replace(r#""arrival_cycle":"100""#, r#""arrival_cycle":"99""#)
+    );
+    match Trace::from_jsonl_text(&text) {
+        Err(TraceError::OutOfOrder { line: 2, prev: 100, got: 99 }) => {}
+        other => panic!("expected OutOfOrder, got {other:?}"),
+    }
+    // every error above implements Display + Error and carries its line
+    let e = Trace::from_jsonl_text(&no_tenant).unwrap_err();
+    let shown = format!("{e}");
+    assert!(shown.contains("line 1"), "{shown}");
+    let _dyn: &dyn std::error::Error = &e;
+}
+
+/// Blank lines separate sections in hand-maintained traces; they must
+/// be ignored without shifting the reported line numbers of later
+/// errors.
+#[test]
+fn blank_lines_are_skipped_but_line_numbers_stay_physical() {
+    let text = format!("\n{}\n\n{}\n", good_line(), "not json");
+    match Trace::from_jsonl_text(&text) {
+        Err(TraceError::Parse { line: 4, .. }) => {}
+        other => panic!("expected Parse at physical line 4, got {other:?}"),
+    }
+    let ok = format!("\n{}\n\n", good_line());
+    let tr = Trace::from_jsonl_text(&ok).unwrap();
+    assert_eq!(tr.len(), 1);
+}

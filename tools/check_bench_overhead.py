@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Gate the zero-fault overhead of the serve fault machinery.
+"""Gate serve-bench invariants: zero-fault overhead and replica scaling.
 
 ``BENCH_serve.json`` (written by ``cargo bench --bench bench_serve``)
 contains, per thread count N, a ``batched_tN`` case (no fault plan) and
@@ -9,6 +9,12 @@ tracker costs more than TOLERANCE (5%) of the batched loop time, with a
 small absolute slack so sub-millisecond smoke runs don't trip on timer
 noise.
 
+It also gates cluster replica scaling: the bench replays one dense
+trace through ``cluster_r1`` and ``cluster_r4``; four replicas must
+reach at least MIN_SCALING (2.5x) the single replica's *virtual*
+throughput. Virtual img/s is computed on the deterministic virtual
+timeline, so this gate is noise-free and holds on smoke runs too.
+
 Usage: python3 tools/check_bench_overhead.py [BENCH_serve.json]
 """
 
@@ -17,6 +23,7 @@ import sys
 
 TOLERANCE = 0.05  # relative: faults0 may cost at most 5% over batched
 SLACK_MS = 1.0  # absolute: ignore sub-ms jitter (smoke runs are tiny)
+MIN_SCALING = 2.5  # cluster_r4 virtual img/s must be >= 2.5x cluster_r1
 
 
 def main() -> int:
@@ -59,6 +66,23 @@ def main() -> int:
               "must stay off the hot path when no plan is attached")
         return 1
     print("check_bench_overhead: zero-fault overhead within budget")
+
+    r1 = bench.get("cluster_r1")
+    r4 = bench.get("cluster_r4")
+    if r1 is None or r4 is None:
+        print(f"check_bench_overhead: no cluster_r1/cluster_r4 cases in {path} — "
+              "re-run `make bench-serve` (or the CI smoke) first")
+        return 1
+    base = r1["virtual_img_s"]
+    quad = r4["virtual_img_s"]
+    scaling = quad / base if base > 0 else 0.0
+    print(f"cluster: r1 {base:8.1f} virtual img/s | r4 {quad:8.1f} "
+          f"({scaling:.2f}x, floor {MIN_SCALING}x)")
+    if scaling < MIN_SCALING:
+        print(f"check_bench_overhead: 4 replicas scale only {scaling:.2f}x over 1 "
+              f"(floor {MIN_SCALING}x) — the router is serializing the cluster")
+        return 1
+    print("check_bench_overhead: replica scaling within budget")
     return 0
 
 

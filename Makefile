@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check chaos cluster doc api-check examples bench-infer \
+.PHONY: build test check chaos cluster obs doc api-check examples bench-infer \
 	bench-sim bench-mincost bench-serve bench artifacts clean
 
 build:
@@ -25,6 +25,17 @@ chaos:
 # (golden fixture, typed errors, > 2^53 decimal-string transport).
 cluster:
 	$(CARGO) test --test cluster_props --test trace_roundtrip
+
+# Observability suite: the obs property tests (span/report
+# reconciliation, digest invariance, recorder-off identity, export
+# determinism), then a traced serve run validated by the trace-events
+# checker and summarized by trace-view.
+obs:
+	$(CARGO) test --test obs_props
+	$(CARGO) run --release -- serve --smoke --requests 24 \
+		--results /tmp/odimo_obs_smoke --trace-events /tmp/odimo_obs_trace.json
+	$(PYTHON) tools/check_trace_events.py /tmp/odimo_obs_trace.json
+	$(CARGO) run --release -- trace-view --trace-events /tmp/odimo_obs_trace.json
 
 # Full gate: formatting, lints-as-errors, then the tier-1 command.
 check:

@@ -4,7 +4,10 @@
 //! (max_batch 1), plus a `faults0` case per thread count: batched
 //! serving with an *empty* fault plan attached, which must cost the
 //! same as plain batched serving (the zero-fault overhead gate —
-//! `tools/check_bench_overhead.py` compares the two loop times). One
+//! `tools/check_bench_overhead.py` compares the two loop times). An
+//! `obs` case per thread count runs the batched load with the Basic
+//! event recorder enabled; the same gate holds it within 2% of
+//! `batched` (ARCHITECTURE.md §Observability). One
 //! session per thread count owns the frontier and the LRU plan cache,
 //! so the timed loop measures steady-state serving (plans compile once,
 //! on the first instrumented run). CI smoke-runs this with `--smoke`
@@ -21,6 +24,7 @@
 use std::fmt::Write as _;
 
 use odimo::api::{ClusterOpts, FaultPlan, ServeOpts, SessionBuilder};
+use odimo::obs::ObsLevel;
 use odimo::util::bench::{black_box, Bench};
 
 fn main() {
@@ -99,6 +103,53 @@ fn main() {
                 s.median_ns / 1e6
             );
         }
+        // the obs gate: a session with the Basic recorder *enabled* on
+        // the identical batched load. `check_bench_overhead.py` holds
+        // this within 2% of `batched_tN`, which bounds the disabled
+        // recorder (one branch per call site) a fortiori.
+        let mut obs_session = SessionBuilder::new("tinycnn")
+            .platform("diana")
+            .results_dir(&dir)
+            .threads(threads)
+            .seed(42)
+            .sweep_calib(8)
+            .sweep_blend_steps(2)
+            .plan_cache_cap(8)
+            .observer(ObsLevel::Basic)
+            .build()
+            .expect("session");
+        let opts = ServeOpts {
+            n_requests: Some(if smoke { 16 } else { 128 }),
+            max_batch: 8,
+            max_wait: 50_000,
+            mean_gap: 15_000,
+            launch_cycles: 10_000,
+            ..ServeOpts::default()
+        };
+        let rep = obs_session.serve(&opts).expect("serve run");
+        let s = b.run(&format!("obs_t{threads}"), || {
+            black_box(obs_session.serve(&opts).expect("serve run"));
+        });
+        println!(
+            "obs x{threads} threads: {:8.1} img/s | p95 {:.3} ms (simulated) | \
+             {} events | loop {:.2} ms",
+            rep.throughput_img_s,
+            rep.p95_ms,
+            obs_session.recorder().len(),
+            s.median_ns / 1e6
+        );
+        let _ = write!(
+            json,
+            ",\n  \"obs_t{threads}\": {{\n    \"img_s\": {:.1},\n    \
+             \"p95_ms\": {:.4},\n    \"sla_hit_rate\": {:.4},\n    \
+             \"batches\": {},\n    \"events\": {},\n    \"loop_ms\": {:.2}\n  }}",
+            rep.throughput_img_s,
+            rep.p95_ms,
+            rep.sla_hit_rate,
+            rep.total_batches,
+            obs_session.recorder().len(),
+            s.median_ns / 1e6
+        );
     }
     // cluster cases: one dense synthesized trace (mean gap far below
     // the service time, so a single replica saturates) replayed at

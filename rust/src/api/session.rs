@@ -12,6 +12,7 @@ use crate::coordinator::Mapping;
 use crate::hw::soc::{simulate, RunReport, SocConfig};
 use crate::hw::Platform;
 use crate::model::{self, Graph, ALL_MODELS};
+use crate::obs::{export, EventKind, ObsLevel, Recorder};
 use crate::quant::{synth_params_on, KernelBackend, ParamSet, QuantNet, QuantPlan};
 use crate::serve::batcher::PlanCache;
 use crate::serve::{
@@ -80,6 +81,7 @@ pub struct SessionBuilder {
     sweep_calib: usize,
     sweep_blend_steps: usize,
     kernels: KernelBackend,
+    obs_level: ObsLevel,
 }
 
 #[derive(Clone, Debug)]
@@ -109,6 +111,7 @@ impl SessionBuilder {
             sweep_calib: sweep.calib,
             sweep_blend_steps: sweep.blend_steps,
             kernels: KernelBackend::Auto,
+            obs_level: ObsLevel::Off,
         }
     }
 
@@ -212,6 +215,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Observability level for this session's [`Recorder`] (default
+    /// [`ObsLevel::Off`]: the disabled recorder is a no-op on every
+    /// hot path). `Basic` records the deterministic virtual-cycle
+    /// span/event stream; `Full` adds wall-clock engine and kernel
+    /// spans (and routes serve batches through the single-threaded
+    /// traced engine walk — bit-identical logits, different speed).
+    pub fn observer(mut self, level: ObsLevel) -> Self {
+        self.obs_level = level;
+        self
+    }
+
     /// Validate everything once and construct the [`Session`]: the
     /// model must exist, the platform must resolve (built-in name or
     /// readable TOML), and `threads`, if set, must be >= 1.
@@ -250,6 +264,7 @@ impl SessionBuilder {
             plans: PlanCache::new(self.plan_cache_cap),
             params: None,
             kernels: self.kernels,
+            rec: Recorder::new(self.obs_level),
         })
     }
 }
@@ -287,6 +302,8 @@ pub struct Session {
     params: Option<(Vec<String>, Vec<Vec<f32>>)>,
     /// Kernel backend for every plan this session compiles.
     kernels: KernelBackend,
+    /// The session's span/event recorder (see [`SessionBuilder::observer`]).
+    rec: Recorder,
 }
 
 impl Session {
@@ -333,6 +350,28 @@ impl Session {
     /// The session-owned plan cache (hit/miss/compile-time counters).
     pub fn plan_cache(&self) -> &PlanCache {
         &self.plans
+    }
+
+    /// The session's span/event recorder. Disabled unless the session
+    /// was built with [`SessionBuilder::observer`].
+    pub fn recorder(&self) -> &Recorder {
+        &self.rec
+    }
+
+    /// Export the recorder's current event stream as a Chrome
+    /// trace-event / Perfetto JSON file (written atomically). Call
+    /// after `serve`/`serve_cluster`; each of those resets the stream
+    /// at entry, so the file holds exactly the last run.
+    pub fn export_trace(&self, path: &Path) -> Result<()> {
+        let points: &[FrontierPoint] =
+            self.frontier.as_ref().map(|f| f.points.as_slice()).unwrap_or(&[]);
+        let ctx = export::TraceCtx {
+            graph: &self.graph,
+            platform: &self.platform,
+            points,
+            cfg: self.soc,
+        };
+        export::write_trace_events(path, &self.rec.snapshot(), &ctx)
     }
 
     /// On-disk path of this session's frontier cache file.
@@ -438,6 +477,7 @@ impl Session {
                 &self.platform,
                 &self.sweep_cfg,
                 init_pool(&self.pool, self.threads),
+                &self.rec,
             )?;
             if points.is_empty() {
                 return Err(anyhow!(
@@ -465,6 +505,9 @@ impl Session {
         let n_requests = opts
             .n_requests
             .unwrap_or(if self.smoke { 24 } else { 96 });
+        // one event stream per run: back-to-back serves each export
+        // exactly their own trace
+        self.rec.reset();
         self.sweep()?;
         self.ensure_params();
         let (names, values) = self
@@ -488,10 +531,14 @@ impl Session {
             n_requests,
             self.seed,
             self.kernels,
+            &self.rec,
         )?;
         let path = serve::report_path(&self.results_dir, &self.graph.name, &self.platform.name);
         metrics::save_report(&path, &report)?;
-        log::info!("serve report written to {}", path.display());
+        self.rec.note(
+            log::Level::Info,
+            EventKind::ReportWritten { kind: "serve report", path: path.display().to_string() },
+        );
         Ok(report)
     }
 
@@ -525,6 +572,9 @@ impl Session {
         opts: &ClusterOpts,
         trace: Option<&Trace>,
     ) -> Result<ClusterReport> {
+        // one event stream per run: back-to-back runs each export
+        // exactly their own trace
+        self.rec.reset();
         let owned;
         let trace = match trace {
             Some(t) => t,
@@ -554,6 +604,7 @@ impl Session {
             trace,
             opts,
             self.kernels,
+            &self.rec,
         )?;
         let path = cluster::cluster_report_path(
             &self.results_dir,
@@ -561,7 +612,10 @@ impl Session {
             &self.platform.name,
         );
         cluster::save_cluster_report(&path, &report)?;
-        log::info!("cluster report written to {}", path.display());
+        self.rec.note(
+            log::Level::Info,
+            EventKind::ReportWritten { kind: "cluster report", path: path.display().to_string() },
+        );
         Ok(report)
     }
 
@@ -660,8 +714,10 @@ mod tests {
     fn sweep_parity_with_direct_path() {
         for plat in ["diana", "mpsoc4"] {
             let mut s = session("tinycnn", plat, &format!("odimo_api_sweep_parity_{plat}"));
+            let off = Recorder::disabled();
             let want =
-                sweep::sweep_frontier(s.graph(), s.platform(), &s.sweep_cfg, s.pool()).unwrap();
+                sweep::sweep_frontier(s.graph(), s.platform(), &s.sweep_cfg, s.pool(), &off)
+                    .unwrap();
             let got = s.sweep().unwrap();
             assert!(!got.cache_hit, "first facade sweep computes fresh");
             assert_eq!(got.points.len(), want.len(), "{plat}");

@@ -292,6 +292,25 @@ pub const FLAGS: &[FlagSpec] = &[
                CPU has them, portable chunked otherwise), or auto runtime detection \
                (default auto; ODIMO_KERNELS overrides auto)",
     },
+    FlagSpec {
+        name: "trace-events",
+        value: Some("<out.json>"),
+        help: "serve: export the run's span/event stream as Chrome trace-event / \
+               Perfetto JSON (implies --obs-level basic); trace-view: the file to \
+               summarize",
+    },
+    FlagSpec {
+        name: "obs-level",
+        value: Some("<off|basic|full>"),
+        help: "serve: observability level — basic records the deterministic \
+               virtual-cycle event stream, full adds wall-clock engine/kernel spans \
+               (default off, or basic when --trace-events is given)",
+    },
+    FlagSpec {
+        name: "top",
+        value: Some("<n>"),
+        help: "trace-view: rows per section (default 10)",
+    },
 ];
 
 /// One subcommand: its help line plus exactly the flags and switches it
@@ -379,13 +398,20 @@ pub const VERBS: &[VerbSpec] = &[
         flags: &["model", "platform", "results", "threads", "seed", "requests",
                  "max-batch", "max-wait", "gap", "faults", "overload-wait",
                  "max-retries", "replicas", "trace", "record-trace", "steal-max",
-                 "compile-cycles", "kernels"],
+                 "compile-cycles", "kernels", "trace-events", "obs-level"],
         switches: &["smoke", "flush"],
     },
     VerbSpec {
         name: "serve-report",
         help: "render the dashboard of the last serve run",
         flags: &["model", "platform", "results"],
+        switches: &[],
+    },
+    VerbSpec {
+        name: "trace-view",
+        help: "summarize an exported trace-events file (slowest spans, cache hit \
+               rate, per-unit busy/energy split)",
+        flags: &["trace-events", "top"],
         switches: &[],
     },
 ];

@@ -230,6 +230,24 @@ impl Platform {
         e_mw_cycles / self.f_clk_hz * 1e3
     }
 
+    /// Per-unit split of [`Platform::layer_energy_uj`] (uJ per
+    /// accelerator, active + idle share): trace attribution needs to
+    /// say *which* unit burned a layer's energy, not just the total.
+    /// The entries sum to `layer_energy_uj(active, span)` up to float
+    /// association.
+    pub fn layer_energy_split_uj(&self, active: &[u64], span: u64) -> Vec<f64> {
+        debug_assert_eq!(active.len(), self.n_acc());
+        self.accelerators
+            .iter()
+            .zip(active)
+            .map(|(spec, &a)| {
+                let act = a.min(span) as f64;
+                let idle = (span - a.min(span)) as f64;
+                (spec.p_act_mw * act + spec.p_idle_mw * idle) / self.f_clk_hz * 1e3
+            })
+            .collect()
+    }
+
     /// Distinct D/A truncation widths declared across the platform's
     /// accelerators, ascending and deduplicated (empty when no unit
     /// re-reads activations through a D/A, e.g. [`Platform::gap9`]).
@@ -760,6 +778,21 @@ mod tests {
                 p.layer_energy_uj(&act, span),
                 crate::hw::energy::layer_energy_uj(act, span)
             );
+        }
+    }
+
+    #[test]
+    fn energy_split_sums_to_layer_energy() {
+        for p in [Platform::diana(), Platform::mpsoc4()] {
+            let n = p.n_acc();
+            let active: Vec<u64> = (0..n as u64).map(|i| 10_000 * i).collect();
+            let span = active.iter().copied().max().unwrap_or(0) + 5_000;
+            let split = p.layer_energy_split_uj(&active, span);
+            assert_eq!(split.len(), n);
+            let total: f64 = split.iter().sum();
+            let whole = p.layer_energy_uj(&active, span);
+            assert!((total - whole).abs() < 1e-9 * whole.max(1.0), "{total} vs {whole}");
+            assert!(split.iter().all(|&e| e >= 0.0));
         }
     }
 

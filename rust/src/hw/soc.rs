@@ -169,6 +169,94 @@ pub fn simulate(
     }
 }
 
+/// Per-layer per-unit cost of one inference — the trace exporter's
+/// attribution source (docs/ARCHITECTURE.md §Observability).
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    /// Layer (graph node) name.
+    pub name: String,
+    /// Active cycles per accelerator inside this layer's window
+    /// (tiling penalties applied exactly as [`simulate`] does).
+    pub unit_cycles: Vec<u64>,
+    /// Window length: max over `unit_cycles` (sequential layers, so
+    /// the windows sum to [`RunReport::total_cycles`]).
+    pub span: u64,
+    /// Per-unit energy split (active + idle share), uJ; sums to this
+    /// layer's contribution to [`RunReport::energy_uj`].
+    pub unit_energy_uj: Vec<f64>,
+}
+
+/// Break one inference of `graph` under `split` into per-layer
+/// per-unit costs. Mirrors [`simulate`]'s execution model exactly —
+/// same latency models, same L1 tiling penalty, depthwise on the
+/// platform's `dw_acc` — so `sum(span) == total_cycles` and
+/// `sum(unit_energy_uj) == energy_uj` of the corresponding
+/// [`RunReport`] (pinned by a test below). Uncharged ops (input, add,
+/// gap) produce no entry, matching the paper's cost convention.
+pub fn layer_breakdown(
+    graph: &Graph,
+    split: &ChannelSplit,
+    platform: &Platform,
+    cfg: SocConfig,
+) -> Vec<LayerCost> {
+    let n_acc = platform.n_acc();
+    let mut out = Vec::new();
+    let mut lats = vec![0u64; n_acc];
+    let dw_wmem = platform.accelerators[platform.dw_acc]
+        .wmem_bytes
+        .unwrap_or(usize::MAX);
+
+    for node in &graph.nodes {
+        match node.op {
+            Op::Conv | Op::Fc => {
+                let counts = split
+                    .get(&node.name)
+                    .unwrap_or_else(|| panic!("split missing layer '{}'", node.name));
+                for (i, &c) in counts.iter().enumerate() {
+                    lats[i] = platform.layer_cycles(i, node, c as u64);
+                }
+                let rep = check_layer_bytes(
+                    platform.l1_bytes,
+                    dw_wmem,
+                    node.cin,
+                    node.in_hw,
+                    node.cout,
+                    node.out_hw,
+                    node.k,
+                    counts[platform.dw_acc],
+                );
+                if rep.act_overflow && cfg.non_ideal_l1 {
+                    let p = tiling_penalty_bytes(rep.act_bytes, platform.l1_bytes);
+                    for l in lats.iter_mut() {
+                        *l *= p;
+                    }
+                }
+                let span = lats.iter().copied().max().unwrap_or(0);
+                out.push(LayerCost {
+                    name: node.name.clone(),
+                    unit_cycles: lats.clone(),
+                    span,
+                    unit_energy_uj: platform.layer_energy_split_uj(&lats, span),
+                });
+            }
+            Op::DwConv => {
+                let ld = platform.dw_layer_cycles(node);
+                let mut dw_lats = vec![0u64; n_acc];
+                dw_lats[platform.dw_acc] = ld;
+                let unit_energy_uj = platform.layer_energy_split_uj(&dw_lats, ld);
+                out.push(LayerCost {
+                    name: node.name.clone(),
+                    unit_cycles: dw_lats,
+                    span: ld,
+                    unit_energy_uj,
+                });
+            }
+            Op::Input | Op::Add | Op::Gap => {}
+        }
+    }
+    out
+}
+
 /// All channels of every mappable layer on accelerator `acc` of an
 /// `n_acc`-accelerator platform.
 pub fn split_all_on(graph: &Graph, n_acc: usize, acc: usize) -> ChannelSplit {
@@ -274,6 +362,47 @@ mod tests {
         let mut s = split_all_digital(&g);
         s.insert("stem".into(), vec![8]);
         simulate(&g, &s, &diana(), SocConfig::default());
+    }
+
+    #[test]
+    fn layer_breakdown_partitions_simulate_exactly() {
+        // the breakdown is the trace exporter's ground truth: its
+        // windows must tile the simulated run with no gap or overlap,
+        // in both ideal and non-ideal-L1 modes, on 2- and 4-unit SoCs
+        for (g, p) in [
+            (resnet20(), Platform::diana()),
+            (resnet20(), Platform::mpsoc4()),
+        ] {
+            let n_acc = p.n_acc();
+            let mut split = ChannelSplit::new();
+            for n in g.mappable() {
+                let q = n.cout / n_acc;
+                let mut counts = vec![q; n_acc];
+                counts[0] = n.cout - q * (n_acc - 1);
+                split.insert(n.name.clone(), counts);
+            }
+            for cfg in [SocConfig::default(), SocConfig { non_ideal_l1: true }] {
+                let r = simulate(&g, &split, &p, cfg);
+                let layers = layer_breakdown(&g, &split, &p, cfg);
+                let cycles: u64 = layers.iter().map(|l| l.span).sum();
+                assert_eq!(cycles, r.total_cycles, "{} cfg {cfg:?}", p.name);
+                let energy: f64 = layers
+                    .iter()
+                    .map(|l| l.unit_energy_uj.iter().sum::<f64>())
+                    .sum();
+                assert!(
+                    (energy - r.energy_uj).abs() < 1e-9 * r.energy_uj.max(1.0),
+                    "{}: {energy} vs {}",
+                    p.name,
+                    r.energy_uj
+                );
+                for l in &layers {
+                    assert_eq!(l.unit_cycles.len(), n_acc);
+                    assert_eq!(l.unit_energy_uj.len(), n_acc);
+                    assert_eq!(l.span, l.unit_cycles.iter().copied().max().unwrap_or(0));
+                }
+            }
+        }
     }
 
     #[test]

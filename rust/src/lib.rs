@@ -32,6 +32,7 @@ pub mod exp;
 pub mod hw;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

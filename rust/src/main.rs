@@ -17,6 +17,7 @@ use odimo::coordinator::{Pipeline, Regularizer, Schedule};
 use odimo::exp::{self, ExpContext};
 use odimo::hw::Platform;
 use odimo::model::ALL_MODELS;
+use odimo::obs::{export, ObsLevel};
 use odimo::runtime::{ArtifactMeta, Runtime};
 use odimo::util::logging;
 
@@ -96,6 +97,19 @@ fn build_session(args: &Args, default_model: &str) -> Result<Session> {
     }
     if args.has("non-ideal-l1") {
         b = b.non_ideal_l1(true);
+    }
+    // --trace-events with no explicit --obs-level turns recording on at
+    // the exporter's default level, so the flag works on its own.
+    let level = match args.get("obs-level") {
+        Some(s) => Some(
+            ObsLevel::parse(s)
+                .ok_or_else(|| anyhow!("--obs-level must be off|basic|full, got '{s}'"))?,
+        ),
+        None if args.get("trace-events").is_some() => Some(export::default_trace_level()),
+        None => None,
+    };
+    if let Some(level) = level {
+        b = b.observer(level);
     }
     b.build()
 }
@@ -318,11 +332,25 @@ fn run() -> Result<()> {
                 println!("serve: report written to {}", session.report_path().display());
                 println!("{}", report.dashboard());
             }
+            if let Some(out) = args.get("trace-events") {
+                session.export_trace(std::path::Path::new(out))?;
+                println!("serve: trace events written to {out}");
+            }
             Ok(())
         }
         "serve-report" => {
             let session = build_session(&args, "tinycnn")?;
             println!("{}", session.serve_report()?.dashboard());
+            Ok(())
+        }
+        "trace-view" => {
+            let file = args
+                .get("trace-events")
+                .ok_or_else(|| anyhow!("trace-view needs --trace-events <file.json>"))?;
+            let top = args.get_usize("top")?.unwrap_or(10);
+            let text = std::fs::read_to_string(file)
+                .map_err(|e| anyhow!("cannot read trace file '{file}': {e}"))?;
+            println!("{}", export::summarize(&text, top)?);
             Ok(())
         }
         "platforms" => {

@@ -1,0 +1,752 @@
+//! Chrome-trace-event / Perfetto JSON export of a recorded event
+//! stream, plus the `trace-view` text summarizer.
+//!
+//! Layout (EXPERIMENTS.md §Trace events has the full schema):
+//!
+//! * one *process* per replica virtual device (`pid = replica + 1`),
+//!   holding a `driver` track (batch-execution spans), one track per
+//!   accelerator unit (per-layer attribution spans carrying per-image
+//!   cycles and per-unit energy), and an `events` track (instants:
+//!   dispatch decisions, sheds, retries, faults, plan-cache traffic);
+//! * one *process* per replica engine on the wall-clock domain
+//!   (`pid = 1000 + replica + 1`, [`ObsLevel::Full`] only), holding
+//!   the engine-run spans and the per-op kernel spans.
+//!
+//! Virtual cycles convert to trace microseconds at the platform clock
+//! (`cycles / f_clk_hz * 1e6`), so span widths in the viewer are real
+//! simulated time. At [`ObsLevel::Basic`] the export contains only
+//! virtual-domain data and is byte-deterministic across runs — pinned
+//! by `tests/obs_props.rs`.
+//!
+//! Per-layer spans come from [`layer_breakdown`]: the executed point's
+//! per-layer per-unit cycles/energy, scaled by batch size onto the
+//! batch's device window (derated windows stretch the layers
+//! proportionally; attribution keeps the healthy-platform energy
+//! model). `tools/check_trace_events.py` validates pairing, per-track
+//! monotonicity, and required args in CI.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::hw::soc::{layer_breakdown, LayerCost, SocConfig};
+use crate::hw::Platform;
+use crate::model::Graph;
+use crate::serve::FrontierPoint;
+use crate::util::json::Json;
+
+use super::{Clock, Event, EventKind, ObsLevel};
+
+#[cfg(doc)]
+use super::Recorder;
+
+/// Everything the exporter needs beyond the event stream: the model
+/// and platform the run served, and the frontier the dispatch indices
+/// refer to.
+pub struct TraceCtx<'a> {
+    /// The served model graph (layer names for attribution spans).
+    pub graph: &'a Graph,
+    /// The resolved platform (clock, unit names, energy model).
+    pub platform: &'a Platform,
+    /// The frontier the run dispatched over (`point` indices).
+    pub points: &'a [FrontierPoint],
+    /// Simulator config the frontier was costed under.
+    pub cfg: SocConfig,
+}
+
+const EVENTS_TID_OFFSET: u64 = 1; // events track follows the unit tracks
+const WALL_PID_BASE: u64 = 1000;
+
+fn vpid(replica: u32) -> u64 {
+    replica as u64 + 1
+}
+
+fn wpid(replica: u32) -> u64 {
+    WALL_PID_BASE + replica as u64 + 1
+}
+
+struct TrackWriter {
+    /// (pid, tid) -> events in emission order (already time-sorted by
+    /// construction: the recorder's stream is monotone per track).
+    tracks: BTreeMap<(u64, u64), Vec<Json>>,
+}
+
+impl TrackWriter {
+    fn new() -> Self {
+        TrackWriter { tracks: BTreeMap::new() }
+    }
+
+    fn span(
+        &mut self,
+        (pid, tid): (u64, u64),
+        name: &str,
+        cat: &str,
+        ts_us: f64,
+        end_us: f64,
+        args: Vec<(&str, Json)>,
+    ) {
+        let t = self.tracks.entry((pid, tid)).or_default();
+        t.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
+            ("ph", Json::str("B")),
+            ("ts", Json::num(ts_us)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(args)),
+        ]));
+        t.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
+            ("ph", Json::str("E")),
+            ("ts", Json::num(end_us)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+        ]));
+    }
+
+    fn instant(
+        &mut self,
+        (pid, tid): (u64, u64),
+        name: &str,
+        cat: &str,
+        ts_us: f64,
+        args: Vec<(&str, Json)>,
+    ) {
+        self.tracks.entry((pid, tid)).or_default().push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("ts", Json::num(ts_us)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+}
+
+fn meta(pid: u64, tid: Option<u64>, name: &str) -> Json {
+    let mut fields = vec![
+        (
+            "name",
+            Json::str(if tid.is_some() { "thread_name" } else { "process_name" }),
+        ),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+    ];
+    if let Some(t) = tid {
+        fields.push(("tid", Json::num(t as f64)));
+    }
+    fields.push(("args", Json::obj(vec![("name", Json::str(name))])));
+    Json::obj(fields)
+}
+
+/// Render a recorded event stream as a Chrome-trace-event JSON
+/// document (object form: `{"traceEvents": [...]}`) — the format
+/// Perfetto and `chrome://tracing` load directly.
+pub fn trace_events(events: &[Event], ctx: &TraceCtx) -> Json {
+    let f_clk = ctx.platform.f_clk_hz;
+    let n_acc = ctx.platform.n_acc() as u64;
+    let us = |cycles: u64| cycles as f64 / f_clk * 1e6;
+    let events_tid = n_acc + EVENTS_TID_OFFSET;
+    let mut w = TrackWriter::new();
+    // per-point layer breakdowns, computed once on first use
+    let mut breakdowns: Vec<Option<Vec<LayerCost>>> = vec![None; ctx.points.len()];
+    let mut virtual_replicas: std::collections::BTreeSet<u32> = Default::default();
+    let mut wall_replicas: std::collections::BTreeSet<u32> = Default::default();
+
+    for e in events {
+        match e.clock {
+            Clock::Virtual(_) => virtual_replicas.insert(e.replica),
+            Clock::Wall(_) => wall_replicas.insert(e.replica),
+            Clock::None => continue, // untimed notes have no track
+        };
+        match (&e.kind, e.clock) {
+            (
+                EventKind::BatchExec {
+                    point,
+                    label,
+                    start,
+                    done,
+                    size,
+                    per_img,
+                    launch,
+                    derated,
+                    energy_uj,
+                    members,
+                },
+                Clock::Virtual(_),
+            ) => {
+                let pid = vpid(e.replica);
+                let ids: Vec<Json> =
+                    members.iter().map(|&(id, _)| Json::num(id as f64)).collect();
+                w.span(
+                    (pid, 0),
+                    label,
+                    "batch",
+                    us(*start),
+                    us(*done),
+                    vec![
+                        ("point", Json::num(*point as f64)),
+                        ("size", Json::num(*size as f64)),
+                        ("per_img_cycles", Json::num(*per_img as f64)),
+                        ("launch_cycles", Json::num(*launch as f64)),
+                        ("derated", Json::str(if *derated { "true" } else { "false" })),
+                        ("energy_uj_img", Json::num(*energy_uj)),
+                        ("requests", Json::Arr(ids)),
+                    ],
+                );
+                // per-layer / per-unit attribution inside the window
+                if *point < ctx.points.len() {
+                    let bd = breakdowns[*point].get_or_insert_with(|| {
+                        layer_breakdown(
+                            ctx.graph,
+                            &ctx.points[*point].mapping.channel_split(ctx.platform.n_acc()),
+                            ctx.platform,
+                            ctx.cfg,
+                        )
+                    });
+                    let model_cycles: u64 = bd.iter().map(|l| l.span).sum();
+                    let window = done.saturating_sub(start + launch);
+                    if model_cycles > 0 && *size > 0 && window > 0 {
+                        // derated windows stretch every layer by the
+                        // same factor (scale == 1 on a healthy run)
+                        let scale =
+                            window as f64 / (model_cycles as f64 * *size as f64);
+                        let mut cursor = us(start + launch);
+                        for l in bd.iter() {
+                            let width =
+                                l.span as f64 * *size as f64 * scale / f_clk * 1e6;
+                            for (u, (&c, &ej)) in
+                                l.unit_cycles.iter().zip(&l.unit_energy_uj).enumerate()
+                            {
+                                if c == 0 {
+                                    continue;
+                                }
+                                let sub =
+                                    c as f64 * *size as f64 * scale / f_clk * 1e6;
+                                w.span(
+                                    (pid, u as u64 + 1),
+                                    &l.name,
+                                    "layer",
+                                    cursor,
+                                    cursor + sub,
+                                    vec![
+                                        (
+                                            "unit",
+                                            Json::str(
+                                                ctx.platform.accelerators[u].name.clone(),
+                                            ),
+                                        ),
+                                        ("cycles_img", Json::num(c as f64)),
+                                        ("energy_uj", Json::num(ej * *size as f64)),
+                                        ("point", Json::num(*point as f64)),
+                                    ],
+                                );
+                            }
+                            cursor += width;
+                        }
+                    }
+                }
+            }
+            (
+                EventKind::EngineRun { point, batch, threads, isa, dur_ns },
+                Clock::Wall(ns),
+            ) => {
+                let pid = wpid(e.replica);
+                w.span(
+                    (pid, 0),
+                    "engine_run",
+                    "engine",
+                    ns as f64 / 1e3,
+                    (ns + dur_ns) as f64 / 1e3,
+                    vec![
+                        ("point", Json::num(*point as f64)),
+                        ("batch", Json::num(*batch as f64)),
+                        ("threads", Json::num(*threads as f64)),
+                        ("isa", Json::str(isa.clone())),
+                    ],
+                );
+            }
+            (EventKind::KernelOp { node, kind, algo, dur_ns }, Clock::Wall(ns)) => {
+                let pid = wpid(e.replica);
+                let mut args = vec![("kind", Json::str(*kind))];
+                if let Some(a) = algo {
+                    args.push(("algo", Json::str(*a)));
+                }
+                w.span(
+                    (pid, 1),
+                    node,
+                    "kernel",
+                    ns as f64 / 1e3,
+                    (ns + dur_ns) as f64 / 1e3,
+                    args,
+                );
+            }
+            (kind, Clock::Virtual(t)) => {
+                // instants on the per-replica events track
+                let pid = vpid(e.replica);
+                let ts = us(t);
+                let (name, args): (&str, Vec<(&str, Json)>) = match kind {
+                    EventKind::Dispatch { req, point, label, sla_met, degraded } => (
+                        "dispatch",
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("point", Json::num(*point as f64)),
+                            ("label", Json::str(label.clone())),
+                            ("sla_met", Json::str(if *sla_met { "true" } else { "false" })),
+                            (
+                                "degraded",
+                                Json::str(if *degraded { "true" } else { "false" }),
+                            ),
+                        ],
+                    ),
+                    EventKind::DispatchDefer { req, enabled, total } => (
+                        "defer",
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("enabled", Json::num(*enabled as f64)),
+                            ("total", Json::num(*total as f64)),
+                        ],
+                    ),
+                    EventKind::AdmissionShed { req, wait } => (
+                        "shed",
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("wait_cycles", Json::num(*wait as f64)),
+                        ],
+                    ),
+                    EventKind::BatchOpen { point } => {
+                        ("batch_open", vec![("point", Json::num(*point as f64))])
+                    }
+                    EventKind::BatchJoin { point, pending } => (
+                        "batch_join",
+                        vec![
+                            ("point", Json::num(*point as f64)),
+                            ("pending", Json::num(*pending as f64)),
+                        ],
+                    ),
+                    EventKind::BatchFlush { point, size, reason } => (
+                        "batch_flush",
+                        vec![
+                            ("point", Json::num(*point as f64)),
+                            ("size", Json::num(*size as f64)),
+                            ("reason", Json::str(format!("{reason:?}").to_lowercase())),
+                        ],
+                    ),
+                    EventKind::ContinuousJoin { req, done } => (
+                        "continuous_join",
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("done_cycle", Json::num(*done as f64)),
+                        ],
+                    ),
+                    EventKind::BatchAbort { point, at } => (
+                        "batch_abort",
+                        vec![
+                            ("point", Json::num(*point as f64)),
+                            ("abort_cycle", Json::num(*at as f64)),
+                        ],
+                    ),
+                    EventKind::Retry { req, attempt, retry_at } => (
+                        "retry",
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("attempt", Json::num(*attempt as f64)),
+                            ("retry_at_cycle", Json::num(*retry_at as f64)),
+                        ],
+                    ),
+                    EventKind::RetryExhausted { req, attempt } => (
+                        "retry_exhausted",
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("attempt", Json::num(*attempt as f64)),
+                        ],
+                    ),
+                    EventKind::Steal { from, to, moved } => (
+                        "steal",
+                        vec![
+                            ("from", Json::num(*from as f64)),
+                            ("to", Json::num(*to as f64)),
+                            ("moved", Json::num(*moved as f64)),
+                        ],
+                    ),
+                    EventKind::FaultTransition { enabled, total } => (
+                        "fault_transition",
+                        vec![
+                            ("enabled", Json::num(*enabled as f64)),
+                            ("total", Json::num(*total as f64)),
+                        ],
+                    ),
+                    EventKind::PlanCacheHit { key } => {
+                        ("plan_cache_hit", vec![("key", Json::str(format!("{key:016x}")))])
+                    }
+                    EventKind::PlanCacheMiss { key } => (
+                        "plan_cache_miss",
+                        vec![("key", Json::str(format!("{key:016x}")))],
+                    ),
+                    // spans handled above; notes filtered before the match
+                    _ => continue,
+                };
+                w.instant((pid, events_tid), name, "serve", ts, args);
+            }
+            _ => {}
+        }
+    }
+
+    let mut out: Vec<Json> = Vec::new();
+    for &r in &virtual_replicas {
+        let pid = vpid(r);
+        out.push(meta(pid, None, &format!("replica {r} (virtual cycles)")));
+        out.push(meta(pid, Some(0), "driver"));
+        for (u, a) in ctx.platform.accelerators.iter().enumerate() {
+            out.push(meta(pid, Some(u as u64 + 1), &a.name));
+        }
+        out.push(meta(pid, Some(events_tid), "events"));
+    }
+    for &r in &wall_replicas {
+        let pid = wpid(r);
+        out.push(meta(pid, None, &format!("replica {r} engine (wall clock)")));
+        out.push(meta(pid, Some(0), "engine"));
+        out.push(meta(pid, Some(1), "kernels"));
+    }
+    for (_, track) in w.tracks {
+        out.extend(track);
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write the exported trace to `path` (atomic replace; plain Chrome
+/// JSON, *not* the versioned store envelope — Perfetto must load the
+/// file as-is).
+pub fn write_trace_events(path: &Path, events: &[Event], ctx: &TraceCtx) -> Result<()> {
+    let doc = trace_events(events, ctx);
+    crate::exp::store::write_atomic(path, &format!("{doc}\n"))
+}
+
+/// `ObsLevel` implied by a `--trace-events` flag with no explicit
+/// `--obs-level`.
+pub fn default_trace_level() -> ObsLevel {
+    ObsLevel::Basic
+}
+
+// ---------------------------------------------------------------------------
+// trace-view: text summary of an exported trace
+// ---------------------------------------------------------------------------
+
+struct SpanRow {
+    name: String,
+    cat: String,
+    track: String,
+    ts: f64,
+    dur: f64,
+}
+
+/// Per-track stack of open B events: (name, cat, ts).
+type OpenStack = BTreeMap<(u64, u64), Vec<(String, String, f64)>>;
+
+/// Summarize an exported trace: top-N slowest spans, plan-cache hit
+/// rate, per-unit busy/energy split, and instant-event counts — the
+/// CLI `trace-view` verb.
+pub fn summarize(text: &str, top: usize) -> Result<String> {
+    let doc = crate::util::json::parse(text).map_err(|e| anyhow!("trace parse: {e}"))?;
+    let events = doc
+        .req("traceEvents")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("traceEvents must be an array"))?;
+
+    let mut proc_names: BTreeMap<u64, String> = BTreeMap::new();
+    let mut thread_names: BTreeMap<(u64, u64), String> = BTreeMap::new();
+    let mut spans: Vec<SpanRow> = Vec::new();
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    let mut unit_busy: BTreeMap<String, f64> = BTreeMap::new();
+    let mut unit_energy: BTreeMap<String, f64> = BTreeMap::new();
+    let mut open: OpenStack = BTreeMap::new();
+
+    let field_u64 = |ev: &Json, k: &str| -> u64 {
+        ev.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64
+    };
+    for ev in events {
+        let ph = ev.get("ph").and_then(|v| v.as_str()).unwrap_or("");
+        let pid = field_u64(ev, "pid");
+        let tid = field_u64(ev, "tid");
+        let name = ev.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        match ph {
+            "M" => {
+                let label = ev
+                    .get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string();
+                if name == "process_name" {
+                    proc_names.insert(pid, label);
+                } else if name == "thread_name" {
+                    thread_names.insert((pid, tid), label);
+                }
+            }
+            "B" => {
+                let cat = ev.get("cat").and_then(|v| v.as_str()).unwrap_or("").to_string();
+                let ts = ev.get("ts").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                open.entry((pid, tid)).or_default().push((name, cat, ts));
+            }
+            "E" => {
+                let ts = ev.get("ts").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                if let Some((name, cat, b_ts)) =
+                    open.get_mut(&(pid, tid)).and_then(Vec::pop)
+                {
+                    let track = format!(
+                        "{}/{}",
+                        proc_names.get(&pid).cloned().unwrap_or_else(|| pid.to_string()),
+                        thread_names
+                            .get(&(pid, tid))
+                            .cloned()
+                            .unwrap_or_else(|| tid.to_string())
+                    );
+                    let dur = ts - b_ts;
+                    if cat == "layer" {
+                        let unit = thread_names
+                            .get(&(pid, tid))
+                            .cloned()
+                            .unwrap_or_else(|| tid.to_string());
+                        *unit_busy.entry(unit).or_insert(0.0) += dur;
+                    }
+                    spans.push(SpanRow { name, cat, track, ts: b_ts, dur });
+                }
+            }
+            "i" => {
+                *counts.entry(name).or_insert(0) += 1;
+            }
+            _ => {}
+        }
+    }
+    // energy args live on the B event of layer spans; second pass
+    for ev in events {
+        if ev.get("ph").and_then(|v| v.as_str()) != Some("B")
+            || ev.get("cat").and_then(|v| v.as_str()) != Some("layer")
+        {
+            continue;
+        }
+        if let Some(args) = ev.get("args") {
+            let unit = args
+                .get("unit")
+                .and_then(|v| v.as_str())
+                .unwrap_or("?")
+                .to_string();
+            let e = args.get("energy_uj").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            *unit_energy.entry(unit).or_insert(0.0) += e;
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace summary: {} events | {} spans | {} tracks",
+        events.len(),
+        spans.len(),
+        spans.iter().map(|s| s.track.clone()).collect::<std::collections::BTreeSet<_>>().len()
+    );
+
+    let hits = counts.get("plan_cache_hit").copied().unwrap_or(0);
+    let misses = counts.get("plan_cache_miss").copied().unwrap_or(0);
+    if hits + misses > 0 {
+        let _ = writeln!(
+            out,
+            "plan cache: {hits} hits / {misses} misses ({:.1}% hit rate)",
+            100.0 * hits as f64 / (hits + misses) as f64
+        );
+    }
+
+    let mut slow: Vec<&SpanRow> = spans.iter().filter(|s| s.cat != "layer").collect();
+    slow.sort_by(|a, b| b.dur.total_cmp(&a.dur).then(a.ts.total_cmp(&b.ts)));
+    let _ = writeln!(out, "\nslowest {} spans:", top.min(slow.len()));
+    let _ = writeln!(out, "{:<24} {:>12} {:>12}  track", "name", "ts [ms]", "dur [ms]");
+    for s in slow.iter().take(top) {
+        let _ = writeln!(
+            out,
+            "{:<24} {:>12.4} {:>12.4}  {}",
+            s.name,
+            s.ts / 1e3,
+            s.dur / 1e3,
+            s.track
+        );
+    }
+
+    if !unit_busy.is_empty() {
+        let total_busy: f64 = unit_busy.values().sum();
+        let total_energy: f64 = unit_energy.values().sum();
+        let _ = writeln!(out, "\nper-unit busy / energy split:");
+        let _ = writeln!(
+            out,
+            "{:<10} {:>12} {:>7} {:>14} {:>7}",
+            "unit", "busy [ms]", "%", "energy [uJ]", "%"
+        );
+        for (unit, &busy) in &unit_busy {
+            let e = unit_energy.get(unit).copied().unwrap_or(0.0);
+            let _ = writeln!(
+                out,
+                "{:<10} {:>12.4} {:>6.1}% {:>14.3} {:>6.1}%",
+                unit,
+                busy / 1e3,
+                if total_busy > 0.0 { 100.0 * busy / total_busy } else { 0.0 },
+                e,
+                if total_energy > 0.0 { 100.0 * e / total_energy } else { 0.0 },
+            );
+        }
+    }
+
+    if !counts.is_empty() {
+        let _ = writeln!(out, "\nevents:");
+        for (name, n) in &counts {
+            let _ = writeln!(out, "{n:>8}  {name}");
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::coordinator::Mapping;
+    use crate::model::tinycnn;
+
+    fn ctx_points(graph: &Graph, platform: &Platform) -> Vec<FrontierPoint> {
+        let mapping = Mapping::uniform(graph, 0);
+        let rep = crate::hw::soc::simulate(
+            graph,
+            &mapping.channel_split(platform.n_acc()),
+            platform,
+            SocConfig::default(),
+        );
+        vec![FrontierPoint {
+            label: "all_dig".into(),
+            mapping,
+            cycles: rep.total_cycles,
+            latency_ms: rep.latency_ms,
+            energy_uj: rep.energy_uj,
+            acc_proxy: 1.0,
+        }]
+    }
+
+    fn batch_event(graph: &Graph, platform: &Platform, points: &[FrontierPoint]) -> Event {
+        let _ = graph;
+        let _ = platform;
+        let cycles = points[0].cycles;
+        Event {
+            replica: 0,
+            clock: Clock::Virtual(100),
+            kind: EventKind::BatchExec {
+                point: 0,
+                label: "all_dig".into(),
+                start: 100,
+                done: 100 + 10_000 + 2 * cycles,
+                size: 2,
+                per_img: cycles,
+                launch: 10_000,
+                derated: false,
+                energy_uj: points[0].energy_uj,
+                members: vec![(0, 50), (1, 80)],
+            },
+        }
+    }
+
+    #[test]
+    fn export_contains_tracks_spans_and_energy_args() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let points = ctx_points(&g, &p);
+        let events = vec![
+            Event {
+                replica: 0,
+                clock: Clock::Virtual(50),
+                kind: EventKind::Dispatch {
+                    req: 0,
+                    point: 0,
+                    label: "all_dig".into(),
+                    sla_met: true,
+                    degraded: false,
+                },
+            },
+            batch_event(&g, &p, &points),
+        ];
+        let ctx = TraceCtx { graph: &g, platform: &p, points: &points, cfg: SocConfig::default() };
+        let doc = trace_events(&events, &ctx);
+        let text = format!("{doc}");
+        assert!(text.contains("\"traceEvents\""));
+        assert!(text.contains("process_name"), "process metadata present");
+        assert!(text.contains("\"dig\""), "unit track named");
+        assert!(text.contains("energy_uj"), "per-layer energy args present");
+        assert!(text.contains("\"ph\":\"B\"") && text.contains("\"ph\":\"E\""));
+        // every B has a matching E
+        assert_eq!(text.matches("\"ph\":\"B\"").count(), text.matches("\"ph\":\"E\"").count());
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let points = ctx_points(&g, &p);
+        let events = vec![batch_event(&g, &p, &points)];
+        let ctx = TraceCtx { graph: &g, platform: &p, points: &points, cfg: SocConfig::default() };
+        let a = format!("{}", trace_events(&events, &ctx));
+        let b = format!("{}", trace_events(&events, &ctx));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn summarize_reports_units_and_counts() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let points = ctx_points(&g, &p);
+        let events = vec![
+            Event {
+                replica: 0,
+                clock: Clock::Virtual(10),
+                kind: EventKind::PlanCacheMiss { key: 42 },
+            },
+            Event {
+                replica: 0,
+                clock: Clock::Virtual(20),
+                kind: EventKind::PlanCacheHit { key: 42 },
+            },
+            batch_event(&g, &p, &points),
+        ];
+        let ctx = TraceCtx { graph: &g, platform: &p, points: &points, cfg: SocConfig::default() };
+        let text = format!("{}", trace_events(&events, &ctx));
+        let summary = summarize(&text, 5).unwrap();
+        assert!(summary.contains("plan cache: 1 hits / 1 misses"), "{summary}");
+        assert!(summary.contains("slowest"), "{summary}");
+        assert!(summary.contains("dig"), "{summary}");
+        assert!(summary.contains("per-unit busy / energy split"), "{summary}");
+    }
+
+    #[test]
+    fn wall_events_land_on_their_own_process() {
+        let g = tinycnn();
+        let p = Platform::diana();
+        let points = ctx_points(&g, &p);
+        let events = vec![Event {
+            replica: 0,
+            clock: Clock::Wall(1_000),
+            kind: EventKind::EngineRun {
+                point: 0,
+                batch: 4,
+                threads: 2,
+                isa: "neon".into(),
+                dur_ns: 50_000,
+            },
+        }];
+        let ctx = TraceCtx { graph: &g, platform: &p, points: &points, cfg: SocConfig::default() };
+        let text = format!("{}", trace_events(&events, &ctx));
+        assert!(text.contains("engine (wall clock)"), "{text}");
+        assert!(text.contains(&format!("\"pid\":{}", WALL_PID_BASE + 1)), "{text}");
+    }
+}

@@ -1,0 +1,670 @@
+//! Structured observability: a deterministic span/event layer for the
+//! serving stack plus a counters/histograms registry the serve report
+//! reads from (docs/ARCHITECTURE.md §Observability).
+//!
+//! Two clock domains, never mixed:
+//!
+//! * **Virtual** — simulated cycles on a replica's device timeline.
+//!   Every virtual event is a pure function of (model, platform, seed,
+//!   opts), so a recorded stream is a replayable artifact like the
+//!   JSONL request traces: [`Recorder::virtual_digest`] is invariant
+//!   across worker-thread counts and host schedules, and equal across
+//!   re-runs of the same configuration.
+//! * **Wall** — engine-side nanoseconds (batch execution, per-op
+//!   kernel spans). Wall events live on a separate clock domain (their
+//!   own Perfetto process) and are *excluded* from the digest, exactly
+//!   as the wall-clock fields of `ServeReport` are excluded from its
+//!   digest.
+//!
+//! The [`Recorder`] is lock-light: a disabled recorder ([`ObsLevel::Off`])
+//! costs one branch per call site — no lock is taken, no event is
+//! built. The bench gate in `tools/check_bench_overhead.py` holds the
+//! *enabled* recorder under 2% of the batched serve loop, which bounds
+//! the disabled recorder a fortiori. Recording happens only on the
+//! single-threaded virtual-time driver, so the interior mutex is
+//! uncontended; it exists so `&Recorder` can thread through the stack
+//! without infecting every signature with `&mut`.
+
+pub mod export;
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// How much the recorder captures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObsLevel {
+    /// Record nothing (counters in the [`Registry`] still accumulate —
+    /// they are owned by `ServeMetrics`, not the recorder).
+    Off,
+    /// Virtual-domain events only: dispatch decisions, batch
+    /// lifecycle, faults, retries, steals, plan-cache traffic. The
+    /// exported trace is byte-deterministic at this level.
+    Basic,
+    /// Basic plus wall-clock engine spans and per-op kernel spans
+    /// (engine batches run a traced single plan walk).
+    Full,
+}
+
+impl ObsLevel {
+    /// Parse a CLI `--obs-level` value.
+    pub fn parse(s: &str) -> Option<ObsLevel> {
+        match s {
+            "off" => Some(ObsLevel::Off),
+            "basic" => Some(ObsLevel::Basic),
+            "full" => Some(ObsLevel::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Timestamp domain of one event (module docs: the two domains never
+/// mix on one track, and only `Virtual` events are digested).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Clock {
+    /// Simulated cycles on the replica's device timeline.
+    Virtual(u64),
+    /// Nanoseconds since the recorder's epoch (engine side).
+    Wall(u64),
+    /// Untimed note (mirrored log line); excluded from the digest and
+    /// from the exported trace.
+    None,
+}
+
+/// Why the batcher released a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The queue reached `max_batch`.
+    Full,
+    /// The queue's `max_wait` deadline fired.
+    Deadline,
+    /// The stream ended and the tail drained.
+    Drain,
+}
+
+/// The typed event taxonomy — one vocabulary for everything the
+/// serving stack used to scatter across ad-hoc `log::` calls.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// Dispatch chose a frontier point for a request (instant).
+    Dispatch {
+        /// Request id.
+        req: u64,
+        /// Chosen frontier index.
+        point: usize,
+        /// Chosen frontier label.
+        label: String,
+        /// Dispatch-time SLA verdict (predicted; the outcome verdict
+        /// lives in the serve report).
+        sla_met: bool,
+        /// Overload-degraded admission.
+        degraded: bool,
+    },
+    /// No dispatchable mapping under the current health mask.
+    DispatchDefer {
+        /// Request id.
+        req: u64,
+        /// Frontier points currently enabled.
+        enabled: usize,
+        /// Frontier points total.
+        total: usize,
+    },
+    /// Admission control shed a request under overload.
+    AdmissionShed {
+        /// Request id.
+        req: u64,
+        /// Projected device wait that tripped the controller, cycles.
+        wait: u64,
+    },
+    /// First request queued on an empty per-point queue.
+    BatchOpen {
+        /// Frontier index of the queue.
+        point: usize,
+    },
+    /// A request joined an already-open per-point queue.
+    BatchJoin {
+        /// Frontier index of the queue.
+        point: usize,
+        /// Queue depth after the join.
+        pending: usize,
+    },
+    /// The batcher released a batch.
+    BatchFlush {
+        /// Frontier index of the batch.
+        point: usize,
+        /// Batch size.
+        size: usize,
+        /// What triggered the release.
+        reason: FlushReason,
+    },
+    /// Continuous batching admitted a request into the in-flight
+    /// window (cluster only).
+    ContinuousJoin {
+        /// Request id.
+        req: u64,
+        /// Window completion cycle after the join.
+        done: u64,
+    },
+    /// One executed batch's device window (emitted at completion; the
+    /// span `start..done` renders on the replica's driver track and
+    /// expands into per-layer per-unit spans in the export).
+    BatchExec {
+        /// Frontier index executed.
+        point: usize,
+        /// Frontier label.
+        label: String,
+        /// Window start cycle.
+        start: u64,
+        /// Window end cycle.
+        done: u64,
+        /// Member count.
+        size: usize,
+        /// Per-image cycles (derate-stretched when a unit is derated).
+        per_img: u64,
+        /// Fixed launch overhead inside the window, cycles.
+        launch: u64,
+        /// Whether a derated unit stretched the window.
+        derated: bool,
+        /// Simulated per-image energy of the mapping, uJ.
+        energy_uj: f64,
+        /// `(request id, first arrival cycle)` per member — spans the
+        /// partition property in `tests/obs_props.rs` checks.
+        members: Vec<(u64, u64)>,
+    },
+    /// A unit died under an in-flight batch.
+    BatchAbort {
+        /// Frontier index of the aborted batch.
+        point: usize,
+        /// Abort cycle.
+        at: u64,
+    },
+    /// A request was re-enqueued for retry.
+    Retry {
+        /// Request id.
+        req: u64,
+        /// Attempt count after this re-enqueue.
+        attempt: u32,
+        /// Cycle the retry is scheduled at.
+        retry_at: u64,
+    },
+    /// A request exhausted its retry budget and failed.
+    RetryExhausted {
+        /// Request id.
+        req: u64,
+        /// Attempts consumed.
+        attempt: u32,
+    },
+    /// Work stealing moved requests between replicas.
+    Steal {
+        /// Victim replica.
+        from: u32,
+        /// Thief replica.
+        to: u32,
+        /// Requests moved.
+        moved: usize,
+    },
+    /// The health tracker's enabled-point mask changed.
+    FaultTransition {
+        /// Frontier points enabled after the transition.
+        enabled: usize,
+        /// Frontier points total.
+        total: usize,
+    },
+    /// Plan cache served a compiled plan.
+    PlanCacheHit {
+        /// Plan cache key.
+        key: u64,
+    },
+    /// Plan cache compiled a new plan.
+    PlanCacheMiss {
+        /// Plan cache key.
+        key: u64,
+    },
+    /// One real engine execution of a batch (wall domain).
+    EngineRun {
+        /// Frontier index executed.
+        point: usize,
+        /// Batch size.
+        batch: usize,
+        /// Worker threads available to the engine.
+        threads: usize,
+        /// Resolved kernel ISA.
+        isa: String,
+        /// Engine wall time, ns.
+        dur_ns: u64,
+    },
+    /// One plan-node kernel execution (wall domain, [`ObsLevel::Full`]).
+    KernelOp {
+        /// Plan node (layer) name.
+        node: String,
+        /// Op kind tag (`conv`, `fc`, `dw`, ...).
+        kind: &'static str,
+        /// Conv algorithm, for conv nodes.
+        algo: Option<&'static str>,
+        /// Kernel wall time, ns.
+        dur_ns: u64,
+    },
+    /// A mapping sweep finished (structured replacement for the old
+    /// `log::info!` line; mirrored to the log sink).
+    SweepDone {
+        /// Model swept.
+        model: String,
+        /// Platform swept on.
+        platform: String,
+        /// Candidate mappings scored.
+        candidates: usize,
+        /// Frontier points kept after Pareto pruning.
+        kept: usize,
+    },
+    /// The frontier cache satisfied a sweep request.
+    FrontierCacheHit {
+        /// Cache file path.
+        path: String,
+    },
+    /// The frontier cache was stale and a re-sweep ran.
+    FrontierCacheStale {
+        /// Cache file path.
+        path: String,
+        /// Why it was stale (schema, knobs, platform spec).
+        reason: String,
+    },
+    /// A fresh frontier cache was written.
+    FrontierCacheWritten {
+        /// Cache file path.
+        path: String,
+    },
+    /// A report artifact was persisted.
+    ReportWritten {
+        /// Artifact kind (`serve_report`, `cluster_report`, ...).
+        kind: &'static str,
+        /// Destination path.
+        path: String,
+    },
+}
+
+impl EventKind {
+    /// The human-readable mirror line (what `util/logging.rs` prints).
+    pub fn human(&self) -> String {
+        match self {
+            EventKind::SweepDone { model, platform, candidates, kept } => format!(
+                "sweep {model} on {platform}: {candidates} candidates -> {kept} frontier points"
+            ),
+            EventKind::FrontierCacheHit { path } => format!("frontier cache hit: {path}"),
+            EventKind::FrontierCacheStale { path, reason } => {
+                format!("frontier cache {path}: {reason}; re-sweeping")
+            }
+            EventKind::FrontierCacheWritten { path } => {
+                format!("frontier cache written: {path}")
+            }
+            EventKind::ReportWritten { kind, path } => format!("{kind} written to {path}"),
+            EventKind::DispatchDefer { req, enabled, total } => format!(
+                "serve: request {req} has no dispatchable mapping ({enabled}/{total} points \
+                 enabled)"
+            ),
+            other => format!("{other:?}"),
+        }
+    }
+}
+
+/// One recorded event: which virtual device (replica) it belongs to,
+/// its clock domain, and the typed payload.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Replica index (0 for the single-session loop).
+    pub replica: u32,
+    /// Timestamp domain + value.
+    pub clock: Clock,
+    /// Typed payload.
+    pub kind: EventKind,
+}
+
+/// The event sink. See the module docs for the clock-domain and
+/// determinism contract.
+pub struct Recorder {
+    level: ObsLevel,
+    epoch: Instant,
+    buf: Mutex<Vec<Event>>,
+}
+
+impl Recorder {
+    /// A recorder capturing at `level`.
+    pub fn new(level: ObsLevel) -> Self {
+        Recorder { level, epoch: Instant::now(), buf: Mutex::new(Vec::new()) }
+    }
+
+    /// A disabled recorder (the default everywhere a caller does not
+    /// opt in) — every record call is a single branch.
+    pub fn disabled() -> Self {
+        Self::new(ObsLevel::Off)
+    }
+
+    /// The capture level this recorder was built with.
+    pub fn level(&self) -> ObsLevel {
+        self.level
+    }
+
+    /// Whether any events are captured.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.level != ObsLevel::Off
+    }
+
+    /// Whether wall-domain engine/kernel spans are captured.
+    #[inline]
+    pub fn full(&self) -> bool {
+        self.level == ObsLevel::Full
+    }
+
+    /// Nanoseconds since this recorder's epoch (the wall domain's
+    /// time base).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Drop all recorded events (each serve run starts fresh so an
+    /// export reflects exactly one run).
+    pub fn reset(&self) {
+        if self.enabled() {
+            self.lock().clear();
+        }
+    }
+
+    /// Events recorded so far.
+    pub fn len(&self) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        self.lock().len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Clone out the recorded stream.
+    pub fn snapshot(&self) -> Vec<Event> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        self.lock().clone()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Event>> {
+        // a poisoned buffer only loses trace events, never results:
+        // recover the guard instead of propagating the panic
+        self.buf.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record a virtual-domain event at `cycles` on `replica`'s
+    /// timeline.
+    #[inline]
+    pub fn virt(&self, replica: u32, cycles: u64, kind: EventKind) {
+        if !self.enabled() {
+            return;
+        }
+        self.lock().push(Event { replica, clock: Clock::Virtual(cycles), kind });
+    }
+
+    /// Record a wall-domain event at `ns` (from [`Recorder::now_ns`]).
+    #[inline]
+    pub fn wall(&self, replica: u32, ns: u64, kind: EventKind) {
+        if !self.enabled() {
+            return;
+        }
+        self.lock().push(Event { replica, clock: Clock::Wall(ns), kind });
+    }
+
+    /// Record an untimed note *and* mirror it to the log sink at
+    /// `level` — the structured replacement for ad-hoc `log::` calls.
+    /// The mirror always prints (subject to the log filter), recorder
+    /// enabled or not, so human-readable behavior is unchanged.
+    pub fn note(&self, level: log::Level, kind: EventKind) {
+        log::log!(level, "{}", kind.human());
+        if self.enabled() {
+            self.lock().push(Event { replica: 0, clock: Clock::None, kind });
+        }
+    }
+
+    /// FNV-1a digest over the virtual-domain event stream (replica,
+    /// cycle, canonical payload encoding). Wall and untimed events are
+    /// excluded, so the digest is invariant across thread counts and
+    /// machine load — and equal across re-runs of one configuration.
+    pub fn virtual_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        if !self.enabled() {
+            return h;
+        }
+        for e in self.lock().iter() {
+            let Clock::Virtual(t) = e.clock else { continue };
+            eat(&e.replica.to_le_bytes());
+            eat(&t.to_le_bytes());
+            eat(format!("{:?}", e.kind).as_bytes());
+        }
+        h
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder")
+            .field("level", &self.level)
+            .field("events", &self.len())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// counters / histograms registry
+// ---------------------------------------------------------------------------
+
+/// Counter names (`serve.*`) the serve drivers bump and the report
+/// reads back. Keeping them `&'static str` keys makes every metric
+/// greppable from the report code to the bump site.
+pub mod ctr {
+    /// Batches executed by the real engine.
+    pub const BATCHES: &str = "serve.batches";
+    /// Engine wall time across batches, ns (compile time excluded).
+    pub const ENGINE_WALL_NS: &str = "serve.engine_wall_ns";
+    /// Plan-cache lookups served without compiling (run delta).
+    pub const PLAN_HITS: &str = "serve.plan_cache.hits";
+    /// Plan-cache lookups that compiled (run delta).
+    pub const PLAN_MISSES: &str = "serve.plan_cache.misses";
+    /// Wall time spent compiling plans, ns (run delta).
+    pub const PLAN_COMPILE_NS: &str = "serve.plan_cache.compile_ns";
+    /// Virtual completion cycle of the run (gauge).
+    pub const END_CYCLE: &str = "serve.end_cycle";
+    /// Fault events in the resolved plan (gauge).
+    pub const FAULTS_INJECTED: &str = "serve.faults_injected";
+    /// Batches aborted by a mid-flight unit loss.
+    pub const BATCH_ABORTS: &str = "serve.batch_aborts";
+    /// Request re-enqueues.
+    pub const RETRIES: &str = "serve.retries";
+    /// Requests shed by admission control.
+    pub const SHED: &str = "serve.shed_requests";
+    /// Requests that exhausted their retry budget.
+    pub const FAILED: &str = "serve.failed_requests";
+    /// Shed requests from the interactive (latency-budget) tenant.
+    pub const SHED_INTERACTIVE: &str = "serve.shed.interactive";
+    /// Shed requests from the batch (min-energy) tenant.
+    pub const SHED_BATCH: &str = "serve.shed.batch";
+}
+
+/// Histogram names: raw per-request samples the report folds into
+/// percentiles/means.
+pub mod hist {
+    /// Queue + compute latency per served request, cycles.
+    pub const LATENCY_CYCLES: &str = "serve.latency_cycles";
+    /// Queue wait per served request, cycles.
+    pub const QUEUE_CYCLES: &str = "serve.queue_cycles";
+    /// Batch compute per served request, cycles.
+    pub const COMPUTE_CYCLES: &str = "serve.compute_cycles";
+}
+
+/// Counters + histograms, name-keyed. `ServeMetrics` owns one per run
+/// and `ServeReport` is assembled from it (plus the per-request
+/// outcome list for per-mapping/per-tenant rows).
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    hists: BTreeMap<&'static str, Vec<f64>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add 1 to counter `k`.
+    pub fn inc(&mut self, k: &'static str) {
+        self.add(k, 1);
+    }
+
+    /// Add `v` to counter `k`.
+    pub fn add(&mut self, k: &'static str, v: u64) {
+        *self.counters.entry(k).or_insert(0) += v;
+    }
+
+    /// Set counter `k` to `v` (gauges).
+    pub fn set(&mut self, k: &'static str, v: u64) {
+        self.counters.insert(k, v);
+    }
+
+    /// Current value of counter `k` (0 when never touched).
+    pub fn counter(&self, k: &str) -> u64 {
+        self.counters.get(k).copied().unwrap_or(0)
+    }
+
+    /// Append one sample to histogram `k`.
+    pub fn observe(&mut self, k: &'static str, v: f64) {
+        self.hists.entry(k).or_default().push(v);
+    }
+
+    /// Raw samples of histogram `k` in record order.
+    pub fn samples(&self, k: &str) -> &[f64] {
+        self.hists.get(k).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Sum of histogram `k`'s samples.
+    pub fn sum(&self, k: &str) -> f64 {
+        self.samples(k).iter().sum()
+    }
+
+    /// Nearest-rank `p`-th percentile of histogram `k` (0 when empty)
+    /// — same rank rule the pre-registry report used.
+    pub fn percentile(&self, k: &str, p: usize) -> f64 {
+        let mut v = self.samples(k).to_vec();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.sort_by(f64::total_cmp);
+        let rank = (p * v.len()).div_ceil(100).max(1);
+        v[rank - 1]
+    }
+
+    /// All counters, name-sorted (dump/debug).
+    pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.counters.iter().map(|(&k, &v)| (k, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = Recorder::disabled();
+        r.virt(0, 10, EventKind::BatchOpen { point: 0 });
+        r.wall(0, 5, EventKind::PlanCacheHit { key: 1 });
+        assert!(r.is_empty());
+        assert_eq!(r.snapshot().len(), 0);
+    }
+
+    #[test]
+    fn digest_covers_virtual_events_only() {
+        let a = Recorder::new(ObsLevel::Full);
+        a.virt(0, 10, EventKind::BatchOpen { point: 0 });
+        a.wall(0, 123, EventKind::PlanCacheHit { key: 7 });
+        let b = Recorder::new(ObsLevel::Full);
+        b.virt(0, 10, EventKind::BatchOpen { point: 0 });
+        b.wall(0, 999_999, EventKind::PlanCacheMiss { key: 8 });
+        assert_eq!(a.virtual_digest(), b.virtual_digest());
+        b.virt(1, 10, EventKind::BatchOpen { point: 0 });
+        assert_ne!(a.virtual_digest(), b.virtual_digest());
+    }
+
+    #[test]
+    fn notes_mirror_without_entering_digest() {
+        let r = Recorder::new(ObsLevel::Basic);
+        let before = r.virtual_digest();
+        r.note(
+            log::Level::Info,
+            EventKind::ReportWritten { kind: "serve_report", path: "/tmp/x.json".into() },
+        );
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.virtual_digest(), before);
+    }
+
+    #[test]
+    fn reset_clears_the_stream() {
+        let r = Recorder::new(ObsLevel::Basic);
+        r.virt(0, 1, EventKind::BatchOpen { point: 2 });
+        assert_eq!(r.len(), 1);
+        r.reset();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn registry_counters_and_percentiles() {
+        let mut g = Registry::new();
+        g.inc(ctr::RETRIES);
+        g.add(ctr::RETRIES, 2);
+        g.set(ctr::END_CYCLE, 99);
+        assert_eq!(g.counter(ctr::RETRIES), 3);
+        assert_eq!(g.counter(ctr::END_CYCLE), 99);
+        assert_eq!(g.counter("never.touched"), 0);
+        for v in [30.0, 10.0, 20.0] {
+            g.observe(hist::LATENCY_CYCLES, v);
+        }
+        assert_eq!(g.percentile(hist::LATENCY_CYCLES, 50), 20.0);
+        assert_eq!(g.percentile(hist::LATENCY_CYCLES, 95), 30.0);
+        assert_eq!(g.percentile("empty", 50), 0.0);
+        assert_eq!(g.sum(hist::LATENCY_CYCLES), 60.0);
+        // samples keep record order (the report relies on exact sums)
+        assert_eq!(g.samples(hist::LATENCY_CYCLES), &[30.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn obs_level_parse() {
+        assert_eq!(ObsLevel::parse("off"), Some(ObsLevel::Off));
+        assert_eq!(ObsLevel::parse("basic"), Some(ObsLevel::Basic));
+        assert_eq!(ObsLevel::parse("full"), Some(ObsLevel::Full));
+        assert_eq!(ObsLevel::parse("verbose"), None);
+    }
+
+    #[test]
+    fn human_lines_for_note_kinds() {
+        let k = EventKind::SweepDone {
+            model: "tinycnn".into(),
+            platform: "diana".into(),
+            candidates: 12,
+            kept: 5,
+        };
+        assert_eq!(
+            k.human(),
+            "sweep tinycnn on diana: 12 candidates -> 5 frontier points"
+        );
+        let d = EventKind::DispatchDefer { req: 3, enabled: 1, total: 4 };
+        assert!(d.human().contains("1/4 points enabled"), "{}", d.human());
+    }
+}

@@ -37,7 +37,7 @@ use crate::model::Graph;
 use crate::runtime::ArtifactMeta;
 use crate::util::pool::ThreadPool;
 
-use super::plan::{ConvAlgo, QuantPlan, Scratch};
+use super::plan::{ConvAlgo, KernelSpan, QuantPlan, Scratch};
 use super::simd::{Isa, KernelBackend};
 use super::ParamSet;
 
@@ -145,6 +145,18 @@ impl QuantNet {
         let y = self.plan.run_block(x, batch, &mut ws, None);
         self.put_ws(ws);
         Ok(y)
+    }
+
+    /// Single-threaded traced forward: bit-identical numerics to
+    /// [`Self::forward`], plus one wall-timed [`KernelSpan`] per plan
+    /// node — the engine path the serve loop takes at
+    /// [`ObsLevel::Full`](crate::obs::ObsLevel::Full).
+    pub fn forward_traced(&self, x: &[f32], batch: usize) -> Result<(Vec<f32>, Vec<KernelSpan>)> {
+        assert_eq!(x.len(), batch * self.plan.in_elems(), "input size");
+        let mut ws = self.take_ws();
+        let out = self.plan.run_block_traced(x, batch, &mut ws);
+        self.put_ws(ws);
+        Ok(out)
     }
 
     /// Parallel forward over `pool`. Results are bit-identical to

@@ -14,7 +14,7 @@ pub mod r#ref;
 pub mod simd;
 
 pub use infer::{calibrate_act_maxima, calibrate_act_maxima_params, QuantNet};
-pub use plan::{ConvAlgo, QuantPlan, Scratch};
+pub use plan::{ConvAlgo, KernelSpan, QuantPlan, Scratch};
 pub use simd::{Isa, KernelBackend};
 
 use std::collections::BTreeMap;

@@ -93,6 +93,15 @@ pub enum ConvAlgo {
 const DIRECT_L1_ELEMS: usize = 32 * 1024;
 
 impl ConvAlgo {
+    /// Short stable tag for traces and dashboards.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvAlgo::Im2col => "im2col",
+            ConvAlgo::Direct1x1 => "direct1x1",
+            ConvAlgo::Direct3x3 => "direct3x3",
+        }
+    }
+
     /// Plan-time choice for one conv. `force` (tests/benches) overrides
     /// the size heuristic but never geometry eligibility: forcing
     /// `Direct3x3` on a 5x5 conv still compiles the im2col path.
@@ -162,6 +171,23 @@ pub(crate) struct DwP {
     act_scale: f32,
     /// output grid of the unit running depthwise convs
     obits: u32,
+}
+
+/// One traced plan-node execution (the obs layer's `Full`-level
+/// per-op kernel span): what ran, which algorithm, and when — offsets
+/// are nanoseconds from the start of the traced walk.
+#[derive(Clone, Debug)]
+pub struct KernelSpan {
+    /// Plan node (layer) name.
+    pub node: String,
+    /// Op kind tag (`input`, `conv`, `fc`, `dw`, `add`, `gap`).
+    pub kind: &'static str,
+    /// Conv algorithm, for conv nodes.
+    pub algo: Option<&'static str>,
+    /// Start offset from the walk's begin, ns.
+    pub start_ns: u64,
+    /// Kernel wall time, ns.
+    pub dur_ns: u64,
 }
 
 pub(crate) enum PlanOp {
@@ -808,6 +834,69 @@ impl QuantPlan {
         }
     }
 
+    /// Execute one node's kernel into `dst` — the single body shared by
+    /// [`Self::run_block`] and the traced walk
+    /// ([`Self::run_block_traced`]), so traced numerics are identical
+    /// by construction.
+    fn exec_node(
+        &self,
+        node: &PlanNode,
+        x: &[f32],
+        batch: usize,
+        ws: &mut Scratch,
+        dst: &mut Vec<f32>,
+    ) {
+        let isa = self.isa;
+        match &node.op {
+            PlanOp::Input { quantize } => {
+                if *quantize {
+                    simd::input_quant(isa, x, dst);
+                } else {
+                    dst.copy_from_slice(x);
+                }
+            }
+            PlanOp::Conv(cp) => {
+                exec_conv(
+                    cp,
+                    &ws.bufs,
+                    &node.src_views,
+                    batch,
+                    &mut ws.panel,
+                    &mut ws.cbuf,
+                    &mut ws.audit,
+                    isa,
+                    dst,
+                );
+            }
+            PlanOp::Fc(fp) => {
+                exec_fc(
+                    fp,
+                    &ws.bufs,
+                    &node.src_views,
+                    batch,
+                    &mut ws.panel,
+                    &mut ws.cbuf,
+                    &mut ws.audit,
+                    isa,
+                    dst,
+                );
+            }
+            PlanOp::Dw(dp) => {
+                let src = ws.bufs[node.src[0]].as_slice();
+                exec_dw(dp, src, batch, 0, dp.c, isa, dst);
+            }
+            PlanOp::Add { relu, scale, quantize } => {
+                let a = ws.bufs[node.src[0]].as_slice();
+                let b = ws.bufs[node.src[1]].as_slice();
+                simd::add_relu_quant(isa, a, b, *relu, *scale, *quantize, dst);
+            }
+            PlanOp::Gap { c, hw } => {
+                let src = ws.bufs[node.src[0]].as_slice();
+                exec_gap(src, batch, *c, *hw, dst);
+            }
+        }
+    }
+
     /// Execute one batch block single-threaded. Returns the logits
     /// buffer *by move* out of the arena (no final clone). When
     /// `maxima` is given (len >= n_nodes), per-node post-epilogue
@@ -825,54 +914,7 @@ impl QuantPlan {
         for (ni, node) in self.nodes.iter().enumerate() {
             let mut dst = std::mem::take(&mut ws.bufs[node.dst]);
             Scratch::ensure(&mut dst, node.out_elems * batch, &mut ws.audit);
-            match &node.op {
-                PlanOp::Input { quantize } => {
-                    if *quantize {
-                        simd::input_quant(isa, x, &mut dst);
-                    } else {
-                        dst.copy_from_slice(x);
-                    }
-                }
-                PlanOp::Conv(cp) => {
-                    exec_conv(
-                        cp,
-                        &ws.bufs,
-                        &node.src_views,
-                        batch,
-                        &mut ws.panel,
-                        &mut ws.cbuf,
-                        &mut ws.audit,
-                        isa,
-                        &mut dst,
-                    );
-                }
-                PlanOp::Fc(fp) => {
-                    exec_fc(
-                        fp,
-                        &ws.bufs,
-                        &node.src_views,
-                        batch,
-                        &mut ws.panel,
-                        &mut ws.cbuf,
-                        &mut ws.audit,
-                        isa,
-                        &mut dst,
-                    );
-                }
-                PlanOp::Dw(dp) => {
-                    let src = ws.bufs[node.src[0]].as_slice();
-                    exec_dw(dp, src, batch, 0, dp.c, isa, &mut dst);
-                }
-                PlanOp::Add { relu, scale, quantize } => {
-                    let a = ws.bufs[node.src[0]].as_slice();
-                    let b = ws.bufs[node.src[1]].as_slice();
-                    simd::add_relu_quant(isa, a, b, *relu, *scale, *quantize, &mut dst);
-                }
-                PlanOp::Gap { c, hw } => {
-                    let src = ws.bufs[node.src[0]].as_slice();
-                    exec_gap(src, batch, *c, *hw, &mut dst);
-                }
-            }
+            self.exec_node(node, x, batch, ws, &mut dst);
             if let Some(m) = maxima.as_deref_mut() {
                 if node.track_max {
                     m[ni] = dst.iter().fold(m[ni], |acc, &v| acc.max(v));
@@ -882,6 +924,48 @@ impl QuantPlan {
             ws.bufs[node.dst] = dst;
         }
         std::mem::take(&mut ws.bufs[self.nodes.last().unwrap().dst])
+    }
+
+    /// [`Self::run_block`] with per-node wall timing — the obs layer's
+    /// `Full`-level engine path. Numerics are identical by construction
+    /// (same [`Self::exec_node`] body, same single-threaded walk); only
+    /// the wall-clock spans differ run to run, and those live on the
+    /// wall domain, which is excluded from every determinism digest.
+    pub(crate) fn run_block_traced(
+        &self,
+        x: &[f32],
+        batch: usize,
+        ws: &mut Scratch,
+    ) -> (Vec<f32>, Vec<KernelSpan>) {
+        assert_eq!(x.len(), batch * self.in_elems, "input size");
+        self.presize(ws, batch, None);
+        let isa = self.isa;
+        let epoch = std::time::Instant::now();
+        let mut spans = Vec::with_capacity(self.nodes.len());
+        for node in self.nodes.iter() {
+            let t0 = epoch.elapsed().as_nanos() as u64;
+            let mut dst = std::mem::take(&mut ws.bufs[node.dst]);
+            Scratch::ensure(&mut dst, node.out_elems * batch, &mut ws.audit);
+            self.exec_node(node, x, batch, ws, &mut dst);
+            Self::materialize_da(node, &dst, &mut ws.bufs, &mut ws.audit, isa);
+            ws.bufs[node.dst] = dst;
+            let (kind, algo) = match &node.op {
+                PlanOp::Input { .. } => ("input", None),
+                PlanOp::Conv(cp) => ("conv", Some(cp.algo.name())),
+                PlanOp::Fc(_) => ("fc", None),
+                PlanOp::Dw(_) => ("dw", None),
+                PlanOp::Add { .. } => ("add", None),
+                PlanOp::Gap { .. } => ("gap", None),
+            };
+            spans.push(KernelSpan {
+                node: node.name.clone(),
+                kind,
+                algo,
+                start_ns: t0,
+                dur_ns: (epoch.elapsed().as_nanos() as u64).saturating_sub(t0),
+            });
+        }
+        (std::mem::take(&mut ws.bufs[self.nodes.last().unwrap().dst]), spans)
     }
 
     /// Execute one block with per-layer (image x output-channel-block)

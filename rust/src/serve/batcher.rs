@@ -66,6 +66,12 @@ impl Batcher {
         self.queues.values().map(Vec::len).sum()
     }
 
+    /// Requests currently queued on `point`'s mapping (the obs layer
+    /// classifies a push as batch-open vs batch-join with this).
+    pub fn pending_for(&self, point: usize) -> usize {
+        self.queues.get(&point).map_or(0, Vec::len)
+    }
+
     /// Enqueue one request; returns the flushed batch if its queue just
     /// reached `max_batch`.
     pub fn push(&mut self, r: Request) -> Option<Batch> {

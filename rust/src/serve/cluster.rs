@@ -42,6 +42,7 @@ use crate::data::synth::gen_sample;
 use crate::exp::store;
 use crate::hw::Platform;
 use crate::model::Graph;
+use crate::obs::{ctr, EventKind, FlushReason, Recorder};
 use crate::quant::{KernelBackend, ParamSet, QuantNet, QuantPlan};
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
@@ -49,9 +50,9 @@ use crate::util::pool::ThreadPool;
 use super::batcher::{Batch, Batcher, PlanCache, Request};
 use super::dispatch::{dispatch_filtered, fastest_filtered, Sla};
 use super::health::HealthTracker;
-use super::metrics::{RequestOutcome, ServeMetrics, ServeReport};
+use super::metrics::{RequestOutcome, ServeMetrics, ServeReport, Tenant};
 use super::trace::Trace;
-use super::{Admission, RetryState, SeedLookup, ServeError, ServeOpts};
+use super::{advance_traced, push_traced, Admission, RetryState, SeedLookup, ServeError, ServeOpts};
 
 /// Cluster report schema version (envelope kind `cluster_report`).
 pub const CLUSTER_SCHEMA: u32 = 1;
@@ -362,6 +363,8 @@ struct InFlight {
 /// One virtual serve replica: the same state `run_serve` keeps in
 /// locals, boxed per replica.
 struct Replica {
+    /// Replica index (obs events carry it as the track id).
+    id: u32,
     tracker: HealthTracker,
     batcher: Batcher,
     stats: ServeMetrics,
@@ -381,6 +384,7 @@ struct Ctx<'a> {
     opts: &'a ClusterOpts,
     seeds: SeedLookup<'a>,
     backend: KernelBackend,
+    rec: &'a Recorder,
 }
 
 /// Mutably borrow two distinct replicas.
@@ -462,6 +466,8 @@ fn handle_batch(rep: &mut Replica, b: &Batch, ctx: &Ctx<'_>, cold: &mut u64) -> 
         &mut rep.device_free,
         &mut rep.retry,
         ctx.backend,
+        ctx.rec,
+        rep.id,
     )
 }
 
@@ -482,11 +488,16 @@ fn serve_on(rep: &mut Replica, q: Request, ctx: &Ctx<'_>, cold: &mut u64) -> Res
                 inf.requests.push(q);
                 inf.done += inf.per_img;
                 rep.device_free = inf.done;
+                ctx.rec.virt(
+                    rep.id,
+                    q.arrival,
+                    EventKind::ContinuousJoin { req: q.id, done: inf.done },
+                );
                 return Ok(());
             }
         }
     }
-    if let Some(b) = rep.batcher.push(q) {
+    if let Some(b) = push_traced(&mut rep.batcher, q, ctx.rec, rep.id) {
         handle_batch(rep, &b, ctx, cold)?;
     }
     Ok(())
@@ -494,11 +505,14 @@ fn serve_on(rep: &mut Replica, q: Request, ctx: &Ctx<'_>, cold: &mut u64) -> Res
 
 /// The in-flight window closed: abort it if its unit died under it,
 /// otherwise run the real engine once over the final member set and
-/// record every outcome.
-fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>) -> Result<()> {
+/// record every outcome. `ev_now` is the loop's current virtual cycle
+/// — obs events are stamped there so the per-replica event stream
+/// stays monotone (the window's real start/done ride in the payload).
+fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>, ev_now: u64) -> Result<()> {
     let bsz = inf.requests.len();
     if let Some(abort_at) = rep.tracker.abort_cycle(inf.point, inf.start, inf.done) {
-        rep.stats.batch_aborts += 1;
+        rep.stats.registry_mut().inc(ctr::BATCH_ABORTS);
+        ctx.rec.virt(rep.id, ev_now, EventKind::BatchAbort { point: inf.point, at: abort_at });
         if rep.device_free == inf.done {
             // nothing queued behind the window: rewind the device to
             // the abort + cleanup cost, as the flush path does
@@ -506,7 +520,15 @@ fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>) -> Result<
         }
         let retry_at = abort_at.saturating_add(ctx.opts.serve.retry_backoff.max(1));
         for r in &inf.requests {
-            rep.retry.schedule(r, Some(retry_at), ctx.opts.serve.max_retries, &mut rep.stats);
+            rep.retry.schedule(
+                r,
+                Some(retry_at),
+                ctx.opts.serve.max_retries,
+                &mut rep.stats,
+                ctx.rec,
+                rep.id,
+                ev_now,
+            );
         }
         return Ok(());
     }
@@ -520,7 +542,11 @@ fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>) -> Result<
     }
     let key = QuantPlan::cache_key(&ctx.graph.name, &platform.name, &fp.mapping, ctx.backend);
     let compile_before = rep.plans.compile_ns;
+    let misses_before = rep.plans.misses;
     let t0 = Instant::now();
+    // at ObsLevel::Full the traced walk runs instead of the pooled one
+    // (bit-identical numerics, single-threaded, per-node timed)
+    let mut traced = None;
     {
         let net = rep.plans.get_or_compile(key, &fp.mapping, || {
             QuantNet::compile_params_backend(
@@ -531,11 +557,65 @@ fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>) -> Result<
                 ctx.backend,
             )
         })?;
-        let y = net.forward_pool(&x, bsz, ctx.pool)?;
-        std::hint::black_box(&y);
+        if ctx.rec.full() {
+            let t_ns = ctx.rec.now_ns();
+            let (y, spans) = net.forward_traced(&x, bsz)?;
+            std::hint::black_box(&y);
+            traced = Some((net.isa().name(), t_ns, spans));
+        } else {
+            let y = net.forward_pool(&x, bsz, ctx.pool)?;
+            std::hint::black_box(&y);
+        }
     }
     let wall = t0.elapsed().as_nanos() as u64;
-    rep.stats.record_batch(wall.saturating_sub(rep.plans.compile_ns - compile_before));
+    let engine_ns = wall.saturating_sub(rep.plans.compile_ns - compile_before);
+    rep.stats.record_batch(engine_ns);
+    if ctx.rec.enabled() {
+        let kind = if rep.plans.misses > misses_before {
+            EventKind::PlanCacheMiss { key }
+        } else {
+            EventKind::PlanCacheHit { key }
+        };
+        ctx.rec.virt(rep.id, ev_now, kind);
+    }
+    if let Some((isa, t_ns, spans)) = traced {
+        ctx.rec.wall(
+            rep.id,
+            t_ns,
+            EventKind::EngineRun {
+                point: inf.point,
+                batch: bsz,
+                threads: ctx.pool.threads(),
+                isa: isa.to_string(),
+                dur_ns: engine_ns,
+            },
+        );
+        for s in spans {
+            ctx.rec.wall(
+                rep.id,
+                t_ns + s.start_ns,
+                EventKind::KernelOp { node: s.node, kind: s.kind, algo: s.algo, dur_ns: s.dur_ns },
+            );
+        }
+    }
+    if ctx.rec.enabled() {
+        ctx.rec.virt(
+            rep.id,
+            ev_now,
+            EventKind::BatchExec {
+                point: inf.point,
+                label: fp.label.clone(),
+                start: inf.start,
+                done: inf.done,
+                size: bsz,
+                per_img: inf.per_img,
+                launch: ctx.opts.serve.launch_cycles,
+                derated: inf.derated,
+                energy_uj: fp.energy_uj,
+                members: inf.requests.iter().map(|r| (r.id, rep.retry.orig(r))).collect(),
+            },
+        );
+    }
     let compute = inf.done - inf.start;
     for r in &inf.requests {
         let orig = rep.retry.orig(r);
@@ -556,6 +636,7 @@ fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>) -> Result<
             batch_size: bsz,
             energy_uj: fp.energy_uj,
             degraded,
+            tenant: Tenant::from_sla(&r.sla),
         });
     }
     Ok(())
@@ -575,10 +656,42 @@ fn dispatch_or_retry(
         dispatch_filtered(&tr.points, |x| tr.enabled[x], r.sla)
     };
     match d {
-        Some(d) => serve_on(rep, Request { point: d.point, ..r }, ctx, cold),
+        Some(d) => {
+            if ctx.rec.enabled() {
+                ctx.rec.virt(
+                    rep.id,
+                    now,
+                    EventKind::Dispatch {
+                        req: r.id,
+                        point: d.point,
+                        label: rep.tracker.points[d.point].label.clone(),
+                        sla_met: d.sla_met,
+                        degraded: rep.retry.degraded_ids.contains(&r.id),
+                    },
+                );
+            }
+            serve_on(rep, Request { point: d.point, ..r }, ctx, cold)
+        }
         None => {
+            ctx.rec.virt(
+                rep.id,
+                now,
+                EventKind::DispatchDefer {
+                    req: r.id,
+                    enabled: rep.tracker.enabled_count(),
+                    total: rep.tracker.points.len(),
+                },
+            );
             let at = rep.tracker.next_change_after(now);
-            rep.retry.schedule(&r, at, ctx.opts.serve.max_retries, &mut rep.stats);
+            rep.retry.schedule(
+                &r,
+                at,
+                ctx.opts.serve.max_retries,
+                &mut rep.stats,
+                ctx.rec,
+                rep.id,
+                now,
+            );
             Ok(())
         }
     }
@@ -626,7 +739,12 @@ fn steal_pass(
         }
         *steals += 1;
         *stolen_requests += stolen.len() as u64;
-        thief.tracker.advance(now, ctx.graph)?;
+        ctx.rec.virt(
+            thief.id,
+            now,
+            EventKind::Steal { from: vict.id, to: thief.id, moved: stolen.len() },
+        );
+        advance_traced(&mut thief.tracker, now, ctx.graph, ctx.rec, thief.id)?;
         for r in stolen {
             // queue time and SLA accounting span the move: the thief
             // inherits the request's first arrival, attempt count and
@@ -660,6 +778,7 @@ pub(crate) fn run_cluster(
     trace: &Trace,
     opts: &ClusterOpts,
     backend: KernelBackend,
+    rec: &Recorder,
 ) -> Result<ClusterReport> {
     if frontier.is_empty() {
         return Err(ServeError::EmptyFrontier {
@@ -668,12 +787,12 @@ pub(crate) fn run_cluster(
         }
         .into());
     }
-    for (i, rec) in trace.records.iter().enumerate() {
-        if rec.model != graph.name {
+    for (i, record) in trace.records.iter().enumerate() {
+        if record.model != graph.name {
             return Err(anyhow!(
                 "cluster: trace record {} targets model '{}' but the session serves '{}'",
                 i,
-                rec.model,
+                record.model,
                 graph.name
             ));
         }
@@ -688,17 +807,19 @@ pub(crate) fn run_cluster(
         opts,
         seeds: SeedLookup::PerRequest { seeds: &seed_table, fallback },
         backend,
+        rec,
     };
     let mut replicas = Vec::with_capacity(n_replicas);
-    for _ in 0..n_replicas {
+    for id in 0..n_replicas {
         let resolved = match &opts.serve.fault_plan {
             Some(plan) => Some(plan.resolve(platform)?),
             None => None,
         };
         let tracker = HealthTracker::new(frontier, platform, resolved, graph);
         let mut stats = ServeMetrics::new();
-        stats.faults_injected = tracker.n_events() as u64;
+        stats.registry_mut().set(ctr::FAULTS_INJECTED, tracker.n_events() as u64);
         replicas.push(Replica {
+            id: id as u32,
             tracker,
             batcher: Batcher::new(opts.serve.max_batch, opts.serve.max_wait),
             stats,
@@ -743,14 +864,24 @@ pub(crate) fn run_cluster(
             for rep in replicas.iter_mut() {
                 let batches = rep.batcher.drain(tail_now);
                 for b in batches {
+                    rec.virt(
+                        rep.id,
+                        tail_now,
+                        EventKind::BatchFlush {
+                            point: b.point,
+                            size: b.requests.len(),
+                            reason: FlushReason::Drain,
+                        },
+                    );
                     handle_batch(rep, &b, &ctx, &mut cold_compiles)?;
                 }
                 // continuous mode may have left the drained batch in
                 // flight — close it immediately, the stream is over
                 if let Some(inf) = rep.inflight.take() {
-                    tail_now = tail_now.max(inf.done);
-                    rep.tracker.advance(inf.done, graph)?;
-                    complete_inflight(rep, inf, &ctx)?;
+                    let ev_now = tail_now.max(inf.done);
+                    tail_now = ev_now;
+                    advance_traced(&mut rep.tracker, inf.done, graph, rec, rep.id)?;
+                    complete_inflight(rep, inf, &ctx, ev_now)?;
                 }
             }
             continue;
@@ -782,7 +913,7 @@ pub(crate) fn run_cluster(
             0 => {
                 tail_now = tail_now.max(now);
                 let rep = &mut replicas[j];
-                rep.tracker.advance(now, graph)?;
+                advance_traced(&mut rep.tracker, now, graph, rec, rep.id)?;
                 for r in rep.retry.pop_at(now) {
                     dispatch_or_retry(rep, r, now, &ctx, &mut cold_compiles)?;
                 }
@@ -794,7 +925,7 @@ pub(crate) fn run_cluster(
                 let target = route(&replicas, now);
                 dispatched[target] += 1;
                 let rep = &mut replicas[target];
-                rep.tracker.advance(r.arrival, graph)?;
+                advance_traced(&mut rep.tracker, r.arrival, graph, rec, rep.id)?;
                 let wait = rep.device_free.saturating_sub(r.arrival);
                 let decision = {
                     let tr = &rep.tracker;
@@ -810,7 +941,11 @@ pub(crate) fn run_cluster(
                                             .saturating_add(tr.points[f].cycles)
                                             .saturating_add(opts.serve.launch_cycles);
                                         if eta <= b {
-                                            Admission::Serve(f, true)
+                                            Admission::Serve {
+                                                point: f,
+                                                degraded: true,
+                                                sla_met: true,
+                                            }
                                         } else {
                                             Admission::Shed
                                         }
@@ -820,25 +955,61 @@ pub(crate) fn run_cluster(
                         }
                     } else {
                         match dispatch_filtered(&tr.points, keep, r.sla) {
-                            Some(d) => Admission::Serve(d.point, false),
+                            Some(d) => Admission::Serve {
+                                point: d.point,
+                                degraded: false,
+                                sla_met: d.sla_met,
+                            },
                             None => Admission::Defer,
                         }
                     }
                 };
                 match decision {
-                    Admission::Serve(point, degraded) => {
+                    Admission::Serve { point, degraded, sla_met } => {
+                        if rec.enabled() {
+                            rec.virt(
+                                rep.id,
+                                r.arrival,
+                                EventKind::Dispatch {
+                                    req: r.id,
+                                    point,
+                                    label: rep.tracker.points[point].label.clone(),
+                                    sla_met,
+                                    degraded,
+                                },
+                            );
+                        }
                         if degraded {
                             rep.retry.degraded_ids.insert(r.id);
                         }
                         serve_on(rep, Request { point, ..r }, &ctx, &mut cold_compiles)?;
                     }
                     Admission::Shed => {
-                        rep.stats.shed_requests += 1;
+                        rep.stats.registry_mut().inc(ctr::SHED);
+                        rep.stats.registry_mut().inc(Tenant::from_sla(&r.sla).shed_counter());
+                        rec.virt(rep.id, r.arrival, EventKind::AdmissionShed { req: r.id, wait });
                         shed_ids.push(r.id);
                     }
                     Admission::Defer => {
+                        rec.virt(
+                            rep.id,
+                            r.arrival,
+                            EventKind::DispatchDefer {
+                                req: r.id,
+                                enabled: rep.tracker.enabled_count(),
+                                total: rep.tracker.points.len(),
+                            },
+                        );
                         let at = rep.tracker.next_change_after(r.arrival);
-                        rep.retry.schedule(&r, at, opts.serve.max_retries, &mut rep.stats);
+                        rep.retry.schedule(
+                            &r,
+                            at,
+                            opts.serve.max_retries,
+                            &mut rep.stats,
+                            rec,
+                            rep.id,
+                            r.arrival,
+                        );
                     }
                 }
             }
@@ -846,6 +1017,15 @@ pub(crate) fn run_cluster(
             2 => {
                 let batches = replicas[j].batcher.due(now);
                 for b in batches {
+                    rec.virt(
+                        replicas[j].id,
+                        now,
+                        EventKind::BatchFlush {
+                            point: b.point,
+                            size: b.requests.len(),
+                            reason: FlushReason::Deadline,
+                        },
+                    );
                     handle_batch(&mut replicas[j], &b, &ctx, &mut cold_compiles)?;
                 }
             }
@@ -853,9 +1033,9 @@ pub(crate) fn run_cluster(
             _ => {
                 tail_now = tail_now.max(now);
                 let rep = &mut replicas[j];
-                rep.tracker.advance(now, graph)?;
+                advance_traced(&mut rep.tracker, now, graph, rec, rep.id)?;
                 if let Some(inf) = rep.inflight.take() {
-                    complete_inflight(rep, inf, &ctx)?;
+                    complete_inflight(rep, inf, &ctx, now)?;
                 }
             }
         }
@@ -871,11 +1051,11 @@ pub(crate) fn run_cluster(
 
     // fold per-replica stats into reports + cluster aggregates
     let mut tenants: BTreeMap<String, TenantRow> = BTreeMap::new();
-    for rec in &trace.records {
+    for record in &trace.records {
         tenants
-            .entry(rec.tenant.clone())
+            .entry(record.tenant.clone())
             .or_insert_with(|| TenantRow {
-                tenant: rec.tenant.clone(),
+                tenant: record.tenant.clone(),
                 arrivals: 0,
                 served: 0,
                 sla_hits: 0,
@@ -891,13 +1071,16 @@ pub(crate) fn run_cluster(
     let mut total_failed = 0u64;
     let mut max_end = 0u64;
     for rep in replicas.iter_mut() {
-        rep.stats.plan_hits = rep.plans.hits;
-        rep.stats.plan_misses = rep.plans.misses;
-        rep.stats.plan_compile_ns = rep.plans.compile_ns;
-        rep.stats.end_cycle = rep.device_free;
+        // per-replica caches start cold, so absolute cache counters
+        // are this run's numbers (unlike run_serve's warm-cache deltas)
+        let reg = rep.stats.registry_mut();
+        reg.set(ctr::PLAN_HITS, rep.plans.hits);
+        reg.set(ctr::PLAN_MISSES, rep.plans.misses);
+        reg.set(ctr::PLAN_COMPILE_NS, rep.plans.compile_ns);
+        reg.set(ctr::END_CYCLE, rep.device_free);
         max_end = max_end.max(rep.device_free);
-        total_shed += rep.stats.shed_requests;
-        total_failed += rep.stats.failed_requests;
+        total_shed += rep.stats.registry().counter(ctr::SHED);
+        total_failed += rep.stats.registry().counter(ctr::FAILED);
         for o in rep.stats.outcomes() {
             total_served += 1;
             if let Some(t) = tenant_of(o.id).and_then(|t| tenants.get_mut(t)) {

@@ -322,7 +322,8 @@ mod tests {
         let p = Platform::mpsoc4();
         let pool = ThreadPool::new(2);
         let cfg = SweepCfg { seed: 7, calib: 4, blend_steps: 2 };
-        let frontier = sweep_frontier(&g, &p, &cfg, &pool).unwrap();
+        let frontier =
+            sweep_frontier(&g, &p, &cfg, &pool, &crate::obs::Recorder::disabled()).unwrap();
         let probe = HealthTracker::new(&frontier, &p, None, &g);
         let victim = probe.units[0][0];
         let vname = p.accelerators[victim].name.clone();
@@ -452,7 +453,8 @@ mod tests {
         let p = Platform::diana();
         let pool = ThreadPool::new(2);
         let cfg = SweepCfg { seed: 7, calib: 4, blend_steps: 2 };
-        let frontier = sweep_frontier(&g, &p, &cfg, &pool).unwrap();
+        let frontier =
+            sweep_frontier(&g, &p, &cfg, &pool, &crate::obs::Recorder::disabled()).unwrap();
         let mut t = HealthTracker::new(&frontier, &p, None, &g);
         t.advance(1_000_000, &g).unwrap();
         assert_eq!(t.points.len(), frontier.len());

@@ -2,14 +2,17 @@
 //! aggregation, and the `serve-report` dashboard.
 //!
 //! The collector ([`ServeMetrics`]) records one [`RequestOutcome`] per
-//! served request in virtual (simulated-cycle) time plus wall-clock
-//! engine counters, then folds everything into a [`ServeReport`]: one
-//! row per frontier mapping (requests, mean batch size, p50/p95
-//! queue+compute latency, simulated energy, SLA hit-rate) and run-level
-//! totals (throughput over engine wall time, plan-cache hits/misses and
-//! compile time, virtual makespan). Reports serialize through the
-//! versioned store envelope so `serve-report` can render a dashboard
-//! from a past run without re-serving.
+//! served request in virtual (simulated-cycle) time and accumulates
+//! every run counter in an [`obs::Registry`](crate::obs::Registry)
+//! (named counters + raw latency histograms — see [`crate::obs::ctr`]
+//! and [`crate::obs::hist`]), then folds everything into a
+//! [`ServeReport`]: one row per frontier mapping (requests, mean batch
+//! size, p50/p95 queue+compute latency, simulated energy, SLA
+//! hit-rate), per-tenant rows (interactive vs batch — ROADMAP item 2),
+//! and run-level totals (throughput over engine wall time, plan-cache
+//! hits/misses and compile time, virtual makespan). Reports serialize
+//! through the versioned store envelope so `serve-report` can render a
+//! dashboard from a past run without re-serving.
 //!
 //! Fault accounting rides along: the report carries the injected-fault,
 //! batch-abort, retry, shed and failed counters plus a degraded-service
@@ -26,7 +29,10 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::exp::store;
+use crate::obs::{ctr, hist, Registry};
 use crate::util::json::Json;
+
+use super::dispatch::Sla;
 
 /// Bump when the serve-report layout changes; [`load_report`] refuses
 /// files written under any other version. v2 added the fault/admission
@@ -36,9 +42,51 @@ pub const SERVE_SCHEMA: u32 = 2;
 /// Additive revision within [`SERVE_SCHEMA`]: minor bumps add optional
 /// fields that old readers may ignore and old files may lack. v2.1
 /// added the run-level queue-wait / engine-compute latency split
-/// (`mean_queue_ms`, `mean_compute_ms`); loaders default both to 0
-/// when reading a v2.0 file.
-pub const SERVE_SCHEMA_MINOR: u32 = 1;
+/// (`mean_queue_ms`, `mean_compute_ms`); v2.2 added the per-tenant
+/// rows (`tenant_rows`). Loaders default all of them when reading an
+/// older file.
+pub const SERVE_SCHEMA_MINOR: u32 = 2;
+
+/// Serving tenant class, derived from the request's SLA: latency-budget
+/// requests are the interactive tenant, min-energy requests the batch
+/// tenant — the same convention the trace synthesizer uses for its
+/// `tenant` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tenant {
+    /// Latency-budget requests.
+    Interactive,
+    /// Min-energy (throughput/batch) requests.
+    Batch,
+}
+
+impl Tenant {
+    /// The tenant class of a request with SLA `sla`.
+    pub fn from_sla(sla: &Sla) -> Tenant {
+        match sla {
+            Sla::MinEnergy => Tenant::Batch,
+            Sla::LatencyBudget(_) => Tenant::Interactive,
+        }
+    }
+
+    /// Dashboard/JSON name (matches the trace-file `tenant` strings).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tenant::Interactive => "interactive",
+            Tenant::Batch => "batch",
+        }
+    }
+
+    /// Registry counter for this tenant's shed requests.
+    pub fn shed_counter(self) -> &'static str {
+        match self {
+            Tenant::Interactive => ctr::SHED_INTERACTIVE,
+            Tenant::Batch => ctr::SHED_BATCH,
+        }
+    }
+
+    /// Both tenants, in report order.
+    pub const ALL: [Tenant; 2] = [Tenant::Interactive, Tenant::Batch];
+}
 
 /// One served request, in virtual time.
 #[derive(Clone, Copy, Debug)]
@@ -61,59 +109,47 @@ pub struct RequestOutcome {
     /// degraded-mode re-mapping, stretched by a derated unit, retried
     /// after a batch abort, or force-routed by the overload controller.
     pub degraded: bool,
+    /// Tenant class ([`Tenant::from_sla`] of the request's SLA).
+    pub tenant: Tenant,
 }
 
-/// Collector filled by the closed-loop serve driver.
+/// Collector filled by the closed-loop serve driver: the per-request
+/// outcome list plus the run's counter/histogram [`Registry`]. Every
+/// counter the drivers used to bump as an ad-hoc field now lives in
+/// the registry under a [`crate::obs::ctr`] name, and [`ServeMetrics::report`]
+/// reads it back from there.
 pub struct ServeMetrics {
     outcomes: Vec<RequestOutcome>,
-    batches: usize,
-    engine_wall_ns: u64,
-    /// Plan-cache counters, copied from the cache at the end of a run.
-    pub plan_hits: u64,
-    /// See [`ServeMetrics::plan_hits`].
-    pub plan_misses: u64,
-    /// Nanoseconds spent compiling plans on cache misses.
-    pub plan_compile_ns: u64,
-    /// Virtual completion time of the last batch (makespan).
-    pub end_cycle: u64,
-    /// Fault events in the resolved plan for this run.
-    pub faults_injected: u64,
-    /// Batches aborted because a unit died mid-flight.
-    pub batch_aborts: u64,
-    /// Request re-enqueues (abort recovery + no-dispatchable-point).
-    pub retries: u64,
-    /// Requests shed by the overload admission controller.
-    pub shed_requests: u64,
-    /// Requests dropped after exhausting their retry budget.
-    pub failed_requests: u64,
+    reg: Registry,
 }
 
 impl ServeMetrics {
     pub fn new() -> Self {
-        ServeMetrics {
-            outcomes: Vec::new(),
-            batches: 0,
-            engine_wall_ns: 0,
-            plan_hits: 0,
-            plan_misses: 0,
-            plan_compile_ns: 0,
-            end_cycle: 0,
-            faults_injected: 0,
-            batch_aborts: 0,
-            retries: 0,
-            shed_requests: 0,
-            failed_requests: 0,
-        }
+        ServeMetrics { outcomes: Vec::new(), reg: Registry::new() }
+    }
+
+    /// The run's counter/histogram registry (read side).
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+
+    /// The run's counter/histogram registry (the drivers' bump site).
+    pub fn registry_mut(&mut self) -> &mut Registry {
+        &mut self.reg
     }
 
     /// Record one executed batch's wall-clock engine time.
     pub fn record_batch(&mut self, wall_ns: u64) {
-        self.batches += 1;
-        self.engine_wall_ns += wall_ns;
+        self.reg.inc(ctr::BATCHES);
+        self.reg.add(ctr::ENGINE_WALL_NS, wall_ns);
     }
 
     /// Record one served request.
     pub fn record(&mut self, o: RequestOutcome) {
+        self.reg
+            .observe(hist::LATENCY_CYCLES, (o.queue_cycles + o.compute_cycles) as f64);
+        self.reg.observe(hist::QUEUE_CYCLES, o.queue_cycles as f64);
+        self.reg.observe(hist::COMPUTE_CYCLES, o.compute_cycles as f64);
         self.outcomes.push(o);
     }
 
@@ -140,6 +176,7 @@ impl ServeMetrics {
         f_clk_hz: f64,
     ) -> ServeReport {
         let to_ms = |cycles: u64| cycles as f64 / f_clk_hz * 1e3;
+        let to_ms_f = |cycles: f64| cycles / f_clk_hz * 1e3;
         let mut rows: Vec<PointRow> = Vec::new();
         for (point, label) in labels.iter().enumerate() {
             let outs: Vec<&RequestOutcome> =
@@ -161,12 +198,27 @@ impl ServeMetrics {
                 energy_uj: outs.iter().map(|o| o.energy_uj).sum(),
             });
         }
-        let mut all_lats: Vec<u64> = self
-            .outcomes
-            .iter()
-            .map(|o| o.queue_cycles + o.compute_cycles)
-            .collect();
-        all_lats.sort_unstable();
+        let mut tenant_rows: Vec<TenantLatencyRow> = Vec::new();
+        for t in Tenant::ALL {
+            let outs: Vec<&RequestOutcome> =
+                self.outcomes.iter().filter(|o| o.tenant == t).collect();
+            let shed = self.reg.counter(t.shed_counter());
+            if outs.is_empty() && shed == 0 {
+                continue;
+            }
+            let mut lats: Vec<u64> =
+                outs.iter().map(|o| o.queue_cycles + o.compute_cycles).collect();
+            lats.sort_unstable();
+            tenant_rows.push(TenantLatencyRow {
+                tenant: t.name().to_string(),
+                requests: outs.len(),
+                sla_hits: outs.iter().filter(|o| o.sla_met).count(),
+                shed,
+                p50_ms: to_ms(percentile(&lats, 50)),
+                p95_ms: to_ms(percentile(&lats, 95)),
+            });
+        }
+        let n = self.outcomes.len();
         let mut deg_lats: Vec<u64> = self
             .outcomes
             .iter()
@@ -174,17 +226,17 @@ impl ServeMetrics {
             .map(|o| o.queue_cycles + o.compute_cycles)
             .collect();
         deg_lats.sort_unstable();
-        let n = self.outcomes.len();
-        let wall_s = self.engine_wall_ns as f64 * 1e-9;
+        let wall_s = self.reg.counter(ctr::ENGINE_WALL_NS) as f64 * 1e-9;
         ServeReport {
             model: model.to_string(),
             platform: platform.to_string(),
             threads,
             rows,
+            tenant_rows,
             total_requests: n,
-            total_batches: self.batches,
-            p50_ms: to_ms(percentile(&all_lats, 50)),
-            p95_ms: to_ms(percentile(&all_lats, 95)),
+            total_batches: self.reg.counter(ctr::BATCHES) as usize,
+            p50_ms: to_ms_f(self.reg.percentile(hist::LATENCY_CYCLES, 50)),
+            p95_ms: to_ms_f(self.reg.percentile(hist::LATENCY_CYCLES, 95)),
             sla_hit_rate: if n == 0 {
                 1.0
             } else {
@@ -193,24 +245,24 @@ impl ServeMetrics {
             mean_queue_ms: if n == 0 {
                 0.0
             } else {
-                to_ms(self.outcomes.iter().map(|o| o.queue_cycles).sum::<u64>()) / n as f64
+                to_ms_f(self.reg.sum(hist::QUEUE_CYCLES)) / n as f64
             },
             mean_compute_ms: if n == 0 {
                 0.0
             } else {
-                to_ms(self.outcomes.iter().map(|o| o.compute_cycles).sum::<u64>()) / n as f64
+                to_ms_f(self.reg.sum(hist::COMPUTE_CYCLES)) / n as f64
             },
             throughput_img_s: if wall_s > 0.0 { n as f64 / wall_s } else { 0.0 },
             sim_energy_uj: self.outcomes.iter().map(|o| o.energy_uj).sum(),
-            plan_hits: self.plan_hits,
-            plan_misses: self.plan_misses,
-            plan_compile_ms: self.plan_compile_ns as f64 * 1e-6,
-            makespan_ms: to_ms(self.end_cycle),
-            faults_injected: self.faults_injected,
-            batch_aborts: self.batch_aborts,
-            retries: self.retries,
-            shed_requests: self.shed_requests,
-            failed_requests: self.failed_requests,
+            plan_hits: self.reg.counter(ctr::PLAN_HITS),
+            plan_misses: self.reg.counter(ctr::PLAN_MISSES),
+            plan_compile_ms: self.reg.counter(ctr::PLAN_COMPILE_NS) as f64 * 1e-6,
+            makespan_ms: to_ms(self.reg.counter(ctr::END_CYCLE)),
+            faults_injected: self.reg.counter(ctr::FAULTS_INJECTED),
+            batch_aborts: self.reg.counter(ctr::BATCH_ABORTS),
+            retries: self.reg.counter(ctr::RETRIES),
+            shed_requests: self.reg.counter(ctr::SHED),
+            failed_requests: self.reg.counter(ctr::FAILED),
             degraded_requests: deg_lats.len(),
             degraded_p95_ms: to_ms(percentile(&deg_lats, 95)),
         }
@@ -251,6 +303,27 @@ pub struct PointRow {
     pub energy_uj: f64,
 }
 
+/// One per-tenant dashboard row (single-replica path — the cluster
+/// report carries its own tenant table). Added in v2.2; excluded from
+/// [`ServeReport::deterministic_digest`] so v2.x reports of one run
+/// stay digest-compatible (the rows are derived from the
+/// already-digested outcome stream and shed counter).
+#[derive(Clone, Debug)]
+pub struct TenantLatencyRow {
+    /// Tenant name (`interactive` | `batch`).
+    pub tenant: String,
+    /// Requests served for this tenant.
+    pub requests: usize,
+    /// Served requests that met their SLA.
+    pub sla_hits: usize,
+    /// Requests of this tenant shed by admission control.
+    pub shed: u64,
+    /// Median queue+compute latency, ms.
+    pub p50_ms: f64,
+    /// 95th-percentile queue+compute latency, ms.
+    pub p95_ms: f64,
+}
+
 /// A finished serve run, ready to render or persist.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -262,6 +335,8 @@ pub struct ServeReport {
     pub threads: usize,
     /// Per-mapping rows (only mappings that served requests).
     pub rows: Vec<PointRow>,
+    /// Per-tenant rows (only tenants that appeared in the run).
+    pub tenant_rows: Vec<TenantLatencyRow>,
     /// Requests served.
     pub total_requests: usize,
     /// Batches executed.
@@ -376,6 +451,23 @@ impl ServeReport {
                 100.0 * r.sla_hits as f64 / r.requests.max(1) as f64
             );
         }
+        if !self.tenant_rows.is_empty() {
+            let _ = writeln!(s);
+            let _ = writeln!(s, "| tenant | req | shed | p50 [ms] | p95 [ms] | SLA |");
+            let _ = writeln!(s, "|--------|-----|------|----------|----------|-----|");
+            for t in &self.tenant_rows {
+                let _ = writeln!(
+                    s,
+                    "| {} | {} | {} | {:.3} | {:.3} | {:.1}% |",
+                    t.tenant,
+                    t.requests,
+                    t.shed,
+                    t.p50_ms,
+                    t.p95_ms,
+                    100.0 * t.sla_hits as f64 / t.requests.max(1) as f64
+                );
+            }
+        }
         s
     }
 
@@ -395,9 +487,10 @@ impl ServeReport {
     /// equal digests regardless of thread count or machine load.
     ///
     /// The v2.1 latency-split fields (`mean_queue_ms`,
-    /// `mean_compute_ms`) are also excluded: they are derived from the
-    /// already-digested outcome stream, and excluding them keeps v2.0
-    /// and v2.1 reports of the same run digest-compatible.
+    /// `mean_compute_ms`) and the v2.2 `tenant_rows` are also
+    /// excluded: they are derived from the already-digested outcome
+    /// stream, and excluding them keeps v2.0/v2.1/v2.2 reports of the
+    /// same run digest-compatible.
     pub fn deterministic_digest(&self) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         let mut eat = |bytes: &[u8]| {
@@ -452,11 +545,26 @@ impl ServeReport {
                 ])
             })
             .collect();
+        let tenants = self
+            .tenant_rows
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("tenant", Json::str(t.tenant.clone())),
+                    ("requests", Json::num(t.requests as f64)),
+                    ("sla_hits", Json::num(t.sla_hits as f64)),
+                    ("shed", Json::num(t.shed as f64)),
+                    ("p50_ms", Json::num(t.p50_ms)),
+                    ("p95_ms", Json::num(t.p95_ms)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("model", Json::str(self.model.clone())),
             ("platform", Json::str(self.platform.clone())),
             ("threads", Json::num(self.threads as f64)),
             ("rows", Json::Arr(rows)),
+            ("tenant_rows", Json::Arr(tenants)),
             ("total_requests", Json::num(self.total_requests as f64)),
             ("total_batches", Json::num(self.total_batches as f64)),
             ("p50_ms", Json::num(self.p50_ms)),
@@ -499,11 +607,29 @@ impl ServeReport {
                 })
             })
             .collect::<Result<Vec<PointRow>>>()?;
+        // v2.2 addition: lenient so v2.0/v2.1 files still load
+        let tenant_rows = match v.get("tenant_rows").and_then(|t| t.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .map(|t| -> Result<TenantLatencyRow> {
+                    Ok(TenantLatencyRow {
+                        tenant: t.req("tenant")?.as_str().unwrap_or("").to_string(),
+                        requests: t.req_f64("requests")? as usize,
+                        sla_hits: t.req_f64("sla_hits")? as usize,
+                        shed: t.req_f64("shed")? as u64,
+                        p50_ms: t.req_f64("p50_ms")?,
+                        p95_ms: t.req_f64("p95_ms")?,
+                    })
+                })
+                .collect::<Result<Vec<TenantLatencyRow>>>()?,
+            None => Vec::new(),
+        };
         Ok(ServeReport {
             model: v.req("model")?.as_str().unwrap_or("").to_string(),
             platform: v.req("platform")?.as_str().unwrap_or("").to_string(),
             threads: v.req_f64("threads")? as usize,
             rows,
+            tenant_rows,
             total_requests: v.req_f64("total_requests")? as usize,
             total_batches: v.req_f64("total_batches")? as usize,
             p50_ms: v.req_f64("p50_ms")?,
@@ -555,6 +681,7 @@ mod tests {
             batch_size: 2,
             energy_uj: 1.5,
             degraded: false,
+            tenant: Tenant::Interactive,
         }
     }
 
@@ -569,13 +696,21 @@ mod tests {
     }
 
     #[test]
+    fn tenant_from_sla() {
+        assert_eq!(Tenant::from_sla(&Sla::MinEnergy), Tenant::Batch);
+        assert_eq!(Tenant::from_sla(&Sla::LatencyBudget(1_000)), Tenant::Interactive);
+        assert_eq!(Tenant::Interactive.name(), "interactive");
+        assert_eq!(Tenant::Batch.name(), "batch");
+    }
+
+    #[test]
     fn report_aggregates_per_point() {
         let mut m = ServeMetrics::new();
         m.record(outcome(0, 10, 100, true));
         m.record(outcome(0, 30, 100, false));
         m.record(outcome(1, 0, 50, true));
         m.record_batch(1_000_000);
-        m.end_cycle = 500;
+        m.registry_mut().set(crate::obs::ctr::END_CYCLE, 500);
         let labels = vec!["a".to_string(), "b".to_string()];
         let rep = m.report("tinycnn", "diana", 2, &labels, 1e6);
         assert_eq!(rep.rows.len(), 2);
@@ -591,14 +726,45 @@ mod tests {
     }
 
     #[test]
+    fn tenant_rows_partition_requests() {
+        let mut m = ServeMetrics::new();
+        m.record(outcome(0, 10, 100, true));
+        m.record(RequestOutcome { tenant: Tenant::Batch, ..outcome(0, 30, 200, true) });
+        m.record(outcome(0, 50, 100, false));
+        m.registry_mut().inc(crate::obs::ctr::SHED);
+        m.registry_mut().inc(crate::obs::ctr::SHED_INTERACTIVE);
+        let rep = m.report("tinycnn", "diana", 1, &["a".to_string()], 1e6);
+        assert_eq!(rep.tenant_rows.len(), 2);
+        let inter = &rep.tenant_rows[0];
+        assert_eq!(inter.tenant, "interactive");
+        assert_eq!(inter.requests, 2);
+        assert_eq!(inter.sla_hits, 1);
+        assert_eq!(inter.shed, 1);
+        let batch = &rep.tenant_rows[1];
+        assert_eq!(batch.tenant, "batch");
+        assert_eq!(batch.requests, 1);
+        assert_eq!(batch.shed, 0);
+        // the batch tenant's only request: 230 cycles = 0.23 ms
+        assert!((batch.p95_ms - 0.23).abs() < 1e-9, "{}", batch.p95_ms);
+        let sum: usize = rep.tenant_rows.iter().map(|t| t.requests).sum();
+        assert_eq!(sum, rep.total_requests, "tenants partition the served requests");
+        let dash = rep.dashboard();
+        assert!(dash.contains("| interactive | 2 | 1 |"), "{dash}");
+        assert!(dash.contains("| batch | 1 | 0 |"), "{dash}");
+    }
+
+    #[test]
     fn report_json_roundtrip() {
         let mut m = ServeMetrics::new();
         m.record(outcome(0, 5, 20, true));
         m.record_batch(2_000);
-        m.plan_hits = 3;
-        m.plan_misses = 1;
-        m.plan_compile_ns = 4_000_000;
-        m.end_cycle = 25;
+        {
+            let g = m.registry_mut();
+            g.set(crate::obs::ctr::PLAN_HITS, 3);
+            g.set(crate::obs::ctr::PLAN_MISSES, 1);
+            g.set(crate::obs::ctr::PLAN_COMPILE_NS, 4_000_000);
+            g.set(crate::obs::ctr::END_CYCLE, 25);
+        }
         let rep = m.report("tinycnn", "mpsoc4", 4, &["x".to_string()], 5e8);
         let dir = std::env::temp_dir().join("odimo_serve_report");
         let path = dir.join("report.json");
@@ -614,6 +780,10 @@ mod tests {
         assert!(rep.mean_queue_ms > 0.0 && rep.mean_compute_ms > 0.0);
         assert!((back.mean_queue_ms - rep.mean_queue_ms).abs() < 1e-12);
         assert!((back.mean_compute_ms - rep.mean_compute_ms).abs() < 1e-12);
+        // v2.2 tenant rows survive the roundtrip
+        assert_eq!(back.tenant_rows.len(), rep.tenant_rows.len());
+        assert_eq!(back.tenant_rows[0].tenant, "interactive");
+        assert_eq!(back.tenant_rows[0].requests, 1);
         assert_eq!(back.dashboard(), rep.dashboard());
         assert_eq!(back.deterministic_digest(), rep.deterministic_digest());
     }
@@ -624,12 +794,15 @@ mod tests {
         m.record(outcome(0, 10, 100, true));
         m.record(RequestOutcome { degraded: true, ..outcome(0, 400, 100, false) });
         m.record_batch(1_000);
-        m.faults_injected = 2;
-        m.batch_aborts = 1;
-        m.retries = 3;
-        m.shed_requests = 4;
-        m.failed_requests = 1;
-        m.end_cycle = 900;
+        {
+            let g = m.registry_mut();
+            g.set(crate::obs::ctr::FAULTS_INJECTED, 2);
+            g.set(crate::obs::ctr::BATCH_ABORTS, 1);
+            g.set(crate::obs::ctr::RETRIES, 3);
+            g.set(crate::obs::ctr::SHED, 4);
+            g.set(crate::obs::ctr::FAILED, 1);
+            g.set(crate::obs::ctr::END_CYCLE, 900);
+        }
         let rep = m.report("tinycnn", "mpsoc4", 2, &["a".to_string()], 1e6);
         assert_eq!(rep.faults_injected, 2);
         assert_eq!(rep.batch_aborts, 1);
@@ -653,6 +826,8 @@ mod tests {
         // v2.1 split fields are derived, not digested
         other.mean_queue_ms += 1.0;
         other.mean_compute_ms += 1.0;
+        // v2.2 tenant rows are derived, not digested
+        other.tenant_rows.clear();
         assert_eq!(other.deterministic_digest(), rep.deterministic_digest());
         other.shed_requests += 1;
         assert_ne!(other.deterministic_digest(), rep.deterministic_digest());

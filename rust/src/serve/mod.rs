@@ -66,13 +66,14 @@ use crate::data::synth::gen_sample;
 use crate::hw::faults::FaultPlan;
 use crate::hw::Platform;
 use crate::model::Graph;
+use crate::obs::{ctr, EventKind, FlushReason, Recorder};
 use crate::quant::{KernelBackend, ParamSet, QuantNet, QuantPlan};
 use crate::util::pool::ThreadPool;
 
 use batcher::{Batch, Batcher, PlanCache, Request};
 use dispatch::fastest_filtered;
 use health::HealthTracker;
-use metrics::RequestOutcome;
+use metrics::{RequestOutcome, Tenant};
 
 /// Closed-loop serve knobs (every field CLI-settable). The session
 /// supplies model, platform, seed, threads and directories; these are
@@ -234,13 +235,20 @@ impl RetryState {
 
     /// Count one more attempt for `r` and either re-enqueue it at
     /// `retry_at` or — when attempts are exhausted or there is no
-    /// useful retry time — account it as failed.
+    /// useful retry time — account it as failed. `now` is the loop's
+    /// current virtual cycle (the retry event is stamped there so the
+    /// event stream stays monotone; the future cycle rides in the
+    /// event payload).
+    #[allow(clippy::too_many_arguments)]
     fn schedule(
         &mut self,
         r: &Request,
         retry_at: Option<u64>,
         max_retries: u32,
         stats: &mut ServeMetrics,
+        rec: &Recorder,
+        replica: u32,
+        now: u64,
     ) {
         let att = self.attempts.entry(r.id).or_insert(0);
         *att += 1;
@@ -248,13 +256,17 @@ impl RetryState {
         self.degraded_ids.insert(r.id);
         match retry_at {
             Some(t) if *att <= max_retries => {
-                stats.retries += 1;
+                stats.registry_mut().inc(ctr::RETRIES);
+                rec.virt(replica, now, EventKind::Retry { req: r.id, attempt: *att, retry_at: t });
                 self.q
                     .entry(t)
                     .or_default()
                     .push(Request { id: r.id, arrival: t, sla: r.sla, point: r.point });
             }
-            _ => stats.failed_requests += 1,
+            _ => {
+                stats.registry_mut().inc(ctr::FAILED);
+                rec.virt(replica, now, EventKind::RetryExhausted { req: r.id, attempt: *att });
+            }
         }
     }
 }
@@ -277,6 +289,8 @@ fn exec_batch(
     device_free: &mut u64,
     retry: &mut RetryState,
     backend: KernelBackend,
+    rec: &Recorder,
+    replica: u32,
 ) -> Result<()> {
     let fp = &tracker.points[batch.point];
     let platform = tracker.platform_for(batch.point);
@@ -296,11 +310,17 @@ fn exec_batch(
     if let Some(abort_at) = tracker.abort_cycle(batch.point, start, done) {
         // the unit died under the batch: the work is lost, the device
         // pays an abort/cleanup cost, the members go back for retry
-        stats.batch_aborts += 1;
+        stats.registry_mut().inc(ctr::BATCH_ABORTS);
+        rec.virt(
+            replica,
+            batch.flushed_at,
+            EventKind::BatchAbort { point: batch.point, at: abort_at },
+        );
         *device_free = abort_at.saturating_add(opts.launch_cycles);
         let retry_at = abort_at.saturating_add(opts.retry_backoff.max(1));
         for r in &batch.requests {
-            retry.schedule(r, Some(retry_at), opts.max_retries, stats);
+            let at = batch.flushed_at;
+            retry.schedule(r, Some(retry_at), opts.max_retries, stats, rec, replica, at);
         }
         return Ok(());
     }
@@ -315,18 +335,76 @@ fn exec_batch(
     // tracked separately by the cache (and reported as its own
     // dashboard line), so img/s measures steady-state compute only
     let compile_before = cache.compile_ns;
+    let misses_before = cache.misses;
     let t0 = Instant::now();
+    // at ObsLevel::Full the traced walk runs instead of the pooled one:
+    // bit-identical numerics, but single-threaded and per-node timed
+    let mut traced = None;
     {
         let net = cache.get_or_compile(key, &fp.mapping, || {
             QuantNet::compile_params_backend(params, graph, &fp.mapping, platform, backend)
         })?;
-        let y = net.forward_pool(&x, bsz, pool)?;
-        std::hint::black_box(&y);
+        if rec.full() {
+            let t_ns = rec.now_ns();
+            let (y, spans) = net.forward_traced(&x, bsz)?;
+            std::hint::black_box(&y);
+            traced = Some((net.isa().name(), t_ns, spans));
+        } else {
+            let y = net.forward_pool(&x, bsz, pool)?;
+            std::hint::black_box(&y);
+        }
     }
     let wall = t0.elapsed().as_nanos() as u64;
-    stats.record_batch(wall.saturating_sub(cache.compile_ns - compile_before));
+    let engine_ns = wall.saturating_sub(cache.compile_ns - compile_before);
+    stats.record_batch(engine_ns);
+    if rec.enabled() {
+        let kind = if cache.misses > misses_before {
+            EventKind::PlanCacheMiss { key }
+        } else {
+            EventKind::PlanCacheHit { key }
+        };
+        rec.virt(replica, batch.flushed_at, kind);
+    }
+    if let Some((isa, t_ns, spans)) = traced {
+        rec.wall(
+            replica,
+            t_ns,
+            EventKind::EngineRun {
+                point: batch.point,
+                batch: bsz,
+                threads: pool.threads(),
+                isa: isa.to_string(),
+                dur_ns: engine_ns,
+            },
+        );
+        for s in spans {
+            rec.wall(
+                replica,
+                t_ns + s.start_ns,
+                EventKind::KernelOp { node: s.node, kind: s.kind, algo: s.algo, dur_ns: s.dur_ns },
+            );
+        }
+    }
 
     *device_free = done;
+    if rec.enabled() {
+        rec.virt(
+            replica,
+            start,
+            EventKind::BatchExec {
+                point: batch.point,
+                label: fp.label.clone(),
+                start,
+                done,
+                size: bsz,
+                per_img,
+                launch: opts.launch_cycles,
+                derated: factor > 1.0,
+                energy_uj: fp.energy_uj,
+                members: batch.requests.iter().map(|r| (r.id, retry.orig(r))).collect(),
+            },
+        );
+    }
     for r in &batch.requests {
         let orig = retry.orig(r);
         let total = done - orig;
@@ -346,15 +424,81 @@ fn exec_batch(
             batch_size: bsz,
             energy_uj: fp.energy_uj,
             degraded,
+            tenant: Tenant::from_sla(&r.sla),
         });
+    }
+    Ok(())
+}
+
+/// Push one request through the batcher, narrating the queue life
+/// cycle on the obs stream: batch-open on an empty per-point queue,
+/// batch-join otherwise, and a size-triggered flush when this push
+/// fills the batch. Behaviorally identical to `Batcher::push`.
+pub(crate) fn push_traced(
+    batcher: &mut Batcher,
+    r: Request,
+    rec: &Recorder,
+    replica: u32,
+) -> Option<Batch> {
+    if rec.enabled() {
+        let pending = batcher.pending_for(r.point);
+        let kind = if pending == 0 {
+            EventKind::BatchOpen { point: r.point }
+        } else {
+            EventKind::BatchJoin { point: r.point, pending: pending + 1 }
+        };
+        rec.virt(replica, r.arrival, kind);
+    }
+    let flushed = batcher.push(r);
+    if let Some(b) = &flushed {
+        rec.virt(
+            replica,
+            b.flushed_at,
+            EventKind::BatchFlush {
+                point: b.point,
+                size: b.requests.len(),
+                reason: FlushReason::Full,
+            },
+        );
+    }
+    flushed
+}
+
+/// Advance the fault tracker to `t`, emitting a fault-transition event
+/// when the step changed which frontier points are dispatchable
+/// (degraded re-mappings appended by the tracker also count).
+pub(crate) fn advance_traced(
+    tracker: &mut HealthTracker,
+    t: u64,
+    graph: &Graph,
+    rec: &Recorder,
+    replica: u32,
+) -> Result<()> {
+    if !rec.enabled() {
+        return tracker.advance(t, graph);
+    }
+    let before = (tracker.enabled_count(), tracker.points.len());
+    tracker.advance(t, graph)?;
+    let after = (tracker.enabled_count(), tracker.points.len());
+    if after != before {
+        rec.virt(replica, t, EventKind::FaultTransition { enabled: after.0, total: after.1 });
     }
     Ok(())
 }
 
 /// What the admission/dispatch stage decided for one arrival.
 enum Admission {
-    /// Serve on this point; `true` marks degraded (overload) service.
-    Serve(usize, bool),
+    /// Serve on this point. `degraded` marks overload service on the
+    /// fastest point; `sla_met` is the dispatcher's planning-time
+    /// verdict (the recorded outcome re-checks actual completion).
+    Serve {
+        /// Frontier point index the request was placed on.
+        point: usize,
+        /// Degraded (overload fast-path) service.
+        degraded: bool,
+        /// Planning-time SLA verdict from the dispatcher.
+        sla_met: bool,
+    },
     /// Shed under overload (reported, never silently dropped).
     Shed,
     /// No dispatchable point right now — retry at the next fault-state
@@ -379,6 +523,7 @@ pub(crate) fn run_serve(
     n_requests: usize,
     seed: u64,
     backend: KernelBackend,
+    rec: &Recorder,
 ) -> Result<ServeReport> {
     if frontier.is_empty() {
         return Err(ServeError::EmptyFrontier {
@@ -399,7 +544,7 @@ pub(crate) fn run_serve(
     let mut retry = RetryState::new();
     let mut device_free = 0u64;
     let (hits0, misses0, compile0) = (plans.hits, plans.misses, plans.compile_ns);
-    stats.faults_injected = tracker.n_events() as u64;
+    stats.registry_mut().set(ctr::FAULTS_INJECTED, tracker.n_events() as u64);
 
     // virtual-time event loop: interleave retries, arrivals and
     // queue-deadline flushes, earliest first (ties: retry, then
@@ -416,6 +561,15 @@ pub(crate) fn run_serve(
         let next_retry = retry.next_time();
         if next_arrival.is_none() && next_retry.is_none() {
             for b in batcher.drain(tail_now) {
+                rec.virt(
+                    0,
+                    b.flushed_at,
+                    EventKind::BatchFlush {
+                        point: b.point,
+                        size: b.requests.len(),
+                        reason: FlushReason::Drain,
+                    },
+                );
                 exec_batch(
                     &b,
                     graph,
@@ -429,6 +583,8 @@ pub(crate) fn run_serve(
                     &mut device_free,
                     &mut retry,
                     backend,
+                    rec,
+                    0,
                 )?;
             }
             continue;
@@ -447,13 +603,26 @@ pub(crate) fn run_serve(
             // scheduled retries: re-dispatch under the current mask
             0 => {
                 tail_now = tail_now.max(now);
-                tracker.advance(now, graph)?;
+                advance_traced(&mut tracker, now, graph, rec, 0)?;
                 for r in retry.pop_at(now) {
                     let d = dispatch_filtered(&tracker.points, |j| tracker.enabled[j], r.sla);
                     match d {
                         Some(d) => {
+                            if rec.enabled() {
+                                rec.virt(
+                                    0,
+                                    now,
+                                    EventKind::Dispatch {
+                                        req: r.id,
+                                        point: d.point,
+                                        label: tracker.points[d.point].label.clone(),
+                                        sla_met: d.sla_met,
+                                        degraded: true,
+                                    },
+                                );
+                            }
                             let queued = Request { point: d.point, ..r };
-                            if let Some(b) = batcher.push(queued) {
+                            if let Some(b) = push_traced(&mut batcher, queued, rec, 0) {
                                 exec_batch(
                                     &b,
                                     graph,
@@ -467,12 +636,14 @@ pub(crate) fn run_serve(
                                     &mut device_free,
                                     &mut retry,
                                     backend,
+                                    rec,
+                                    0,
                                 )?;
                             }
                         }
                         None => {
                             let at = tracker.next_change_after(now);
-                            retry.schedule(&r, at, opts.max_retries, &mut stats);
+                            retry.schedule(&r, at, opts.max_retries, &mut stats, rec, 0, now);
                         }
                     }
                 }
@@ -481,7 +652,7 @@ pub(crate) fn run_serve(
             1 => {
                 let r = reqs[i];
                 i += 1;
-                tracker.advance(r.arrival, graph)?;
+                advance_traced(&mut tracker, r.arrival, graph, rec, 0)?;
                 let wait = device_free.saturating_sub(r.arrival);
                 let keep = |j: usize| tracker.enabled[j];
                 let decision = if wait > opts.admission.overload_wait {
@@ -497,7 +668,7 @@ pub(crate) fn run_serve(
                                         .saturating_add(tracker.points[f].cycles)
                                         .saturating_add(opts.launch_cycles);
                                     if eta <= b {
-                                        Admission::Serve(f, true)
+                                        Admission::Serve { point: f, degraded: true, sla_met: true }
                                     } else {
                                         Admission::Shed
                                     }
@@ -507,17 +678,32 @@ pub(crate) fn run_serve(
                     }
                 } else {
                     match dispatch_filtered(&tracker.points, keep, r.sla) {
-                        Some(d) => Admission::Serve(d.point, false),
+                        Some(d) => {
+                            Admission::Serve { point: d.point, degraded: false, sla_met: d.sla_met }
+                        }
                         None => Admission::Defer,
                     }
                 };
                 match decision {
-                    Admission::Serve(point, degraded) => {
+                    Admission::Serve { point, degraded, sla_met } => {
+                        if rec.enabled() {
+                            rec.virt(
+                                0,
+                                r.arrival,
+                                EventKind::Dispatch {
+                                    req: r.id,
+                                    point,
+                                    label: tracker.points[point].label.clone(),
+                                    sla_met,
+                                    degraded,
+                                },
+                            );
+                        }
                         if degraded {
                             retry.degraded_ids.insert(r.id);
                         }
                         let queued = Request { point, ..r };
-                        if let Some(b) = batcher.push(queued) {
+                        if let Some(b) = push_traced(&mut batcher, queued, rec, 0) {
                             exec_batch(
                                 &b,
                                 graph,
@@ -531,10 +717,16 @@ pub(crate) fn run_serve(
                                 &mut device_free,
                                 &mut retry,
                                 backend,
+                                rec,
+                                0,
                             )?;
                         }
                     }
-                    Admission::Shed => stats.shed_requests += 1,
+                    Admission::Shed => {
+                        stats.registry_mut().inc(ctr::SHED);
+                        stats.registry_mut().inc(Tenant::from_sla(&r.sla).shed_counter());
+                        rec.virt(0, r.arrival, EventKind::AdmissionShed { req: r.id, wait });
+                    }
                     Admission::Defer => {
                         log::debug!(
                             "serve: request {} has no dispatchable mapping at cycle {} \
@@ -544,14 +736,32 @@ pub(crate) fn run_serve(
                             tracker.enabled_count(),
                             tracker.points.len()
                         );
+                        rec.virt(
+                            0,
+                            r.arrival,
+                            EventKind::DispatchDefer {
+                                req: r.id,
+                                enabled: tracker.enabled_count(),
+                                total: tracker.points.len(),
+                            },
+                        );
                         let at = tracker.next_change_after(r.arrival);
-                        retry.schedule(&r, at, opts.max_retries, &mut stats);
+                        retry.schedule(&r, at, opts.max_retries, &mut stats, rec, 0, r.arrival);
                     }
                 }
             }
             // queue deadlines: flush every ripe batch
             _ => {
                 for b in batcher.due(now) {
+                    rec.virt(
+                        0,
+                        now,
+                        EventKind::BatchFlush {
+                            point: b.point,
+                            size: b.requests.len(),
+                            reason: FlushReason::Deadline,
+                        },
+                    );
                     exec_batch(
                         &b,
                         graph,
@@ -565,16 +775,21 @@ pub(crate) fn run_serve(
                         &mut device_free,
                         &mut retry,
                         backend,
+                        rec,
+                        0,
                     )?;
                 }
             }
         }
     }
 
-    stats.plan_hits = plans.hits - hits0;
-    stats.plan_misses = plans.misses - misses0;
-    stats.plan_compile_ns = plans.compile_ns - compile0;
-    stats.end_cycle = device_free;
+    // plan-cache dashboard numbers are this run's *deltas* (the
+    // session cache may arrive warm); end_cycle is the makespan
+    let reg = stats.registry_mut();
+    reg.set(ctr::PLAN_HITS, plans.hits - hits0);
+    reg.set(ctr::PLAN_MISSES, plans.misses - misses0);
+    reg.set(ctr::PLAN_COMPILE_NS, plans.compile_ns - compile0);
+    reg.set(ctr::END_CYCLE, device_free);
     let labels: Vec<String> = tracker.points.iter().map(|p| p.label.clone()).collect();
     Ok(stats.report(&graph.name, &platform.name, pool.threads(), &labels, platform.f_clk_hz))
 }

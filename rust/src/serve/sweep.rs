@@ -40,6 +40,7 @@ use crate::exp::store;
 use crate::hw::soc::{simulate, SocConfig};
 use crate::hw::Platform;
 use crate::model::Graph;
+use crate::obs::{EventKind, Recorder};
 use crate::quant::{synth_params_on, ParamSet, QuantNet, QuantPlan, Scratch};
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
@@ -179,6 +180,7 @@ pub fn sweep_frontier(
     platform: &Platform,
     cfg: &SweepCfg,
     pool: &ThreadPool,
+    rec: &Recorder,
 ) -> Result<Vec<FrontierPoint>> {
     let (c, h, w) = graph.input_shape;
     if c != 3 {
@@ -218,12 +220,14 @@ pub fn sweep_frontier(
         });
     }
     let kept = pareto_prune(&points);
-    log::info!(
-        "sweep {} on {}: {} candidates -> {} frontier points",
-        graph.name,
-        platform.name,
-        points.len(),
-        kept.len()
+    rec.note(
+        log::Level::Info,
+        EventKind::SweepDone {
+            model: graph.name.clone(),
+            platform: platform.name.clone(),
+            candidates: points.len(),
+            kept: kept.len(),
+        },
     );
     let mut frontier: Vec<FrontierPoint> = Vec::with_capacity(kept.len());
     for i in kept {
@@ -432,6 +436,7 @@ pub fn load_or_sweep(
     platform: &Platform,
     cfg: &SweepCfg,
     pool: &ThreadPool,
+    rec: &Recorder,
 ) -> Result<(Vec<FrontierPoint>, bool)> {
     let path = frontier_path(results_dir, &graph.name, &platform.name);
     // a cache written under a *known older* schema is stale, not an
@@ -439,9 +444,12 @@ pub fn load_or_sweep(
     // files. Unknown/newer versions (and corruption) still refuse —
     // they could mean a downgraded binary or a tampered file.
     if path.exists() && written_under_older_schema(&path) {
-        log::info!(
-            "frontier cache {} predates schema v{FRONTIER_SCHEMA}; re-sweeping",
-            path.display()
+        rec.note(
+            log::Level::Info,
+            EventKind::FrontierCacheStale {
+                path: path.display().to_string(),
+                reason: format!("predates schema v{FRONTIER_SCHEMA}"),
+            },
         );
     } else if path.exists() {
         let cached = load_frontier(&path, &graph.name, &platform.name)?;
@@ -452,31 +460,35 @@ pub fn load_or_sweep(
             for p in &cached.points {
                 p.mapping.validate(graph, platform.n_acc())?;
             }
-            log::info!("frontier cache hit: {}", path.display());
+            rec.note(
+                log::Level::Info,
+                EventKind::FrontierCacheHit { path: path.display().to_string() },
+            );
             return Ok((cached.points, true));
         }
-        if knobs_match {
-            log::info!(
-                "frontier cache {}: platform spec changed \
-                 (cached {:016x}, resolved {:016x}); re-sweeping",
-                path.display(),
+        let reason = if knobs_match {
+            format!(
+                "platform spec changed (cached {:016x}, resolved {:016x})",
                 cached.platform_hash,
                 platform.spec_hash()
-            );
+            )
         } else {
-            log::info!(
-                "frontier cache {} swept under different knobs \
-                 (seed {} calib {} blends {}); re-sweeping",
-                path.display(),
-                sw.seed,
-                sw.calib,
-                sw.blend_steps
-            );
-        }
+            format!(
+                "swept under different knobs (seed {} calib {} blends {})",
+                sw.seed, sw.calib, sw.blend_steps
+            )
+        };
+        rec.note(
+            log::Level::Info,
+            EventKind::FrontierCacheStale { path: path.display().to_string(), reason },
+        );
     }
-    let frontier = sweep_frontier(graph, platform, cfg, pool)?;
+    let frontier = sweep_frontier(graph, platform, cfg, pool, rec)?;
     save_frontier(&path, &graph.name, platform, cfg, &frontier)?;
-    log::info!("frontier cache written: {}", path.display());
+    rec.note(
+        log::Level::Info,
+        EventKind::FrontierCacheWritten { path: path.display().to_string() },
+    );
     Ok((frontier, false))
 }
 
@@ -565,9 +577,9 @@ mod tests {
         let cfg = SweepCfg { seed: 11, calib: 4, blend_steps: 2 };
         let dir = std::env::temp_dir().join("odimo_sweep_roundtrip");
         let _ = std::fs::remove_dir_all(&dir);
-        let (a, hit_a) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        let (a, hit_a) = load_or_sweep(&dir, &g, &p, &cfg, &pool, &Recorder::disabled()).unwrap();
         assert!(!hit_a);
-        let (b, hit_b) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        let (b, hit_b) = load_or_sweep(&dir, &g, &p, &cfg, &pool, &Recorder::disabled()).unwrap();
         assert!(hit_b, "second load must be a cache hit");
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
@@ -600,16 +612,16 @@ mod tests {
         let cfg = SweepCfg { seed: 21, calib: 4, blend_steps: 2 };
         let dir = std::env::temp_dir().join("odimo_sweep_old_schema");
         let _ = std::fs::remove_dir_all(&dir);
-        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool, &Recorder::disabled()).unwrap();
         assert!(!hit);
         let path = frontier_path(&dir, &g.name, &p.name);
         let text = std::fs::read_to_string(&path).unwrap();
         let old = text.replace("\"schema_version\":2", "\"schema_version\":1");
         assert_ne!(text, old);
         std::fs::write(&path, old).unwrap();
-        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool, &Recorder::disabled()).unwrap();
         assert!(!hit, "older schema must re-sweep, not error or reuse");
-        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool, &Recorder::disabled()).unwrap();
         assert!(hit, "rewritten cache hits again");
     }
 
@@ -622,17 +634,18 @@ mod tests {
         let cfg = SweepCfg { seed: 5, calib: 4, blend_steps: 2 };
         let dir = std::env::temp_dir().join("odimo_sweep_platform_edit");
         let _ = std::fs::remove_dir_all(&dir);
-        let (_, hit) = load_or_sweep(&dir, &g, &Platform::diana(), &cfg, &pool).unwrap();
+        let off = Recorder::disabled();
+        let (_, hit) = load_or_sweep(&dir, &g, &Platform::diana(), &cfg, &pool, &off).unwrap();
         assert!(!hit);
         let mut edited = Platform::diana();
         edited.accelerators[0].p_act_mw += 1.0;
-        let (_, hit) = load_or_sweep(&dir, &g, &edited, &cfg, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &edited, &cfg, &pool, &off).unwrap();
         assert!(!hit, "edited platform spec must re-sweep, not reuse");
         // the rewritten cache now hits under the edited spec...
-        let (_, hit) = load_or_sweep(&dir, &g, &edited, &cfg, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &edited, &cfg, &pool, &off).unwrap();
         assert!(hit);
         // ...and misses again if the edit is reverted
-        let (_, hit) = load_or_sweep(&dir, &g, &Platform::diana(), &cfg, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &Platform::diana(), &cfg, &pool, &off).unwrap();
         assert!(!hit, "reverting the spec is also a cache-key change");
     }
 
@@ -644,14 +657,14 @@ mod tests {
         let dir = std::env::temp_dir().join("odimo_sweep_knob_mismatch");
         let _ = std::fs::remove_dir_all(&dir);
         let cfg_a = SweepCfg { seed: 1, calib: 4, blend_steps: 2 };
-        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_a, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_a, &pool, &Recorder::disabled()).unwrap();
         assert!(!hit);
         // a different seed must never silently reuse the seed-1 cache
         let cfg_b = SweepCfg { seed: 2, calib: 4, blend_steps: 2 };
-        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_b, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_b, &pool, &Recorder::disabled()).unwrap();
         assert!(!hit, "knob mismatch must re-sweep");
         // the overwritten cache now hits under the new knobs
-        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_b, &pool).unwrap();
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg_b, &pool, &Recorder::disabled()).unwrap();
         assert!(hit);
     }
 }

@@ -82,7 +82,7 @@ pub fn chaos_opts(plan: Option<FaultPlan>) -> ServeOpts {
 pub fn probe_frontier(p: &Platform) -> Vec<FrontierPoint> {
     let pool = ThreadPool::new(2);
     let cfg = SweepCfg { seed: SEED, calib: 4, blend_steps: 2 };
-    sweep::sweep_frontier(&tinycnn(), p, &cfg, &pool).unwrap()
+    sweep::sweep_frontier(&tinycnn(), p, &cfg, &pool, &odimo::obs::Recorder::disabled()).unwrap()
 }
 
 /// Unit indices a frontier point assigns at least one channel to.

@@ -1,0 +1,209 @@
+//! Property tests for the observability layer (obs/): the recorded
+//! event stream must *describe* the run without *changing* it. The
+//! suite pins three contracts: (1) `BatchExec` member spans partition
+//! the served requests and their queue/compute sums reconcile exactly
+//! with the `ServeReport` latency fields; (2) the virtual-domain
+//! digest is invariant across worker-thread counts and capture levels;
+//! (3) an enabled recorder never perturbs report results, and a
+//! disabled one records nothing. Export determinism and the
+//! `write_atomic` concurrency guarantee ride along.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use common::{assert_reports_identical, serve_opts, N_REQUESTS};
+use odimo::api::{ClusterOpts, Session, SessionBuilder};
+use odimo::hw::Platform;
+use odimo::obs::{export, EventKind, ObsLevel};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The `common::serve_session` fixture plus an observer level.
+fn obs_session(dir: &Path, threads: usize, level: ObsLevel) -> Session {
+    SessionBuilder::new("tinycnn")
+        .platform("diana")
+        .results_dir(dir)
+        .threads(threads)
+        .seed(9)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .plan_cache_cap(8)
+        .observer(level)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn batchexec_members_partition_and_reconcile_with_report() {
+    let dir = tmp("odimo_obs_props_members");
+    let mut s = obs_session(&dir, 2, ObsLevel::Basic);
+    let rep = s.serve(&serve_opts(4)).unwrap();
+    let events = s.recorder().snapshot();
+    let mut served = 0usize;
+    let mut batches = 0usize;
+    let mut queue_cycles = 0u64;
+    let mut compute_cycles = 0u64;
+    let mut ids = std::collections::BTreeSet::new();
+    for e in &events {
+        if let EventKind::BatchExec { start, done, size, members, .. } = &e.kind {
+            batches += 1;
+            assert_eq!(members.len(), *size, "member list sizes the batch");
+            assert!(done > start, "batch window must have positive length");
+            for &(id, orig) in members {
+                assert!(orig <= *start, "request {id} arrived after its batch started");
+                assert!(ids.insert(id), "request {id} served twice");
+                served += 1;
+                queue_cycles += start - orig;
+                compute_cycles += done - start;
+            }
+        }
+    }
+    // spans partition the request stream: every request in exactly one
+    // batch window, every batch in exactly one BatchExec event
+    assert_eq!(served, rep.total_requests);
+    assert_eq!(served, N_REQUESTS);
+    assert_eq!(batches, rep.total_batches);
+    // the span sums are the report's latency split, cycle for cycle
+    let f_clk = Platform::diana().f_clk_hz;
+    let to_ms = |c: u64| c as f64 / f_clk * 1e3;
+    let n = served as f64;
+    assert!(
+        (to_ms(queue_cycles) - rep.mean_queue_ms * n).abs() < 1e-6,
+        "queue span sum {} ms != report mean {} ms x {n}",
+        to_ms(queue_cycles),
+        rep.mean_queue_ms
+    );
+    assert!(
+        (to_ms(compute_cycles) - rep.mean_compute_ms * n).abs() < 1e-6,
+        "compute span sum {} ms != report mean {} ms x {n}",
+        to_ms(compute_cycles),
+        rep.mean_compute_ms
+    );
+}
+
+#[test]
+fn virtual_digest_is_invariant_across_thread_counts_and_levels() {
+    let dir = tmp("odimo_obs_props_digest");
+    let mut runs = Vec::new();
+    for (threads, level) in [
+        (1, ObsLevel::Basic),
+        (2, ObsLevel::Basic),
+        (8, ObsLevel::Basic),
+        // Full adds wall-domain engine/kernel spans, which the digest
+        // must exclude exactly like the report's wall-clock fields
+        (2, ObsLevel::Full),
+    ] {
+        let mut s = obs_session(&dir, threads, level);
+        let rep = s.serve(&serve_opts(4)).unwrap();
+        assert!(!s.recorder().is_empty(), "enabled recorder captured the run");
+        runs.push((threads, s.recorder().virtual_digest(), rep.deterministic_digest()));
+    }
+    let (_, ev0, rep0) = runs[0];
+    for &(threads, ev, rep) in &runs[1..] {
+        assert_eq!(ev, ev0, "event digest drifts at {threads} threads");
+        assert_eq!(rep, rep0, "report digest drifts at {threads} threads");
+    }
+}
+
+#[test]
+fn recorder_level_never_changes_results() {
+    let dir = tmp("odimo_obs_props_off_on");
+    // Off is the default everywhere; Full swaps the engine onto the
+    // traced single-plan walk — numerics and virtual time must agree
+    let mut off = obs_session(&dir, 2, ObsLevel::Off);
+    let rep_off = off.serve(&serve_opts(4)).unwrap();
+    assert!(off.recorder().is_empty(), "disabled recorder records nothing");
+    let mut full = obs_session(&dir, 2, ObsLevel::Full);
+    let rep_full = full.serve(&serve_opts(4)).unwrap();
+    assert_reports_identical(&rep_off, &rep_full, "obs level");
+    assert_eq!(rep_off.dashboard().lines().count(), rep_full.dashboard().lines().count());
+    assert_eq!(rep_off.makespan_ms, rep_full.makespan_ms);
+    assert_eq!(rep_off.plan_hits, rep_full.plan_hits);
+    assert_eq!(rep_off.plan_misses, rep_full.plan_misses);
+    // Full captured wall spans for every executed batch
+    let engine_runs = full
+        .recorder()
+        .snapshot()
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::EngineRun { .. }))
+        .count();
+    assert_eq!(engine_runs, rep_full.total_batches);
+}
+
+#[test]
+fn trace_export_is_deterministic_and_summarizable() {
+    let dir = tmp("odimo_obs_props_export");
+    let mut s = obs_session(&dir, 2, ObsLevel::Full);
+    s.serve(&serve_opts(4)).unwrap();
+    let p1 = dir.join("trace1.json");
+    let p2 = dir.join("trace2.json");
+    s.export_trace(&p1).unwrap();
+    s.export_trace(&p2).unwrap();
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p2).unwrap(),
+        "same stream must export byte-identically"
+    );
+    let text = std::fs::read_to_string(&p1).unwrap();
+    // paired span markers and per-layer energy attribution present
+    assert_eq!(text.matches("\"ph\":\"B\"").count(), text.matches("\"ph\":\"E\"").count());
+    assert!(text.contains("energy_uj"), "per-layer energy args missing");
+    let summary = export::summarize(&text, 5).unwrap();
+    assert!(summary.contains("trace summary:"), "{summary}");
+    assert!(summary.contains("plan cache:"), "{summary}");
+    assert!(summary.contains("per-unit busy / energy split"), "{summary}");
+}
+
+#[test]
+fn cluster_obs_is_deterministic_and_exports() {
+    let dir = tmp("odimo_obs_props_cluster");
+    let copts = ClusterOpts { replicas: 2, serve: serve_opts(4), ..ClusterOpts::default() };
+    let mut digests = Vec::new();
+    for threads in [1, 4] {
+        let mut s = obs_session(&dir, threads, ObsLevel::Basic);
+        let rep = s.serve_cluster(&copts, None).unwrap();
+        assert_eq!(rep.accounted(), N_REQUESTS as u64);
+        digests.push((s.recorder().virtual_digest(), rep.deterministic_digest()));
+        if threads == 1 {
+            let path = dir.join("cluster_trace.json");
+            s.export_trace(&path).unwrap();
+            let text = std::fs::read_to_string(&path).unwrap();
+            let summary = export::summarize(&text, 5).unwrap();
+            assert!(summary.contains("trace summary:"), "{summary}");
+        }
+    }
+    assert_eq!(digests[0], digests[1], "cluster obs must not depend on thread count");
+}
+
+#[test]
+fn write_atomic_survives_concurrent_writers() {
+    let dir = tmp("odimo_obs_props_atomic");
+    let path = dir.join("contended.json");
+    std::thread::scope(|sc| {
+        for writer in 0..8u64 {
+            let path = &path;
+            sc.spawn(move || {
+                for iter in 0..20u64 {
+                    let text = format!("{{\"writer\":{writer},\"iter\":{iter}}}");
+                    odimo::exp::store::write_atomic(path, &text).unwrap();
+                }
+            });
+        }
+    });
+    // the file is exactly one complete write — never interleaved or
+    // truncated — and no staging files leak
+    let got = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        got.starts_with("{\"writer\":") && got.trim_end().ends_with('}'),
+        "clobbered content: {got}"
+    );
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name().into_string().unwrap();
+        assert!(!name.ends_with(".tmp"), "leftover staging file {name}");
+    }
+}

@@ -12,6 +12,7 @@ use common::{serve_opts, serve_session};
 use odimo::coordinator::Mapping;
 use odimo::hw::Platform;
 use odimo::model::tinycnn;
+use odimo::obs;
 use odimo::serve::sweep::{self, dominates, pareto_prune};
 use odimo::serve::{dispatch, FrontierPoint, Sla, SweepCfg};
 use odimo::util::pool::ThreadPool;
@@ -123,7 +124,8 @@ fn swept_frontiers_are_nondominated_on_n2_to_n4() {
     let pool = ThreadPool::new(2);
     let cfg = SweepCfg { seed: 7, calib: 4, blend_steps: 2 };
     for p in [Platform::diana(), Platform::diana_ne16(), Platform::mpsoc4()] {
-        let frontier = sweep::sweep_frontier(&g, &p, &cfg, &pool).unwrap();
+        let frontier =
+            sweep::sweep_frontier(&g, &p, &cfg, &pool, &obs::Recorder::disabled()).unwrap();
         assert!(!frontier.is_empty(), "{}: empty frontier", p.name);
         for fp in &frontier {
             fp.mapping.validate(&g, p.n_acc()).unwrap();
@@ -153,7 +155,8 @@ fn frontier_cache_schema_mismatch_is_a_clear_error() {
     let cfg = SweepCfg { seed: 3, calib: 4, blend_steps: 2 };
     let dir = std::env::temp_dir().join("odimo_serve_props_schema");
     let _ = std::fs::remove_dir_all(&dir);
-    let (_, hit) = sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap();
+    let (_, hit) =
+        sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool, &obs::Recorder::disabled()).unwrap();
     assert!(!hit);
     // tamper with the stored schema version; reloads must error clearly
     let path = sweep::frontier_path(&dir, &g.name, &p.name);
@@ -161,7 +164,9 @@ fn frontier_cache_schema_mismatch_is_a_clear_error() {
     let bumped = text.replace("\"schema_version\":2", "\"schema_version\":999");
     assert_ne!(text, bumped, "version field must be present to tamper with");
     std::fs::write(&path, bumped).unwrap();
-    let e = sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool).unwrap_err().to_string();
+    let e = sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool, &obs::Recorder::disabled())
+        .unwrap_err()
+        .to_string();
     assert!(e.contains("schema version 999"), "{e}");
 }
 

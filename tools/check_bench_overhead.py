@@ -15,6 +15,12 @@ reach at least MIN_SCALING (2.5x) the single replica's *virtual*
 throughput. Virtual img/s is computed on the deterministic virtual
 timeline, so this gate is noise-free and holds on smoke runs too.
 
+Finally it gates observability overhead: the ``obs_tN`` cases run the
+identical batched load with the Basic event recorder *enabled*; they
+may cost at most OBS_TOLERANCE (2%) over ``batched_tN`` (plus the same
+absolute slack). The default session keeps the recorder disabled, so
+this bound covers the disabled recorder a fortiori.
+
 Usage: python3 tools/check_bench_overhead.py [BENCH_serve.json]
 """
 
@@ -22,6 +28,7 @@ import json
 import sys
 
 TOLERANCE = 0.05  # relative: faults0 may cost at most 5% over batched
+OBS_TOLERANCE = 0.02  # relative: obs (Basic recorder) at most 2% over batched
 SLACK_MS = 1.0  # absolute: ignore sub-ms jitter (smoke runs are tiny)
 MIN_SCALING = 2.5  # cluster_r4 virtual img/s must be >= 2.5x cluster_r1
 
@@ -66,6 +73,37 @@ def main() -> int:
               "must stay off the hot path when no plan is attached")
         return 1
     print("check_bench_overhead: zero-fault overhead within budget")
+
+    obs_pairs = []
+    for key, case in sorted(bench.items()):
+        if not key.startswith("obs_t"):
+            continue
+        threads = key[len("obs_t") :]
+        base = bench.get(f"batched_t{threads}")
+        if base is None:
+            print(f"check_bench_overhead: {key} has no batched_t{threads} baseline")
+            return 1
+        obs_pairs.append((threads, base["loop_ms"], case["loop_ms"]))
+
+    if not obs_pairs:
+        print(f"check_bench_overhead: no obs_t* cases in {path} — "
+              "re-run `make bench-serve` (or the CI smoke) first")
+        return 1
+
+    for threads, base_ms, obs_ms in obs_pairs:
+        limit = base_ms * (1.0 + OBS_TOLERANCE) + SLACK_MS
+        rel = (obs_ms / base_ms - 1.0) * 100.0 if base_ms > 0 else 0.0
+        verdict = "ok" if obs_ms <= limit else "FAIL"
+        print(f"t{threads}: batched {base_ms:8.2f} ms | obs {obs_ms:8.2f} ms "
+              f"({rel:+5.1f}%) | limit {limit:8.2f} ms .. {verdict}")
+        failed |= obs_ms > limit
+
+    if failed:
+        print("check_bench_overhead: enabled-recorder overhead exceeds "
+              f"{OBS_TOLERANCE:.0%} (+{SLACK_MS} ms slack) — recording must "
+              "stay off the serve hot path (obs/ is lock-light by contract)")
+        return 1
+    print("check_bench_overhead: observability overhead within budget")
 
     r1 = bench.get("cluster_r1")
     r4 = bench.get("cluster_r4")

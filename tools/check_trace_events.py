@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Validate an exported Chrome-trace-event file (``serve --trace-events``).
+
+Checks the structural invariants the exporter in ``rust/src/obs/export.rs``
+promises (EXPERIMENTS.md §Trace events has the schema):
+
+* the document is ``{"traceEvents": [...]}`` and every event carries
+  ``ph``/``pid``/``tid`` (plus ``ts`` for B/E/i phases);
+* every ``pid`` that emits events has a ``process_name`` metadata
+  record, and every ``(pid, tid)`` track a ``thread_name``;
+* per track, ``B``/``E`` events pair up in stack discipline (matching
+  names, nothing left open at EOF) and timestamps are monotone
+  non-decreasing across B/E/i;
+* per-layer attribution spans (``cat == "layer"``) carry the required
+  args: ``unit``, ``cycles_img``, ``energy_uj``;
+* batch spans (``cat == "batch"``) carry ``point``, ``size``,
+  ``per_img_cycles``, ``energy_uj_img`` and the member ``requests``.
+
+Usage: python3 tools/check_trace_events.py trace.json
+Exits non-zero on the first class of violation, printing every instance.
+"""
+
+import json
+import sys
+
+REQUIRED_LAYER_ARGS = ("unit", "cycles_img", "energy_uj")
+REQUIRED_BATCH_ARGS = ("point", "size", "per_img_cycles", "energy_uj_img", "requests")
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print("usage: check_trace_events.py <trace.json>")
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_trace_events: cannot load {path}: {e}")
+        return 1
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        print("check_trace_events: top-level 'traceEvents' array missing")
+        return 1
+
+    errors = []
+    proc_names = {}
+    thread_names = {}
+    used_pids = set()
+    used_tracks = set()
+    stacks = {}  # (pid, tid) -> [name, ...] of open B events
+    last_ts = {}  # (pid, tid) -> last seen timestamp
+    counts = {"B": 0, "E": 0, "i": 0, "M": 0}
+
+    for idx, ev in enumerate(events):
+        ph = ev.get("ph")
+        pid = ev.get("pid")
+        tid = ev.get("tid")
+        if ph not in ("B", "E", "i", "M"):
+            errors.append(f"event {idx}: unknown phase {ph!r}")
+            continue
+        counts[ph] += 1
+        if ph == "M":
+            label = ev.get("args", {}).get("name", "")
+            if ev.get("name") == "process_name":
+                proc_names[pid] = label
+            elif ev.get("name") == "thread_name":
+                thread_names[(pid, tid)] = label
+            continue
+        if pid is None or tid is None:
+            errors.append(f"event {idx}: missing pid/tid")
+            continue
+        used_pids.add(pid)
+        track = (pid, tid)
+        used_tracks.add(track)
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"event {idx}: bad ts {ts!r}")
+            continue
+        if ts < last_ts.get(track, 0.0):
+            errors.append(
+                f"event {idx} ({ev.get('name')!r}): ts {ts} goes backwards on "
+                f"track pid={pid} tid={tid} (last {last_ts[track]})"
+            )
+        last_ts[track] = ts
+        if ph == "B":
+            stacks.setdefault(track, []).append(ev.get("name"))
+            cat = ev.get("cat")
+            args = ev.get("args", {})
+            required = ()
+            if cat == "layer":
+                required = REQUIRED_LAYER_ARGS
+            elif cat == "batch":
+                required = REQUIRED_BATCH_ARGS
+            for k in required:
+                if k not in args:
+                    errors.append(
+                        f"event {idx} ({ev.get('name')!r}, cat {cat}): "
+                        f"missing required arg {k!r}"
+                    )
+        elif ph == "E":
+            stack = stacks.get(track, [])
+            if not stack:
+                errors.append(
+                    f"event {idx} ({ev.get('name')!r}): E with no open B on "
+                    f"track pid={pid} tid={tid}"
+                )
+            else:
+                opened = stack.pop()
+                if opened != ev.get("name"):
+                    errors.append(
+                        f"event {idx}: E {ev.get('name')!r} closes B {opened!r} "
+                        f"on track pid={pid} tid={tid}"
+                    )
+
+    for track, stack in sorted(stacks.items()):
+        for name in stack:
+            errors.append(f"track pid={track[0]} tid={track[1]}: B {name!r} never closed")
+    for pid in sorted(used_pids):
+        if pid not in proc_names:
+            errors.append(f"pid {pid}: no process_name metadata")
+    for track in sorted(used_tracks):
+        if track not in thread_names:
+            errors.append(f"pid={track[0]} tid={track[1]}: no thread_name metadata")
+    if counts["B"] != counts["E"]:
+        errors.append(f"unbalanced spans: {counts['B']} B vs {counts['E']} E")
+
+    if errors:
+        for e in errors:
+            print(f"check_trace_events: {e}")
+        print(f"check_trace_events: {len(errors)} violation(s) in {path}")
+        return 1
+    print(
+        f"check_trace_events: {path} ok — {len(events)} events, "
+        f"{counts['B']} spans, {counts['i']} instants, "
+        f"{len(used_tracks)} tracks across {len(used_pids)} processes"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,8 +4,8 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check chaos cluster obs doc api-check examples bench-infer \
-	bench-sim bench-mincost bench-serve bench artifacts clean
+.PHONY: build test check chaos cluster obs import doc api-check examples \
+	bench-infer bench-sim bench-mincost bench-serve bench artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -25,6 +25,19 @@ chaos:
 # (golden fixture, typed errors, > 2^53 decimal-string transport).
 cluster:
 	$(CARGO) test --test cluster_props --test trace_roundtrip
+
+# Graph import + multi-model serving: the import property suite
+# (fixtures byte-canonical, validation errors on documented triggers,
+# single-model serve_multi pins, mixed-model conservation), then the
+# committed golden fixtures driven end to end — inspect the custom
+# graph (import → geometry) and serve a mixed two-model trace through
+# the model-aware cluster driver.
+import:
+	$(CARGO) test --test import_props
+	$(CARGO) run --release -- inspect --model config/graph_custom.json
+	$(CARGO) run --release -- serve --smoke --requests 24 \
+		--results /tmp/odimo_import_smoke \
+		--models config/graph_tinycnn.json,config/graph_custom.json
 
 # Observability suite: the obs property tests (span/report
 # reconciliation, digest invariance, recorder-off identity, export
@@ -95,9 +108,11 @@ bench-mincost:
 # threads, batched vs unbatched, plus a faults0 case (empty fault plan)
 # whose loop time the overhead gate holds within 5% of batched, and
 # cluster cases (one dense trace at r=1 vs r=4) whose deterministic
-# virtual img/s the same gate holds at >= 2.5x scaling. Emits
-# BENCH_serve.json at repo root and appends to results/bench_serve.csv.
-# CI smoke-runs this with --smoke alongside bench-mincost.
+# virtual img/s the same gate holds at >= 2.5x scaling, and multi-model
+# cases (multi_m1 one-model dispatch within 5% of cluster_r1, multi_m2
+# two-model mixed trace). Emits BENCH_serve.json at repo root and
+# appends to results/bench_serve.csv. CI smoke-runs this with --smoke
+# alongside bench-mincost.
 bench-serve:
 	$(CARGO) bench --bench bench_serve
 	@test -f BENCH_serve.json && echo "BENCH_serve.json updated" || \

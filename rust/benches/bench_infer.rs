@@ -174,7 +174,7 @@ fn bench_plan_cache(b: &mut Bench, json: &mut String) {
     let (names, values) = synth_params(&g, 19);
     let params = ParamSet::new(names.iter().map(|s| s.as_str()), &values);
     let mapping = random_mapping(&g, 5);
-    let key = QuantPlan::cache_key(&g.name, &p.name, &mapping, KernelBackend::Auto);
+    let key = QuantPlan::cache_key(&g.name, g.spec_hash(), &p.name, &mapping, KernelBackend::Auto);
     let s_miss = b.run("plan_cache_miss_resnet20", || {
         let mut cold = PlanCache::new(1);
         cold.get_or_compile(key, &mapping, || {

@@ -17,8 +17,12 @@
 //! pressure stays visible next to throughput. Cluster cases replay one
 //! dense trace at `--replicas 1` vs `4` (continuous vs flush batching);
 //! their deterministic virtual img/s feed the replica-scaling gate in
-//! `tools/check_bench_overhead.py` (r4 must reach >= 2.5x r1). Writes
-//! `BENCH_serve.json` at the repo root and appends to
+//! `tools/check_bench_overhead.py` (r4 must reach >= 2.5x r1).
+//! Multi-model cases replay the same dense trace through
+//! `Session::serve_multi`: `multi_m1` with a one-model set (the gate
+//! holds its loop time within 5% of `cluster_r1` — pure dispatch
+//! overhead) and `multi_m2` with the imported custom graph mixed in.
+//! Writes `BENCH_serve.json` at the repo root and appends to
 //! `results/bench_serve.csv`.
 
 use std::fmt::Write as _;
@@ -208,6 +212,53 @@ fn main() {
             rep.virtual_img_s,
             rep.makespan_ms,
             rep.steals,
+            s.median_ns / 1e6
+        );
+    }
+    // multi-model cases: `multi_m1` replays the identical dense trace
+    // through the multi-model dispatch plane with a one-model set —
+    // the overhead gate holds its loop time within 5% of `cluster_r1`
+    // (same trace, same options, so the delta is pure dispatch cost).
+    // `multi_m2` adds the imported custom graph and a mixed trace, the
+    // two-model figure the gate requires to stay live.
+    let custom = concat!(env!("CARGO_MANIFEST_DIR"), "/../config/graph_custom.json");
+    let multi_cases = [
+        ("multi_m1", vec!["tinycnn".to_string()]),
+        ("multi_m2", vec!["tinycnn".to_string(), custom.to_string()]),
+    ];
+    for (name, specs) in multi_cases {
+        let copts = ClusterOpts {
+            replicas: 1,
+            serve: dense.clone(),
+            continuous: true,
+            steal_max: 2,
+            compile_cycles: 5_000,
+            plan_cache_cap: 8,
+        };
+        let mtrace = if specs.len() == 1 {
+            trace.clone()
+        } else {
+            session.synth_trace_multi(&specs, &dense).expect("mixed trace")
+        };
+        let rep = session.serve_multi(&specs, &copts, Some(&mtrace)).expect("multi run");
+        let s = b.run(name, || {
+            black_box(session.serve_multi(&specs, &copts, Some(&mtrace)).expect("multi run"));
+        });
+        println!(
+            "{name} ({}): {:8.1} virtual img/s | makespan {:.3} ms | loop {:.2} ms",
+            rep.model,
+            rep.virtual_img_s,
+            rep.makespan_ms,
+            s.median_ns / 1e6
+        );
+        let _ = write!(
+            json,
+            ",\n  \"{name}\": {{\n    \"virtual_img_s\": {:.4},\n    \
+             \"makespan_ms\": {:.4},\n    \"models\": {},\n    \
+             \"loop_ms\": {:.2}\n  }}",
+            rep.virtual_img_s,
+            rep.makespan_ms,
+            specs.len(),
             s.median_ns / 1e6
         );
     }

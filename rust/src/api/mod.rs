@@ -14,7 +14,9 @@
 //!     seed, dirs,                         ├─ infer(&Mapping, x, n)  logits
 //!     smoke, knobs                        ├─ sweep()                SweepResult
 //!                                         ├─ serve(&ServeOpts)      ServeReport
-//!                                         └─ serve_cluster(&ClusterOpts, Option<&Trace>)
+//!                                         ├─ serve_cluster(&ClusterOpts, Option<&Trace>)
+//!                                         │                         ClusterReport
+//!                                         └─ serve_multi(&[spec], &ClusterOpts, Option<&Trace>)
 //!                                                                   ClusterReport
 //!               owned, reused state:  plan cache (LRU, shared by
 //!               infer + serve) and the lazily built/cached frontier
@@ -42,7 +44,7 @@ pub use crate::coordinator::baselines::CostObjective;
 pub use crate::hw::faults::{FaultEvent, FaultPlan};
 pub use crate::quant::{ConvAlgo, Isa, KernelBackend};
 pub use crate::serve::{
-    AdmissionCfg, ClusterOpts, ClusterReport, ServeError, ServeOpts, ServeReport, TenantRow,
-    Trace, TraceError, TraceRecord,
+    AdmissionCfg, ClusterOpts, ClusterReport, ModelRow, ModelSet, ModelSlot, ModelTenantRow,
+    ServeError, ServeOpts, ServeReport, TenantRow, Trace, TraceError, TraceRecord,
 };
 pub use session::{MappingSpec, Session, SessionBuilder, SweepResult};

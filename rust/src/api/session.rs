@@ -11,13 +11,13 @@ use crate::coordinator::scheduler::{self, DeployReport};
 use crate::coordinator::Mapping;
 use crate::hw::soc::{simulate, RunReport, SocConfig};
 use crate::hw::Platform;
-use crate::model::{self, Graph, ALL_MODELS};
+use crate::model::Graph;
 use crate::obs::{export, EventKind, ObsLevel, Recorder};
 use crate::quant::{synth_params_on, KernelBackend, ParamSet, QuantNet, QuantPlan};
 use crate::serve::batcher::PlanCache;
 use crate::serve::{
-    self, cluster, metrics, sweep, ClusterOpts, ClusterReport, FrontierPoint, ServeOpts,
-    ServeReport, SweepCfg, Trace,
+    self, cluster, metrics, multi, sweep, ClusterOpts, ClusterReport, FrontierPoint, ModelSet,
+    ServeOpts, ServeReport, SweepCfg, Trace,
 };
 use crate::util::json;
 use crate::util::pool::ThreadPool;
@@ -227,16 +227,11 @@ impl SessionBuilder {
     }
 
     /// Validate everything once and construct the [`Session`]: the
-    /// model must exist, the platform must resolve (built-in name or
-    /// readable TOML), and `threads`, if set, must be >= 1.
+    /// model must resolve (a built-in name, or a path to an imported
+    /// `odimo_graph` JSON file), the platform must resolve (built-in
+    /// name or readable TOML), and `threads`, if set, must be >= 1.
     pub fn build(self) -> Result<Session> {
-        if !ALL_MODELS.contains(&self.model.as_str()) {
-            return Err(anyhow!(
-                "unknown model '{}' (choose from {ALL_MODELS:?})",
-                self.model
-            ));
-        }
-        let graph = model::build(&self.model)?;
+        let graph = multi::resolve_graph(&self.model)?;
         let platform = match self.platform {
             PlatformArg::Named(s) => Platform::resolve(&s)?,
             PlatformArg::Spec(p) => *p,
@@ -436,8 +431,13 @@ impl Session {
             .params
             .as_ref()
             .ok_or_else(|| anyhow!("internal: parameter snapshot missing after ensure_params"))?;
-        let key =
-            QuantPlan::cache_key(&self.graph.name, &self.platform.name, mapping, self.kernels);
+        let key = QuantPlan::cache_key(
+            &self.graph.name,
+            self.graph.spec_hash(),
+            &self.platform.name,
+            mapping,
+            self.kernels,
+        );
         let graph = &self.graph;
         let platform = &self.platform;
         let backend = self.kernels;
@@ -560,6 +560,27 @@ impl Session {
         Ok(Trace::synth(opts, n_requests, self.seed, frontier, &self.graph.name))
     }
 
+    /// Synthesize the canonical mixed request trace for a multi-model
+    /// serving set: `opts.n_requests` requests *per model* (slot `i`
+    /// draws from `seed + i`), merged by arrival — exactly the stream
+    /// [`Session::serve_multi`] generates internally when given no
+    /// trace. Resolves and sweeps every spec through the disk cache
+    /// first (arrival SLA budgets derive from each model's own
+    /// frontier).
+    pub fn synth_trace_multi(&self, specs: &[String], opts: &ServeOpts) -> Result<Trace> {
+        let n = opts.n_requests.unwrap_or(if self.smoke { 24 } else { 96 });
+        let pool = init_pool(&self.pool, self.threads);
+        let set = ModelSet::load(
+            specs,
+            &self.platform,
+            &self.results_dir,
+            &self.sweep_cfg,
+            pool,
+            &self.rec,
+        )?;
+        Ok(multi::synth_mixed(opts, n, self.seed, &set))
+    }
+
     /// Run the replicated cluster driver (`opts.replicas` virtual
     /// replicas, least-loaded routing, bounded work stealing,
     /// continuous batching, compile-ahead gating) over `trace` — or
@@ -611,6 +632,77 @@ impl Session {
             &self.graph.name,
             &self.platform.name,
         );
+        cluster::save_cluster_report(&path, &report)?;
+        self.rec.note(
+            log::Level::Info,
+            EventKind::ReportWritten { kind: "cluster report", path: path.display().to_string() },
+        );
+        Ok(report)
+    }
+
+    /// Serve a *set* of models on one cluster: resolve every spec (a
+    /// built-in name or an imported-graph JSON path), sweep each
+    /// model's frontier through the disk cache, route `trace` records
+    /// to models by name, and run the multi-model cluster driver —
+    /// batches never mix models, flush order is deficit-round-robin
+    /// fair across models, and the report carries per-(model, tenant)
+    /// accounting rows. With one model and the same trace this is
+    /// digest-identical to [`Session::serve_cluster`]. When `trace` is
+    /// `None`, a mixed stream is synthesized: `opts.serve.n_requests`
+    /// requests *per model* (slot `i` draws from `seed + i`), merged by
+    /// arrival. The session's own model plays no role here: the serving
+    /// set is exactly `specs`. The report persists under the results
+    /// directory keyed by the joined model names.
+    pub fn serve_multi(
+        &mut self,
+        specs: &[String],
+        opts: &ClusterOpts,
+        trace: Option<&Trace>,
+    ) -> Result<ClusterReport> {
+        // mirror sweep()'s rejection: frontiers are scored ideal-L1
+        if self.soc.non_ideal_l1 {
+            return Err(anyhow!(
+                "sweep/serve score the ideal-L1 simulator config; build the \
+                 session without non_ideal_l1 to use the frontier"
+            ));
+        }
+        // one event stream per run, as in serve/serve_cluster
+        self.rec.reset();
+        let pool = init_pool(&self.pool, self.threads);
+        let set = ModelSet::load(
+            specs,
+            &self.platform,
+            &self.results_dir,
+            &self.sweep_cfg,
+            pool,
+            &self.rec,
+        )?;
+        let owned;
+        let trace = match trace {
+            Some(t) => t,
+            None => {
+                let n = opts
+                    .serve
+                    .n_requests
+                    .unwrap_or(if self.smoke { 24 } else { 96 });
+                owned = multi::synth_mixed(&opts.serve, n, self.seed, &set);
+                &owned
+            }
+        };
+        let params = set.param_sets();
+        let models = set.cluster_models(&params);
+        let report = cluster::run_cluster_multi(
+            &models,
+            &self.platform,
+            pool,
+            trace,
+            opts,
+            self.kernels,
+            &self.rec,
+        )?;
+        let joined = set.names().join("+");
+        let path =
+            cluster::cluster_report_path(&self.results_dir, &joined, &self.platform.name);
         cluster::save_cluster_report(&path, &report)?;
         self.rec.note(
             log::Level::Info,

@@ -256,6 +256,13 @@ pub const FLAGS: &[FlagSpec] = &[
                least-loaded routing + work stealing)",
     },
     FlagSpec {
+        name: "models",
+        value: Some("<a,b.json,...>"),
+        help: "serve: comma-separated serving set — built-in names and/or imported \
+               graph .json paths; trace records route to models by name and batches \
+               never mix models (enables the cluster driver)",
+    },
+    FlagSpec {
         name: "trace",
         value: Some("<file.jsonl>"),
         help: "serve: replay this request trace instead of synthesizing one (JSONL, \
@@ -395,7 +402,7 @@ pub const VERBS: &[VerbSpec] = &[
     VerbSpec {
         name: "serve",
         help: "closed-loop SLA-aware batched inference over the frontier",
-        flags: &["model", "platform", "results", "threads", "seed", "requests",
+        flags: &["model", "models", "platform", "results", "threads", "seed", "requests",
                  "max-batch", "max-wait", "gap", "faults", "overload-wait",
                  "max-retries", "replicas", "trace", "record-trace", "steal-max",
                  "compile-cycles", "kernels", "trace-events", "obs-level"],

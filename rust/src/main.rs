@@ -19,6 +19,7 @@ use odimo::hw::Platform;
 use odimo::model::ALL_MODELS;
 use odimo::obs::{export, ObsLevel};
 use odimo::runtime::{ArtifactMeta, Runtime};
+use odimo::serve::multi;
 use odimo::util::logging;
 
 fn build_config(args: &Args) -> Result<RunConfig> {
@@ -279,16 +280,28 @@ fn run() -> Result<()> {
             if let Some(n) = args.get_usize("max-retries")? {
                 opts.max_retries = n as u32;
             }
-            let (n_points, cache_hit) = {
-                let sw = session.sweep()?;
-                (sw.points.len(), sw.cache_hit)
-            };
-            println!(
-                "serve: frontier {} ({n_points} points, {})",
-                session.frontier_path().display(),
-                if cache_hit { "cache hit" } else { "swept fresh" }
-            );
-            let cluster_mode = args.get("replicas").is_some()
+            // --models enables the multi-model cluster plane: the
+            // serving set is exactly these specs (built-in names or
+            // imported graph .json paths), not the session's own model
+            let model_specs: Option<Vec<String>> = args.get("models").map(|s| {
+                s.split(',')
+                    .map(|m| m.trim().to_string())
+                    .filter(|m| !m.is_empty())
+                    .collect()
+            });
+            if model_specs.is_none() {
+                let (n_points, cache_hit) = {
+                    let sw = session.sweep()?;
+                    (sw.points.len(), sw.cache_hit)
+                };
+                println!(
+                    "serve: frontier {} ({n_points} points, {})",
+                    session.frontier_path().display(),
+                    if cache_hit { "cache hit" } else { "swept fresh" }
+                );
+            }
+            let cluster_mode = model_specs.is_some()
+                || args.get("replicas").is_some()
                 || args.get("trace").is_some()
                 || args.get("record-trace").is_some()
                 || args.get("steal-max").is_some()
@@ -310,7 +323,20 @@ fn run() -> Result<()> {
                 }
                 let trace = match args.get("trace") {
                     Some(file) => {
-                        let t = Trace::load(std::path::Path::new(file))?;
+                        let t = match &model_specs {
+                            // validate records against the serving set,
+                            // not the built-in model list
+                            Some(specs) => {
+                                let names = specs
+                                    .iter()
+                                    .map(|s| multi::resolve_graph(s).map(|g| g.name))
+                                    .collect::<Result<Vec<String>>>()?;
+                                let refs: Vec<&str> =
+                                    names.iter().map(String::as_str).collect();
+                                Trace::load_known(std::path::Path::new(file), &refs)?
+                            }
+                            None => Trace::load(std::path::Path::new(file))?,
+                        };
                         println!("serve: replaying trace {} ({} requests)", file, t.len());
                         Some(t)
                     }
@@ -318,14 +344,20 @@ fn run() -> Result<()> {
                 };
                 let trace = match trace {
                     Some(t) => t,
-                    None => session.synth_trace(&copts.serve)?,
+                    None => match &model_specs {
+                        Some(specs) => session.synth_trace_multi(specs, &copts.serve)?,
+                        None => session.synth_trace(&copts.serve)?,
+                    },
                 };
                 if let Some(out) = args.get("record-trace") {
                     let path = std::path::Path::new(out);
                     trace.save(path)?;
                     println!("serve: trace recorded to {out}");
                 }
-                let report = session.serve_cluster(&copts, Some(&trace))?;
+                let report = match &model_specs {
+                    Some(specs) => session.serve_multi(specs, &copts, Some(&trace))?,
+                    None => session.serve_cluster(&copts, Some(&trace))?,
+                };
                 println!("{}", report.dashboard());
             } else {
                 let report = session.serve(&opts)?;

@@ -1,0 +1,823 @@
+//! Graph import/export — the versioned `odimo_graph` JSON schema.
+//!
+//! A graph file is a [`crate::exp::store`] envelope (`kind:
+//! "odimo_graph"`, schema v1) whose payload mirrors [`Graph`] field
+//! for field. [`Graph::to_json`] emits the canonical document (object
+//! keys sorted by the emitter, nodes in definition order) and
+//! [`Graph::from_json_file`] parses it back through full structural
+//! validation, so the four built-ins round-trip byte-for-byte and a
+//! hand-written file that violates the IR's invariants fails with a
+//! typed, field-level [`ImportError`] instead of crashing the sweep or
+//! the engine downstream.
+//!
+//! Validation re-runs the same shape inference the native builders use
+//! (`oh = (h + 2*pad - k)/stride + 1`) and checks every declared
+//! `cin`/`cout`/`in_hw`/`out_hw` against it; node references must be
+//! backward (definition order is topological order), so a forward
+//! reference is diagnosed as either [`ImportError::Cycle`] (the
+//! referenced node depends back on the referencing one) or
+//! [`ImportError::NotTopological`] (a legal DAG written in the wrong
+//! order).
+//!
+//! [`Graph::spec_hash`] is the model-side analog of
+//! [`crate::hw::Platform::spec_hash`]: an FNV-1a digest over the
+//! graph's ops, shapes and edges, computed once at construction.
+//! The frontier cache and the plan cache fold it into their keys, so
+//! an edited graph file re-sweeps/re-compiles instead of silently
+//! reusing stale artifacts saved under the same model name.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::exp::store;
+use crate::util::json::Json;
+
+use super::{Graph, NodeDef, Op};
+
+/// Envelope `kind` tag of a graph JSON file.
+pub const GRAPH_KIND: &str = "odimo_graph";
+/// Graph JSON schema version.
+pub const GRAPH_SCHEMA: u32 = 1;
+
+/// One structural-validation failure, carrying the node and field it
+/// fired on so a hand-edited graph file is fixable from the message
+/// alone.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ImportError {
+    /// The node table is empty.
+    Empty,
+    /// Node 0 must be the single `input` node.
+    FirstNotInput {
+        /// Name of the offending first node.
+        node: String,
+    },
+    /// An `input` op appeared past position 0 (exactly one is allowed).
+    ExtraInput {
+        /// Name of the extra input node.
+        node: String,
+    },
+    /// Two nodes share a name.
+    DuplicateName {
+        /// The repeated name.
+        node: String,
+    },
+    /// A node references an input name that no node defines.
+    DanglingInput {
+        /// Referencing node.
+        node: String,
+        /// The undefined input name.
+        input: String,
+    },
+    /// A node (transitively) feeds itself.
+    Cycle {
+        /// Node on the cycle where detection fired.
+        node: String,
+        /// The forward edge that closes the cycle.
+        input: String,
+    },
+    /// A forward reference in an acyclic graph: the node table is not
+    /// in topological order (definition order is the schedule).
+    NotTopological {
+        /// Referencing node.
+        node: String,
+        /// The input defined later in the table.
+        input: String,
+    },
+    /// A declared field disagrees with the value shape inference
+    /// derives from the node's producers.
+    ShapeMismatch {
+        /// Offending node.
+        node: String,
+        /// Field that disagrees (`cin`, `cout`, `in_hw`, `out_hw`).
+        field: &'static str,
+        /// Value inference expects.
+        expected: String,
+        /// Value the file declares.
+        got: String,
+    },
+    /// A field violates the op's structural contract (arity, zero
+    /// stride, kernel larger than the padded input, ...).
+    BadField {
+        /// Offending node (empty for graph-level fields).
+        node: String,
+        /// Offending field.
+        field: &'static str,
+        /// What is wrong with it.
+        msg: String,
+    },
+}
+
+impl fmt::Display for ImportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ImportError::Empty => write!(f, "graph has no nodes"),
+            ImportError::FirstNotInput { node } => {
+                write!(f, "node '{node}': the first node must be the 'input' op")
+            }
+            ImportError::ExtraInput { node } => {
+                write!(f, "node '{node}': exactly one 'input' node is allowed (at position 0)")
+            }
+            ImportError::DuplicateName { node } => {
+                write!(f, "node '{node}': duplicate node name")
+            }
+            ImportError::DanglingInput { node, input } => {
+                write!(f, "node '{node}': input '{input}' is not defined by any node")
+            }
+            ImportError::Cycle { node, input } => {
+                write!(f, "node '{node}': input '{input}' closes a cycle back to '{node}'")
+            }
+            ImportError::NotTopological { node, input } => write!(
+                f,
+                "node '{node}': input '{input}' is defined later in the table — the node \
+                 list must be in topological order"
+            ),
+            ImportError::ShapeMismatch { node, field, expected, got } => write!(
+                f,
+                "node '{node}': field '{field}' declares {got} but shape inference \
+                 expects {expected}"
+            ),
+            ImportError::BadField { node, field, msg } => {
+                if node.is_empty() {
+                    write!(f, "graph field '{field}': {msg}")
+                } else {
+                    write!(f, "node '{node}': field '{field}': {msg}")
+                }
+            }
+        }
+    }
+}
+
+impl std::error::Error for ImportError {}
+
+fn op_tag(op: Op) -> &'static str {
+    match op {
+        Op::Input => "input",
+        Op::Conv => "conv",
+        Op::DwConv => "dwconv",
+        Op::Add => "add",
+        Op::Gap => "gap",
+        Op::Fc => "fc",
+    }
+}
+
+fn op_code(op: Op) -> u8 {
+    match op {
+        Op::Input => 0,
+        Op::Conv => 1,
+        Op::DwConv => 2,
+        Op::Add => 3,
+        Op::Gap => 4,
+        Op::Fc => 5,
+    }
+}
+
+/// FNV-1a over everything that identifies the graph's structure:
+/// name, input shape, class count, batch sizes, and every node's op,
+/// edges and declared geometry. Strings are length-prefixed and enum
+/// tags get a code byte, mirroring [`crate::hw::Platform::spec_hash`],
+/// so field reorderings or boundary shifts cannot collide.
+pub(super) fn spec_hash_of(
+    name: &str,
+    input_shape: (usize, usize, usize),
+    classes: usize,
+    train_batch: usize,
+    eval_batch: usize,
+    nodes: &[NodeDef],
+) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    let eat_str = |s: &str, eat: &mut dyn FnMut(&[u8])| {
+        eat(&(s.len() as u64).to_le_bytes());
+        eat(s.as_bytes());
+    };
+    eat_str(name, &mut eat);
+    for d in [input_shape.0, input_shape.1, input_shape.2, classes, train_batch, eval_batch] {
+        eat(&(d as u64).to_le_bytes());
+    }
+    eat(&(nodes.len() as u64).to_le_bytes());
+    for n in nodes {
+        eat_str(&n.name, &mut eat);
+        eat(&[op_code(n.op)]);
+        eat(&(n.inputs.len() as u64).to_le_bytes());
+        for i in &n.inputs {
+            eat_str(i, &mut eat);
+        }
+        for d in
+            [n.cin, n.cout, n.k, n.stride, n.pad, n.in_hw.0, n.in_hw.1, n.out_hw.0, n.out_hw.1]
+        {
+            eat(&(d as u64).to_le_bytes());
+        }
+        eat(&[n.relu as u8]);
+    }
+    h
+}
+
+fn hw_json(hw: (usize, usize)) -> Json {
+    Json::arr_usize(&[hw.0, hw.1])
+}
+
+fn node_to_json(n: &NodeDef) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(n.name.clone())),
+        ("op", Json::str(op_tag(n.op))),
+        ("inputs", Json::Arr(n.inputs.iter().map(Json::str).collect())),
+        ("cin", Json::num(n.cin as f64)),
+        ("cout", Json::num(n.cout as f64)),
+        ("k", Json::num(n.k as f64)),
+        ("stride", Json::num(n.stride as f64)),
+        ("pad", Json::num(n.pad as f64)),
+        ("relu", Json::Bool(n.relu)),
+        ("in_hw", hw_json(n.in_hw)),
+        ("out_hw", hw_json(n.out_hw)),
+    ])
+}
+
+fn req_usize(v: &Json, node: &str, field: &'static str) -> Result<usize> {
+    v.get(field)
+        .and_then(Json::as_f64)
+        .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+        .map(|x| x as usize)
+        .ok_or_else(|| {
+            ImportError::BadField {
+                node: node.to_string(),
+                field,
+                msg: "missing or not a non-negative integer".into(),
+            }
+            .into()
+        })
+}
+
+fn req_hw(v: &Json, node: &str, field: &'static str) -> Result<(usize, usize)> {
+    let arr = v.get(field).and_then(Json::as_arr).ok_or_else(|| ImportError::BadField {
+        node: node.to_string(),
+        field,
+        msg: "missing or not a 2-element array".into(),
+    })?;
+    if arr.len() != 2 {
+        return Err(ImportError::BadField {
+            node: node.to_string(),
+            field,
+            msg: format!("expected 2 elements, got {}", arr.len()),
+        }
+        .into());
+    }
+    let h = arr[0].as_usize().ok_or_else(|| ImportError::BadField {
+        node: node.to_string(),
+        field,
+        msg: "height must be a number".into(),
+    })?;
+    let w = arr[1].as_usize().ok_or_else(|| ImportError::BadField {
+        node: node.to_string(),
+        field,
+        msg: "width must be a number".into(),
+    })?;
+    Ok((h, w))
+}
+
+fn node_from_json(v: &Json) -> Result<NodeDef> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| ImportError::BadField {
+            node: String::new(),
+            field: "name",
+            msg: "every node needs a non-empty string name".into(),
+        })?
+        .to_string();
+    let op_s = v.get("op").and_then(Json::as_str).ok_or_else(|| ImportError::BadField {
+        node: name.clone(),
+        field: "op",
+        msg: "missing op string".into(),
+    })?;
+    let op = Op::parse(op_s).map_err(|_| ImportError::BadField {
+        node: name.clone(),
+        field: "op",
+        msg: format!("unknown op '{op_s}' (input|conv|dwconv|add|gap|fc)"),
+    })?;
+    let inputs = v
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ImportError::BadField {
+            node: name.clone(),
+            field: "inputs",
+            msg: "missing inputs array".into(),
+        })?
+        .iter()
+        .map(|x| {
+            x.as_str().map(String::from).ok_or_else(|| {
+                anyhow::Error::from(ImportError::BadField {
+                    node: name.clone(),
+                    field: "inputs",
+                    msg: "inputs must be node-name strings".into(),
+                })
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let relu = v.get("relu").and_then(Json::as_bool).ok_or_else(|| ImportError::BadField {
+        node: name.clone(),
+        field: "relu",
+        msg: "missing bool".into(),
+    })?;
+    Ok(NodeDef {
+        cin: req_usize(v, &name, "cin")?,
+        cout: req_usize(v, &name, "cout")?,
+        k: req_usize(v, &name, "k")?,
+        stride: req_usize(v, &name, "stride")?,
+        pad: req_usize(v, &name, "pad")?,
+        in_hw: req_hw(v, &name, "in_hw")?,
+        out_hw: req_hw(v, &name, "out_hw")?,
+        relu,
+        inputs,
+        op,
+        name,
+    })
+}
+
+/// Structural validation: unique names, backward (topological) edges,
+/// exactly one leading `input` node, and declared geometry equal to
+/// what shape inference derives. Runs on every import and on the
+/// built-ins in tests, so the schema cannot drift from the builders.
+pub fn validate(g: &Graph) -> Result<(), ImportError> {
+    if g.nodes.is_empty() {
+        return Err(ImportError::Empty);
+    }
+    if g.nodes[0].op != Op::Input {
+        return Err(ImportError::FirstNotInput { node: g.nodes[0].name.clone() });
+    }
+    if let Some(extra) = g.nodes[1..].iter().find(|n| n.op == Op::Input) {
+        return Err(ImportError::ExtraInput { node: extra.name.clone() });
+    }
+    let mut index = std::collections::BTreeMap::new();
+    for (i, n) in g.nodes.iter().enumerate() {
+        if index.insert(n.name.as_str(), i).is_some() {
+            return Err(ImportError::DuplicateName { node: n.name.clone() });
+        }
+    }
+    // edge sanity: every input resolves, and only to an earlier node
+    for (i, n) in g.nodes.iter().enumerate() {
+        for input in &n.inputs {
+            let Some(&j) = index.get(input.as_str()) else {
+                return Err(ImportError::DanglingInput {
+                    node: n.name.clone(),
+                    input: input.clone(),
+                });
+            };
+            if j >= i {
+                // forward (or self) edge: a cycle if the referenced
+                // node reaches back to this one, else just mis-ordered
+                return if j == i || reaches(g, &index, j, i) {
+                    Err(ImportError::Cycle { node: n.name.clone(), input: input.clone() })
+                } else {
+                    Err(ImportError::NotTopological {
+                        node: n.name.clone(),
+                        input: input.clone(),
+                    })
+                };
+            }
+        }
+    }
+    let (c0, h0, w0) = g.input_shape;
+    if c0 == 0 || h0 == 0 || w0 == 0 {
+        return Err(ImportError::BadField {
+            node: String::new(),
+            field: "input_shape",
+            msg: format!("all dims must be positive, got [{c0},{h0},{w0}]"),
+        });
+    }
+    for (i, n) in g.nodes.iter().enumerate() {
+        check_node(g, &index, i, n)?;
+    }
+    let last = g.nodes.last().unwrap_or_else(|| unreachable!());
+    if last.cout != g.classes {
+        return Err(ImportError::BadField {
+            node: String::new(),
+            field: "classes",
+            msg: format!(
+                "declared {} classes but the final node '{}' emits {} channels",
+                g.classes, last.name, last.cout
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// Is `to` reachable from `from` along input edges (backwards over the
+/// table)? Used only to tell cycles from mis-ordered DAGs.
+fn reaches(
+    g: &Graph,
+    index: &std::collections::BTreeMap<&str, usize>,
+    from: usize,
+    to: usize,
+) -> bool {
+    let mut stack = vec![from];
+    let mut seen = vec![false; g.nodes.len()];
+    while let Some(i) = stack.pop() {
+        if i == to {
+            return true;
+        }
+        if std::mem::replace(&mut seen[i], true) {
+            continue;
+        }
+        for input in &g.nodes[i].inputs {
+            if let Some(&j) = index.get(input.as_str()) {
+                stack.push(j);
+            }
+        }
+    }
+    false
+}
+
+fn mismatch(
+    node: &str,
+    field: &'static str,
+    expected: impl fmt::Debug,
+    got: impl fmt::Debug,
+) -> ImportError {
+    ImportError::ShapeMismatch {
+        node: node.to_string(),
+        field,
+        expected: format!("{expected:?}"),
+        got: format!("{got:?}"),
+    }
+}
+
+fn arity(n: &NodeDef, want: usize) -> Result<(), ImportError> {
+    if n.inputs.len() != want {
+        return Err(ImportError::BadField {
+            node: n.name.clone(),
+            field: "inputs",
+            msg: format!("{} takes {} input(s), got {}", op_tag(n.op), want, n.inputs.len()),
+        });
+    }
+    Ok(())
+}
+
+fn check_node(
+    g: &Graph,
+    index: &std::collections::BTreeMap<&str, usize>,
+    i: usize,
+    n: &NodeDef,
+) -> Result<(), ImportError> {
+    let producer = |name: &str| &g.nodes[index[name]];
+    match n.op {
+        Op::Input => {
+            arity(n, 0)?;
+            let (c0, h0, w0) = g.input_shape;
+            if i != 0 {
+                return Err(ImportError::ExtraInput { node: n.name.clone() });
+            }
+            if n.cin != 0 {
+                return Err(mismatch(&n.name, "cin", 0usize, n.cin));
+            }
+            if n.cout != c0 {
+                return Err(mismatch(&n.name, "cout", c0, n.cout));
+            }
+            if n.in_hw != (h0, w0) {
+                return Err(mismatch(&n.name, "in_hw", (h0, w0), n.in_hw));
+            }
+            if n.out_hw != (h0, w0) {
+                return Err(mismatch(&n.name, "out_hw", (h0, w0), n.out_hw));
+            }
+        }
+        Op::Conv | Op::DwConv => {
+            arity(n, 1)?;
+            let p = producer(&n.inputs[0]);
+            if n.cin != p.cout {
+                return Err(mismatch(&n.name, "cin", p.cout, n.cin));
+            }
+            if n.op == Op::DwConv && n.cout != n.cin {
+                return Err(mismatch(&n.name, "cout", n.cin, n.cout));
+            }
+            if n.cout == 0 {
+                return Err(ImportError::BadField {
+                    node: n.name.clone(),
+                    field: "cout",
+                    msg: "must be positive".into(),
+                });
+            }
+            if n.stride == 0 || n.k == 0 {
+                return Err(ImportError::BadField {
+                    node: n.name.clone(),
+                    field: if n.stride == 0 { "stride" } else { "k" },
+                    msg: "must be positive".into(),
+                });
+            }
+            if n.in_hw != p.out_hw {
+                return Err(mismatch(&n.name, "in_hw", p.out_hw, n.in_hw));
+            }
+            let (h, w) = n.in_hw;
+            if h + 2 * n.pad < n.k || w + 2 * n.pad < n.k {
+                return Err(ImportError::BadField {
+                    node: n.name.clone(),
+                    field: "k",
+                    msg: format!(
+                        "kernel {} exceeds the padded input {}x{} (pad {})",
+                        n.k, h, w, n.pad
+                    ),
+                });
+            }
+            let oh = (h + 2 * n.pad - n.k) / n.stride + 1;
+            let ow = (w + 2 * n.pad - n.k) / n.stride + 1;
+            if n.out_hw != (oh, ow) {
+                return Err(mismatch(&n.name, "out_hw", (oh, ow), n.out_hw));
+            }
+        }
+        Op::Add => {
+            arity(n, 2)?;
+            let a = producer(&n.inputs[0]);
+            let b = producer(&n.inputs[1]);
+            if a.cout != b.cout || a.out_hw != b.out_hw {
+                return Err(ImportError::BadField {
+                    node: n.name.clone(),
+                    field: "inputs",
+                    msg: format!(
+                        "add operands disagree: {}x{:?} vs {}x{:?}",
+                        a.cout, a.out_hw, b.cout, b.out_hw
+                    ),
+                });
+            }
+            if n.cin != a.cout {
+                return Err(mismatch(&n.name, "cin", a.cout, n.cin));
+            }
+            if n.cout != a.cout {
+                return Err(mismatch(&n.name, "cout", a.cout, n.cout));
+            }
+            if n.in_hw != a.out_hw {
+                return Err(mismatch(&n.name, "in_hw", a.out_hw, n.in_hw));
+            }
+            if n.out_hw != a.out_hw {
+                return Err(mismatch(&n.name, "out_hw", a.out_hw, n.out_hw));
+            }
+        }
+        Op::Gap => {
+            arity(n, 1)?;
+            let p = producer(&n.inputs[0]);
+            if n.cin != p.cout {
+                return Err(mismatch(&n.name, "cin", p.cout, n.cin));
+            }
+            if n.cout != p.cout {
+                return Err(mismatch(&n.name, "cout", p.cout, n.cout));
+            }
+            if n.in_hw != p.out_hw {
+                return Err(mismatch(&n.name, "in_hw", p.out_hw, n.in_hw));
+            }
+            if n.out_hw != (1, 1) {
+                return Err(mismatch(&n.name, "out_hw", (1usize, 1usize), n.out_hw));
+            }
+        }
+        Op::Fc => {
+            arity(n, 1)?;
+            let p = producer(&n.inputs[0]);
+            if p.out_hw != (1, 1) {
+                return Err(ImportError::BadField {
+                    node: n.name.clone(),
+                    field: "inputs",
+                    msg: format!(
+                        "fc consumes a 1x1 feature map (use gap first); '{}' emits {:?}",
+                        p.name, p.out_hw
+                    ),
+                });
+            }
+            if n.cin != p.cout {
+                return Err(mismatch(&n.name, "cin", p.cout, n.cin));
+            }
+            if n.cout == 0 {
+                return Err(ImportError::BadField {
+                    node: n.name.clone(),
+                    field: "cout",
+                    msg: "must be positive".into(),
+                });
+            }
+            if n.in_hw != (1, 1) {
+                return Err(mismatch(&n.name, "in_hw", (1usize, 1usize), n.in_hw));
+            }
+            if n.out_hw != (1, 1) {
+                return Err(mismatch(&n.name, "out_hw", (1usize, 1usize), n.out_hw));
+            }
+        }
+    }
+    Ok(())
+}
+
+impl Graph {
+    /// The canonical graph document: the full versioned envelope, so
+    /// `to_json().to_string()` is byte-for-byte what
+    /// [`Graph::save_json`] writes and what [`Graph::from_json_file`]
+    /// re-emits after a round-trip (the emitter sorts object keys).
+    pub fn to_json(&self) -> Json {
+        let nodes = Json::Arr(self.nodes.iter().map(node_to_json).collect());
+        let payload = Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "input_shape",
+                Json::arr_usize(&[self.input_shape.0, self.input_shape.1, self.input_shape.2]),
+            ),
+            ("classes", Json::num(self.classes as f64)),
+            ("train_batch", Json::num(self.train_batch as f64)),
+            ("eval_batch", Json::num(self.eval_batch as f64)),
+            ("nodes", nodes),
+        ]);
+        Json::obj(vec![
+            ("kind", Json::str(GRAPH_KIND)),
+            ("schema_version", Json::num(GRAPH_SCHEMA as f64)),
+            ("payload", payload),
+        ])
+    }
+
+    /// Write the canonical document atomically.
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        store::write_atomic(path, &self.to_json().to_string())
+    }
+
+    /// Parse and validate a graph from an in-memory envelope document
+    /// (what [`Graph::to_json`] emits).
+    pub fn from_json(doc: &Json) -> Result<Graph> {
+        let kind = doc.req("kind")?.as_str().unwrap_or("");
+        if kind != GRAPH_KIND {
+            return Err(anyhow!("graph kind '{kind}' != expected '{GRAPH_KIND}'"));
+        }
+        let version = doc.req("schema_version")?.as_usize().unwrap_or(0) as u32;
+        if version != GRAPH_SCHEMA {
+            return Err(anyhow!(
+                "graph schema version {version} != expected {GRAPH_SCHEMA} — \
+                 re-export the graph"
+            ));
+        }
+        Self::from_payload(doc.req("payload")?)
+    }
+
+    fn from_payload(p: &Json) -> Result<Graph> {
+        let name = p
+            .req("name")?
+            .as_str()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| ImportError::BadField {
+                node: String::new(),
+                field: "name",
+                msg: "graph needs a non-empty string name".into(),
+            })?
+            .to_string();
+        let ishape = p.req("input_shape")?.usize_vec().map_err(|_| ImportError::BadField {
+            node: String::new(),
+            field: "input_shape",
+            msg: "must be a numeric array".into(),
+        })?;
+        if ishape.len() != 3 {
+            return Err(ImportError::BadField {
+                node: String::new(),
+                field: "input_shape",
+                msg: format!("expected [C,H,W], got {} element(s)", ishape.len()),
+            }
+            .into());
+        }
+        let nodes = p
+            .req("nodes")?
+            .as_arr()
+            .ok_or_else(|| ImportError::BadField {
+                node: String::new(),
+                field: "nodes",
+                msg: "must be an array".into(),
+            })?
+            .iter()
+            .map(node_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let g = Graph::new(
+            name,
+            (ishape[0], ishape[1], ishape[2]),
+            req_usize(p, "", "classes")?,
+            req_usize(p, "", "train_batch")?.max(1),
+            req_usize(p, "", "eval_batch")?.max(1),
+            nodes,
+        );
+        validate(&g)?;
+        Ok(g)
+    }
+
+    /// Load, parse and validate a graph JSON file.
+    pub fn from_json_file(path: &Path) -> Result<Graph> {
+        let payload = store::load_versioned(path, GRAPH_KIND, GRAPH_SCHEMA)?;
+        Self::from_payload(&payload)
+            .map_err(|e| anyhow!("{}: {e:#}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{build, tinycnn, ALL_MODELS};
+
+    #[test]
+    fn builtins_validate_and_roundtrip_bytes() {
+        for name in ALL_MODELS {
+            let g = build(name).unwrap();
+            validate(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let text = g.to_json().to_string();
+            let doc = crate::util::json::parse(&text).unwrap();
+            let back = Graph::from_json(&doc).unwrap();
+            assert_eq!(back.to_json().to_string(), text, "{name}: round-trip drifted");
+            assert_eq!(back.spec_hash(), g.spec_hash(), "{name}");
+            assert_eq!(back.nodes.len(), g.nodes.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn spec_hash_tracks_structure() {
+        let base = tinycnn();
+        assert_eq!(base.spec_hash(), tinycnn().spec_hash(), "deterministic");
+        for name in &ALL_MODELS[1..] {
+            assert_ne!(base.spec_hash(), build(name).unwrap().spec_hash());
+        }
+        // one edited channel count moves the hash (the stale-frontier case)
+        let mut edited = tinycnn();
+        edited.nodes[1].cout += 1;
+        let rehashed = Graph::new(
+            edited.name.clone(),
+            edited.input_shape,
+            edited.classes,
+            edited.train_batch,
+            edited.eval_batch,
+            edited.nodes.clone(),
+        );
+        assert_ne!(base.spec_hash(), rehashed.spec_hash());
+        // a renamed edge moves it too, same geometry
+        let mut renamed = tinycnn();
+        renamed.nodes[1].name = "stem2".into();
+        renamed.nodes[2].inputs = vec!["stem2".into()];
+        let rehashed = Graph::new(
+            renamed.name.clone(),
+            renamed.input_shape,
+            renamed.classes,
+            renamed.train_batch,
+            renamed.eval_batch,
+            renamed.nodes.clone(),
+        );
+        assert_ne!(base.spec_hash(), rehashed.spec_hash());
+    }
+
+    fn rebuilt(mut f: impl FnMut(&mut Graph)) -> Graph {
+        let mut g = tinycnn();
+        f(&mut g);
+        Graph::new(g.name, g.input_shape, g.classes, g.train_batch, g.eval_batch, g.nodes)
+    }
+
+    #[test]
+    fn validation_catches_structural_breakage() {
+        // duplicate name
+        let g = rebuilt(|g| g.nodes[2].name = "stem".into());
+        assert!(matches!(validate(&g), Err(ImportError::DuplicateName { .. })));
+        // dangling input
+        let g = rebuilt(|g| g.nodes[2].inputs = vec!["ghost".into()]);
+        match validate(&g) {
+            Err(ImportError::DanglingInput { node, input }) => {
+                assert_eq!(node, "c1");
+                assert_eq!(input, "ghost");
+            }
+            other => panic!("expected DanglingInput, got {other:?}"),
+        }
+        // self-edge is a cycle
+        let g = rebuilt(|g| g.nodes[2].inputs = vec!["c1".into()]);
+        assert!(matches!(validate(&g), Err(ImportError::Cycle { .. })));
+        // legal DAG, wrong order
+        let g = rebuilt(|g| g.nodes.swap(1, 2));
+        assert!(matches!(validate(&g), Err(ImportError::NotTopological { .. })));
+        // declared shape drifts from inference
+        let g = rebuilt(|g| g.nodes[2].out_hw = (9, 9));
+        match validate(&g) {
+            Err(ImportError::ShapeMismatch { node, field, .. }) => {
+                assert_eq!(node, "c1");
+                assert_eq!(field, "out_hw");
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+        // arity violation
+        let g = rebuilt(|g| g.nodes[4].inputs = vec!["c2".into()]);
+        assert!(matches!(validate(&g), Err(ImportError::BadField { field: "inputs", .. })));
+        // classes disagree with the final fc
+        let g = rebuilt(|g| g.classes = 11);
+        assert!(matches!(validate(&g), Err(ImportError::BadField { field: "classes", .. })));
+    }
+
+    #[test]
+    fn file_roundtrip_through_disk() {
+        let dir = std::env::temp_dir().join("odimo_graph_import");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("tinycnn.json");
+        let g = tinycnn();
+        g.save_json(&path).unwrap();
+        let back = Graph::from_json_file(&path).unwrap();
+        assert_eq!(back.to_json().to_string(), g.to_json().to_string());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), g.to_json().to_string());
+        // wrong envelope kind is a clear error
+        store::save_versioned(&path, "frontier", GRAPH_SCHEMA, Json::obj(vec![])).unwrap();
+        let e = Graph::from_json_file(&path).unwrap_err().to_string();
+        assert!(e.contains("kind"), "{e}");
+    }
+}

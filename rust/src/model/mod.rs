@@ -9,9 +9,13 @@
 //!     artifact, the source of truth for anything driving the AOT
 //!     executables.
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
+
+pub mod import;
 
 /// Accelerator indices of the built-in DIANA platform (the artifact /
 /// AOT-graph contract: row 0 = digital int8, row 1 = ternary AIMC).
@@ -86,11 +90,46 @@ pub struct Graph {
     pub train_batch: usize,
     pub eval_batch: usize,
     pub nodes: Vec<NodeDef>,
+    // name -> position in `nodes`, built once at construction so
+    // `node()` is a map lookup, not a linear scan (hot in sweep
+    // scoring and plan compilation for deep imported graphs).
+    index: BTreeMap<String, usize>,
+    // structural digest, cached at construction (see `spec_hash`)
+    spec: u64,
 }
 
 impl Graph {
+    /// The only constructor: derives the name→index map and the
+    /// structural digest once, so lookups and cache keys never pay per
+    /// call. Callers that mutate `nodes` afterwards (tests) must
+    /// rebuild through `new` to keep both coherent.
+    pub fn new(
+        name: String,
+        input_shape: (usize, usize, usize),
+        classes: usize,
+        train_batch: usize,
+        eval_batch: usize,
+        nodes: Vec<NodeDef>,
+    ) -> Graph {
+        let index =
+            nodes.iter().enumerate().map(|(i, n)| (n.name.clone(), i)).collect();
+        let spec = import::spec_hash_of(
+            &name, input_shape, classes, train_batch, eval_batch, &nodes,
+        );
+        Graph { name, input_shape, classes, train_batch, eval_batch, nodes, index, spec }
+    }
+
     pub fn node(&self, name: &str) -> Option<&NodeDef> {
-        self.nodes.iter().find(|n| n.name == name)
+        self.index.get(name).map(|&i| &self.nodes[i])
+    }
+
+    /// FNV-1a digest of the graph's structure (ops, shapes, edges) —
+    /// the model-side analog of [`crate::hw::Platform::spec_hash`].
+    /// Folded into the frontier-cache payload and the plan-cache key,
+    /// so an edited graph file re-sweeps and re-compiles instead of
+    /// silently reusing artifacts saved under the same model name.
+    pub fn spec_hash(&self) -> u64 {
+        self.spec
     }
 
     /// Mappable (conv/fc) nodes in topological (definition) order.
@@ -153,14 +192,14 @@ impl Graph {
             })
             .collect::<Result<Vec<_>>>()
             .context("parsing node table")?;
-        Ok(Graph {
-            name: m.req("name")?.as_str().unwrap_or("").to_string(),
-            input_shape: (ishape[0], ishape[1], ishape[2]),
-            classes: m.req("classes")?.as_usize().unwrap_or(0),
-            train_batch: m.req("train_batch")?.as_usize().unwrap_or(32),
-            eval_batch: m.req("eval_batch")?.as_usize().unwrap_or(128),
+        Ok(Graph::new(
+            m.req("name")?.as_str().unwrap_or("").to_string(),
+            (ishape[0], ishape[1], ishape[2]),
+            m.req("classes")?.as_usize().unwrap_or(0),
+            m.req("train_batch")?.as_usize().unwrap_or(32),
+            m.req("eval_batch")?.as_usize().unwrap_or(128),
             nodes,
-        })
+        ))
     }
 }
 
@@ -320,14 +359,7 @@ impl Builder {
 
     fn finish(self, name: &str, input: (usize, usize, usize), train_batch: usize,
               eval_batch: usize) -> Graph {
-        Graph {
-            name: name.into(),
-            input_shape: input,
-            classes: self.classes,
-            train_batch,
-            eval_batch,
-            nodes: self.nodes,
-        }
+        Graph::new(name.into(), input, self.classes, train_batch, eval_batch, self.nodes)
     }
 }
 

@@ -167,6 +167,7 @@ pub fn trace_events(events: &[Event], ctx: &TraceCtx) -> Json {
         match (&e.kind, e.clock) {
             (
                 EventKind::BatchExec {
+                    model,
                     point,
                     label,
                     start,
@@ -190,6 +191,7 @@ pub fn trace_events(events: &[Event], ctx: &TraceCtx) -> Json {
                     us(*start),
                     us(*done),
                     vec![
+                        ("model", Json::str(model)),
                         ("point", Json::num(*point as f64)),
                         ("size", Json::num(*size as f64)),
                         ("per_img_cycles", Json::num(*per_img as f64)),
@@ -637,13 +639,13 @@ mod tests {
     }
 
     fn batch_event(graph: &Graph, platform: &Platform, points: &[FrontierPoint]) -> Event {
-        let _ = graph;
         let _ = platform;
         let cycles = points[0].cycles;
         Event {
             replica: 0,
             clock: Clock::Virtual(100),
             kind: EventKind::BatchExec {
+                model: graph.name.clone(),
                 point: 0,
                 label: "all_dig".into(),
                 start: 100,

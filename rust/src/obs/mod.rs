@@ -149,6 +149,9 @@ pub enum EventKind {
     /// span `start..done` renders on the replica's driver track and
     /// expands into per-layer per-unit spans in the export).
     BatchExec {
+        /// Model the executed plan belongs to (graph name; multi-model
+        /// serve planes run several graphs on one replica timeline).
+        model: String,
         /// Frontier index executed.
         point: usize,
         /// Frontier label.

@@ -669,9 +669,13 @@ impl QuantPlan {
     /// Stable cache key for a compiled (model, platform, mapping,
     /// backend) tuple — the plan-cache handle: everything that changes
     /// the compiled plan's packed weights, arena layout, or kernel
-    /// dispatch is folded in (FNV-1a over the model name, the platform
-    /// name, the *resolved* kernel ISA, and every per-layer channel
-    /// assignment). Folding the resolved [`Isa`] rather than the
+    /// dispatch is folded in (FNV-1a over the model name *and* its
+    /// [`Graph::spec_hash`](crate::model::Graph::spec_hash), the
+    /// platform name, the *resolved* kernel ISA, and every per-layer
+    /// channel assignment). The structural hash matters for imported
+    /// graphs: an edited graph file keeps its model name, and without
+    /// it a long-lived cache would replay plans compiled for the old
+    /// structure. Folding the resolved [`Isa`] rather than the
     /// requested [`KernelBackend`] means `Auto` shares a key with
     /// whatever it resolves to on this host — the compiled plans are
     /// identical — while scalar- and SIMD-compiled plans never collide.
@@ -682,6 +686,7 @@ impl QuantPlan {
     /// requests for the same mapping reuse one compiled plan.
     pub fn cache_key(
         model: &str,
+        model_hash: u64,
         platform: &str,
         mapping: &Mapping,
         backend: KernelBackend,
@@ -696,6 +701,8 @@ impl QuantPlan {
             }
         };
         eat(model.as_bytes());
+        eat(&[0xff]);
+        eat(&model_hash.to_le_bytes());
         eat(&[0xff]);
         eat(platform.as_bytes());
         eat(&[0xff]);
@@ -1281,7 +1288,7 @@ mod tests {
         let uniform = Mapping::uniform(&g, DIG);
         let mixed = synth_mapping_n(&g, 2, 3);
         let k = |model: &str, plat: &str, m: &Mapping| {
-            QuantPlan::cache_key(model, plat, m, KernelBackend::Scalar)
+            QuantPlan::cache_key(model, g.spec_hash(), plat, m, KernelBackend::Scalar)
         };
         // identical inputs -> identical keys (the cache-hit contract)
         assert_eq!(k("tinycnn", "diana", &uniform), k("tinycnn", "diana", &uniform));
@@ -1289,12 +1296,24 @@ mod tests {
         assert_ne!(k("tinycnn", "diana", &uniform), k("tinycnn", "diana", &mixed));
         assert_ne!(k("tinycnn", "diana", &uniform), k("resnet20", "diana", &uniform));
         assert_ne!(k("tinycnn", "diana", &uniform), k("tinycnn", "mpsoc4", &uniform));
+        // the structural hash is part of the key too: an edited graph
+        // file keeps its model name, and must still miss
+        assert_ne!(
+            QuantPlan::cache_key(
+                "tinycnn",
+                g.spec_hash() ^ 1,
+                "diana",
+                &uniform,
+                KernelBackend::Scalar,
+            ),
+            k("tinycnn", "diana", &uniform),
+        );
         // backend is part of the key: Simd resolves to a non-scalar ISA
         // (a vector unit or the portable chunked fallback), so scalar-
         // and SIMD-compiled plans can never collide in a cache
         assert_ne!(
-            QuantPlan::cache_key("tinycnn", "diana", &uniform, KernelBackend::Scalar),
-            QuantPlan::cache_key("tinycnn", "diana", &uniform, KernelBackend::Simd),
+            QuantPlan::cache_key("tinycnn", g.spec_hash(), "diana", &uniform, KernelBackend::Scalar),
+            QuantPlan::cache_key("tinycnn", g.spec_hash(), "diana", &uniform, KernelBackend::Simd),
         );
     }
 

@@ -1,11 +1,20 @@
 //! Request queue + dynamic batcher + LRU plan cache.
 //!
 //! The [`Batcher`] coalesces requests that dispatched onto the *same*
-//! frontier mapping (same compiled plan) into batches, flushing a queue
-//! when it reaches `max_batch` requests or when its oldest request has
-//! waited `max_wait` simulated cycles. All bookkeeping is in virtual
-//! (simulated-cycle) time and iteration order is `BTreeMap`-stable, so
-//! batch composition is deterministic for a given request stream.
+//! `(model, frontier point)` pair — same graph, same compiled plan —
+//! into batches, flushing a queue when it reaches `max_batch` requests
+//! or when its oldest request has waited `max_wait` simulated cycles.
+//! Batches never mix models: the queue key carries the model index, so
+//! a multi-model serve plane shares one batcher without cross-model
+//! contamination. When several queues are ripe at once, flush order is
+//! deficit-round-robin across models — among equal deadlines the model
+//! with the fewest requests flushed so far goes first — so a chatty
+//! model cannot starve a quiet one's expired batches. With a single
+//! model every counter ties and the ordering degenerates to the
+//! historical (deadline, point) order, keeping old digests stable.
+//! All bookkeeping is in virtual (simulated-cycle) time and iteration
+//! order is `BTreeMap`-stable, so batch composition is deterministic
+//! for a given request stream.
 //!
 //! The [`PlanCache`] keeps up to `cap` compiled [`QuantNet`] plans,
 //! keyed by [`QuantPlan::cache_key`](crate::quant::QuantPlan::cache_key)
@@ -32,13 +41,17 @@ pub struct Request {
     pub arrival: u64,
     /// The request's SLA (drives dispatch and hit-rate accounting).
     pub sla: Sla,
+    /// Model index in the serving set (0 on single-model planes).
+    pub model: u32,
     /// Frontier index the dispatcher chose for this request.
     pub point: usize,
 }
 
-/// A flushed batch: requests sharing one frontier mapping.
+/// A flushed batch: requests sharing one (model, frontier mapping).
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// Model index all member requests target.
+    pub model: u32,
     /// Frontier index all member requests dispatched to.
     pub point: usize,
     /// Virtual time the batch left the queue.
@@ -47,39 +60,52 @@ pub struct Batch {
     pub requests: Vec<Request>,
 }
 
-/// Dynamic same-mapping batcher (see module docs).
+/// Dynamic same-(model, mapping) batcher (see module docs).
 pub struct Batcher {
     max_batch: usize,
     max_wait: u64,
-    queues: BTreeMap<usize, Vec<Request>>,
+    queues: BTreeMap<(u32, usize), Vec<Request>>,
+    /// Requests flushed so far per model — the deficit-round-robin
+    /// state: among equally-ripe queues, the least-served model first.
+    served: BTreeMap<u32, u64>,
 }
 
 impl Batcher {
     /// `max_batch` >= 1 requests per flush; `max_wait` in simulated
     /// cycles (0 flushes every request immediately — unbatched mode).
     pub fn new(max_batch: usize, max_wait: u64) -> Self {
-        Batcher { max_batch: max_batch.max(1), max_wait, queues: BTreeMap::new() }
+        Batcher {
+            max_batch: max_batch.max(1),
+            max_wait,
+            queues: BTreeMap::new(),
+            served: BTreeMap::new(),
+        }
     }
 
-    /// Requests currently queued across all mappings.
+    /// Requests currently queued across all (model, mapping) queues.
     pub fn pending(&self) -> usize {
         self.queues.values().map(Vec::len).sum()
     }
 
-    /// Requests currently queued on `point`'s mapping (the obs layer
-    /// classifies a push as batch-open vs batch-join with this).
-    pub fn pending_for(&self, point: usize) -> usize {
-        self.queues.get(&point).map_or(0, Vec::len)
+    /// Requests currently queued on `(model, point)`'s queue (the obs
+    /// layer classifies a push as batch-open vs batch-join with this).
+    pub fn pending_for(&self, model: u32, point: usize) -> usize {
+        self.queues.get(&(model, point)).map_or(0, Vec::len)
+    }
+
+    /// Requests flushed so far for `model` (the fairness counter).
+    pub fn served_for(&self, model: u32) -> u64 {
+        self.served.get(&model).copied().unwrap_or(0)
     }
 
     /// Enqueue one request; returns the flushed batch if its queue just
     /// reached `max_batch`.
     pub fn push(&mut self, r: Request) -> Option<Batch> {
-        let (point, now) = (r.point, r.arrival);
-        let q = self.queues.entry(point).or_default();
+        let (key, now) = ((r.model, r.point), r.arrival);
+        let q = self.queues.entry(key).or_default();
         q.push(r);
         if q.len() >= self.max_batch {
-            return Some(self.flush(point, now));
+            return Some(self.flush(key, now));
         }
         None
     }
@@ -96,56 +122,74 @@ impl Batcher {
     }
 
     /// Flush every queue whose deadline has passed at `now`, oldest
-    /// deadline first (ties in `point` order — deterministic).
+    /// deadline first. Ties break deficit-round-robin: the model with
+    /// the fewest requests flushed so far goes first (then model, then
+    /// point — fully deterministic). With one model the counters all
+    /// tie and this is the historical (deadline, point) order.
     pub fn due(&mut self, now: u64) -> Vec<Batch> {
-        let mut ripe: Vec<(u64, usize)> = self
+        let mut ripe: Vec<(u64, u64, u32, usize)> = self
             .queues
             .iter()
-            .filter_map(|(&point, q)| {
+            .filter_map(|(&(model, point), q)| {
                 q.first()
-                    .map(|r| (r.arrival.saturating_add(self.max_wait), point))
-                    .filter(|&(deadline, _)| deadline <= now)
+                    .map(|r| {
+                        (r.arrival.saturating_add(self.max_wait), self.served_for(model),
+                         model, point)
+                    })
+                    .filter(|&(deadline, ..)| deadline <= now)
             })
             .collect();
         ripe.sort_unstable();
-        ripe.into_iter().map(|(_, point)| self.flush(point, now)).collect()
+        // re-rank after every flush: a flushed model's counter grows,
+        // so remaining ties rotate to the next least-served model
+        let mut out = Vec::with_capacity(ripe.len());
+        while !ripe.is_empty() {
+            let (_, _, model, point) = ripe.remove(0);
+            out.push(self.flush((model, point), now));
+            for entry in ripe.iter_mut() {
+                entry.1 = self.served_for(entry.2);
+            }
+            ripe.sort_unstable();
+        }
+        out
     }
 
     /// Remove up to `k` queued requests, oldest first by (arrival, id)
-    /// across all mapping queues — the work-stealing donor side. Each
-    /// victim queue keeps its remaining requests in order, so deadlines
-    /// stay monotone for what stays behind.
+    /// across all queues — the work-stealing donor side. Each victim
+    /// queue keeps its remaining requests in order, so deadlines stay
+    /// monotone for what stays behind.
     pub fn steal_oldest(&mut self, k: usize) -> Vec<Request> {
-        let mut all: Vec<(u64, u64, usize)> = self
+        let mut all: Vec<(u64, u64, (u32, usize))> = self
             .queues
             .iter()
-            .flat_map(|(&point, q)| q.iter().map(move |r| (r.arrival, r.id, point)))
+            .flat_map(|(&key, q)| q.iter().map(move |r| (r.arrival, r.id, key)))
             .collect();
         all.sort_unstable();
         all.truncate(k);
         let mut stolen = Vec::with_capacity(all.len());
-        for (_, id, point) in all {
-            if let Some(q) = self.queues.get_mut(&point) {
+        for (_, id, key) in all {
+            if let Some(q) = self.queues.get_mut(&key) {
                 if let Some(i) = q.iter().position(|r| r.id == id) {
                     stolen.push(q.remove(i));
                 }
                 if q.is_empty() {
-                    self.queues.remove(&point);
+                    self.queues.remove(&key);
                 }
             }
         }
         stolen
     }
 
-    /// Flush everything that remains, in `point` order.
+    /// Flush everything that remains, in (model, point) order.
     pub fn drain(&mut self, now: u64) -> Vec<Batch> {
-        let points: Vec<usize> = self.queues.keys().copied().collect();
-        points.into_iter().map(|p| self.flush(p, now)).collect()
+        let keys: Vec<(u32, usize)> = self.queues.keys().copied().collect();
+        keys.into_iter().map(|k| self.flush(k, now)).collect()
     }
 
-    fn flush(&mut self, point: usize, now: u64) -> Batch {
-        let requests = self.queues.remove(&point).unwrap_or_default();
-        Batch { point, flushed_at: now, requests }
+    fn flush(&mut self, key: (u32, usize), now: u64) -> Batch {
+        let requests = self.queues.remove(&key).unwrap_or_default();
+        *self.served.entry(key.0).or_insert(0) += requests.len() as u64;
+        Batch { model: key.0, point: key.1, flushed_at: now, requests }
     }
 }
 
@@ -257,7 +301,11 @@ mod tests {
     use crate::quant::{synth_mapping_n, synth_params, KernelBackend, ParamSet, QuantPlan};
 
     fn req(id: u64, arrival: u64, point: usize) -> Request {
-        Request { id, arrival, sla: Sla::MinEnergy, point }
+        Request { id, arrival, sla: Sla::MinEnergy, model: 0, point }
+    }
+
+    fn mreq(id: u64, arrival: u64, model: u32, point: usize) -> Request {
+        Request { id, arrival, sla: Sla::MinEnergy, model, point }
     }
 
     #[test]
@@ -305,6 +353,47 @@ mod tests {
     }
 
     #[test]
+    fn batches_never_mix_models() {
+        let mut b = Batcher::new(4, 1_000);
+        assert!(b.push(mreq(0, 10, 0, 3)).is_none());
+        assert!(b.push(mreq(1, 11, 1, 3)).is_none());
+        // same frontier point, different models: two distinct queues
+        assert_eq!(b.pending_for(0, 3), 1);
+        assert_eq!(b.pending_for(1, 3), 1);
+        let out = b.drain(100);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|batch| {
+            batch.requests.iter().all(|r| r.model == batch.model)
+        }));
+    }
+
+    #[test]
+    fn due_ties_rotate_to_least_served_model() {
+        let mut b = Batcher::new(8, 100);
+        // model 1 has been served 4 requests already (fills a batch)
+        for id in 0..4 {
+            b.push(mreq(id, 1, 1, 0));
+        }
+        assert_eq!(b.drain(1).len(), 1);
+        assert_eq!(b.served_for(1), 4);
+        // both models ripen at the same deadline; the never-served
+        // model 0 must flush first despite the larger model index
+        b.push(mreq(10, 50, 1, 0));
+        b.push(mreq(11, 50, 0, 0));
+        let out = b.due(200);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].model, 0, "least-served model flushes first");
+        assert_eq!(out[1].model, 1);
+        // earlier deadlines still beat fairness: an expired queue of
+        // the busy model precedes a fresher queue of the quiet one
+        b.push(mreq(12, 300, 1, 0));
+        b.push(mreq(13, 350, 0, 0));
+        let out = b.due(1_000);
+        assert_eq!(out[0].model, 1, "deadline order dominates the tie-break");
+        assert_eq!(out[1].model, 0);
+    }
+
+    #[test]
     fn plan_cache_hits_and_lru_eviction() {
         let g = tinycnn();
         let p = Platform::diana();
@@ -313,7 +402,7 @@ mod tests {
         let maps: Vec<_> = (0..3u64).map(|s| synth_mapping_n(&g, 2, s)).collect();
         let keys: Vec<u64> = maps
             .iter()
-            .map(|m| QuantPlan::cache_key(&g.name, &p.name, m, KernelBackend::Auto))
+            .map(|m| QuantPlan::cache_key(&g.name, g.spec_hash(), &p.name, m, KernelBackend::Auto))
             .collect();
         let mut cache = PlanCache::new(2);
         for (k, m) in keys.iter().zip(&maps) {

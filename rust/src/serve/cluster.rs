@@ -32,7 +32,7 @@
 //! [`ClusterReport::deterministic_digest`] is invariant across worker
 //! thread counts and host schedules.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -55,7 +55,9 @@ use super::trace::Trace;
 use super::{advance_traced, push_traced, Admission, RetryState, SeedLookup, ServeError, ServeOpts};
 
 /// Cluster report schema version (envelope kind `cluster_report`).
-pub const CLUSTER_SCHEMA: u32 = 1;
+/// v2 added the per-(model, tenant) accounting rows (`model_rows`) and
+/// multi-model serving.
+pub const CLUSTER_SCHEMA: u32 = 2;
 
 /// Cluster-level serve knobs wrapping the per-replica [`ServeOpts`].
 #[derive(Clone, Debug)]
@@ -92,6 +94,27 @@ impl Default for ClusterOpts {
             plan_cache_cap: 8,
         }
     }
+}
+
+/// Per-(model, tenant) accounting row in the cluster dashboard (the
+/// multi-model refinement of [`TenantRow`]). The conservation identity
+/// holds per row: `arrivals == served + shed + failed`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelTenantRow {
+    /// Model name from the trace.
+    pub model: String,
+    /// Tenant label from the trace.
+    pub tenant: String,
+    /// Requests the trace carried for this (model, tenant).
+    pub arrivals: u64,
+    /// Requests served to completion.
+    pub served: u64,
+    /// Served requests that met their SLA.
+    pub sla_hits: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Requests that exhausted their retries.
+    pub failed: u64,
 }
 
 /// Per-tenant accounting row in the cluster dashboard.
@@ -148,6 +171,10 @@ pub struct ClusterReport {
     pub virtual_img_s: f64,
     /// Per-tenant accounting, sorted by tenant label.
     pub tenants: Vec<TenantRow>,
+    /// Per-(model, tenant) accounting, sorted by (model, tenant). One
+    /// group per model on single-model runs; conservation holds per
+    /// row (`arrivals == served + shed + failed`).
+    pub model_rows: Vec<ModelTenantRow>,
 }
 
 impl ClusterReport {
@@ -194,6 +221,15 @@ impl ClusterReport {
             eat(&t.shed.to_le_bytes());
             eat(&t.failed.to_le_bytes());
         }
+        for m in &self.model_rows {
+            eat(m.model.as_bytes());
+            eat(m.tenant.as_bytes());
+            eat(&m.arrivals.to_le_bytes());
+            eat(&m.served.to_le_bytes());
+            eat(&m.sla_hits.to_le_bytes());
+            eat(&m.shed.to_le_bytes());
+            eat(&m.failed.to_le_bytes());
+        }
         h
     }
 
@@ -235,6 +271,17 @@ impl ClusterReport {
                 t.tenant, t.arrivals, t.served, t.sla_hits, t.shed, t.failed
             ));
         }
+        let distinct_models =
+            self.model_rows.iter().map(|m| m.model.as_str()).collect::<BTreeSet<_>>();
+        if distinct_models.len() > 1 {
+            for m in &self.model_rows {
+                out.push_str(&format!(
+                    "  model {} / {}: {} arrived, {} served, {} sla-hit, {} shed, {} \
+                     failed\n",
+                    m.model, m.tenant, m.arrivals, m.served, m.sla_hits, m.shed, m.failed
+                ));
+            }
+        }
         out
     }
 
@@ -250,6 +297,21 @@ impl ClusterReport {
                     ("sla_hits", Json::num(t.sla_hits as f64)),
                     ("shed", Json::num(t.shed as f64)),
                     ("failed", Json::num(t.failed as f64)),
+                ])
+            })
+            .collect();
+        let model_rows = self
+            .model_rows
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("model", Json::str(m.model.clone())),
+                    ("tenant", Json::str(m.tenant.clone())),
+                    ("arrivals", Json::num(m.arrivals as f64)),
+                    ("served", Json::num(m.served as f64)),
+                    ("sla_hits", Json::num(m.sla_hits as f64)),
+                    ("shed", Json::num(m.shed as f64)),
+                    ("failed", Json::num(m.failed as f64)),
                 ])
             })
             .collect();
@@ -273,6 +335,7 @@ impl ClusterReport {
             ("makespan_ms", Json::num(self.makespan_ms)),
             ("virtual_img_s", Json::num(self.virtual_img_s)),
             ("tenants", Json::Arr(tenants)),
+            ("model_rows", Json::Arr(model_rows)),
         ])
     }
 
@@ -311,6 +374,23 @@ impl ClusterReport {
                 })
             })
             .collect::<Result<Vec<TenantRow>>>()?;
+        let model_rows = v
+            .req("model_rows")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("cluster report: model_rows must be an array"))?
+            .iter()
+            .map(|m| -> Result<ModelTenantRow> {
+                Ok(ModelTenantRow {
+                    model: m.req("model")?.as_str().unwrap_or("").to_string(),
+                    tenant: m.req("tenant")?.as_str().unwrap_or("").to_string(),
+                    arrivals: m.req_f64("arrivals")? as u64,
+                    served: m.req_f64("served")? as u64,
+                    sla_hits: m.req_f64("sla_hits")? as u64,
+                    shed: m.req_f64("shed")? as u64,
+                    failed: m.req_f64("failed")? as u64,
+                })
+            })
+            .collect::<Result<Vec<ModelTenantRow>>>()?;
         Ok(ClusterReport {
             model: v.req("model")?.as_str().unwrap_or("").to_string(),
             platform: v.req("platform")?.as_str().unwrap_or("").to_string(),
@@ -325,6 +405,7 @@ impl ClusterReport {
             makespan_ms: v.req_f64("makespan_ms")?,
             virtual_img_s: v.req_f64("virtual_img_s")?,
             tenants,
+            model_rows,
         })
     }
 }
@@ -349,9 +430,22 @@ pub fn load_cluster_report(path: &Path) -> Result<ClusterReport> {
 // the deterministic multi-replica event loop
 // ---------------------------------------------------------------------------
 
+/// One model in the serving set: its graph, parameters and swept
+/// frontier, borrowed from the session for the duration of the run.
+/// Index order in the slice defines [`Request::model`].
+pub(crate) struct ClusterModel<'a> {
+    /// The model's graph.
+    pub graph: &'a Graph,
+    /// The model's weights/calibration.
+    pub params: &'a ParamSet<'a>,
+    /// The model's Pareto frontier on the serving platform.
+    pub frontier: &'a [super::FrontierPoint],
+}
+
 /// A batch the replica launched on its device window and may still
-/// extend with same-mapping joiners (continuous batching).
+/// extend with same-(model, mapping) joiners (continuous batching).
 struct InFlight {
+    model: u32,
     point: usize,
     start: u64,
     per_img: u64,
@@ -365,21 +459,33 @@ struct InFlight {
 struct Replica {
     /// Replica index (obs events carry it as the track id).
     id: u32,
-    tracker: HealthTracker,
+    /// One health tracker per model in the serving set (each with its
+    /// own independently-resolved fault plan and degraded re-mappings).
+    trackers: Vec<HealthTracker>,
     batcher: Batcher,
     stats: ServeMetrics,
     retry: RetryState,
     plans: PlanCache,
     device_free: u64,
     inflight: Option<InFlight>,
-    /// Per-point compile-ahead gate: cycle the point's plan is warm.
-    warm_at: BTreeMap<usize, u64>,
+    /// Per-(model, point) compile-ahead gate: cycle the plan is warm.
+    warm_at: BTreeMap<(u32, usize), u64>,
+}
+
+impl Replica {
+    /// Advance every model's fault tracker to `t` (a replica has one
+    /// device timeline, so all trackers move together).
+    fn advance_all(&mut self, t: u64, models: &[ClusterModel<'_>], rec: &Recorder) -> Result<()> {
+        for (mi, tracker) in self.trackers.iter_mut().enumerate() {
+            advance_traced(tracker, t, models[mi].graph, rec, self.id)?;
+        }
+        Ok(())
+    }
 }
 
 /// Shared read-only context threaded through the event handlers.
 struct Ctx<'a> {
-    graph: &'a Graph,
-    params: &'a ParamSet<'a>,
+    models: &'a [ClusterModel<'a>],
     pool: &'a ThreadPool,
     opts: &'a ClusterOpts,
     seeds: SeedLookup<'a>,
@@ -414,13 +520,20 @@ fn route(replicas: &[Replica], now: u64) -> usize {
     best
 }
 
-/// First-flush compile gate for `point`: the cycle its plan is warm.
-/// A zero-cycle gate is free and is not counted as a cold compile.
-fn warm_gate(rep: &mut Replica, point: usize, t: u64, compile_cycles: u64, cold: &mut u64) -> u64 {
+/// First-flush compile gate for `(model, point)`: the cycle its plan
+/// is warm. A zero-cycle gate is free and not counted as cold.
+fn warm_gate(
+    rep: &mut Replica,
+    model: u32,
+    point: usize,
+    t: u64,
+    compile_cycles: u64,
+    cold: &mut u64,
+) -> u64 {
     if compile_cycles == 0 {
         return t;
     }
-    *rep.warm_at.entry(point).or_insert_with(|| {
+    *rep.warm_at.entry((model, point)).or_insert_with(|| {
         *cold += 1;
         t.saturating_add(compile_cycles)
     })
@@ -430,11 +543,13 @@ fn warm_gate(rep: &mut Replica, point: usize, t: u64, compile_cycles: u64, cold:
 /// window (continuous mode, device idle) or execute it flush-style on
 /// the virtual timeline behind whatever is already running.
 fn handle_batch(rep: &mut Replica, b: &Batch, ctx: &Ctx<'_>, cold: &mut u64) -> Result<()> {
-    let gate = warm_gate(rep, b.point, b.flushed_at, ctx.opts.compile_cycles, cold);
+    let gate = warm_gate(rep, b.model, b.point, b.flushed_at, ctx.opts.compile_cycles, cold);
+    let mi = b.model as usize;
     if ctx.opts.continuous && rep.inflight.is_none() {
         let start = b.flushed_at.max(rep.device_free).max(gate);
-        let fp = &rep.tracker.points[b.point];
-        let factor = rep.tracker.exec_factor(b.point, start);
+        let tracker = &rep.trackers[mi];
+        let fp = &tracker.points[b.point];
+        let factor = tracker.exec_factor(b.point, start);
         let per_img = if factor > 1.0 {
             (fp.cycles as f64 * factor).ceil() as u64
         } else {
@@ -443,6 +558,7 @@ fn handle_batch(rep: &mut Replica, b: &Batch, ctx: &Ctx<'_>, cold: &mut u64) -> 
         let done = start + ctx.opts.serve.launch_cycles + per_img * b.requests.len() as u64;
         rep.device_free = done;
         rep.inflight = Some(InFlight {
+            model: b.model,
             point: b.point,
             start,
             per_img,
@@ -455,9 +571,9 @@ fn handle_batch(rep: &mut Replica, b: &Batch, ctx: &Ctx<'_>, cold: &mut u64) -> 
     rep.device_free = rep.device_free.max(gate);
     super::exec_batch(
         b,
-        ctx.graph,
-        ctx.params,
-        &rep.tracker,
+        ctx.models[mi].graph,
+        ctx.models[mi].params,
+        &rep.trackers[mi],
         &ctx.opts.serve,
         &ctx.seeds,
         ctx.pool,
@@ -478,9 +594,10 @@ fn serve_on(rep: &mut Replica, q: Request, ctx: &Ctx<'_>, cold: &mut u64) -> Res
     if ctx.opts.continuous {
         if let Some(inf) = rep.inflight.as_mut() {
             // joining is only sound while the window is still open
-            // (now < done), has capacity, runs the same plan, and no
-            // later batch already queued behind it on the device
-            if inf.point == q.point
+            // (now < done), has capacity, runs the same model's plan,
+            // and no later batch already queued behind it on the device
+            if inf.model == q.model
+                && inf.point == q.point
                 && inf.requests.len() < ctx.opts.serve.max_batch
                 && q.arrival < inf.done
                 && rep.device_free == inf.done
@@ -510,7 +627,9 @@ fn serve_on(rep: &mut Replica, q: Request, ctx: &Ctx<'_>, cold: &mut u64) -> Res
 /// stays monotone (the window's real start/done ride in the payload).
 fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>, ev_now: u64) -> Result<()> {
     let bsz = inf.requests.len();
-    if let Some(abort_at) = rep.tracker.abort_cycle(inf.point, inf.start, inf.done) {
+    let mi = inf.model as usize;
+    let (graph, params) = (ctx.models[mi].graph, ctx.models[mi].params);
+    if let Some(abort_at) = rep.trackers[mi].abort_cycle(inf.point, inf.start, inf.done) {
         rep.stats.registry_mut().inc(ctr::BATCH_ABORTS);
         ctx.rec.virt(rep.id, ev_now, EventKind::BatchAbort { point: inf.point, at: abort_at });
         if rep.device_free == inf.done {
@@ -532,15 +651,21 @@ fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>, ev_now: u6
         }
         return Ok(());
     }
-    let fp = &rep.tracker.points[inf.point];
-    let platform = rep.tracker.platform_for(inf.point);
-    let (c, h, w) = ctx.graph.input_shape;
+    let fp = &rep.trackers[mi].points[inf.point];
+    let platform = rep.trackers[mi].platform_for(inf.point);
+    let (c, h, w) = graph.input_shape;
     let mut x = Vec::with_capacity(bsz * c * h * w);
     for r in &inf.requests {
-        let cls = (r.id % ctx.graph.classes as u64) as u32;
+        let cls = (r.id % graph.classes as u64) as u32;
         x.extend_from_slice(&gen_sample(ctx.seeds.seed_for(r.id), 1, r.id, cls, h, w));
     }
-    let key = QuantPlan::cache_key(&ctx.graph.name, &platform.name, &fp.mapping, ctx.backend);
+    let key = QuantPlan::cache_key(
+        &graph.name,
+        graph.spec_hash(),
+        &platform.name,
+        &fp.mapping,
+        ctx.backend,
+    );
     let compile_before = rep.plans.compile_ns;
     let misses_before = rep.plans.misses;
     let t0 = Instant::now();
@@ -549,13 +674,7 @@ fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>, ev_now: u6
     let mut traced = None;
     {
         let net = rep.plans.get_or_compile(key, &fp.mapping, || {
-            QuantNet::compile_params_backend(
-                ctx.params,
-                ctx.graph,
-                &fp.mapping,
-                platform,
-                ctx.backend,
-            )
+            QuantNet::compile_params_backend(params, graph, &fp.mapping, platform, ctx.backend)
         })?;
         if ctx.rec.full() {
             let t_ns = ctx.rec.now_ns();
@@ -603,6 +722,7 @@ fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>, ev_now: u6
             rep.id,
             ev_now,
             EventKind::BatchExec {
+                model: graph.name.clone(),
                 point: inf.point,
                 label: fp.label.clone(),
                 start: inf.start,
@@ -624,11 +744,12 @@ fn complete_inflight(rep: &mut Replica, inf: InFlight, ctx: &Ctx<'_>, ev_now: u6
             Sla::MinEnergy => true,
             Sla::LatencyBudget(b) => total <= b,
         };
-        let degraded = rep.tracker.is_degraded_point(inf.point)
+        let degraded = rep.trackers[mi].is_degraded_point(inf.point)
             || inf.derated
             || rep.retry.degraded_ids.contains(&r.id);
         rep.stats.record(RequestOutcome {
             id: r.id,
+            model: inf.model,
             point: inf.point,
             queue_cycles: inf.start.saturating_sub(orig),
             compute_cycles: compute,
@@ -651,8 +772,9 @@ fn dispatch_or_retry(
     ctx: &Ctx<'_>,
     cold: &mut u64,
 ) -> Result<()> {
+    let mi = r.model as usize;
     let d = {
-        let tr = &rep.tracker;
+        let tr = &rep.trackers[mi];
         dispatch_filtered(&tr.points, |x| tr.enabled[x], r.sla)
     };
     match d {
@@ -664,7 +786,7 @@ fn dispatch_or_retry(
                     EventKind::Dispatch {
                         req: r.id,
                         point: d.point,
-                        label: rep.tracker.points[d.point].label.clone(),
+                        label: rep.trackers[mi].points[d.point].label.clone(),
                         sla_met: d.sla_met,
                         degraded: rep.retry.degraded_ids.contains(&r.id),
                     },
@@ -678,11 +800,11 @@ fn dispatch_or_retry(
                 now,
                 EventKind::DispatchDefer {
                     req: r.id,
-                    enabled: rep.tracker.enabled_count(),
-                    total: rep.tracker.points.len(),
+                    enabled: rep.trackers[mi].enabled_count(),
+                    total: rep.trackers[mi].points.len(),
                 },
             );
-            let at = rep.tracker.next_change_after(now);
+            let at = rep.trackers[mi].next_change_after(now);
             rep.retry.schedule(
                 &r,
                 at,
@@ -744,7 +866,7 @@ fn steal_pass(
             now,
             EventKind::Steal { from: vict.id, to: thief.id, moved: stolen.len() },
         );
-        advance_traced(&mut thief.tracker, now, ctx.graph, ctx.rec, thief.id)?;
+        thief.advance_all(now, ctx.models, ctx.rec)?;
         for r in stolen {
             // queue time and SLA accounting span the move: the thief
             // inherits the request's first arrival, attempt count and
@@ -765,8 +887,11 @@ fn steal_pass(
     Ok(())
 }
 
-/// Run the deterministic multi-replica closed loop over `trace`.
-/// Crate-internal: the public surface is
+/// Run the deterministic multi-replica closed loop over `trace` for a
+/// single model. Thin wrapper over [`run_cluster_multi`]; with one
+/// model every multi-model code path degenerates to the historical
+/// behavior, so reports and digests are unchanged. Crate-internal: the
+/// public surface is
 /// [`Session::serve_cluster`](crate::api::Session::serve_cluster).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_cluster(
@@ -780,29 +905,57 @@ pub(crate) fn run_cluster(
     backend: KernelBackend,
     rec: &Recorder,
 ) -> Result<ClusterReport> {
-    if frontier.is_empty() {
-        return Err(ServeError::EmptyFrontier {
-            model: graph.name.clone(),
-            platform: platform.name.clone(),
-        }
-        .into());
+    run_cluster_multi(
+        &[ClusterModel { graph, params, frontier }],
+        platform,
+        pool,
+        trace,
+        opts,
+        backend,
+        rec,
+    )
+}
+
+/// The multi-model closed loop: every replica serves the whole model
+/// set (one health tracker per model, a shared batcher keyed by
+/// (model, point), one device timeline), and each trace record routes
+/// to its model by name. Crate-internal: the public surface is
+/// [`Session::serve_multi`](crate::api::Session::serve_multi).
+pub(crate) fn run_cluster_multi(
+    models: &[ClusterModel<'_>],
+    platform: &Platform,
+    pool: &ThreadPool,
+    trace: &Trace,
+    opts: &ClusterOpts,
+    backend: KernelBackend,
+    rec: &Recorder,
+) -> Result<ClusterReport> {
+    if models.is_empty() {
+        return Err(anyhow!("cluster: the serving set has no models"));
     }
-    for (i, record) in trace.records.iter().enumerate() {
-        if record.model != graph.name {
-            return Err(anyhow!(
-                "cluster: trace record {} targets model '{}' but the session serves '{}'",
-                i,
-                record.model,
-                graph.name
-            ));
+    for m in models {
+        if m.frontier.is_empty() {
+            return Err(ServeError::EmptyFrontier {
+                model: m.graph.name.clone(),
+                platform: platform.name.clone(),
+            }
+            .into());
         }
     }
+    let names: Vec<String> = models.iter().map(|m| m.graph.name.clone()).collect();
+    let reqs = trace.to_requests_routed(&names).map_err(|i| {
+        anyhow!(
+            "cluster: trace record {} targets model '{}' but the session serves {:?}",
+            i,
+            trace.records[i].model,
+            names
+        )
+    })?;
     let n_replicas = opts.replicas.max(1);
     let seed_table = trace.seeds();
     let fallback = seed_table.first().copied().unwrap_or(0);
     let ctx = Ctx {
-        graph,
-        params,
+        models,
         pool,
         opts,
         seeds: SeedLookup::PerRequest { seeds: &seed_table, fallback },
@@ -811,16 +964,22 @@ pub(crate) fn run_cluster(
     };
     let mut replicas = Vec::with_capacity(n_replicas);
     for id in 0..n_replicas {
-        let resolved = match &opts.serve.fault_plan {
-            Some(plan) => Some(plan.resolve(platform)?),
-            None => None,
-        };
-        let tracker = HealthTracker::new(frontier, platform, resolved, graph);
+        let mut trackers = Vec::with_capacity(models.len());
+        let mut n_events = 0u64;
+        for m in models {
+            let resolved = match &opts.serve.fault_plan {
+                Some(plan) => Some(plan.resolve(platform)?),
+                None => None,
+            };
+            let tracker = HealthTracker::new(m.frontier, platform, resolved, m.graph);
+            n_events += tracker.n_events() as u64;
+            trackers.push(tracker);
+        }
         let mut stats = ServeMetrics::new();
-        stats.registry_mut().set(ctr::FAULTS_INJECTED, tracker.n_events() as u64);
+        stats.registry_mut().set(ctr::FAULTS_INJECTED, n_events);
         replicas.push(Replica {
             id: id as u32,
-            tracker,
+            trackers,
             batcher: Batcher::new(opts.serve.max_batch, opts.serve.max_wait),
             stats,
             retry: RetryState::new(),
@@ -831,7 +990,6 @@ pub(crate) fn run_cluster(
         });
     }
 
-    let reqs = trace.to_requests();
     let mut dispatched = vec![0u64; n_replicas];
     let mut shed_ids: Vec<u64> = Vec::new();
     let mut cold_compiles = 0u64;
@@ -880,7 +1038,7 @@ pub(crate) fn run_cluster(
                 if let Some(inf) = rep.inflight.take() {
                     let ev_now = tail_now.max(inf.done);
                     tail_now = ev_now;
-                    advance_traced(&mut rep.tracker, inf.done, graph, rec, rep.id)?;
+                    rep.advance_all(inf.done, models, rec)?;
                     complete_inflight(rep, inf, &ctx, ev_now)?;
                 }
             }
@@ -913,7 +1071,7 @@ pub(crate) fn run_cluster(
             0 => {
                 tail_now = tail_now.max(now);
                 let rep = &mut replicas[j];
-                advance_traced(&mut rep.tracker, now, graph, rec, rep.id)?;
+                rep.advance_all(now, models, rec)?;
                 for r in rep.retry.pop_at(now) {
                     dispatch_or_retry(rep, r, now, &ctx, &mut cold_compiles)?;
                 }
@@ -925,10 +1083,10 @@ pub(crate) fn run_cluster(
                 let target = route(&replicas, now);
                 dispatched[target] += 1;
                 let rep = &mut replicas[target];
-                advance_traced(&mut rep.tracker, r.arrival, graph, rec, rep.id)?;
+                rep.advance_all(r.arrival, models, rec)?;
                 let wait = rep.device_free.saturating_sub(r.arrival);
                 let decision = {
-                    let tr = &rep.tracker;
+                    let tr = &rep.trackers[r.model as usize];
                     let keep = |x: usize| tr.enabled[x];
                     if wait > opts.serve.admission.overload_wait {
                         match r.sla {
@@ -973,7 +1131,9 @@ pub(crate) fn run_cluster(
                                 EventKind::Dispatch {
                                     req: r.id,
                                     point,
-                                    label: rep.tracker.points[point].label.clone(),
+                                    label: rep.trackers[r.model as usize].points[point]
+                                        .label
+                                        .clone(),
                                     sla_met,
                                     degraded,
                                 },
@@ -996,11 +1156,11 @@ pub(crate) fn run_cluster(
                             r.arrival,
                             EventKind::DispatchDefer {
                                 req: r.id,
-                                enabled: rep.tracker.enabled_count(),
-                                total: rep.tracker.points.len(),
+                                enabled: rep.trackers[r.model as usize].enabled_count(),
+                                total: rep.trackers[r.model as usize].points.len(),
                             },
                         );
-                        let at = rep.tracker.next_change_after(r.arrival);
+                        let at = rep.trackers[r.model as usize].next_change_after(r.arrival);
                         rep.retry.schedule(
                             &r,
                             at,
@@ -1033,7 +1193,7 @@ pub(crate) fn run_cluster(
             _ => {
                 tail_now = tail_now.max(now);
                 let rep = &mut replicas[j];
-                advance_traced(&mut rep.tracker, now, graph, rec, rep.id)?;
+                rep.advance_all(now, models, rec)?;
                 if let Some(inf) = rep.inflight.take() {
                     complete_inflight(rep, inf, &ctx, now)?;
                 }
@@ -1051,6 +1211,7 @@ pub(crate) fn run_cluster(
 
     // fold per-replica stats into reports + cluster aggregates
     let mut tenants: BTreeMap<String, TenantRow> = BTreeMap::new();
+    let mut model_rows: BTreeMap<(String, String), ModelTenantRow> = BTreeMap::new();
     for record in &trace.records {
         tenants
             .entry(record.tenant.clone())
@@ -1063,8 +1224,23 @@ pub(crate) fn run_cluster(
                 failed: 0,
             })
             .arrivals += 1;
+        model_rows
+            .entry((record.model.clone(), record.tenant.clone()))
+            .or_insert_with(|| ModelTenantRow {
+                model: record.model.clone(),
+                tenant: record.tenant.clone(),
+                arrivals: 0,
+                served: 0,
+                sla_hits: 0,
+                shed: 0,
+                failed: 0,
+            })
+            .arrivals += 1;
     }
     let tenant_of = |id: u64| trace.records.get(id as usize).map(|r| r.tenant.as_str());
+    let model_key_of = |id: u64| {
+        trace.records.get(id as usize).map(|r| (r.model.clone(), r.tenant.clone()))
+    };
     let mut reports = Vec::with_capacity(n_replicas);
     let mut total_served = 0u64;
     let mut total_shed = 0u64;
@@ -1089,14 +1265,24 @@ pub(crate) fn run_cluster(
                     t.sla_hits += 1;
                 }
             }
+            if let Some(m) = model_key_of(o.id).and_then(|k| model_rows.get_mut(&k)) {
+                m.served += 1;
+                if o.sla_met {
+                    m.sla_hits += 1;
+                }
+            }
         }
-        let rep_labels: Vec<String> =
-            rep.tracker.points.iter().map(|p| p.label.clone()).collect();
-        reports.push(rep.stats.report(
-            &graph.name,
+        let model_labels: Vec<(String, Vec<String>)> = names
+            .iter()
+            .zip(&rep.trackers)
+            .map(|(name, tracker)| {
+                (name.clone(), tracker.points.iter().map(|p| p.label.clone()).collect())
+            })
+            .collect();
+        reports.push(rep.stats.report_multi(
+            &model_labels,
             &platform.name,
             pool.threads(),
-            &rep_labels,
             platform.f_clk_hz,
         ));
     }
@@ -1104,9 +1290,15 @@ pub(crate) fn run_cluster(
         if let Some(t) = tenant_of(*id).and_then(|t| tenants.get_mut(t)) {
             t.shed += 1;
         }
+        if let Some(m) = model_key_of(*id).and_then(|k| model_rows.get_mut(&k)) {
+            m.shed += 1;
+        }
     }
     for t in tenants.values_mut() {
         t.failed = t.arrivals.saturating_sub(t.served + t.shed);
+    }
+    for m in model_rows.values_mut() {
+        m.failed = m.arrivals.saturating_sub(m.served + m.shed);
     }
     let accounted = total_served + total_shed + total_failed;
     if accounted != trace.len() as u64 {
@@ -1126,7 +1318,7 @@ pub(crate) fn run_cluster(
         0.0
     };
     Ok(ClusterReport {
-        model: graph.name.clone(),
+        model: names.join("+"),
         platform: platform.name.clone(),
         replicas: reports,
         dispatched,
@@ -1139,5 +1331,6 @@ pub(crate) fn run_cluster(
         makespan_ms,
         virtual_img_s,
         tenants: tenants.into_values().collect(),
+        model_rows: model_rows.into_values().collect(),
     })
 }

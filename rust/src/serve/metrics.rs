@@ -43,9 +43,10 @@ pub const SERVE_SCHEMA: u32 = 2;
 /// fields that old readers may ignore and old files may lack. v2.1
 /// added the run-level queue-wait / engine-compute latency split
 /// (`mean_queue_ms`, `mean_compute_ms`); v2.2 added the per-tenant
-/// rows (`tenant_rows`). Loaders default all of them when reading an
-/// older file.
-pub const SERVE_SCHEMA_MINOR: u32 = 2;
+/// rows (`tenant_rows`); v2.3 added the per-model rows (`model_rows`,
+/// the multi-model serve plane). Loaders default all of them when
+/// reading an older file.
+pub const SERVE_SCHEMA_MINOR: u32 = 3;
 
 /// Serving tenant class, derived from the request's SLA: latency-budget
 /// requests are the interactive tenant, min-energy requests the batch
@@ -93,7 +94,10 @@ impl Tenant {
 pub struct RequestOutcome {
     /// Request id.
     pub id: u64,
-    /// Frontier index the request was served under.
+    /// Model index in the serving set (0 on single-model planes).
+    pub model: u32,
+    /// Frontier index the request was served under (point indices are
+    /// per-model: two models may both have a point 0).
     pub point: usize,
     /// Cycles spent queued (batching wait + device contention).
     pub queue_cycles: u64,
@@ -166,7 +170,9 @@ impl ServeMetrics {
 
     /// Fold the collected outcomes into a renderable report. `labels`
     /// are the frontier point labels (row names); `f_clk_hz` converts
-    /// cycles to milliseconds for the dashboard.
+    /// cycles to milliseconds for the dashboard. Single-model shim over
+    /// [`ServeMetrics::report_multi`] — row labels stay unprefixed, so
+    /// pre-multi-model reports (and their digests) are unchanged.
     pub fn report(
         &self,
         model: &str,
@@ -175,28 +181,66 @@ impl ServeMetrics {
         labels: &[String],
         f_clk_hz: f64,
     ) -> ServeReport {
+        self.report_multi(&[(model.to_string(), labels.to_vec())], platform, threads, f_clk_hz)
+    }
+
+    /// Multi-model fold: `models` holds one (name, frontier labels)
+    /// pair per model index, matching [`RequestOutcome::model`]. With
+    /// several models the per-mapping rows are labeled
+    /// `model:label` (point indices collide across models, names do
+    /// not) and a per-model summary table rides in
+    /// [`ServeReport::model_rows`].
+    pub fn report_multi(
+        &self,
+        models: &[(String, Vec<String>)],
+        platform: &str,
+        threads: usize,
+        f_clk_hz: f64,
+    ) -> ServeReport {
         let to_ms = |cycles: u64| cycles as f64 / f_clk_hz * 1e3;
         let to_ms_f = |cycles: f64| cycles / f_clk_hz * 1e3;
+        let multi = models.len() > 1;
         let mut rows: Vec<PointRow> = Vec::new();
-        for (point, label) in labels.iter().enumerate() {
-            let outs: Vec<&RequestOutcome> =
-                self.outcomes.iter().filter(|o| o.point == point).collect();
-            if outs.is_empty() {
-                continue;
+        let mut model_rows: Vec<ModelRow> = Vec::new();
+        for (mi, (mname, labels)) in models.iter().enumerate() {
+            for (point, label) in labels.iter().enumerate() {
+                let outs: Vec<&RequestOutcome> = self
+                    .outcomes
+                    .iter()
+                    .filter(|o| o.model as usize == mi && o.point == point)
+                    .collect();
+                if outs.is_empty() {
+                    continue;
+                }
+                let mut lats: Vec<u64> =
+                    outs.iter().map(|o| o.queue_cycles + o.compute_cycles).collect();
+                lats.sort_unstable();
+                let batch_sum: usize = outs.iter().map(|o| o.batch_size).sum();
+                rows.push(PointRow {
+                    label: if multi { format!("{mname}:{label}") } else { label.clone() },
+                    requests: outs.len(),
+                    sla_hits: outs.iter().filter(|o| o.sla_met).count(),
+                    mean_batch: batch_sum as f64 / outs.len() as f64,
+                    p50_ms: to_ms(percentile(&lats, 50)),
+                    p95_ms: to_ms(percentile(&lats, 95)),
+                    energy_uj: outs.iter().map(|o| o.energy_uj).sum(),
+                });
             }
-            let mut lats: Vec<u64> =
-                outs.iter().map(|o| o.queue_cycles + o.compute_cycles).collect();
-            lats.sort_unstable();
-            let batch_sum: usize = outs.iter().map(|o| o.batch_size).sum();
-            rows.push(PointRow {
-                label: label.clone(),
-                requests: outs.len(),
-                sla_hits: outs.iter().filter(|o| o.sla_met).count(),
-                mean_batch: batch_sum as f64 / outs.len() as f64,
-                p50_ms: to_ms(percentile(&lats, 50)),
-                p95_ms: to_ms(percentile(&lats, 95)),
-                energy_uj: outs.iter().map(|o| o.energy_uj).sum(),
-            });
+            let outs: Vec<&RequestOutcome> =
+                self.outcomes.iter().filter(|o| o.model as usize == mi).collect();
+            if !outs.is_empty() {
+                let mut lats: Vec<u64> =
+                    outs.iter().map(|o| o.queue_cycles + o.compute_cycles).collect();
+                lats.sort_unstable();
+                model_rows.push(ModelRow {
+                    model: mname.clone(),
+                    requests: outs.len(),
+                    sla_hits: outs.iter().filter(|o| o.sla_met).count(),
+                    p50_ms: to_ms(percentile(&lats, 50)),
+                    p95_ms: to_ms(percentile(&lats, 95)),
+                    energy_uj: outs.iter().map(|o| o.energy_uj).sum(),
+                });
+            }
         }
         let mut tenant_rows: Vec<TenantLatencyRow> = Vec::new();
         for t in Tenant::ALL {
@@ -228,11 +272,12 @@ impl ServeMetrics {
         deg_lats.sort_unstable();
         let wall_s = self.reg.counter(ctr::ENGINE_WALL_NS) as f64 * 1e-9;
         ServeReport {
-            model: model.to_string(),
+            model: models.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join("+"),
             platform: platform.to_string(),
             threads,
             rows,
             tenant_rows,
+            model_rows,
             total_requests: n,
             total_batches: self.reg.counter(ctr::BATCHES) as usize,
             p50_ms: to_ms_f(self.reg.percentile(hist::LATENCY_CYCLES, 50)),
@@ -324,6 +369,26 @@ pub struct TenantLatencyRow {
     pub p95_ms: f64,
 }
 
+/// One per-model dashboard row (multi-model serve plane). Added in
+/// v2.3; excluded from [`ServeReport::deterministic_digest`] for the
+/// same reason as the tenant rows — derived from the already-digested
+/// outcome stream.
+#[derive(Clone, Debug)]
+pub struct ModelRow {
+    /// Model name.
+    pub model: String,
+    /// Requests served for this model.
+    pub requests: usize,
+    /// Served requests that met their SLA.
+    pub sla_hits: usize,
+    /// Median queue+compute latency, ms.
+    pub p50_ms: f64,
+    /// 95th-percentile queue+compute latency, ms.
+    pub p95_ms: f64,
+    /// Total simulated energy attributed to this model, uJ.
+    pub energy_uj: f64,
+}
+
 /// A finished serve run, ready to render or persist.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -337,6 +402,9 @@ pub struct ServeReport {
     pub rows: Vec<PointRow>,
     /// Per-tenant rows (only tenants that appeared in the run).
     pub tenant_rows: Vec<TenantLatencyRow>,
+    /// Per-model rows (only models that served requests; one row on a
+    /// single-model plane). Added in v2.3; derived, not digested.
+    pub model_rows: Vec<ModelRow>,
     /// Requests served.
     pub total_requests: usize,
     /// Batches executed.
@@ -451,6 +519,23 @@ impl ServeReport {
                 100.0 * r.sla_hits as f64 / r.requests.max(1) as f64
             );
         }
+        if self.model_rows.len() > 1 {
+            let _ = writeln!(s);
+            let _ = writeln!(s, "| model | req | p50 [ms] | p95 [ms] | E [uJ] | SLA |");
+            let _ = writeln!(s, "|-------|-----|----------|----------|--------|-----|");
+            for m in &self.model_rows {
+                let _ = writeln!(
+                    s,
+                    "| {} | {} | {:.3} | {:.3} | {:.1} | {:.1}% |",
+                    m.model,
+                    m.requests,
+                    m.p50_ms,
+                    m.p95_ms,
+                    m.energy_uj,
+                    100.0 * m.sla_hits as f64 / m.requests.max(1) as f64
+                );
+            }
+        }
         if !self.tenant_rows.is_empty() {
             let _ = writeln!(s);
             let _ = writeln!(s, "| tenant | req | shed | p50 [ms] | p95 [ms] | SLA |");
@@ -559,12 +644,27 @@ impl ServeReport {
                 ])
             })
             .collect();
+        let models = self
+            .model_rows
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("model", Json::str(m.model.clone())),
+                    ("requests", Json::num(m.requests as f64)),
+                    ("sla_hits", Json::num(m.sla_hits as f64)),
+                    ("p50_ms", Json::num(m.p50_ms)),
+                    ("p95_ms", Json::num(m.p95_ms)),
+                    ("energy_uj", Json::num(m.energy_uj)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("model", Json::str(self.model.clone())),
             ("platform", Json::str(self.platform.clone())),
             ("threads", Json::num(self.threads as f64)),
             ("rows", Json::Arr(rows)),
             ("tenant_rows", Json::Arr(tenants)),
+            ("model_rows", Json::Arr(models)),
             ("total_requests", Json::num(self.total_requests as f64)),
             ("total_batches", Json::num(self.total_batches as f64)),
             ("p50_ms", Json::num(self.p50_ms)),
@@ -624,12 +724,30 @@ impl ServeReport {
                 .collect::<Result<Vec<TenantLatencyRow>>>()?,
             None => Vec::new(),
         };
+        // v2.3 addition: lenient so v2.0..v2.2 files still load
+        let model_rows = match v.get("model_rows").and_then(|t| t.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .map(|m| -> Result<ModelRow> {
+                    Ok(ModelRow {
+                        model: m.req("model")?.as_str().unwrap_or("").to_string(),
+                        requests: m.req_f64("requests")? as usize,
+                        sla_hits: m.req_f64("sla_hits")? as usize,
+                        p50_ms: m.req_f64("p50_ms")?,
+                        p95_ms: m.req_f64("p95_ms")?,
+                        energy_uj: m.req_f64("energy_uj")?,
+                    })
+                })
+                .collect::<Result<Vec<ModelRow>>>()?,
+            None => Vec::new(),
+        };
         Ok(ServeReport {
             model: v.req("model")?.as_str().unwrap_or("").to_string(),
             platform: v.req("platform")?.as_str().unwrap_or("").to_string(),
             threads: v.req_f64("threads")? as usize,
             rows,
             tenant_rows,
+            model_rows,
             total_requests: v.req_f64("total_requests")? as usize,
             total_batches: v.req_f64("total_batches")? as usize,
             p50_ms: v.req_f64("p50_ms")?,
@@ -674,6 +792,7 @@ mod tests {
     fn outcome(point: usize, queue: u64, compute: u64, met: bool) -> RequestOutcome {
         RequestOutcome {
             id: 0,
+            model: 0,
             point,
             queue_cycles: queue,
             compute_cycles: compute,
@@ -754,6 +873,39 @@ mod tests {
     }
 
     #[test]
+    fn multi_model_report_prefixes_rows_and_partitions_models() {
+        let mut m = ServeMetrics::new();
+        m.record(outcome(0, 10, 100, true));
+        m.record(RequestOutcome { model: 1, ..outcome(0, 20, 300, true) });
+        m.record(RequestOutcome { model: 1, ..outcome(1, 40, 300, false) });
+        let models = vec![
+            ("alpha".to_string(), vec!["a0".to_string()]),
+            ("beta".to_string(), vec!["b0".to_string(), "b1".to_string()]),
+        ];
+        let rep = m.report_multi(&models, "diana", 2, 1e6);
+        assert_eq!(rep.model, "alpha+beta");
+        // point 0 exists in both models: the rows must not merge
+        let labels: Vec<&str> = rep.rows.iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, vec!["alpha:a0", "beta:b0", "beta:b1"]);
+        assert_eq!(rep.rows[0].requests, 1);
+        assert_eq!(rep.model_rows.len(), 2);
+        assert_eq!(rep.model_rows[0].model, "alpha");
+        assert_eq!(rep.model_rows[0].requests, 1);
+        assert_eq!(rep.model_rows[1].model, "beta");
+        assert_eq!(rep.model_rows[1].requests, 2);
+        assert_eq!(rep.model_rows[1].sla_hits, 1);
+        let sum: usize = rep.model_rows.iter().map(|r| r.requests).sum();
+        assert_eq!(sum, rep.total_requests, "models partition the served requests");
+        let dash = rep.dashboard();
+        assert!(dash.contains("| alpha | 1 |"), "{dash}");
+        assert!(dash.contains("| beta | 2 |"), "{dash}");
+        // single-model reports keep unprefixed labels and one model row
+        let single = m.report("alpha", "diana", 2, &["a0".to_string(), "a1".to_string()], 1e6);
+        assert!(single.rows.iter().all(|r| !r.label.contains(':')), "no prefix");
+        assert_eq!(single.model_rows.len(), 1);
+    }
+
+    #[test]
     fn report_json_roundtrip() {
         let mut m = ServeMetrics::new();
         m.record(outcome(0, 5, 20, true));
@@ -826,8 +978,9 @@ mod tests {
         // v2.1 split fields are derived, not digested
         other.mean_queue_ms += 1.0;
         other.mean_compute_ms += 1.0;
-        // v2.2 tenant rows are derived, not digested
+        // v2.2 tenant rows / v2.3 model rows are derived, not digested
         other.tenant_rows.clear();
+        other.model_rows.clear();
         assert_eq!(other.deterministic_digest(), rep.deterministic_digest());
         other.shed_requests += 1;
         assert_ne!(other.deterministic_digest(), rep.deterministic_digest());

@@ -45,13 +45,15 @@ pub mod cluster;
 pub mod dispatch;
 pub mod health;
 pub mod metrics;
+pub mod multi;
 pub mod sweep;
 pub mod trace;
 
-pub use cluster::{ClusterOpts, ClusterReport, TenantRow};
+pub use cluster::{ClusterOpts, ClusterReport, ModelTenantRow, TenantRow};
 pub use dispatch::{dispatch, dispatch_filtered, Decision, Sla};
 pub use health::AdmissionCfg;
-pub use metrics::{ServeMetrics, ServeReport};
+pub use metrics::{ModelRow, ServeMetrics, ServeReport};
+pub use multi::{ModelSet, ModelSlot};
 pub use sweep::{FrontierPoint, SweepCfg};
 pub use trace::{Trace, TraceError, TraceRecord};
 
@@ -261,7 +263,13 @@ impl RetryState {
                 self.q
                     .entry(t)
                     .or_default()
-                    .push(Request { id: r.id, arrival: t, sla: r.sla, point: r.point });
+                    .push(Request {
+                        id: r.id,
+                        arrival: t,
+                        sla: r.sla,
+                        model: r.model,
+                        point: r.point,
+                    });
             }
             _ => {
                 stats.registry_mut().inc(ctr::FAILED);
@@ -330,7 +338,8 @@ fn exec_batch(
         let cls = (r.id % graph.classes as u64) as u32;
         x.extend_from_slice(&gen_sample(seeds.seed_for(r.id), 1, r.id, cls, h, w));
     }
-    let key = QuantPlan::cache_key(&graph.name, &platform.name, &fp.mapping, backend);
+    let key =
+        QuantPlan::cache_key(&graph.name, graph.spec_hash(), &platform.name, &fp.mapping, backend);
     // engine wall time excludes plan compilation: compile cost is
     // tracked separately by the cache (and reported as its own
     // dashboard line), so img/s measures steady-state compute only
@@ -392,6 +401,7 @@ fn exec_batch(
             replica,
             start,
             EventKind::BatchExec {
+                model: graph.name.clone(),
                 point: batch.point,
                 label: fp.label.clone(),
                 start,
@@ -417,6 +427,7 @@ fn exec_batch(
             || retry.degraded_ids.contains(&r.id);
         stats.record(RequestOutcome {
             id: r.id,
+            model: batch.model,
             point: batch.point,
             queue_cycles: start - orig,
             compute_cycles: compute,
@@ -441,7 +452,7 @@ pub(crate) fn push_traced(
     replica: u32,
 ) -> Option<Batch> {
     if rec.enabled() {
-        let pending = batcher.pending_for(r.point);
+        let pending = batcher.pending_for(r.model, r.point);
         let kind = if pending == 0 {
             EventKind::BatchOpen { point: r.point }
         } else {

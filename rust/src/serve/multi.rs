@@ -1,0 +1,266 @@
+//! Multi-model serving set: owned per-model state behind the cluster
+//! driver's borrowed [`ClusterModel`](super::cluster::ClusterModel)
+//! views (docs/ARCHITECTURE.md §Import & Multi-model).
+//!
+//! A [`ModelSet`] resolves each model *spec* — a built-in name from
+//! [`ALL_MODELS`] or a path to an `odimo_graph` JSON file — into a
+//! [`ModelSlot`]: the loaded [`Graph`], its seeded synthetic parameter
+//! snapshot (the same `synth_params_on` derivation the single-model
+//! session uses, so a one-model set serves bit-identically to
+//! [`Session::serve`](crate::api::Session::serve)), and its Pareto
+//! frontier swept lazily per model through the invalidation-aware disk
+//! cache. Slot order defines the request-routing index space: slot `i`
+//! is `Request::model == i`, and trace records route to slots by graph
+//! name.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::hw::Platform;
+use crate::model::{self, Graph, ALL_MODELS};
+use crate::obs::Recorder;
+use crate::quant::{synth_params_on, ParamSet};
+use crate::serve::sweep::{self, FrontierPoint, SweepCfg};
+use crate::util::pool::ThreadPool;
+
+use super::cluster::ClusterModel;
+use super::{ServeOpts, Trace};
+
+/// One resolved model: everything the cluster driver borrows per model,
+/// owned here so the borrows in [`ClusterModel`] have a home.
+#[derive(Debug)]
+pub struct ModelSlot {
+    /// The loaded graph (built-in or imported).
+    pub graph: Graph,
+    /// Synthetic parameter names (`ParamSet` key side).
+    pub param_names: Vec<String>,
+    /// Synthetic parameter values (`ParamSet` value side).
+    pub param_values: Vec<Vec<f32>>,
+    /// Pareto frontier on the serving platform, latency-ascending.
+    pub frontier: Vec<FrontierPoint>,
+    /// Whether the frontier came from a valid disk cache.
+    pub frontier_cache_hit: bool,
+}
+
+/// The ordered serving set. Construction resolves, validates and
+/// sweeps every model once; serving borrows the slots read-only.
+#[derive(Debug)]
+pub struct ModelSet {
+    slots: Vec<ModelSlot>,
+}
+
+/// Resolve one model spec: a built-in name from [`ALL_MODELS`], or a
+/// path to an imported `odimo_graph` JSON file (anything containing a
+/// path separator or ending in `.json`).
+pub fn resolve_graph(spec: &str) -> Result<Graph> {
+    if ALL_MODELS.contains(&spec) {
+        return model::build(spec);
+    }
+    if spec.ends_with(".json") || spec.contains('/') || spec.contains('\\') {
+        return Graph::from_json_file(Path::new(spec));
+    }
+    Err(anyhow!(
+        "unknown model '{spec}' (choose from {ALL_MODELS:?} or pass a graph .json path)"
+    ))
+}
+
+impl ModelSet {
+    /// Resolve `specs` in order and sweep each model's frontier on
+    /// `platform` (through the disk cache under `results_dir`). Every
+    /// parameter snapshot derives from the same `seed` the single-model
+    /// session uses. Duplicate graph names are rejected: trace records
+    /// route by name, so the mapping must be injective.
+    pub fn load(
+        specs: &[String],
+        platform: &Platform,
+        results_dir: &Path,
+        sweep_cfg: &SweepCfg,
+        pool: &ThreadPool,
+        rec: &Recorder,
+    ) -> Result<ModelSet> {
+        if specs.is_empty() {
+            return Err(anyhow!("the serving set needs at least one model"));
+        }
+        let mut slots: Vec<ModelSlot> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let graph = resolve_graph(spec)?;
+            if slots.iter().any(|s| s.graph.name == graph.name) {
+                return Err(anyhow!(
+                    "duplicate model '{}' in the serving set (trace records route by \
+                     name, so each model may appear once)",
+                    graph.name
+                ));
+            }
+            let (param_names, param_values) = synth_params_on(&graph, platform, sweep_cfg.seed);
+            let (frontier, frontier_cache_hit) =
+                sweep::load_or_sweep(results_dir, &graph, platform, sweep_cfg, pool, rec)?;
+            if frontier.is_empty() {
+                return Err(anyhow!("empty frontier for {} on {}", graph.name, platform.name));
+            }
+            slots.push(ModelSlot {
+                graph,
+                param_names,
+                param_values,
+                frontier,
+                frontier_cache_hit,
+            });
+        }
+        Ok(ModelSet { slots })
+    }
+
+    /// The resolved slots in routing order.
+    pub fn slots(&self) -> &[ModelSlot] {
+        &self.slots
+    }
+
+    /// Graph names in routing order (slot `i` serves `Request::model
+    /// == i`).
+    pub fn names(&self) -> Vec<String> {
+        self.slots.iter().map(|s| s.graph.name.clone()).collect()
+    }
+
+    /// Models in the set.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether the set is empty (never true for a loaded set).
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Borrow every slot's parameters as `ParamSet` views, in slot
+    /// order — the caller keeps the vector alive for the duration of
+    /// the run and zips it into [`ModelSet::cluster_models`].
+    pub(crate) fn param_sets(&self) -> Vec<ParamSet<'_>> {
+        self.slots
+            .iter()
+            .map(|s| ParamSet::new(s.param_names.iter().map(|n| n.as_str()), &s.param_values))
+            .collect()
+    }
+
+    /// The borrowed per-model views the cluster driver consumes.
+    /// `params` must be this set's [`ModelSet::param_sets`] (one entry
+    /// per slot, same order).
+    pub(crate) fn cluster_models<'a>(
+        &'a self,
+        params: &'a [ParamSet<'a>],
+    ) -> Vec<ClusterModel<'a>> {
+        debug_assert_eq!(params.len(), self.slots.len());
+        self.slots
+            .iter()
+            .zip(params)
+            .map(|(s, p)| ClusterModel { graph: &s.graph, params: p, frontier: &s.frontier })
+            .collect()
+    }
+}
+
+/// Synthesize a mixed multi-model trace: `n_per_model` requests per
+/// slot via [`Trace::synth`] (slot `i` draws from `seed + i`, so the
+/// per-model streams are independent), merged by arrival cycle with
+/// ties broken by slot order. With one model this is byte-identical to
+/// `Trace::synth(opts, n, seed, frontier, name)` — the single-model
+/// pin the serve plane's digest tests rely on.
+pub fn synth_mixed(opts: &ServeOpts, n_per_model: usize, seed: u64, set: &ModelSet) -> Trace {
+    let mut tagged: Vec<(u64, usize, usize, super::TraceRecord)> = Vec::new();
+    for (mi, slot) in set.slots().iter().enumerate() {
+        let t = Trace::synth(
+            opts,
+            n_per_model,
+            seed.wrapping_add(mi as u64),
+            &slot.frontier,
+            &slot.graph.name,
+        );
+        for (ri, rec) in t.records.into_iter().enumerate() {
+            tagged.push((rec.arrival_cycle, mi, ri, rec));
+        }
+    }
+    tagged.sort_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+    Trace { records: tagged.into_iter().map(|(_, _, _, r)| r).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn resolve_rejects_unknown_bare_names() {
+        let e = resolve_graph("not_a_model").unwrap_err().to_string();
+        assert!(e.contains("unknown model"), "{e}");
+        assert!(e.contains("graph .json path"), "{e}");
+    }
+
+    #[test]
+    fn resolve_builds_every_builtin() {
+        for name in ALL_MODELS {
+            let g = resolve_graph(name).unwrap();
+            assert_eq!(&g.name, name);
+        }
+    }
+
+    #[test]
+    fn load_rejects_duplicates_and_empty_sets() {
+        let platform = Platform::diana();
+        let pool = ThreadPool::new(1);
+        let dir = std::env::temp_dir().join("odimo_multi_dup");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SweepCfg { seed: 7, calib: 4, blend_steps: 2 };
+        let rec = Recorder::disabled();
+        let e = ModelSet::load(&[], &platform, &dir, &cfg, &pool, &rec)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("at least one model"), "{e}");
+        let specs = vec!["tinycnn".to_string(), "tinycnn".to_string()];
+        let e = ModelSet::load(&specs, &platform, &dir, &cfg, &pool, &rec)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("duplicate model 'tinycnn'"), "{e}");
+    }
+
+    #[test]
+    fn load_orders_slots_by_spec_and_sweeps_each() {
+        let platform = Platform::diana();
+        let pool = ThreadPool::new(2);
+        let dir = std::env::temp_dir().join("odimo_multi_load");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SweepCfg { seed: 7, calib: 4, blend_steps: 2 };
+        let rec = Recorder::disabled();
+        let specs = vec!["tinycnn".to_string(), "resnet20".to_string()];
+        let set = ModelSet::load(&specs, &platform, &dir, &cfg, &pool, &rec).unwrap();
+        assert_eq!(set.names(), vec!["tinycnn".to_string(), "resnet20".to_string()]);
+        assert_eq!(set.len(), 2);
+        for slot in set.slots() {
+            assert!(!slot.frontier.is_empty());
+            assert!(!slot.param_names.is_empty());
+        }
+        // both frontier caches landed on disk under their own keys
+        assert!(sweep::frontier_path(&dir, "tinycnn", "diana").exists());
+        assert!(sweep::frontier_path(&dir, "resnet20", "diana").exists());
+        // the borrowed views line up with the slots
+        let params = set.param_sets();
+        let models = set.cluster_models(&params);
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].graph.name, "tinycnn");
+        assert_eq!(models[1].frontier.len(), set.slots()[1].frontier.len());
+        // a mixed synthetic trace interleaves both models sorted by
+        // arrival, and the single-model case is byte-identical to
+        // Trace::synth
+        let opts = ServeOpts::default();
+        let mixed = synth_mixed(&opts, 8, 7, &set);
+        assert_eq!(mixed.len(), 16);
+        for w in mixed.records.windows(2) {
+            assert!(w[0].arrival_cycle <= w[1].arrival_cycle);
+        }
+        assert!(mixed.records.iter().any(|r| r.model == "tinycnn"));
+        assert!(mixed.records.iter().any(|r| r.model == "resnet20"));
+        let solo_specs = vec!["tinycnn".to_string()];
+        let solo =
+            ModelSet::load(&solo_specs, &platform, &dir, &cfg, &pool, &rec).unwrap();
+        let a = synth_mixed(&opts, 8, 7, &solo);
+        let b = Trace::synth(&opts, 8, 7, &solo.slots()[0].frontier, "tinycnn");
+        assert_eq!(a, b);
+    }
+}

@@ -49,8 +49,9 @@ use crate::util::pool::ThreadPool;
 /// refuses files written under any other version. v2 added
 /// `platform_hash` ([`Platform::spec_hash`]) so an edited platform
 /// TOML invalidates the cache instead of silently reusing stale
-/// points.
-pub const FRONTIER_SCHEMA: u32 = 2;
+/// points; v3 added the symmetric `model_hash`
+/// ([`Graph::spec_hash`]) so an edited graph JSON re-sweeps too.
+pub const FRONTIER_SCHEMA: u32 = 3;
 
 /// One frontier entry: a mapping plus its three serving-axis scores.
 #[derive(Clone, Debug)]
@@ -352,23 +353,25 @@ fn point_from_json(v: &Json) -> Result<FrontierPoint> {
 }
 
 /// Persist a frontier atomically under the versioned envelope. The
-/// sweep configuration *and* the resolved platform's
-/// [`Platform::spec_hash`] are recorded alongside the points so a
-/// later load under different knobs — or against an edited platform
-/// spec — is detected, not silently reused.
+/// sweep configuration *and* both spec hashes — the resolved
+/// platform's [`Platform::spec_hash`] and the graph's
+/// [`Graph::spec_hash`] — are recorded alongside the points so a
+/// later load under different knobs, an edited platform spec, or an
+/// edited graph file is detected, not silently reused.
 pub fn save_frontier(
     path: &Path,
-    model: &str,
+    graph: &Graph,
     platform: &Platform,
     cfg: &SweepCfg,
     frontier: &[FrontierPoint],
 ) -> Result<()> {
     let payload = Json::obj(vec![
-        ("model", Json::str(model)),
+        ("model", Json::str(graph.name.clone())),
         ("platform", Json::str(platform.name.clone())),
         // strings: 64-bit values do not fit a JSON f64 exactly, and a
         // rounded seed would make the cache permanently miss
         ("platform_hash", Json::str(format!("{:016x}", platform.spec_hash()))),
+        ("model_hash", Json::str(format!("{:016x}", graph.spec_hash()))),
         ("sweep_seed", Json::str(cfg.seed.to_string())),
         ("sweep_calib", Json::num(cfg.calib as f64)),
         ("sweep_blend_steps", Json::num(cfg.blend_steps as f64)),
@@ -387,6 +390,8 @@ pub struct CachedFrontier {
     pub swept_with: SweepCfg,
     /// [`Platform::spec_hash`] of the platform the cache was swept on.
     pub platform_hash: u64,
+    /// [`Graph::spec_hash`] of the graph the cache was swept for.
+    pub model_hash: u64,
 }
 
 /// Load a cached frontier, erroring clearly on kind/schema mismatch or
@@ -404,6 +409,9 @@ pub fn load_frontier(path: &Path, model: &str, platform: &str) -> Result<CachedF
     let hash_hex = payload.req("platform_hash")?.as_str().unwrap_or("").to_string();
     let platform_hash = u64::from_str_radix(&hash_hex, 16)
         .map_err(|_| anyhow!("{}: bad platform_hash '{hash_hex}'", path.display()))?;
+    let mh_hex = payload.req("model_hash")?.as_str().unwrap_or("").to_string();
+    let model_hash = u64::from_str_radix(&mh_hex, 16)
+        .map_err(|_| anyhow!("{}: bad model_hash '{mh_hex}'", path.display()))?;
     let seed_str = payload.req("sweep_seed")?.as_str().unwrap_or("").to_string();
     let seed = seed_str
         .parse::<u64>()
@@ -420,7 +428,7 @@ pub fn load_frontier(path: &Path, model: &str, platform: &str) -> Result<CachedF
         .iter()
         .map(point_from_json)
         .collect::<Result<Vec<FrontierPoint>>>()?;
-    Ok(CachedFrontier { points, swept_with, platform_hash })
+    Ok(CachedFrontier { points, swept_with, platform_hash, model_hash })
 }
 
 /// Load the cached frontier if present, swept under the *same*
@@ -456,7 +464,10 @@ pub fn load_or_sweep(
         let sw = &cached.swept_with;
         let knobs_match =
             sw.seed == cfg.seed && sw.calib == cfg.calib && sw.blend_steps == cfg.blend_steps;
-        if knobs_match && cached.platform_hash == platform.spec_hash() {
+        if knobs_match
+            && cached.platform_hash == platform.spec_hash()
+            && cached.model_hash == graph.spec_hash()
+        {
             for p in &cached.points {
                 p.mapping.validate(graph, platform.n_acc())?;
             }
@@ -466,7 +477,12 @@ pub fn load_or_sweep(
             );
             return Ok((cached.points, true));
         }
-        let reason = if knobs_match {
+        let reason = if !knobs_match {
+            format!(
+                "swept under different knobs (seed {} calib {} blends {})",
+                sw.seed, sw.calib, sw.blend_steps
+            )
+        } else if cached.platform_hash != platform.spec_hash() {
             format!(
                 "platform spec changed (cached {:016x}, resolved {:016x})",
                 cached.platform_hash,
@@ -474,8 +490,9 @@ pub fn load_or_sweep(
             )
         } else {
             format!(
-                "swept under different knobs (seed {} calib {} blends {})",
-                sw.seed, sw.calib, sw.blend_steps
+                "model spec changed (cached {:016x}, loaded {:016x})",
+                cached.model_hash,
+                graph.spec_hash()
             )
         };
         rec.note(
@@ -484,7 +501,7 @@ pub fn load_or_sweep(
         );
     }
     let frontier = sweep_frontier(graph, platform, cfg, pool, rec)?;
-    save_frontier(&path, &graph.name, platform, cfg, &frontier)?;
+    save_frontier(&path, graph, platform, cfg, &frontier)?;
     rec.note(
         log::Level::Info,
         EventKind::FrontierCacheWritten { path: path.display().to_string() },
@@ -597,7 +614,7 @@ mod tests {
         let dir = std::env::temp_dir().join("odimo_sweep_wrong_key");
         let _ = std::fs::remove_dir_all(&dir);
         let path = frontier_path(&dir, &g.name, &p.name);
-        save_frontier(&path, &g.name, &p, &SweepCfg::default(), &[]).unwrap();
+        save_frontier(&path, &g, &p, &SweepCfg::default(), &[]).unwrap();
         let e = load_frontier(&path, &g.name, "mpsoc4").unwrap_err().to_string();
         assert!(e.contains("mpsoc4"), "{e}");
     }
@@ -616,7 +633,7 @@ mod tests {
         assert!(!hit);
         let path = frontier_path(&dir, &g.name, &p.name);
         let text = std::fs::read_to_string(&path).unwrap();
-        let old = text.replace("\"schema_version\":2", "\"schema_version\":1");
+        let old = text.replace("\"schema_version\":3", "\"schema_version\":2");
         assert_ne!(text, old);
         std::fs::write(&path, old).unwrap();
         let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool, &Recorder::disabled()).unwrap();
@@ -647,6 +664,49 @@ mod tests {
         // ...and misses again if the edit is reverted
         let (_, hit) = load_or_sweep(&dir, &g, &Platform::diana(), &cfg, &pool, &off).unwrap();
         assert!(!hit, "reverting the spec is also a cache-key change");
+    }
+
+    #[test]
+    fn edited_model_spec_invalidates_cache() {
+        // the import-side twin of the platform-edit test: a graph JSON
+        // whose structure was edited keeps its model name, so
+        // `model_hash` must catch it and re-sweep
+        let g = tinycnn();
+        let pool = ThreadPool::new(2);
+        let cfg = SweepCfg { seed: 6, calib: 4, blend_steps: 2 };
+        let dir = std::env::temp_dir().join("odimo_sweep_model_edit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let off = Recorder::disabled();
+        let p = Platform::diana();
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool, &off).unwrap();
+        assert!(!hit);
+        // same model name, one conv widened: structurally a new graph
+        let mut nodes = g.nodes.clone();
+        nodes[2].cout = 24;
+        nodes[3].cin = 24;
+        nodes[3].cout = 24;
+        nodes[4].cin = 24;
+        nodes[4].cout = 24;
+        nodes[5].cin = 24;
+        nodes[5].cout = 24;
+        nodes[6].cin = 24;
+        let edited = crate::model::Graph::new(
+            g.name.clone(),
+            g.input_shape,
+            g.classes,
+            g.train_batch,
+            g.eval_batch,
+            nodes,
+        );
+        assert_ne!(edited.spec_hash(), g.spec_hash());
+        let (_, hit) = load_or_sweep(&dir, &edited, &p, &cfg, &pool, &off).unwrap();
+        assert!(!hit, "edited model spec must re-sweep, not reuse");
+        // the rewritten cache hits under the edited graph...
+        let (_, hit) = load_or_sweep(&dir, &edited, &p, &cfg, &pool, &off).unwrap();
+        assert!(hit);
+        // ...and misses again for the original
+        let (_, hit) = load_or_sweep(&dir, &g, &p, &cfg, &pool, &off).unwrap();
+        assert!(!hit, "reverting the graph is also a cache-key change");
     }
 
     #[test]

@@ -218,7 +218,11 @@ impl TraceRecord {
         )
     }
 
-    fn from_line(line_no: usize, text: &str) -> Result<TraceRecord, TraceError> {
+    fn from_line(
+        line_no: usize,
+        text: &str,
+        known_models: &[&str],
+    ) -> Result<TraceRecord, TraceError> {
         let v = json::parse(text)
             .map_err(|e| TraceError::Parse { line: line_no, msg: e.to_string() })?;
         if v.as_obj().is_none() {
@@ -234,7 +238,7 @@ impl TraceRecord {
             return Err(TraceError::BadTenant { line: line_no, tenant });
         }
         let model = str_field(&v, line_no, "model")?.to_string();
-        if !ALL_MODELS.contains(&model.as_str()) {
+        if !known_models.contains(&model.as_str()) {
             return Err(TraceError::UnknownModel { line: line_no, model });
         }
         let seed = u64_field(&v, line_no, "seed")?;
@@ -254,8 +258,22 @@ impl Trace {
     }
 
     /// Parse a full JSONL document (blank lines ignored). Enforces the
-    /// sorted-arrival invariant across records.
+    /// sorted-arrival invariant across records; models are checked
+    /// against the bundled [`ALL_MODELS`] set.
     pub fn from_jsonl_text(text: &str) -> Result<Trace, TraceError> {
+        Trace::from_jsonl_text_known(text, &ALL_MODELS)
+    }
+
+    /// Like [`Trace::from_jsonl_text`] but validating each record's
+    /// `model` against a caller-supplied set — the serving session's
+    /// own models (which may be imported graphs outside
+    /// [`ALL_MODELS`]). [`TraceError::UnknownModel`] carries the
+    /// *physical* 1-based line number (blank lines count), so the bad
+    /// record in a million-line trace is addressable in an editor.
+    pub fn from_jsonl_text_known(
+        text: &str,
+        known_models: &[&str],
+    ) -> Result<Trace, TraceError> {
         let mut records = Vec::new();
         let mut prev: Option<u64> = None;
         for (i, raw) in text.lines().enumerate() {
@@ -263,7 +281,7 @@ impl Trace {
             if raw.trim().is_empty() {
                 continue;
             }
-            let rec = TraceRecord::from_line(line_no, raw)?;
+            let rec = TraceRecord::from_line(line_no, raw, known_models)?;
             if let Some(p) = prev {
                 if rec.arrival_cycle < p {
                     return Err(TraceError::OutOfOrder {
@@ -290,13 +308,24 @@ impl Trace {
         out
     }
 
-    /// Load a trace from a JSONL file.
+    /// Load a trace from a JSONL file (models checked against
+    /// [`ALL_MODELS`]).
     pub fn load(path: &Path) -> Result<Trace, TraceError> {
         let text = fs::read_to_string(path).map_err(|e| TraceError::Io {
             path: path.display().to_string(),
             msg: e.to_string(),
         })?;
         Trace::from_jsonl_text(&text)
+    }
+
+    /// Load a trace, validating models against the serving set (see
+    /// [`Trace::from_jsonl_text_known`]).
+    pub fn load_known(path: &Path, known_models: &[&str]) -> Result<Trace, TraceError> {
+        let text = fs::read_to_string(path).map_err(|e| TraceError::Io {
+            path: path.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        Trace::from_jsonl_text_known(&text, known_models)
     }
 
     /// Save the trace as a JSONL file (atomic via tempfile-rename).
@@ -353,7 +382,7 @@ impl Trace {
 
     /// Materialize driver requests: ids are record indices (they double
     /// as the synthetic-input sample index), `point` is a placeholder
-    /// until dispatch.
+    /// until dispatch, `model` is 0 (the single-model plane).
     pub fn to_requests(&self) -> Vec<Request> {
         self.records
             .iter()
@@ -362,7 +391,33 @@ impl Trace {
                 id: i as u64,
                 arrival: rec.arrival_cycle,
                 sla: rec.sla,
+                model: 0,
                 point: 0,
+            })
+            .collect()
+    }
+
+    /// Like [`Trace::to_requests`] but routing each record to its
+    /// model's index in `models`. Records must already have been
+    /// validated against this set ([`Trace::from_jsonl_text_known`]);
+    /// a record naming a model outside it is an `Err` carrying the
+    /// offending record index.
+    pub fn to_requests_routed(&self, models: &[String]) -> Result<Vec<Request>, usize> {
+        self.records
+            .iter()
+            .enumerate()
+            .map(|(i, rec)| {
+                let model = models
+                    .iter()
+                    .position(|m| *m == rec.model)
+                    .ok_or(i)? as u32;
+                Ok(Request {
+                    id: i as u64,
+                    arrival: rec.arrival_cycle,
+                    sla: rec.sla,
+                    model,
+                    point: 0,
+                })
             })
             .collect()
     }

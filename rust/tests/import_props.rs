@@ -1,0 +1,302 @@
+//! Property pins for the graph importer (model/import.rs) and the
+//! multi-model serve plane (serve/multi.rs): the checked-in golden
+//! fixtures are byte-canonical; an exported built-in re-imported from
+//! disk serves digest-for-digest like the native builder; a graph that
+//! exists only as JSON runs map → simulate → sweep → serve end-to-end;
+//! every documented validation error fires on a targeted tamper of the
+//! canonical document; a single-model `serve_multi` replays both
+//! `Session::serve_cluster` and `Session::serve`; and a mixed
+//! two-model cluster conserves requests per (model, tenant) with a
+//! digest invariant across 1/2/8 worker threads.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use common::{assert_reports_identical, serve_opts, serve_session, N_REQUESTS, SEED};
+use odimo::api::{ClusterOpts, MappingSpec, SessionBuilder};
+use odimo::model::{tinycnn, Graph};
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../config").join(name)
+}
+
+/// Both committed fixtures parse, validate, and re-emit byte-for-byte
+/// — and the tinycnn fixture IS the native builder's export, so the
+/// schema in the repo cannot drift from the builders.
+#[test]
+fn golden_fixtures_are_byte_canonical() {
+    for name in ["graph_tinycnn.json", "graph_custom.json"] {
+        let path = fixture(name);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let g = Graph::from_json_file(&path).unwrap();
+        assert_eq!(g.to_json().to_string(), text, "{name}: fixture is not canonical");
+    }
+    let native = tinycnn();
+    let imported = Graph::from_json_file(&fixture("graph_tinycnn.json")).unwrap();
+    assert_eq!(imported.to_json().to_string(), native.to_json().to_string());
+    assert_eq!(imported.spec_hash(), native.spec_hash());
+    let custom = Graph::from_json_file(&fixture("graph_custom.json")).unwrap();
+    assert_eq!(custom.name, "customnet");
+    assert_eq!(custom.input_shape, (3, 16, 16));
+}
+
+/// Export→import round-trip through the serve plane: a session built
+/// from the exported .json digests identically to one built from the
+/// native builder (cold caches on both sides).
+#[test]
+fn imported_builtin_serves_digest_identical_to_native() {
+    let dir_native = fresh_dir("odimo_import_native");
+    let dir_imported = fresh_dir("odimo_import_imported");
+    let export = dir_imported.join("tinycnn_export.json");
+    tinycnn().save_json(&export).unwrap();
+
+    let native = serve_session(&dir_native, 2, SEED).serve(&serve_opts(4)).unwrap();
+    let imported = SessionBuilder::new(export.to_str().unwrap())
+        .platform("diana")
+        .results_dir(&dir_imported)
+        .threads(2)
+        .seed(SEED)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .plan_cache_cap(8)
+        .build()
+        .unwrap()
+        .serve(&serve_opts(4))
+        .unwrap();
+    assert_reports_identical(&native, &imported, "import round-trip");
+}
+
+/// A graph that exists only as JSON (no native builder) runs the whole
+/// pipeline: map a baseline, simulate it, sweep a frontier, serve a
+/// closed loop.
+#[test]
+fn custom_graph_runs_end_to_end() {
+    let dir = fresh_dir("odimo_import_custom");
+    let spec = fixture("graph_custom.json");
+    let mut session = SessionBuilder::new(spec.to_str().unwrap())
+        .platform("diana")
+        .results_dir(&dir)
+        .threads(2)
+        .seed(SEED)
+        .sweep_calib(4)
+        .sweep_blend_steps(2)
+        .plan_cache_cap(8)
+        .build()
+        .unwrap();
+    let mapping = session.mapping(&MappingSpec::Baseline("all_8bit".into())).unwrap();
+    let sim = session.simulate(&mapping).unwrap();
+    assert!(sim.total_cycles > 0);
+    assert!(sim.energy_uj > 0.0);
+    let frontier_len = session.sweep().unwrap().points.len();
+    assert!(frontier_len > 0, "customnet swept an empty frontier");
+    let report = session.serve(&serve_opts(4)).unwrap();
+    assert_eq!(report.total_requests, N_REQUESTS);
+    assert_eq!(report.model, "customnet");
+}
+
+/// Targeted tampers of the canonical document each trip their
+/// documented validation error, with the node and field in the
+/// message. The base text is the committed golden fixture, so every
+/// replacement below is anchored to known canonical bytes.
+#[test]
+fn validation_errors_fire_on_documented_triggers() {
+    let dir = fresh_dir("odimo_import_tamper");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = std::fs::read_to_string(fixture("graph_tinycnn.json")).unwrap();
+    let expect_err = |tag: &str, text: &str, needles: &[&str]| {
+        let path = dir.join(format!("{tag}.json"));
+        std::fs::write(&path, text).unwrap();
+        let e = Graph::from_json_file(&path).unwrap_err().to_string();
+        for needle in needles {
+            assert!(e.contains(needle), "{tag}: error '{e}' missing '{needle}'");
+        }
+    };
+
+    // envelope: wrong kind / wrong schema version
+    expect_err("kind", &base.replace("\"kind\":\"odimo_graph\"", "\"kind\":\"frontier\""), &["kind"]);
+    expect_err(
+        "schema",
+        &base.replace("\"schema_version\":1", "\"schema_version\":99"),
+        &["schema version"],
+    );
+    // Empty: gut the node table
+    let start = base.find("\"nodes\":[").unwrap() + "\"nodes\":[".len();
+    let end = base.find("],\"train_batch\"").unwrap();
+    expect_err("empty", &format!("{}{}", &base[..start], &base[end..]), &["no nodes"]);
+    // FirstNotInput: node 0 is no longer the input op
+    expect_err(
+        "first",
+        &base.replace("\"op\":\"input\"", "\"op\":\"gap\""),
+        &["in", "first node"],
+    );
+    // ExtraInput: a second input op past position 0
+    expect_err(
+        "extra",
+        &base.replace("\"op\":\"gap\"", "\"op\":\"input\""),
+        &["gap", "exactly one 'input'"],
+    );
+    // DuplicateName: c2 renamed to stem
+    expect_err(
+        "dup",
+        &base.replace("\"name\":\"c2\"", "\"name\":\"stem\""),
+        &["stem", "duplicate node name"],
+    );
+    // DanglingInput: c1 references a ghost node
+    expect_err(
+        "dangling",
+        &base.replace("\"inputs\":[\"stem\"]", "\"inputs\":[\"ghost\"]"),
+        &["c1", "'ghost' is not defined"],
+    );
+    // Cycle: c1 feeds itself
+    expect_err(
+        "cycle",
+        &base.replace("\"inputs\":[\"stem\"]", "\"inputs\":[\"c1\"]"),
+        &["c1", "closes a cycle"],
+    );
+    // NotTopological: swap the stem and c1 node objects — c1 then
+    // forward-references stem, which does not reach back to c1
+    let stem_obj = &base[base.find("{\"cin\":3").unwrap()..base.find(",{\"cin\":8").unwrap()];
+    let c1_obj = &base[base.find("{\"cin\":8").unwrap()..base.find(",{\"cin\":16").unwrap()];
+    let swapped = base.replace(
+        &format!("{stem_obj},{c1_obj}"),
+        &format!("{c1_obj},{stem_obj}"),
+    );
+    assert_ne!(swapped, base, "swap anchor did not match the fixture");
+    expect_err("topo", &swapped, &["c1", "topological order"]);
+    // ShapeMismatch: c2 declares an out_hw inference disagrees with
+    expect_err(
+        "shape",
+        &base.replace(
+            "\"out_hw\":[8,8],\"pad\":1,\"relu\":false",
+            "\"out_hw\":[9,9],\"pad\":1,\"relu\":false",
+        ),
+        &["c2", "out_hw", "shape inference"],
+    );
+    // BadField (arity): the add node with one operand
+    expect_err(
+        "arity",
+        &base.replace("\"inputs\":[\"c2\",\"c1\"]", "\"inputs\":[\"c2\"]"),
+        &["res", "add takes 2 input(s)"],
+    );
+    // BadField (classes): declared classes disagree with the final fc
+    expect_err(
+        "classes",
+        &base.replace("\"classes\":10", "\"classes\":11"),
+        &["classes", "final node 'fc'"],
+    );
+    // BadField (typing): a fractional channel count
+    expect_err(
+        "cin",
+        &base.replace("\"cin\":3,", "\"cin\":3.5,"),
+        &["cin", "non-negative integer"],
+    );
+}
+
+/// The single-model pin: `serve_multi(["tinycnn"])` with one flush
+/// replica replays `Session::serve_cluster` digest-for-digest, and its
+/// embedded replica report replays `Session::serve`.
+#[test]
+fn single_model_serve_multi_pins_to_serve_and_serve_cluster() {
+    let dir = fresh_dir("odimo_multi_pin");
+    let copts = ClusterOpts {
+        replicas: 1,
+        serve: serve_opts(4),
+        continuous: false,
+        steal_max: 0,
+        compile_cycles: 0,
+        plan_cache_cap: 8,
+    };
+    let single = serve_session(&dir, 2, SEED).serve(&serve_opts(4)).unwrap();
+    let cluster = serve_session(&dir, 2, SEED).serve_cluster(&copts, None).unwrap();
+    let multi = serve_session(&dir, 2, SEED)
+        .serve_multi(&["tinycnn".to_string()], &copts, None)
+        .unwrap();
+    assert_eq!(
+        multi.deterministic_digest(),
+        cluster.deterministic_digest(),
+        "single-model serve_multi drifted from serve_cluster"
+    );
+    assert_eq!(multi.replicas.len(), 1);
+    assert_reports_identical(&single, &multi.replicas[0], "serve_multi single-model pin");
+    assert_eq!(multi.model, "tinycnn");
+    // every (model, tenant) row carries the one model and conserves
+    assert!(!multi.model_rows.is_empty());
+    for row in &multi.model_rows {
+        assert_eq!(row.model, "tinycnn");
+        assert_eq!(row.arrivals, row.served + row.shed + row.failed);
+    }
+}
+
+/// The mixed pin: a built-in plus the committed custom graph served by
+/// one two-replica cluster. Requests are conserved per (model, tenant)
+/// row, the rows partition the trace by model, batches never mix
+/// models (every point row is model-prefixed), and the digest is
+/// invariant across 1/2/8 worker threads.
+#[test]
+fn mixed_two_model_cluster_conserves_per_model_with_thread_invariant_digest() {
+    let dir = fresh_dir("odimo_multi_mixed");
+    let custom = fixture("graph_custom.json");
+    let specs = vec!["tinycnn".to_string(), custom.to_str().unwrap().to_string()];
+    let copts = ClusterOpts {
+        replicas: 2,
+        serve: serve_opts(4),
+        continuous: true,
+        steal_max: 2,
+        compile_cycles: 5_000,
+        plan_cache_cap: 8,
+    };
+    let total = (2 * N_REQUESTS) as u64; // N_REQUESTS per model
+    let base = serve_session(&dir, 1, SEED).serve_multi(&specs, &copts, None).unwrap();
+    assert_eq!(base.model, "tinycnn+customnet");
+    assert_eq!(base.accounted(), total);
+    let routed: u64 = base.dispatched.iter().sum();
+    assert_eq!(routed, total, "router lost an arrival");
+    // the (model, tenant) rows partition the trace by model
+    let arrivals: u64 = base.model_rows.iter().map(|r| r.arrivals).sum();
+    assert_eq!(arrivals, total);
+    for model in ["tinycnn", "customnet"] {
+        let per_model: u64 = base
+            .model_rows
+            .iter()
+            .filter(|r| r.model == model)
+            .map(|r| r.arrivals)
+            .sum();
+        assert_eq!(per_model, N_REQUESTS as u64, "{model}: arrivals not partitioned");
+    }
+    for row in &base.model_rows {
+        assert_eq!(
+            row.arrivals,
+            row.served + row.shed + row.failed,
+            "model {} tenant {} leaks requests",
+            row.model,
+            row.tenant
+        );
+    }
+    // batches never mix models: every per-point row in every replica
+    // report is namespaced by the model it executed
+    for replica in &base.replicas {
+        assert!(!replica.rows.is_empty());
+        for row in &replica.rows {
+            assert!(
+                row.label.starts_with("tinycnn:") || row.label.starts_with("customnet:"),
+                "point row '{}' is not model-prefixed",
+                row.label
+            );
+        }
+    }
+    for threads in [2usize, 8] {
+        let rep = serve_session(&dir, threads, SEED).serve_multi(&specs, &copts, None).unwrap();
+        assert_eq!(
+            base.deterministic_digest(),
+            rep.deterministic_digest(),
+            "mixed digest drifted between 1 and {threads} threads"
+        );
+    }
+}

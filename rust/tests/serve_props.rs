@@ -161,7 +161,7 @@ fn frontier_cache_schema_mismatch_is_a_clear_error() {
     // tamper with the stored schema version; reloads must error clearly
     let path = sweep::frontier_path(&dir, &g.name, &p.name);
     let text = std::fs::read_to_string(&path).unwrap();
-    let bumped = text.replace("\"schema_version\":2", "\"schema_version\":999");
+    let bumped = text.replace("\"schema_version\":3", "\"schema_version\":999");
     assert_ne!(text, bumped, "version field must be present to tamper with");
     std::fs::write(&path, bumped).unwrap();
     let e = sweep::load_or_sweep(&dir, &g, &p, &cfg, &pool, &obs::Recorder::disabled())

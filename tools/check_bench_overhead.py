@@ -21,6 +21,14 @@ may cost at most OBS_TOLERANCE (2%) over ``batched_tN`` (plus the same
 absolute slack). The default session keeps the recorder disabled, so
 this bound covers the disabled recorder a fortiori.
 
+The multi-model gate compares ``multi_m1`` — the identical dense trace
+replayed through the multi-model dispatch plane with a one-model set —
+against ``cluster_r1`` (same trace, same options); the model-keyed
+batcher and per-model routing may cost at most MULTI_TOLERANCE (5%)
+over the single-model path. ``multi_m2`` (two models, mixed trace)
+must be present with positive virtual throughput so the two-model path
+stays exercised.
+
 Usage: python3 tools/check_bench_overhead.py [BENCH_serve.json]
 """
 
@@ -31,6 +39,7 @@ TOLERANCE = 0.05  # relative: faults0 may cost at most 5% over batched
 OBS_TOLERANCE = 0.02  # relative: obs (Basic recorder) at most 2% over batched
 SLACK_MS = 1.0  # absolute: ignore sub-ms jitter (smoke runs are tiny)
 MIN_SCALING = 2.5  # cluster_r4 virtual img/s must be >= 2.5x cluster_r1
+MULTI_TOLERANCE = 0.05  # multi_m1 may cost at most 5% over cluster_r1
 
 
 def main() -> int:
@@ -121,6 +130,33 @@ def main() -> int:
               f"(floor {MIN_SCALING}x) — the router is serializing the cluster")
         return 1
     print("check_bench_overhead: replica scaling within budget")
+
+    m1 = bench.get("multi_m1")
+    m2 = bench.get("multi_m2")
+    if m1 is None or m2 is None:
+        print(f"check_bench_overhead: no multi_m1/multi_m2 cases in {path} — "
+              "re-run `make bench-serve` (or the CI smoke) first")
+        return 1
+    base_ms = r1["loop_ms"]
+    m1_ms = m1["loop_ms"]
+    limit = base_ms * (1.0 + MULTI_TOLERANCE) + SLACK_MS
+    rel = (m1_ms / base_ms - 1.0) * 100.0 if base_ms > 0 else 0.0
+    verdict = "ok" if m1_ms <= limit else "FAIL"
+    print(f"multi: cluster_r1 {base_ms:8.2f} ms | multi_m1 {m1_ms:8.2f} ms "
+          f"({rel:+5.1f}%) | limit {limit:8.2f} ms .. {verdict}")
+    if m1_ms > limit:
+        print("check_bench_overhead: multi-model dispatch overhead exceeds "
+              f"{MULTI_TOLERANCE:.0%} (+{SLACK_MS} ms slack) over the "
+              "single-model path — the model-keyed batcher must stay cheap "
+              "when one model is served")
+        return 1
+    if m2.get("virtual_img_s", 0.0) <= 0.0 or m2.get("models") != 2:
+        print("check_bench_overhead: multi_m2 must serve two models with "
+              "positive virtual throughput")
+        return 1
+    print(f"multi: multi_m2 {m2['virtual_img_s']:8.1f} virtual img/s "
+          f"over {m2['models']} models")
+    print("check_bench_overhead: multi-model dispatch overhead within budget")
     return 0
 
 
